@@ -1,0 +1,65 @@
+//! Design-space exploration: sweep the PE-grid geometry (matrices ×
+//! threads), the paper's two key knobs, and chart throughput vs area —
+//! the engineering argument behind the 6×3×6 / 3-thread design point.
+//!
+//!   cargo run --release --example design_space
+
+use neuromax::arch::config::GridConfig;
+use neuromax::cost::{area, resources};
+use neuromax::dataflow::ScheduleOptions;
+use neuromax::models::{mobilenet_v1::mobilenet_v1, vgg16::vgg16};
+use neuromax::sim::stats::simulate_network;
+use neuromax::util::table;
+
+fn main() {
+    println!("NeuroMAX design-space: grid geometry vs throughput vs area\n");
+    let mut rows = vec![vec![
+        "matrices".into(), "threads".into(), "lanes".into(), "kLUTs".into(),
+        "VGG GOPS".into(), "MobNet GOPS".into(), "GOPS/kLUT".into(), "note".into(),
+    ]];
+    let mut best = (0.0f64, String::new());
+    for matrices in [2usize, 4, 6, 8, 12] {
+        for threads in [1usize, 2, 3, 4] {
+            let g = GridConfig { matrices, rows: 6, cols: 3, threads, clock_mhz: 200.0 };
+            let vgg = simulate_network(&g, &vgg16(), ScheduleOptions::default());
+            let mob = simulate_network(&g, &mobilenet_v1(), ScheduleOptions::default());
+            let res = resources::table1(&g);
+            let gops_v = g.peak_gops_paper() * vgg.avg_util;
+            let gops_m = g.peak_gops_paper() * mob.avg_util;
+            let eff = gops_v / (res.luts / 1000.0);
+            let note = if matrices == 6 && threads == 3 { "<- paper" } else { "" };
+            if eff > best.0 {
+                best = (eff, format!("{matrices} matrices x {threads} threads"));
+            }
+            rows.push(vec![
+                matrices.to_string(),
+                threads.to_string(),
+                g.lanes().to_string(),
+                table::f(res.luts / 1000.0, 1),
+                table::f(gops_v, 1),
+                table::f(gops_m, 1),
+                table::f(eff, 2),
+                note.into(),
+            ]);
+        }
+    }
+    println!("{}", table::render(&rows));
+    println!("best GOPS/kLUT: {} ({:.2})", best.1, best.0);
+
+    println!("\nPE-level trade (Fig. 17 extended to 6 threads):");
+    let (lin, curve) = area::fig17_curve(16, 6);
+    for (t, c) in curve {
+        println!(
+            "  log({t}): {:>5.0} LUT ({:.2}x linear) -> {t} ops/cycle/PE \
+             ({:.2} ops per linear-PE-LUT-equivalent)",
+            c.luts,
+            c.luts / lin.luts,
+            t as f64 / (c.luts / lin.luts)
+        );
+    }
+    println!(
+        "\nthe ratio keeps improving with threads, but psum width and adder \
+         net fan-in grow past 3 threads (3 also matches the 3x3 kernel rows \
+         the dataflow broadcasts) — the paper's sweet spot."
+    );
+}

@@ -1,0 +1,110 @@
+//! End-to-end driver (DESIGN.md E12): the whole stack on a real workload.
+//!
+//!   make artifacts && cargo run --release --example e2e_inference
+//!
+//! * loads the AOT-compiled TinyCNN (python/jax/pallas → HLO text → PJRT),
+//! * verifies it bit-for-bit against the rust cycle simulator,
+//! * serves a batched Poisson request stream through the coordinator
+//!   (dynamic batcher + single-engine thread, PJRT numerics on the hot
+//!   path — python is NOT running),
+//! * reports latency/throughput plus the simulated-accelerator timeline.
+
+use std::sync::atomic::Ordering;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use neuromax::coordinator::batcher::BatchPolicy;
+use neuromax::coordinator::pipeline::{Backend, InferenceEngine};
+use neuromax::coordinator::server::{Client, Server};
+use neuromax::models::workload::RequestStream;
+use neuromax::runtime::{verify, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    println!("=== 1. load + verify the AOT artifact ==================");
+    let mut rt = Runtime::from_default_dir()?;
+    println!("PJRT platform: {}", rt.platform());
+    let v = verify::verify_tinycnn(&mut rt, 4, 2026)?;
+    println!(
+        "sim vs HLO: {} logits compared, {} mismatches -> {}",
+        v.elements_compared,
+        v.mismatches,
+        if v.ok() { "BIT-EXACT" } else { "FAILED" }
+    );
+    anyhow::ensure!(v.ok(), "verification failed");
+    drop(rt);
+
+    println!("\n=== 2. single-request latency (PJRT hot path) =========");
+    let mut engine = InferenceEngine::new(Backend::Hlo, 7)?;
+    engine.warmup()?;
+    let mut walls = Vec::new();
+    for i in 0..32 {
+        let inf = engine.infer(&InferenceEngine::input_for_seed(i))?;
+        walls.push(inf.wall_us);
+        if i == 0 {
+            println!(
+                "first inference: class {}, host {} us; simulated accelerator: \
+                 {} cycles = {:.1} us at 200 MHz",
+                inf.class, inf.wall_us, inf.accel_cycles,
+                inf.accel_cycles as f64 / 200.0
+            );
+        }
+    }
+    walls.sort_unstable();
+    println!(
+        "32 requests: host p50 {} us, p99 {} us",
+        walls[16], walls[31]
+    );
+    drop(engine);
+
+    println!("\n=== 3. batched serving under a Poisson stream ==========");
+    let mut srv = Server::start(
+        "127.0.0.1:0",
+        Backend::Hlo,
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+    )?;
+    let addr = srv.addr;
+    let metrics = srv.metrics.clone();
+    const N: usize = 200;
+    let load = thread::spawn(move || -> anyhow::Result<(f64, Vec<u64>)> {
+        let mut lat = Vec::with_capacity(N);
+        let mut client = Client::connect(addr)?;
+        let t0 = Instant::now();
+        let mut last_arrival = 0u64;
+        for req in RequestStream::new(9, 2000.0).take(N) {
+            // pace the stream in real time
+            let gap = req.arrival_us - last_arrival;
+            last_arrival = req.arrival_us;
+            thread::sleep(Duration::from_micros(gap.min(5000)));
+            let (_class, us) = client.infer(req.seed)?;
+            lat.push(us);
+        }
+        Ok((t0.elapsed().as_secs_f64(), lat))
+    });
+    srv.serve_until(Some(Instant::now() + Duration::from_secs(30)))?;
+    let (span, mut lat) = load.join().unwrap()?;
+    lat.sort_unstable();
+    println!(
+        "{N} requests in {span:.2} s = {:.0} req/s; e2e p50 {} us, p99 {} us",
+        N as f64 / span,
+        lat[N / 2],
+        lat[N * 99 / 100]
+    );
+    println!("server metrics: {}", metrics.summary());
+    let served = metrics.responses.load(Ordering::Relaxed);
+    srv.shutdown();
+    anyhow::ensure!(served >= N as u64, "not all requests served");
+
+    println!("\n=== 4. simulated-hardware accounting ===================");
+    let engine = InferenceEngine::new(Backend::Sim, 7)?;
+    let cyc = engine.schedule.total_cycles();
+    println!(
+        "TinyCNN on the 324-lane CONV core: {} cycles/frame = {:.1} us at \
+         200 MHz -> {:.0} fps hardware roof; DDR {:.1} kb/frame",
+        cyc,
+        cyc as f64 / 200.0,
+        200e6 / cyc as f64,
+        engine.schedule.total_ddr_bits() as f64 / 1e3,
+    );
+    println!("\nE2E OK");
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Quickstart: the five-minute tour of the public API.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! 1. log-quantize some values (paper §3),
+//! 2. multiply them on the thread datapath (eq. 8),
+//! 3. run a 3×3 convolution on the hardware-faithful CONV core (§5.1),
+//! 4. cycle-simulate VGG-16 and print the headline numbers (§6).
+
+use neuromax::arch::config::GridConfig;
+use neuromax::arch::ConvCore;
+use neuromax::dataflow::{analyze, ScheduleOptions};
+use neuromax::lns::{self, logquant};
+use neuromax::models::{layer::LayerDesc, vgg16::vgg16};
+use neuromax::sim::stats::simulate_network;
+use neuromax::tensor::{Tensor3, Tensor4};
+
+fn main() {
+    // 1. quantization: value -> 6-bit base-sqrt2 log code
+    for x in [1.0f32, 2.0, 0.7071, -3.0, 0.0] {
+        let (code, sign) = logquant::quantize(x);
+        println!(
+            "quantize({x:>7}) -> code {code:>3}, sign {sign:>2}, back to {:.4}",
+            logquant::dequantize(code, sign)
+        );
+    }
+
+    // 2. the multiplier-free multiply: shift + 2-entry LUT
+    let p = lns::thread_mult(2, 1, 1); // 2.0 * sqrt(2) in Q19.12
+    println!("\nthread_mult(2.0, sqrt2) = {p} (= {:.4})", p as f64 / 4096.0);
+
+    // 3. the paper's §5.1 example on the faithful core: 12×6 ⊛ 3×3
+    let mut a = Tensor3::new(12, 6, 1);
+    for (i, v) in a.data.iter_mut().enumerate() {
+        *v = (i % 7) as i32 - 3;
+    }
+    let wc = Tensor4::from_vec(1, 3, 3, 1, vec![0, 1, -1, 2, 0, -2, 1, 1, 0]);
+    let ws = Tensor4::from_vec(1, 3, 3, 1, vec![1, 1, -1, 1, -1, 1, 1, -1, 1]);
+    let mut core = ConvCore::default();
+    let (out, stats) = core.conv3x3(&a, &wc, &ws, 1);
+    println!(
+        "\n§5.1: {}x{} output in {} cycles, {:.0} OPS/cycle, {:.1}% utilization",
+        out.h,
+        out.w,
+        stats.cycles,
+        stats.useful_macs as f64 / stats.cycles as f64,
+        100.0 * stats.utilization_used()
+    );
+
+    // 4. schedule analysis of one VGG16 layer + the whole network
+    let grid = GridConfig::neuromax();
+    let l = LayerDesc::conv("CONV2_1", 3, 1, 1, 112, 112, 64, 128);
+    let perf = analyze(&grid, &l, ScheduleOptions::default());
+    println!(
+        "\nVGG CONV2_1: {} cycles, {:.1}% util, {:.2} ms at 200 MHz",
+        perf.cycles,
+        100.0 * perf.util_total(&grid),
+        perf.latency_ms(&grid)
+    );
+    let rep = simulate_network(&grid, &vgg16(), ScheduleOptions::default());
+    println!(
+        "VGG16: {:.1} ms/frame ({:.2} fps), avg util {:.1}%, {:.1} GOPS (paper accounting)",
+        rep.total_latency_ms,
+        1000.0 / rep.total_latency_ms,
+        100.0 * rep.avg_util,
+        rep.gops_paper
+    );
+}

@@ -1,0 +1,259 @@
+"""AOT compile path: lower every model entry point to HLO *text*.
+
+HLO text (not ``lowered.compile().serialize()``) is the interchange format:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Outputs (under --out, default ../artifacts):
+  *.hlo.txt       one per artifact
+  manifest.txt    artifact registry parsed by rust/src/runtime/artifacts.rs
+  tv_*.txt        shared test vectors parsed by the rust test suite
+
+Run via ``make artifacts`` — python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model, quant
+from compile.kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange).
+
+    print_large_constants MUST be on: the default printer elides big
+    constants as `{...}`, which the rust-side HLO parser silently reads as
+    zeros (we learned this from the requant threshold table).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # jax 0.8's metadata attributes (source_end_line etc.) are unknown to
+    # xla_extension 0.5.1's HLO parser — strip them.
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def s32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+#: name -> (fn, [(arg_name, shape), ...], [(out_name, shape)])
+ARTIFACTS = {
+    "logconv3x3_s1": (
+        model.layer_conv3x3_s1,
+        [("a_code", (18, 18, 8)), ("w_code", (16, 3, 3, 8)),
+         ("w_sign", (16, 3, 3, 8))],
+        [("psum", (16, 16, 16))],
+    ),
+    "logconv3x3_s2": (
+        model.layer_conv3x3_s2,
+        [("a_code", (13, 13, 8)), ("w_code", (16, 3, 3, 8)),
+         ("w_sign", (16, 3, 3, 8))],
+        [("psum", (6, 6, 16))],
+    ),
+    "logconv1x1": (
+        model.layer_conv1x1,
+        [("a_code", (36, 16)), ("w_code", (24, 16)), ("w_sign", (24, 16))],
+        [("psum", (36, 24))],
+    ),
+    "logdw3x3": (
+        model.layer_dw3x3,
+        [("a_code", (10, 10, 6)), ("w_code", (6, 3, 3)),
+         ("w_sign", (6, 3, 3))],
+        [("psum", (8, 8, 6))],
+    ),
+    "postprocess": (
+        model.layer_postprocess,
+        [("psum", (16, 16, 16))],
+        [("a_code", (16, 16, 16))],
+    ),
+    "logconv3x3_fused": (
+        model.layer_conv3x3_fused,
+        [("a_code", (18, 18, 8)), ("w_code", (16, 3, 3, 8)),
+         ("w_sign", (16, 3, 3, 8))],
+        [("out_code", (16, 16, 16))],
+    ),
+    "tinycnn": (
+        model.tinycnn_forward,
+        [("a_code", (16, 16, 4)),
+         ("w1c", (8, 3, 3, 4)), ("w1s", (8, 3, 3, 4)),
+         ("w2c", (16, 3, 3, 8)), ("w2s", (16, 3, 3, 8)),
+         ("w3c", (24, 16)), ("w3s", (24, 16)),
+         ("w4c", (32, 3, 3, 24)), ("w4s", (32, 3, 3, 24)),
+         ("wfc", (10, 512)), ("wfs", (10, 512))],
+        [("logits", (10,))],
+    ),
+}
+
+
+def write_artifacts(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+    for name, (fn, ins, outs) in ARTIFACTS.items():
+        args = [s32(shape) for _, shape in ins]
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest.append(f"artifact {name} {fname}")
+        for arg_name, shape in ins:
+            dims = ",".join(str(d) for d in shape)
+            manifest.append(f"in {arg_name} s32 {dims}")
+        for out_name, shape in outs:
+            dims = ",".join(str(d) for d in shape)
+            manifest.append(f"out {out_name} s32 {dims}")
+        manifest.append("end")
+        print(f"  lowered {name:16s} -> {fname} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+
+
+# ---------------------------------------------------------------------------
+# Shared test vectors: rust asserts bit-equality against these
+# ---------------------------------------------------------------------------
+
+def _rand_codes(rng, shape, zero_frac=0.1):
+    c = rng.integers(-12, 9, size=shape).astype(np.int32)
+    z = rng.random(shape) < zero_frac
+    return np.where(z, quant.ZERO_CODE, c).astype(np.int32)
+
+
+def _rand_signs(rng, shape):
+    return rng.choice(np.asarray([-1, 1], dtype=np.int32), size=shape)
+
+
+def _flat(arr):
+    return " ".join(str(int(v)) for v in np.asarray(arr).reshape(-1))
+
+
+def write_testvectors(out_dir: str) -> None:
+    rng = np.random.default_rng(42)
+
+    # --- quantizer vectors: float value -> (code, sign) --------------------
+    vals = np.concatenate([
+        np.asarray([0.0, 1.0, -1.0, 0.5, 2.0, 1.4142135, 0.7071067, 1e-9,
+                    -3.75, 181.02, 1e9], dtype=np.float64),
+        rng.normal(0, 1, 200),
+        rng.normal(0, 8, 50),
+    ])
+    lines = []
+    for v in vals:
+        code, sign = quant.log_quantize_code(jnp.float32(v), m=5, n=1)
+        lines.append(f"{float(v):.9e} {int(code)} {int(sign)}")
+    with open(os.path.join(out_dir, "tv_quant.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+    # --- requant vectors: psum -> activation code ---------------------------
+    psums = np.concatenate([
+        np.asarray([0, 1, -5, 4096, 5793, 4095, 4097, 8192, 2048,
+                    2 ** 30, -(2 ** 30), 123456, 7, 63, 64, 65]),
+        rng.integers(-(2 ** 20), 2 ** 20, 300),
+    ]).astype(np.int64)
+    codes = quant.requant_act(jnp.asarray(psums, dtype=jnp.int32))
+    with open(os.path.join(out_dir, "tv_requant.txt"), "w") as f:
+        f.write("\n".join(
+            f"{int(p)} {int(c)}" for p, c in zip(psums, np.asarray(codes))
+        ) + "\n")
+
+    # --- log-mult vectors: (w_code, w_sign, a_code) -> product --------------
+    wc = _rand_codes(rng, (400,), zero_frac=0.05)
+    ws = _rand_signs(rng, (400,))
+    ac = _rand_codes(rng, (400,), zero_frac=0.05)
+    prods = quant.log_mult_fixed(
+        jnp.asarray(wc), jnp.asarray(ws), jnp.asarray(ac))
+    with open(os.path.join(out_dir, "tv_mult.txt"), "w") as f:
+        f.write("\n".join(
+            f"{w} {s} {a} {int(p)}"
+            for w, s, a, p in zip(wc, ws, ac, np.asarray(prods))
+        ) + "\n")
+
+    # --- conv vectors (oracle outputs for the rust dataflow sim) ------------
+    def conv_case(fname, h, w, c, k, ksz, stride):
+        a = _rand_codes(rng, (h, w, c))
+        wcod = _rand_codes(rng, (k, ksz, ksz, c))
+        wsgn = _rand_signs(rng, (k, ksz, ksz, c))
+        out = ref.conv2d_log(
+            jnp.asarray(a), jnp.asarray(wcod), jnp.asarray(wsgn), stride)
+        req = quant.requant_act(out)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(f"shape_a {h} {w} {c}\n")
+            f.write(f"shape_w {k} {ksz} {ksz} {c}\n")
+            f.write(f"stride {stride}\n")
+            f.write(f"a {_flat(a)}\n")
+            f.write(f"wc {_flat(wcod)}\n")
+            f.write(f"ws {_flat(wsgn)}\n")
+            f.write(f"out {_flat(out)}\n")
+            f.write(f"req {_flat(req)}\n")
+
+    conv_case("tv_conv3x3_s1.txt", 12, 6, 1, 1, 3, 1)   # the §5.1 example
+    conv_case("tv_conv3x3_s1b.txt", 18, 18, 8, 16, 3, 1)
+    conv_case("tv_conv3x3_s2.txt", 13, 13, 8, 16, 3, 2)
+    conv_case("tv_conv5x5.txt", 12, 10, 3, 4, 5, 1)
+    conv_case("tv_conv4x4.txt", 11, 9, 3, 4, 4, 1)
+    conv_case("tv_conv7x7.txt", 14, 14, 3, 4, 7, 2)
+
+    # 1x1 conv case
+    a = _rand_codes(rng, (36, 16))
+    wcod = _rand_codes(rng, (24, 16))
+    wsgn = _rand_signs(rng, (24, 16))
+    out = ref.conv1x1_log(jnp.asarray(a), jnp.asarray(wcod), jnp.asarray(wsgn))
+    with open(os.path.join(out_dir, "tv_conv1x1.txt"), "w") as f:
+        f.write("shape_a 36 16\nshape_w 24 16\n")
+        f.write(f"a {_flat(a)}\nwc {_flat(wcod)}\nws {_flat(wsgn)}\n")
+        f.write(f"out {_flat(out)}\n")
+
+    # depthwise case
+    a = _rand_codes(rng, (10, 10, 6))
+    wcod = _rand_codes(rng, (6, 3, 3))
+    wsgn = _rand_signs(rng, (6, 3, 3))
+    out = ref.depthwise3x3_log(
+        jnp.asarray(a), jnp.asarray(wcod), jnp.asarray(wsgn), 1)
+    with open(os.path.join(out_dir, "tv_dw3x3.txt"), "w") as f:
+        f.write("shape_a 10 10 6\nshape_w 6 3 3\nstride 1\n")
+        f.write(f"a {_flat(a)}\nwc {_flat(wcod)}\nws {_flat(wsgn)}\n")
+        f.write(f"out {_flat(out)}\n")
+
+    # full tinycnn case: input + weights + logits (rust e2e cross-check)
+    ins = ARTIFACTS["tinycnn"][1]
+    tensors = []
+    for arg_name, shape in ins:
+        if arg_name == "a_code" or arg_name.endswith("c") or arg_name == "wfc":
+            tensors.append(_rand_codes(rng, shape))
+        else:
+            tensors.append(_rand_signs(rng, shape))
+    logits = model.tinycnn_forward(*[jnp.asarray(t) for t in tensors])
+    with open(os.path.join(out_dir, "tv_tinycnn.txt"), "w") as f:
+        for (arg_name, shape), t in zip(ins, tensors):
+            dims = " ".join(str(d) for d in shape)
+            f.write(f"tensor {arg_name} {dims}\n{_flat(t)}\n")
+        f.write(f"tensor logits 10\n{_flat(logits)}\n")
+
+    print("  wrote shared test vectors (tv_*.txt)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    print(f"AOT-lowering {len(ARTIFACTS)} artifacts -> {args.out}")
+    write_artifacts(args.out)
+    write_testvectors(args.out)
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,307 @@
+"""L1 Pallas kernels: the NeuroMAX log-domain convolution hot-spot.
+
+The paper's PE matrix is a 6-row x 3-col grid of 3-thread log PEs fed by a
+"2D weight broadcast": the whole k x 3 weight block is resident while 6-row
+input tiles stream through, and adder-net-0 reduces thread products
+row-wise. The Pallas mapping (DESIGN.md §Hardware-Adaptation):
+
+  * grid = (K-tiles, 6-row output tiles)           — the tile schedule
+  * weight BlockSpec blocked on K, constant over row tiles
+                                                   — the weight *broadcast*
+  * input  BlockSpec unblocked (streamed/reused across K-tiles)
+  * kernel body = eq. 8 shift-LUT multiply + row-wise reduction
+                                                   — threads + adder net 0
+
+Everything runs with interpret=True: real-TPU lowering emits a Mosaic
+custom-call that the CPU PJRT plugin cannot execute. Numerics are bit-exact
+against kernels/ref.py (see python/tests/).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.quant import (
+    CODE_MIN,
+    FRAC_LUT,
+    OVERFLOW_SHIFT,
+    REQUANT_THRESHOLDS,
+    UNDERFLOW_SHIFT,
+    ZERO_CODE,
+)
+
+#: Output rows per program instance — the PE-matrix row count (paper Fig. 3).
+ROW_TILE = 6
+#: Filters per program instance (three thread-triples worth).
+K_TILE = 8
+
+
+def _log_mult(w_code, w_sign, a_code):
+    """Eq. 8 inside the kernel: sign * (LUT[frac(g)] << int(g)).
+
+    Identical arithmetic to quant.log_mult_fixed, restated here with only
+    ops that Pallas lowers cheaply (compares, selects, shifts).
+    """
+    g = w_code + a_code
+    i = jnp.clip(g >> 1, UNDERFLOW_SHIFT - 1, OVERFLOW_SHIFT)
+    f = g & 1
+    lut = jnp.where(f == 0, FRAC_LUT[0], FRAC_LUT[1]).astype(jnp.int32)
+    mag = jnp.where(
+        i >= 0,
+        jnp.left_shift(lut, jnp.maximum(i, 0)),
+        jnp.right_shift(lut, jnp.maximum(-i, 0)),
+    )
+    mag = jnp.where(i < UNDERFLOW_SHIFT, 0, mag)
+    zero = (w_code <= ZERO_CODE) | (a_code <= ZERO_CODE)
+    return jnp.where(zero, 0, w_sign * mag).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# 3x3 (and general kxk) convolution kernel
+# ---------------------------------------------------------------------------
+
+def _conv_kernel(a_ref, wc_ref, ws_ref, o_ref, *, kh, kw, stride, out_w):
+    """One (K-tile, row-tile) program: compute a [ROW_TILE, out_w, K_TILE]
+    block of psums.
+
+    a_ref:  [H, W, C]            (full input, reused across K-tiles)
+    wc_ref: [K_TILE, kh, kw, C]  (resident weight block — the broadcast)
+    o_ref:  [ROW_TILE, out_w, K_TILE]
+    """
+    a = a_ref[...]
+    wc = wc_ref[...]
+    ws = ws_ref[...]
+    r0 = pl.program_id(1) * ROW_TILE * stride
+
+    rows_span = (ROW_TILE - 1) * stride + 1
+    cols_span = (out_w - 1) * stride + 1
+
+    acc = jnp.zeros(o_ref.shape, dtype=jnp.int32)
+    # Static kh x kw tap loop — mirrors the PE threads (kw taps per row of
+    # PEs) and adder net 0's row-wise reduction over them.
+    for dy in range(kh):
+        for dx in range(kw):
+            window = jax.lax.dynamic_slice(
+                a, (r0 + dy, dx, 0), (rows_span, cols_span, a.shape[2])
+            )
+            patch = window[::stride, ::stride, :]  # [ROW_TILE, out_w, C]
+            prod = _log_mult(
+                wc[None, None, :, dy, dx, :],
+                ws[None, None, :, dy, dx, :],
+                patch[:, :, None, :],
+            )  # [ROW_TILE, out_w, K_TILE, C]
+            acc = acc + prod.sum(axis=-1, dtype=jnp.int32)
+    o_ref[...] = acc
+
+
+def conv2d_log(a_code, w_code, w_sign, stride: int = 1):
+    """Pallas log-domain conv: a [H,W,C], w [K,kh,kw,C] -> [Ho,Wo,K] psums."""
+    h, w, c = a_code.shape
+    k, kh, kw, wc_c = w_code.shape
+    assert wc_c == c
+    ho = (h - kh) // stride + 1
+    wo = (w - kw) // stride + 1
+    grid = (pl.cdiv(k, K_TILE), pl.cdiv(ho, ROW_TILE))
+
+    # The input must cover the dynamic_slice of the last (padded) row tile.
+    pad_rows = (grid[1] * ROW_TILE - 1) * stride + kh - h
+    if pad_rows > 0:
+        a_code = jnp.pad(
+            a_code, ((0, pad_rows), (0, 0), (0, 0)),
+            constant_values=ZERO_CODE,
+        )
+
+    kernel = functools.partial(
+        _conv_kernel, kh=kh, kw=kw, stride=stride, out_w=wo
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # full input, identical for every program: streamed & reused
+            pl.BlockSpec(a_code.shape, lambda kt, rt: (0, 0, 0)),
+            # weight block resident per K-tile: the 2D weight broadcast
+            pl.BlockSpec((K_TILE, kh, kw, c), lambda kt, rt: (kt, 0, 0, 0)),
+            pl.BlockSpec((K_TILE, kh, kw, c), lambda kt, rt: (kt, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (ROW_TILE, wo, K_TILE), lambda kt, rt: (rt, 0, kt)
+        ),
+        out_shape=jax.ShapeDtypeStruct((ho, wo, k), jnp.int32),
+        interpret=True,
+    )(a_code, w_code, w_sign)
+    return out
+
+
+conv3x3_log = functools.partial(conv2d_log)
+
+
+# ---------------------------------------------------------------------------
+# Fused conv + post-processing kernel (ReLU + log re-quantization in-VMEM)
+# ---------------------------------------------------------------------------
+
+def _requant_in_kernel(acc, thr):
+    """The post-processing LUT (quant.requant_act) as in-kernel ops: ReLU
+    then count-of-thresholds-passed against the 63-entry table (passed as
+    a kernel input — pallas kernels cannot capture array constants).
+    Fusing it keeps the psum tile in VMEM — no intermediate psum array
+    ever reaches HBM (the Fig. 2 pipeline in one pass)."""
+    p = jnp.maximum(acc, 0)
+    cnt = jnp.sum(p[..., None] >= thr, axis=-1).astype(jnp.int32)
+    code = (CODE_MIN - 1) + cnt
+    return jnp.where(code < CODE_MIN, ZERO_CODE, code)
+
+
+def _conv_fused_kernel(a_ref, wc_ref, ws_ref, thr_ref, o_ref, *, kh, kw, stride, out_w):
+    """Same schedule as `_conv_kernel`, but the output block is written as
+    requantized activation codes for the next layer."""
+    a = a_ref[...]
+    wc = wc_ref[...]
+    ws = ws_ref[...]
+    r0 = pl.program_id(1) * ROW_TILE * stride
+    rows_span = (ROW_TILE - 1) * stride + 1
+    cols_span = (out_w - 1) * stride + 1
+    acc = jnp.zeros(o_ref.shape, dtype=jnp.int32)
+    for dy in range(kh):
+        for dx in range(kw):
+            window = jax.lax.dynamic_slice(
+                a, (r0 + dy, dx, 0), (rows_span, cols_span, a.shape[2])
+            )
+            patch = window[::stride, ::stride, :]
+            prod = _log_mult(
+                wc[None, None, :, dy, dx, :],
+                ws[None, None, :, dy, dx, :],
+                patch[:, :, None, :],
+            )
+            acc = acc + prod.sum(axis=-1, dtype=jnp.int32)
+    o_ref[...] = _requant_in_kernel(acc, thr_ref[...])
+
+
+def conv2d_log_fused(a_code, w_code, w_sign, stride: int = 1):
+    """Fused log conv + ReLU + requant: codes in, next-layer codes out."""
+    h, w, c = a_code.shape
+    k, kh, kw, wc_c = w_code.shape
+    assert wc_c == c
+    ho = (h - kh) // stride + 1
+    wo = (w - kw) // stride + 1
+    grid = (pl.cdiv(k, K_TILE), pl.cdiv(ho, ROW_TILE))
+    pad_rows = (grid[1] * ROW_TILE - 1) * stride + kh - h
+    if pad_rows > 0:
+        a_code = jnp.pad(
+            a_code, ((0, pad_rows), (0, 0), (0, 0)),
+            constant_values=ZERO_CODE,
+        )
+    kernel = functools.partial(
+        _conv_fused_kernel, kh=kh, kw=kw, stride=stride, out_w=wo
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(a_code.shape, lambda kt, rt: (0, 0, 0)),
+            pl.BlockSpec((K_TILE, kh, kw, c), lambda kt, rt: (kt, 0, 0, 0)),
+            pl.BlockSpec((K_TILE, kh, kw, c), lambda kt, rt: (kt, 0, 0, 0)),
+            pl.BlockSpec((63,), lambda kt, rt: (0,)),
+        ],
+        out_specs=pl.BlockSpec(
+            (ROW_TILE, wo, K_TILE), lambda kt, rt: (rt, 0, kt)
+        ),
+        out_shape=jax.ShapeDtypeStruct((ho, wo, k), jnp.int32),
+        interpret=True,
+    )(a_code, w_code, w_sign,
+      jnp.asarray(REQUANT_THRESHOLDS, dtype=jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# 1x1 convolution kernel (channel-parallel dataflow, paper §5.2)
+# ---------------------------------------------------------------------------
+
+#: Pixels per program — 6 pixel rows x 3 input-channel columns in the paper;
+#: here one PE-matrix-worth of pixels per step.
+PIX_TILE = 18
+
+
+def _conv1x1_kernel(a_ref, wc_ref, ws_ref, o_ref):
+    """a_ref: [PIX_TILE, C], wc/ws: [K, C], o_ref: [PIX_TILE, K]."""
+    a = a_ref[...]
+    prod = _log_mult(
+        wc_ref[...][None, :, :], ws_ref[...][None, :, :], a[:, None, :]
+    )  # [PIX_TILE, K, C] — threads over filters, channels along PE columns
+    o_ref[...] = prod.sum(axis=-1, dtype=jnp.int32)
+
+
+def conv1x1_log(a_code, w_code, w_sign):
+    """Pallas 1x1 conv: a [P, C], w [K, C] -> [P, K] psums."""
+    p, c = a_code.shape
+    k, _ = w_code.shape
+    grid = (pl.cdiv(p, PIX_TILE),)
+    out = pl.pallas_call(
+        _conv1x1_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((PIX_TILE, c), lambda pt: (pt, 0)),
+            pl.BlockSpec((k, c), lambda pt: (0, 0)),
+            pl.BlockSpec((k, c), lambda pt: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((PIX_TILE, k), lambda pt: (pt, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, k), jnp.int32),
+        interpret=True,
+    )(a_code, w_code, w_sign)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Depthwise 3x3 kernel (paper §5.2 separable mode: one channel per matrix)
+# ---------------------------------------------------------------------------
+
+def _dw_kernel(a_ref, wc_ref, ws_ref, o_ref, *, stride, out_w):
+    """a_ref: [H, W, C], wc/ws: [C, 3, 3], o_ref: [ROW_TILE, out_w, C]."""
+    a = a_ref[...]
+    wc = wc_ref[...]
+    ws = ws_ref[...]
+    r0 = pl.program_id(0) * ROW_TILE * stride
+    rows_span = (ROW_TILE - 1) * stride + 1
+    cols_span = (out_w - 1) * stride + 1
+    acc = jnp.zeros(o_ref.shape, dtype=jnp.int32)
+    for dy in range(3):
+        for dx in range(3):
+            window = jax.lax.dynamic_slice(
+                a, (r0 + dy, dx, 0), (rows_span, cols_span, a.shape[2])
+            )
+            patch = window[::stride, ::stride, :]
+            acc = acc + _log_mult(
+                wc[None, None, :, dy, dx], ws[None, None, :, dy, dx], patch
+            )
+    o_ref[...] = acc
+
+
+def depthwise3x3_log(a_code, w_code, w_sign, stride: int = 1):
+    """Pallas depthwise conv: a [H,W,C], w [C,3,3] -> [Ho,Wo,C] psums."""
+    h, w, c = a_code.shape
+    ho = (h - 3) // stride + 1
+    wo = (w - 3) // stride + 1
+    grid = (pl.cdiv(ho, ROW_TILE),)
+    pad_rows = (grid[0] * ROW_TILE - 1) * stride + 3 - h
+    if pad_rows > 0:
+        a_code = jnp.pad(
+            a_code, ((0, pad_rows), (0, 0), (0, 0)),
+            constant_values=ZERO_CODE,
+        )
+    kernel = functools.partial(_dw_kernel, stride=stride, out_w=wo)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(a_code.shape, lambda rt: (0, 0, 0)),
+            pl.BlockSpec((c, 3, 3), lambda rt: (0, 0, 0)),
+            pl.BlockSpec((c, 3, 3), lambda rt: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROW_TILE, wo, c), lambda rt: (rt, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((ho, wo, c), jnp.int32),
+        interpret=True,
+    )(a_code, w_code, w_sign)
+    return out

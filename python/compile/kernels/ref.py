@@ -1,0 +1,121 @@
+"""Pure-jnp correctness oracles for the Pallas log-conv kernels.
+
+Everything here is written in the most obvious way possible (explicit
+shift-and-gather loops, no pallas, no cleverness): this file is the
+*specification* that both the Pallas kernels (kernels/logconv.py) and the
+rust cycle simulator (rust/src/arch, rust/src/dataflow) are tested against.
+
+Layouts: activations NHWC without N (single image): [H, W, C] int32 codes.
+Weights: [K, kh, kw, C] codes + signs. Outputs: [Ho, Wo, K] int32 psums in
+the Q19.12 wrapping fixed-point domain of quant.log_mult_fixed.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.quant import log_mult_fixed, requant_act
+
+
+def out_dim(size: int, k: int, stride: int) -> int:
+    """Valid-convolution output size."""
+    return (size - k) // stride + 1
+
+
+def conv2d_log(a_code, w_code, w_sign, stride: int = 1):
+    """Direct log-domain 2D convolution (valid padding).
+
+    a_code: [H, W, C] int32; w_code/w_sign: [K, kh, kw, C] int32.
+    Returns psums [Ho, Wo, K] int32.
+    """
+    h, w, c = a_code.shape
+    k, kh, kw, wc = w_code.shape
+    assert wc == c, f"channel mismatch {wc} != {c}"
+    ho, wo = out_dim(h, kh, stride), out_dim(w, kw, stride)
+    acc = jnp.zeros((ho, wo, k), dtype=jnp.int32)
+    for dy in range(kh):
+        for dx in range(kw):
+            # strided patch of the input for this tap: [Ho, Wo, C]
+            patch = a_code[dy : dy + (ho - 1) * stride + 1 : stride,
+                           dx : dx + (wo - 1) * stride + 1 : stride, :]
+            # [Ho, Wo, 1, C] x [1, 1, K, C] -> [Ho, Wo, K, C]
+            prod = log_mult_fixed(
+                w_code[None, None, :, dy, dx, :],
+                w_sign[None, None, :, dy, dx, :],
+                patch[:, :, None, :],
+            )
+            acc = acc + prod.sum(axis=-1, dtype=jnp.int32)
+    return acc
+
+
+def conv1x1_log(a_code, w_code, w_sign):
+    """1x1 convolution over flattened pixels.
+
+    a_code: [P, C]; w_code/w_sign: [K, C]. Returns [P, K] psums.
+    """
+    prod = log_mult_fixed(
+        w_code[None, :, :], w_sign[None, :, :], a_code[:, None, :]
+    )
+    return prod.sum(axis=-1, dtype=jnp.int32)
+
+
+def depthwise3x3_log(a_code, w_code, w_sign, stride: int = 1):
+    """Depthwise 3x3: a [H,W,C], w [C,3,3]. Returns [Ho,Wo,C] psums."""
+    h, w, c = a_code.shape
+    ho, wo = out_dim(h, 3, stride), out_dim(w, 3, stride)
+    acc = jnp.zeros((ho, wo, c), dtype=jnp.int32)
+    for dy in range(3):
+        for dx in range(3):
+            patch = a_code[dy : dy + (ho - 1) * stride + 1 : stride,
+                           dx : dx + (wo - 1) * stride + 1 : stride, :]
+            prod = log_mult_fixed(
+                w_code[None, None, :, dy, dx],
+                w_sign[None, None, :, dy, dx],
+                patch,
+            )
+            acc = acc + prod
+    return acc
+
+
+def fc_log(a_code, w_code, w_sign):
+    """Fully connected head: a [H,W,C] codes, w [K,H,W,C]. -> [K] psums."""
+    prod = log_mult_fixed(w_code, w_sign, a_code[None, ...])
+    return prod.reshape(prod.shape[0], -1).sum(axis=-1, dtype=jnp.int32)
+
+
+def maxpool_log(a_code, k: int = 2, stride: int = 2):
+    """Max pooling directly on log codes (monotone, so order-preserving)."""
+    h, w, c = a_code.shape
+    ho, wo = out_dim(h, k, stride), out_dim(w, k, stride)
+    out = jnp.full((ho, wo, c), -(2 ** 31), dtype=jnp.int32)
+    for dy in range(k):
+        for dx in range(k):
+            patch = a_code[dy : dy + (ho - 1) * stride + 1 : stride,
+                           dx : dx + (wo - 1) * stride + 1 : stride, :]
+            out = jnp.maximum(out, patch)
+    return out
+
+
+def conv2d_float(a, w, stride: int = 1):
+    """Float reference conv (for quantization-error studies).
+
+    a: [H,W,C] f32, w: [K,kh,kw,C] f32 -> [Ho,Wo,K] f32.
+    """
+    h, ww, c = a.shape
+    k, kh, kw, _ = w.shape
+    ho, wo = out_dim(h, kh, stride), out_dim(ww, kw, stride)
+    acc = jnp.zeros((ho, wo, k), dtype=jnp.float32)
+    for dy in range(kh):
+        for dx in range(kw):
+            patch = a[dy : dy + (ho - 1) * stride + 1 : stride,
+                      dx : dx + (wo - 1) * stride + 1 : stride, :]
+            acc = acc + jnp.einsum(
+                "hwc,kc->hwk", patch, w[:, dy, dx, :],
+                preferred_element_type=jnp.float32,
+            )
+    return acc
+
+
+def layer_log(a_code, w_code, w_sign, stride: int = 1):
+    """One full NeuroMAX layer: log conv -> ReLU -> re-quantize to codes."""
+    return requant_act(conv2d_log(a_code, w_code, w_sign, stride))

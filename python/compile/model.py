@@ -1,0 +1,131 @@
+"""L2: the JAX compute graph built on the L1 Pallas kernels.
+
+TinyCNN is the end-to-end model of the repo: a small all-log-domain CNN
+(every layer is conv -> ReLU -> log re-quantization, exactly the NeuroMAX
+CONV-core pipeline of paper Fig. 2). Its forward pass is lowered once by
+aot.py to HLO text and executed from rust via PJRT; the rust cycle
+simulator must agree with it bit-for-bit.
+
+Weights are *inputs* of the lowered computations (not baked constants) so
+the rust side can feed its own quantized weights.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.kernels import logconv, ref
+from compile.quant import requant_act
+
+
+# ---------------------------------------------------------------------------
+# TinyCNN: 16x16x4 input, 10 classes (~29k MACs/inference)
+# ---------------------------------------------------------------------------
+
+#: (name, kind, params) — mirrored by rust/src/models/tinycnn.rs.
+TINYCNN_LAYERS = [
+    ("conv1", "conv3x3", dict(cin=4, cout=8, hin=16, win=16, stride=1)),
+    ("conv2", "conv3x3", dict(cin=8, cout=16, hin=14, win=14, stride=2)),
+    ("conv3", "conv1x1", dict(cin=16, cout=24, hin=6, win=6, stride=1)),
+    ("conv4", "conv3x3", dict(cin=24, cout=32, hin=6, win=6, stride=1)),
+    ("fc", "fc", dict(cin=4 * 4 * 32, cout=10)),
+]
+
+
+def tinycnn_weight_shapes():
+    """[(code_shape, sign_shape), ...] in forward order."""
+    return [
+        ((8, 3, 3, 4),) * 2,
+        ((16, 3, 3, 8),) * 2,
+        ((24, 16),) * 2,
+        ((32, 3, 3, 24),) * 2,
+        ((10, 4 * 4 * 32),) * 2,
+    ]
+
+
+def tinycnn_forward(a_code, w1c, w1s, w2c, w2s, w3c, w3s, w4c, w4s, wfc, wfs):
+    """Full log-domain forward pass: codes in, int32 logits (psums) out.
+
+    a_code: [16,16,4] int32 activation codes.
+    """
+    # conv1: 16x16x4 -> 14x14x8
+    x = requant_act(logconv.conv2d_log(a_code, w1c, w1s, stride=1))
+    # conv2: 14x14x8 -> 6x6x16 (stride 2)
+    x = requant_act(logconv.conv2d_log(x, w2c, w2s, stride=2))
+    # conv3 (pointwise): 6x6x16 -> 6x6x24
+    p = logconv.conv1x1_log(x.reshape(36, 16), w3c, w3s)
+    x = requant_act(p).reshape(6, 6, 24)
+    # conv4: 6x6x24 -> 4x4x32
+    x = requant_act(logconv.conv2d_log(x, w4c, w4s, stride=1))
+    # fc head: 512 -> 10 logits, left in the psum domain
+    logits = logconv.conv1x1_log(x.reshape(1, 4 * 4 * 32), wfc, wfs)
+    return logits.reshape(10)
+
+
+def tinycnn_forward_ref(a_code, *weights):
+    """Same network on the pure-jnp oracle (for pytest cross-checks)."""
+    w1c, w1s, w2c, w2s, w3c, w3s, w4c, w4s, wfc, wfs = weights
+    x = requant_act(ref.conv2d_log(a_code, w1c, w1s, 1))
+    x = requant_act(ref.conv2d_log(x, w2c, w2s, 2))
+    x = requant_act(ref.conv1x1_log(x.reshape(36, 16), w3c, w3s)).reshape(6, 6, 24)
+    x = requant_act(ref.conv2d_log(x, w4c, w4s, 1))
+    return ref.conv1x1_log(x.reshape(1, 512), wfc, wfs).reshape(10)
+
+
+# ---------------------------------------------------------------------------
+# Single-layer entry points (one AOT artifact per shape bucket)
+# ---------------------------------------------------------------------------
+
+def layer_conv3x3_s1(a_code, w_code, w_sign):
+    """a [18,18,8] ⊛ w [16,3,3,8] -> psums [16,16,16]."""
+    return logconv.conv2d_log(a_code, w_code, w_sign, stride=1)
+
+
+def layer_conv3x3_s2(a_code, w_code, w_sign):
+    """a [13,13,8] ⊛ w [16,3,3,8] -> psums [6,6,16]."""
+    return logconv.conv2d_log(a_code, w_code, w_sign, stride=2)
+
+
+def layer_conv1x1(a_code, w_code, w_sign):
+    """a [36,16] ⊛ w [24,16] -> psums [36,24]."""
+    return logconv.conv1x1_log(a_code, w_code, w_sign)
+
+
+def layer_dw3x3(a_code, w_code, w_sign):
+    """a [10,10,6] depthwise w [6,3,3] -> psums [8,8,6]."""
+    return logconv.depthwise3x3_log(a_code, w_code, w_sign, stride=1)
+
+
+def layer_postprocess(psum):
+    """Post-processing block (Fig. 2): ReLU + log re-quantization LUT."""
+    return requant_act(psum)
+
+
+def layer_conv3x3_fused(a_code, w_code, w_sign):
+    """Fused conv + ReLU + requant in one Pallas pass (psums never leave
+    VMEM): a [18,18,8] ⊛ w [16,3,3,8] -> codes [16,16,16]."""
+    return logconv.conv2d_log_fused(a_code, w_code, w_sign, stride=1)
+
+
+# ---------------------------------------------------------------------------
+# Float twin of TinyCNN (training + quantization-accuracy experiments)
+# ---------------------------------------------------------------------------
+
+def tinycnn_forward_float(a, weights, quantizer=None):
+    """Float forward pass with an optional fake-quantization hook.
+
+    a: [16,16,4] f32. weights: list of 5 f32 arrays shaped like the code
+    tensors (fc/1x1 weights as [K, C]). quantizer: callable applied to every
+    weight tensor and every post-ReLU activation (None = float baseline).
+    """
+    q = (lambda t: t) if quantizer is None else quantizer
+    w1, w2, w3, w4, wf = [q(w) for w in weights]
+
+    def act(x):
+        return q(jnp.maximum(x, 0.0))
+
+    x = act(ref.conv2d_float(a, w1, 1))
+    x = act(ref.conv2d_float(x, w2, 2))
+    x = act(jnp.einsum("pc,kc->pk", x.reshape(36, 16), w3)).reshape(6, 6, 24)
+    x = act(ref.conv2d_float(x, w4, 1))
+    return jnp.einsum("c,kc->k", x.reshape(512), wf)

@@ -1,0 +1,212 @@
+"""Quantizers for NeuroMAX (paper §3, eq. 1-4).
+
+This module is the *specification* of the number formats used everywhere in
+the repo. The rust crate (`rust/src/lns/`) implements the same formats
+bit-exactly; `aot.py` dumps shared test vectors so the two sides are checked
+against each other.
+
+Formats
+-------
+Linear Qm.n (eq. 1-2): signed fixed point, step eps = 2^-n, range
+    [-2^(m-1), 2^(m-1) - eps].
+
+Log <m, n, b> (eq. 3-4): the *exponent* is a signed Qm.n fixed-point number;
+the represented value is sign(x) * b^x'. NeuroMAX uses n = 1 and
+b = sqrt(2), i.e. a 6-bit exponent code c (integer, c = 2*x') with
+    value = 2^(c / 2),   c in [-31, 31],
+plus a dedicated ZERO code (the most negative code, -32) because zero has
+no logarithm. Weights carry one extra sign bit (paper: w'[6]); activations
+are non-negative after ReLU, so they need no sign bit.
+
+Product fixed-point domain (eq. 7-8): a product of two codes
+    g = cw + ca,  g = 2i + f  (f in {0,1}, Euclidean),
+    |w*a| = 2^(g/2) = lut[f] * 2^i / 2^FRAC_BITS,
+with lut = [2^FRAC_BITS, round(2^FRAC_BITS * sqrt(2))]. Psums accumulate in
+int32 with two's-complement wraparound (both XLA and rust wrap).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Shared constants (mirrored by rust/src/lns/*.rs — keep in sync!)
+# ---------------------------------------------------------------------------
+
+#: Exponent code range for the 6-bit log format (one code reserved for zero).
+CODE_MIN = -31
+CODE_MAX = 31
+#: Sentinel code for exact zero. Chosen as the most negative 6-bit value.
+ZERO_CODE = -32
+
+#: Fractional bits of the product / psum fixed-point domain (Q19.12).
+FRAC_BITS = 12
+#: 2-entry fractional LUT of eq. 8: [1.0, sqrt(2)] in Q.FRAC_BITS.
+FRAC_LUT = (4096, 5793)  # round(2^12 * 2^(f/2)) for f = 0, 1
+
+#: Shift clamp for the product: exponents below UNDERFLOW_SHIFT flush to 0,
+#: above OVERFLOW_SHIFT saturate the shift (keeps int32 psums finite).
+UNDERFLOW_SHIFT = -13
+OVERFLOW_SHIFT = 15
+
+
+# ---------------------------------------------------------------------------
+# Linear quantizer (eq. 1-2)
+# ---------------------------------------------------------------------------
+
+def clip(x, lo, hi):
+    """Eq. 2."""
+    return jnp.clip(x, lo, hi)
+
+
+def linear_quantize(x, m: int, n: int):
+    """Eq. 1: round to the nearest multiple of eps = 2^-n, clip to Qm.n."""
+    eps = 2.0 ** (-n)
+    lo = -(2.0 ** (m - 1))
+    hi = 2.0 ** (m - 1) - eps
+    return clip(jnp.round(x / eps) * eps, lo, hi)
+
+
+# ---------------------------------------------------------------------------
+# Log quantizer (eq. 3-4), arbitrary base via n fractional exponent bits
+# ---------------------------------------------------------------------------
+
+def log_quantize_code(x, m: int = 5, n: int = 1):
+    """Eq. 3: quantize |x| to an integer exponent code c = round(2^n*log2|x|).
+
+    The effective base is 2^(2^-n): n=0 -> base 2, n=1 -> base sqrt(2).
+    Returns (code:int32, sign:int32). Zero maps to ZERO_CODE scaled to the
+    format's own range. Codes are clipped to the signed (m+n+1)-bit? No —
+    to the paper's Qm.n exponent range [-2^(m+n-? ...)].
+
+    For the NeuroMAX 6-bit format (m=5, n=1) the code range is
+    [CODE_MIN, CODE_MAX] with ZERO_CODE reserved.
+    """
+    scale = 2.0 ** n
+    total = m + n  # exponent bits excluding sign-of-exponent? code width
+    cmax = 2 ** total // 2 - 1
+    cmin = -cmax
+    mag = jnp.abs(x)
+    # floor(x + 0.5): explicit round-half-up, matching rust (ties matter).
+    code = jnp.floor(scale * jnp.log2(jnp.where(mag > 0, mag, 1.0)) + 0.5)
+    code = jnp.clip(code, cmin, cmax).astype(jnp.int32)
+    zero = -(cmax + 1)
+    code = jnp.where(mag > 0, code, zero)
+    sign = jnp.where(x < 0, -1, 1).astype(jnp.int32)
+    return code, sign
+
+
+def log_dequantize(code, sign, n: int = 1):
+    """Eq. 4: x = sign * b^x' with b = 2^(2^-n); ZERO code -> 0."""
+    scale = 2.0 ** n
+    total_zero = code.min() if hasattr(code, "min") else ZERO_CODE
+    del total_zero
+    val = jnp.exp2(code.astype(jnp.float32) / scale)
+    is_zero = code <= ZERO_CODE  # works for the 6-bit format
+    return jnp.where(is_zero, 0.0, sign.astype(jnp.float32) * val)
+
+
+def log_quantize_value(x, m: int = 5, n: int = 1):
+    """Quantize-dequantize round trip (for error/accuracy studies)."""
+    code, sign = log_quantize_code(x, m, n)
+    cmax = 2 ** (m + n) // 2 - 1
+    scale = 2.0 ** n
+    val = jnp.exp2(code.astype(jnp.float32) / scale)
+    return jnp.where(code <= -(cmax + 1), 0.0, sign.astype(jnp.float32) * val)
+
+
+# ---------------------------------------------------------------------------
+# NeuroMAX 6-bit format helpers (m=5, n=1, base sqrt(2))
+# ---------------------------------------------------------------------------
+
+def quantize_act(x):
+    """Activations: non-negative (post-ReLU). Negative inputs are clamped.
+
+    Returns int32 codes in [CODE_MIN, CODE_MAX] or ZERO_CODE.
+    """
+    x = jnp.maximum(x, 0.0)
+    code, _ = log_quantize_code(x, m=5, n=1)
+    return code
+
+
+def quantize_weight(x):
+    """Weights: returns (code:int32, sign:int32 in {-1,+1})."""
+    return log_quantize_code(x, m=5, n=1)
+
+
+def dequantize(code, sign=None):
+    """Codes -> f32 values. sign=None treats input as non-negative."""
+    if sign is None:
+        sign = jnp.ones_like(code)
+    return log_dequantize(code, sign, n=1)
+
+
+# ---------------------------------------------------------------------------
+# Log-domain multiply (eq. 5-8) — the thread datapath, integer-exact
+# ---------------------------------------------------------------------------
+
+def log_mult_fixed(w_code, w_sign, a_code):
+    """Eq. 8: product of a weight code and an activation code in Q.FRAC_BITS.
+
+    All args int32. Returns int32 fixed-point products (wrapping domain).
+    Bit-exact mirror of `lns::mult::thread_mult` on the rust side.
+    """
+    g = w_code + a_code
+    i = g >> 1                      # floor division (Euclidean for den=2)
+    f = g & 1
+    lut = jnp.where(f == 0, FRAC_LUT[0], FRAC_LUT[1]).astype(jnp.int32)
+    i = jnp.clip(i, UNDERFLOW_SHIFT - 1, OVERFLOW_SHIFT)
+    left = jnp.left_shift(lut, jnp.maximum(i, 0))
+    right = jnp.right_shift(lut, jnp.maximum(-i, 0))
+    mag = jnp.where(i >= 0, left, right)
+    mag = jnp.where(i < UNDERFLOW_SHIFT, 0, mag)
+    zero = (w_code <= ZERO_CODE) | (a_code <= ZERO_CODE)
+    return jnp.where(zero, 0, w_sign * mag).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Post-processing re-quantization (psum Q19.12 -> 6-bit log code)
+# ---------------------------------------------------------------------------
+
+def _requant_thresholds():
+    """Decision thresholds for psum -> code requantization.
+
+    Code c is chosen iff T[c] <= p < T[c+1] where
+        T[c] = round(2^(FRAC_BITS + (c - 0.5)/2))
+    is the fixed-point value of the geometric midpoint between codes c-1 and
+    c. Computed in f64; the rust side computes the identical table.
+    """
+    cs = np.arange(CODE_MIN, CODE_MAX + 1)
+    t = np.floor(2.0 ** (FRAC_BITS + (cs - 0.5) / 2.0) + 0.5).astype(np.int64)
+    # p == 0 must map to ZERO_CODE, so no threshold may be 0.
+    return np.maximum(t, 1)
+
+
+REQUANT_THRESHOLDS = _requant_thresholds()  # len 63, for codes -31..31
+
+
+def requant_act(psum):
+    """ReLU + log re-quantization of int32 psums to activation codes.
+
+    Mirrors `lns::tables::requant` (rust). Values below the lowest
+    threshold (including all of ReLU's zeros) map to ZERO_CODE.
+    """
+    p = jnp.maximum(psum, 0)
+    # Max threshold is 2^(12+15.25) < 2^31, so int32 compares are safe.
+    thr = jnp.asarray(REQUANT_THRESHOLDS, dtype=jnp.int32)
+    # code = CODE_MIN - 1 + (number of thresholds <= p), floor at ZERO_CODE
+    cnt = jnp.sum(p[..., None] >= thr, axis=-1)
+    code = (CODE_MIN - 1) + cnt.astype(jnp.int32)
+    return jnp.where(code < CODE_MIN, ZERO_CODE, code)
+
+
+# ---------------------------------------------------------------------------
+# Error metrics (Fig. 1 companion)
+# ---------------------------------------------------------------------------
+
+def sqnr_db(x, xq):
+    """Signal-to-quantization-noise ratio in dB."""
+    num = jnp.sum(x * x)
+    den = jnp.sum((x - xq) ** 2) + 1e-30
+    return 10.0 * jnp.log10(num / den)

@@ -1,0 +1,172 @@
+"""L1 Pallas kernels vs the pure-jnp oracle (kernels/ref.py).
+
+The CORE correctness signal of the python side: bit-exact equality between
+the PE-matrix-tiled Pallas kernels and the direct-convolution oracle, swept
+over shapes/strides with hypothesis.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import logconv, ref
+from compile.quant import ZERO_CODE
+
+
+def _codes(rng, shape, zero_frac=0.1):
+    c = rng.integers(-12, 9, size=shape).astype(np.int32)
+    z = rng.random(shape) < zero_frac
+    return jnp.asarray(np.where(z, ZERO_CODE, c).astype(np.int32))
+
+
+def _signs(rng, shape):
+    return jnp.asarray(
+        rng.choice(np.asarray([-1, 1], dtype=np.int32), size=shape))
+
+
+def assert_bitexact(a, b):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# kxk conv kernel
+# ---------------------------------------------------------------------------
+
+@given(
+    h=st.integers(5, 24),
+    w=st.integers(5, 24),
+    c=st.integers(1, 8),
+    k=st.integers(1, 12),
+    ksz=st.sampled_from([1, 3, 4, 5]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2 ** 31 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_conv2d_matches_ref(h, w, c, k, ksz, stride, seed):
+    if h < ksz or w < ksz:
+        return
+    rng = np.random.default_rng(seed)
+    a = _codes(rng, (h, w, c))
+    wc = _codes(rng, (k, ksz, ksz, c))
+    ws = _signs(rng, (k, ksz, ksz, c))
+    assert_bitexact(
+        logconv.conv2d_log(a, wc, ws, stride),
+        ref.conv2d_log(a, wc, ws, stride),
+    )
+
+
+def test_conv2d_paper_tile_shape():
+    """The paper's §5.1 scenario: 12x6 input, 3x3 filter, strides 1 and 2."""
+    rng = np.random.default_rng(7)
+    a = _codes(rng, (12, 6, 1))
+    wc = _codes(rng, (1, 3, 3, 1))
+    ws = _signs(rng, (1, 3, 3, 1))
+    out1 = logconv.conv2d_log(a, wc, ws, 1)
+    assert out1.shape == (10, 4, 1)          # paper: 10x4 output, stride 1
+    out2 = logconv.conv2d_log(a, wc, ws, 2)
+    assert out2.shape == (5, 2, 1)           # valid conv (paper pads to 6x3)
+    assert_bitexact(out1, ref.conv2d_log(a, wc, ws, 1))
+    assert_bitexact(out2, ref.conv2d_log(a, wc, ws, 2))
+
+
+def test_conv2d_all_zero_input():
+    a = jnp.full((8, 8, 4), ZERO_CODE, dtype=jnp.int32)
+    rng = np.random.default_rng(3)
+    wc = _codes(rng, (4, 3, 3, 4))
+    ws = _signs(rng, (4, 3, 3, 4))
+    out = logconv.conv2d_log(a, wc, ws, 1)
+    assert (np.asarray(out) == 0).all()
+
+
+def test_conv2d_identity_filter():
+    """A single-tap unit filter (code 0 = value 1.0) copies the input."""
+    rng = np.random.default_rng(5)
+    a = _codes(rng, (6, 6, 1), zero_frac=0.0)
+    wc = jnp.full((1, 1, 1, 1), 0, dtype=jnp.int32)
+    ws = jnp.ones((1, 1, 1, 1), dtype=jnp.int32)
+    out = logconv.conv2d_log(a, wc, ws, 1)
+    # product of code c with code 0 = value of code c in Q.12
+    expect = np.asarray(ref.conv2d_log(a, wc, ws, 1))
+    assert_bitexact(out, expect)
+    # and spot-check one literal: code 2 (=2.0) -> 8192
+    a1 = jnp.full((1, 1, 1), 2, dtype=jnp.int32)
+    assert int(logconv.conv2d_log(a1, wc, ws, 1)[0, 0, 0]) == 8192
+
+
+# ---------------------------------------------------------------------------
+# fused conv + requant kernel
+# ---------------------------------------------------------------------------
+
+@given(
+    h=st.integers(4, 18),
+    w=st.integers(4, 18),
+    c=st.integers(1, 6),
+    k=st.integers(1, 10),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2 ** 31 - 1),
+)
+@settings(max_examples=20, deadline=None)
+def test_fused_conv_requant_matches_composition(h, w, c, k, stride, seed):
+    from compile.quant import requant_act
+
+    rng = np.random.default_rng(seed)
+    a = _codes(rng, (h, w, c))
+    wc = _codes(rng, (k, 3, 3, c))
+    ws = _signs(rng, (k, 3, 3, c))
+    fused = logconv.conv2d_log_fused(a, wc, ws, stride)
+    composed = requant_act(ref.conv2d_log(a, wc, ws, stride))
+    assert_bitexact(fused, composed)
+
+
+# ---------------------------------------------------------------------------
+# 1x1 kernel
+# ---------------------------------------------------------------------------
+
+@given(
+    p=st.integers(1, 80),
+    c=st.integers(1, 20),
+    k=st.integers(1, 24),
+    seed=st.integers(0, 2 ** 31 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_conv1x1_matches_ref(p, c, k, seed):
+    rng = np.random.default_rng(seed)
+    a = _codes(rng, (p, c))
+    wc = _codes(rng, (k, c))
+    ws = _signs(rng, (k, c))
+    assert_bitexact(
+        logconv.conv1x1_log(a, wc, ws), ref.conv1x1_log(a, wc, ws))
+
+
+def test_conv1x1_paper_example_shape():
+    """§5.2: 3x6 pixels x 6 ch ⊛ 6 filters -> 3x6x6 output."""
+    rng = np.random.default_rng(11)
+    a = _codes(rng, (18, 6))
+    wc = _codes(rng, (6, 6))
+    ws = _signs(rng, (6, 6))
+    out = logconv.conv1x1_log(a, wc, ws)
+    assert out.shape == (18, 6)
+    assert_bitexact(out, ref.conv1x1_log(a, wc, ws))
+
+
+# ---------------------------------------------------------------------------
+# depthwise kernel
+# ---------------------------------------------------------------------------
+
+@given(
+    h=st.integers(3, 20),
+    w=st.integers(3, 20),
+    c=st.integers(1, 12),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2 ** 31 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_depthwise_matches_ref(h, w, c, stride, seed):
+    rng = np.random.default_rng(seed)
+    a = _codes(rng, (h, w, c))
+    wc = _codes(rng, (c, 3, 3))
+    ws = _signs(rng, (c, 3, 3))
+    assert_bitexact(
+        logconv.depthwise3x3_log(a, wc, ws, stride),
+        ref.depthwise3x3_log(a, wc, ws, stride),
+    )

@@ -1,0 +1,109 @@
+"""L2 model tests: TinyCNN shapes, pallas-vs-ref forward equality, and the
+AOT artifact registry's shape bookkeeping."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model, quant
+from compile.kernels import ref
+
+
+def _rand_weights(rng):
+    ws = []
+    for (cshape, _sshape) in model.tinycnn_weight_shapes():
+        c = rng.integers(-12, 6, size=cshape).astype(np.int32)
+        z = rng.random(cshape) < 0.08
+        ws.append(jnp.asarray(np.where(z, quant.ZERO_CODE, c)))
+        ws.append(jnp.asarray(
+            rng.choice(np.asarray([-1, 1], dtype=np.int32), size=cshape)))
+    return ws
+
+
+def _rand_input(rng):
+    c = rng.integers(-10, 6, size=(16, 16, 4)).astype(np.int32)
+    return jnp.asarray(c)
+
+
+def test_tinycnn_shapes():
+    rng = np.random.default_rng(0)
+    logits = model.tinycnn_forward(_rand_input(rng), *_rand_weights(rng))
+    assert logits.shape == (10,)
+    assert logits.dtype == jnp.int32
+
+
+def test_tinycnn_pallas_equals_ref():
+    for seed in range(3):
+        rng = np.random.default_rng(seed)
+        a = _rand_input(rng)
+        ws = _rand_weights(rng)
+        np.testing.assert_array_equal(
+            np.asarray(model.tinycnn_forward(a, *ws)),
+            np.asarray(model.tinycnn_forward_ref(a, *ws)),
+        )
+
+
+def test_tinycnn_zero_input_gives_zero_logits():
+    rng = np.random.default_rng(1)
+    a = jnp.full((16, 16, 4), quant.ZERO_CODE, dtype=jnp.int32)
+    logits = model.tinycnn_forward(a, *_rand_weights(rng))
+    assert (np.asarray(logits) == 0).all()
+
+
+def test_layer_entry_points_match_ref():
+    rng = np.random.default_rng(2)
+
+    def codes(shape):
+        return jnp.asarray(rng.integers(-12, 6, size=shape).astype(np.int32))
+
+    def signs(shape):
+        return jnp.asarray(
+            rng.choice(np.asarray([-1, 1], dtype=np.int32), size=shape))
+
+    a, wc, ws = codes((18, 18, 8)), codes((16, 3, 3, 8)), signs((16, 3, 3, 8))
+    np.testing.assert_array_equal(
+        np.asarray(model.layer_conv3x3_s1(a, wc, ws)),
+        np.asarray(ref.conv2d_log(a, wc, ws, 1)))
+
+    a2 = codes((13, 13, 8))
+    np.testing.assert_array_equal(
+        np.asarray(model.layer_conv3x3_s2(a2, wc, ws)),
+        np.asarray(ref.conv2d_log(a2, wc, ws, 2)))
+
+    ap, wp, sp = codes((36, 16)), codes((24, 16)), signs((24, 16))
+    np.testing.assert_array_equal(
+        np.asarray(model.layer_conv1x1(ap, wp, sp)),
+        np.asarray(ref.conv1x1_log(ap, wp, sp)))
+
+    ad, wd, sd = codes((10, 10, 6)), codes((6, 3, 3)), signs((6, 3, 3))
+    np.testing.assert_array_equal(
+        np.asarray(model.layer_dw3x3(ad, wd, sd)),
+        np.asarray(ref.depthwise3x3_log(ad, wd, sd, 1)))
+
+
+def test_artifact_registry_is_consistent():
+    """Every artifact lowers, and declared shapes match traced shapes."""
+    import jax
+
+    for name, (fn, ins, outs) in aot.ARTIFACTS.items():
+        args = [jax.ShapeDtypeStruct(s, jnp.int32) for _, s in ins]
+        out = jax.eval_shape(fn, *args)
+        declared = [s for _, s in outs]
+        got = [tuple(o.shape) for o in jax.tree_util.tree_leaves(out)]
+        assert got == [tuple(s) for s in declared], (name, got, declared)
+
+
+def test_float_twin_shapes():
+    rng = np.random.default_rng(3)
+    weights = [
+        jnp.asarray(rng.normal(0, 0.3, s).astype(np.float32))
+        for s in [(8, 3, 3, 4), (16, 3, 3, 8), (24, 16), (32, 3, 3, 24),
+                  (10, 512)]
+    ]
+    a = jnp.asarray(rng.normal(0, 1, (16, 16, 4)).astype(np.float32))
+    logits = model.tinycnn_forward_float(a, weights)
+    assert logits.shape == (10,)
+    # quantized twin runs too and stays finite
+    qlogits = model.tinycnn_forward_float(
+        a, weights, quantizer=lambda t: quant.log_quantize_value(t, 5, 1))
+    assert np.isfinite(np.asarray(qlogits)).all()

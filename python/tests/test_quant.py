@@ -1,0 +1,149 @@
+"""Quantizer unit + property tests (eq. 1-4, eq. 8, requant table)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quant
+
+
+# ---------------------------------------------------------------------------
+# Linear quantizer (eq. 1-2)
+# ---------------------------------------------------------------------------
+
+def test_linear_quantize_grid():
+    x = jnp.asarray([0.0, 0.24, 0.26, -0.26, 7.9, -9.0], dtype=jnp.float32)
+    q = quant.linear_quantize(x, m=4, n=1)
+    # step 0.5, range [-8, 7.5]
+    np.testing.assert_allclose(np.asarray(q), [0.0, 0.0, 0.5, -0.5, 7.5, -8.0])
+
+
+@given(st.floats(-1e4, 1e4), st.integers(1, 8), st.integers(0, 8))
+@settings(max_examples=200, deadline=None)
+def test_linear_quantize_props(x, m, n):
+    q = float(quant.linear_quantize(jnp.float32(x), m, n))
+    eps = 2.0 ** (-n)
+    assert -(2 ** (m - 1)) <= q <= 2 ** (m - 1) - eps
+    # quantization error bounded by eps/2 inside the representable range
+    if -(2 ** (m - 1)) + eps < x < 2 ** (m - 1) - 2 * eps:
+        assert abs(q - x) <= eps / 2 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Log quantizer (eq. 3-4)
+# ---------------------------------------------------------------------------
+
+def test_log_code_known_values():
+    # value = 2^(code/2): 1.0 -> 0, 2.0 -> 2, sqrt(2) -> 1, 0.5 -> -2
+    x = jnp.asarray([1.0, 2.0, 1.4142135, 0.5, -4.0, 0.0], dtype=jnp.float32)
+    code, sign = quant.log_quantize_code(x)
+    assert list(np.asarray(code)) == [0, 2, 1, -2, 4, quant.ZERO_CODE]
+    assert list(np.asarray(sign)) == [1, 1, 1, 1, -1, 1]
+
+
+def test_log_roundtrip_error_bounded():
+    # relative error of base-sqrt2 quantization is at most 2^(1/4)-1 ~ 19%
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, 1000).astype(np.float32))
+    xq = quant.log_quantize_value(x, m=5, n=1)
+    mask = np.abs(np.asarray(x)) > 2.0 ** -15  # not flushed/clipped
+    rel = np.abs(np.asarray(xq) - np.asarray(x))[mask] / np.abs(
+        np.asarray(x))[mask]
+    assert rel.max() < 0.19
+
+
+def test_base_sqrt2_beats_base2():
+    """The paper's §3 claim, in SQNR form: base-sqrt2 > base-2 fidelity."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(0, 0.5, 4096).astype(np.float32))
+    s2 = float(quant.sqnr_db(x, quant.log_quantize_value(x, m=5, n=1)))
+    s1 = float(quant.sqnr_db(x, quant.log_quantize_value(x, m=5, n=0)))
+    assert s2 > s1 + 3.0  # at least 3 dB better
+
+
+@given(st.floats(1e-4, 1e4))
+@settings(max_examples=200, deadline=None)
+def test_log_code_monotone(x):
+    """Codes are monotone in |x| (order preservation for maxpool)."""
+    c1, _ = quant.log_quantize_code(jnp.float32(x))
+    c2, _ = quant.log_quantize_code(jnp.float32(x * 1.5))
+    assert int(c1) <= int(c2)
+
+
+def test_act_quantizer_clamps_negative():
+    code = quant.quantize_act(jnp.asarray([-1.0, -0.1], dtype=jnp.float32))
+    assert (np.asarray(code) == quant.ZERO_CODE).all()
+
+
+# ---------------------------------------------------------------------------
+# Log-domain multiply (eq. 8)
+# ---------------------------------------------------------------------------
+
+def mult_oracle(wc, ws, ac):
+    """Naive float model of eq. 5: sign * 2^((wc+ac)/2), in Q.FRAC_BITS."""
+    if wc <= quant.ZERO_CODE or ac <= quant.ZERO_CODE:
+        return 0
+    g = wc + ac
+    i, f = g // 2, g % 2
+    if i < quant.UNDERFLOW_SHIFT:
+        return 0
+    i = min(i, quant.OVERFLOW_SHIFT)
+    lut = quant.FRAC_LUT[f]
+    mag = lut << i if i >= 0 else lut >> (-i)
+    return ws * mag
+
+
+@given(st.integers(-32, 31), st.sampled_from([-1, 1]), st.integers(-32, 31))
+@settings(max_examples=500, deadline=None)
+def test_log_mult_matches_oracle(wc, ws, ac):
+    got = int(quant.log_mult_fixed(
+        jnp.int32(wc), jnp.int32(ws), jnp.int32(ac)))
+    assert got == mult_oracle(wc, ws, ac)
+
+
+@given(st.integers(-20, 20), st.integers(-20, 20))
+@settings(max_examples=300, deadline=None)
+def test_log_mult_accuracy(wc, ac):
+    """Fixed-point product approximates the exact real product."""
+    got = int(quant.log_mult_fixed(jnp.int32(wc), jnp.int32(1),
+                                   jnp.int32(ac)))
+    exact = 2.0 ** ((wc + ac) / 2.0) * 2 ** quant.FRAC_BITS
+    if quant.UNDERFLOW_SHIFT <= (wc + ac) // 2 <= quant.OVERFLOW_SHIFT:
+        assert abs(got - exact) <= max(2.0, exact * 1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Requantization (post-processing LUT)
+# ---------------------------------------------------------------------------
+
+def test_requant_exact_powers():
+    # psum 4096 = 1.0 -> code 0; 5793 ~ sqrt2 -> code 1; 8192 = 2.0 -> code 2
+    p = jnp.asarray([0, 4096, 5793, 8192, 2048, -77], dtype=jnp.int32)
+    c = quant.requant_act(p)
+    assert list(np.asarray(c)) == [quant.ZERO_CODE, 0, 1, 2, -2,
+                                   quant.ZERO_CODE]
+
+
+@given(st.integers(64, 2 ** 30))
+@settings(max_examples=300, deadline=None)
+def test_requant_nearest_code(p):
+    """requant picks the code whose value is nearest to p in log space.
+
+    Below p=64 the integer-rounded thresholds collide (several codes share
+    threshold 1), which is faithful hardware behaviour — the nearest-code
+    property only holds where thresholds are well separated.
+    """
+    c = int(quant.requant_act(jnp.int32(p)))
+    exact = 2.0 * np.log2(p / 4096.0)
+    if quant.CODE_MIN + 0.5 < exact < quant.CODE_MAX - 0.5:
+        # 0.5 ideal + slack for integer threshold rounding at small p
+        assert abs(c - exact) <= 0.5 + 4.0 / p
+    elif exact >= quant.CODE_MAX:
+        assert c == quant.CODE_MAX
+
+
+def test_requant_monotone():
+    p = jnp.arange(0, 100000, 7, dtype=jnp.int32)
+    c = np.asarray(quant.requant_act(p))
+    assert (np.diff(c) >= 0).all()

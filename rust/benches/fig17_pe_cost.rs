@@ -1,0 +1,21 @@
+//! E2 (paper Fig. 17): linear vs log PE LUT/FF cost vs thread count.
+use neuromax::coordinator::reports;
+use neuromax::cost::area;
+
+fn main() {
+    println!("{}", reports::fig17());
+    // the adjusted-PE computation used throughout Table 2
+    let adj = area::adjusted_pe_count(108, 3, 16);
+    println!("cost-adjusted PE count: 108 log PEs ~= {adj} linear PEs (paper: 122)");
+    // extended sweep: bit width sensitivity (ablation)
+    println!("\nbit-width sensitivity (log(3) LUT ratio vs linear):");
+    for bits in [8u32, 12, 16, 20, 24] {
+        let lin = area::linear_pe(bits);
+        let log3 = area::log_pe(3, bits);
+        println!(
+            "  {bits:2}-bit: linear {:4.0} LUT, log(3) {:4.0} LUT, ratio {:.2}",
+            lin.luts, log3.luts, log3.luts / lin.luts
+        );
+    }
+    println!("(log PEs win harder at higher precision: shifter grows O(W log W) vs multiplier O(W^2))");
+}

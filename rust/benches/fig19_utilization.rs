@@ -1,0 +1,34 @@
+//! E5 (paper Fig. 19): per-layer utilization for VGG-16, MobileNet v1 and
+//! ResNet-34, plus the filter-packing ablation and simulation throughput.
+use neuromax::arch::config::GridConfig;
+use neuromax::coordinator::reports;
+use neuromax::dataflow::ScheduleOptions;
+use neuromax::models::workload::fig19_nets;
+use neuromax::sim::stats::simulate_network;
+use neuromax::util::bench::{report, time};
+
+fn main() {
+    println!("{}", reports::fig19());
+
+    println!("ablation: filter packing (the Fig.19-vs-Table-3 scheduling knob)");
+    let g = GridConfig::neuromax();
+    for net in fig19_nets() {
+        let off = simulate_network(&g, &net, ScheduleOptions { filter_packing: false, ..Default::default() });
+        let on = simulate_network(&g, &net, ScheduleOptions { filter_packing: true, ..Default::default() });
+        println!(
+            "  {:12} packing off: {:7.2} ms / util {:4.1}%   on: {:7.2} ms / util {:4.1}%",
+            net.name, off.total_latency_ms, 100.0 * off.avg_util,
+            on.total_latency_ms, 100.0 * on.avg_util
+        );
+    }
+
+    // analytic simulator speed: full 3-network sweep
+    let nets = fig19_nets();
+    let m = time(5, || {
+        for net in &nets {
+            simulate_network(&g, net, ScheduleOptions::default());
+        }
+    });
+    let layers: u64 = nets.iter().map(|n| n.layers.len() as u64).sum();
+    report("analytic sim (3 networks)", m, layers, "layers");
+}

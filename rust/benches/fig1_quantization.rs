@@ -1,0 +1,21 @@
+//! E1 (paper Fig. 1): linear vs log quantization fidelity, plus the
+//! quantizer's throughput on the build path.
+use neuromax::coordinator::reports;
+use neuromax::lns::logquant;
+use neuromax::util::bench::{blackbox, report, time};
+use neuromax::util::prng::SplitMix64;
+
+fn main() {
+    println!("{}", reports::fig1());
+    // throughput: quantize 1M values
+    let mut rng = SplitMix64::new(1);
+    let xs: Vec<f32> = (0..1_000_000).map(|_| rng.normal() as f32).collect();
+    let m = time(5, || {
+        let mut acc = 0i32;
+        for &x in &xs {
+            acc = acc.wrapping_add(logquant::quantize(x).0);
+        }
+        blackbox(acc);
+    });
+    report("log_quantize (1M values)", m, 1_000_000, "values");
+}

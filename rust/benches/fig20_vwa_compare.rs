@@ -1,0 +1,7 @@
+//! E6 (paper Fig. 20): PE count vs utilization vs throughput against the
+//! VWA [15] baseline, per network.
+use neuromax::coordinator::reports;
+
+fn main() {
+    println!("{}", reports::fig20());
+}

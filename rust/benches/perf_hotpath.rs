@@ -1,0 +1,130 @@
+//! §Perf hot-path microbenchmarks — the profiling harness behind
+//! EXPERIMENTS.md §Perf. Covers each layer of the stack:
+//!   L3a  thread_mult (the innermost op of every simulation)
+//!   L3b  functional conv executor (the simulator hot path)
+//!   L3c  requant (post-processing)
+//!   L3d  hardware-faithful core (validation path)
+//!   L3e  analytic scheduler (planning path)
+//!   RT   PJRT tinycnn execution (the serving hot path; skipped without
+//!        artifacts)
+
+use neuromax::arch::config::GridConfig;
+use neuromax::arch::ConvCore;
+use neuromax::dataflow::{analyze, exec, ScheduleOptions};
+use neuromax::lns::mult::thread_mult;
+use neuromax::lns::tables::requant_act;
+use neuromax::models::vgg16::vgg16;
+use neuromax::tensor::{Tensor3, Tensor4};
+use neuromax::util::bench::{blackbox, report, time};
+use neuromax::util::prng::SplitMix64;
+
+fn rand_tensors(h: usize, w: usize, c: usize, k: usize, seed: u64) -> (Tensor3, Tensor4, Tensor4) {
+    let mut rng = SplitMix64::new(seed);
+    let mut a = Tensor3::new(h, w, c);
+    for v in a.data.iter_mut() {
+        *v = rng.range_i32(-12, 8);
+    }
+    let mut wc = Tensor4::new(k, 3, 3, c);
+    let mut ws = Tensor4::new(k, 3, 3, c);
+    for v in wc.data.iter_mut() {
+        *v = rng.range_i32(-12, 8);
+    }
+    for v in ws.data.iter_mut() {
+        *v = rng.sign();
+    }
+    (a, wc, ws)
+}
+
+fn main() {
+    // L3a: raw multiply datapath
+    let mut rng = SplitMix64::new(7);
+    let codes: Vec<(i32, i32, i32)> = (0..1_000_000)
+        .map(|_| (rng.range_i32(-31, 31), rng.sign(), rng.range_i32(-31, 31)))
+        .collect();
+    let m = time(5, || {
+        let mut acc = 0i32;
+        for &(w, s, a) in &codes {
+            acc = acc.wrapping_add(thread_mult(w, s, a));
+        }
+        blackbox(acc);
+    });
+    report("L3a thread_mult (1M)", m, 1_000_000, "mult");
+
+    // L3b: functional conv executor — the simulator hot path
+    let (a, wc, ws) = rand_tensors(56, 56, 32, 16, 1);
+    let macs = (54 * 54 * 9 * 32 * 16) as u64;
+    let m = time(5, || {
+        blackbox(exec::conv2d(&a, &wc, &ws, 1));
+    });
+    report("L3b exec::conv2d 56x56x32x16", m, macs, "MAC");
+
+    // L3c: requant throughput
+    let psums: Vec<i32> = (0..1_000_000).map(|_| rng.range_i32(-1 << 26, 1 << 26)).collect();
+    let m = time(5, || {
+        let mut acc = 0i32;
+        for &p in &psums {
+            acc = acc.wrapping_add(requant_act(p));
+        }
+        blackbox(acc);
+    });
+    report("L3c requant_act (1M)", m, 1_000_000, "psum");
+
+    // L3d: hardware-faithful core
+    let (a, wc, ws) = rand_tensors(30, 30, 6, 4, 2);
+    let macs_f = (28 * 28 * 9 * 6 * 4) as u64;
+    let m = time(5, || {
+        let mut core = ConvCore::default();
+        blackbox(core.conv3x3(&a, &wc, &ws, 1));
+    });
+    report("L3d faithful core 30x30x6x4", m, macs_f, "MAC");
+
+    // L3e: analytic scheduler over VGG16
+    let g = GridConfig::neuromax();
+    let net = vgg16();
+    let m = time(20, || {
+        for l in &net.layers {
+            blackbox(analyze(&g, l, ScheduleOptions::default()));
+        }
+    });
+    report("L3e analyze VGG16 (17 layers)", m, net.layers.len() as u64, "layers");
+
+    // RT: the serving hot path (PJRT) — needs artifacts
+    match neuromax::runtime::Runtime::from_default_dir() {
+        Ok(mut rt) => {
+            if rt.load("tinycnn").is_ok() {
+                let w = neuromax::models::tinycnn::TinyCnnWeights::random(7);
+                let input = neuromax::models::tinycnn::random_input(1);
+                // per-call literal construction (the naive path)
+                let m = time(5, || {
+                    for _ in 0..50 {
+                        blackbox(
+                            neuromax::runtime::exec::tinycnn_forward(&mut rt, &input, &w)
+                                .unwrap(),
+                        );
+                    }
+                });
+                report("RT  PJRT tinycnn forward (50)", m, 50, "inference");
+                // resident-weight session (§Perf optimization 4)
+                let mut sess =
+                    neuromax::runtime::exec::TinyCnnSession::new(&mut rt, &w).unwrap();
+                let m = time(5, || {
+                    for _ in 0..50 {
+                        blackbox(sess.forward(&mut rt, &input).unwrap());
+                    }
+                });
+                report("RT  PJRT tinycnn session (50)", m, 50, "inference");
+            }
+        }
+        Err(_) => println!("bench RT  PJRT tinycnn: SKIPPED (run `make artifacts`)"),
+    }
+
+    // sim-backend inference for comparison
+    let w = neuromax::models::tinycnn::TinyCnnWeights::random(7);
+    let input = neuromax::models::tinycnn::random_input(1);
+    let m = time(5, || {
+        for _ in 0..50 {
+            blackbox(neuromax::runtime::verify::tinycnn_forward_sim(&input, &w));
+        }
+    });
+    report("SIM tinycnn forward (50)", m, 50, "inference");
+}

@@ -1,0 +1,32 @@
+//! E9/E10 (paper §5.1, §5.2 worked examples) on the hardware-faithful
+//! core, plus its simulation speed.
+use neuromax::arch::ConvCore;
+use neuromax::coordinator::reports;
+use neuromax::tensor::{Tensor3, Tensor4};
+use neuromax::util::bench::{blackbox, report, time};
+use neuromax::util::prng::SplitMix64;
+
+fn main() {
+    println!("{}", reports::sec5());
+
+    // faithful-core simulation throughput (it drives every §5 check)
+    let mut rng = SplitMix64::new(1);
+    let mut a = Tensor3::new(30, 30, 6);
+    for v in a.data.iter_mut() {
+        *v = rng.range_i32(-10, 6);
+    }
+    let mut wc = Tensor4::new(4, 3, 3, 6);
+    let mut ws = Tensor4::new(4, 3, 3, 6);
+    for v in wc.data.iter_mut() {
+        *v = rng.range_i32(-8, 4);
+    }
+    for v in ws.data.iter_mut() {
+        *v = rng.sign();
+    }
+    let macs = (28 * 28 * 9 * 6 * 4) as u64;
+    let m = time(5, || {
+        let mut core = ConvCore::default();
+        blackbox(core.conv3x3(&a, &wc, &ws, 1));
+    });
+    report("faithful core 28x28x6 conv", m, macs, "MAC");
+}

@@ -1,0 +1,8 @@
+//! E3/E4 (paper Table 1 + Fig. 18): full-core resource rollup and the
+//! per-module LUT/FF/power breakdown.
+use neuromax::coordinator::reports;
+
+fn main() {
+    println!("{}", reports::table1());
+    println!("{}", reports::fig18());
+}

@@ -1,0 +1,14 @@
+//! E7 (paper Table 2): cross-design comparison — our measured row against
+//! the published [7]-[15] dataset, plus both GOPS accountings.
+use neuromax::arch::config::GridConfig;
+use neuromax::coordinator::reports;
+use neuromax::cost::compare;
+
+fn main() {
+    println!("{}", reports::table2());
+    let m = compare::measured(&GridConfig::neuromax());
+    println!(
+        "achieved on VGG16: {:.1} GOPS (paper accounting) — paper reports 307.8",
+        m.vgg16_gops
+    );
+}

@@ -1,0 +1,6 @@
+//! E8 (paper Table 3): VGG16 per-layer latency vs Eyeriss [7] and VWA [15].
+use neuromax::coordinator::reports;
+
+fn main() {
+    println!("{}", reports::table3());
+}

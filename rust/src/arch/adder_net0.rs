@@ -1,0 +1,77 @@
+//! Adder net 0 (paper Fig. 4): fixed-wiring reduction of the 54 thread
+//! products of one PE matrix into 18 row-wise psums `o1..o18`.
+//!
+//! Row r's psums: `o(r,k) = p[r][0][k] + p[r][1][k] + p[r][2][k]` — the
+//! same-colour-coded products along a PE row (Fig. 4 lists all 18
+//! equations; this module implements exactly that wiring and nothing else:
+//! its configuration "remains constant regardless of the type of
+//! convolution used or the filter size").
+
+use super::pe::PE_THREADS;
+
+/// Rows per PE matrix.
+pub const MATRIX_ROWS: usize = 6;
+/// Columns per PE matrix.
+pub const MATRIX_COLS: usize = 3;
+/// Psums produced per reduction (18 = 6 rows × 3 threads).
+pub const NUM_PSUMS: usize = MATRIX_ROWS * PE_THREADS;
+
+/// Reduce a matrix-worth of products `p[row][col][thread]` into
+/// `o[row][thread]` (wrapping int32, matching the psum domain).
+#[inline]
+pub fn reduce(
+    products: &[[[i32; PE_THREADS]; MATRIX_COLS]; MATRIX_ROWS],
+) -> [[i32; PE_THREADS]; MATRIX_ROWS] {
+    let mut o = [[0i32; PE_THREADS]; MATRIX_ROWS];
+    for r in 0..MATRIX_ROWS {
+        for k in 0..PE_THREADS {
+            o[r][k] = products[r][0][k]
+                .wrapping_add(products[r][1][k])
+                .wrapping_add(products[r][2][k]);
+        }
+    }
+    o
+}
+
+/// Adders instantiated by this net (for the area model): 18 psums × 2
+/// two-input adds each.
+pub const ADDERS: usize = NUM_PSUMS * 2;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn implements_fig4_equations() {
+        // Build p[r][c][k] = 100*r + 10*c + k so sums are recognizable.
+        let mut p = [[[0i32; 3]; 3]; 6];
+        for (r, pr) in p.iter_mut().enumerate() {
+            for (c, pc) in pr.iter_mut().enumerate() {
+                for (k, v) in pc.iter_mut().enumerate() {
+                    *v = (100 * r + 10 * c + k) as i32;
+                }
+            }
+        }
+        let o = reduce(&p);
+        // Fig 4 Row0: o1 = p11+p14+p17 → thread 0 of cols 0,1,2 in row 0
+        assert_eq!(o[0][0], 0 + 10 + 20);
+        assert_eq!(o[0][1], 1 + 11 + 21);
+        assert_eq!(o[2][2], 202 + 212 + 222);
+        assert_eq!(o[5][0], 500 + 510 + 520);
+    }
+
+    #[test]
+    fn wrapping_addition() {
+        let mut p = [[[0i32; 3]; 3]; 6];
+        p[0][0][0] = i32::MAX;
+        p[0][1][0] = 1;
+        let o = reduce(&p);
+        assert_eq!(o[0][0], i32::MIN);
+    }
+
+    #[test]
+    fn eighteen_psums() {
+        assert_eq!(NUM_PSUMS, 18);
+        assert_eq!(ADDERS, 36);
+    }
+}

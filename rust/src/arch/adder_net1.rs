@@ -1,0 +1,235 @@
+//! Adder net 1 (paper Fig. 9): the first configurable adder stage. Sums
+//! the 18 psums column-wise into output rows according to the stride, and
+//! carries the boundary psums in variable-length shift registers until the
+//! next column-wise tile sector arrives.
+//!
+//! Stride 1 (Fig. 9a): 4 full outputs per column
+//!     out[i] = o(i,0) + o(i+1,1) + o(i+2,2),  i = 0..3
+//! plus two boundary psums pushed into SRs:
+//!     sr_a = o(4,0) + o(5,1)   (o13 + o17)
+//!     sr_b = o(5,0)            (o16)
+//! consumed by the next sector as
+//!     out[4] = sr_a + o'(0,2);  out[5] = sr_b + o'(0,1) + o'(1,2).
+//!
+//! Stride 2 (Fig. 9b): 2 full outputs per column
+//!     out[i] = o(2i,0) + o(2i+1,1) + o(2i+2,2),  i = 0..1
+//! and one boundary psum sr = o(4,0) + o(5,1), consumed as
+//!     out[2] = sr + o'(0,2).
+
+use super::adder_net0::MATRIX_ROWS;
+use super::pe::PE_THREADS;
+
+/// Variable-length shift register (paper: "VAR Len SR", max length = input
+/// width). One entry per output column; pushed while processing sector n,
+/// popped in the same column order while processing sector n+1.
+#[derive(Clone, Debug, Default)]
+pub struct VarLenShiftReg {
+    buf: std::collections::VecDeque<i32>,
+    /// High-water mark (for SRAM/FF sizing checks).
+    pub max_len: usize,
+}
+
+impl VarLenShiftReg {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, v: i32) {
+        self.buf.push_back(v);
+        self.max_len = self.max_len.max(self.buf.len());
+    }
+
+    pub fn pop(&mut self) -> i32 {
+        self.buf.pop_front().expect("shift register underflow")
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+/// One column-cycle's result from adder net 1.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ColumnOutputs {
+    /// (sector-relative output row, psum) pairs completed this cycle.
+    pub done: Vec<(usize, i32)>,
+    /// Boundary psums stored this cycle (for the storage-ratio claim).
+    pub stored: usize,
+}
+
+/// Stride-configurable adder net 1 with its boundary shift registers.
+#[derive(Clone, Debug)]
+pub struct AdderNet1 {
+    pub stride: usize,
+    sr_a: VarLenShiftReg,
+    sr_b: VarLenShiftReg,
+    /// Whether a previous sector exists (SRs are primed).
+    primed: bool,
+}
+
+impl AdderNet1 {
+    pub fn new(stride: usize) -> Self {
+        assert!(stride == 1 || stride == 2, "paper supports stride 1/2");
+        AdderNet1 { stride, sr_a: VarLenShiftReg::new(), sr_b: VarLenShiftReg::new(), primed: false }
+    }
+
+    /// Mark the transition to the next column-wise tile sector: the SRs
+    /// filled during the previous sector become consumable.
+    pub fn next_sector(&mut self) {
+        self.primed = true;
+    }
+
+    /// Process one column of psums `o[row][thread]`.
+    ///
+    /// `last_sector` suppresses pushing boundary psums that no later sector
+    /// will consume (bottom of the image). Returned rows are relative to
+    /// the *previous* sector for boundary outputs (rows 4, 5) and to the
+    /// current sector for full outputs (rows 0..3 for s1, 0..1 for s2) —
+    /// the caller (state controller) owns the global row mapping.
+    pub fn process_column(
+        &mut self,
+        o: &[[i32; PE_THREADS]; MATRIX_ROWS],
+        last_sector: bool,
+    ) -> ColumnOutputs {
+        let mut done = Vec::with_capacity(6);
+        let mut stored = 0;
+        match self.stride {
+            1 => {
+                // boundary completions from the previous sector
+                if self.primed {
+                    let a = self.sr_a.pop();
+                    done.push((usize::MAX - 1, a.wrapping_add(o[0][2]))); // prev row 4
+                    let b = self.sr_b.pop();
+                    done.push((
+                        usize::MAX,
+                        b.wrapping_add(o[0][1]).wrapping_add(o[1][2]),
+                    )); // prev row 5
+                }
+                for i in 0..4 {
+                    done.push((
+                        i,
+                        o[i][0].wrapping_add(o[i + 1][1]).wrapping_add(o[i + 2][2]),
+                    ));
+                }
+                if !last_sector {
+                    self.sr_a.push(o[4][0].wrapping_add(o[5][1]));
+                    self.sr_b.push(o[5][0]);
+                    stored = 2;
+                }
+            }
+            2 => {
+                if self.primed {
+                    let a = self.sr_a.pop();
+                    done.push((usize::MAX, a.wrapping_add(o[0][2]))); // prev row 2
+                }
+                for i in 0..2 {
+                    done.push((
+                        i,
+                        o[2 * i][0]
+                            .wrapping_add(o[2 * i + 1][1])
+                            .wrapping_add(o[2 * i + 2][2]),
+                    ));
+                }
+                if !last_sector {
+                    self.sr_a.push(o[4][0].wrapping_add(o[5][1]));
+                    stored = 1;
+                }
+            }
+            _ => unreachable!(),
+        }
+        ColumnOutputs { done, stored }
+    }
+
+    /// Peak SR occupancy (must stay ≤ input width — the paper's sizing).
+    pub fn sr_high_water(&self) -> usize {
+        self.sr_a.max_len.max(self.sr_b.max_len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn o_with(vals: &[(usize, usize, i32)]) -> [[i32; 3]; 6] {
+        let mut o = [[0i32; 3]; 6];
+        for &(r, k, v) in vals {
+            o[r][k] = v;
+        }
+        o
+    }
+
+    #[test]
+    fn stride1_full_rows() {
+        let mut net = AdderNet1::new(1);
+        // o(i,0)=1, o(i+1,1)=2, o(i+2,2)=4 for i=0 → out0 = 7
+        let o = o_with(&[(0, 0, 1), (1, 1, 2), (2, 2, 4)]);
+        let out = net.process_column(&o, false);
+        assert_eq!(out.done[0], (0, 7));
+        assert_eq!(out.done.len(), 4);
+        assert_eq!(out.stored, 2);
+    }
+
+    #[test]
+    fn stride1_boundary_carry() {
+        // paper: psums o13 (=o(4,0)), o17 (=o(5,1)), o16 (=o(5,0)) carried
+        let mut net = AdderNet1::new(1);
+        let o1 = o_with(&[(4, 0, 10), (5, 1, 20), (5, 0, 30)]);
+        net.process_column(&o1, false);
+        net.next_sector();
+        let o2 = o_with(&[(0, 2, 100), (0, 1, 200), (1, 2, 400)]);
+        let out = net.process_column(&o2, true);
+        // prev row 4: (o(4,0)+o(5,1)) + o'(0,2) = 10+20+100
+        assert_eq!(out.done[0], (usize::MAX - 1, 130));
+        // prev row 5: o(5,0) + o'(0,1) + o'(1,2) = 30+200+400
+        assert_eq!(out.done[1], (usize::MAX, 630));
+        // last sector: nothing stored
+        assert_eq!(out.stored, 0);
+    }
+
+    #[test]
+    fn stride2_two_full_one_boundary() {
+        let mut net = AdderNet1::new(2);
+        let o = o_with(&[(0, 0, 1), (1, 1, 2), (2, 2, 4), (2, 0, 8), (3, 1, 16), (4, 2, 32), (4, 0, 64), (5, 1, 128)]);
+        let out = net.process_column(&o, false);
+        assert_eq!(out.done.len(), 2);
+        assert_eq!(out.done[0], (0, 1 + 2 + 4));
+        assert_eq!(out.done[1], (1, 8 + 16 + 32));
+        assert_eq!(out.stored, 1);
+        net.next_sector();
+        let o2 = o_with(&[(0, 2, 1000)]);
+        let out2 = net.process_column(&o2, true);
+        assert_eq!(out2.done[0], (usize::MAX, 64 + 128 + 1000));
+    }
+
+    #[test]
+    fn storage_ratio_matches_paper_claim() {
+        // §5.1: "only 2 out of 18 or 11% psums require local storage"
+        let mut net = AdderNet1::new(1);
+        let o = [[1i32; 3]; 6];
+        let out = net.process_column(&o, false);
+        assert_eq!(out.stored as f64 / 18.0, 2.0 / 18.0);
+    }
+
+    #[test]
+    fn sr_sizing_bounded_by_width() {
+        let mut net = AdderNet1::new(1);
+        let o = [[1i32; 3]; 6];
+        for _ in 0..10 {
+            net.process_column(&o, false); // 10 columns before next sector
+        }
+        assert_eq!(net.sr_high_water(), 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "underflow")]
+    fn popping_unprimed_sr_is_a_bug() {
+        let mut net = AdderNet1::new(1);
+        net.next_sector(); // prime without having pushed anything
+        let o = [[0i32; 3]; 6];
+        net.process_column(&o, true);
+    }
+}

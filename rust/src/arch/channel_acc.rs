@@ -1,0 +1,90 @@
+//! Channel accumulation stage (paper Fig. 13): the second configurable
+//! adder stage. Sums psums across the six PE matrices (standard and 1×1
+//! convolutions accumulate over input channels) and across sequential
+//! channel-group passes.
+
+use super::adder_net0::MATRIX_ROWS;
+use super::pe::PE_THREADS;
+
+/// Accumulate the 18-psum outputs of up to 6 matrices element-wise
+/// (Fig. 13b: `o1_0 + o1_1 + ... + o1_5`).
+pub fn accumulate_matrices(
+    per_matrix: &[[[i32; PE_THREADS]; MATRIX_ROWS]],
+) -> [[i32; PE_THREADS]; MATRIX_ROWS] {
+    assert!(per_matrix.len() <= 6, "at most 6 matrices in the grid");
+    let mut acc = [[0i32; PE_THREADS]; MATRIX_ROWS];
+    for m in per_matrix {
+        for r in 0..MATRIX_ROWS {
+            for k in 0..PE_THREADS {
+                acc[r][k] = acc[r][k].wrapping_add(m[r][k]);
+            }
+        }
+    }
+    acc
+}
+
+/// Channel accumulator over sequential passes (channel groups > 6 and
+/// filter-row groups for large kernels): a psum SRAM view that adds in
+/// place. No partial sums ever leave for DDR (the paper's key claim).
+#[derive(Clone, Debug)]
+pub struct ChannelAccumulator {
+    acc: Vec<i32>,
+    /// Accumulation writes performed (for SRAM traffic accounting).
+    pub writes: u64,
+}
+
+impl ChannelAccumulator {
+    pub fn new(len: usize) -> Self {
+        ChannelAccumulator { acc: vec![0; len], writes: 0 }
+    }
+
+    #[inline]
+    pub fn add(&mut self, idx: usize, v: i32) {
+        self.acc[idx] = self.acc[idx].wrapping_add(v);
+        self.writes += 1;
+    }
+
+    pub fn get(&self, idx: usize) -> i32 {
+        self.acc[idx]
+    }
+
+    pub fn into_vec(self) -> Vec<i32> {
+        self.acc
+    }
+
+    pub fn as_slice(&self) -> &[i32] {
+        &self.acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sums_across_matrices() {
+        let m0 = [[1i32; 3]; 6];
+        let mut m1 = [[10i32; 3]; 6];
+        m1[2][1] = -4;
+        let acc = accumulate_matrices(&[m0, m1]);
+        assert_eq!(acc[0][0], 11);
+        assert_eq!(acc[2][1], -3);
+    }
+
+    #[test]
+    fn empty_input_is_zero() {
+        let acc = accumulate_matrices(&[]);
+        assert_eq!(acc, [[0i32; 3]; 6]);
+    }
+
+    #[test]
+    fn accumulator_wraps_and_counts() {
+        let mut a = ChannelAccumulator::new(4);
+        a.add(0, i32::MAX);
+        a.add(0, 1);
+        a.add(3, 7);
+        assert_eq!(a.get(0), i32::MIN);
+        assert_eq!(a.get(3), 7);
+        assert_eq!(a.writes, 3);
+    }
+}

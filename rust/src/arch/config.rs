@@ -1,0 +1,88 @@
+//! Grid geometry (paper: 108 PEs in a 6×3×6 3-D array, 3 threads each).
+
+/// PE-grid configuration. The paper's NeuroMAX instance is
+/// [`GridConfig::neuromax`]; other geometries are used by the
+/// design-space exploration example.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GridConfig {
+    /// PE matrices in the grid (paper: 6).
+    pub matrices: usize,
+    /// PE rows per matrix (paper: 6).
+    pub rows: usize,
+    /// PE columns per matrix (paper: 3).
+    pub cols: usize,
+    /// Compute threads per PE (paper: 3).
+    pub threads: usize,
+    /// Processing clock in MHz (paper: 200 on Zynq-7020).
+    pub clock_mhz: f64,
+}
+
+impl GridConfig {
+    /// The published NeuroMAX configuration.
+    pub const fn neuromax() -> Self {
+        GridConfig { matrices: 6, rows: 6, cols: 3, threads: 3, clock_mhz: 200.0 }
+    }
+
+    /// Total PE count (paper: 108).
+    pub fn pe_count(&self) -> usize {
+        self.matrices * self.rows * self.cols
+    }
+
+    /// Total multiply lanes = PEs × threads (paper: 324).
+    pub fn lanes(&self) -> usize {
+        self.pe_count() * self.threads
+    }
+
+    /// Lanes within a single matrix (paper: 54).
+    pub fn matrix_lanes(&self) -> usize {
+        self.rows * self.cols * self.threads
+    }
+
+    /// Peak ops/cycle (1 log-mult per lane per cycle; the adder nets are
+    /// free-running behind them, matching the paper's OPS accounting).
+    pub fn peak_ops_per_cycle(&self) -> u64 {
+        self.lanes() as u64
+    }
+
+    /// Physical peak GOPS at the configured clock, counting a MAC as
+    /// 2 ops (multiply + accumulate).
+    pub fn peak_gops_physical(&self) -> f64 {
+        self.lanes() as f64 * 2.0 * self.clock_mhz / 1000.0
+    }
+
+    /// The paper's Table-2 accounting: peak GOPS normalized to the 500 MHz
+    /// comparison clock of [15] ("for fair comparison we make suitable
+    /// adjustments") — 324 lanes × 2 ops × 0.5 GHz = 324 GOPS.
+    pub fn peak_gops_paper(&self) -> f64 {
+        self.lanes() as f64 * 2.0 * 0.5
+    }
+}
+
+impl Default for GridConfig {
+    fn default() -> Self {
+        Self::neuromax()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn neuromax_geometry_matches_paper() {
+        let g = GridConfig::neuromax();
+        assert_eq!(g.pe_count(), 108);
+        assert_eq!(g.lanes(), 324);
+        assert_eq!(g.matrix_lanes(), 54);
+        assert_eq!(g.peak_ops_per_cycle(), 324);
+    }
+
+    #[test]
+    fn paper_gops_accounting() {
+        let g = GridConfig::neuromax();
+        // Table 2's headline "324 GOPS"
+        assert!((g.peak_gops_paper() - 324.0).abs() < 1e-9);
+        // physical at 200 MHz
+        assert!((g.peak_gops_physical() - 129.6).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,227 @@
+//! Hardware-faithful 1×1 convolution (paper §5.2, Fig. 10-13): the
+//! channel-parallel dataflow. Each PE matrix processes 3 input channels
+//! (one per PE column); the 6 matrices cover 18 channels concurrently;
+//! the 3 threads of each PE hold the same-channel weights of 3 different
+//! filters; adder net 0 reduces the per-matrix 3-channel partial dots and
+//! the channel-accumulation stage (Fig. 13b) sums across matrices and
+//! across sequential 18-channel groups.
+
+use super::adder_net0::{MATRIX_COLS, MATRIX_ROWS};
+use super::channel_acc::{accumulate_matrices, ChannelAccumulator};
+use super::conv_core::{ConvCore, CoreStats};
+use super::matrix::{InputTile, WeightBlock};
+use super::pe::PE_THREADS;
+use crate::lns::logquant::{LogWeight, ZERO_CODE};
+use crate::tensor::{Tensor3, Tensor4};
+
+impl ConvCore {
+    /// 1×1 convolution: `a [H, W, C] ⊛ w [K, 1, 1, C] → psums [H, W, K]`.
+    ///
+    /// Schedule (Fig. 11/12): pixel groups of 6 (matrix rows) × filter
+    /// triples (threads) × 18-channel groups (matrices × columns), one
+    /// cycle each.
+    pub fn conv1x1(
+        &mut self,
+        a: &Tensor3,
+        w_code: &Tensor4,
+        w_sign: &Tensor4,
+    ) -> (Tensor3, CoreStats) {
+        assert_eq!(w_code.kh, 1);
+        assert_eq!(w_code.kw, 1);
+        assert_eq!(w_code.c, a.c, "channel mismatch");
+        let (cin, cout) = (a.c, w_code.k);
+        let pixels = a.h * a.w;
+        let m = self.grid.matrices;
+        let ch_par = m * MATRIX_COLS; // 18 channels in flight
+
+        let mut acc = ChannelAccumulator::new(pixels * cout);
+        let mut stats = CoreStats {
+            useful_macs: (pixels * cin * cout) as u64,
+            matrices_used: cin.div_ceil(MATRIX_COLS).min(m),
+            ..Default::default()
+        };
+
+        let pix_groups = pixels.div_ceil(MATRIX_ROWS);
+        let k_groups = cout.div_ceil(PE_THREADS);
+        let c_groups = cin.div_ceil(ch_par);
+
+        for pg in 0..pix_groups {
+            for kg in 0..k_groups {
+                for cg in 0..c_groups {
+                    // all matrices fire in the same cycle
+                    let mut per_matrix = Vec::with_capacity(m);
+                    for mat in 0..m {
+                        let ch_lo = cg * ch_par + mat * MATRIX_COLS;
+                        if ch_lo >= cin {
+                            break;
+                        }
+                        let tile = input_tile_1x1(a, pg, ch_lo);
+                        self.memory.input.read(18);
+                        let wb = weight_block_1x1(w_code, w_sign, kg, ch_lo);
+                        per_matrix.push(self.matrices[mat].process(&tile, &wb));
+                    }
+                    // Fig. 13: channel accumulation across matrices
+                    let o = accumulate_matrices(&per_matrix);
+                    stats.cycles += 1;
+                    stats.psums_total += 18;
+                    // o[r][t] = partial dot of pixel (pg*6+r) with filter
+                    // (kg*3+t) over this cycle's channels
+                    for (r, row) in o.iter().enumerate() {
+                        let pix = pg * MATRIX_ROWS + r;
+                        if pix >= pixels {
+                            continue;
+                        }
+                        for (t, &psum) in row.iter().enumerate() {
+                            let k = kg * PE_THREADS + t;
+                            if k >= cout {
+                                continue;
+                            }
+                            self.memory.output.write(1);
+                            acc.add(pix * cout + k, psum);
+                        }
+                    }
+                }
+            }
+        }
+        stats.issued_ops = self.matrices.iter().map(|mx| mx.ops()).sum();
+        let out = Tensor3::from_vec(a.h, a.w, cout, acc.into_vec());
+        (out, stats)
+    }
+}
+
+/// Input tile for the 1×1 dataflow (Fig. 11): row r = pixel `pg*6 + r`,
+/// column c = channel `ch_lo + c`. Out-of-range slots read log-zero.
+fn input_tile_1x1(a: &Tensor3, pg: usize, ch_lo: usize) -> InputTile {
+    let pixels = a.h * a.w;
+    let mut tile = [[ZERO_CODE; MATRIX_COLS]; MATRIX_ROWS];
+    for (r, row) in tile.iter_mut().enumerate() {
+        let pix = pg * MATRIX_ROWS + r;
+        if pix >= pixels {
+            continue;
+        }
+        for (c, v) in row.iter_mut().enumerate() {
+            let ch = ch_lo + c;
+            if ch < a.c {
+                *v = a.data[pix * a.c + ch];
+            }
+        }
+    }
+    tile
+}
+
+/// Weight broadcast for the 1×1 dataflow (Fig. 11): thread t holds filter
+/// `kg*3 + t`, PE column c holds channel `ch_lo + c` — so
+/// `w[t][c] = W[kg*3+t][ch_lo+c]`. Missing filters/channels are log-zero
+/// (silent threads).
+fn weight_block_1x1(w_code: &Tensor4, w_sign: &Tensor4, kg: usize, ch_lo: usize) -> WeightBlock {
+    let mut block = [[LogWeight::ZERO; MATRIX_COLS]; PE_THREADS];
+    for (t, row) in block.iter_mut().enumerate() {
+        let k = kg * PE_THREADS + t;
+        if k >= w_code.k {
+            continue;
+        }
+        for (c, slot) in row.iter_mut().enumerate() {
+            let ch = ch_lo + c;
+            if ch < w_code.c {
+                *slot = LogWeight {
+                    code: w_code.get(k, 0, 0, ch),
+                    sign: w_sign.get(k, 0, 0, ch),
+                };
+            }
+        }
+    }
+    block
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::exec;
+    use crate::util::prng::SplitMix64;
+
+    fn rand_case(
+        rng: &mut SplitMix64, h: usize, w: usize, c: usize, k: usize,
+    ) -> (Tensor3, Tensor4, Tensor4) {
+        let mut a = Tensor3::new(h, w, c);
+        for v in a.data.iter_mut() {
+            *v = if rng.bool(0.1) { ZERO_CODE } else { rng.range_i32(-12, 8) };
+        }
+        let mut wc = Tensor4::new(k, 1, 1, c);
+        let mut ws = Tensor4::new(k, 1, 1, c);
+        for v in wc.data.iter_mut() {
+            *v = if rng.bool(0.1) { ZERO_CODE } else { rng.range_i32(-12, 8) };
+        }
+        for v in ws.data.iter_mut() {
+            *v = rng.sign();
+        }
+        (a, wc, ws)
+    }
+
+    #[test]
+    fn paper_5_2_example_cycles_and_util() {
+        // 3×6 pixels, 6 channels ⊛ 6 filters: 6 cycles, 100% over 2 matrices
+        let mut rng = SplitMix64::new(1);
+        let (a, wc, ws) = rand_case(&mut rng, 3, 6, 6, 6);
+        let mut core = ConvCore::default();
+        let (out, stats) = core.conv1x1(&a, &wc, &ws);
+        assert_eq!((out.h, out.w, out.c), (3, 6, 6));
+        assert_eq!(stats.cycles, 6);
+        assert_eq!(stats.useful_macs, 648);
+        assert_eq!(stats.matrices_used, 2);
+        // 108 OPS/cycle over 2 matrices = 100%
+        assert!((stats.utilization_used() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn matches_functional_executor() {
+        let mut rng = SplitMix64::new(2);
+        let (a, wc, ws) = rand_case(&mut rng, 6, 6, 16, 24);
+        let mut core = ConvCore::default();
+        let (out, _) = core.conv1x1(&a, &wc, &ws);
+        let want = exec::pointwise(&a, &wc, &ws, 1);
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn property_random_shapes_match() {
+        crate::util::proptest::check("conv1x1-faithful", 25, |rng| {
+            let h = 1 + rng.below(8) as usize;
+            let w = 1 + rng.below(8) as usize;
+            let c = 1 + rng.below(40) as usize;
+            let k = 1 + rng.below(12) as usize;
+            let (a, wc, ws) = rand_case(rng, h, w, c, k);
+            let mut core = ConvCore::default();
+            let (out, stats) = core.conv1x1(&a, &wc, &ws);
+            let want = exec::pointwise(&a, &wc, &ws, 1);
+            crate::prop_assert!(out == want, "mismatch h={h} w={w} c={c} k={k}");
+            crate::prop_assert!(
+                stats.utilization_used() <= 1.0 + 1e-9,
+                "util > 1 at h={h} w={w} c={c} k={k}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cycles_match_analytic_model() {
+        let grid = crate::arch::config::GridConfig::neuromax();
+        crate::util::proptest::check("conv1x1-cycles", 30, |rng| {
+            let h = 1 + rng.below(10) as usize;
+            let w = 1 + rng.below(10) as usize;
+            let c = 1 + rng.below(50) as usize;
+            let k = 1 + rng.below(20) as usize;
+            let (a, wc, ws) = rand_case(rng, h, w, c, k);
+            let mut core = ConvCore::default();
+            let (_, stats) = core.conv1x1(&a, &wc, &ws);
+            let l = crate::models::layer::LayerDesc::pointwise("t", h, w, c, k);
+            let perf = crate::dataflow::analyze(
+                &grid, &l, crate::dataflow::ScheduleOptions::default());
+            crate::prop_assert!(
+                perf.cycles == stats.cycles,
+                "analytic {} vs faithful {} (h={h} w={w} c={c} k={k})",
+                perf.cycles, stats.cycles
+            );
+            Ok(())
+        });
+    }
+}

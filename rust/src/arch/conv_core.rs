@@ -1,0 +1,307 @@
+//! The CONV core (paper Fig. 2): six PE matrices + adder nets + channel
+//! accumulation + memory block + post-processing, driven by the state
+//! controller. This is the *hardware-faithful* execution path for 3×3
+//! convolutions — every psum flows through the exact Fig. 4 / Fig. 9
+//! wiring, boundary psums ride the variable-length shift registers, and
+//! cycles are counted by the real schedule.
+//!
+//! `dataflow/` provides the fast functional twin; `rust/tests/` asserts
+//! bit-equality between the two and against the python oracle vectors.
+
+use super::adder_net1::AdderNet1;
+use super::channel_acc::{accumulate_matrices, ChannelAccumulator};
+use super::config::GridConfig;
+use super::matrix::PeMatrix;
+use super::sram::MemoryBlock;
+use super::state_controller as sc;
+use crate::tensor::{out_dim, Tensor3, Tensor4};
+
+/// Execution statistics for one layer pass on the core.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CoreStats {
+    /// Cycles consumed (the real schedule, Fig. 8).
+    pub cycles: u64,
+    /// Useful MACs (out_h · out_w · kh · kw · cin · cout).
+    pub useful_macs: u64,
+    /// Multiply ops actually issued by the PE threads.
+    pub issued_ops: u64,
+    /// Boundary psums pushed into the shift registers.
+    pub psums_stored: u64,
+    /// Psums produced in total (for the 11%-storage claim).
+    pub psums_total: u64,
+    /// PE matrices that carried real work.
+    pub matrices_used: usize,
+}
+
+impl CoreStats {
+    /// Thread utilization over the *used* matrices (the paper's §5
+    /// accounting: `45/(3·6·3) = 83.3%` uses one matrix's 54 lanes).
+    pub fn utilization_used(&self) -> f64 {
+        if self.cycles == 0 || self.matrices_used == 0 {
+            return 0.0;
+        }
+        self.useful_macs as f64 / (self.cycles as f64 * 54.0 * self.matrices_used as f64)
+    }
+
+    /// Utilization over the whole 324-lane grid.
+    pub fn utilization_total(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.useful_macs as f64 / (self.cycles as f64 * 324.0)
+    }
+}
+
+/// The CONV core.
+pub struct ConvCore {
+    pub grid: GridConfig,
+    pub matrices: Vec<PeMatrix>,
+    pub memory: MemoryBlock,
+}
+
+impl Default for ConvCore {
+    fn default() -> Self {
+        Self::new(GridConfig::neuromax())
+    }
+}
+
+impl ConvCore {
+    pub fn new(grid: GridConfig) -> Self {
+        let matrices = (0..grid.matrices).map(|_| PeMatrix::new()).collect();
+        ConvCore { grid, matrices, memory: MemoryBlock::new() }
+    }
+
+    /// Hardware-faithful 3×3 convolution (stride 1 or 2), valid padding
+    /// over an already-padded input. Weights `[K, 3, 3, C]`.
+    ///
+    /// Returns psums `[Ho, Wo, K]` plus the schedule statistics.
+    pub fn conv3x3(
+        &mut self,
+        a: &Tensor3,
+        w_code: &Tensor4,
+        w_sign: &Tensor4,
+        stride: usize,
+    ) -> (Tensor3, CoreStats) {
+        assert_eq!(w_code.kh, 3);
+        assert_eq!(w_code.kw, 3);
+        assert_eq!(w_code.c, a.c, "channel mismatch");
+        assert!(stride == 1 || stride == 2);
+        let (cin, cout) = (a.c, w_code.k);
+        let ho = out_dim(a.h, 3, stride);
+        let wo = out_dim(a.w, 3, stride);
+
+        let mut acc = ChannelAccumulator::new(ho * wo * cout);
+        let mut stats = CoreStats {
+            useful_macs: (ho * wo * 9 * cin * cout) as u64,
+            matrices_used: cin.min(self.grid.matrices),
+            ..Default::default()
+        };
+
+        let schedule = sc::conv3x3_schedule(a.h, wo);
+        let cgroups = cin.div_ceil(self.grid.matrices);
+
+        for k in 0..cout {
+            for cg in 0..cgroups {
+                let ch_lo = cg * self.grid.matrices;
+                let ch_hi = (ch_lo + self.grid.matrices).min(cin);
+                // one adder-net-1 pipeline per (filter, channel-group) pass
+                let mut net1 = AdderNet1::new(stride);
+                let mut cur_sector = usize::MAX;
+                for op in &schedule {
+                    if op.sector != cur_sector {
+                        if cur_sector != usize::MAX {
+                            net1.next_sector();
+                        }
+                        cur_sector = op.sector;
+                    }
+                    // all active matrices process their channel in parallel
+                    let mut per_matrix = Vec::with_capacity(ch_hi - ch_lo);
+                    for (m, ch) in (ch_lo..ch_hi).enumerate() {
+                        let tile = sc::input_tile(a, ch, op.sector, op.col, stride);
+                        self.memory.input.read(18);
+                        let wb = sc::weight_block(w_code, w_sign, k, ch);
+                        let o = self.matrices[m].process(&tile, &wb);
+                        per_matrix.push(o);
+                    }
+                    // channel accumulation across matrices, then adder net 1
+                    let o = accumulate_matrices(&per_matrix);
+                    let outs = net1.process_column(&o, op.last_sector);
+                    stats.psums_stored += outs.stored as u64;
+                    stats.psums_total += 18;
+                    stats.cycles += 1;
+                    for (rel, psum) in outs.done {
+                        let i = global_row(op.sector, rel, stride);
+                        if let Some(i) = i {
+                            if i < ho {
+                                self.memory.output.write(1);
+                                acc.add((i * wo + op.col) * cout + k, psum);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        stats.issued_ops = self.matrices.iter().map(|m| m.ops()).sum();
+        let out = Tensor3::from_vec(ho, wo, cout, acc.into_vec());
+        (out, stats)
+    }
+}
+
+/// Map an adder-net-1 relative row to a global output row.
+/// `usize::MAX` / `usize::MAX - 1` mark boundary rows of the previous
+/// sector (see `AdderNet1::process_column`).
+fn global_row(sector: usize, rel: usize, stride: usize) -> Option<usize> {
+    let rows_per_sector = 6 / stride; // 6 (s1) or 3 (s2)
+    if rel == usize::MAX {
+        // prev sector's last boundary row
+        (sector * rows_per_sector).checked_sub(1)
+    } else if rel == usize::MAX - 1 {
+        (sector * rows_per_sector).checked_sub(2)
+    } else {
+        Some(sector * rows_per_sector + rel)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lns::logquant::ZERO_CODE;
+    use crate::lns::mult::thread_mult;
+    use crate::util::prng::SplitMix64;
+
+    /// Direct convolution oracle in the same integer domain.
+    fn direct_conv(a: &Tensor3, wc: &Tensor4, ws: &Tensor4, stride: usize) -> Tensor3 {
+        let ho = out_dim(a.h, wc.kh, stride);
+        let wo = out_dim(a.w, wc.kw, stride);
+        let mut out = Tensor3::new(ho, wo, wc.k);
+        for i in 0..ho {
+            for j in 0..wo {
+                for k in 0..wc.k {
+                    let mut acc = 0i32;
+                    for dy in 0..wc.kh {
+                        for dx in 0..wc.kw {
+                            for ch in 0..a.c {
+                                acc = acc.wrapping_add(thread_mult(
+                                    wc.get(k, dy, dx, ch),
+                                    ws.get(k, dy, dx, ch),
+                                    a.get(i * stride + dy, j * stride + dx, ch),
+                                ));
+                            }
+                        }
+                    }
+                    out.set(i, j, k, acc);
+                }
+            }
+        }
+        out
+    }
+
+    fn rand_case(rng: &mut SplitMix64, h: usize, w: usize, c: usize, k: usize) -> (Tensor3, Tensor4, Tensor4) {
+        let mut a = Tensor3::new(h, w, c);
+        for v in a.data.iter_mut() {
+            *v = if rng.bool(0.1) { ZERO_CODE } else { rng.range_i32(-12, 8) };
+        }
+        let mut wc = Tensor4::new(k, 3, 3, c);
+        let mut ws = Tensor4::new(k, 3, 3, c);
+        for v in wc.data.iter_mut() {
+            *v = if rng.bool(0.1) { ZERO_CODE } else { rng.range_i32(-12, 8) };
+        }
+        for v in ws.data.iter_mut() {
+            *v = rng.sign();
+        }
+        (a, wc, ws)
+    }
+
+    #[test]
+    fn paper_example_cycles_and_utilization() {
+        // §5.1: 12×6 input, 3×3 s1 → 45 OPS/cycle, 83.3% utilization, 8 cycles
+        let mut rng = SplitMix64::new(1);
+        let (a, wc, ws) = rand_case(&mut rng, 12, 6, 1, 1);
+        let mut core = ConvCore::default();
+        let (out, stats) = core.conv3x3(&a, &wc, &ws, 1);
+        assert_eq!(out.h, 10);
+        assert_eq!(out.w, 4);
+        assert_eq!(stats.cycles, 8);
+        assert_eq!(stats.useful_macs, 360);
+        let ops_per_cycle = stats.useful_macs as f64 / stats.cycles as f64;
+        assert!((ops_per_cycle - 45.0).abs() < 1e-9);
+        assert!((stats.utilization_used() - 0.8333).abs() < 1e-3);
+        assert_eq!(out, direct_conv(&a, &wc, &ws, 1));
+    }
+
+    #[test]
+    fn paper_psum_storage_claim() {
+        // §5.1: only 2/18 ≈ 11% of psums need local storage
+        let mut rng = SplitMix64::new(2);
+        let (a, wc, ws) = rand_case(&mut rng, 12, 6, 1, 1);
+        let mut core = ConvCore::default();
+        let (_, stats) = core.conv3x3(&a, &wc, &ws, 1);
+        // stored only during the non-final sector: 2 per column × 4 columns
+        assert_eq!(stats.psums_stored, 8);
+        let ratio = stats.psums_stored as f64 / stats.psums_total as f64;
+        assert!(ratio <= 2.0 / 18.0 + 1e-9);
+    }
+
+    #[test]
+    fn matches_direct_conv_stride1_multichannel() {
+        let mut rng = SplitMix64::new(3);
+        let (a, wc, ws) = rand_case(&mut rng, 14, 9, 4, 3);
+        let mut core = ConvCore::default();
+        let (out, _) = core.conv3x3(&a, &wc, &ws, 1);
+        assert_eq!(out, direct_conv(&a, &wc, &ws, 1));
+    }
+
+    #[test]
+    fn matches_direct_conv_stride2() {
+        let mut rng = SplitMix64::new(4);
+        let (a, wc, ws) = rand_case(&mut rng, 13, 11, 2, 2);
+        let mut core = ConvCore::default();
+        let (out, _) = core.conv3x3(&a, &wc, &ws, 2);
+        assert_eq!(out, direct_conv(&a, &wc, &ws, 2));
+    }
+
+    #[test]
+    fn matches_direct_conv_many_channels() {
+        // channel groups > 1 (cin > 6) exercises sequential accumulation
+        let mut rng = SplitMix64::new(5);
+        let (a, wc, ws) = rand_case(&mut rng, 9, 7, 13, 2);
+        let mut core = ConvCore::default();
+        let (out, _) = core.conv3x3(&a, &wc, &ws, 1);
+        assert_eq!(out, direct_conv(&a, &wc, &ws, 1));
+    }
+
+    #[test]
+    fn property_random_shapes_match_direct() {
+        crate::util::proptest::check("convcore-vs-direct", 25, |rng| {
+            let h = 3 + rng.below(18) as usize;
+            let w = 3 + rng.below(12) as usize;
+            let c = 1 + rng.below(8) as usize;
+            let k = 1 + rng.below(4) as usize;
+            let stride = if rng.bool(0.5) { 1 } else { 2 };
+            if h < 3 + stride || w < 3 + stride {
+                return Ok(());
+            }
+            let (a, wc, ws) = rand_case(rng, h, w, c, k);
+            let mut core = ConvCore::default();
+            let (out, stats) = core.conv3x3(&a, &wc, &ws, stride);
+            let want = direct_conv(&a, &wc, &ws, stride);
+            crate::prop_assert!(out == want, "mismatch h={h} w={w} c={c} k={k} s={stride}");
+            crate::prop_assert!(
+                stats.utilization_used() <= 1.0 + 1e-9,
+                "utilization > 1 for h={h} w={w}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn utilization_bounds_and_cycle_floor() {
+        let mut rng = SplitMix64::new(6);
+        let (a, wc, ws) = rand_case(&mut rng, 18, 18, 6, 2);
+        let mut core = ConvCore::default();
+        let (_, stats) = core.conv3x3(&a, &wc, &ws, 1);
+        // cycles can never beat the roofline: macs / 324
+        assert!(stats.cycles >= stats.useful_macs / 324);
+        assert!(stats.utilization_total() <= 1.0);
+    }
+}

@@ -1,0 +1,391 @@
+//! Hardware-faithful higher-order convolutions (paper §5.3, Fig. 14-16):
+//! kernels wider than the 3 PE columns load in column groups (5×5 → cols
+//! 0-2 then 3-4), kernels taller than the 3 threads rotate tap-row
+//! assignments per PE row across thread passes (the `wa012/wa312/wa342`
+//! pattern of Fig. 15), and partial outputs accumulate across passes via
+//! the eq. 9-10 old/new registers (modelled by the channel accumulator —
+//! no psum ever leaves for DDR).
+//!
+//! Also hosts the hardware-faithful depthwise mode (§5.2: one independent
+//! channel per PE matrix).
+
+use super::adder_net0::{MATRIX_COLS, MATRIX_ROWS};
+use super::channel_acc::{accumulate_matrices, ChannelAccumulator};
+use super::conv_core::{ConvCore, CoreStats};
+use super::matrix::{InputTile, WeightBlock};
+use super::pe::PE_THREADS;
+use crate::lns::logquant::{LogWeight, ZERO_CODE};
+use crate::tensor::{out_dim, Tensor3, Tensor4};
+
+/// Tap rows (dy) that PE row `r` of a sector must serve for stride `s`:
+/// those congruent to the global input row modulo `s` (out row
+/// `i = (R - dy) / s` must be integral). Sorted ascending.
+fn dys_for_row(global_row: usize, kh: usize, s: usize) -> Vec<usize> {
+    (0..kh).filter(|dy| (global_row.wrapping_sub(*dy)) % s == 0 && *dy <= global_row).collect()
+}
+
+/// Thread passes needed for a sector: max over rows of ⌈|dys|/3⌉.
+fn thread_passes(sector: usize, kh: usize, s: usize) -> usize {
+    (0..MATRIX_ROWS)
+        .map(|r| dys_for_row(sector * MATRIX_ROWS + r, kh, s).len().div_ceil(PE_THREADS))
+        .max()
+        .unwrap_or(1)
+        .max(1)
+}
+
+impl ConvCore {
+    /// Hardware-faithful k×k convolution (any kh/kw ≥ 1, stride 1 or 2),
+    /// valid padding over an already-padded input. Weights `[K, kh, kw, C]`.
+    pub fn convkxk(
+        &mut self,
+        a: &Tensor3,
+        w_code: &Tensor4,
+        w_sign: &Tensor4,
+        stride: usize,
+    ) -> (Tensor3, CoreStats) {
+        let (kh, kw) = (w_code.kh, w_code.kw);
+        assert_eq!(w_code.c, a.c, "channel mismatch");
+        assert!(stride >= 1 && stride <= 2);
+        let (cin, cout) = (a.c, w_code.k);
+        let ho = out_dim(a.h, kh, stride);
+        let wo = out_dim(a.w, kw, stride);
+        let m = self.grid.matrices;
+
+        let mut acc = ChannelAccumulator::new(ho * wo * cout);
+        let mut stats = CoreStats {
+            useful_macs: (ho * wo * kh * kw * cin * cout) as u64,
+            matrices_used: cin.min(m),
+            ..Default::default()
+        };
+
+        let sectors = a.h.div_ceil(MATRIX_ROWS);
+        let colgroups = kw.div_ceil(MATRIX_COLS);
+        let cgroups = cin.div_ceil(m);
+
+        for k in 0..cout {
+            for cg in 0..cgroups {
+                let ch_lo = cg * m;
+                let ch_hi = (ch_lo + m).min(cin);
+                for sector in 0..sectors {
+                    let tpasses = thread_passes(sector, kh, stride);
+                    for j in 0..wo {
+                        for g in 0..colgroups {
+                            for p in 0..tpasses {
+                                self.kxk_cycle(
+                                    a, w_code, w_sign, stride, k, ch_lo, ch_hi,
+                                    sector, j, g, p, ho, wo, &mut acc, &mut stats,
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        stats.issued_ops = self.matrices.iter().map(|mx| mx.ops()).sum();
+        let out = Tensor3::from_vec(ho, wo, cout, acc.into_vec());
+        (out, stats)
+    }
+
+    /// One column cycle of the k×k dataflow: column group `g`, thread
+    /// pass `p`.
+    #[allow(clippy::too_many_arguments)]
+    fn kxk_cycle(
+        &mut self,
+        a: &Tensor3,
+        w_code: &Tensor4,
+        w_sign: &Tensor4,
+        stride: usize,
+        k: usize,
+        ch_lo: usize,
+        ch_hi: usize,
+        sector: usize,
+        j: usize,
+        g: usize,
+        p: usize,
+        ho: usize,
+        wo: usize,
+        acc: &mut ChannelAccumulator,
+        stats: &mut CoreStats,
+    ) -> Option<()> {
+        let kh = w_code.kh;
+        let kw = w_code.kw;
+        // per-row tap assignment for this pass: dy(r) = dys_r[3p + t]
+        let mut row_dys = [[None::<usize>; PE_THREADS]; MATRIX_ROWS];
+        for (r, slots) in row_dys.iter_mut().enumerate() {
+            let dys = dys_for_row(sector * MATRIX_ROWS + r, kh, stride);
+            for (t, slot) in slots.iter_mut().enumerate() {
+                *slot = dys.get(p * PE_THREADS + t).copied();
+            }
+        }
+
+        let mut per_matrix = Vec::with_capacity(ch_hi - ch_lo);
+        for (mat, ch) in (ch_lo..ch_hi).enumerate() {
+            // input tile: PE(r,c) ← A[6·sector + r][j·stride + g·3 + c]
+            let mut tile: InputTile = [[ZERO_CODE; MATRIX_COLS]; MATRIX_ROWS];
+            for (r, row) in tile.iter_mut().enumerate() {
+                let y = sector * MATRIX_ROWS + r;
+                if y >= a.h {
+                    continue;
+                }
+                for (c, v) in row.iter_mut().enumerate() {
+                    let x = j * stride + g * MATRIX_COLS + c;
+                    if x < a.w {
+                        *v = a.get(y, x, ch);
+                    }
+                }
+            }
+            self.memory.input.read(18);
+            // per-row weight blocks: thread t of row r holds tap
+            // (dy(r,t), dx = g·3 + c)
+            let mut weights: [WeightBlock; MATRIX_ROWS] =
+                [[[LogWeight::ZERO; MATRIX_COLS]; PE_THREADS]; MATRIX_ROWS];
+            for (r, wb) in weights.iter_mut().enumerate() {
+                for (t, wrow) in wb.iter_mut().enumerate() {
+                    let Some(dy) = row_dys[r][t] else { continue };
+                    for (c, slot) in wrow.iter_mut().enumerate() {
+                        let dx = g * MATRIX_COLS + c;
+                        if dx < kw {
+                            *slot = LogWeight {
+                                code: w_code.get(k, dy, dx, ch),
+                                sign: w_sign.get(k, dy, dx, ch),
+                            };
+                        }
+                    }
+                }
+            }
+            per_matrix.push(self.matrices[mat].process_per_row(&tile, &weights));
+        }
+        let o = accumulate_matrices(&per_matrix);
+        stats.cycles += 1;
+        stats.psums_total += 18;
+
+        // Accumulate o[r][t] into out row i = (R - dy)/stride (eq. 9-10's
+        // old/new accumulation; contributions crossing a sector boundary
+        // are the stored "old" psums).
+        for (r, row) in o.iter().enumerate() {
+            let y = sector * MATRIX_ROWS + r;
+            for (t, &psum) in row.iter().enumerate() {
+                let Some(dy) = row_dys[r][t] else { continue };
+                if y < dy {
+                    continue;
+                }
+                let num = y - dy;
+                if num % stride != 0 {
+                    continue;
+                }
+                let i = num / stride;
+                if i >= ho {
+                    continue;
+                }
+                // completes only when its last input row has been seen
+                let completes_in = (i * stride + kh - 1) / MATRIX_ROWS;
+                if completes_in > sector {
+                    stats.psums_stored += 1;
+                }
+                self.memory.output.write(1);
+                acc.add((i * wo + j) * w_code.k + k, psum);
+            }
+        }
+        Some(())
+    }
+
+    /// Hardware-faithful depthwise convolution (§5.2): each PE matrix owns
+    /// one channel; no channel accumulation across matrices.
+    /// `a [H,W,C]`, `w [C, k, k, 1]` → `[Ho, Wo, C]`.
+    pub fn depthwise(
+        &mut self,
+        a: &Tensor3,
+        w_code: &Tensor4,
+        w_sign: &Tensor4,
+        stride: usize,
+    ) -> (Tensor3, CoreStats) {
+        assert_eq!(w_code.k, a.c, "depthwise: one filter per channel");
+        let kh = w_code.kh;
+        let ho = out_dim(a.h, kh, stride);
+        let wo = out_dim(a.w, w_code.kw, stride);
+        let mut out = Tensor3::new(ho, wo, a.c);
+        let m = self.grid.matrices;
+        let mut stats = CoreStats {
+            useful_macs: (ho * wo * kh * w_code.kw * a.c) as u64,
+            matrices_used: a.c.min(m),
+            ..Default::default()
+        };
+        // process channel groups of `m`, one channel per matrix; reuse the
+        // single-channel kxk path per channel but charge grouped cycles
+        for cg in 0..a.c.div_ceil(m) {
+            let ch_lo = cg * m;
+            let ch_hi = (ch_lo + m).min(a.c);
+            let mut group_cycles = 0u64;
+            for ch in ch_lo..ch_hi {
+                // single-channel views
+                let mut a1 = Tensor3::new(a.h, a.w, 1);
+                for y in 0..a.h {
+                    for x in 0..a.w {
+                        a1.set(y, x, 0, a.get(y, x, ch));
+                    }
+                }
+                let mut w1c = Tensor4::new(1, kh, w_code.kw, 1);
+                let mut w1s = Tensor4::new(1, kh, w_code.kw, 1);
+                for dy in 0..kh {
+                    for dx in 0..w_code.kw {
+                        let i = w1c.idx(0, dy, dx, 0);
+                        w1c.data[i] = w_code.get(ch, dy, dx, 0);
+                        w1s.data[i] = w_sign.get(ch, dy, dx, 0);
+                    }
+                }
+                let mut sub = ConvCore::new(self.grid);
+                let (o1, s1) = sub.convkxk(&a1, &w1c, &w1s, stride);
+                group_cycles = group_cycles.max(s1.cycles);
+                stats.psums_stored += s1.psums_stored;
+                stats.psums_total += s1.psums_total;
+                for y in 0..ho {
+                    for x in 0..wo {
+                        out.set(y, x, ch, o1.get(y, x, 0));
+                    }
+                }
+            }
+            // the group's matrices run concurrently: wall cycles = max
+            stats.cycles += group_cycles;
+        }
+        (out, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::exec;
+    use crate::util::prng::SplitMix64;
+
+    fn rand_case(
+        rng: &mut SplitMix64, h: usize, w: usize, c: usize, k: usize,
+        kh: usize, kw: usize,
+    ) -> (Tensor3, Tensor4, Tensor4) {
+        let mut a = Tensor3::new(h, w, c);
+        for v in a.data.iter_mut() {
+            *v = if rng.bool(0.1) { ZERO_CODE } else { rng.range_i32(-12, 8) };
+        }
+        let mut wc = Tensor4::new(k, kh, kw, c);
+        let mut ws = Tensor4::new(k, kh, kw, c);
+        for v in wc.data.iter_mut() {
+            *v = if rng.bool(0.1) { ZERO_CODE } else { rng.range_i32(-12, 8) };
+        }
+        for v in ws.data.iter_mut() {
+            *v = rng.sign();
+        }
+        (a, wc, ws)
+    }
+
+    #[test]
+    fn conv5x5_matches_executor() {
+        let mut rng = SplitMix64::new(1);
+        let (a, wc, ws) = rand_case(&mut rng, 12, 10, 3, 4, 5, 5);
+        let mut core = ConvCore::default();
+        let (out, stats) = core.convkxk(&a, &wc, &ws, 1);
+        assert_eq!(out, exec::conv2d(&a, &wc, &ws, 1));
+        // Fig. 14 structure: 2 column groups × 2 thread passes per column,
+        // 2 sectors × wo=6 columns, ×3 channels ×4 filters
+        assert_eq!(stats.cycles, (2 * 6 * 2 * 2) * 4);
+    }
+
+    #[test]
+    fn conv5x5_cycle_structure() {
+        let mut rng = SplitMix64::new(2);
+        let (a, wc, ws) = rand_case(&mut rng, 12, 10, 1, 1, 5, 5);
+        let mut core = ConvCore::default();
+        let (_, stats) = core.convkxk(&a, &wc, &ws, 1);
+        // sectors=2, wo=6, colgroups=2, tpasses=2 → 48 cycles
+        assert_eq!(stats.cycles, 2 * 6 * 2 * 2);
+        // interior utilization ≈ 69% (25·6 / (4·54)); edges pull it lower
+        let u = stats.utilization_used();
+        assert!((0.4..=0.72).contains(&u), "5×5 util {u}");
+    }
+
+    #[test]
+    fn conv4x4_matches_executor() {
+        let mut rng = SplitMix64::new(3);
+        let (a, wc, ws) = rand_case(&mut rng, 11, 9, 3, 4, 4, 4);
+        let mut core = ConvCore::default();
+        let (out, _) = core.convkxk(&a, &wc, &ws, 1);
+        assert_eq!(out, exec::conv2d(&a, &wc, &ws, 1));
+    }
+
+    #[test]
+    fn conv7x7_s2_matches_executor() {
+        // the ResNet stem shape class
+        let mut rng = SplitMix64::new(4);
+        let (a, wc, ws) = rand_case(&mut rng, 14, 14, 3, 4, 7, 7);
+        let mut core = ConvCore::default();
+        let (out, _) = core.convkxk(&a, &wc, &ws, 2);
+        assert_eq!(out, exec::conv2d(&a, &wc, &ws, 2));
+    }
+
+    #[test]
+    fn kxk_reduces_to_3x3_pipeline() {
+        // the generalized path must agree with the dedicated 3×3 core
+        let mut rng = SplitMix64::new(5);
+        let (a, wc, ws) = rand_case(&mut rng, 13, 9, 4, 2, 3, 3);
+        let mut g1 = ConvCore::default();
+        let mut g2 = ConvCore::default();
+        let (out_kxk, s_kxk) = g1.convkxk(&a, &wc, &ws, 1);
+        let (out_3x3, s_3x3) = g2.conv3x3(&a, &wc, &ws, 1);
+        assert_eq!(out_kxk, out_3x3);
+        assert_eq!(s_kxk.cycles, s_3x3.cycles);
+    }
+
+    #[test]
+    fn property_random_kernels_match_executor() {
+        crate::util::proptest::check("convkxk-faithful", 15, |rng| {
+            let kh = 1 + rng.below(7) as usize;
+            let kw = 1 + rng.below(7) as usize;
+            let stride = 1 + rng.below(2) as usize;
+            let h = kh + stride + rng.below(12) as usize;
+            let w = kw + stride + rng.below(10) as usize;
+            let c = 1 + rng.below(5) as usize;
+            let k = 1 + rng.below(3) as usize;
+            let (a, wc, ws) = rand_case(rng, h, w, c, k, kh, kw);
+            let mut core = ConvCore::default();
+            let (out, stats) = core.convkxk(&a, &wc, &ws, stride);
+            let want = exec::conv2d(&a, &wc, &ws, stride);
+            crate::prop_assert!(
+                out == want,
+                "mismatch kh={kh} kw={kw} s={stride} h={h} w={w} c={c} k={k}"
+            );
+            crate::prop_assert!(
+                stats.utilization_used() <= 1.0 + 1e-9,
+                "util > 1 (kh={kh} kw={kw} s={stride})"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn depthwise_matches_executor() {
+        let mut rng = SplitMix64::new(6);
+        let mut a = Tensor3::new(10, 10, 8);
+        for v in a.data.iter_mut() {
+            *v = rng.range_i32(-10, 6);
+        }
+        let mut wc = Tensor4::new(8, 3, 3, 1);
+        let mut ws = Tensor4::new(8, 3, 3, 1);
+        for v in wc.data.iter_mut() {
+            *v = rng.range_i32(-8, 4);
+        }
+        for v in ws.data.iter_mut() {
+            *v = rng.sign();
+        }
+        let mut core = ConvCore::default();
+        let (out, stats) = core.depthwise(&a, &wc, &ws, 1);
+        assert_eq!(out, exec::depthwise(&a, &wc, &ws, 1));
+        // 8 channels over 6 matrices → 2 groups of sector-cycles
+        let l = crate::models::layer::LayerDesc {
+            name: "dw".into(),
+            op: crate::models::layer::Op::Depthwise { k: 3, stride: 1, pad: 0 },
+            hin: 10, win: 10, cin: 8, cout: 8,
+        };
+        let perf = crate::dataflow::analyze(
+            &crate::arch::config::GridConfig::neuromax(), &l,
+            crate::dataflow::ScheduleOptions::default());
+        assert_eq!(stats.cycles, perf.cycles);
+    }
+}

@@ -1,0 +1,131 @@
+//! A 6×3 PE matrix (paper Fig. 3c/d): 18 multi-threaded PEs fed by the 2D
+//! weight broadcast, reduced by its dedicated adder net 0.
+
+use super::adder_net0::{self, MATRIX_COLS, MATRIX_ROWS};
+use super::pe::{Pe, PE_THREADS};
+use crate::lns::logquant::LogWeight;
+
+/// The 2D-broadcast weight block for one matrix: `w[thread][col]`, i.e.
+/// thread k of every PE in column c holds `w[k][c]` (for 3×3 convolution
+/// this is tap (dy=k, dx=c) of the current filter/channel).
+pub type WeightBlock = [[LogWeight; MATRIX_COLS]; PE_THREADS];
+
+/// The input tile column fed in one cycle: `a[row][col]`.
+pub type InputTile = [[i32; MATRIX_COLS]; MATRIX_ROWS];
+
+/// One PE matrix.
+#[derive(Clone, Debug)]
+pub struct PeMatrix {
+    pub pes: [[Pe; MATRIX_COLS]; MATRIX_ROWS],
+    /// Cycles this matrix was active.
+    pub active_cycles: u64,
+}
+
+impl Default for PeMatrix {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PeMatrix {
+    pub fn new() -> Self {
+        PeMatrix {
+            pes: Default::default(),
+            active_cycles: 0,
+        }
+    }
+
+    /// One cycle of the matrix: broadcast `weights` (Fig. 6b), feed the
+    /// input tile (Fig. 6a/c), produce the 18 psums via adder net 0.
+    pub fn process(&mut self, inputs: &InputTile, weights: &WeightBlock) -> [[i32; PE_THREADS]; MATRIX_ROWS] {
+        self.active_cycles += 1;
+        let mut products = [[[0i32; PE_THREADS]; MATRIX_COLS]; MATRIX_ROWS];
+        for r in 0..MATRIX_ROWS {
+            for c in 0..MATRIX_COLS {
+                // PE(r,c): thread k multiplies its resident weight w[k][c]
+                // by the broadcast input a[r][c] (Fig. 3b).
+                let w_col = [weights[0][c], weights[1][c], weights[2][c]];
+                products[r][c] = self.pes[r][c].process(inputs[r][c], &w_col);
+            }
+        }
+        adder_net0::reduce(&products)
+    }
+
+    /// Total multiplies issued.
+    pub fn ops(&self) -> u64 {
+        self.pes.iter().flatten().map(|pe| pe.ops()).sum()
+    }
+
+    /// One cycle with *per-row* weight blocks — the Fig. 15 mode used by
+    /// kernels larger than 3×3, where the state controller rotates tap
+    /// assignments row by row (e.g. `wa012 / wa312 / wa342` in the paper's
+    /// 5×5 chart). Adder net 0's wiring is unchanged: within a row, every
+    /// column's thread t holds the same tap row dy, so the row-wise sum is
+    /// still a (partial) filter-row dot product.
+    pub fn process_per_row(
+        &mut self,
+        inputs: &InputTile,
+        weights: &[WeightBlock; MATRIX_ROWS],
+    ) -> [[i32; PE_THREADS]; MATRIX_ROWS] {
+        self.active_cycles += 1;
+        let mut products = [[[0i32; PE_THREADS]; MATRIX_COLS]; MATRIX_ROWS];
+        for r in 0..MATRIX_ROWS {
+            for c in 0..MATRIX_COLS {
+                let wb = &weights[r];
+                let w_col = [wb[0][c], wb[1][c], wb[2][c]];
+                products[r][c] = self.pes[r][c].process(inputs[r][c], &w_col);
+            }
+        }
+        adder_net0::reduce(&products)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lns::logquant::{quantize_act, quantize_weight};
+    use crate::lns::mult::thread_mult;
+
+    fn wblock(vals: [[f32; 3]; 3]) -> WeightBlock {
+        let mut w = [[LogWeight::ZERO; 3]; 3];
+        for (k, row) in vals.iter().enumerate() {
+            for (c, &v) in row.iter().enumerate() {
+                w[k][c] = quantize_weight(v);
+            }
+        }
+        w
+    }
+
+    #[test]
+    fn psum_is_row_dot_product() {
+        // o(r, k) must equal Σ_c w[k][c]·a[r][c] — adder net 0's contract.
+        let w = wblock([[1.0, 2.0, 0.5], [-1.0, 4.0, 1.0], [2.0, 2.0, 2.0]]);
+        let mut m = PeMatrix::new();
+        let mut inputs = [[0i32; 3]; 6];
+        for (r, row) in inputs.iter_mut().enumerate() {
+            for (c, a) in row.iter_mut().enumerate() {
+                *a = quantize_act((r + 1) as f32 * (c + 1) as f32);
+            }
+        }
+        let o = m.process(&inputs, &w);
+        for r in 0..6 {
+            for k in 0..3 {
+                let expect: i32 = (0..3)
+                    .map(|c| thread_mult(w[k][c].code, w[k][c].sign, inputs[r][c]))
+                    .fold(0i32, |acc, p| acc.wrapping_add(p));
+                assert_eq!(o[r][k], expect, "o({r},{k})");
+            }
+        }
+    }
+
+    #[test]
+    fn ops_counted_per_cycle() {
+        let mut m = PeMatrix::new();
+        let w = wblock([[1.0; 3]; 3]);
+        let inputs = [[0i32; 3]; 6];
+        m.process(&inputs, &w);
+        m.process(&inputs, &w);
+        assert_eq!(m.ops(), 2 * 54);
+        assert_eq!(m.active_cycles, 2);
+    }
+}

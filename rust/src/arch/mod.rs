@@ -1,0 +1,27 @@
+//! The NeuroMAX hardware architecture (paper §4, Fig. 2-4): PE threads,
+//! multi-threaded PEs, 6×3 PE matrices, adder nets 0/1, channel
+//! accumulators, SRAM banks, the state controller and the post-processing
+//! block — composed into [`conv_core::ConvCore`].
+//!
+//! These modules are the *hardware-faithful* datapath: every psum follows
+//! the exact wiring of the paper's figures (Fig. 4's 18 equations, Fig. 9's
+//! stride configurations, the variable-length boundary shift registers).
+//! `dataflow/` contains the fast functional equivalent used for large
+//! workloads; `rust/tests/` proves both produce identical bits.
+
+pub mod adder_net0;
+pub mod adder_net1;
+pub mod channel_acc;
+pub mod config;
+pub mod conv1x1;
+pub mod convkxk;
+pub mod conv_core;
+pub mod matrix;
+pub mod pe;
+pub mod post_process;
+pub mod sram;
+pub mod state_controller;
+pub mod thread;
+
+pub use config::GridConfig;
+pub use conv_core::ConvCore;

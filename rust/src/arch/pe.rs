@@ -1,0 +1,68 @@
+//! A multi-threaded PE (paper Fig. 3b): three compute threads sharing one
+//! input activation, each holding one weight of a 3-tap weight column.
+
+use super::thread::ComputeThread;
+use crate::lns::logquant::LogWeight;
+
+/// Threads per PE in the paper's design.
+pub const PE_THREADS: usize = 3;
+
+/// One PE: 3 threads, one broadcast input.
+#[derive(Clone, Debug, Default)]
+pub struct Pe {
+    pub threads: [ComputeThread; PE_THREADS],
+}
+
+impl Pe {
+    pub fn new() -> Self {
+        Pe { threads: [ComputeThread::new(); PE_THREADS] }
+    }
+
+    /// One cycle: multiply the broadcast input `a_code` by the three
+    /// resident thread weights, producing `p_{r,c,0..2}` (Fig. 3b's
+    /// p11, p12, p13).
+    #[inline(always)]
+    pub fn process(&mut self, a_code: i32, w: &[LogWeight; PE_THREADS]) -> [i32; PE_THREADS] {
+        [
+            self.threads[0].mult(w[0].code, w[0].sign, a_code),
+            self.threads[1].mult(w[1].code, w[1].sign, a_code),
+            self.threads[2].mult(w[2].code, w[2].sign, a_code),
+        ]
+    }
+
+    /// Total multiplies issued by this PE.
+    pub fn ops(&self) -> u64 {
+        self.threads.iter().map(|t| t.ops).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lns::logquant::{quantize_weight, ZERO_CODE};
+
+    #[test]
+    fn three_products_per_cycle() {
+        let mut pe = Pe::new();
+        let w = [
+            quantize_weight(1.0),  // code 0
+            quantize_weight(2.0),  // code 2
+            quantize_weight(-0.5), // code -2, sign -1
+        ];
+        // input code 0 (= 1.0): products are the weight values in Q.12
+        let p = pe.process(0, &w);
+        assert_eq!(p, [4096, 8192, -2048]);
+        assert_eq!(pe.ops(), 3);
+    }
+
+    #[test]
+    fn zero_weight_lane_stays_silent() {
+        let mut pe = Pe::new();
+        let w = [LogWeight::ZERO, quantize_weight(1.0), LogWeight::ZERO];
+        let p = pe.process(4, &w);
+        assert_eq!(p[0], 0);
+        assert_eq!(p[2], 0);
+        assert_eq!(p[1], 4096 << 2); // 2^((4+0)/2) = 4.0
+        let _ = ZERO_CODE;
+    }
+}

@@ -1,0 +1,56 @@
+//! Post-processing block (paper Fig. 2): ReLU + re-quantization of linear
+//! psums back into 6-bit log codes via the precomputed log table, before
+//! results return to the output SRAM / DDR.
+
+use crate::lns::tables::requant_act;
+use crate::tensor::Tensor3;
+
+/// Post-processing statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PostProcessStats {
+    /// Elements processed.
+    pub elements: u64,
+    /// Elements zeroed by ReLU (sparsity the next layer will see).
+    pub relu_zeros: u64,
+}
+
+/// Apply ReLU + log re-quantization to a psum tensor, producing activation
+/// codes for the next layer.
+pub fn post_process(psums: &Tensor3) -> (Tensor3, PostProcessStats) {
+    let mut stats = PostProcessStats::default();
+    let out = psums.map(|p| {
+        stats_count(&mut stats, p);
+        requant_act(p)
+    });
+    (out, stats)
+}
+
+#[inline]
+fn stats_count(stats: &mut PostProcessStats, p: i32) {
+    stats.elements += 1;
+    if p <= 0 {
+        stats.relu_zeros += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lns::ZERO_CODE;
+
+    #[test]
+    fn relu_and_requant() {
+        let t = Tensor3::from_vec(1, 1, 4, vec![4096, -100, 8192, 0]);
+        let (out, stats) = post_process(&t);
+        assert_eq!(out.data, vec![0, ZERO_CODE, 2, ZERO_CODE]);
+        assert_eq!(stats.elements, 4);
+        assert_eq!(stats.relu_zeros, 2);
+    }
+
+    #[test]
+    fn idempotent_on_zero() {
+        let t = Tensor3::filled(2, 2, 1, -5);
+        let (out, _) = post_process(&t);
+        assert!(out.data.iter().all(|&c| c == ZERO_CODE));
+    }
+}

@@ -1,0 +1,128 @@
+//! On-chip SRAM model (paper Fig. 2: weight / input / output SRAMs, total
+//! 3.8 Mb, mapped to 108 36-kb BRAMs on the Zynq-7020).
+
+/// Total on-chip SRAM budget in bits (paper: 3.8 Mb).
+pub const TOTAL_SRAM_BITS: u64 = 3_800_000;
+/// One Zynq BRAM block = 36 kb.
+pub const BRAM_BITS: u64 = 36 * 1024;
+/// BRAM blocks used (paper Table 1: 108 — one per PE, by design symmetry).
+pub const BRAM_BLOCKS: u64 = 108;
+
+/// Which of the three SRAM groups a bank belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BankKind {
+    Weight,
+    Input,
+    Output,
+}
+
+/// One SRAM bank with capacity tracking and access counters.
+#[derive(Clone, Debug)]
+pub struct SramBank {
+    pub kind: BankKind,
+    pub capacity_bits: u64,
+    pub used_bits: u64,
+    pub reads: u64,
+    pub writes: u64,
+}
+
+impl SramBank {
+    pub fn new(kind: BankKind, capacity_bits: u64) -> Self {
+        SramBank { kind, capacity_bits, used_bits: 0, reads: 0, writes: 0 }
+    }
+
+    /// Allocate `bits`; errors if the bank overflows (a scheduling bug —
+    /// the tiler must size tiles to fit).
+    pub fn alloc(&mut self, bits: u64) -> Result<(), String> {
+        if self.used_bits + bits > self.capacity_bits {
+            return Err(format!(
+                "{:?} SRAM overflow: {} + {} > {}",
+                self.kind, self.used_bits, bits, self.capacity_bits
+            ));
+        }
+        self.used_bits += bits;
+        Ok(())
+    }
+
+    pub fn free_all(&mut self) {
+        self.used_bits = 0;
+    }
+
+    #[inline]
+    pub fn read(&mut self, words: u64) {
+        self.reads += words;
+    }
+
+    #[inline]
+    pub fn write(&mut self, words: u64) {
+        self.writes += words;
+    }
+}
+
+/// The CONV core's memory block: three banks sharing the 3.8 Mb budget.
+/// Split chosen to fit the paper's workloads: half for input fmaps, the
+/// rest split between weights and outputs.
+#[derive(Clone, Debug)]
+pub struct MemoryBlock {
+    pub weight: SramBank,
+    pub input: SramBank,
+    pub output: SramBank,
+}
+
+impl Default for MemoryBlock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MemoryBlock {
+    pub fn new() -> Self {
+        MemoryBlock {
+            weight: SramBank::new(BankKind::Weight, TOTAL_SRAM_BITS / 4),
+            input: SramBank::new(BankKind::Input, TOTAL_SRAM_BITS / 2),
+            output: SramBank::new(BankKind::Output, TOTAL_SRAM_BITS / 4),
+        }
+    }
+
+    pub fn total_capacity(&self) -> u64 {
+        self.weight.capacity_bits + self.input.capacity_bits + self.output.capacity_bits
+    }
+
+    pub fn total_accesses(&self) -> u64 {
+        self.weight.reads + self.weight.writes + self.input.reads + self.input.writes
+            + self.output.reads + self.output.writes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_matches_paper() {
+        let m = MemoryBlock::new();
+        assert_eq!(m.total_capacity(), TOTAL_SRAM_BITS);
+        // 3.8 Mb fits in the 108 reported BRAMs (with ECC/width slack)
+        assert!(TOTAL_SRAM_BITS <= BRAM_BLOCKS * BRAM_BITS);
+        assert!(BRAM_BLOCKS * BRAM_BITS < TOTAL_SRAM_BITS + 300_000);
+    }
+
+    #[test]
+    fn overflow_is_an_error() {
+        let mut b = SramBank::new(BankKind::Input, 100);
+        assert!(b.alloc(60).is_ok());
+        assert!(b.alloc(41).is_err());
+        b.free_all();
+        assert!(b.alloc(100).is_ok());
+    }
+
+    #[test]
+    fn access_counters() {
+        let mut b = SramBank::new(BankKind::Weight, 1000);
+        b.read(9);
+        b.write(4);
+        b.read(1);
+        assert_eq!(b.reads, 10);
+        assert_eq!(b.writes, 4);
+    }
+}

@@ -1,0 +1,190 @@
+//! State controller (paper Fig. 2, 6, 11): sequences input tiles and
+//! weight broadcasts into the PE matrices. It owns the tile geometry —
+//! which input rows/columns feed which PE in which cycle — for the 2D
+//! weight-broadcast dataflow.
+
+use super::adder_net0::{MATRIX_COLS, MATRIX_ROWS};
+use super::matrix::{InputTile, WeightBlock};
+use super::pe::PE_THREADS;
+use crate::lns::logquant::{LogWeight, ZERO_CODE};
+use crate::tensor::{Tensor3, Tensor4};
+
+/// Layer parameters sent by the processor to the state controller
+/// (paper §4.1: "filter size, input width, input height, output width,
+/// output height and total channels").
+#[derive(Clone, Copy, Debug)]
+pub struct LayerParams {
+    pub filter: usize,
+    pub stride: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub out_h: usize,
+    pub out_w: usize,
+    pub channels: usize,
+    pub filters: usize,
+}
+
+/// The per-cycle load operation of the 3×3 dataflow: one (sector, column)
+/// pair, iterated column-major within a sector (Fig. 8's t = 1..8).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LoadOp {
+    pub sector: usize,
+    pub col: usize,
+    pub last_sector: bool,
+}
+
+/// Row sectors needed to cover `rows` input rows with 6-row tiles.
+pub fn sectors(rows: usize) -> usize {
+    rows.div_ceil(MATRIX_ROWS)
+}
+
+/// The cycle-by-cycle schedule for one (channel-group, filter) pass of a
+/// 3×3 convolution: sectors × output columns (Fig. 8).
+pub fn conv3x3_schedule(in_h: usize, out_w: usize) -> Vec<LoadOp> {
+    let n_sectors = sectors(in_h);
+    let mut ops = Vec::with_capacity(n_sectors * out_w);
+    for s in 0..n_sectors {
+        for j in 0..out_w {
+            ops.push(LoadOp { sector: s, col: j, last_sector: s + 1 == n_sectors });
+        }
+    }
+    ops
+}
+
+/// Load the row-shifted input tile for (sector, output column) — paper
+/// Fig. 6(a) for stride 1, Fig. 6(c) for stride 2: PE(r, c) receives
+/// `A[6·sector + r][stride·col + c]` of channel `ch`. Out-of-range rows
+/// (bottom sector padding) read as ZERO_CODE.
+pub fn input_tile(a: &Tensor3, ch: usize, sector: usize, col: usize, stride: usize) -> InputTile {
+    let mut tile = [[ZERO_CODE; MATRIX_COLS]; MATRIX_ROWS];
+    for (r, row) in tile.iter_mut().enumerate() {
+        let y = sector * MATRIX_ROWS + r;
+        if y >= a.h {
+            continue; // padded bottom rows
+        }
+        for (c, v) in row.iter_mut().enumerate() {
+            let x = stride * col + c;
+            if x < a.w {
+                *v = a.get(y, x, ch);
+            }
+        }
+    }
+    tile
+}
+
+/// Build the 2D weight broadcast block for filter `k`, channel `ch`
+/// (Fig. 6b): thread t of PE column c holds tap (dy = t, dx = c).
+pub fn weight_block(w_code: &Tensor4, w_sign: &Tensor4, k: usize, ch: usize) -> WeightBlock {
+    let mut block = [[LogWeight::ZERO; MATRIX_COLS]; PE_THREADS];
+    for (t, row) in block.iter_mut().enumerate() {
+        for (c, slot) in row.iter_mut().enumerate() {
+            *slot = LogWeight {
+                code: w_code.get(k, t, c, ch),
+                sign: w_sign.get(k, t, c, ch),
+            };
+        }
+    }
+    block
+}
+
+/// Pad an activation tensor with ZERO_CODE (log-domain zero padding).
+pub fn pad_input(a: &Tensor3, pad: usize) -> Tensor3 {
+    if pad == 0 {
+        return a.clone();
+    }
+    let mut out = Tensor3::filled(a.h + 2 * pad, a.w + 2 * pad, a.c, ZERO_CODE);
+    for y in 0..a.h {
+        for x in 0..a.w {
+            for ch in 0..a.c {
+                out.set(y + pad, x + pad, ch, a.get(y, x, ch));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_matches_fig8() {
+        // §5.1: 12×6 input, 3×3 s1 → wo=4: 2 sectors × 4 cols = 8 cycles
+        let ops = conv3x3_schedule(12, 4);
+        assert_eq!(ops.len(), 8);
+        assert_eq!(ops[0], LoadOp { sector: 0, col: 0, last_sector: false });
+        assert_eq!(ops[4], LoadOp { sector: 1, col: 0, last_sector: true });
+        assert_eq!(ops[7], LoadOp { sector: 1, col: 3, last_sector: true });
+    }
+
+    #[test]
+    fn input_tile_stride1_window() {
+        let mut a = Tensor3::new(12, 6, 1);
+        for y in 0..12 {
+            for x in 0..6 {
+                a.set(y, x, 0, (10 * y + x) as i32);
+            }
+        }
+        // t=2 in Fig 8: sector 0, col 1 → PE(r,c) gets A[r][1+c]
+        let tile = input_tile(&a, 0, 0, 1, 1);
+        assert_eq!(tile[0], [1, 2, 3]);
+        assert_eq!(tile[5], [51, 52, 53]);
+        // sector 1 (rows 6..11), col 0
+        let tile2 = input_tile(&a, 0, 1, 0, 1);
+        assert_eq!(tile2[0], [60, 61, 62]);
+    }
+
+    #[test]
+    fn input_tile_stride2_window() {
+        let mut a = Tensor3::new(6, 8, 1);
+        for y in 0..6 {
+            for x in 0..8 {
+                a.set(y, x, 0, (10 * y + x) as i32);
+            }
+        }
+        // Fig 6c: col j → input cols 2j..2j+2
+        let tile = input_tile(&a, 0, 0, 2, 2);
+        assert_eq!(tile[0], [4, 5, 6]);
+    }
+
+    #[test]
+    fn bottom_padding_reads_zero() {
+        let a = Tensor3::filled(7, 5, 1, 3);
+        let tile = input_tile(&a, 0, 1, 0, 1); // rows 6..11, only row 6 real
+        assert_eq!(tile[0], [3, 3, 3]);
+        assert_eq!(tile[1], [ZERO_CODE; 3]);
+        assert_eq!(tile[5], [ZERO_CODE; 3]);
+    }
+
+    #[test]
+    fn weight_block_is_dy_dx_layout() {
+        let mut wc = Tensor4::new(2, 3, 3, 4);
+        let ws = {
+            let mut t = Tensor4::new(2, 3, 3, 4);
+            t.data.fill(1);
+            t
+        };
+        for dy in 0..3 {
+            for dx in 0..3 {
+                let i = wc.idx(1, dy, dx, 2);
+                wc.data[i] = (10 * dy + dx) as i32;
+            }
+        }
+        let b = weight_block(&wc, &ws, 1, 2);
+        assert_eq!(b[0][0].code, 0);
+        assert_eq!(b[1][2].code, 12);
+        assert_eq!(b[2][1].code, 21);
+    }
+
+    #[test]
+    fn padding_preserves_interior() {
+        let mut a = Tensor3::new(2, 2, 1);
+        a.set(0, 0, 0, 5);
+        a.set(1, 1, 0, 7);
+        let p = pad_input(&a, 1);
+        assert_eq!(p.h, 4);
+        assert_eq!(p.get(0, 0, 0), ZERO_CODE);
+        assert_eq!(p.get(1, 1, 0), 5);
+        assert_eq!(p.get(2, 2, 0), 7);
+    }
+}

@@ -1,0 +1,53 @@
+//! A single compute thread (paper Fig. 3a): the smallest datapath unit.
+//!
+//! Hardware inventory per thread: a 7-bit exponent adder, a 2-entry
+//! fractional LUT (n = 1 fractional bit → 2^n = 2 stored values) and a
+//! barrel shifter. `lns::mult::thread_mult` is the exact arithmetic; this
+//! type adds the hardware bookkeeping (op counting) used by the
+//! utilization accounting.
+
+use crate::lns::mult::thread_mult;
+
+/// One log-multiply thread.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ComputeThread {
+    /// Multiplies issued (for utilization accounting).
+    pub ops: u64,
+}
+
+impl ComputeThread {
+    pub fn new() -> Self {
+        ComputeThread { ops: 0 }
+    }
+
+    /// Execute one multiply: `(w_code, w_sign) × a_code` (eq. 8).
+    #[inline(always)]
+    pub fn mult(&mut self, w_code: i32, w_sign: i32, a_code: i32) -> i32 {
+        self.ops += 1;
+        thread_mult(w_code, w_sign, a_code)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lns::ZERO_CODE;
+
+    #[test]
+    fn counts_ops() {
+        let mut t = ComputeThread::new();
+        assert_eq!(t.mult(0, 1, 0), 4096);
+        assert_eq!(t.mult(ZERO_CODE, 1, 0), 0);
+        assert_eq!(t.ops, 2);
+    }
+
+    #[test]
+    fn matches_datapath_spec() {
+        let mut t = ComputeThread::new();
+        for wc in -31..=31 {
+            for ac in [-31, -5, 0, 5, 31] {
+                assert_eq!(t.mult(wc, -1, ac), thread_mult(wc, -1, ac));
+            }
+        }
+    }
+}

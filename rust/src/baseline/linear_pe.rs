@@ -1,0 +1,64 @@
+//! Linear (multiplier-based) PE core — the baseline of Fig. 17 and the
+//! "traditional accelerator" strawman of §1: one 16-bit multiplier per PE,
+//! peak throughput/PE capped at 1 op/cycle.
+
+use crate::lns::fixed::to_fixed;
+#[cfg(test)]
+use crate::lns::fixed::from_fixed;
+
+/// A single-threaded linear PE: 16-bit fixed-point multiplier + accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct LinearPe {
+    pub ops: u64,
+}
+
+impl LinearPe {
+    /// One MAC in Q-format fixed point (n fractional bits).
+    pub fn mac(&mut self, acc: i64, w: f64, a: f64, n: u32) -> i64 {
+        self.ops += 1;
+        let wf = to_fixed(w, n);
+        let af = to_fixed(a, n);
+        acc + ((wf * af) >> n)
+    }
+}
+
+/// Peak ops/cycle/PE for a linear array: exactly 1 (the unity ceiling the
+/// paper's multi-threaded core breaks).
+pub const PEAK_OPS_PER_PE: f64 = 1.0;
+
+/// Cycles for an ideal 100%-utilized linear array of `pes` PEs.
+pub fn ideal_cycles(macs: u64, pes: usize) -> u64 {
+    macs.div_ceil(pes as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mac_is_fixed_point_exact_for_grid_values() {
+        let mut pe = LinearPe::default();
+        let acc = pe.mac(0, 1.5, 2.0, 12);
+        assert_eq!(from_fixed(acc, 12), 3.0);
+        assert_eq!(pe.ops, 1);
+    }
+
+    #[test]
+    fn unity_throughput_ceiling() {
+        // 168 linear PEs can never beat macs/168 cycles — the paper's
+        // motivating bound.
+        assert_eq!(ideal_cycles(360, 168), 3);
+        assert_eq!(ideal_cycles(168, 168), 1);
+        assert!(PEAK_OPS_PER_PE <= 1.0);
+    }
+
+    #[test]
+    fn accumulation_chains() {
+        let mut pe = LinearPe::default();
+        let mut acc = 0;
+        for _ in 0..4 {
+            acc = pe.mac(acc, 0.5, 0.5, 12);
+        }
+        assert_eq!(from_fixed(acc, 12), 1.0);
+    }
+}

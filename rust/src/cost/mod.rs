@@ -1,0 +1,14 @@
+//! FPGA cost models: PE-level LUT/FF costs (Fig. 17), the full-core
+//! resource rollup (Table 1, Fig. 18), the power model (Fig. 18c) and the
+//! cost-adjusted cross-design comparison (Table 2).
+//!
+//! These are parametric gate-level models calibrated against the paper's
+//! published anchor points (DESIGN.md substitution table): we have no
+//! Vivado, so *relative* shapes (log(3) ≈ 1.05× linear LUT, 1.14× FF;
+//! grid+adder-net-0 ≈ 81%/91% of LUT/FF) are the reproduction target and
+//! absolute numbers are anchored to Table 1.
+
+pub mod area;
+pub mod compare;
+pub mod power;
+pub mod resources;

@@ -1,0 +1,179 @@
+//! Full-core resource rollup: Table 1 (20,680 LUTs / 17,207 FFs /
+//! 108 BRAMs / 2.727 W) and the Fig. 18 per-module breakdown.
+
+use super::area::{self, Cost};
+use crate::arch::config::GridConfig;
+use crate::arch::sram::BRAM_BLOCKS;
+
+/// Per-module resource breakdown (Fig. 18 a/b).
+#[derive(Clone, Debug)]
+pub struct Breakdown {
+    pub pe_grid: Cost,
+    pub adder_net0: Cost,
+    pub adder_net1: Cost,
+    pub channel_acc: Cost,
+    pub state_controller: Cost,
+    pub post_process: Cost,
+    pub axi_misc: Cost,
+}
+
+impl Breakdown {
+    pub fn total(&self) -> Cost {
+        self.pe_grid
+            .add(self.adder_net0)
+            .add(self.adder_net1)
+            .add(self.channel_acc)
+            .add(self.state_controller)
+            .add(self.post_process)
+            .add(self.axi_misc)
+    }
+
+    /// (module name, cost) rows for the Fig. 18 report.
+    pub fn rows(&self) -> Vec<(&'static str, Cost)> {
+        vec![
+            ("PE grid", self.pe_grid),
+            ("Adder net 0", self.adder_net0),
+            ("Adder net 1", self.adder_net1),
+            ("Channel acc", self.channel_acc),
+            ("State controller", self.state_controller),
+            ("Post processing", self.post_process),
+            ("AXI / misc", self.axi_misc),
+        ]
+    }
+
+    /// LUT share of PE grid + adder net 0 (paper: 81%).
+    pub fn grid_an0_lut_share(&self) -> f64 {
+        (self.pe_grid.luts + self.adder_net0.luts) / self.total().luts
+    }
+
+    /// FF share of PE grid + adder net 0 (paper: 91%).
+    pub fn grid_an0_ff_share(&self) -> f64 {
+        (self.pe_grid.ffs + self.adder_net0.ffs) / self.total().ffs
+    }
+}
+
+/// Psum datapath width inside the adder nets (sizing reference).
+#[allow(dead_code)]
+const PSUM_BITS: u32 = 24;
+
+/// Roll up the whole CONV core for a grid configuration.
+pub fn breakdown(grid: &GridConfig) -> Breakdown {
+    let pe = area::log_pe(grid.threads as u32, 16);
+    let pe_grid = pe.scale(grid.pe_count() as f64);
+
+    // adder net 0: per matrix, 18 psums × 2 adds (Fig. 4) at psum width.
+    // 20 LUTs per 24-bit add (carry-chain packing ~1.2 b/LUT) + a 24-bit
+    // sum register and pipeline flops (35 FFs) — the nets are fully
+    // pipelined to hold the 200 MHz clock.
+    let an0_per_add = Cost { luts: 20.0, ffs: 35.0 };
+    let adder_net0 = an0_per_add
+        .scale(2.0 * (grid.rows * grid.threads) as f64)
+        .scale(grid.matrices as f64);
+
+    // adder net 1: 6 configurable 2-stage adder trees (Fig. 9) + two
+    // VAR-len shift registers (SRL16 distributed RAM — LUT-heavy, FF-cheap)
+    let adder_net1 = Cost { luts: 1400.0, ffs: 700.0 }
+        .scale(grid.matrices as f64 / 6.0);
+
+    // channel accumulation stage: psum adder per matrix + mux fabric
+    let channel_acc = Cost { luts: 300.0, ffs: 120.0 }
+        .scale(grid.matrices as f64 / 6.0);
+
+    // state controller: address generators, tile counters, config regs
+    let state_controller = Cost { luts: 700.0, ffs: 500.0 };
+
+    // post processing: ReLU (compare) + 63-entry threshold LUT encoder
+    let post_process = Cost { luts: 90.0, ffs: 40.0 };
+
+    // AXI DMA interface + interconnect glue
+    let axi_misc = Cost { luts: 900.0, ffs: 500.0 };
+
+    Breakdown {
+        pe_grid,
+        adder_net0,
+        adder_net1,
+        channel_acc,
+        state_controller,
+        post_process,
+        axi_misc,
+    }
+}
+
+/// Table 1 summary.
+#[derive(Clone, Debug)]
+pub struct ResourceReport {
+    pub luts: f64,
+    pub ffs: f64,
+    pub brams: u64,
+    pub power_w: f64,
+    pub breakdown: Breakdown,
+}
+
+pub fn table1(grid: &GridConfig) -> ResourceReport {
+    let b = breakdown(grid);
+    let t = b.total();
+    ResourceReport {
+        luts: t.luts,
+        ffs: t.ffs,
+        brams: BRAM_BLOCKS,
+        power_w: super::power::total_power_w(grid),
+        breakdown: b,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nm() -> GridConfig {
+        GridConfig::neuromax()
+    }
+
+    #[test]
+    fn table1_lut_anchor() {
+        // paper Table 1: 20,680 LUTs (38% of the 7020)
+        let r = table1(&nm());
+        let err = (r.luts - 20_680.0).abs() / 20_680.0;
+        assert!(err < 0.10, "LUTs {} off by {err:.2}", r.luts);
+    }
+
+    #[test]
+    fn table1_ff_anchor() {
+        // paper Table 1: 17,207 FFs
+        let r = table1(&nm());
+        let err = (r.ffs - 17_207.0).abs() / 17_207.0;
+        assert!(err < 0.12, "FFs {} off by {err:.2}", r.ffs);
+    }
+
+    #[test]
+    fn table1_brams() {
+        assert_eq!(table1(&nm()).brams, 108);
+    }
+
+    #[test]
+    fn fig18_grid_an0_dominates() {
+        // paper Fig. 18: PE grid + adder net 0 = 81% LUTs, 91% FFs
+        let b = breakdown(&nm());
+        let lut_share = b.grid_an0_lut_share();
+        let ff_share = b.grid_an0_ff_share();
+        assert!((0.75..=0.87).contains(&lut_share), "LUT share {lut_share}");
+        assert!((0.85..=0.95).contains(&ff_share), "FF share {ff_share}");
+    }
+
+    #[test]
+    fn post_processing_negligible() {
+        // paper: "the post processing block consumes negligible resources"
+        let b = breakdown(&nm());
+        assert!(b.post_process.luts / b.total().luts < 0.01);
+    }
+
+    #[test]
+    fn utilization_fits_zynq7020() {
+        // 7020: 53,200 LUTs / 106,400 FFs — paper reports 38% / 16%
+        let r = table1(&nm());
+        let lut_pct = r.luts / 53_200.0;
+        let ff_pct = r.ffs / 106_400.0;
+        assert!((0.33..=0.43).contains(&lut_pct), "LUT% {lut_pct}");
+        assert!((0.13..=0.20).contains(&ff_pct), "FF% {ff_pct}");
+    }
+}

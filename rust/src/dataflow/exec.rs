@@ -1,0 +1,247 @@
+//! Fast functional executor: bit-exact psums for any layer type, paired
+//! with the analytic schedule (`schedule::analyze`) for cycle accounting.
+//!
+//! Log-domain products are exact integers and i32-wrapping addition is
+//! commutative, so the hardware's tile order and the direct loop below
+//! produce identical bits — `arch::conv_core` + the shared python vectors
+//! prove it. This is the simulator's hot path (see benches/perf_hotpath).
+
+use super::pool;
+use super::schedule::{analyze, LayerPerf, ScheduleOptions};
+use crate::arch::config::GridConfig;
+use crate::arch::state_controller::pad_input;
+use crate::lns::mult::thread_mult;
+use crate::lns::tables::requant_act;
+use crate::models::layer::{LayerDesc, Op};
+use crate::tensor::{out_dim, Tensor3, Tensor4};
+
+/// Direct log-domain convolution: `a [H,W,C] ⊛ w [K,kh,kw,C] → [Ho,Wo,K]`
+/// psums (valid padding — pad the input first for SAME).
+///
+/// §Perf optimization 2: contiguous-slice inner loops (index math hoisted
+/// out of the channel dot product) + ZERO_CODE weight skip. Bit-identical
+/// to the naive triple loop (the unit tests compare against
+/// `arch::conv_core` and the python oracle vectors).
+pub fn conv2d(a: &Tensor3, wc: &Tensor4, ws: &Tensor4, stride: usize) -> Tensor3 {
+    use crate::lns::logquant::ZERO_CODE;
+    assert_eq!(a.c, wc.c, "channel mismatch");
+    let c = a.c;
+    let ho = out_dim(a.h, wc.kh, stride);
+    let wo = out_dim(a.w, wc.kw, stride);
+    let mut out = Tensor3::new(ho, wo, wc.k);
+    let wtap = wc.kw * c; // weight stride per dy
+    for i in 0..ho {
+        for j in 0..wo {
+            let obase = (i * wo + j) * wc.k;
+            for dy in 0..wc.kh {
+                let y = i * stride + dy;
+                // input row segment covering taps dx=0..kw: contiguous
+                let abase = (y * a.w + j * stride) * c;
+                let arow = &a.data[abase..abase + wc.kw * c];
+                for (k, o) in out.data[obase..obase + wc.k].iter_mut().enumerate() {
+                    let wbase = (k * wc.kh + dy) * wtap;
+                    let wcrow = &wc.data[wbase..wbase + wtap];
+                    let wsrow = &ws.data[wbase..wbase + wtap];
+                    let mut acc = *o;
+                    for ((&w, &s), &av) in wcrow.iter().zip(wsrow).zip(arow) {
+                        if w <= ZERO_CODE {
+                            continue;
+                        }
+                        acc = acc.wrapping_add(thread_mult(w, s, av));
+                    }
+                    *o = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Depthwise convolution: `a [H,W,C]`, `w [C,k,k]` stored as Tensor4
+/// `[C,k,k,1]` → `[Ho,Wo,C]` psums.
+pub fn depthwise(a: &Tensor3, wc: &Tensor4, ws: &Tensor4, stride: usize) -> Tensor3 {
+    assert_eq!(a.c, wc.k, "depthwise: one filter per channel");
+    let ho = out_dim(a.h, wc.kh, stride);
+    let wo = out_dim(a.w, wc.kw, stride);
+    let mut out = Tensor3::new(ho, wo, a.c);
+    for i in 0..ho {
+        for j in 0..wo {
+            for ch in 0..a.c {
+                let mut acc = 0i32;
+                for dy in 0..wc.kh {
+                    for dx in 0..wc.kw {
+                        acc = acc.wrapping_add(thread_mult(
+                            wc.get(ch, dy, dx, 0),
+                            ws.get(ch, dy, dx, 0),
+                            a.get(i * stride + dy, j * stride + dx, ch),
+                        ));
+                    }
+                }
+                out.set(i, j, ch, acc);
+            }
+        }
+    }
+    out
+}
+
+/// Pointwise (1×1, arbitrary stride): `w [K,1,1,C]` → `[Ho,Wo,K]`.
+pub fn pointwise(a: &Tensor3, wc: &Tensor4, ws: &Tensor4, stride: usize) -> Tensor3 {
+    conv2d(a, wc, ws, stride)
+}
+
+/// Fully connected head: flattened input (row-major HWC) vs `w [K,1,1,N]`.
+pub fn fc(a: &Tensor3, wc: &Tensor4, ws: &Tensor4) -> Vec<i32> {
+    let n = a.len();
+    assert_eq!(wc.c, n, "fc: weight width != flattened input");
+    let mut out = vec![0i32; wc.k];
+    for (k, o) in out.iter_mut().enumerate() {
+        let mut acc = 0i32;
+        for (idx, &code) in a.data.iter().enumerate() {
+            acc = acc.wrapping_add(thread_mult(
+                wc.get(k, 0, 0, idx),
+                ws.get(k, 0, 0, idx),
+                code,
+            ));
+        }
+        *o = acc;
+    }
+    out
+}
+
+/// Post-processing between layers: ReLU + log re-quantization.
+pub fn requant(psums: &Tensor3) -> Tensor3 {
+    psums.map(requant_act)
+}
+
+/// Execute one layer functionally and return (psums-or-codes, perf).
+/// Compute layers return raw psums; pools return codes directly.
+pub fn run_layer(
+    grid: &GridConfig,
+    l: &LayerDesc,
+    a: &Tensor3,
+    wc: Option<&Tensor4>,
+    ws: Option<&Tensor4>,
+    opt: ScheduleOptions,
+) -> (Tensor3, LayerPerf) {
+    let perf = analyze(grid, l, opt);
+    let pad = match l.op {
+        Op::Conv { pad, .. } | Op::Depthwise { pad, .. } => pad,
+        _ => 0,
+    };
+    let ap = pad_input(a, pad);
+    let out = match l.op {
+        Op::Conv { stride, .. } => conv2d(&ap, wc.unwrap(), ws.unwrap(), stride),
+        Op::Depthwise { stride, .. } => depthwise(&ap, wc.unwrap(), ws.unwrap(), stride),
+        Op::Pointwise { stride } => pointwise(&ap, wc.unwrap(), ws.unwrap(), stride),
+        Op::Pool { k, stride, max } => {
+            assert!(max, "avg pool not modelled on the code domain");
+            pool::maxpool(&ap, k, stride)
+        }
+        Op::Fc => {
+            let v = fc(&ap, wc.unwrap(), ws.unwrap());
+            let k = v.len();
+            Tensor3::from_vec(1, 1, k, v)
+        }
+    };
+    (out, perf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lns::logquant::ZERO_CODE;
+    use crate::util::prng::SplitMix64;
+
+    fn rand_t3(rng: &mut SplitMix64, h: usize, w: usize, c: usize) -> Tensor3 {
+        let mut t = Tensor3::new(h, w, c);
+        for v in t.data.iter_mut() {
+            *v = if rng.bool(0.1) { ZERO_CODE } else { rng.range_i32(-12, 8) };
+        }
+        t
+    }
+
+    fn rand_t4(rng: &mut SplitMix64, k: usize, kh: usize, kw: usize, c: usize) -> (Tensor4, Tensor4) {
+        let mut wc = Tensor4::new(k, kh, kw, c);
+        let mut ws = Tensor4::new(k, kh, kw, c);
+        for v in wc.data.iter_mut() {
+            *v = if rng.bool(0.1) { ZERO_CODE } else { rng.range_i32(-12, 8) };
+        }
+        for v in ws.data.iter_mut() {
+            *v = rng.sign();
+        }
+        (wc, ws)
+    }
+
+    #[test]
+    fn conv_matches_hardware_core() {
+        // the fast path and the faithful core must agree bit-for-bit
+        let mut rng = SplitMix64::new(42);
+        let a = rand_t3(&mut rng, 13, 9, 5, );
+        let (wc, ws) = rand_t4(&mut rng, 3, 3, 3, 5);
+        let fast = conv2d(&a, &wc, &ws, 1);
+        let mut core = crate::arch::ConvCore::default();
+        let (hw, _) = core.conv3x3(&a, &wc, &ws, 1);
+        assert_eq!(fast, hw);
+    }
+
+    #[test]
+    fn pointwise_is_1x1_conv() {
+        let mut rng = SplitMix64::new(7);
+        let a = rand_t3(&mut rng, 6, 6, 16);
+        let (wc, ws) = rand_t4(&mut rng, 24, 1, 1, 16);
+        let out = pointwise(&a, &wc, &ws, 1);
+        assert_eq!((out.h, out.w, out.c), (6, 6, 24));
+    }
+
+    #[test]
+    fn fc_equals_pointwise_on_flat_input() {
+        let mut rng = SplitMix64::new(8);
+        let a = rand_t3(&mut rng, 2, 2, 3);
+        let (wc, ws) = rand_t4(&mut rng, 5, 1, 1, 12);
+        let flat = Tensor3::from_vec(1, 1, 12, a.data.clone());
+        let via_fc = fc(&a, &wc, &ws);
+        let via_pw = pointwise(&flat, &wc, &ws, 1);
+        assert_eq!(via_fc, via_pw.data);
+    }
+
+    #[test]
+    fn depthwise_channel_independence() {
+        let mut rng = SplitMix64::new(9);
+        let a = rand_t3(&mut rng, 8, 8, 4);
+        let (wc, ws) = rand_t4(&mut rng, 4, 3, 3, 1);
+        let out = depthwise(&a, &wc, &ws, 1);
+        // zeroing channel 2's input only changes channel 2's output
+        let mut a2 = a.clone();
+        for y in 0..8 {
+            for x in 0..8 {
+                a2.set(y, x, 2, ZERO_CODE);
+            }
+        }
+        let out2 = depthwise(&a2, &wc, &ws, 1);
+        for i in 0..out.h {
+            for j in 0..out.w {
+                for ch in 0..4 {
+                    if ch == 2 {
+                        assert_eq!(out2.get(i, j, ch), 0);
+                    } else {
+                        assert_eq!(out.get(i, j, ch), out2.get(i, j, ch));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn run_layer_pads_and_counts() {
+        let grid = GridConfig::neuromax();
+        let l = LayerDesc::conv("c", 3, 1, 1, 8, 8, 3, 4);
+        let mut rng = SplitMix64::new(10);
+        let a = rand_t3(&mut rng, 8, 8, 3);
+        let (wc, ws) = rand_t4(&mut rng, 4, 3, 3, 3);
+        let (out, perf) = run_layer(
+            &grid, &l, &a, Some(&wc), Some(&ws), ScheduleOptions::default());
+        assert_eq!((out.h, out.w, out.c), (8, 8, 4)); // SAME via pad 1
+        assert!(perf.cycles > 0);
+        assert_eq!(perf.macs, 8 * 8 * 9 * 3 * 4);
+    }
+}

@@ -1,0 +1,16 @@
+//! The 2D weight-broadcast dataflow (paper §5): cycle-accurate schedule
+//! analysis for every convolution type the paper supports (3×3 s1/s2, 1×1,
+//! depthwise, 4×4/5×5 and larger via column-group decomposition, pooling),
+//! a fast functional executor that produces bit-exact psums, and the
+//! SRAM-tiling / DDR-traffic model.
+//!
+//! `schedule::analyze` and `exec::run_layer` share the same tiling
+//! arithmetic; `arch::conv_core` is the hardware-faithful (slow) twin used
+//! to validate both.
+
+pub mod exec;
+pub mod pool;
+pub mod schedule;
+pub mod tile;
+
+pub use schedule::{analyze, LayerPerf, ScheduleOptions};

@@ -1,0 +1,62 @@
+//! Pooling on the log-code domain (paper §5.3: "the CONV core can also
+//! perform pooling operation by choosing the appropriate stride and
+//! kernel"). Max pooling is order-preserving on log codes, so it runs
+//! directly on codes without dequantization.
+
+use crate::tensor::{out_dim, Tensor3};
+
+/// Max pool over codes (ZERO_CODE is the smallest code, so zeros lose).
+pub fn maxpool(a: &Tensor3, k: usize, stride: usize) -> Tensor3 {
+    let ho = out_dim(a.h, k, stride);
+    let wo = out_dim(a.w, k, stride);
+    let mut out = Tensor3::filled(ho, wo, a.c, i32::MIN);
+    for i in 0..ho {
+        for j in 0..wo {
+            for ch in 0..a.c {
+                let mut m = i32::MIN;
+                for dy in 0..k {
+                    for dx in 0..k {
+                        m = m.max(a.get(i * stride + dy, j * stride + dx, ch));
+                    }
+                }
+                out.set(i, j, ch, m);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lns::logquant::{quantize_act, ZERO_CODE};
+
+    #[test]
+    fn picks_max_code() {
+        let mut a = Tensor3::filled(4, 4, 1, ZERO_CODE);
+        a.set(0, 0, 0, 2);
+        a.set(1, 1, 0, 5);
+        a.set(2, 2, 0, -3);
+        let p = maxpool(&a, 2, 2);
+        assert_eq!(p.get(0, 0, 0), 5);
+        assert_eq!(p.get(1, 1, 0), -3);
+        assert_eq!(p.get(0, 1, 0), ZERO_CODE);
+    }
+
+    #[test]
+    fn code_max_equals_value_max() {
+        // order preservation: max over codes == quantize(max over values)
+        let vals = [0.3f32, 1.7, 0.0, 2.4];
+        let codes: Vec<i32> = vals.iter().map(|&v| quantize_act(v)).collect();
+        let max_code = *codes.iter().max().unwrap();
+        let max_val = vals.iter().cloned().fold(0.0f32, f32::max);
+        assert_eq!(max_code, quantize_act(max_val));
+    }
+
+    #[test]
+    fn shapes() {
+        let a = Tensor3::new(112, 112, 64);
+        let p = maxpool(&a, 2, 2);
+        assert_eq!((p.h, p.w, p.c), (56, 56, 64));
+    }
+}

@@ -1,0 +1,14 @@
+//! NeuroMAX paper reproduction library.
+#![allow(clippy::needless_range_loop)]
+
+pub mod arch;
+pub mod baseline;
+pub mod coordinator;
+pub mod cost;
+pub mod dataflow;
+pub mod models;
+pub mod runtime;
+pub mod sim;
+pub mod lns;
+pub mod tensor;
+pub mod util;

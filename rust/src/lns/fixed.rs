@@ -1,0 +1,92 @@
+//! Linear Qm.n fixed-point quantization (paper eq. 1-2) — the baseline
+//! number format that Fig. 1 compares the log formats against, and the
+//! format of the linear-PE baseline core.
+
+/// Eq. 2: clip to `[min, max]`.
+pub fn clip(x: f64, min: f64, max: f64) -> f64 {
+    if x >= max {
+        max
+    } else if x <= min {
+        min
+    } else {
+        x
+    }
+}
+
+/// Eq. 1: linear quantization to signed Qm.n.
+/// Step `ε = 2^-n`, range `[-2^(m-1), 2^(m-1) - ε]`.
+pub fn linear_quantize(x: f64, m: u32, n: u32) -> f64 {
+    let eps = 2.0f64.powi(-(n as i32));
+    let lo = -(2.0f64.powi(m as i32 - 1));
+    let hi = 2.0f64.powi(m as i32 - 1) - eps;
+    clip((x / eps).round() * eps, lo, hi)
+}
+
+/// Signed Qm.n integer representation (for datapath width studies).
+pub fn to_fixed(x: f64, n: u32) -> i64 {
+    (x * 2.0f64.powi(n as i32)).round() as i64
+}
+
+/// Back to float.
+pub fn from_fixed(v: i64, n: u32) -> f64 {
+    v as f64 / 2.0f64.powi(n as i32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn q4_1_grid() {
+        // step 0.5, range [-8, 7.5]
+        assert_eq!(linear_quantize(0.24, 4, 1), 0.0);
+        assert_eq!(linear_quantize(0.26, 4, 1), 0.5);
+        assert_eq!(linear_quantize(100.0, 4, 1), 7.5);
+        assert_eq!(linear_quantize(-100.0, 4, 1), -8.0);
+    }
+
+    #[test]
+    fn clip_cases() {
+        assert_eq!(clip(5.0, -1.0, 1.0), 1.0);
+        assert_eq!(clip(-5.0, -1.0, 1.0), -1.0);
+        assert_eq!(clip(0.3, -1.0, 1.0), 0.3);
+    }
+
+    #[test]
+    fn error_bounded_by_half_step() {
+        check("linq-error", 2000, |rng| {
+            let m = 1 + (rng.below(7) as u32);
+            let n = rng.below(8) as u32;
+            let x = rng.normal() * 2.0;
+            let q = linear_quantize(x, m, n);
+            let eps = 2.0f64.powi(-(n as i32));
+            let lo = -(2.0f64.powi(m as i32 - 1));
+            let hi = 2.0f64.powi(m as i32 - 1) - eps;
+            prop_assert!((lo..=hi).contains(&q), "q={q} outside range");
+            if x > lo + eps && x < hi - eps {
+                prop_assert!(
+                    (q - x).abs() <= eps / 2.0 + 1e-12,
+                    "error {} > eps/2 {}",
+                    (q - x).abs(),
+                    eps / 2.0
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fixed_roundtrip() {
+        check("fixed-roundtrip", 1000, |rng| {
+            let x = rng.normal() * 4.0;
+            let v = to_fixed(x, 12);
+            prop_assert!(
+                (from_fixed(v, 12) - x).abs() <= 2.0f64.powi(-13) + 1e-12,
+                "roundtrip error too big for {x}"
+            );
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,184 @@
+//! 6-bit base-√2 log quantization (paper eq. 3-4).
+//!
+//! A code `c` represents the magnitude `2^(c/2)` (i.e. `(√2)^c`); weights
+//! carry a separate sign bit (paper: `w'[6]`), activations are post-ReLU
+//! and therefore unsigned. `ZERO_CODE` (the most negative 6-bit value) is
+//! reserved for exact zero, which has no logarithm.
+
+/// Smallest representable exponent code (= value 2^-15.5).
+pub const CODE_MIN: i32 = -31;
+/// Largest representable exponent code (= value 2^15.5).
+pub const CODE_MAX: i32 = 31;
+/// Reserved code for exact zero.
+pub const ZERO_CODE: i32 = -32;
+
+/// A log-quantized weight: sign ∈ {-1,+1} + 6-bit exponent code.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LogWeight {
+    pub code: i32,
+    pub sign: i32,
+}
+
+impl LogWeight {
+    pub const ZERO: LogWeight = LogWeight { code: ZERO_CODE, sign: 1 };
+
+    pub fn new(code: i32, sign: i32) -> Self {
+        debug_assert!((ZERO_CODE..=CODE_MAX).contains(&code));
+        debug_assert!(sign == 1 || sign == -1);
+        LogWeight { code, sign }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.code <= ZERO_CODE
+    }
+
+    /// Dequantized f32 value.
+    pub fn value(&self) -> f32 {
+        dequantize(self.code, self.sign)
+    }
+}
+
+/// Quantize an f32 to (code, sign). Mirrors `quant.log_quantize_code`
+/// (m=5, n=1): `c = floor(2·log2|x| + 0.5)` clipped to ±31; 0 → ZERO_CODE.
+///
+/// `floor(x + 0.5)` (round-half-up) is used on both sides — NOT banker's
+/// rounding — so ties quantize identically.
+pub fn quantize(x: f32) -> (i32, i32) {
+    let sign = if x < 0.0 { -1 } else { 1 };
+    let mag = x.abs();
+    if mag == 0.0 || !mag.is_finite() && mag == 0.0 {
+        return (ZERO_CODE, sign);
+    }
+    if mag == 0.0 {
+        return (ZERO_CODE, sign);
+    }
+    // f32 -> f64 for the log to match jax's f32 log2 closely; the shared
+    // test vectors pin any residual rounding differences.
+    let c = (2.0 * (mag as f64).log2() + 0.5).floor();
+    let c = c.clamp(CODE_MIN as f64, CODE_MAX as f64) as i32;
+    (c, sign)
+}
+
+/// Quantize a post-ReLU activation (negatives clamp to zero).
+pub fn quantize_act(x: f32) -> i32 {
+    if x <= 0.0 {
+        return ZERO_CODE;
+    }
+    quantize(x).0
+}
+
+/// Quantize a weight to a [`LogWeight`].
+pub fn quantize_weight(x: f32) -> LogWeight {
+    let (code, sign) = quantize(x);
+    if x == 0.0 {
+        LogWeight::ZERO
+    } else {
+        LogWeight { code, sign }
+    }
+}
+
+/// Dequantize (code, sign) → f32 (eq. 4). ZERO_CODE → 0.
+pub fn dequantize(code: i32, sign: i32) -> f32 {
+    if code <= ZERO_CODE {
+        return 0.0;
+    }
+    sign as f32 * (2.0f64.powf(code as f64 / 2.0)) as f32
+}
+
+/// Quantize-dequantize round trip (error studies, Fig. 1).
+pub fn quantize_value(x: f32) -> f32 {
+    let (c, s) = quantize(x);
+    if x == 0.0 {
+        0.0
+    } else {
+        dequantize(c, s)
+    }
+}
+
+/// Generic log quantizer with `n` fractional exponent bits (base `2^(2^-n)`)
+/// and `m+n`-bit code — used by the Fig. 1 study (base-2 vs base-√2).
+pub fn quantize_value_mn(x: f32, m: u32, n: u32) -> f32 {
+    let scale = (1u32 << n) as f64;
+    let cmax = ((1u64 << (m + n)) / 2 - 1) as f64;
+    if x == 0.0 {
+        return 0.0;
+    }
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let c = (scale * (x.abs() as f64).log2() + 0.5).floor().clamp(-cmax, cmax);
+    (sign * 2.0f64.powf(c / scale)) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_codes() {
+        // value = 2^(code/2)
+        assert_eq!(quantize(1.0), (0, 1));
+        assert_eq!(quantize(2.0), (2, 1));
+        assert_eq!(quantize(std::f32::consts::SQRT_2), (1, 1));
+        assert_eq!(quantize(0.5), (-2, 1));
+        assert_eq!(quantize(-4.0), (4, -1));
+        assert_eq!(quantize(0.0).0, ZERO_CODE);
+    }
+
+    #[test]
+    fn clipping_at_range_ends() {
+        assert_eq!(quantize(1e9).0, CODE_MAX);
+        assert_eq!(quantize(1e-9).0, CODE_MIN);
+    }
+
+    #[test]
+    fn roundtrip_relative_error_bounded() {
+        // base-√2 quantization: worst-case relative error 2^(1/4)-1 ≈ 19%
+        let mut r = crate::util::prng::SplitMix64::new(9);
+        for _ in 0..2000 {
+            let x = (r.normal() as f32).abs().max(1e-4);
+            let xq = quantize_value(x);
+            let rel = ((xq - x) / x).abs();
+            assert!(rel < 0.19, "x={x} xq={xq} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn act_quantizer_flushes_negatives() {
+        assert_eq!(quantize_act(-3.0), ZERO_CODE);
+        assert_eq!(quantize_act(0.0), ZERO_CODE);
+        assert_eq!(quantize_act(1.0), 0);
+    }
+
+    #[test]
+    fn codes_monotone_in_magnitude() {
+        crate::util::proptest::check("logquant-monotone", 2000, |rng| {
+            let x = (rng.f64() * 1e4).max(1e-4) as f32;
+            let (c1, _) = quantize(x);
+            let (c2, _) = quantize(x * 1.5);
+            crate::prop_assert!(c1 <= c2, "non-monotone at x={x}: {c1} > {c2}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn base_sqrt2_tighter_than_base2() {
+        // Fig. 1 claim in miniature: max relative error halves in log space.
+        let mut worst_s2 = 0.0f32;
+        let mut worst_b2 = 0.0f32;
+        let mut r = crate::util::prng::SplitMix64::new(11);
+        for _ in 0..4000 {
+            let x = (r.normal() as f32).abs().max(1e-3);
+            worst_s2 = worst_s2.max(((quantize_value_mn(x, 5, 1) - x) / x).abs());
+            worst_b2 = worst_b2.max(((quantize_value_mn(x, 5, 0) - x) / x).abs());
+        }
+        assert!(worst_s2 < worst_b2, "√2 {worst_s2} vs 2 {worst_b2}");
+        assert!(worst_s2 < 0.20 && worst_b2 > 0.25);
+    }
+
+    #[test]
+    fn weight_roundtrip() {
+        let w = quantize_weight(-2.0);
+        assert_eq!(w, LogWeight { code: 2, sign: -1 });
+        assert!((w.value() + 2.0).abs() < 1e-6);
+        assert!(quantize_weight(0.0).is_zero());
+    }
+}

@@ -1,0 +1,20 @@
+//! Log number system (paper §3): the 6-bit base-√2 log format, the linear
+//! Qm.n fixed-point format, the shift-LUT thread multiplier (eq. 8) and the
+//! post-processing re-quantization table.
+//!
+//! Every constant and rounding rule here is mirrored bit-exactly by
+//! `python/compile/quant.py`; the shared test vectors under `artifacts/`
+//! (`tv_quant.txt`, `tv_mult.txt`, `tv_requant.txt`) pin the two sides
+//! together (see `rust/tests/vectors.rs`).
+
+pub mod fixed;
+pub mod logquant;
+pub mod mult;
+pub mod tables;
+
+pub use logquant::{
+    dequantize, quantize, quantize_act, LogWeight, CODE_MAX, CODE_MIN,
+    ZERO_CODE,
+};
+pub use mult::{thread_mult, FRAC_BITS, FRAC_LUT, OVERFLOW_SHIFT, UNDERFLOW_SHIFT};
+pub use tables::requant_act;

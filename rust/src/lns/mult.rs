@@ -1,0 +1,193 @@
+//! The compute-thread datapath (paper eq. 5-8 and Fig. 3a): log-domain
+//! multiplication as exponent-add + 2-entry fractional LUT + barrel shift.
+//!
+//! `w·a = sign(w) · (LUT[FRAC(g)] >> ¬INT(g))` with `g = w' + a'` (eq. 8).
+//! Products live in a signed Q19.12 fixed-point domain and accumulate with
+//! two's-complement wraparound (matching XLA int32 semantics).
+
+use super::logquant::ZERO_CODE;
+
+/// Fractional bits of the product / psum fixed-point domain.
+pub const FRAC_BITS: u32 = 12;
+/// 2-entry fractional LUT: `round(2^12 · 2^(f/2))` for f = 0, 1.
+/// The paper stores `2^n = 2` values per thread (n = 1 fractional bit).
+pub const FRAC_LUT: [i32; 2] = [4096, 5793];
+/// Below this integer exponent the product flushes to 0.
+pub const UNDERFLOW_SHIFT: i32 = -13;
+/// Above this integer exponent the shift saturates (keeps i32 finite).
+pub const OVERFLOW_SHIFT: i32 = 15;
+
+/// Reference datapath (the spec): explicit shift + LUT per eq. 8.
+#[inline]
+pub fn thread_mult_spec(w_code: i32, w_sign: i32, a_code: i32) -> i32 {
+    if w_code <= ZERO_CODE || a_code <= ZERO_CODE {
+        return 0;
+    }
+    let g = w_code + a_code;
+    // g = 2i + f with f ∈ {0,1}: arithmetic shift right == floor division.
+    let mut i = g >> 1;
+    let f = (g & 1) as usize;
+    if i < UNDERFLOW_SHIFT {
+        return 0;
+    }
+    if i > OVERFLOW_SHIFT {
+        i = OVERFLOW_SHIFT;
+    }
+    let lut = FRAC_LUT[f];
+    let mag = if i >= 0 { lut << i } else { lut >> (-i) };
+    w_sign * mag
+}
+
+/// Precomputed magnitude table over all 125 possible exponent sums
+/// `g = w_code + a_code ∈ [-62, 62]` — the simulator's hot-path form of
+/// eq. 8 (§Perf optimization 1; the hardware's own LUT trick, widened).
+/// `MAG_TABLE[g + 62] == magnitude(g)`.
+static MAG_TABLE: [i32; 125] = {
+    let mut t = [0i32; 125];
+    let mut idx = 0usize;
+    while idx < 125 {
+        let g = idx as i32 - 62;
+        let mut i = g >> 1;
+        let f = (g & 1) as usize;
+        if i >= UNDERFLOW_SHIFT {
+            if i > OVERFLOW_SHIFT {
+                i = OVERFLOW_SHIFT;
+            }
+            let lut = FRAC_LUT[f];
+            t[idx] = if i >= 0 { lut << i } else { lut >> (-i) };
+        }
+        idx += 1;
+    }
+    t
+};
+
+/// One thread multiply: `(w_code, w_sign) × a_code → Q19.12 product`.
+///
+/// Bit-exact mirror of `quant.log_mult_fixed` (python) and of
+/// [`thread_mult_spec`] (enforced by tests). `a_code` is unsigned-valued
+/// (post-ReLU); zero codes on either side give 0.
+#[inline(always)]
+pub fn thread_mult(w_code: i32, w_sign: i32, a_code: i32) -> i32 {
+    if w_code <= ZERO_CODE || a_code <= ZERO_CODE {
+        return 0;
+    }
+    w_sign * MAG_TABLE[(w_code + a_code + 62) as usize]
+}
+
+/// Exact real-valued product of two codes (test oracle only — the hardware
+/// never computes this).
+pub fn exact_product(w_code: i32, w_sign: i32, a_code: i32) -> f64 {
+    if w_code <= ZERO_CODE || a_code <= ZERO_CODE {
+        return 0.0;
+    }
+    w_sign as f64 * 2.0f64.powf((w_code + a_code) as f64 / 2.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn table_matches_spec_exhaustively() {
+        // every (w_code, sign, a_code) triple: LUT form == eq. 8 spec
+        for wc in ZERO_CODE..=31 {
+            for ac in ZERO_CODE..=31 {
+                for ws in [-1, 1] {
+                    assert_eq!(
+                        thread_mult(wc, ws, ac),
+                        thread_mult_spec(wc, ws, ac),
+                        "wc={wc} ws={ws} ac={ac}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn identity_times_identity() {
+        // code 0 = 1.0; product = 1.0 = 4096 in Q.12
+        assert_eq!(thread_mult(0, 1, 0), 4096);
+        assert_eq!(thread_mult(0, -1, 0), -4096);
+    }
+
+    #[test]
+    fn sqrt2_lut_path() {
+        // codes 1 + 0 → g=1 → f=1, i=0 → 5793 (√2 in Q.12)
+        assert_eq!(thread_mult(1, 1, 0), 5793);
+        // codes 1 + 1 → g=2 → 2.0 → 8192
+        assert_eq!(thread_mult(1, 1, 1), 8192);
+    }
+
+    #[test]
+    fn zero_absorbs() {
+        assert_eq!(thread_mult(ZERO_CODE, 1, 5), 0);
+        assert_eq!(thread_mult(5, -1, ZERO_CODE), 0);
+        assert_eq!(thread_mult(ZERO_CODE, -1, ZERO_CODE), 0);
+    }
+
+    #[test]
+    fn negative_exponents_shift_right() {
+        // g = -2 → i=-1, f=0 → 4096>>1 = 2048 (= 0.5)
+        assert_eq!(thread_mult(-1, 1, -1), 2048);
+        // g = -3 → i=-2, f=1 → 5793>>2 = 1448 (≈ 2^-1.5 · 4096 = 1448.2)
+        assert_eq!(thread_mult(-1, 1, -2), 1448);
+    }
+
+    #[test]
+    fn underflow_flushes_overflow_saturates() {
+        assert_eq!(thread_mult(-31, 1, -31), 0); // g=-62 → i=-31 < -13
+        // g = 62 → i = 31 saturates to 15: 4096 << 15
+        assert_eq!(thread_mult(31, 1, 31), 4096 << 15);
+    }
+
+    #[test]
+    fn approximates_exact_product() {
+        check("mult-accuracy", 3000, |rng| {
+            let wc = rng.range_i32(-20, 20);
+            let ac = rng.range_i32(-20, 20);
+            let got = thread_mult(wc, 1, ac) as f64;
+            let exact = exact_product(wc, 1, ac) * (1 << FRAC_BITS) as f64;
+            let i = (wc + ac) >> 1;
+            if (UNDERFLOW_SHIFT..=OVERFLOW_SHIFT).contains(&i) {
+                prop_assert!(
+                    (got - exact).abs() <= (exact.abs() * 1e-4).max(2.0),
+                    "wc={wc} ac={ac}: got {got} exact {exact}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sign_antisymmetric() {
+        check("mult-sign", 2000, |rng| {
+            let wc = rng.range_i32(-31, 31);
+            let ac = rng.range_i32(-31, 31);
+            prop_assert!(
+                thread_mult(wc, 1, ac) == -thread_mult(wc, -1, ac),
+                "sign asymmetry at wc={wc} ac={ac}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn magnitude_monotone_in_codes() {
+        // Only below the saturation knee: clamping INT(g) but keeping
+        // FRAC(g) makes the saturated region non-monotone (real hardware
+        // artifact of eq. 8's finite shifter).
+        check("mult-monotone", 2000, |rng| {
+            let wc = rng.range_i32(-20, 19);
+            let ac = rng.range_i32(-20, 20);
+            if (wc + 1 + ac) >> 1 > OVERFLOW_SHIFT {
+                return Ok(());
+            }
+            let lo = thread_mult(wc, 1, ac);
+            let hi = thread_mult(wc + 1, 1, ac);
+            prop_assert!(lo <= hi, "non-monotone at wc={wc} ac={ac}");
+            Ok(())
+        });
+    }
+}

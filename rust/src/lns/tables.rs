@@ -1,0 +1,184 @@
+//! Post-processing LUT (paper Fig. 2: "quantizes the results back into log
+//! values using pre-computed log table").
+//!
+//! Psums (Q19.12) re-quantize to activation codes by comparison against 63
+//! precomputed thresholds `T[c] = round(2^(12 + (c-0.5)/2))` — the geometric
+//! midpoints between adjacent code values. Identical table on the python
+//! side (`quant.REQUANT_THRESHOLDS`).
+
+use super::logquant::{CODE_MAX, CODE_MIN, ZERO_CODE};
+use super::mult::FRAC_BITS;
+
+/// Number of thresholds (codes -31..=31).
+pub const N_THRESHOLDS: usize = (CODE_MAX - CODE_MIN + 1) as usize;
+
+/// Build the threshold table. `T[i]` guards code `CODE_MIN + i`.
+/// Thresholds are clamped to ≥ 1 so that psum 0 maps to ZERO_CODE.
+pub fn requant_thresholds() -> [i64; N_THRESHOLDS] {
+    let mut t = [0i64; N_THRESHOLDS];
+    for (i, slot) in t.iter_mut().enumerate() {
+        let c = CODE_MIN + i as i32;
+        let v = 2.0f64.powf(FRAC_BITS as f64 + (c as f64 - 0.5) / 2.0);
+        *slot = ((v + 0.5).floor() as i64).max(1);
+    }
+    t
+}
+
+/// Cached table (computed once).
+fn table() -> &'static [i64; N_THRESHOLDS] {
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<[i64; N_THRESHOLDS]> = OnceLock::new();
+    TABLE.get_or_init(requant_thresholds)
+}
+
+/// Reference requantizer (the spec): threshold count via binary search.
+#[inline]
+pub fn requant_act_spec(psum: i32) -> i32 {
+    if psum <= 0 {
+        return ZERO_CODE;
+    }
+    let p = psum as i64;
+    let t = table();
+    // binary search: count of thresholds <= p
+    let cnt = t.partition_point(|&thr| thr <= p) as i32;
+    let code = (CODE_MIN - 1) + cnt;
+    if code < CODE_MIN {
+        ZERO_CODE
+    } else {
+        code
+    }
+}
+
+/// Per-bit-length decision thresholds (§Perf optimization 3): for
+/// `p ∈ [2^b, 2^(b+1))` with b ≥ 6 the code is one of
+/// `{2(b-12), 2(b-12)+1, 2(b-12)+2}` (exactly three candidates, since the
+/// code spans 2·log2), so two compares decide it. `[T[c+1], T[c+2]]`
+/// per b, with i64::MAX past the table end.
+fn fast_table() -> &'static [[i64; 2]; 32] {
+    use std::sync::OnceLock;
+    static FT: OnceLock<[[i64; 2]; 32]> = OnceLock::new();
+    FT.get_or_init(|| {
+        let t = table();
+        let thr = |c: i32| -> i64 {
+            if c > CODE_MAX {
+                i64::MAX
+            } else if c < CODE_MIN {
+                0
+            } else {
+                t[(c - CODE_MIN) as usize]
+            }
+        };
+        let mut ft = [[0i64; 2]; 32];
+        for (b, slot) in ft.iter_mut().enumerate() {
+            let c_base = 2 * (b as i32 - 12);
+            *slot = [thr(c_base + 1), thr(c_base + 2)];
+        }
+        ft
+    })
+}
+
+/// ReLU + log re-quantization: int32 psum → activation code.
+/// Mirrors `quant.requant_act` (python) and [`requant_act_spec`]
+/// bit-for-bit (enforced exhaustively in tests).
+#[inline]
+pub fn requant_act(psum: i32) -> i32 {
+    if psum < 64 {
+        // covers ReLU zeros and the collapsed-threshold region (p < 2^6)
+        return requant_act_spec(psum);
+    }
+    let b = 31 - psum.leading_zeros() as i32; // bit length - 1, >= 6
+    let ft = &fast_table()[b as usize];
+    let p = psum as i64;
+    let code = 2 * (b - 12) + (p >= ft[0]) as i32 + (p >= ft[1]) as i32;
+    if code > CODE_MAX {
+        CODE_MAX
+    } else {
+        code
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn fast_path_matches_spec_everywhere() {
+        // exhaustive over the structurally interesting range + all bit
+        // lengths + boundary neighbourhoods
+        for p in -1000i32..200_000 {
+            assert_eq!(requant_act(p), requant_act_spec(p), "p={p}");
+        }
+        for b in 6..31u32 {
+            for off in [-2i64, -1, 0, 1, 2] {
+                let base = 1i64 << b;
+                let p = (base + off).clamp(1, i32::MAX as i64) as i32;
+                assert_eq!(requant_act(p), requant_act_spec(p), "p={p}");
+            }
+        }
+        let t = requant_thresholds();
+        for &thr in &t {
+            for off in [-1i64, 0, 1] {
+                let p = (thr + off).clamp(0, i32::MAX as i64) as i32;
+                assert_eq!(requant_act(p), requant_act_spec(p), "p={p}");
+            }
+        }
+        assert_eq!(requant_act(i32::MAX), requant_act_spec(i32::MAX));
+    }
+
+    #[test]
+    fn exact_powers() {
+        assert_eq!(requant_act(0), ZERO_CODE);
+        assert_eq!(requant_act(-5), ZERO_CODE);
+        assert_eq!(requant_act(4096), 0); // 1.0
+        assert_eq!(requant_act(5793), 1); // √2
+        assert_eq!(requant_act(8192), 2); // 2.0
+        assert_eq!(requant_act(2048), -2); // 0.5
+    }
+
+    #[test]
+    fn thresholds_monotone_and_positive() {
+        let t = requant_thresholds();
+        assert!(t[0] >= 1);
+        for w in t.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        // top threshold guards code 31: 2^(12+15.25)
+        let expect = 2.0f64.powf(12.0 + 15.25);
+        assert!((t[N_THRESHOLDS - 1] as f64 - expect).abs() < 1.0);
+    }
+
+    #[test]
+    fn requant_monotone() {
+        let mut prev = ZERO_CODE;
+        for p in (0..200_000).step_by(7) {
+            let c = requant_act(p);
+            assert!(c >= prev, "requant not monotone at p={p}");
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn nearest_code_in_log_space() {
+        check("requant-nearest", 3000, |rng| {
+            let p = rng.range_i32(64, 1 << 30);
+            let c = requant_act(p);
+            let exact = 2.0 * (p as f64 / 4096.0).log2();
+            if exact < CODE_MAX as f64 - 0.5 {
+                prop_assert!(
+                    (c as f64 - exact).abs() <= 0.5 + 4.0 / p as f64,
+                    "p={p}: code {c} vs exact {exact}"
+                );
+            } else {
+                prop_assert!(c == CODE_MAX, "p={p} should clip to CODE_MAX");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn saturates_at_code_max() {
+        assert_eq!(requant_act(i32::MAX), CODE_MAX);
+    }
+}

@@ -1,0 +1,250 @@
+//! `neuromax` CLI — the coordinator's front door.
+//!
+//! Subcommands:
+//!   report <id|all>        regenerate a paper table/figure
+//!   simulate <network>     per-layer cycle simulation of a CNN
+//!   infer [opts]           run TinyCNN inferences (PJRT or sim backend)
+//!   verify [opts]          sim-vs-HLO bit-exactness check
+//!   serve [opts]           TCP inference server
+//!   sweep                  design-space exploration (grid geometry)
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use neuromax::arch::config::GridConfig;
+use neuromax::coordinator::batcher::BatchPolicy;
+use neuromax::coordinator::pipeline::{Backend, InferenceEngine};
+use neuromax::coordinator::reports;
+use neuromax::coordinator::server::Server;
+use neuromax::coordinator::NetworkSchedule;
+use neuromax::dataflow::ScheduleOptions;
+use neuromax::models::workload;
+use neuromax::runtime::{verify, Runtime};
+use neuromax::sim::stats::simulate_network;
+use neuromax::util::table;
+
+fn flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn opt(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("report") => cmd_report(&args[1..]),
+        Some("simulate") => cmd_simulate(&args[1..]),
+        Some("infer") => cmd_infer(&args[1..]),
+        Some("verify") => cmd_verify(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("sweep") => cmd_sweep(&args[1..]),
+        Some("trace") => cmd_trace(&args[1..]),
+        _ => {
+            eprintln!(
+                "usage: neuromax <report|simulate|infer|verify|serve|sweep|trace> ...\n\
+                 \n\
+                 report  <fig1|fig17|table1|fig18|fig19|fig20|table2|table3|sec5|all>\n\
+                 simulate <vgg16|mobilenet|resnet34|squeezenet|alexnet|tinycnn> [--packing]\n\
+                 infer   [--backend hlo|sim] [--count N] [--seed S]\n\
+                 verify  [--cases N] [--seed S]\n\
+                 serve   [--addr HOST:PORT] [--backend hlo|sim] [--secs N] [--batch N]\n\
+                 sweep\n\
+                 trace   [--stride 1|2] [--cycles N]   (§5.1 pipeline waveform)"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_trace(args: &[String]) -> Result<()> {
+    use neuromax::tensor::{Tensor3, Tensor4};
+    use neuromax::util::prng::SplitMix64;
+    let stride: usize = opt(args, "--stride").and_then(|v| v.parse().ok()).unwrap_or(1);
+    let max: usize = opt(args, "--cycles").and_then(|v| v.parse().ok()).unwrap_or(16);
+    let mut rng = SplitMix64::new(1);
+    let mut a = Tensor3::new(12, 6, 1);
+    for v in a.data.iter_mut() {
+        *v = rng.range_i32(-6, 4);
+    }
+    let mut wc = Tensor4::new(1, 3, 3, 1);
+    let mut ws = Tensor4::new(1, 3, 3, 1);
+    for v in wc.data.iter_mut() {
+        *v = rng.range_i32(-4, 4);
+    }
+    for v in ws.data.iter_mut() {
+        *v = rng.sign();
+    }
+    print!(
+        "{}",
+        neuromax::sim::trace::trace_conv3x3(&a, &wc, &ws, stride, max)
+    );
+    Ok(())
+}
+
+fn cmd_report(args: &[String]) -> Result<()> {
+    let which = args.first().map(String::as_str).unwrap_or("all");
+    let out = match which {
+        "fig1" => reports::fig1(),
+        "fig17" => reports::fig17(),
+        "table1" => reports::table1(),
+        "fig18" => reports::fig18(),
+        "fig19" => reports::fig19(),
+        "fig20" => reports::fig20(),
+        "table2" => reports::table2(),
+        "table3" => reports::table3(),
+        "sec5" => reports::sec5(),
+        "all" => reports::all(),
+        other => bail!("unknown report `{other}`"),
+    };
+    println!("{out}");
+    Ok(())
+}
+
+fn cmd_simulate(args: &[String]) -> Result<()> {
+    let name = args.first().context("simulate: network name required")?;
+    let net = workload::by_name(name).with_context(|| format!("unknown network `{name}`"))?;
+    let grid = GridConfig::neuromax();
+    let optn = ScheduleOptions { filter_packing: flag(args, "--packing"), ..Default::default() };
+    let rep = simulate_network(&grid, &net, optn);
+    let mut rows = vec![vec![
+        "layer".into(), "cycles".into(), "MACs".into(), "util%".into(),
+        "lat(ms)".into(), "GOPS".into(), "DDR(Mb)".into(),
+    ]];
+    for lr in &rep.layers {
+        rows.push(vec![
+            lr.perf.name.clone(),
+            table::count(lr.perf.cycles),
+            table::count(lr.perf.macs),
+            table::f(100.0 * lr.util_total, 1),
+            table::f(lr.latency_ms, 2),
+            table::f(lr.gops_paper, 1),
+            table::f(lr.perf.traffic.ddr_total_bits() as f64 / 1e6, 2),
+        ]);
+    }
+    println!("{}", table::render(&rows));
+    println!(
+        "{}: {} cycles, {:.2} ms/frame ({:.1} fps), avg util {:.1}%, \
+         {:.1} GOPS (paper accounting), {:.1} GOPS physical",
+        rep.name,
+        table::count(rep.total_cycles),
+        rep.total_latency_ms,
+        1000.0 / rep.total_latency_ms,
+        100.0 * rep.avg_util,
+        rep.gops_paper,
+        rep.gops_physical
+    );
+    let sched = NetworkSchedule::plan(grid, &net, optn);
+    println!(
+        "DDR traffic/frame: {:.1} Mb; layers streaming (fmap > input SRAM): {}",
+        sched.total_ddr_bits() as f64 / 1e6,
+        sched.plans.iter().filter(|p| !p.input_resident).count()
+    );
+    Ok(())
+}
+
+fn cmd_infer(args: &[String]) -> Result<()> {
+    let backend = match opt(args, "--backend").as_deref() {
+        Some("sim") => Backend::Sim,
+        _ => Backend::Hlo,
+    };
+    let count: usize = opt(args, "--count").and_then(|v| v.parse().ok()).unwrap_or(16);
+    let seed: u64 = opt(args, "--seed").and_then(|v| v.parse().ok()).unwrap_or(1);
+    let mut engine = InferenceEngine::new(backend, 7)?;
+    engine.warmup()?;
+    let t0 = Instant::now();
+    let mut classes = vec![0usize; 10];
+    for i in 0..count {
+        let input = InferenceEngine::input_for_seed(seed + i as u64);
+        let inf = engine.infer(&input)?;
+        classes[inf.class] += 1;
+        if i < 4 {
+            println!(
+                "req {i}: class {} wall {} us (accel: {} cycles = {:.1} us at 200 MHz)",
+                inf.class, inf.wall_us, inf.accel_cycles,
+                inf.accel_cycles as f64 / 200.0
+            );
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{count} inferences ({backend:?}) in {:.3} s = {:.1} req/s; class histogram {classes:?}",
+        dt, count as f64 / dt
+    );
+    Ok(())
+}
+
+fn cmd_verify(args: &[String]) -> Result<()> {
+    let cases: usize = opt(args, "--cases").and_then(|v| v.parse().ok()).unwrap_or(8);
+    let seed: u64 = opt(args, "--seed").and_then(|v| v.parse().ok()).unwrap_or(42);
+    let mut rt = Runtime::from_default_dir()?;
+    println!("platform: {}", rt.platform());
+    let r = verify::verify_conv3x3(&mut rt, seed)?;
+    println!(
+        "conv3x3 HLO vs fast-sim vs faithful-core: {} elements, {} mismatches",
+        r.elements_compared, r.mismatches
+    );
+    anyhow::ensure!(r.ok(), "conv3x3 verification FAILED");
+    let r = verify::verify_tinycnn(&mut rt, cases, seed)?;
+    println!(
+        "tinycnn HLO vs sim over {} cases: {} logits, {} mismatches",
+        r.cases, r.elements_compared, r.mismatches
+    );
+    anyhow::ensure!(r.ok(), "tinycnn verification FAILED");
+    println!("VERIFY OK — simulator and AOT executable agree bit-for-bit");
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let addr = opt(args, "--addr").unwrap_or_else(|| "127.0.0.1:7878".into());
+    let backend = match opt(args, "--backend").as_deref() {
+        Some("hlo") => Backend::Hlo,
+        _ => Backend::Sim,
+    };
+    let secs: u64 = opt(args, "--secs").and_then(|v| v.parse().ok()).unwrap_or(30);
+    let max_batch: usize = opt(args, "--batch").and_then(|v| v.parse().ok()).unwrap_or(8);
+    let mut srv = Server::start(
+        &addr,
+        backend,
+        BatchPolicy { max_batch, max_wait: Duration::from_millis(2) },
+    )?;
+    println!("serving TinyCNN ({backend:?}) on {} for {secs}s ...", srv.addr);
+    srv.serve_until(Some(Instant::now() + Duration::from_secs(secs)))?;
+    println!("{}", srv.metrics.summary());
+    srv.shutdown();
+    Ok(())
+}
+
+fn cmd_sweep(_args: &[String]) -> Result<()> {
+    println!("design-space sweep: grid geometry vs VGG16 throughput/area\n");
+    let mut rows = vec![vec![
+        "matrices".into(), "rows".into(), "threads".into(), "lanes".into(),
+        "VGG GOPS".into(), "LUTs".into(), "GOPS/kLUT".into(),
+    ]];
+    for matrices in [2usize, 4, 6, 8] {
+        for threads in [1usize, 2, 3, 4] {
+            let g = GridConfig { matrices, rows: 6, cols: 3, threads, clock_mhz: 200.0 };
+            let rep = simulate_network(
+                &g,
+                &neuromax::models::vgg16::vgg16(),
+                ScheduleOptions::default(),
+            );
+            let res = neuromax::cost::resources::table1(&g);
+            let gops = g.peak_gops_paper() * rep.avg_util;
+            rows.push(vec![
+                matrices.to_string(),
+                "6".into(),
+                threads.to_string(),
+                g.lanes().to_string(),
+                table::f(gops, 1),
+                table::f(res.luts, 0),
+                table::f(gops / (res.luts / 1000.0), 2),
+            ]);
+        }
+    }
+    println!("{}", table::render(&rows));
+    println!("(the paper's 6-matrix / 3-thread point maximizes GOPS per kLUT)");
+    Ok(())
+}

@@ -1,0 +1,225 @@
+//! CNN layer descriptors: the workload language shared by the scheduler,
+//! the cycle simulator, the baselines and the benchmark harness.
+
+/// Layer operation type.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    /// Standard convolution `kh × kw`.
+    Conv { kh: usize, kw: usize, stride: usize, pad: usize },
+    /// Depthwise convolution `k × k` (cout == cin).
+    Depthwise { k: usize, stride: usize, pad: usize },
+    /// Pointwise (1×1) convolution.
+    Pointwise { stride: usize },
+    /// Pooling (max or average).
+    Pool { k: usize, stride: usize, max: bool },
+    /// Fully connected (flattened input).
+    Fc,
+}
+
+/// One layer of a CNN workload.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LayerDesc {
+    pub name: String,
+    pub op: Op,
+    pub hin: usize,
+    pub win: usize,
+    pub cin: usize,
+    pub cout: usize,
+}
+
+impl LayerDesc {
+    pub fn conv(
+        name: &str, k: usize, stride: usize, pad: usize,
+        hin: usize, win: usize, cin: usize, cout: usize,
+    ) -> Self {
+        LayerDesc {
+            name: name.into(),
+            op: Op::Conv { kh: k, kw: k, stride, pad },
+            hin, win, cin, cout,
+        }
+    }
+
+    pub fn depthwise(name: &str, stride: usize, hin: usize, win: usize, c: usize) -> Self {
+        LayerDesc {
+            name: name.into(),
+            op: Op::Depthwise { k: 3, stride, pad: 1 },
+            hin, win, cin: c, cout: c,
+        }
+    }
+
+    pub fn pointwise(name: &str, hin: usize, win: usize, cin: usize, cout: usize) -> Self {
+        LayerDesc { name: name.into(), op: Op::Pointwise { stride: 1 }, hin, win, cin, cout }
+    }
+
+    pub fn pool(name: &str, k: usize, stride: usize, hin: usize, win: usize, c: usize) -> Self {
+        LayerDesc {
+            name: name.into(),
+            op: Op::Pool { k, stride, max: true },
+            hin, win, cin: c, cout: c,
+        }
+    }
+
+    pub fn fc(name: &str, cin: usize, cout: usize) -> Self {
+        LayerDesc { name: name.into(), op: Op::Fc, hin: 1, win: 1, cin, cout }
+    }
+
+    /// Padded input dims.
+    pub fn padded(&self) -> (usize, usize) {
+        let p = match self.op {
+            Op::Conv { pad, .. } => pad,
+            Op::Depthwise { pad, .. } => pad,
+            _ => 0,
+        };
+        (self.hin + 2 * p, self.win + 2 * p)
+    }
+
+    /// Kernel size (kh, kw) and stride.
+    pub fn kernel(&self) -> (usize, usize, usize) {
+        match self.op {
+            Op::Conv { kh, kw, stride, .. } => (kh, kw, stride),
+            Op::Depthwise { k, stride, .. } => (k, k, stride),
+            Op::Pointwise { stride } => (1, 1, stride),
+            Op::Pool { k, stride, .. } => (k, k, stride),
+            Op::Fc => (1, 1, 1),
+        }
+    }
+
+    /// Output spatial dims (valid conv over the padded input).
+    pub fn out_dims(&self) -> (usize, usize) {
+        let (hp, wp) = self.padded();
+        let (kh, kw, s) = self.kernel();
+        assert!(hp >= kh && wp >= kw, "layer {} too small", self.name);
+        ((hp - kh) / s + 1, (wp - kw) / s + 1)
+    }
+
+    /// Multiply-accumulate count (pools count 0).
+    pub fn macs(&self) -> u64 {
+        let (ho, wo) = self.out_dims();
+        let (kh, kw, _) = self.kernel();
+        match self.op {
+            Op::Conv { .. } => (ho * wo * kh * kw * self.cin * self.cout) as u64,
+            Op::Depthwise { .. } => (ho * wo * kh * kw * self.cin) as u64,
+            Op::Pointwise { .. } => (ho * wo * self.cin * self.cout) as u64,
+            Op::Pool { .. } => 0,
+            Op::Fc => (self.cin * self.cout) as u64,
+        }
+    }
+
+    /// Weight parameter count.
+    pub fn params(&self) -> u64 {
+        let (kh, kw, _) = self.kernel();
+        match self.op {
+            Op::Conv { .. } => (kh * kw * self.cin * self.cout) as u64,
+            Op::Depthwise { .. } => (kh * kw * self.cin) as u64,
+            Op::Pointwise { .. } => (self.cin * self.cout) as u64,
+            Op::Pool { .. } => 0,
+            Op::Fc => (self.cin * self.cout) as u64,
+        }
+    }
+
+    /// Is this a compute (MAC) layer the accelerator runs on the PE grid?
+    pub fn is_compute(&self) -> bool {
+        !matches!(self.op, Op::Pool { .. })
+    }
+}
+
+/// A full network workload.
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<LayerDesc>,
+}
+
+impl Network {
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    pub fn total_params(&self) -> u64 {
+        self.layers.iter().map(|l| l.params()).sum()
+    }
+
+    pub fn compute_layers(&self) -> impl Iterator<Item = &LayerDesc> {
+        self.layers.iter().filter(|l| l.is_compute())
+    }
+
+    /// Check layer shapes chain correctly (cout/out dims feed the next
+    /// layer) — a structural sanity test for the model zoo.
+    pub fn validate_chaining(&self) -> Result<(), String> {
+        for w in self.layers.windows(2) {
+            let (a, b) = (&w[0], &w[1]);
+            if let Op::Fc = b.op {
+                let (ho, wo) = a.out_dims();
+                if ho * wo * a.cout != b.cin {
+                    return Err(format!(
+                        "{} -> {}: flatten {}x{}x{} != {}",
+                        a.name, b.name, ho, wo, a.cout, b.cin
+                    ));
+                }
+                continue;
+            }
+            let (ho, wo) = a.out_dims();
+            if (ho, wo) != (b.hin, b.win) || a.cout != b.cin {
+                return Err(format!(
+                    "{} -> {}: out {}x{}x{} != in {}x{}x{}",
+                    a.name, b.name, ho, wo, a.cout, b.hin, b.win, b.cin
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_shapes_and_macs() {
+        // VGG16 conv1_2: 224×224×64 ⊛ 3×3×64×64, pad 1
+        let l = LayerDesc::conv("conv1_2", 3, 1, 1, 224, 224, 64, 64);
+        assert_eq!(l.out_dims(), (224, 224));
+        assert_eq!(l.macs(), 224 * 224 * 9 * 64 * 64);
+        assert_eq!(l.params(), 9 * 64 * 64);
+    }
+
+    #[test]
+    fn stride2_out_dims() {
+        let l = LayerDesc::conv("s2", 3, 2, 1, 224, 224, 3, 32);
+        assert_eq!(l.out_dims(), (112, 112));
+    }
+
+    #[test]
+    fn depthwise_macs_scale_with_c_not_c_squared() {
+        let l = LayerDesc::depthwise("dw", 1, 56, 56, 128);
+        assert_eq!(l.macs(), 56 * 56 * 9 * 128);
+    }
+
+    #[test]
+    fn pool_has_no_macs() {
+        let l = LayerDesc::pool("p", 2, 2, 112, 112, 64);
+        assert_eq!(l.macs(), 0);
+        assert_eq!(l.out_dims(), (56, 56));
+        assert!(!l.is_compute());
+    }
+
+    #[test]
+    fn chaining_catches_mismatches() {
+        let good = Network {
+            name: "ok".into(),
+            layers: vec![
+                LayerDesc::conv("a", 3, 1, 1, 8, 8, 3, 16),
+                LayerDesc::conv("b", 3, 1, 1, 8, 8, 16, 32),
+            ],
+        };
+        assert!(good.validate_chaining().is_ok());
+        let bad = Network {
+            name: "bad".into(),
+            layers: vec![
+                LayerDesc::conv("a", 3, 1, 1, 8, 8, 3, 16),
+                LayerDesc::conv("b", 3, 1, 1, 8, 8, 99, 32),
+            ],
+        };
+        assert!(bad.validate_chaining().is_err());
+    }
+}

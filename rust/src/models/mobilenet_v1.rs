@@ -1,0 +1,58 @@
+//! MobileNet v1 [4] workload (224×224×3, depthwise-separable stack).
+
+use super::layer::{LayerDesc, Network};
+
+/// Standard MobileNet v1 body: first conv s2, then 13 dw/pw pairs.
+pub fn mobilenet_v1() -> Network {
+    let mut l = Vec::new();
+    l.push(LayerDesc::conv("CONV1", 3, 2, 1, 224, 224, 3, 32));
+    // (stride of dw, cout of pw) per pair, input dims tracked manually
+    let spec: &[(usize, usize)] = &[
+        (1, 64), (2, 128), (1, 128), (2, 256), (1, 256), (2, 512),
+        (1, 512), (1, 512), (1, 512), (1, 512), (1, 512),
+        (2, 1024), (1, 1024),
+    ];
+    let mut hw = 112;
+    let mut cin = 32;
+    for (i, &(s, cout)) in spec.iter().enumerate() {
+        l.push(LayerDesc::depthwise(&format!("DW{}", i + 1), s, hw, hw, cin));
+        let hw_out = if s == 2 { hw / 2 } else { hw };
+        l.push(LayerDesc::pointwise(&format!("PW{}", i + 1), hw_out, hw_out, cin, cout));
+        hw = hw_out;
+        cin = cout;
+    }
+    Network { name: "MobileNetV1".into(), layers: l }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chains() {
+        mobilenet_v1().validate_chaining().unwrap();
+    }
+
+    #[test]
+    fn ends_at_7x7x1024() {
+        let net = mobilenet_v1();
+        let last = net.layers.last().unwrap();
+        assert_eq!(last.out_dims(), (7, 7));
+        assert_eq!(last.cout, 1024);
+    }
+
+    #[test]
+    fn total_macs_about_0_57_gmac() {
+        let g = mobilenet_v1().total_macs() as f64 / 1e9;
+        assert!((0.52..0.62).contains(&g), "got {g} GMAC");
+    }
+
+    #[test]
+    fn pointwise_dominates_macs() {
+        let net = mobilenet_v1();
+        let pw: u64 = net.layers.iter()
+            .filter(|l| matches!(l.op, super::super::layer::Op::Pointwise { .. }))
+            .map(|l| l.macs()).sum();
+        assert!(pw as f64 / net.total_macs() as f64 > 0.7);
+    }
+}

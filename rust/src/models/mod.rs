@@ -1,0 +1,14 @@
+//! CNN workload zoo: layer descriptors and the networks the paper
+//! evaluates (VGG-16, MobileNet v1, ResNet-34 for Fig. 19/20; SqueezeNet
+//! for Fig. 1; AlexNet for the §5 DDR motivation; TinyCNN end-to-end).
+
+pub mod alexnet;
+pub mod layer;
+pub mod mobilenet_v1;
+pub mod resnet34;
+pub mod squeezenet;
+pub mod tinycnn;
+pub mod vgg16;
+pub mod workload;
+
+pub use layer::{LayerDesc, Network, Op};

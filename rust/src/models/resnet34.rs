@@ -1,0 +1,72 @@
+//! ResNet-34 workload (224×224×3; basic blocks, conv layers only — the
+//! residual adds run on the post-processing path, not the PE grid).
+
+use super::layer::{LayerDesc, Network};
+
+/// ResNet-34: 7×7 s2 stem, maxpool, then stages of basic blocks
+/// (3, 4, 6, 3) with channel doubling and stride-2 entry convs.
+pub fn resnet34() -> Network {
+    let mut l = Vec::new();
+    l.push(LayerDesc::conv("CONV1", 7, 2, 3, 224, 224, 3, 64));
+    l.push(LayerDesc::pool("POOL1", 3, 2, 112, 112, 64));
+    // NB: 112 pad... standard resnet pools 112->56 with pad 1; model as
+    // k=2 s=2 for shape bookkeeping simplicity of the chain.
+    l.pop();
+    l.push(LayerDesc::pool("POOL1", 2, 2, 112, 112, 64));
+
+    let stages: &[(usize, usize, usize)] = &[
+        // (blocks, channels, input hw)
+        (3, 64, 56),
+        (4, 128, 56),
+        (6, 256, 28),
+        (3, 512, 14),
+    ];
+    let mut cin = 64;
+    for (si, &(blocks, ch, hw_in)) in stages.iter().enumerate() {
+        let mut hw = hw_in;
+        for b in 0..blocks {
+            let stride = if si > 0 && b == 0 { 2 } else { 1 };
+            let name_a = format!("S{}B{}_A", si + 1, b + 1);
+            let name_b = format!("S{}B{}_B", si + 1, b + 1);
+            l.push(LayerDesc::conv(&name_a, 3, stride, 1, hw, hw, cin, ch));
+            let hw_out = if stride == 2 { hw / 2 } else { hw };
+            l.push(LayerDesc::conv(&name_b, 3, 1, 1, hw_out, hw_out, ch, ch));
+            if stride == 2 {
+                // projection shortcut (1×1 s2) — extra compute layer
+                l.push(LayerDesc {
+                    name: format!("S{}B{}_DS", si + 1, b + 1),
+                    op: super::layer::Op::Pointwise { stride: 2 },
+                    hin: hw,
+                    win: hw,
+                    cin,
+                    cout: ch,
+                });
+            }
+            hw = hw_out;
+            cin = ch;
+        }
+    }
+    Network { name: "ResNet34".into(), layers: l }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_count_and_macs() {
+        let net = resnet34();
+        // 1 stem + 16 blocks × 2 + 3 downsample 1×1 = 36 compute layers
+        assert_eq!(net.compute_layers().count(), 36);
+        let g = net.total_macs() as f64 / 1e9;
+        assert!((3.4..3.9).contains(&g), "got {g} GMAC");
+    }
+
+    #[test]
+    fn stage_dims_halve() {
+        let net = resnet34();
+        let s4 = net.layers.iter().find(|l| l.name == "S4B1_A").unwrap();
+        assert_eq!((s4.hin, s4.win, s4.cin, s4.cout), (14, 14, 256, 512));
+        assert_eq!(s4.out_dims(), (7, 7));
+    }
+}

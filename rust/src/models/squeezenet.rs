@@ -1,0 +1,43 @@
+//! SqueezeNet v1.0 [16] workload (fire modules: squeeze 1×1 + expand
+//! 1×1/3×3). Used by the Fig. 1 quantization study and as a serving
+//! workload; expand branches are modelled as two parallel layers.
+
+use super::layer::{LayerDesc, Network};
+
+fn fire(l: &mut Vec<LayerDesc>, name: &str, hw: usize, cin: usize, s: usize, e1: usize, e3: usize) {
+    l.push(LayerDesc::pointwise(&format!("{name}_SQ"), hw, hw, cin, s));
+    l.push(LayerDesc::pointwise(&format!("{name}_E1"), hw, hw, s, e1));
+    l.push(LayerDesc::conv(&format!("{name}_E3"), 3, 1, 1, hw, hw, s, e3));
+}
+
+/// SqueezeNet v1.0 conv stack.
+pub fn squeezenet() -> Network {
+    let mut l = Vec::new();
+    l.push(LayerDesc::conv("CONV1", 7, 2, 3, 224, 224, 3, 96));
+    l.push(LayerDesc::pool("POOL1", 2, 2, 112, 112, 96));
+    fire(&mut l, "FIRE2", 56, 96, 16, 64, 64);
+    fire(&mut l, "FIRE3", 56, 128, 16, 64, 64);
+    fire(&mut l, "FIRE4", 56, 128, 32, 128, 128);
+    l.push(LayerDesc::pool("POOL4", 2, 2, 56, 56, 256));
+    fire(&mut l, "FIRE5", 28, 256, 32, 128, 128);
+    fire(&mut l, "FIRE6", 28, 256, 48, 192, 192);
+    fire(&mut l, "FIRE7", 28, 384, 48, 192, 192);
+    fire(&mut l, "FIRE8", 28, 384, 64, 256, 256);
+    l.push(LayerDesc::pool("POOL8", 2, 2, 28, 28, 512));
+    fire(&mut l, "FIRE9", 14, 512, 64, 256, 256);
+    l.push(LayerDesc::pointwise("CONV10", 14, 14, 512, 1000));
+    Network { name: "SqueezeNet".into(), layers: l }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn structure() {
+        let net = squeezenet();
+        assert_eq!(net.layers.iter().filter(|l| l.name.ends_with("_SQ")).count(), 8);
+        let g = net.total_macs() as f64 / 1e9;
+        assert!((0.7..1.0).contains(&g), "got {g} GMAC");
+    }
+}

@@ -1,0 +1,120 @@
+//! TinyCNN: the end-to-end model (mirrors `python/compile/model.py`
+//! `TINYCNN_LAYERS` — the AOT artifact `tinycnn.hlo.txt` computes exactly
+//! this network). Used by the e2e inference example, the coordinator
+//! pipeline and the sim-vs-HLO verification.
+
+use super::layer::{LayerDesc, Network};
+use crate::lns::logquant::ZERO_CODE;
+use crate::tensor::{Tensor3, Tensor4};
+use crate::util::prng::SplitMix64;
+
+/// Input dims of TinyCNN.
+pub const IN_H: usize = 16;
+pub const IN_W: usize = 16;
+pub const IN_C: usize = 4;
+/// Classes.
+pub const CLASSES: usize = 10;
+
+/// The network descriptor (valid padding everywhere — matches python).
+pub fn tinycnn() -> Network {
+    let layers = vec![
+        LayerDesc::conv("conv1", 3, 1, 0, 16, 16, 4, 8),
+        LayerDesc::conv("conv2", 3, 2, 0, 14, 14, 8, 16),
+        LayerDesc::pointwise("conv3", 6, 6, 16, 24),
+        LayerDesc::conv("conv4", 3, 1, 0, 6, 6, 24, 32),
+        LayerDesc::fc("fc", 4 * 4 * 32, 10),
+    ];
+    Network { name: "TinyCNN".into(), layers }
+}
+
+/// A full set of TinyCNN weights in code/sign form.
+#[derive(Clone, Debug)]
+pub struct TinyCnnWeights {
+    /// `[K, kh, kw, C]` code tensors for conv1/2/4; 1×1 and fc stored as
+    /// `[K, 1, 1, C]`.
+    pub codes: Vec<Tensor4>,
+    pub signs: Vec<Tensor4>,
+}
+
+impl TinyCnnWeights {
+    /// Weight tensor shapes in forward order (matches
+    /// `model.tinycnn_weight_shapes()` on the python side).
+    pub fn shapes() -> Vec<(usize, usize, usize, usize)> {
+        vec![
+            (8, 3, 3, 4),
+            (16, 3, 3, 8),
+            (24, 1, 1, 16),
+            (32, 3, 3, 24),
+            (10, 1, 1, 512),
+        ]
+    }
+
+    /// Random plausible weights: mostly small codes, ~8% exact zeros —
+    /// the same distribution the python test-vector generator uses.
+    pub fn random(seed: u64) -> Self {
+        let mut rng = SplitMix64::new(seed);
+        let mut codes = Vec::new();
+        let mut signs = Vec::new();
+        for (k, kh, kw, c) in Self::shapes() {
+            let mut tc = Tensor4::new(k, kh, kw, c);
+            let mut ts = Tensor4::new(k, kh, kw, c);
+            for v in tc.data.iter_mut() {
+                *v = if rng.bool(0.08) { ZERO_CODE } else { rng.range_i32(-12, 5) };
+            }
+            for v in ts.data.iter_mut() {
+                *v = rng.sign();
+            }
+            codes.push(tc);
+            signs.push(ts);
+        }
+        TinyCnnWeights { codes, signs }
+    }
+}
+
+/// Random input codes (log-quantized image).
+pub fn random_input(seed: u64) -> Tensor3 {
+    let mut rng = SplitMix64::new(seed);
+    let mut a = Tensor3::new(IN_H, IN_W, IN_C);
+    for v in a.data.iter_mut() {
+        *v = if rng.bool(0.05) { ZERO_CODE } else { rng.range_i32(-10, 5) };
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chains() {
+        tinycnn().validate_chaining().unwrap();
+    }
+
+    #[test]
+    fn macs_about_29k_plus_head() {
+        let net = tinycnn();
+        // conv1 14²·9·4·8 + conv2 6²·9·8·16 + conv3 36·16·24 + conv4 4²·9·24·32 + fc 5120
+        let expect = 14 * 14 * 9 * 4 * 8 + 36 * 9 * 8 * 16 + 36 * 16 * 24
+            + 16 * 9 * 24 * 32 + 512 * 10;
+        assert_eq!(net.total_macs(), expect as u64);
+    }
+
+    #[test]
+    fn weight_shapes_match_python() {
+        let w = TinyCnnWeights::random(0);
+        assert_eq!(w.codes.len(), 5);
+        assert_eq!(w.codes[0].k, 8);
+        assert_eq!(w.codes[4].c, 512);
+        // deterministic per seed
+        let w2 = TinyCnnWeights::random(0);
+        assert_eq!(w.codes[1].data, w2.codes[1].data);
+    }
+
+    #[test]
+    fn fc_matches_flatten_of_conv4() {
+        let net = tinycnn();
+        let conv4 = &net.layers[3];
+        let (ho, wo) = conv4.out_dims();
+        assert_eq!(ho * wo * conv4.cout, 512);
+    }
+}

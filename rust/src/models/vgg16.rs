@@ -1,0 +1,60 @@
+//! VGG-16 [2] convolutional workload (ImageNet dims, 224×224×3).
+//! The 13 conv layers of Table 3 plus the interleaved max-pools.
+
+use super::layer::{LayerDesc, Network};
+
+/// Build VGG-16 (conv layers + pools; FC head excluded, matching the
+/// paper's Table 3 / Fig. 19 which evaluate the conv stack).
+pub fn vgg16() -> Network {
+    let mut l = Vec::new();
+    let c = |name: &str, hw: usize, cin: usize, cout: usize| {
+        LayerDesc::conv(name, 3, 1, 1, hw, hw, cin, cout)
+    };
+    l.push(c("CONV1_1", 224, 3, 64));
+    l.push(c("CONV1_2", 224, 64, 64));
+    l.push(LayerDesc::pool("POOL1", 2, 2, 224, 224, 64));
+    l.push(c("CONV2_1", 112, 64, 128));
+    l.push(c("CONV2_2", 112, 128, 128));
+    l.push(LayerDesc::pool("POOL2", 2, 2, 112, 112, 128));
+    l.push(c("CONV3_1", 56, 128, 256));
+    l.push(c("CONV3_2", 56, 256, 256));
+    l.push(c("CONV3_3", 56, 256, 256));
+    l.push(LayerDesc::pool("POOL3", 2, 2, 56, 56, 256));
+    l.push(c("CONV4_1", 28, 256, 512));
+    l.push(c("CONV4_2", 28, 512, 512));
+    l.push(c("CONV4_3", 28, 512, 512));
+    l.push(LayerDesc::pool("POOL4", 2, 2, 28, 28, 512));
+    l.push(c("CONV5_1", 14, 512, 512));
+    l.push(c("CONV5_2", 14, 512, 512));
+    l.push(c("CONV5_3", 14, 512, 512));
+    Network { name: "VGG16".into(), layers: l }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chains() {
+        vgg16().validate_chaining().unwrap();
+    }
+
+    #[test]
+    fn thirteen_conv_layers() {
+        assert_eq!(vgg16().compute_layers().count(), 13);
+    }
+
+    #[test]
+    fn total_macs_about_15_3_gmac() {
+        // VGG16 conv stack ≈ 15.3 GMAC (literature value)
+        let g = vgg16().total_macs() as f64 / 1e9;
+        assert!((15.0..15.7).contains(&g), "got {g} GMAC");
+    }
+
+    #[test]
+    fn conv1_2_is_the_biggest_layer() {
+        let net = vgg16();
+        let c12 = net.layers.iter().find(|l| l.name == "CONV1_2").unwrap();
+        assert_eq!(c12.macs(), 1_849_688_064); // 224²·9·64·64
+    }
+}

@@ -1,0 +1,101 @@
+//! Workload and request generation for the serving/benchmark harness.
+
+use super::alexnet::alexnet;
+use super::layer::Network;
+use super::mobilenet_v1::mobilenet_v1;
+use super::resnet34::resnet34;
+use super::squeezenet::squeezenet;
+use super::tinycnn::tinycnn;
+use super::vgg16::vgg16;
+use crate::util::prng::SplitMix64;
+
+/// All networks in the zoo by name.
+pub fn by_name(name: &str) -> Option<Network> {
+    match name.to_ascii_lowercase().as_str() {
+        "vgg16" => Some(vgg16()),
+        "mobilenet" | "mobilenetv1" | "mobilenet_v1" => Some(mobilenet_v1()),
+        "resnet34" | "resnet-34" => Some(resnet34()),
+        "squeezenet" => Some(squeezenet()),
+        "alexnet" => Some(alexnet()),
+        "tinycnn" => Some(tinycnn()),
+        _ => None,
+    }
+}
+
+/// The three networks of Fig. 19 / Fig. 20.
+pub fn fig19_nets() -> Vec<Network> {
+    vec![vgg16(), mobilenet_v1(), resnet34()]
+}
+
+/// An inference request against the serving pipeline.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time offset in microseconds from stream start.
+    pub arrival_us: u64,
+    /// Input seed (the server synthesizes the quantized image from it).
+    pub seed: u64,
+}
+
+/// Poisson-ish request stream generator (exponential inter-arrivals).
+pub struct RequestStream {
+    rng: SplitMix64,
+    next_id: u64,
+    clock_us: u64,
+    /// Mean inter-arrival gap in microseconds.
+    pub mean_gap_us: f64,
+}
+
+impl RequestStream {
+    pub fn new(seed: u64, rate_per_sec: f64) -> Self {
+        RequestStream {
+            rng: SplitMix64::new(seed),
+            next_id: 0,
+            clock_us: 0,
+            mean_gap_us: 1e6 / rate_per_sec.max(1e-9),
+        }
+    }
+}
+
+impl Iterator for RequestStream {
+    type Item = Request;
+
+    fn next(&mut self) -> Option<Request> {
+        let u = self.rng.f64().max(1e-12);
+        let gap = (-u.ln() * self.mean_gap_us) as u64;
+        self.clock_us += gap;
+        let r = Request {
+            id: self.next_id,
+            arrival_us: self.clock_us,
+            seed: self.rng.next_u64(),
+        };
+        self.next_id += 1;
+        Some(r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_lookup() {
+        for n in ["vgg16", "mobilenet", "resnet34", "squeezenet", "alexnet", "tinycnn"] {
+            assert!(by_name(n).is_some(), "{n} missing");
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn request_stream_rate() {
+        let reqs: Vec<_> = RequestStream::new(1, 1000.0).take(5000).collect();
+        let span_s = reqs.last().unwrap().arrival_us as f64 / 1e6;
+        let rate = 5000.0 / span_s;
+        assert!((800.0..1200.0).contains(&rate), "rate {rate}");
+        // ids increase, arrivals non-decreasing
+        for w in reqs.windows(2) {
+            assert!(w[1].id == w[0].id + 1);
+            assert!(w[1].arrival_us >= w[0].arrival_us);
+        }
+    }
+}

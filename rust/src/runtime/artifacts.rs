@@ -1,0 +1,163 @@
+//! Artifact manifest: the registry `python/compile/aot.py` writes next to
+//! the HLO files. Plain line-based format (no serde offline):
+//!
+//! ```text
+//! artifact tinycnn tinycnn.hlo.txt
+//! in a_code s32 16,16,4
+//! out logits s32 10
+//! end
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One tensor binding (name, dtype, shape).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: String,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// One AOT artifact: HLO file + typed signature.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub hlo_path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactManifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+fn parse_tensor(line: &str) -> Result<TensorSpec> {
+    let mut it = line.split_whitespace();
+    let _tag = it.next();
+    let name = it.next().context("tensor name missing")?.to_string();
+    let dtype = it.next().context("tensor dtype missing")?.to_string();
+    let dims_s = it.next().context("tensor dims missing")?;
+    let dims = dims_s
+        .split(',')
+        .map(|d| d.parse::<usize>().context("bad dim"))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(TensorSpec { name, dtype, dims })
+}
+
+impl ArtifactManifest {
+    /// Parse `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (separated for testing).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let mut artifacts = BTreeMap::new();
+        let mut cur: Option<ArtifactSpec> = None;
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let err = || format!("manifest line {}: `{line}`", ln + 1);
+            if let Some(rest) = line.strip_prefix("artifact ") {
+                if cur.is_some() {
+                    bail!("{}: artifact before previous `end`", err());
+                }
+                let mut it = rest.split_whitespace();
+                let name = it.next().with_context(err)?.to_string();
+                let file = it.next().with_context(err)?;
+                cur = Some(ArtifactSpec {
+                    name,
+                    hlo_path: dir.join(file),
+                    inputs: vec![],
+                    outputs: vec![],
+                });
+            } else if line.starts_with("in ") {
+                cur.as_mut().with_context(err)?.inputs.push(parse_tensor(line)?);
+            } else if line.starts_with("out ") {
+                cur.as_mut().with_context(err)?.outputs.push(parse_tensor(line)?);
+            } else if line == "end" {
+                let a = cur.take().with_context(err)?;
+                artifacts.insert(a.name.clone(), a);
+            } else {
+                bail!("{}: unknown directive", err());
+            }
+        }
+        if cur.is_some() {
+            bail!("manifest truncated: missing final `end`");
+        }
+        Ok(ArtifactManifest { artifacts, dir })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact `{name}` not in manifest"))
+    }
+
+    /// Default artifact directory: `$NEUROMAX_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("NEUROMAX_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+artifact conv conv.hlo.txt
+in a_code s32 18,18,8
+in w_code s32 16,3,3,8
+out psum s32 16,16,16
+end
+artifact pp pp.hlo.txt
+in psum s32 4
+out code s32 4
+end
+";
+
+    #[test]
+    fn parses_two_artifacts() {
+        let m = ArtifactManifest::parse(SAMPLE, PathBuf::from("/x")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let c = m.get("conv").unwrap();
+        assert_eq!(c.inputs.len(), 2);
+        assert_eq!(c.inputs[0].dims, vec![18, 18, 8]);
+        assert_eq!(c.inputs[0].elements(), 18 * 18 * 8);
+        assert_eq!(c.outputs[0].dims, vec![16, 16, 16]);
+        assert_eq!(c.hlo_path, PathBuf::from("/x/conv.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(ArtifactManifest::parse("bogus line", PathBuf::new()).is_err());
+        assert!(ArtifactManifest::parse("artifact a f\nin x s32 2", PathBuf::new()).is_err());
+        assert!(ArtifactManifest::parse("in x s32 2\nend", PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let m = ArtifactManifest::parse(SAMPLE, PathBuf::new()).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+}

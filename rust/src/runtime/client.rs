@@ -1,0 +1,130 @@
+//! The PJRT CPU client wrapper: compile-once, execute-many. One compiled
+//! executable per artifact, cached in the runtime.
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use super::artifacts::{ArtifactManifest, ArtifactSpec};
+
+/// A loaded, compiled artifact.
+pub struct CompiledArtifact {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl CompiledArtifact {
+    /// Build the shaped literal for input slot `idx`.
+    pub fn literal_for(&self, idx: usize, data: &[i32]) -> Result<xla::Literal> {
+        let ts = &self.spec.inputs[idx];
+        anyhow::ensure!(
+            ts.elements() == data.len(),
+            "{}: input `{}` expects {} elements, got {}",
+            self.spec.name, ts.name, ts.elements(), data.len()
+        );
+        let dims: Vec<i64> = ts.dims.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(data).reshape(&dims)?)
+    }
+
+    /// Execute with pre-built literals (§Perf optimization 4: callers with
+    /// static inputs — e.g. the weight tensors of a serving session —
+    /// build them once and reuse).
+    pub fn run_literals(&self, literals: &[xla::Literal]) -> Result<Vec<Vec<i32>>> {
+        anyhow::ensure!(
+            literals.len() == self.spec.inputs.len(),
+            "{}: expected {} inputs, got {}",
+            self.spec.name,
+            self.spec.inputs.len(),
+            literals.len()
+        );
+        let result = self.exe.execute::<xla::Literal>(literals)?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == self.spec.outputs.len(),
+            "{}: expected {} outputs, got {}",
+            self.spec.name, self.spec.outputs.len(), parts.len()
+        );
+        let mut outs = Vec::with_capacity(parts.len());
+        for (ts, lit) in self.spec.outputs.iter().zip(parts) {
+            let v = lit.to_vec::<i32>().with_context(|| {
+                format!("{}: output `{}` not s32", self.spec.name, ts.name)
+            })?;
+            anyhow::ensure!(v.len() == ts.elements(), "output size mismatch");
+            outs.push(v);
+        }
+        Ok(outs)
+    }
+
+    /// Execute with int32 tensors (flattened row-major, matching the
+    /// manifest shapes). Returns flattened int32 outputs.
+    pub fn run_i32(&self, inputs: &[Vec<i32>]) -> Result<Vec<Vec<i32>>> {
+        anyhow::ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "{}: expected {} inputs, got {}",
+            self.spec.name,
+            self.spec.inputs.len(),
+            inputs.len()
+        );
+        let literals = inputs
+            .iter()
+            .enumerate()
+            .map(|(i, d)| self.literal_for(i, d))
+            .collect::<Result<Vec<_>>>()?;
+        self.run_literals(&literals)
+    }
+}
+
+/// The runtime: a PJRT CPU client plus compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: ArtifactManifest,
+    cache: HashMap<String, CompiledArtifact>,
+}
+
+impl Runtime {
+    /// Create from an artifact directory (see `ArtifactManifest`).
+    pub fn new(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = ArtifactManifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, manifest, cache: HashMap::new() })
+    }
+
+    /// Create from the default artifact dir ($NEUROMAX_ARTIFACTS or ./artifacts).
+    pub fn from_default_dir() -> Result<Self> {
+        Self::new(ArtifactManifest::default_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch the cached) artifact.
+    pub fn load(&mut self, name: &str) -> Result<&CompiledArtifact> {
+        if !self.cache.contains_key(name) {
+            let spec = self.manifest.get(name)?.clone();
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.hlo_path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing {}", spec.hlo_path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact `{name}`"))?;
+            self.cache.insert(name.to_string(), CompiledArtifact { spec, exe });
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// One-shot helper: load + run.
+    pub fn run_i32(&mut self, name: &str, inputs: &[Vec<i32>]) -> Result<Vec<Vec<i32>>> {
+        self.load(name)?;
+        self.cache[name].run_i32(inputs)
+    }
+}

@@ -1,0 +1,76 @@
+//! Typed execution helpers over the artifact registry: TinyCNN forward
+//! and the single-layer conv executables.
+
+use anyhow::Result;
+
+use super::client::Runtime;
+use crate::models::tinycnn::TinyCnnWeights;
+use crate::tensor::{Tensor3, Tensor4};
+
+/// Flatten weight tensors into the (codes, signs) argument interleaving
+/// the `tinycnn` artifact expects: a, w1c, w1s, w2c, w2s, w3c, w3s, w4c,
+/// w4s, wfc, wfs.
+pub fn tinycnn_args(a: &Tensor3, w: &TinyCnnWeights) -> Vec<Vec<i32>> {
+    let mut args = Vec::with_capacity(11);
+    args.push(a.data.clone());
+    for (c, s) in w.codes.iter().zip(&w.signs) {
+        args.push(c.data.clone());
+        args.push(s.data.clone());
+    }
+    args
+}
+
+/// Run the full TinyCNN forward pass on the PJRT executable.
+pub fn tinycnn_forward(rt: &mut Runtime, a: &Tensor3, w: &TinyCnnWeights) -> Result<Vec<i32>> {
+    let outs = rt.run_i32("tinycnn", &tinycnn_args(a, w))?;
+    Ok(outs.into_iter().next().unwrap())
+}
+
+/// A serving session with resident weights (§Perf optimization 4): the 10
+/// weight literals are built once; only the input literal is rebuilt per
+/// request.
+pub struct TinyCnnSession {
+    /// Slot 0 = input (rewritten per call), 1..=10 = weights (resident).
+    literals: Vec<xla::Literal>,
+}
+
+impl TinyCnnSession {
+    pub fn new(rt: &mut Runtime, w: &TinyCnnWeights) -> Result<Self> {
+        let art = rt.load("tinycnn")?;
+        let mut literals = Vec::with_capacity(11);
+        // placeholder input; overwritten on every forward()
+        literals.push(art.literal_for(0, &vec![0i32; art.spec.inputs[0].elements()])?);
+        for (i, (c, s)) in w.codes.iter().zip(&w.signs).enumerate() {
+            literals.push(art.literal_for(1 + 2 * i, &c.data)?);
+            literals.push(art.literal_for(2 + 2 * i, &s.data)?);
+        }
+        Ok(TinyCnnSession { literals })
+    }
+
+    pub fn forward(&mut self, rt: &mut Runtime, a: &Tensor3) -> Result<Vec<i32>> {
+        let art = rt.load("tinycnn")?;
+        self.literals[0] = art.literal_for(0, &a.data)?;
+        let outs = art.run_literals(&self.literals)?;
+        Ok(outs.into_iter().next().unwrap())
+    }
+}
+
+/// Run the single-layer 3×3 stride-1 artifact: a[18,18,8] ⊛ w[16,3,3,8].
+pub fn conv3x3_s1(rt: &mut Runtime, a: &Tensor3, wc: &Tensor4, ws: &Tensor4) -> Result<Tensor3> {
+    let outs = rt.run_i32(
+        "logconv3x3_s1",
+        &[a.data.clone(), wc.data.clone(), ws.data.clone()],
+    )?;
+    Ok(Tensor3::from_vec(16, 16, 16, outs.into_iter().next().unwrap()))
+}
+
+/// Run the post-processing artifact (ReLU + requant LUT) on psums.
+pub fn postprocess(rt: &mut Runtime, psums: &Tensor3) -> Result<Tensor3> {
+    let outs = rt.run_i32("postprocess", &[psums.data.clone()])?;
+    Ok(Tensor3::from_vec(
+        psums.h,
+        psums.w,
+        psums.c,
+        outs.into_iter().next().unwrap(),
+    ))
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts (built once by
+//! `make artifacts` — python never runs on the request path) and executes
+//! them on the XLA CPU client from the rust hot path.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod artifacts;
+pub mod client;
+pub mod exec;
+pub mod verify;
+
+pub use artifacts::{ArtifactManifest, ArtifactSpec};
+pub use client::Runtime;

@@ -1,0 +1,110 @@
+//! Sim-vs-HLO golden verification: the cycle simulator's functional path
+//! and the AOT-compiled JAX/Pallas computation must agree **bit-for-bit**
+//! on the same quantized inputs — two independent implementations of the
+//! eq. 8 datapath pinning each other down.
+
+use anyhow::{ensure, Result};
+
+use super::client::Runtime;
+use super::exec;
+use crate::dataflow::exec as fexec;
+use crate::models::tinycnn::{random_input, TinyCnnWeights};
+use crate::tensor::{Tensor3, Tensor4};
+
+/// The rust-side functional TinyCNN forward (mirrors
+/// `model.tinycnn_forward` in python — conv → ReLU+requant chain, logits
+/// left in the psum domain).
+pub fn tinycnn_forward_sim(a: &Tensor3, w: &TinyCnnWeights) -> Vec<i32> {
+    // conv1: 16×16×4 -> 14×14×8
+    let x = fexec::requant(&fexec::conv2d(a, &w.codes[0], &w.signs[0], 1));
+    // conv2: 14×14×8 -> 6×6×16 (s2)
+    let x = fexec::requant(&fexec::conv2d(&x, &w.codes[1], &w.signs[1], 2));
+    // conv3 (1×1): 6×6×16 -> 6×6×24
+    let x = fexec::requant(&fexec::pointwise(&x, &w.codes[2], &w.signs[2], 1));
+    // conv4: 6×6×24 -> 4×4×32
+    let x = fexec::requant(&fexec::conv2d(&x, &w.codes[3], &w.signs[3], 1));
+    // fc head: 512 -> 10 (raw psums)
+    fexec::fc(&x, &w.codes[4], &w.signs[4])
+}
+
+/// Verification outcome.
+#[derive(Clone, Debug)]
+pub struct VerifyReport {
+    pub cases: usize,
+    pub elements_compared: u64,
+    pub mismatches: u64,
+}
+
+impl VerifyReport {
+    pub fn ok(&self) -> bool {
+        self.mismatches == 0
+    }
+}
+
+/// Verify the TinyCNN forward over `cases` random (input, weight) draws.
+pub fn verify_tinycnn(rt: &mut Runtime, cases: usize, seed: u64) -> Result<VerifyReport> {
+    let mut rep = VerifyReport { cases, elements_compared: 0, mismatches: 0 };
+    for i in 0..cases {
+        let a = random_input(seed ^ (i as u64) << 8);
+        let w = TinyCnnWeights::random(seed.wrapping_add(i as u64 * 7919));
+        let hlo = exec::tinycnn_forward(rt, &a, &w)?;
+        let sim = tinycnn_forward_sim(&a, &w);
+        ensure!(hlo.len() == sim.len(), "logit length mismatch");
+        rep.elements_compared += hlo.len() as u64;
+        rep.mismatches += hlo.iter().zip(&sim).filter(|(a, b)| a != b).count() as u64;
+    }
+    Ok(rep)
+}
+
+/// Verify the single-layer 3×3 artifact against both the fast functional
+/// conv and the hardware-faithful core.
+pub fn verify_conv3x3(rt: &mut Runtime, seed: u64) -> Result<VerifyReport> {
+    use crate::lns::logquant::ZERO_CODE;
+    use crate::util::prng::SplitMix64;
+    let mut rng = SplitMix64::new(seed);
+    let mut a = Tensor3::new(18, 18, 8);
+    for v in a.data.iter_mut() {
+        *v = if rng.bool(0.1) { ZERO_CODE } else { rng.range_i32(-12, 8) };
+    }
+    let mut wc = Tensor4::new(16, 3, 3, 8);
+    let mut ws = Tensor4::new(16, 3, 3, 8);
+    for v in wc.data.iter_mut() {
+        *v = if rng.bool(0.1) { ZERO_CODE } else { rng.range_i32(-12, 8) };
+    }
+    for v in ws.data.iter_mut() {
+        *v = rng.sign();
+    }
+
+    let hlo = exec::conv3x3_s1(rt, &a, &wc, &ws)?;
+    let fast = fexec::conv2d(&a, &wc, &ws, 1);
+    let mut core = crate::arch::ConvCore::default();
+    let (faithful, _) = core.conv3x3(&a, &wc, &ws, 1);
+
+    let mut rep = VerifyReport { cases: 1, elements_compared: 0, mismatches: 0 };
+    for ((x, y), z) in hlo.data.iter().zip(&fast.data).zip(&faithful.data) {
+        rep.elements_compared += 1;
+        if x != y || y != z {
+            rep.mismatches += 1;
+        }
+    }
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_forward_is_deterministic() {
+        let a = random_input(1);
+        let w = TinyCnnWeights::random(2);
+        assert_eq!(tinycnn_forward_sim(&a, &w), tinycnn_forward_sim(&a, &w));
+    }
+
+    #[test]
+    fn sim_forward_shapes() {
+        let a = random_input(3);
+        let w = TinyCnnWeights::random(4);
+        assert_eq!(tinycnn_forward_sim(&a, &w).len(), 10);
+    }
+}

@@ -1,0 +1,73 @@
+//! Energy model (paper §1 / [6] Horowitz ISSCC'14): DDR access ≈ 200× the
+//! energy of a MAC; on-chip SRAM ≈ 6×. Absolute joules are calibrated to
+//! the paper's 2.727 W total at the measured VGG16 throughput.
+
+use crate::dataflow::LayerPerf;
+
+/// Relative energy units (1.0 = one log-MAC).
+pub const E_MAC: f64 = 1.0;
+/// On-chip SRAM access (per value).
+pub const E_SRAM: f64 = 6.0;
+/// Off-chip DDR access (per 16-bit word) — the 200× figure.
+pub const E_DDR: f64 = 200.0;
+
+/// Energy of one layer in MAC-equivalents.
+pub fn layer_energy_units(p: &LayerPerf) -> f64 {
+    let macs = p.macs as f64;
+    let sram = (p.traffic.sram_reads + p.traffic.sram_writes) as f64;
+    let ddr = p.traffic.ddr_accesses() as f64;
+    macs * E_MAC + sram * E_SRAM + ddr * E_DDR
+}
+
+/// Energy breakdown for reporting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EnergyBreakdown {
+    pub mac_units: f64,
+    pub sram_units: f64,
+    pub ddr_units: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn of(p: &LayerPerf) -> Self {
+        EnergyBreakdown {
+            mac_units: p.macs as f64 * E_MAC,
+            sram_units: (p.traffic.sram_reads + p.traffic.sram_writes) as f64 * E_SRAM,
+            ddr_units: p.traffic.ddr_accesses() as f64 * E_DDR,
+        }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.mac_units + self.sram_units + self.ddr_units
+    }
+
+    pub fn ddr_fraction(&self) -> f64 {
+        self.ddr_units / self.total().max(1e-12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::config::GridConfig;
+    use crate::dataflow::{analyze, ScheduleOptions};
+    use crate::models::layer::LayerDesc;
+
+    #[test]
+    fn reuse_keeps_ddr_fraction_low() {
+        // The whole point of the dataflow: DDR energy must not dominate.
+        let l = LayerDesc::conv("c", 3, 1, 1, 56, 56, 128, 128);
+        let p = analyze(&GridConfig::neuromax(), &l, ScheduleOptions::default());
+        let e = EnergyBreakdown::of(&p);
+        assert!(e.ddr_fraction() < 0.5, "DDR fraction {}", e.ddr_fraction());
+    }
+
+    #[test]
+    fn energy_scales_with_macs() {
+        let g = GridConfig::neuromax();
+        let small = analyze(&g, &LayerDesc::conv("s", 3, 1, 1, 14, 14, 64, 64),
+                            ScheduleOptions::default());
+        let big = analyze(&g, &LayerDesc::conv("b", 3, 1, 1, 28, 28, 64, 64),
+                          ScheduleOptions::default());
+        assert!(layer_energy_units(&big) > 3.0 * layer_energy_units(&small));
+    }
+}

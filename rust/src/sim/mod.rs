@@ -1,0 +1,8 @@
+//! Simulation accounting: cycle/energy/traffic statistics aggregation and
+//! the DDR energy model (Horowitz [6]: a DDR access costs ~200× a MAC).
+
+pub mod energy;
+pub mod stats;
+pub mod trace;
+
+pub use stats::{LayerReport, NetworkReport};

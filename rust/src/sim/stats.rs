@@ -1,0 +1,136 @@
+//! Per-layer and per-network simulation reports (the data behind Fig. 19,
+//! Fig. 20 and Table 3).
+
+use crate::arch::config::GridConfig;
+use crate::dataflow::{analyze, LayerPerf, ScheduleOptions};
+use crate::models::layer::Network;
+use crate::sim::energy;
+
+/// One layer's report row.
+#[derive(Clone, Debug)]
+pub struct LayerReport {
+    pub perf: LayerPerf,
+    pub util_total: f64,
+    pub util_used: f64,
+    pub latency_ms: f64,
+    pub gops_paper: f64,
+    pub energy_units: f64,
+}
+
+/// A whole network's simulation summary.
+#[derive(Clone, Debug)]
+pub struct NetworkReport {
+    pub name: String,
+    pub layers: Vec<LayerReport>,
+    pub total_cycles: u64,
+    pub total_macs: u64,
+    pub total_latency_ms: f64,
+    /// Unweighted mean utilization over compute layers — the paper's
+    /// Fig. 19 "average utilization" accounting.
+    pub avg_util: f64,
+    /// MAC-weighted (cycle-exact) utilization: total MACs / total lane
+    /// slots. The honest throughput number.
+    pub util_weighted: f64,
+    /// Achieved GOPS (paper accounting: peak × util).
+    pub gops_paper: f64,
+    pub gops_physical: f64,
+    pub energy_units: f64,
+}
+
+/// Simulate a network through the analytic scheduler.
+pub fn simulate_network(grid: &GridConfig, net: &Network, opt: ScheduleOptions) -> NetworkReport {
+    let mut layers = Vec::new();
+    let (mut cycles, mut macs, mut energy_units) = (0u64, 0u64, 0f64);
+    for l in &net.layers {
+        let perf = analyze(grid, l, opt);
+        let e = energy::layer_energy_units(&perf);
+        cycles += perf.cycles;
+        macs += perf.macs;
+        energy_units += e;
+        layers.push(LayerReport {
+            util_total: perf.util_total(grid),
+            util_used: perf.util_used(grid),
+            latency_ms: perf.latency_ms(grid),
+            gops_paper: perf.gops_paper(grid),
+            energy_units: e,
+            perf,
+        });
+    }
+    // weighted: total MACs over total lane slots of compute layers
+    let (mut m, mut s) = (0f64, 0f64);
+    // unweighted: mean of per-layer utilizations (Fig. 19 accounting)
+    let (mut usum, mut un) = (0f64, 0u32);
+    for lr in &layers {
+        if lr.perf.macs > 0 {
+            m += lr.perf.macs as f64;
+            s += lr.perf.cycles as f64 * grid.lanes() as f64;
+            usum += lr.util_total;
+            un += 1;
+        }
+    }
+    let util_weighted = if s > 0.0 { m / s } else { 0.0 };
+    let avg_util = if un > 0 { usum / un as f64 } else { 0.0 };
+    NetworkReport {
+        name: net.name.clone(),
+        total_latency_ms: cycles as f64 / (grid.clock_mhz * 1e3),
+        total_cycles: cycles,
+        total_macs: macs,
+        avg_util,
+        util_weighted,
+        gops_paper: grid.peak_gops_paper() * avg_util,
+        gops_physical: grid.peak_gops_physical() * util_weighted,
+        energy_units,
+        layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{mobilenet_v1::mobilenet_v1, resnet34::resnet34, vgg16::vgg16};
+
+    #[test]
+    fn fig19_average_utilizations() {
+        // paper: 95% VGG-16, 84% MobileNet v1, 86% ResNet-34. Our stricter
+        // accounting charges partial-sector idle rows (as the paper's own
+        // §5.1 example does; its Fig. 19 apparently does not), landing a
+        // few points lower — measured 86% / 79% / 76%. The *ordering* (VGG
+        // highest) and the stride-2 dips are the reproduction target; see
+        // EXPERIMENTS.md E5.
+        let g = GridConfig::neuromax();
+        let opt = ScheduleOptions::default();
+        let v = simulate_network(&g, &vgg16(), opt).avg_util;
+        let m = simulate_network(&g, &mobilenet_v1(), opt).avg_util;
+        let r = simulate_network(&g, &resnet34(), opt).avg_util;
+        assert!((0.83..0.97).contains(&v), "VGG {v}");
+        assert!((0.72..0.90).contains(&m), "MobileNet {m}");
+        assert!((0.70..0.92).contains(&r), "ResNet {r}");
+        assert!(v > m && v > r, "VGG should lead: {v} {m} {r}");
+    }
+
+    #[test]
+    fn fig20_gops_factors() {
+        // paper: 307.8 / 281.8 / 268.9 GOPS for VGG / ResNet / MobileNet,
+        // an ~85% increase over VWA's 166.3 with 28% fewer (adjusted) PEs.
+        // Our stricter utilization gives 279 GOPS → a 68% increase; the
+        // who-wins-by-what-factor shape holds (E6).
+        let g = GridConfig::neuromax();
+        let opt = ScheduleOptions::default();
+        let v = simulate_network(&g, &vgg16(), opt).gops_paper;
+        assert!((260.0..320.0).contains(&v), "VGG GOPS {v}");
+        let vwa_gops = crate::baseline::vwa::simulate(&vgg16()).gops;
+        assert!(v / vwa_gops > 1.5, "should beat VWA by >1.5×: {v} vs {vwa_gops}");
+    }
+
+    #[test]
+    fn vgg_total_latency_near_table3() {
+        // Table 3 total: 240.23 ms (conv layers, 200 MHz, high-util model)
+        let g = GridConfig::neuromax();
+        let rep = simulate_network(
+            &g, &vgg16(), ScheduleOptions { filter_packing: true, ..Default::default() });
+        let conv_ms: f64 = rep.layers.iter()
+            .filter(|l| l.perf.macs > 0)
+            .map(|l| l.latency_ms).sum();
+        assert!((230.0..270.0).contains(&conv_ms), "total {conv_ms} ms");
+    }
+}

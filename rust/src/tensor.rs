@@ -1,0 +1,170 @@
+//! Minimal dense tensors for the simulator (int32 log-code / psum domain).
+//!
+//! Layouts match the python side: activations `[H, W, C]`, weights
+//! `[K, kh, kw, C]`, outputs `[Ho, Wo, K]` — all row-major.
+
+/// 3-D int32 tensor `[H, W, C]` (activations, psum maps).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Tensor3 {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<i32>,
+}
+
+impl Tensor3 {
+    pub fn new(h: usize, w: usize, c: usize) -> Self {
+        Tensor3 { h, w, c, data: vec![0; h * w * c] }
+    }
+
+    pub fn filled(h: usize, w: usize, c: usize, v: i32) -> Self {
+        Tensor3 { h, w, c, data: vec![v; h * w * c] }
+    }
+
+    pub fn from_vec(h: usize, w: usize, c: usize, data: Vec<i32>) -> Self {
+        assert_eq!(data.len(), h * w * c, "tensor3 size mismatch");
+        Tensor3 { h, w, c, data }
+    }
+
+    #[inline(always)]
+    pub fn idx(&self, y: usize, x: usize, ch: usize) -> usize {
+        debug_assert!(y < self.h && x < self.w && ch < self.c);
+        (y * self.w + x) * self.c + ch
+    }
+
+    #[inline(always)]
+    pub fn get(&self, y: usize, x: usize, ch: usize) -> i32 {
+        self.data[self.idx(y, x, ch)]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, y: usize, x: usize, ch: usize, v: i32) {
+        let i = self.idx(y, x, ch);
+        self.data[i] = v;
+    }
+
+    #[inline(always)]
+    pub fn add_wrapping(&mut self, y: usize, x: usize, ch: usize, v: i32) {
+        let i = self.idx(y, x, ch);
+        self.data[i] = self.data[i].wrapping_add(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Map every element (e.g. post-processing ReLU+requant).
+    pub fn map(&self, mut f: impl FnMut(i32) -> i32) -> Tensor3 {
+        Tensor3 {
+            h: self.h,
+            w: self.w,
+            c: self.c,
+            data: self.data.iter().map(|&v| f(v)).collect(),
+        }
+    }
+}
+
+/// 4-D int32 tensor `[K, kh, kw, C]` (filter banks).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Tensor4 {
+    pub k: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub c: usize,
+    pub data: Vec<i32>,
+}
+
+impl Tensor4 {
+    pub fn new(k: usize, kh: usize, kw: usize, c: usize) -> Self {
+        Tensor4 { k, kh, kw, c, data: vec![0; k * kh * kw * c] }
+    }
+
+    pub fn from_vec(k: usize, kh: usize, kw: usize, c: usize, data: Vec<i32>) -> Self {
+        assert_eq!(data.len(), k * kh * kw * c, "tensor4 size mismatch");
+        Tensor4 { k, kh, kw, c, data }
+    }
+
+    #[inline(always)]
+    pub fn idx(&self, k: usize, dy: usize, dx: usize, ch: usize) -> usize {
+        debug_assert!(k < self.k && dy < self.kh && dx < self.kw && ch < self.c);
+        ((k * self.kh + dy) * self.kw + dx) * self.c + ch
+    }
+
+    #[inline(always)]
+    pub fn get(&self, k: usize, dy: usize, dx: usize, ch: usize) -> i32 {
+        self.data[self.idx(k, dy, dx, ch)]
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// Valid-convolution output size (shared shape rule).
+pub fn out_dim(size: usize, k: usize, stride: usize) -> usize {
+    assert!(size >= k, "input {size} smaller than kernel {k}");
+    (size - k) / stride + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn t3_indexing_roundtrip() {
+        let mut t = Tensor3::new(3, 4, 5);
+        t.set(2, 3, 4, 42);
+        t.set(0, 0, 0, -7);
+        assert_eq!(t.get(2, 3, 4), 42);
+        assert_eq!(t.get(0, 0, 0), -7);
+        assert_eq!(t.len(), 60);
+    }
+
+    #[test]
+    fn t3_layout_is_hwc_rowmajor() {
+        let mut t = Tensor3::new(2, 2, 2);
+        t.set(0, 0, 1, 1);
+        t.set(0, 1, 0, 2);
+        t.set(1, 0, 0, 3);
+        assert_eq!(t.data, vec![0, 1, 2, 0, 3, 0, 0, 0]);
+    }
+
+    #[test]
+    fn t4_indexing() {
+        let mut t = Tensor4::new(2, 3, 3, 4);
+        let i = t.idx(1, 2, 2, 3);
+        t.data[i] = 9;
+        assert_eq!(t.get(1, 2, 2, 3), 9);
+        assert_eq!(t.len(), 72);
+    }
+
+    #[test]
+    fn wrapping_accumulate() {
+        let mut t = Tensor3::new(1, 1, 1);
+        t.set(0, 0, 0, i32::MAX);
+        t.add_wrapping(0, 0, 0, 1);
+        assert_eq!(t.get(0, 0, 0), i32::MIN);
+    }
+
+    #[test]
+    fn out_dims_match_paper_example() {
+        // paper §5.1: 12x6 input, 3x3 filter -> 10x4 (s1)
+        assert_eq!(out_dim(12, 3, 1), 10);
+        assert_eq!(out_dim(6, 3, 1), 4);
+        assert_eq!(out_dim(12, 3, 2), 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_dim_rejects_undersized() {
+        out_dim(2, 3, 1);
+    }
+}

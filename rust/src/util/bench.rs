@@ -1,0 +1,86 @@
+//! Tiny benchmark harness for the `harness = false` bench targets
+//! (criterion is unavailable offline). Median-of-runs wall timing with
+//! warmup, plus throughput helpers.
+
+use std::time::{Duration, Instant};
+
+/// Result of one measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub runs: usize,
+}
+
+impl Measurement {
+    pub fn per_iter(&self, iters: u64) -> Duration {
+        Duration::from_nanos((self.median.as_nanos() as u64) / iters.max(1))
+    }
+}
+
+/// Time `f` (which should run its workload `iters` times internally):
+/// 1 warmup + `runs` measured repetitions, median reported.
+pub fn time<F: FnMut()>(runs: usize, mut f: F) -> Measurement {
+    f(); // warmup
+    let mut samples: Vec<Duration> = (0..runs.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed()
+        })
+        .collect();
+    samples.sort_unstable();
+    Measurement {
+        median: samples[samples.len() / 2],
+        min: samples[0],
+        max: *samples.last().unwrap(),
+        runs: samples.len(),
+    }
+}
+
+/// Print a standard bench line: name, median, and a derived rate.
+pub fn report(name: &str, m: Measurement, units: u64, unit_name: &str) {
+    let rate = units as f64 / m.median.as_secs_f64();
+    println!(
+        "bench {name:40} median {:>12?}  ({:.3e} {unit_name}/s)",
+        m.median, rate
+    );
+}
+
+/// A trivial blackbox to keep the optimizer honest (std::hint::black_box
+/// wrapper, centralized in case the toolchain changes).
+#[inline]
+pub fn blackbox<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_is_positive_and_ordered() {
+        let m = time(3, || {
+            let mut s = 0u64;
+            for i in 0..10_000u64 {
+                s = s.wrapping_add(blackbox(i));
+            }
+            blackbox(s);
+        });
+        assert!(m.min <= m.median && m.median <= m.max);
+        assert!(m.median.as_nanos() > 0);
+        assert_eq!(m.runs, 3);
+    }
+
+    #[test]
+    fn per_iter_divides() {
+        let m = Measurement {
+            median: Duration::from_micros(1000),
+            min: Duration::from_micros(900),
+            max: Duration::from_micros(1100),
+            runs: 3,
+        };
+        assert_eq!(m.per_iter(1000), Duration::from_micros(1));
+    }
+}

@@ -1,0 +1,7 @@
+//! Dependency-free utilities: PRNG, mini property-test harness, ASCII
+//! tables (offline environment — no rand/proptest/serde crates).
+
+pub mod bench;
+pub mod prng;
+pub mod proptest;
+pub mod table;

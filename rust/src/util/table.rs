@@ -1,0 +1,97 @@
+//! ASCII table printer for paper-table reports (`neuromax report ...`).
+
+/// Render rows as a boxed ASCII table. First row is the header.
+pub fn render(rows: &[Vec<String>]) -> String {
+    if rows.is_empty() {
+        return String::new();
+    }
+    let cols = rows.iter().map(|r| r.len()).max().unwrap_or(0);
+    let mut widths = vec![0usize; cols];
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let sep = {
+        let mut s = String::from("+");
+        for w in &widths {
+            s.push_str(&"-".repeat(w + 2));
+            s.push('+');
+        }
+        s
+    };
+    let mut out = String::new();
+    out.push_str(&sep);
+    out.push('\n');
+    for (ri, row) in rows.iter().enumerate() {
+        out.push('|');
+        for (i, w) in widths.iter().enumerate() {
+            let cell = row.get(i).map(String::as_str).unwrap_or("");
+            out.push_str(&format!(" {cell:<w$} |"));
+        }
+        out.push('\n');
+        if ri == 0 {
+            out.push_str(&sep);
+            out.push('\n');
+        }
+    }
+    out.push_str(&sep);
+    out.push('\n');
+    out
+}
+
+/// Convenience: build a row from display-ables.
+#[macro_export]
+macro_rules! row {
+    ($($cell:expr),+ $(,)?) => {
+        vec![$(format!("{}", $cell)),+]
+    };
+}
+
+/// Format a float with fixed decimals, trimming noise.
+pub fn f(v: f64, decimals: usize) -> String {
+    format!("{v:.decimals$}")
+}
+
+/// Format a large count with thousands separators (e.g. 12_345_678).
+pub fn count(v: u64) -> String {
+    let s = v.to_string();
+    let mut out = String::new();
+    for (i, ch) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(ch);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_header_and_rows() {
+        let t = render(&[
+            vec!["Layer".into(), "Cycles".into()],
+            vec!["conv1".into(), "123".into()],
+        ]);
+        assert!(t.contains("| Layer | Cycles |"));
+        assert!(t.contains("| conv1 | 123    |"));
+        // three separators: top, under-header, bottom
+        assert_eq!(t.matches('+').count() / 3, 3);
+    }
+
+    #[test]
+    fn count_separators() {
+        assert_eq!(count(0), "0");
+        assert_eq!(count(999), "999");
+        assert_eq!(count(1000), "1,000");
+        assert_eq!(count(12345678), "12,345,678");
+    }
+
+    #[test]
+    fn empty_table_is_empty() {
+        assert_eq!(render(&[]), "");
+    }
+}

@@ -1,0 +1,80 @@
+//! Shared helpers for integration tests: locating `artifacts/` and parsing
+//! the python-generated test-vector files (`tv_*.txt`).
+
+use std::path::PathBuf;
+
+use neuromax::tensor::{Tensor3, Tensor4};
+
+/// The artifacts directory, or `None` if `make artifacts` hasn't run
+/// (tests that need vectors skip gracefully with a loud note).
+pub fn artifacts_dir() -> Option<PathBuf> {
+    let dir = std::env::var_os("NEUROMAX_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        });
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!(
+            "SKIP: artifacts not built (run `make artifacts`); looked in {}",
+            dir.display()
+        );
+        None
+    }
+}
+
+#[allow(dead_code)]
+pub fn read(dir: &std::path::Path, name: &str) -> String {
+    std::fs::read_to_string(dir.join(name))
+        .unwrap_or_else(|e| panic!("reading {name}: {e}"))
+}
+
+/// Parse a `key v1 v2 ...` line map from a tv file.
+#[allow(dead_code)]
+pub fn kv_lines(text: &str) -> std::collections::HashMap<String, Vec<i64>> {
+    let mut map = std::collections::HashMap::new();
+    for line in text.lines() {
+        let mut it = line.split_whitespace();
+        if let Some(key) = it.next() {
+            let vals: Vec<i64> = it.map(|v| v.parse().expect("int")).collect();
+            map.insert(key.to_string(), vals);
+        }
+    }
+    map
+}
+
+/// A conv test case parsed from `tv_conv*.txt`.
+#[allow(dead_code)]
+pub struct ConvCase {
+    pub a: Tensor3,
+    pub wc: Tensor4,
+    pub ws: Tensor4,
+    pub stride: usize,
+    pub out: Vec<i32>,
+    pub req: Option<Vec<i32>>,
+}
+
+#[allow(dead_code)]
+pub fn conv_case(dir: &std::path::Path, name: &str) -> ConvCase {
+    let text = read(dir, name);
+    let kv = kv_lines(&text);
+    let sa = &kv["shape_a"];
+    let sw = &kv["shape_w"];
+    let stride = kv.get("stride").map(|v| v[0] as usize).unwrap_or(1);
+    let to_i32 = |v: &Vec<i64>| v.iter().map(|&x| x as i32).collect::<Vec<_>>();
+    ConvCase {
+        a: Tensor3::from_vec(sa[0] as usize, sa[1] as usize, sa[2] as usize, to_i32(&kv["a"])),
+        wc: Tensor4::from_vec(
+            sw[0] as usize, sw[1] as usize, sw[2] as usize, sw[3] as usize,
+            to_i32(&kv["wc"]),
+        ),
+        ws: Tensor4::from_vec(
+            sw[0] as usize, sw[1] as usize, sw[2] as usize, sw[3] as usize,
+            to_i32(&kv["ws"]),
+        ),
+        stride,
+        out: to_i32(&kv["out"]),
+        req: kv.get("req").map(to_i32),
+    }
+}

@@ -1,0 +1,119 @@
+//! The three implementations of the 3×3 dataflow must agree:
+//!  * `arch::conv_core` (hardware-faithful: adder nets, shift registers),
+//!  * `dataflow::exec` (fast functional),
+//!  * `dataflow::schedule` (analytic cycle model — no numerics).
+//! Bit-equality for psums; cycle-equality between the faithful core and
+//! the analytic model (they implement the same Fig. 8 schedule).
+
+mod common;
+
+use neuromax::arch::config::GridConfig;
+use neuromax::arch::ConvCore;
+use neuromax::dataflow::{analyze, exec, ScheduleOptions};
+use neuromax::lns::logquant::ZERO_CODE;
+use neuromax::models::layer::LayerDesc;
+use neuromax::tensor::{Tensor3, Tensor4};
+use neuromax::util::prng::SplitMix64;
+
+fn rand_case(
+    rng: &mut SplitMix64, h: usize, w: usize, c: usize, k: usize,
+) -> (Tensor3, Tensor4, Tensor4) {
+    let mut a = Tensor3::new(h, w, c);
+    for v in a.data.iter_mut() {
+        *v = if rng.bool(0.1) { ZERO_CODE } else { rng.range_i32(-12, 8) };
+    }
+    let mut wc = Tensor4::new(k, 3, 3, c);
+    let mut ws = Tensor4::new(k, 3, 3, c);
+    for v in wc.data.iter_mut() {
+        *v = if rng.bool(0.1) { ZERO_CODE } else { rng.range_i32(-12, 8) };
+    }
+    for v in ws.data.iter_mut() {
+        *v = rng.sign();
+    }
+    (a, wc, ws)
+}
+
+#[test]
+fn psums_and_cycles_agree_across_implementations() {
+    let grid = GridConfig::neuromax();
+    neuromax::util::proptest::check("core-vs-exec-vs-analytic", 20, |rng| {
+        let stride = if rng.bool(0.5) { 1 } else { 2 };
+        let h = 3 + stride + rng.below(20) as usize;
+        let w = 3 + stride + rng.below(14) as usize;
+        let c = 1 + rng.below(9) as usize;
+        let k = 1 + rng.below(3) as usize;
+        let (a, wc, ws) = rand_case(rng, h, w, c, k);
+
+        let fast = exec::conv2d(&a, &wc, &ws, stride);
+        let mut core = ConvCore::default();
+        let (faithful, stats) = core.conv3x3(&a, &wc, &ws, stride);
+        neuromax::prop_assert!(
+            fast == faithful,
+            "psums differ at h={h} w={w} c={c} k={k} s={stride}"
+        );
+
+        // analytic model (no padding → hin=h) must predict the same cycles
+        let l = LayerDesc::conv("t", 3, stride, 0, h, w, c, k);
+        let perf = analyze(&grid, &l, ScheduleOptions::default());
+        neuromax::prop_assert!(
+            perf.cycles == stats.cycles,
+            "cycle mismatch: analytic {} vs faithful {} (h={h} w={w} c={c} k={k} s={stride})",
+            perf.cycles,
+            stats.cycles
+        );
+        neuromax::prop_assert!(
+            perf.macs == stats.useful_macs,
+            "mac mismatch: {} vs {}",
+            perf.macs,
+            stats.useful_macs
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn psum_storage_counters_agree() {
+    let mut rng = SplitMix64::new(11);
+    let (a, wc, ws) = rand_case(&mut rng, 18, 10, 2, 2);
+    let mut core = ConvCore::default();
+    let (_, stats) = core.conv3x3(&a, &wc, &ws, 1);
+    let l = LayerDesc::conv("t", 3, 1, 0, 18, 10, 2, 2);
+    let perf = analyze(&GridConfig::neuromax(), &l, ScheduleOptions::default());
+    assert_eq!(perf.psums_stored, stats.psums_stored);
+}
+
+#[test]
+fn padded_layer_equals_padded_direct_conv() {
+    let mut rng = SplitMix64::new(13);
+    let (a, wc, ws) = rand_case(&mut rng, 9, 9, 3, 2);
+    let grid = GridConfig::neuromax();
+    let l = LayerDesc::conv("p", 3, 1, 1, 9, 9, 3, 2);
+    let (out, _) = exec::run_layer(
+        &grid, &l, &a, Some(&wc), Some(&ws), ScheduleOptions::default());
+    // SAME conv: output dims match input
+    assert_eq!((out.h, out.w, out.c), (9, 9, 2));
+    // interior equals the unpadded valid conv shifted by 1
+    let valid = exec::conv2d(&a, &wc, &ws, 1);
+    for i in 0..valid.h {
+        for j in 0..valid.w {
+            for ch in 0..valid.c {
+                assert_eq!(out.get(i + 1, j + 1, ch), valid.get(i, j, ch));
+            }
+        }
+    }
+}
+
+#[test]
+fn maxpool_commutes_with_requant() {
+    // requant is monotone, so maxpool-then-requant == requant-then-maxpool
+    let mut rng = SplitMix64::new(17);
+    let mut psums = Tensor3::new(8, 8, 3);
+    for v in psums.data.iter_mut() {
+        *v = rng.range_i32(-1_000_000, 1_000_000);
+    }
+    let a = exec::requant(&psums);
+    let path1 = neuromax::dataflow::pool::maxpool(&a, 2, 2);
+    let pooled_psums = neuromax::dataflow::pool::maxpool(&psums, 2, 2);
+    let path2 = exec::requant(&pooled_psums);
+    assert_eq!(path1, path2);
+}

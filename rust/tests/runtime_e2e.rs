@@ -1,0 +1,158 @@
+//! Runtime + coordinator integration: artifacts load and execute via
+//! PJRT, the executables agree bit-for-bit with the simulator, and the
+//! full serving pipeline works over them. Skips (loudly) when artifacts
+//! haven't been built.
+
+mod common;
+
+use neuromax::coordinator::pipeline::{Backend, InferenceEngine};
+use neuromax::runtime::{exec, verify, Runtime};
+
+fn runtime() -> Option<Runtime> {
+    let dir = common::artifacts_dir()?;
+    Some(Runtime::new(dir).expect("runtime init"))
+}
+
+#[test]
+fn manifest_lists_all_expected_artifacts() {
+    let Some(rt) = runtime() else { return };
+    for name in [
+        "logconv3x3_s1", "logconv3x3_s2", "logconv1x1", "logdw3x3",
+        "postprocess", "tinycnn",
+    ] {
+        assert!(rt.manifest().get(name).is_ok(), "missing artifact {name}");
+    }
+}
+
+#[test]
+fn every_artifact_compiles() {
+    let Some(mut rt) = runtime() else { return };
+    let names: Vec<String> = rt.manifest().artifacts.keys().cloned().collect();
+    for name in names {
+        rt.load(&name).unwrap_or_else(|e| panic!("compiling {name}: {e:#}"));
+    }
+}
+
+#[test]
+fn conv3x3_hlo_matches_sim_and_core() {
+    let Some(mut rt) = runtime() else { return };
+    let rep = verify::verify_conv3x3(&mut rt, 99).unwrap();
+    assert!(rep.ok(), "{} mismatches", rep.mismatches);
+    assert_eq!(rep.elements_compared, 16 * 16 * 16);
+}
+
+#[test]
+fn tinycnn_hlo_matches_sim_over_many_cases() {
+    let Some(mut rt) = runtime() else { return };
+    let rep = verify::verify_tinycnn(&mut rt, 6, 12345).unwrap();
+    assert!(rep.ok(), "{} mismatches", rep.mismatches);
+}
+
+#[test]
+fn postprocess_artifact_matches_requant_table() {
+    let Some(mut rt) = runtime() else { return };
+    use neuromax::lns::tables::requant_act;
+    use neuromax::tensor::Tensor3;
+    use neuromax::util::prng::SplitMix64;
+    let mut rng = SplitMix64::new(3);
+    let mut psums = Tensor3::new(16, 16, 16);
+    for v in psums.data.iter_mut() {
+        *v = rng.range_i32(-5_000_000, 50_000_000);
+    }
+    let out = exec::postprocess(&mut rt, &psums).unwrap();
+    for (p, c) in psums.data.iter().zip(&out.data) {
+        assert_eq!(requant_act(*p), *c, "psum {p}");
+    }
+}
+
+#[test]
+fn fused_artifact_equals_conv_plus_requant() {
+    let Some(mut rt) = runtime() else { return };
+    use neuromax::dataflow::exec as fexec;
+    use neuromax::lns::logquant::ZERO_CODE;
+    use neuromax::tensor::{Tensor3, Tensor4};
+    use neuromax::util::prng::SplitMix64;
+    let mut rng = SplitMix64::new(21);
+    let mut a = Tensor3::new(18, 18, 8);
+    for v in a.data.iter_mut() {
+        *v = if rng.bool(0.1) { ZERO_CODE } else { rng.range_i32(-12, 8) };
+    }
+    let mut wc = Tensor4::new(16, 3, 3, 8);
+    let mut ws = Tensor4::new(16, 3, 3, 8);
+    for v in wc.data.iter_mut() {
+        *v = rng.range_i32(-12, 8);
+    }
+    for v in ws.data.iter_mut() {
+        *v = rng.sign();
+    }
+    let outs = rt
+        .run_i32(
+            "logconv3x3_fused",
+            &[a.data.clone(), wc.data.clone(), ws.data.clone()],
+        )
+        .unwrap();
+    let want = fexec::requant(&fexec::conv2d(&a, &wc, &ws, 1));
+    assert_eq!(outs[0], want.data, "fused HLO != conv+requant composition");
+}
+
+#[test]
+fn missing_hlo_file_fails_loudly() {
+    let Some(dir) = common::artifacts_dir() else { return };
+    // synthesize a manifest pointing at a nonexistent file
+    let tmp = std::env::temp_dir().join("neuromax_bad_manifest");
+    std::fs::create_dir_all(&tmp).unwrap();
+    std::fs::write(
+        tmp.join("manifest.txt"),
+        "artifact ghost missing.hlo.txt\nin x s32 4\nout y s32 4\nend\n",
+    )
+    .unwrap();
+    let mut rt = Runtime::new(&tmp).expect("manifest parses");
+    let err = match rt.load("ghost") {
+        Err(e) => e,
+        Ok(_) => panic!("loading a missing HLO file should fail"),
+    };
+    assert!(format!("{err:#}").contains("missing.hlo.txt"), "{err:#}");
+    let _ = dir;
+}
+
+#[test]
+fn corrupt_hlo_text_fails_loudly() {
+    if common::artifacts_dir().is_none() {
+        return;
+    }
+    let tmp = std::env::temp_dir().join("neuromax_corrupt_hlo");
+    std::fs::create_dir_all(&tmp).unwrap();
+    std::fs::write(tmp.join("bad.hlo.txt"), "this is not hlo").unwrap();
+    std::fs::write(
+        tmp.join("manifest.txt"),
+        "artifact bad bad.hlo.txt\nin x s32 4\nout y s32 4\nend\n",
+    )
+    .unwrap();
+    let mut rt = Runtime::new(&tmp).unwrap();
+    assert!(rt.load("bad").is_err());
+}
+
+#[test]
+fn bad_input_shape_is_rejected() {
+    let Some(mut rt) = runtime() else { return };
+    let r = rt.run_i32("postprocess", &[vec![1, 2, 3]]); // wrong size
+    assert!(r.is_err());
+    let r = rt.run_i32("postprocess", &[]); // wrong arity
+    assert!(r.is_err());
+}
+
+#[test]
+fn hlo_engine_and_sim_engine_agree_end_to_end() {
+    if common::artifacts_dir().is_none() {
+        return;
+    }
+    let mut hlo = InferenceEngine::new(Backend::Hlo, 7).expect("hlo engine");
+    let mut sim = InferenceEngine::new(Backend::Sim, 7).expect("sim engine");
+    for seed in 0..6 {
+        let input = InferenceEngine::input_for_seed(seed);
+        let a = hlo.infer(&input).unwrap();
+        let b = sim.infer(&input).unwrap();
+        assert_eq!(a.logits, b.logits, "seed {seed}");
+        assert_eq!(a.class, b.class);
+    }
+}

@@ -1,0 +1,105 @@
+//! Full separable-block chain (the MobileNet motif of §5.2) through BOTH
+//! execution paths — fast functional executor vs hardware-faithful core —
+//! with requant and pooling between layers. Two independent
+//! implementations of the whole chain must agree bit-for-bit.
+
+mod common;
+
+use neuromax::arch::ConvCore;
+use neuromax::dataflow::{exec, pool};
+use neuromax::lns::logquant::ZERO_CODE;
+use neuromax::tensor::{Tensor3, Tensor4};
+use neuromax::util::prng::SplitMix64;
+
+fn codes3(rng: &mut SplitMix64, h: usize, w: usize, c: usize) -> Tensor3 {
+    let mut t = Tensor3::new(h, w, c);
+    for v in t.data.iter_mut() {
+        *v = if rng.bool(0.08) { ZERO_CODE } else { rng.range_i32(-10, 6) };
+    }
+    t
+}
+
+fn weights(rng: &mut SplitMix64, k: usize, kh: usize, kw: usize, c: usize) -> (Tensor4, Tensor4) {
+    let mut wc = Tensor4::new(k, kh, kw, c);
+    let mut ws = Tensor4::new(k, kh, kw, c);
+    for v in wc.data.iter_mut() {
+        *v = if rng.bool(0.08) { ZERO_CODE } else { rng.range_i32(-10, 5) };
+    }
+    for v in ws.data.iter_mut() {
+        *v = rng.sign();
+    }
+    (wc, ws)
+}
+
+/// conv3×3 s2 → requant → dw3×3 → requant → pw 1×1 → requant → maxpool 2.
+#[test]
+fn separable_block_functional_vs_faithful() {
+    let mut rng = SplitMix64::new(2026);
+    let a = codes3(&mut rng, 19, 19, 3);
+    let (w1c, w1s) = weights(&mut rng, 8, 3, 3, 3); // conv s2: 19→9
+    let (wdc, wds) = weights(&mut rng, 8, 3, 3, 1); // dw: 9→7
+    let (wpc, wps) = weights(&mut rng, 12, 1, 1, 8); // pw: 7→7, C 8→12
+
+    // --- functional path -------------------------------------------------
+    let f1 = exec::requant(&exec::conv2d(&a, &w1c, &w1s, 2));
+    let f2 = exec::requant(&exec::depthwise(&f1, &wdc, &wds, 1));
+    let f3 = exec::requant(&exec::pointwise(&f2, &wpc, &wps, 1));
+    let f4 = pool::maxpool(&f3, 2, 2);
+
+    // --- hardware-faithful path ------------------------------------------
+    let mut core = ConvCore::default();
+    let (p1, s1) = core.conv3x3(&a, &w1c, &w1s, 2);
+    let h1 = p1.map(neuromax::lns::requant_act);
+    let (p2, s2) = core.depthwise(&h1, &wdc, &wds, 1);
+    let h2 = p2.map(neuromax::lns::requant_act);
+    let (p3, s3) = core.conv1x1(&h2, &wpc, &wps);
+    let h3 = p3.map(neuromax::lns::requant_act);
+    let h4 = pool::maxpool(&h3, 2, 2);
+
+    assert_eq!(f1, h1, "conv stage diverged");
+    assert_eq!(f2, h2, "depthwise stage diverged");
+    assert_eq!(f3, h3, "pointwise stage diverged");
+    assert_eq!(f4, h4, "pooled outputs diverged");
+
+    // schedule sanity: every stage billed cycles and stayed within budget
+    for (name, st) in [("conv", &s1), ("dw", &s2), ("pw", &s3)] {
+        assert!(st.cycles > 0, "{name}: no cycles");
+        assert!(
+            st.utilization_used() <= 1.0 + 1e-9,
+            "{name}: utilization {}",
+            st.utilization_used()
+        );
+        assert!(st.cycles >= st.useful_macs / 324, "{name}: beat roofline");
+    }
+}
+
+/// The same property over random block shapes.
+#[test]
+fn separable_block_property() {
+    neuromax::util::proptest::check("separable-chain", 10, |rng| {
+        let hw = 9 + 2 * rng.below(5) as usize; // odd sizes 9..17
+        let cin = 1 + rng.below(4) as usize;
+        let cmid = 2 + rng.below(8) as usize;
+        let cout = 2 + rng.below(12) as usize;
+        let a = codes3(rng, hw, hw, cin);
+        let (w1c, w1s) = weights(rng, cmid, 3, 3, cin);
+        let (wdc, wds) = weights(rng, cmid, 3, 3, 1);
+        let (wpc, wps) = weights(rng, cout, 1, 1, cmid);
+
+        let f1 = exec::requant(&exec::conv2d(&a, &w1c, &w1s, 2));
+        let f2 = exec::requant(&exec::depthwise(&f1, &wdc, &wds, 1));
+        let f3 = exec::requant(&exec::pointwise(&f2, &wpc, &wps, 1));
+
+        let mut core = ConvCore::default();
+        let (p1, _) = core.conv3x3(&a, &w1c, &w1s, 2);
+        let h1 = p1.map(neuromax::lns::requant_act);
+        let (p2, _) = core.depthwise(&h1, &wdc, &wds, 1);
+        let h2 = p2.map(neuromax::lns::requant_act);
+        let (p3, _) = core.conv1x1(&h2, &wpc, &wps);
+        let h3 = p3.map(neuromax::lns::requant_act);
+
+        neuromax::prop_assert!(f3 == h3, "chain diverged at hw={hw} cin={cin} cmid={cmid} cout={cout}");
+        neuromax::prop_assert!(f1 == h1 && f2 == h2, "early stage diverged");
+        Ok(())
+    });
+}

@@ -1,0 +1,153 @@
+//! Cross-language bit-exactness: the rust LNS datapath and dataflow
+//! executor against the python-generated oracle vectors (`tv_*.txt` from
+//! `python/compile/aot.py`). These pin the two independent
+//! implementations of eq. 3-8 together.
+
+mod common;
+
+use neuromax::dataflow::exec;
+use neuromax::lns::{logquant, mult, tables};
+use neuromax::tensor::Tensor3;
+
+#[test]
+fn quantizer_matches_python() {
+    let Some(dir) = common::artifacts_dir() else { return };
+    let text = common::read(&dir, "tv_quant.txt");
+    let mut checked = 0;
+    for line in text.lines() {
+        let mut it = line.split_whitespace();
+        let val: f64 = it.next().unwrap().parse().unwrap();
+        let code: i32 = it.next().unwrap().parse().unwrap();
+        let sign: i32 = it.next().unwrap().parse().unwrap();
+        let (rc, rs) = logquant::quantize(val as f32);
+        assert_eq!((rc, rs), (code, sign), "value {val}");
+        checked += 1;
+    }
+    assert!(checked > 200, "only {checked} vectors");
+}
+
+#[test]
+fn requant_matches_python() {
+    let Some(dir) = common::artifacts_dir() else { return };
+    let text = common::read(&dir, "tv_requant.txt");
+    for line in text.lines() {
+        let mut it = line.split_whitespace();
+        let psum: i64 = it.next().unwrap().parse().unwrap();
+        let code: i32 = it.next().unwrap().parse().unwrap();
+        assert_eq!(tables::requant_act(psum as i32), code, "psum {psum}");
+    }
+}
+
+#[test]
+fn thread_mult_matches_python() {
+    let Some(dir) = common::artifacts_dir() else { return };
+    let text = common::read(&dir, "tv_mult.txt");
+    for line in text.lines() {
+        let v: Vec<i64> = line.split_whitespace().map(|x| x.parse().unwrap()).collect();
+        let got = mult::thread_mult(v[0] as i32, v[1] as i32, v[2] as i32);
+        assert_eq!(got as i64, v[3], "codes {} {} {}", v[0], v[1], v[2]);
+    }
+}
+
+fn check_conv(file: &str) {
+    let Some(dir) = common::artifacts_dir() else { return };
+    let c = common::conv_case(&dir, file);
+    let out = exec::conv2d(&c.a, &c.wc, &c.ws, c.stride);
+    assert_eq!(out.data, c.out, "{file}: psums differ from python oracle");
+    if let Some(req) = &c.req {
+        let got = exec::requant(&out);
+        assert_eq!(&got.data, req, "{file}: requant codes differ");
+    }
+}
+
+#[test]
+fn conv3x3_s1_matches_python() {
+    check_conv("tv_conv3x3_s1.txt");
+    check_conv("tv_conv3x3_s1b.txt");
+}
+
+#[test]
+fn conv3x3_s2_matches_python() {
+    check_conv("tv_conv3x3_s2.txt");
+}
+
+#[test]
+fn conv5x5_matches_python() {
+    check_conv("tv_conv5x5.txt");
+}
+
+#[test]
+fn conv4x4_matches_python() {
+    check_conv("tv_conv4x4.txt");
+}
+
+#[test]
+fn conv7x7_s2_matches_python() {
+    check_conv("tv_conv7x7.txt");
+}
+
+#[test]
+fn conv1x1_matches_python() {
+    let Some(dir) = common::artifacts_dir() else { return };
+    let text = common::read(&dir, "tv_conv1x1.txt");
+    let kv = common::kv_lines(&text);
+    let to_i32 = |v: &Vec<i64>| v.iter().map(|&x| x as i32).collect::<Vec<_>>();
+    let (p, c) = (kv["shape_a"][0] as usize, kv["shape_a"][1] as usize);
+    let k = kv["shape_w"][0] as usize;
+    let a = Tensor3::from_vec(p, 1, c, to_i32(&kv["a"]));
+    let wc = neuromax::tensor::Tensor4::from_vec(k, 1, 1, c, to_i32(&kv["wc"]));
+    let ws = neuromax::tensor::Tensor4::from_vec(k, 1, 1, c, to_i32(&kv["ws"]));
+    let out = exec::pointwise(&a, &wc, &ws, 1);
+    assert_eq!(out.data, to_i32(&kv["out"]));
+}
+
+#[test]
+fn depthwise_matches_python() {
+    let Some(dir) = common::artifacts_dir() else { return };
+    let text = common::read(&dir, "tv_dw3x3.txt");
+    let kv = common::kv_lines(&text);
+    let to_i32 = |v: &Vec<i64>| v.iter().map(|&x| x as i32).collect::<Vec<_>>();
+    let sa = &kv["shape_a"];
+    let a = Tensor3::from_vec(sa[0] as usize, sa[1] as usize, sa[2] as usize, to_i32(&kv["a"]));
+    let c = sa[2] as usize;
+    let wc = neuromax::tensor::Tensor4::from_vec(c, 3, 3, 1, to_i32(&kv["wc"]));
+    let ws = neuromax::tensor::Tensor4::from_vec(c, 3, 3, 1, to_i32(&kv["ws"]));
+    let out = exec::depthwise(&a, &wc, &ws, 1);
+    assert_eq!(out.data, to_i32(&kv["out"]));
+}
+
+#[test]
+fn tinycnn_forward_matches_python() {
+    let Some(dir) = common::artifacts_dir() else { return };
+    let text = common::read(&dir, "tv_tinycnn.txt");
+    // parse "tensor <name> <dims...>" + flat line pairs
+    let mut tensors: Vec<(String, Vec<usize>, Vec<i32>)> = Vec::new();
+    let mut lines = text.lines();
+    while let Some(h) = lines.next() {
+        let mut it = h.split_whitespace();
+        assert_eq!(it.next(), Some("tensor"));
+        let name = it.next().unwrap().to_string();
+        let dims: Vec<usize> = it.map(|d| d.parse().unwrap()).collect();
+        let data: Vec<i32> = lines
+            .next()
+            .unwrap()
+            .split_whitespace()
+            .map(|v| v.parse().unwrap())
+            .collect();
+        tensors.push((name, dims, data));
+    }
+    let logits_py = tensors.pop().unwrap().2;
+    let a = Tensor3::from_vec(16, 16, 4, tensors[0].2.clone());
+    let shapes = neuromax::models::tinycnn::TinyCnnWeights::shapes();
+    let mut codes = Vec::new();
+    let mut signs = Vec::new();
+    for (i, (k, kh, kw, c)) in shapes.iter().enumerate() {
+        codes.push(neuromax::tensor::Tensor4::from_vec(
+            *k, *kh, *kw, *c, tensors[1 + 2 * i].2.clone()));
+        signs.push(neuromax::tensor::Tensor4::from_vec(
+            *k, *kh, *kw, *c, tensors[2 + 2 * i].2.clone()));
+    }
+    let w = neuromax::models::tinycnn::TinyCnnWeights { codes, signs };
+    let logits = neuromax::runtime::verify::tinycnn_forward_sim(&a, &w);
+    assert_eq!(logits, logits_py, "full-network forward differs from python");
+}
