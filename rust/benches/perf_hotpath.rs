@@ -1,21 +1,27 @@
 //! §Perf hot-path microbenchmarks — the profiling harness behind
 //! EXPERIMENTS.md §Perf. Covers each layer of the stack:
 //!   L3a  thread_mult (the innermost op of every simulation)
-//!   L3b  functional conv executor (the simulator hot path)
+//!   L3b  functional conv executor (reference) vs the LUT-fused engine
+//!        (single- and multi-threaded) — the simulator hot path
 //!   L3c  requant (post-processing)
 //!   L3d  hardware-faithful core (validation path)
 //!   L3e  analytic scheduler (planning path)
 //!   RT   PJRT tinycnn execution (the serving hot path; skipped without
-//!        artifacts)
+//!        artifacts / the `pjrt` feature)
+//!   SIM  tinycnn serving forward: reference, engine, and batched engine
+//!
+//! Every measurement is also written to `BENCH_hotpath.json`
+//! (machine-readable; override the path with $BENCH_JSON_OUT) so future
+//! PRs can track the perf trajectory.
 
 use neuromax::arch::config::GridConfig;
 use neuromax::arch::ConvCore;
-use neuromax::dataflow::{analyze, exec, ScheduleOptions};
+use neuromax::dataflow::{analyze, exec, Engine, FusedWeights, ScheduleOptions};
 use neuromax::lns::mult::thread_mult;
 use neuromax::lns::tables::requant_act;
 use neuromax::models::vgg16::vgg16;
 use neuromax::tensor::{Tensor3, Tensor4};
-use neuromax::util::bench::{blackbox, report, time};
+use neuromax::util::bench::{blackbox, time, BenchLog};
 use neuromax::util::prng::SplitMix64;
 
 fn rand_tensors(h: usize, w: usize, c: usize, k: usize, seed: u64) -> (Tensor3, Tensor4, Tensor4) {
@@ -36,6 +42,8 @@ fn rand_tensors(h: usize, w: usize, c: usize, k: usize, seed: u64) -> (Tensor3, 
 }
 
 fn main() {
+    let mut log = BenchLog::new();
+
     // L3a: raw multiply datapath
     let mut rng = SplitMix64::new(7);
     let codes: Vec<(i32, i32, i32)> = (0..1_000_000)
@@ -48,15 +56,36 @@ fn main() {
         }
         blackbox(acc);
     });
-    report("L3a thread_mult (1M)", m, 1_000_000, "mult");
+    log.report("L3a thread_mult (1M)", m, 1_000_000, "mult");
 
-    // L3b: functional conv executor — the simulator hot path
+    // L3b: the simulator hot path — reference executor vs LUT-fused engine
     let (a, wc, ws) = rand_tensors(56, 56, 32, 16, 1);
     let macs = (54 * 54 * 9 * 32 * 16) as u64;
     let m = time(5, || {
         blackbox(exec::conv2d(&a, &wc, &ws, 1));
     });
-    report("L3b exec::conv2d 56x56x32x16", m, macs, "MAC");
+    log.report("L3b exec::conv2d 56x56x32x16", m, macs, "MAC");
+
+    let fused = FusedWeights::fuse(&wc, &ws);
+    let eng1 = Engine::with_threads(1);
+    let m = time(5, || {
+        blackbox(eng1.conv2d(&a, &fused, 1));
+    });
+    log.report("L3b engine conv2d 56x56x32x16 (1T)", m, macs, "MAC");
+
+    let engn = Engine::new(Default::default());
+    let nt = engn.num_threads();
+    let m = time(5, || {
+        blackbox(engn.conv2d(&a, &fused, 1));
+    });
+    log.report(&format!("L3b engine conv2d 56x56x32x16 ({nt}T)"), m, macs, "MAC");
+
+    // L3b': stride-2 + 1x1 engine coverage (generic kernel path)
+    let m = time(5, || {
+        blackbox(eng1.conv2d(&a, &fused, 2));
+    });
+    let macs_s2 = (27 * 27 * 9 * 32 * 16) as u64;
+    log.report("L3b engine conv2d s2 (generic path, 1T)", m, macs_s2, "MAC");
 
     // L3c: requant throughput
     let psums: Vec<i32> = (0..1_000_000).map(|_| rng.range_i32(-1 << 26, 1 << 26)).collect();
@@ -67,16 +96,16 @@ fn main() {
         }
         blackbox(acc);
     });
-    report("L3c requant_act (1M)", m, 1_000_000, "psum");
+    log.report("L3c requant_act (1M)", m, 1_000_000, "psum");
 
     // L3d: hardware-faithful core
-    let (a, wc, ws) = rand_tensors(30, 30, 6, 4, 2);
+    let (a2, wc2, ws2) = rand_tensors(30, 30, 6, 4, 2);
     let macs_f = (28 * 28 * 9 * 6 * 4) as u64;
     let m = time(5, || {
         let mut core = ConvCore::default();
-        blackbox(core.conv3x3(&a, &wc, &ws, 1));
+        blackbox(core.conv3x3(&a2, &wc2, &ws2, 1));
     });
-    report("L3d faithful core 30x30x6x4", m, macs_f, "MAC");
+    log.report("L3d faithful core 30x30x6x4", m, macs_f, "MAC");
 
     // L3e: analytic scheduler over VGG16
     let g = GridConfig::neuromax();
@@ -86,9 +115,9 @@ fn main() {
             blackbox(analyze(&g, l, ScheduleOptions::default()));
         }
     });
-    report("L3e analyze VGG16 (17 layers)", m, net.layers.len() as u64, "layers");
+    log.report("L3e analyze VGG16 (17 layers)", m, net.layers.len() as u64, "layers");
 
-    // RT: the serving hot path (PJRT) — needs artifacts
+    // RT: the serving hot path (PJRT) — needs artifacts + the pjrt feature
     match neuromax::runtime::Runtime::from_default_dir() {
         Ok(mut rt) => {
             if rt.load("tinycnn").is_ok() {
@@ -103,7 +132,7 @@ fn main() {
                         );
                     }
                 });
-                report("RT  PJRT tinycnn forward (50)", m, 50, "inference");
+                log.report("RT  PJRT tinycnn forward (50)", m, 50, "inference");
                 // resident-weight session (§Perf optimization 4)
                 let mut sess =
                     neuromax::runtime::exec::TinyCnnSession::new(&mut rt, &w).unwrap();
@@ -112,13 +141,13 @@ fn main() {
                         blackbox(sess.forward(&mut rt, &input).unwrap());
                     }
                 });
-                report("RT  PJRT tinycnn session (50)", m, 50, "inference");
+                log.report("RT  PJRT tinycnn session (50)", m, 50, "inference");
             }
         }
         Err(_) => println!("bench RT  PJRT tinycnn: SKIPPED (run `make artifacts`)"),
     }
 
-    // sim-backend inference for comparison
+    // SIM: serving forward — reference, engine, batched engine
     let w = neuromax::models::tinycnn::TinyCnnWeights::random(7);
     let input = neuromax::models::tinycnn::random_input(1);
     let m = time(5, || {
@@ -126,5 +155,52 @@ fn main() {
             blackbox(neuromax::runtime::verify::tinycnn_forward_sim(&input, &w));
         }
     });
-    report("SIM tinycnn forward (50)", m, 50, "inference");
+    log.report("SIM tinycnn forward reference (50)", m, 50, "inference");
+
+    let fused_net = w.fuse();
+    let m = time(5, || {
+        for _ in 0..50 {
+            blackbox(neuromax::runtime::verify::tinycnn_forward_engine(
+                &eng1, &fused_net, &input,
+            ));
+        }
+    });
+    log.report("SIM tinycnn forward engine 1T (50)", m, 50, "inference");
+
+    // default engine on the single-request path: TinyCNN layers sit below
+    // the PAR_MIN_WORK threshold, so this should match 1T (guards against
+    // per-layer thread spawn/join regressions on the serving path)
+    let m = time(5, || {
+        for _ in 0..50 {
+            blackbox(neuromax::runtime::verify::tinycnn_forward_engine(
+                &engn, &fused_net, &input,
+            ));
+        }
+    });
+    log.report(
+        &format!("SIM tinycnn forward engine {nt}T (50)"),
+        m,
+        50,
+        "inference",
+    );
+
+    let batch: Vec<Tensor3> = (0..50).map(neuromax::models::tinycnn::random_input).collect();
+    let m = time(5, || {
+        blackbox(neuromax::runtime::verify::tinycnn_forward_batch(
+            &engn, &fused_net, &batch,
+        ));
+    });
+    log.report(
+        &format!("SIM tinycnn forward_batch {nt}T (50)"),
+        m,
+        50,
+        "inference",
+    );
+
+    // machine-readable trail for cross-PR tracking
+    let path = std::env::var("BENCH_JSON_OUT").unwrap_or_else(|_| "BENCH_hotpath.json".into());
+    match log.write_json(&path) {
+        Ok(()) => println!("\nwrote {} bench records to {path}", log.entries.len()),
+        Err(e) => eprintln!("\nfailed writing {path}: {e}"),
+    }
 }

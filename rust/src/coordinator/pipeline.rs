@@ -9,8 +9,9 @@ use anyhow::Result;
 
 use super::scheduler::NetworkSchedule;
 use crate::arch::config::GridConfig;
+use crate::dataflow::engine::{Engine, EngineOptions};
 use crate::dataflow::ScheduleOptions;
-use crate::models::tinycnn::{self, TinyCnnWeights};
+use crate::models::tinycnn::{self, FusedTinyCnn, TinyCnnWeights};
 use crate::runtime::{exec, verify, Runtime};
 use crate::tensor::Tensor3;
 
@@ -40,12 +41,30 @@ pub struct InferenceEngine {
     pub weights: TinyCnnWeights,
     pub schedule: NetworkSchedule,
     rt: Option<Runtime>,
+    sim: Option<SimPath>,
+}
+
+/// The LUT-fused, multi-threaded simulator path (`dataflow::engine`):
+/// weights are fused once at construction and shared across requests.
+struct SimPath {
+    engine: Engine,
+    fused: FusedTinyCnn,
 }
 
 impl InferenceEngine {
     /// Build an engine. `Hlo` needs the artifact directory; `Sim` is
-    /// self-contained.
+    /// self-contained. Worker threads default to one per core.
     pub fn new(backend: Backend, weight_seed: u64) -> Result<Self> {
+        Self::with_options(backend, weight_seed, EngineOptions::default())
+    }
+
+    /// Like [`InferenceEngine::new`] with explicit engine options
+    /// (`num_threads` for the sim backend's worker pool).
+    pub fn with_options(
+        backend: Backend,
+        weight_seed: u64,
+        eopt: EngineOptions,
+    ) -> Result<Self> {
         let grid = GridConfig::neuromax();
         let schedule = NetworkSchedule::plan(
             grid,
@@ -56,12 +75,15 @@ impl InferenceEngine {
             Backend::Hlo => Some(Runtime::from_default_dir()?),
             Backend::Sim => None,
         };
-        Ok(InferenceEngine {
-            backend,
-            weights: TinyCnnWeights::random(weight_seed),
-            schedule,
-            rt,
-        })
+        let weights = TinyCnnWeights::random(weight_seed);
+        let sim = match backend {
+            Backend::Sim => Some(SimPath {
+                engine: Engine::new(eopt),
+                fused: weights.fuse(),
+            }),
+            Backend::Hlo => None,
+        };
+        Ok(InferenceEngine { backend, weights, schedule, rt, sim })
     }
 
     /// Warm the compiled-executable cache (Hlo backend).
@@ -83,28 +105,48 @@ impl InferenceEngine {
                 // §Perf iteration 4.
                 exec::tinycnn_forward(self.rt.as_mut().unwrap(), input, &self.weights)?
             }
-            Backend::Sim => verify::tinycnn_forward_sim(input, &self.weights),
+            Backend::Sim => {
+                let s = self.sim.as_ref().unwrap();
+                verify::tinycnn_forward_engine(&s.engine, &s.fused, input)
+            }
         };
         let wall_us = t0.elapsed().as_micros() as u64;
+        let accel_cycles = self.schedule.total_cycles();
+        Ok(Self::package(logits, wall_us, accel_cycles))
+    }
+
+    /// Run a batch. On the sim backend the whole batch executes as one
+    /// parallel unit (`verify::tinycnn_forward_batch`: elements spread
+    /// across the engine's worker pool, bit-identical to serial
+    /// single-shot inference). The Hlo backend serializes through the
+    /// single PJRT executable, as the real single-CONV-core device would.
+    pub fn infer_batch(&mut self, inputs: &[Tensor3]) -> Result<Vec<Inference>> {
+        match self.backend {
+            Backend::Hlo => inputs.iter().map(|i| self.infer(i)).collect(),
+            Backend::Sim => {
+                let t0 = Instant::now();
+                let s = self.sim.as_ref().unwrap();
+                let all = verify::tinycnn_forward_batch(&s.engine, &s.fused, inputs);
+                // amortized per-element wall time: the batch ran as a unit
+                let wall_us =
+                    t0.elapsed().as_micros() as u64 / inputs.len().max(1) as u64;
+                let accel_cycles = self.schedule.total_cycles();
+                Ok(all
+                    .into_iter()
+                    .map(|logits| Self::package(logits, wall_us, accel_cycles))
+                    .collect())
+            }
+        }
+    }
+
+    fn package(logits: Vec<i32>, wall_us: u64, accel_cycles: u64) -> Inference {
         let class = logits
             .iter()
             .enumerate()
             .max_by_key(|(_, &v)| v)
             .map(|(i, _)| i)
             .unwrap_or(0);
-        Ok(Inference {
-            class,
-            wall_us,
-            accel_cycles: self.schedule.total_cycles(),
-            logits,
-        })
-    }
-
-    /// Run a batch (sequentially on the single CONV core, as the real
-    /// accelerator would — batching amortizes weight broadcasts, modelled
-    /// by the schedule's weight-residency flag).
-    pub fn infer_batch(&mut self, inputs: &[Tensor3]) -> Result<Vec<Inference>> {
-        inputs.iter().map(|i| self.infer(i)).collect()
+        Inference { class, wall_us, accel_cycles, logits }
     }
 
     /// Synthesize the quantized input for a request seed.
@@ -142,6 +184,25 @@ mod tests {
         let batch = e.infer_batch(&inputs).unwrap();
         for (inp, b) in inputs.iter().zip(&batch) {
             assert_eq!(e.infer(inp).unwrap().logits, b.logits);
+        }
+    }
+
+    #[test]
+    fn engine_path_matches_reference_sim_at_any_thread_count() {
+        use crate::dataflow::engine::EngineOptions;
+        let input = InferenceEngine::input_for_seed(3);
+        let reference = {
+            let w = crate::models::tinycnn::TinyCnnWeights::random(7);
+            crate::runtime::verify::tinycnn_forward_sim(&input, &w)
+        };
+        for threads in [1usize, 2, 4] {
+            let mut e = InferenceEngine::with_options(
+                Backend::Sim,
+                7,
+                EngineOptions { num_threads: threads },
+            )
+            .unwrap();
+            assert_eq!(e.infer(&input).unwrap().logits, reference, "threads={threads}");
         }
     }
 }

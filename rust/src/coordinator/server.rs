@@ -20,6 +20,7 @@ use anyhow::Result;
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::Metrics;
 use super::pipeline::{Backend, InferenceEngine};
+use crate::dataflow::engine::EngineOptions;
 
 /// A pending request routed to the engine thread.
 struct Pending {
@@ -41,6 +42,17 @@ impl Server {
     /// Bind and start the engine + acceptor threads.
     /// `addr` like "127.0.0.1:0" (0 = ephemeral port).
     pub fn start(addr: &str, backend: Backend, policy: BatchPolicy) -> Result<Server> {
+        Self::start_with_options(addr, backend, policy, EngineOptions::default())
+    }
+
+    /// Like [`Server::start`] with explicit engine options (`num_threads`
+    /// for the sim backend's worker pool).
+    pub fn start_with_options(
+        addr: &str,
+        backend: Backend,
+        policy: BatchPolicy,
+        eopt: EngineOptions,
+    ) -> Result<Server> {
         let listener = TcpListener::bind(addr)?;
         listener.set_nonblocking(true)?;
         let local = listener.local_addr()?;
@@ -49,11 +61,14 @@ impl Server {
 
         // engine thread: owns the single CONV-core engine. The PJRT client
         // is !Send (Rc internals), so the engine is constructed *inside*
-        // its thread and never crosses it.
+        // its thread and never crosses it. Each dynamic batch executes as
+        // ONE parallel unit (`infer_batch` → the engine worker pool), so
+        // batching buys real throughput instead of only amortized
+        // scheduling overhead.
         let b = batcher.clone();
         let m = metrics.clone();
         let engine_thread = thread::spawn(move || {
-            let mut engine = match InferenceEngine::new(backend, 7) {
+            let mut engine = match InferenceEngine::with_options(backend, 7, eopt) {
                 Ok(mut e) => {
                     let _ = e.warmup();
                     e
@@ -65,19 +80,39 @@ impl Server {
             };
             while let Some(batch) = b.next_batch() {
                 m.record_batch(batch.len());
-                for job in batch {
-                    let p: Pending = job.payload;
-                    let input = InferenceEngine::input_for_seed(p.seed);
-                    match engine.infer(&input) {
-                        Ok(inf) => {
+                let inputs: Vec<_> = batch
+                    .iter()
+                    .map(|job| InferenceEngine::input_for_seed(job.payload.seed))
+                    .collect();
+                match engine.infer_batch(&inputs) {
+                    Ok(infs) => {
+                        for (job, inf) in batch.into_iter().zip(infs) {
+                            let p: Pending = job.payload;
                             let total_us = p.enqueued.elapsed().as_micros() as u64;
                             m.latency.record(total_us);
                             m.responses.fetch_add(1, Ordering::Relaxed);
                             let _ = p.reply.send((inf.class, total_us));
                         }
-                        Err(_) => {
-                            m.errors.fetch_add(1, Ordering::Relaxed);
-                            let _ = p.reply.send((usize::MAX, 0));
+                    }
+                    Err(_) => {
+                        // batch execution short-circuits on the first bad
+                        // inference (Hlo path): retry per job so the good
+                        // ones still answer and only real failures error
+                        for (job, input) in batch.into_iter().zip(&inputs) {
+                            let p: Pending = job.payload;
+                            match engine.infer(input) {
+                                Ok(inf) => {
+                                    let total_us =
+                                        p.enqueued.elapsed().as_micros() as u64;
+                                    m.latency.record(total_us);
+                                    m.responses.fetch_add(1, Ordering::Relaxed);
+                                    let _ = p.reply.send((inf.class, total_us));
+                                }
+                                Err(_) => {
+                                    m.errors.fetch_add(1, Ordering::Relaxed);
+                                    let _ = p.reply.send((usize::MAX, 0));
+                                }
+                            }
                         }
                     }
                 }

@@ -1,0 +1,600 @@
+//! The multi-threaded, LUT-fused execution engine — the simulator's
+//! production hot path.
+//!
+//! `exec::conv2d` (the reference executor) recomputes the eq. 8 datapath
+//! per MAC: two zero-code branches, a 125-entry magnitude lookup with a
+//! bounds check, and a sign multiply. This engine removes all of it from
+//! the inner loop:
+//!
+//! 1. **2D product LUT** ([`PROD_LUT`]): every `(weight code, weight
+//!    sign) × activation code` product over the 6-bit code space is
+//!    precomputed once at compile time from the same `lns::mult::magnitude`
+//!    definition the reference uses. Weights fuse to a `u8` row index
+//!    ([`FusedWeights`], built once per layer), activations to a `u8`
+//!    column index, and a MAC becomes one branch-free indexed load — the
+//!    hardware's own LUT trick (paper Fig. 3a), widened to the full code
+//!    product space. The `u8` operands also shrink the streamed working
+//!    set — 8× for weights (code + sign i32 pair → one byte), 4× for
+//!    activations — so a VGG-sized 3×3×512 filter bank fits in L1.
+//! 2. **Tiled row kernels** with a specialized 3×3-stride-1 fast path
+//!    (contiguous-slice channel dot products, per-tap row slices hoisted
+//!    out of the filter loop) and a generic k×k/stride kernel.
+//! 3. **Scoped-thread worker pool** (`num_threads` configurable, zero
+//!    dependencies): output rows are chunked across workers, and
+//!    [`Engine::par_map`] parallelizes over independent work items (batch
+//!    elements in the serving path).
+//!
+//! Bit-exactness: log-domain products are exact integers and i32 wrapping
+//! addition is commutative/associative, so any summation order produces
+//! identical bits. `rust/tests/engine_equiv.rs` pins this engine against
+//! `exec::conv2d` and the hardware-faithful `arch::ConvCore` across random
+//! shapes, strides, padding and zero-density, at 1 and 4 threads.
+
+use super::pool;
+use super::schedule::{analyze, LayerPerf, ScheduleOptions};
+use crate::arch::config::GridConfig;
+use crate::arch::state_controller::pad_input;
+use crate::lns::logquant::{CODE_MAX, ZERO_CODE};
+use crate::lns::mult::magnitude;
+use crate::models::layer::{LayerDesc, Op};
+use crate::tensor::{out_dim, Tensor3, Tensor4};
+
+/// Activation-code columns per LUT row (the 6-bit code space −32..=31).
+pub const ACT_COLS: usize = 64;
+
+/// LUT rows: row 0 = zero weight (all-zero products); rows 1..=63 are
+/// positive-sign weight codes −31..=31 (`row = code + 32`); rows 65..=127
+/// the negative-sign codes (`row = code + 96`). Rows 64 and 128..=255 stay
+/// zero so any `u8` row index is in bounds without a check.
+const LUT_ROWS: usize = 256;
+
+/// The fused 2D product table: `PROD_LUT[row][col]` is the exact Q19.12
+/// product `thread_mult(w_code, w_sign, a_code)` for the weight encoded by
+/// `row` ([`fuse_row`]) and the activation encoded by `col` ([`act_col`]).
+/// 64 KiB, built at compile time from `lns::mult::magnitude` (eq. 8 with
+/// flush-to-zero and shift saturation), so it cannot drift from the
+/// reference datapath. Column 0 (zero activation) is zero in every row.
+static PROD_LUT: [[i32; ACT_COLS]; LUT_ROWS] = build_prod_lut();
+
+const fn build_prod_lut() -> [[i32; ACT_COLS]; LUT_ROWS] {
+    let mut t = [[0i32; ACT_COLS]; LUT_ROWS];
+    let mut row = 1usize;
+    while row < 128 {
+        let (code, sign) = if row < 64 {
+            (row as i32 - 32, 1)
+        } else {
+            (row as i32 - 96, -1)
+        };
+        // row 64 decodes to the negative-sign zero code and stays zero
+        if code > ZERO_CODE {
+            let mut col = 1usize;
+            while col < ACT_COLS {
+                let a_code = col as i32 - 32;
+                t[row][col] = sign * magnitude(code + a_code);
+                col += 1;
+            }
+        }
+        row += 1;
+    }
+    t
+}
+
+/// Encode one weight `(code, sign)` as a [`PROD_LUT`] row index.
+#[inline]
+pub fn fuse_row(code: i32, sign: i32) -> u8 {
+    if code <= ZERO_CODE {
+        return 0;
+    }
+    debug_assert!(code <= CODE_MAX, "weight code {code} out of range");
+    debug_assert!(sign == 1 || sign == -1, "weight sign {sign} invalid");
+    let base = (code.min(CODE_MAX) + 32) as u8; // 1..=63
+    if sign < 0 {
+        base + 64
+    } else {
+        base
+    }
+}
+
+/// Encode one activation code as a [`PROD_LUT`] column index. Codes at or
+/// below `ZERO_CODE` map to column 0 (zero product), matching
+/// `thread_mult`'s flush of zero activations.
+#[inline]
+pub fn act_col(code: i32) -> u8 {
+    (code + 32).clamp(0, (ACT_COLS - 1) as i32) as u8
+}
+
+fn act_cols(a: &Tensor3) -> Vec<u8> {
+    a.data.iter().map(|&v| act_col(v)).collect()
+}
+
+/// A weight tensor pre-fused for the engine: one `u8` LUT-row index per
+/// `[K, kh, kw, C]` element, built once per layer and shared across every
+/// request/batch element that uses the layer.
+#[derive(Clone, Debug)]
+pub struct FusedWeights {
+    pub k: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub c: usize,
+    rows: Vec<u8>,
+}
+
+impl FusedWeights {
+    /// Fuse a (codes, signs) tensor pair (same shapes as `exec` takes).
+    pub fn fuse(wc: &Tensor4, ws: &Tensor4) -> Self {
+        assert_eq!(
+            (wc.k, wc.kh, wc.kw, wc.c),
+            (ws.k, ws.kh, ws.kw, ws.c),
+            "code/sign shape mismatch"
+        );
+        let rows = wc
+            .data
+            .iter()
+            .zip(&ws.data)
+            .map(|(&code, &sign)| fuse_row(code, sign))
+            .collect();
+        FusedWeights { k: wc.k, kh: wc.kh, kw: wc.kw, c: wc.c, rows }
+    }
+
+    /// Fused footprint in bytes (8× smaller than the two-i32 code+sign
+    /// pair it replaces).
+    pub fn bytes(&self) -> usize {
+        self.rows.len()
+    }
+}
+
+/// Engine construction knobs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineOptions {
+    /// Worker threads for the row/batch parallel sections; 0 (default)
+    /// means one per available core.
+    pub num_threads: usize,
+    /// Minimum estimated MACs in a layer before row-parallelism engages;
+    /// 0 (default) means the built-in [`PAR_MIN_WORK`]. Tests set 1 to
+    /// force the parallel path on small tensors.
+    pub par_min_work: u64,
+}
+
+/// Minimum estimated MACs in a layer before the row-parallel path is
+/// worth a scoped thread spawn/join (~tens of µs): ≈0.25 ms of serial
+/// LUT work. Below this a layer runs serial; above it the spawn cost is
+/// a few percent.
+const PAR_MIN_WORK: u64 = 1 << 18;
+
+/// The LUT-fused executor. Cheap to construct and `Sync`; hold one per
+/// serving engine and share it across layers.
+#[derive(Clone, Debug)]
+pub struct Engine {
+    threads: usize,
+    par_min_work: u64,
+}
+
+impl Engine {
+    pub fn new(opt: EngineOptions) -> Self {
+        let threads = if opt.num_threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            opt.num_threads
+        };
+        let par_min_work = if opt.par_min_work == 0 {
+            PAR_MIN_WORK
+        } else {
+            opt.par_min_work
+        };
+        Engine { threads, par_min_work }
+    }
+
+    /// Engine with an explicit worker count (≥ 1 enforced).
+    pub fn with_threads(n: usize) -> Self {
+        Engine { threads: n.max(1), par_min_work: PAR_MIN_WORK }
+    }
+
+    /// Serial engine (reference ordering; used per-worker inside batches).
+    pub fn single_threaded() -> Self {
+        Self::with_threads(1)
+    }
+
+    /// Test/bench helper: parallelize regardless of layer size.
+    pub fn with_threads_forced(n: usize) -> Self {
+        Engine { threads: n.max(1), par_min_work: 1 }
+    }
+
+    pub fn num_threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Split `out` (= `ho` rows of `rowlen` i32) across the worker pool;
+    /// `body(first_row, rows)` fills each contiguous row block. `work` is
+    /// the layer's estimated MAC count: below [`PAR_MIN_WORK`] the scoped
+    /// thread spawn/join would cost more than it saves, so small layers
+    /// run serial (batch-level parallelism in [`Engine::par_map`] still
+    /// covers them on the serving path).
+    fn par_rows(
+        &self,
+        ho: usize,
+        rowlen: usize,
+        work: u64,
+        out: &mut [i32],
+        body: impl Fn(usize, &mut [i32]) + Sync,
+    ) {
+        debug_assert_eq!(out.len(), ho * rowlen);
+        let threads = self.threads.clamp(1, ho.max(1));
+        if threads <= 1 || work < self.par_min_work {
+            body(0, out);
+            return;
+        }
+        let chunk_rows = ho.div_ceil(threads);
+        std::thread::scope(|s| {
+            for (ti, chunk) in out.chunks_mut(chunk_rows * rowlen).enumerate() {
+                let b = &body;
+                s.spawn(move || b(ti * chunk_rows, chunk));
+            }
+        });
+    }
+
+    /// LUT-fused log-domain convolution: `a [H,W,C] ⊛ fused [K,kh,kw,C] →
+    /// [Ho,Wo,K]` psums (valid padding — pad the input first for SAME).
+    /// Bit-identical to `exec::conv2d` on the un-fused tensors.
+    pub fn conv2d(&self, a: &Tensor3, fw: &FusedWeights, stride: usize) -> Tensor3 {
+        assert_eq!(a.c, fw.c, "channel mismatch");
+        assert!(stride >= 1, "stride must be >= 1");
+        let cols = act_cols(a);
+        let ho = out_dim(a.h, fw.kh, stride);
+        let wo = out_dim(a.w, fw.kw, stride);
+        let mut out = Tensor3::new(ho, wo, fw.k);
+        let rowlen = wo * fw.k;
+        let work = (ho * wo * fw.k * fw.kh * fw.kw * fw.c) as u64;
+        let aw = a.w;
+        self.par_rows(ho, rowlen, work, &mut out.data, |i0, rows| {
+            conv_rows(&cols, aw, fw, stride, i0, rows, wo);
+        });
+        out
+    }
+
+    /// Depthwise convolution: `a [H,W,C]`, fused `[C,k,k,1]` → `[Ho,Wo,C]`.
+    pub fn depthwise(&self, a: &Tensor3, fw: &FusedWeights, stride: usize) -> Tensor3 {
+        assert_eq!(a.c, fw.k, "depthwise: one filter per channel");
+        assert_eq!(fw.c, 1, "depthwise weights are [C,k,k,1]");
+        let cols = act_cols(a);
+        let ho = out_dim(a.h, fw.kh, stride);
+        let wo = out_dim(a.w, fw.kw, stride);
+        let mut out = Tensor3::new(ho, wo, a.c);
+        let rowlen = wo * a.c;
+        let work = (ho * wo * a.c * fw.kh * fw.kw) as u64;
+        let (aw, c) = (a.w, a.c);
+        let (kh, kw) = (fw.kh, fw.kw);
+        let wrows = &fw.rows;
+        self.par_rows(ho, rowlen, work, &mut out.data, |i0, orows| {
+            for (ri, orow) in orows.chunks_exact_mut(rowlen).enumerate() {
+                let i = i0 + ri;
+                for j in 0..wo {
+                    for ch in 0..c {
+                        let mut acc = 0i32;
+                        for dy in 0..kh {
+                            let abase = ((i * stride + dy) * aw + j * stride) * c + ch;
+                            for dx in 0..kw {
+                                let r = wrows[(ch * kh + dy) * kw + dx];
+                                let col = cols[abase + dx * c];
+                                acc = acc.wrapping_add(
+                                    PROD_LUT[r as usize][(col & 63) as usize],
+                                );
+                            }
+                        }
+                        orow[j * c + ch] = acc;
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// Pointwise (1×1, arbitrary stride): fused `[K,1,1,C]` → `[Ho,Wo,K]`.
+    pub fn pointwise(&self, a: &Tensor3, fw: &FusedWeights, stride: usize) -> Tensor3 {
+        self.conv2d(a, fw, stride)
+    }
+
+    /// Fully connected head: flattened input (row-major HWC) vs fused
+    /// `[K,1,1,N]`.
+    pub fn fc(&self, a: &Tensor3, fw: &FusedWeights) -> Vec<i32> {
+        let n = a.len();
+        assert_eq!(fw.c, n, "fc: weight width != flattened input");
+        assert_eq!(fw.kh * fw.kw, 1, "fc weights are [K,1,1,N]");
+        let cols = act_cols(a);
+        let mut out = vec![0i32; fw.k];
+        for (k, o) in out.iter_mut().enumerate() {
+            *o = dot(&fw.rows[k * n..(k + 1) * n], &cols, 0);
+        }
+        out
+    }
+
+    /// Execute one layer on the engine (mirror of `exec::run_layer`, with
+    /// pre-fused weights): pads, dispatches by op, charges the analytic
+    /// schedule. Pool layers take `None` weights.
+    pub fn run_layer(
+        &self,
+        grid: &GridConfig,
+        l: &LayerDesc,
+        a: &Tensor3,
+        w: Option<&FusedWeights>,
+        opt: ScheduleOptions,
+    ) -> (Tensor3, LayerPerf) {
+        let perf = analyze(grid, l, opt);
+        let pad = match l.op {
+            Op::Conv { pad, .. } | Op::Depthwise { pad, .. } => pad,
+            _ => 0,
+        };
+        let ap = pad_input(a, pad);
+        let out = match l.op {
+            Op::Conv { stride, .. } => self.conv2d(&ap, w.unwrap(), stride),
+            Op::Depthwise { stride, .. } => self.depthwise(&ap, w.unwrap(), stride),
+            Op::Pointwise { stride } => self.pointwise(&ap, w.unwrap(), stride),
+            Op::Pool { k, stride, max } => {
+                assert!(max, "avg pool not modelled on the code domain");
+                pool::maxpool(&ap, k, stride)
+            }
+            Op::Fc => {
+                let v = self.fc(&ap, w.unwrap());
+                let k = v.len();
+                Tensor3::from_vec(1, 1, k, v)
+            }
+        };
+        (out, perf)
+    }
+
+    /// Map `f` over `items` on the worker pool, preserving order. Each
+    /// worker gets a single-threaded engine so nested parallel sections
+    /// don't oversubscribe — this is the batch-serving primitive.
+    pub fn par_map<T, U, F>(&self, items: &[T], f: F) -> Vec<U>
+    where
+        T: Sync,
+        U: Send,
+        F: Fn(&Engine, &T) -> U + Sync,
+    {
+        let n = items.len();
+        let threads = self.threads.min(n).max(1);
+        if threads <= 1 {
+            return items.iter().map(|t| f(self, t)).collect();
+        }
+        let single = Engine::single_threaded();
+        let chunk = n.div_ceil(threads);
+        let mut out: Vec<Option<U>> = Vec::new();
+        out.resize_with(n, || None);
+        std::thread::scope(|s| {
+            for (ic, oc) in items.chunks(chunk).zip(out.chunks_mut(chunk)) {
+                let fr = &f;
+                let er = &single;
+                s.spawn(move || {
+                    for (t, o) in ic.iter().zip(oc.iter_mut()) {
+                        *o = Some(fr(er, t));
+                    }
+                });
+            }
+        });
+        out.into_iter().map(|o| o.expect("par_map slot filled")).collect()
+    }
+}
+
+/// Branch-free fused dot product over one contiguous tap row.
+#[inline(always)]
+fn dot(w: &[u8], a: &[u8], mut acc: i32) -> i32 {
+    for (&r, &col) in w.iter().zip(a) {
+        acc = acc.wrapping_add(PROD_LUT[r as usize][(col & 63) as usize]);
+    }
+    acc
+}
+
+/// Generic k×k/stride row kernel (dispatches to the 3×3 s1 fast path).
+/// `out` covers output rows `i0..` as contiguous `[wo × K]` blocks.
+fn conv_rows(
+    cols: &[u8],
+    aw: usize,
+    fw: &FusedWeights,
+    stride: usize,
+    i0: usize,
+    out: &mut [i32],
+    wo: usize,
+) {
+    if fw.kh == 3 && fw.kw == 3 && stride == 1 {
+        conv_rows_3x3s1(cols, aw, fw, i0, out, wo);
+        return;
+    }
+    let c = fw.c;
+    let k = fw.k;
+    let wtap = fw.kw * c;
+    for (ri, orow) in out.chunks_exact_mut(wo * k).enumerate() {
+        let i = i0 + ri;
+        for dy in 0..fw.kh {
+            let abase = (i * stride + dy) * aw * c;
+            for j in 0..wo {
+                let astart = abase + j * stride * c;
+                let arow = &cols[astart..astart + wtap];
+                let obase = j * k;
+                for (kk, o) in orow[obase..obase + k].iter_mut().enumerate() {
+                    let wbase = (kk * fw.kh + dy) * wtap;
+                    *o = dot(&fw.rows[wbase..wbase + wtap], arow, *o);
+                }
+            }
+        }
+    }
+}
+
+/// 3×3 stride-1 fast path: per-tap input row slices hoisted out of the
+/// filter loop; each output element is one fused 9·C-tap accumulation.
+fn conv_rows_3x3s1(
+    cols: &[u8],
+    aw: usize,
+    fw: &FusedWeights,
+    i0: usize,
+    out: &mut [i32],
+    wo: usize,
+) {
+    let c = fw.c;
+    let k = fw.k;
+    let tap = 3 * c;
+    let rowbytes = aw * c;
+    for (ri, orow) in out.chunks_exact_mut(wo * k).enumerate() {
+        let i = i0 + ri;
+        let r0 = &cols[i * rowbytes..(i + 1) * rowbytes];
+        let r1 = &cols[(i + 1) * rowbytes..(i + 2) * rowbytes];
+        let r2 = &cols[(i + 2) * rowbytes..(i + 3) * rowbytes];
+        for j in 0..wo {
+            let a0 = &r0[j * c..j * c + tap];
+            let a1 = &r1[j * c..j * c + tap];
+            let a2 = &r2[j * c..j * c + tap];
+            for (kk, o) in orow[j * k..(j + 1) * k].iter_mut().enumerate() {
+                let w = &fw.rows[kk * 3 * tap..(kk + 1) * 3 * tap];
+                let mut acc = dot(&w[..tap], a0, *o);
+                acc = dot(&w[tap..2 * tap], a1, acc);
+                *o = dot(&w[2 * tap..], a2, acc);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::exec;
+    use crate::lns::mult::thread_mult;
+    use crate::util::prng::SplitMix64;
+
+    fn rand_t3(rng: &mut SplitMix64, h: usize, w: usize, c: usize, pz: f64) -> Tensor3 {
+        let mut t = Tensor3::new(h, w, c);
+        for v in t.data.iter_mut() {
+            *v = if rng.bool(pz) { ZERO_CODE } else { rng.range_i32(-12, 8) };
+        }
+        t
+    }
+
+    fn rand_t4(
+        rng: &mut SplitMix64,
+        k: usize,
+        kh: usize,
+        kw: usize,
+        c: usize,
+        pz: f64,
+    ) -> (Tensor4, Tensor4) {
+        let mut wc = Tensor4::new(k, kh, kw, c);
+        let mut ws = Tensor4::new(k, kh, kw, c);
+        for v in wc.data.iter_mut() {
+            *v = if rng.bool(pz) { ZERO_CODE } else { rng.range_i32(-12, 8) };
+        }
+        for v in ws.data.iter_mut() {
+            *v = rng.sign();
+        }
+        (wc, ws)
+    }
+
+    #[test]
+    fn lut_matches_thread_mult_exhaustively() {
+        // every (w_code, sign, a_code) triple: fused load == thread_mult
+        for w in ZERO_CODE..=CODE_MAX {
+            for a in ZERO_CODE..=CODE_MAX {
+                for s in [1, -1] {
+                    let got = PROD_LUT[fuse_row(w, s) as usize][act_col(a) as usize];
+                    assert_eq!(got, thread_mult(w, s, a), "w={w} s={s} a={a}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_rows_and_columns_absorb() {
+        // any row at column 0, and row 0 / row 64 / padding rows anywhere,
+        // must produce 0
+        for row in 0..LUT_ROWS {
+            assert_eq!(PROD_LUT[row][0], 0, "row {row} col 0");
+        }
+        for col in 0..ACT_COLS {
+            assert_eq!(PROD_LUT[0][col], 0, "row 0 col {col}");
+            assert_eq!(PROD_LUT[64][col], 0, "row 64 col {col}");
+            assert_eq!(PROD_LUT[200][col], 0, "padding row col {col}");
+        }
+    }
+
+    #[test]
+    fn conv_matches_exec_across_kernels_and_threads() {
+        let mut rng = SplitMix64::new(42);
+        for (k, kh, kw, stride) in
+            [(3usize, 3usize, 3usize, 1usize), (3, 3, 3, 2), (4, 1, 1, 1), (2, 5, 5, 1), (2, 4, 4, 2)]
+        {
+            let a = rand_t3(&mut rng, 13, 11, 5, 0.1);
+            let (wc, ws) = rand_t4(&mut rng, k, kh, kw, 5, 0.1);
+            let want = exec::conv2d(&a, &wc, &ws, stride);
+            let fw = FusedWeights::fuse(&wc, &ws);
+            for threads in [1usize, 3] {
+                let eng = Engine::with_threads_forced(threads);
+                let got = eng.conv2d(&a, &fw, stride);
+                assert_eq!(got, want, "k={k} kh={kh} stride={stride} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn depthwise_and_fc_match_exec() {
+        let mut rng = SplitMix64::new(7);
+        let a = rand_t3(&mut rng, 9, 8, 4, 0.1);
+        let (wc, ws) = rand_t4(&mut rng, 4, 3, 3, 1, 0.1);
+        let fw = FusedWeights::fuse(&wc, &ws);
+        let eng = Engine::with_threads_forced(2);
+        assert_eq!(eng.depthwise(&a, &fw, 1), exec::depthwise(&a, &wc, &ws, 1));
+
+        let flat = Tensor3::from_vec(1, 1, a.len(), a.data.clone());
+        let (fc_c, fc_s) = rand_t4(&mut rng, 6, 1, 1, flat.len(), 0.1);
+        let ffc = FusedWeights::fuse(&fc_c, &fc_s);
+        assert_eq!(eng.fc(&flat, &ffc), exec::fc(&flat, &fc_c, &fc_s));
+    }
+
+    #[test]
+    fn zero_dense_tensors_match_exec() {
+        let mut rng = SplitMix64::new(9);
+        let a = rand_t3(&mut rng, 10, 10, 3, 0.7);
+        let (wc, ws) = rand_t4(&mut rng, 2, 3, 3, 3, 0.7);
+        let fw = FusedWeights::fuse(&wc, &ws);
+        let eng = Engine::with_threads_forced(4);
+        assert_eq!(eng.conv2d(&a, &fw, 1), exec::conv2d(&a, &wc, &ws, 1));
+    }
+
+    #[test]
+    fn run_layer_pads_like_exec() {
+        let grid = GridConfig::neuromax();
+        let l = LayerDesc::conv("c", 3, 1, 1, 8, 8, 3, 4);
+        let mut rng = SplitMix64::new(10);
+        let a = rand_t3(&mut rng, 8, 8, 3, 0.1);
+        let (wc, ws) = rand_t4(&mut rng, 4, 3, 3, 3, 0.1);
+        let (want, perf_want) = exec::run_layer(
+            &grid, &l, &a, Some(&wc), Some(&ws), ScheduleOptions::default());
+        let fw = FusedWeights::fuse(&wc, &ws);
+        let eng = Engine::with_threads_forced(2);
+        let (got, perf_got) =
+            eng.run_layer(&grid, &l, &a, Some(&fw), ScheduleOptions::default());
+        assert_eq!(got, want);
+        assert_eq!(perf_got.cycles, perf_want.cycles);
+    }
+
+    #[test]
+    fn par_map_preserves_order_and_runs_all() {
+        let eng = Engine::with_threads(3);
+        let items: Vec<usize> = (0..17).collect();
+        let out = eng.par_map(&items, |e, &x| {
+            assert_eq!(e.num_threads(), 1);
+            x * x
+        });
+        assert_eq!(out, items.iter().map(|&x| x * x).collect::<Vec<_>>());
+        // empty input
+        let empty: Vec<usize> = vec![];
+        assert!(eng.par_map(&empty, |_, &x| x).is_empty());
+    }
+
+    #[test]
+    fn fused_weights_shrink_8x() {
+        let mut rng = SplitMix64::new(3);
+        let (wc, ws) = rand_t4(&mut rng, 8, 3, 3, 16, 0.1);
+        let fw = FusedWeights::fuse(&wc, &ws);
+        assert_eq!(fw.bytes(), wc.len());
+        // one u8 replaces the code i32 + sign i32 pair
+        let unfused =
+            std::mem::size_of_val(&wc.data[..]) + std::mem::size_of_val(&ws.data[..]);
+        assert_eq!(fw.bytes() * 8, unfused);
+    }
+}

@@ -4,7 +4,12 @@
 //! Log-domain products are exact integers and i32-wrapping addition is
 //! commutative, so the hardware's tile order and the direct loop below
 //! produce identical bits — `arch::conv_core` + the shared python vectors
-//! prove it. This is the simulator's hot path (see benches/perf_hotpath).
+//! prove it.
+//!
+//! This module is the *reference* executor. The serving hot path is
+//! `dataflow::engine` (LUT-fused, multi-threaded, 5–20× faster), which is
+//! pinned bit-for-bit against these loops by `rust/tests/engine_equiv.rs`
+//! and benchmarked side-by-side in `benches/perf_hotpath.rs`.
 
 use super::pool;
 use super::schedule::{analyze, LayerPerf, ScheduleOptions};
@@ -176,7 +181,7 @@ mod tests {
     fn conv_matches_hardware_core() {
         // the fast path and the faithful core must agree bit-for-bit
         let mut rng = SplitMix64::new(42);
-        let a = rand_t3(&mut rng, 13, 9, 5, );
+        let a = rand_t3(&mut rng, 13, 9, 5);
         let (wc, ws) = rand_t4(&mut rng, 3, 3, 3, 5);
         let fast = conv2d(&a, &wc, &ws, 1);
         let mut core = crate::arch::ConvCore::default();

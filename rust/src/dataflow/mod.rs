@@ -8,9 +8,11 @@
 //! arithmetic; `arch::conv_core` is the hardware-faithful (slow) twin used
 //! to validate both.
 
+pub mod engine;
 pub mod exec;
 pub mod pool;
 pub mod schedule;
 pub mod tile;
 
+pub use engine::{Engine, EngineOptions, FusedWeights};
 pub use schedule::{analyze, LayerPerf, ScheduleOptions};

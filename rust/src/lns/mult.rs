@@ -38,6 +38,28 @@ pub fn thread_mult_spec(w_code: i32, w_sign: i32, a_code: i32) -> i32 {
     w_sign * mag
 }
 
+/// Product magnitude for an exponent sum `g = w_code + a_code` (eq. 8,
+/// flush/saturate included). Const-evaluable: both [`MAG_TABLE`] here and
+/// the engine's 2D product LUT (`dataflow::engine::PROD_LUT`) are built
+/// from this single definition, so the two hot paths cannot drift.
+pub const fn magnitude(g: i32) -> i32 {
+    // g = 2i + f with f ∈ {0,1}: arithmetic shift right == floor division.
+    let mut i = g >> 1;
+    let f = (g & 1) as usize;
+    if i < UNDERFLOW_SHIFT {
+        return 0;
+    }
+    if i > OVERFLOW_SHIFT {
+        i = OVERFLOW_SHIFT;
+    }
+    let lut = FRAC_LUT[f];
+    if i >= 0 {
+        lut << i
+    } else {
+        lut >> (-i)
+    }
+}
+
 /// Precomputed magnitude table over all 125 possible exponent sums
 /// `g = w_code + a_code ∈ [-62, 62]` — the simulator's hot-path form of
 /// eq. 8 (§Perf optimization 1; the hardware's own LUT trick, widened).
@@ -46,16 +68,7 @@ static MAG_TABLE: [i32; 125] = {
     let mut t = [0i32; 125];
     let mut idx = 0usize;
     while idx < 125 {
-        let g = idx as i32 - 62;
-        let mut i = g >> 1;
-        let f = (g & 1) as usize;
-        if i >= UNDERFLOW_SHIFT {
-            if i > OVERFLOW_SHIFT {
-                i = OVERFLOW_SHIFT;
-            }
-            let lut = FRAC_LUT[f];
-            t[idx] = if i >= 0 { lut << i } else { lut >> (-i) };
-        }
+        t[idx] = magnitude(idx as i32 - 62);
         idx += 1;
     }
     t

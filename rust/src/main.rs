@@ -18,7 +18,7 @@ use neuromax::coordinator::pipeline::{Backend, InferenceEngine};
 use neuromax::coordinator::reports;
 use neuromax::coordinator::server::Server;
 use neuromax::coordinator::NetworkSchedule;
-use neuromax::dataflow::ScheduleOptions;
+use neuromax::dataflow::{EngineOptions, ScheduleOptions};
 use neuromax::models::workload;
 use neuromax::runtime::{verify, Runtime};
 use neuromax::sim::stats::simulate_network;
@@ -48,9 +48,10 @@ fn main() -> Result<()> {
                  \n\
                  report  <fig1|fig17|table1|fig18|fig19|fig20|table2|table3|sec5|all>\n\
                  simulate <vgg16|mobilenet|resnet34|squeezenet|alexnet|tinycnn> [--packing]\n\
-                 infer   [--backend hlo|sim] [--count N] [--seed S]\n\
+                 infer   [--backend hlo|sim] [--count N] [--seed S] [--threads N]\n\
                  verify  [--cases N] [--seed S]\n\
                  serve   [--addr HOST:PORT] [--backend hlo|sim] [--secs N] [--batch N]\n\
+                         [--threads N]   (0 = one worker per core)\n\
                  sweep\n\
                  trace   [--stride 1|2] [--cycles N]   (§5.1 pipeline waveform)"
             );
@@ -152,7 +153,9 @@ fn cmd_infer(args: &[String]) -> Result<()> {
     };
     let count: usize = opt(args, "--count").and_then(|v| v.parse().ok()).unwrap_or(16);
     let seed: u64 = opt(args, "--seed").and_then(|v| v.parse().ok()).unwrap_or(1);
-    let mut engine = InferenceEngine::new(backend, 7)?;
+    let threads: usize = opt(args, "--threads").and_then(|v| v.parse().ok()).unwrap_or(0);
+    let mut engine =
+        InferenceEngine::with_options(backend, 7, EngineOptions { num_threads: threads })?;
     engine.warmup()?;
     let t0 = Instant::now();
     let mut classes = vec![0usize; 10];
@@ -205,10 +208,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     };
     let secs: u64 = opt(args, "--secs").and_then(|v| v.parse().ok()).unwrap_or(30);
     let max_batch: usize = opt(args, "--batch").and_then(|v| v.parse().ok()).unwrap_or(8);
-    let mut srv = Server::start(
+    let threads: usize = opt(args, "--threads").and_then(|v| v.parse().ok()).unwrap_or(0);
+    let mut srv = Server::start_with_options(
         &addr,
         backend,
         BatchPolicy { max_batch, max_wait: Duration::from_millis(2) },
+        EngineOptions { num_threads: threads },
     )?;
     println!("serving TinyCNN ({backend:?}) on {} for {secs}s ...", srv.addr);
     srv.serve_until(Some(Instant::now() + Duration::from_secs(secs)))?;

@@ -4,6 +4,7 @@
 //! pipeline and the sim-vs-HLO verification.
 
 use super::layer::{LayerDesc, Network};
+use crate::dataflow::engine::FusedWeights;
 use crate::lns::logquant::ZERO_CODE;
 use crate::tensor::{Tensor3, Tensor4};
 use crate::util::prng::SplitMix64;
@@ -68,6 +69,28 @@ impl TinyCnnWeights {
             signs.push(ts);
         }
         TinyCnnWeights { codes, signs }
+    }
+}
+
+/// TinyCNN weights pre-fused for `dataflow::engine` (one LUT-row index
+/// tensor per layer, in forward order): built once, shared by every
+/// request/batch element on the sim serving path.
+#[derive(Clone, Debug)]
+pub struct FusedTinyCnn {
+    pub layers: Vec<FusedWeights>,
+}
+
+impl TinyCnnWeights {
+    /// Fuse every layer's (codes, signs) pair into engine row indices.
+    pub fn fuse(&self) -> FusedTinyCnn {
+        FusedTinyCnn {
+            layers: self
+                .codes
+                .iter()
+                .zip(&self.signs)
+                .map(|(c, s)| FusedWeights::fuse(c, s))
+                .collect(),
+        }
     }
 }
 

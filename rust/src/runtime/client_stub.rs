@@ -1,0 +1,61 @@
+//! Sim-only fallback for the PJRT runtime (compiled when the `pjrt`
+//! feature is off — the default, since the `xla` crate needs a networked
+//! build). Mirrors the API surface of `client.rs`: manifest handling works
+//! (it is plain text), every execution entry point fails with a clear
+//! error. `Backend::Sim` never touches this module.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::artifacts::{ArtifactManifest, ArtifactSpec};
+use super::NO_PJRT_MSG;
+
+/// Stub stand-in for a compiled artifact (never constructed: `load`
+/// fails first).
+pub struct CompiledArtifact {
+    pub spec: ArtifactSpec,
+}
+
+impl CompiledArtifact {
+    pub fn run_i32(&self, _inputs: &[Vec<i32>]) -> Result<Vec<Vec<i32>>> {
+        bail!(NO_PJRT_MSG)
+    }
+}
+
+/// The runtime stub: manifest only, no PJRT client.
+pub struct Runtime {
+    manifest: ArtifactManifest,
+}
+
+impl Runtime {
+    /// Create from an artifact directory (manifest parsing still works).
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = ArtifactManifest::load(&dir)?;
+        Ok(Runtime { manifest })
+    }
+
+    /// Create from the default artifact dir ($NEUROMAX_ARTIFACTS or ./artifacts).
+    pub fn from_default_dir() -> Result<Self> {
+        Self::new(ArtifactManifest::default_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        "sim-only (pjrt feature off)".to_string()
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    /// Always fails: compiling artifacts needs the PJRT client.
+    pub fn load(&mut self, name: &str) -> Result<&CompiledArtifact> {
+        let _ = self.manifest.get(name)?;
+        bail!("artifact `{name}`: {NO_PJRT_MSG}")
+    }
+
+    pub fn run_i32(&mut self, name: &str, _inputs: &[Vec<i32>]) -> Result<Vec<Vec<i32>>> {
+        let _ = self.manifest.get(name)?;
+        bail!("artifact `{name}`: {NO_PJRT_MSG}")
+    }
+}

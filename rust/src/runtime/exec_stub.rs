@@ -1,0 +1,64 @@
+//! Sim-only fallback for the typed PJRT execution helpers (`pjrt` feature
+//! off). Same signatures as `exec.rs`; argument marshalling still works
+//! (it is xla-free), execution fails with a clear error so callers fall
+//! back to `Backend::Sim`.
+
+use anyhow::{bail, Result};
+
+use super::client::Runtime;
+use super::NO_PJRT_MSG;
+use crate::models::tinycnn::TinyCnnWeights;
+use crate::tensor::{Tensor3, Tensor4};
+
+/// Flatten weight tensors into the (codes, signs) argument interleaving
+/// the `tinycnn` artifact expects: a, w1c, w1s, w2c, w2s, w3c, w3s, w4c,
+/// w4s, wfc, wfs.
+pub fn tinycnn_args(a: &Tensor3, w: &TinyCnnWeights) -> Vec<Vec<i32>> {
+    let mut args = Vec::with_capacity(11);
+    args.push(a.data.clone());
+    for (c, s) in w.codes.iter().zip(&w.signs) {
+        args.push(c.data.clone());
+        args.push(s.data.clone());
+    }
+    args
+}
+
+/// Stub: the TinyCNN forward needs the PJRT executable.
+pub fn tinycnn_forward(
+    _rt: &mut Runtime,
+    _a: &Tensor3,
+    _w: &TinyCnnWeights,
+) -> Result<Vec<i32>> {
+    bail!("tinycnn forward: {NO_PJRT_MSG}")
+}
+
+/// Stub serving session (construction fails; `Backend::Sim` is the
+/// offline serving path).
+pub struct TinyCnnSession {
+    _private: (),
+}
+
+impl TinyCnnSession {
+    pub fn new(_rt: &mut Runtime, _w: &TinyCnnWeights) -> Result<Self> {
+        bail!("tinycnn session: {NO_PJRT_MSG}")
+    }
+
+    pub fn forward(&mut self, _rt: &mut Runtime, _a: &Tensor3) -> Result<Vec<i32>> {
+        bail!("tinycnn session: {NO_PJRT_MSG}")
+    }
+}
+
+/// Stub: single-layer 3×3 artifact execution.
+pub fn conv3x3_s1(
+    _rt: &mut Runtime,
+    _a: &Tensor3,
+    _wc: &Tensor4,
+    _ws: &Tensor4,
+) -> Result<Tensor3> {
+    bail!("conv3x3_s1: {NO_PJRT_MSG}")
+}
+
+/// Stub: post-processing artifact execution.
+pub fn postprocess(_rt: &mut Runtime, _psums: &Tensor3) -> Result<Tensor3> {
+    bail!("postprocess: {NO_PJRT_MSG}")
+}

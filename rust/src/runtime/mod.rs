@@ -5,11 +5,29 @@
 //! Interchange is HLO *text*: jax ≥ 0.5 serializes HloModuleProto with
 //! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The `xla` dependency is gated behind the (default-off) `pjrt` feature:
+//! without it, `client`/`exec` are API-identical stubs whose execution
+//! entry points fail with a clear error, and the simulator
+//! (`Backend::Sim`, `dataflow::engine`) is the serving path.
 
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
 pub mod client;
+#[cfg(not(feature = "pjrt"))]
+#[path = "client_stub.rs"]
+pub mod client;
+#[cfg(feature = "pjrt")]
+pub mod exec;
+#[cfg(not(feature = "pjrt"))]
+#[path = "exec_stub.rs"]
 pub mod exec;
 pub mod verify;
+
+#[cfg(not(feature = "pjrt"))]
+pub(crate) const NO_PJRT_MSG: &str =
+    "PJRT support not compiled in (enable the `pjrt` feature and add the \
+     `xla` dependency — see rust/Cargo.toml); use the sim backend instead";
 
 pub use artifacts::{ArtifactManifest, ArtifactSpec};
 pub use client::Runtime;

@@ -7,8 +7,9 @@ use anyhow::{ensure, Result};
 
 use super::client::Runtime;
 use super::exec;
+use crate::dataflow::engine::Engine;
 use crate::dataflow::exec as fexec;
-use crate::models::tinycnn::{random_input, TinyCnnWeights};
+use crate::models::tinycnn::{random_input, FusedTinyCnn, TinyCnnWeights};
 use crate::tensor::{Tensor3, Tensor4};
 
 /// The rust-side functional TinyCNN forward (mirrors
@@ -25,6 +26,35 @@ pub fn tinycnn_forward_sim(a: &Tensor3, w: &TinyCnnWeights) -> Vec<i32> {
     let x = fexec::requant(&fexec::conv2d(&x, &w.codes[3], &w.signs[3], 1));
     // fc head: 512 -> 10 (raw psums)
     fexec::fc(&x, &w.codes[4], &w.signs[4])
+}
+
+/// The engine-backed TinyCNN forward (the serving hot path): identical
+/// network chain as [`tinycnn_forward_sim`], computed by the LUT-fused,
+/// multi-threaded `dataflow::engine` on pre-fused weights. Bit-identical
+/// to the reference (pinned by tests here and in
+/// `rust/tests/engine_equiv.rs`).
+pub fn tinycnn_forward_engine(eng: &Engine, w: &FusedTinyCnn, a: &Tensor3) -> Vec<i32> {
+    // conv1: 16×16×4 -> 14×14×8
+    let x = fexec::requant(&eng.conv2d(a, &w.layers[0], 1));
+    // conv2: 14×14×8 -> 6×6×16 (s2)
+    let x = fexec::requant(&eng.conv2d(&x, &w.layers[1], 2));
+    // conv3 (1×1): 6×6×16 -> 6×6×24
+    let x = fexec::requant(&eng.pointwise(&x, &w.layers[2], 1));
+    // conv4: 6×6×24 -> 4×4×32
+    let x = fexec::requant(&eng.conv2d(&x, &w.layers[3], 1));
+    // fc head: 512 -> 10 (raw psums)
+    eng.fc(&x, &w.layers[4])
+}
+
+/// Batched engine forward: the whole batch executes as one parallel unit
+/// (batch elements spread across the worker pool, each on a serial
+/// engine), preserving per-element bit-exactness and input order.
+pub fn tinycnn_forward_batch(
+    eng: &Engine,
+    w: &FusedTinyCnn,
+    inputs: &[Tensor3],
+) -> Vec<Vec<i32>> {
+    eng.par_map(inputs, |e, a| tinycnn_forward_engine(e, w, a))
 }
 
 /// Verification outcome.
@@ -106,5 +136,35 @@ mod tests {
         let a = random_input(3);
         let w = TinyCnnWeights::random(4);
         assert_eq!(tinycnn_forward_sim(&a, &w).len(), 10);
+    }
+
+    #[test]
+    fn engine_forward_matches_reference_sim() {
+        let w = TinyCnnWeights::random(5);
+        let fused = w.fuse();
+        for threads in [1usize, 4] {
+            let eng = Engine::with_threads(threads);
+            for seed in 0..4 {
+                let a = random_input(seed);
+                assert_eq!(
+                    tinycnn_forward_engine(&eng, &fused, &a),
+                    tinycnn_forward_sim(&a, &w),
+                    "threads={threads} seed={seed}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batch_forward_matches_singles() {
+        let w = TinyCnnWeights::random(6);
+        let fused = w.fuse();
+        let eng = Engine::with_threads(4);
+        let inputs: Vec<Tensor3> = (0..7).map(random_input).collect();
+        let batch = tinycnn_forward_batch(&eng, &fused, &inputs);
+        assert_eq!(batch.len(), inputs.len());
+        for (a, got) in inputs.iter().zip(&batch) {
+            assert_eq!(got, &tinycnn_forward_engine(&eng, &fused, a));
+        }
     }
 }

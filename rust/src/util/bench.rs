@@ -55,6 +55,102 @@ pub fn blackbox<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// One recorded bench result (see [`BenchLog`]).
+#[derive(Clone, Debug)]
+pub struct BenchEntry {
+    pub name: String,
+    pub median_ns: u128,
+    pub min_ns: u128,
+    pub max_ns: u128,
+    pub units: u64,
+    pub unit: String,
+}
+
+impl BenchEntry {
+    /// Median nanoseconds per unit of work.
+    pub fn ns_per_unit(&self) -> f64 {
+        self.median_ns as f64 / self.units.max(1) as f64
+    }
+
+    /// Units of work per second at the median.
+    pub fn units_per_s(&self) -> f64 {
+        if self.median_ns == 0 {
+            return 0.0;
+        }
+        self.units as f64 * 1e9 / self.median_ns as f64
+    }
+}
+
+/// Machine-readable bench sink: records every reported measurement and
+/// writes a `BENCH_*.json` file (hand-rolled JSON — serde is unavailable
+/// offline) so the perf trajectory can be tracked across PRs.
+#[derive(Default)]
+pub struct BenchLog {
+    pub entries: Vec<BenchEntry>,
+}
+
+impl BenchLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Print the standard bench line AND record it for the JSON report.
+    pub fn report(&mut self, name: &str, m: Measurement, units: u64, unit: &str) {
+        report(name, m, units, unit);
+        self.entries.push(BenchEntry {
+            name: name.to_string(),
+            median_ns: m.median.as_nanos(),
+            min_ns: m.min.as_nanos(),
+            max_ns: m.max.as_nanos(),
+            units,
+            unit: unit.to_string(),
+        });
+    }
+
+    /// Serialize to JSON text (schema `neuromax-bench/v1`).
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n  \"schema\": \"neuromax-bench/v1\",\n  \"benches\": [");
+        for (i, e) in self.entries.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "\n    {{\"name\": \"{}\", \"median_ns\": {}, \"min_ns\": {}, \
+                 \"max_ns\": {}, \"units\": {}, \"unit\": \"{}\", \
+                 \"ns_per_unit\": {:.4}, \"units_per_s\": {:.1}}}",
+                json_escape(&e.name),
+                e.median_ns,
+                e.min_ns,
+                e.max_ns,
+                e.units,
+                json_escape(&e.unit),
+                e.ns_per_unit(),
+                e.units_per_s(),
+            ));
+        }
+        s.push_str("\n  ]\n}\n");
+        s
+    }
+
+    /// Write the JSON report to `path`.
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -82,5 +178,39 @@ mod tests {
             runs: 3,
         };
         assert_eq!(m.per_iter(1000), Duration::from_micros(1));
+    }
+
+    #[test]
+    fn bench_log_serializes_valid_json() {
+        let mut log = BenchLog::new();
+        let m = Measurement {
+            median: Duration::from_nanos(1500),
+            min: Duration::from_nanos(1000),
+            max: Duration::from_nanos(2000),
+            runs: 3,
+        };
+        log.report("L3b \"quoted\" name", m, 3, "MAC");
+        let j = log.to_json();
+        assert!(j.contains("\"schema\": \"neuromax-bench/v1\""), "{j}");
+        assert!(j.contains("\\\"quoted\\\""), "{j}");
+        assert!(j.contains("\"median_ns\": 1500"), "{j}");
+        assert!(j.contains("\"ns_per_unit\": 500.0000"), "{j}");
+        // balanced braces/brackets (cheap well-formedness check)
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
+    fn bench_entry_rates() {
+        let e = BenchEntry {
+            name: "x".into(),
+            median_ns: 2_000_000_000,
+            min_ns: 1,
+            max_ns: 3,
+            units: 4,
+            unit: "op".into(),
+        };
+        assert!((e.ns_per_unit() - 5e8).abs() < 1e-6);
+        assert!((e.units_per_s() - 2.0).abs() < 1e-9);
     }
 }

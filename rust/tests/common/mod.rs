@@ -5,9 +5,14 @@ use std::path::PathBuf;
 
 use neuromax::tensor::{Tensor3, Tensor4};
 
-/// The artifacts directory, or `None` if `make artifacts` hasn't run
-/// (tests that need vectors skip gracefully with a loud note).
+/// The artifacts directory, or `None` if `make artifacts` hasn't run or
+/// the PJRT runtime isn't compiled in (tests that need the executables
+/// skip gracefully with a loud note).
 pub fn artifacts_dir() -> Option<PathBuf> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("SKIP: pjrt feature off (stub runtime cannot execute artifacts)");
+        return None;
+    }
     let dir = std::env::var_os("NEUROMAX_ARTIFACTS")
         .map(PathBuf::from)
         .unwrap_or_else(|| {

@@ -1,0 +1,222 @@
+//! Engine bit-exactness properties: the LUT-fused multi-threaded engine
+//! (`dataflow::engine`) must agree bit-for-bit with the reference
+//! executor (`dataflow::exec`) and, for 3×3 layers, with the
+//! hardware-faithful `arch::ConvCore` — across random shapes, strides,
+//! padding, zero-code density, and worker-thread counts.
+
+use neuromax::arch::config::GridConfig;
+use neuromax::arch::ConvCore;
+use neuromax::dataflow::{exec, Engine, FusedWeights, ScheduleOptions};
+use neuromax::lns::logquant::ZERO_CODE;
+use neuromax::models::layer::LayerDesc;
+use neuromax::models::tinycnn::TinyCnnWeights;
+use neuromax::runtime::verify;
+use neuromax::tensor::{Tensor3, Tensor4};
+use neuromax::util::prng::SplitMix64;
+use neuromax::util::proptest::check;
+
+const THREADS: [usize; 2] = [1, 4];
+
+fn rand_t3(rng: &mut SplitMix64, h: usize, w: usize, c: usize, pz: f64) -> Tensor3 {
+    let mut t = Tensor3::new(h, w, c);
+    for v in t.data.iter_mut() {
+        *v = if rng.bool(pz) { ZERO_CODE } else { rng.range_i32(-12, 8) };
+    }
+    t
+}
+
+fn rand_t4(
+    rng: &mut SplitMix64,
+    k: usize,
+    kh: usize,
+    kw: usize,
+    c: usize,
+    pz: f64,
+) -> (Tensor4, Tensor4) {
+    let mut wc = Tensor4::new(k, kh, kw, c);
+    let mut ws = Tensor4::new(k, kh, kw, c);
+    for v in wc.data.iter_mut() {
+        *v = if rng.bool(pz) { ZERO_CODE } else { rng.range_i32(-12, 8) };
+    }
+    for v in ws.data.iter_mut() {
+        *v = rng.sign();
+    }
+    (wc, ws)
+}
+
+#[test]
+fn conv_3x3_engine_equals_exec_and_core() {
+    check("engine-3x3-vs-exec-vs-core", 20, |rng| {
+        let stride = if rng.bool(0.5) { 1 } else { 2 };
+        let h = 3 + stride + rng.below(20) as usize;
+        let w = 3 + stride + rng.below(14) as usize;
+        let c = 1 + rng.below(9) as usize;
+        let k = 1 + rng.below(4) as usize;
+        let pz = if rng.bool(0.3) { 0.6 } else { 0.1 }; // mix in ZERO-dense cases
+        let a = rand_t3(rng, h, w, c, pz);
+        let (wc, ws) = rand_t4(rng, k, 3, 3, c, pz);
+
+        let want = exec::conv2d(&a, &wc, &ws, stride);
+        let fused = FusedWeights::fuse(&wc, &ws);
+        for threads in THREADS {
+            let got = Engine::with_threads_forced(threads).conv2d(&a, &fused, stride);
+            neuromax::prop_assert!(
+                got == want,
+                "engine != exec at h={h} w={w} c={c} k={k} s={stride} pz={pz} t={threads}"
+            );
+        }
+        let mut core = ConvCore::default();
+        let (faithful, _) = core.conv3x3(&a, &wc, &ws, stride);
+        neuromax::prop_assert!(
+            want == faithful,
+            "exec != faithful core at h={h} w={w} c={c} k={k} s={stride}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn conv_generic_kernels_engine_equals_exec() {
+    check("engine-kxk-vs-exec", 20, |rng| {
+        let kk = [1usize, 2, 4, 5, 7][rng.below(5) as usize];
+        let stride = 1 + rng.below(2) as usize;
+        let h = kk + stride + rng.below(16) as usize;
+        let w = kk + stride + rng.below(12) as usize;
+        let c = 1 + rng.below(8) as usize;
+        let k = 1 + rng.below(5) as usize;
+        let a = rand_t3(rng, h, w, c, 0.15);
+        let (wc, ws) = rand_t4(rng, k, kk, kk, c, 0.15);
+
+        let want = exec::conv2d(&a, &wc, &ws, stride);
+        let fused = FusedWeights::fuse(&wc, &ws);
+        for threads in THREADS {
+            let got = Engine::with_threads_forced(threads).conv2d(&a, &fused, stride);
+            neuromax::prop_assert!(
+                got == want,
+                "engine != exec at kk={kk} h={h} w={w} c={c} k={k} s={stride} t={threads}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn depthwise_engine_equals_exec() {
+    check("engine-dw-vs-exec", 15, |rng| {
+        let stride = 1 + rng.below(2) as usize;
+        let h = 4 + rng.below(16) as usize;
+        let w = 4 + rng.below(12) as usize;
+        let c = 1 + rng.below(10) as usize;
+        let a = rand_t3(rng, h, w, c, 0.2);
+        let (wc, ws) = rand_t4(rng, c, 3, 3, 1, 0.2);
+
+        let want = exec::depthwise(&a, &wc, &ws, stride);
+        let fused = FusedWeights::fuse(&wc, &ws);
+        for threads in THREADS {
+            let got = Engine::with_threads_forced(threads).depthwise(&a, &fused, stride);
+            neuromax::prop_assert!(
+                got == want,
+                "depthwise engine != exec at h={h} w={w} c={c} s={stride} t={threads}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fc_and_pointwise_engine_equal_exec() {
+    check("engine-fc-pw-vs-exec", 15, |rng| {
+        let h = 2 + rng.below(6) as usize;
+        let w = 2 + rng.below(6) as usize;
+        let c = 1 + rng.below(12) as usize;
+        let k = 1 + rng.below(12) as usize;
+        let a = rand_t3(rng, h, w, c, 0.15);
+
+        let (pc, ps) = rand_t4(rng, k, 1, 1, c, 0.15);
+        let want = exec::pointwise(&a, &pc, &ps, 1);
+        let fpw = FusedWeights::fuse(&pc, &ps);
+        for threads in THREADS {
+            let got = Engine::with_threads_forced(threads).pointwise(&a, &fpw, 1);
+            neuromax::prop_assert!(
+                got == want,
+                "pointwise engine != exec at h={h} w={w} c={c} k={k} t={threads}"
+            );
+        }
+
+        let n = a.len();
+        let (fc_c, fc_s) = rand_t4(rng, k, 1, 1, n, 0.15);
+        let want = exec::fc(&a, &fc_c, &fc_s);
+        let ffc = FusedWeights::fuse(&fc_c, &fc_s);
+        for threads in THREADS {
+            let got = Engine::with_threads_forced(threads).fc(&a, &ffc);
+            neuromax::prop_assert!(
+                got == want,
+                "fc engine != exec at n={n} k={k} t={threads}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn run_layer_with_padding_equals_exec_run_layer() {
+    let grid = GridConfig::neuromax();
+    check("engine-runlayer-vs-exec", 12, |rng| {
+        let pad = rng.below(3) as usize;
+        let stride = 1 + rng.below(2) as usize;
+        let hw = 5 + rng.below(12) as usize;
+        let c = 1 + rng.below(6) as usize;
+        let k = 1 + rng.below(6) as usize;
+        let l = LayerDesc::conv("t", 3, stride, pad, hw, hw, c, k);
+        let a = rand_t3(rng, hw, hw, c, 0.15);
+        let (wc, ws) = rand_t4(rng, k, 3, 3, c, 0.15);
+
+        let (want, perf_want) = exec::run_layer(
+            &grid, &l, &a, Some(&wc), Some(&ws), ScheduleOptions::default());
+        let fused = FusedWeights::fuse(&wc, &ws);
+        for threads in THREADS {
+            let (got, perf_got) = Engine::with_threads_forced(threads).run_layer(
+                &grid, &l, &a, Some(&fused), ScheduleOptions::default());
+            neuromax::prop_assert!(
+                got == want,
+                "run_layer mismatch at hw={hw} pad={pad} s={stride} c={c} k={k} t={threads}"
+            );
+            neuromax::prop_assert!(
+                perf_got.cycles == perf_want.cycles,
+                "perf cycles diverged: {} vs {}",
+                perf_got.cycles,
+                perf_want.cycles
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tinycnn_serving_forward_is_bit_identical() {
+    // the end-to-end chain the serving path runs: reference vs engine at
+    // both thread counts, plus the batched entry point
+    for seed in 0..3u64 {
+        let w = TinyCnnWeights::random(seed ^ 0xABCD);
+        let fused = w.fuse();
+        let inputs: Vec<Tensor3> = (0..5)
+            .map(|i| neuromax::models::tinycnn::random_input(seed * 100 + i))
+            .collect();
+        let reference: Vec<Vec<i32>> = inputs
+            .iter()
+            .map(|a| verify::tinycnn_forward_sim(a, &w))
+            .collect();
+        for threads in THREADS {
+            let eng = Engine::with_threads_forced(threads);
+            for (a, want) in inputs.iter().zip(&reference) {
+                assert_eq!(
+                    &verify::tinycnn_forward_engine(&eng, &fused, a),
+                    want,
+                    "seed={seed} threads={threads}"
+                );
+            }
+            let batch = verify::tinycnn_forward_batch(&eng, &fused, &inputs);
+            assert_eq!(batch, reference, "batch seed={seed} threads={threads}");
+        }
+    }
+}

@@ -1,0 +1,179 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored crate
+//! provides the (small) subset of anyhow's API that neuromax uses, with
+//! the same names and semantics:
+//!
+//! * [`Error`]: an opaque, `Send + Sync` error value built from any
+//!   `std::error::Error` or from a message; context frames prepend
+//!   `"context: cause"` exactly like anyhow's `{:#}` rendering.
+//! * [`Result<T>`]: `std::result::Result<T, Error>` alias.
+//! * [`Context`]: `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] macros.
+//!
+//! Like the real crate, `Error` deliberately does NOT implement
+//! `std::error::Error` (that is what makes the blanket `From` impl
+//! coherent). If the real anyhow ever becomes available, deleting this
+//! directory and switching the path dependency to a version is a drop-in
+//! change.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An opaque error: rendered message plus flattened source chain.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string() }
+    }
+
+    /// Prepend a context frame (anyhow renders chains as `ctx: cause`).
+    fn wrap<C: fmt::Display>(self, context: C) -> Self {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// Context extension for `Result` and `Option` (mirrors anyhow).
+pub trait Context<T> {
+    /// Attach a context message, converting the error to [`Error`].
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Attach a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    Error: From<E>,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, a displayable value, or
+/// format args (same three arms as the real crate).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from format args.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<i32> {
+        let n: i32 = s.parse().context("not an int")?;
+        ensure!(n >= 0, "negative: {n}");
+        Ok(n)
+    }
+
+    #[test]
+    fn conversion_and_context() {
+        assert_eq!(parse("7").unwrap(), 7);
+        let e = parse("x").unwrap_err();
+        assert!(e.to_string().starts_with("not an int:"), "{e}");
+        let e = parse("-3").unwrap_err();
+        assert_eq!(e.to_string(), "negative: -3");
+    }
+
+    #[test]
+    fn option_context_and_bail() {
+        fn f(v: Option<u32>) -> Result<u32> {
+            let v = v.with_context(|| format!("missing {}", "slot"))?;
+            if v == 0 {
+                bail!("zero");
+            }
+            Ok(v)
+        }
+        assert_eq!(f(Some(2)).unwrap(), 2);
+        assert_eq!(f(None).unwrap_err().to_string(), "missing slot");
+        assert_eq!(f(Some(0)).unwrap_err().to_string(), "zero");
+    }
+
+    #[test]
+    fn source_chain_is_flattened() {
+        let io = std::io::Error::new(std::io::ErrorKind::Other, "inner");
+        let e = Error::from(io).wrap("outer");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        assert_eq!(format!("{e:?}"), "outer: inner");
+    }
+
+    #[test]
+    fn threads_can_carry_errors() {
+        let h = std::thread::spawn(|| -> Result<()> { bail!("from thread") });
+        assert!(h.join().unwrap().is_err());
+    }
+}
