@@ -1,0 +1,68 @@
+//! Model-zoo forward benchmarks — the engine-vs-reference trail for the
+//! generic graph executor (EXPERIMENTS.md §Perf, zoo rows).
+//!
+//! Full-size profiles run on the LUT-fused engine (1 thread and one per
+//! core); the reference executor additionally runs on the sub-GMAC
+//! models (TinyCNN, MobileNet v1, SqueezeNet, AlexNet) for the speedup
+//! ratio — the 15.3-GMAC VGG16 and 3.6-GMAC ResNet-34 reference passes
+//! would dominate wall time for no extra information, so their reference
+//! rows use the scaled `-test` profiles instead (engine rows stay
+//! full-size). Every measurement lands in `BENCH_zoo.json`
+//! (override the path with $BENCH_JSON_OUT).
+//!
+//!   cargo bench --bench zoo_forward
+
+use neuromax::dataflow::engine::Engine;
+use neuromax::dataflow::forward::{
+    forward_engine_planned, forward_ref_planned, ForwardPlan,
+};
+use neuromax::models::runner::{random_input_for, NetWeights};
+use neuromax::models::workload;
+use neuromax::util::bench::{blackbox, time, BenchLog};
+
+fn main() {
+    let mut log = BenchLog::new();
+    let eng1 = Engine::with_threads(1);
+    let engn = Engine::new(Default::default());
+    let nt = engn.num_threads();
+
+    for name in workload::ZOO_NAMES {
+        let net = workload::by_name(name).unwrap();
+        let plan = ForwardPlan::infer(&net).unwrap();
+        let w = NetWeights::random(&net, 7);
+        let fused = w.fuse();
+        let x = random_input_for(&net, 1);
+        let macs = net.total_macs();
+
+        let m = time(3, || {
+            blackbox(forward_engine_planned(&eng1, &net, &plan, &fused, &x));
+        });
+        log.report(&format!("ZOO {name} engine 1T"), m, macs, "MAC");
+
+        let m = time(3, || {
+            blackbox(forward_engine_planned(&engn, &net, &plan, &fused, &x));
+        });
+        log.report(&format!("ZOO {name} engine {nt}T"), m, macs, "MAC");
+
+        // reference row: full-size where affordable, -test profile else
+        let (ref_net, ref_tag) = if macs < 1_200_000_000 {
+            (net.clone(), "full")
+        } else {
+            (workload::test_profile(name).unwrap(), "test-profile")
+        };
+        let ref_plan = ForwardPlan::infer(&ref_net).unwrap();
+        let ref_w = NetWeights::random(&ref_net, 7);
+        let ref_x = random_input_for(&ref_net, 1);
+        let ref_macs = ref_net.total_macs();
+        let m = time(3, || {
+            blackbox(forward_ref_planned(&ref_net, &ref_plan, &ref_w, &ref_x));
+        });
+        log.report(&format!("ZOO {name} reference ({ref_tag})"), m, ref_macs, "MAC");
+    }
+
+    let path = std::env::var("BENCH_JSON_OUT").unwrap_or_else(|_| "BENCH_zoo.json".into());
+    match log.write_json(&path) {
+        Ok(()) => println!("\nwrote {} bench records to {path}", log.entries.len()),
+        Err(e) => eprintln!("\nfailed writing {path}: {e}"),
+    }
+}

@@ -141,6 +141,67 @@ mod tests {
     }
 
     #[test]
+    fn max_wait_releases_partial_batch_to_blocked_consumer() {
+        // consumer blocks on an EMPTY queue first; a single push must
+        // come back after ~max_wait even though the batch never fills
+        let b = Arc::new(Batcher::new(BatchPolicy {
+            max_batch: 64,
+            max_wait: Duration::from_millis(10),
+        }));
+        let b2 = b.clone();
+        let consumer = std::thread::spawn(move || {
+            let t0 = Instant::now();
+            let batch = b2.next_batch().unwrap();
+            (batch.len(), t0.elapsed())
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        b.push(42);
+        let (len, _waited) = consumer.join().unwrap();
+        assert_eq!(len, 1);
+        assert_eq!(b.depth(), 0);
+    }
+
+    #[test]
+    fn close_wakes_blocked_consumer_without_deadlock() {
+        // consumer parked on an empty queue; close() alone must end it
+        let b = Arc::new(Batcher::<u32>::new(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_secs(10),
+        }));
+        let b2 = b.clone();
+        let consumer = std::thread::spawn(move || b2.next_batch());
+        std::thread::sleep(Duration::from_millis(10));
+        b.close();
+        assert!(consumer.join().unwrap().is_none(), "close must return None");
+    }
+
+    #[test]
+    fn close_drains_pending_jobs_from_blocked_consumer() {
+        // jobs pushed while the consumer is parked, then close: every
+        // job must still be delivered before the None
+        let b = Arc::new(Batcher::new(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+        }));
+        let b2 = b.clone();
+        let consumer = std::thread::spawn(move || {
+            let mut total = 0;
+            while let Some(batch) = b2.next_batch() {
+                total += batch.len();
+            }
+            total
+        });
+        for i in 0..10 {
+            b.push(i);
+            if i % 3 == 0 {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+        b.close();
+        assert_eq!(consumer.join().unwrap(), 10);
+    }
+
+    #[test]
     fn overfull_queue_splits_into_max_batches() {
         let b = Batcher::new(BatchPolicy { max_batch: 3, max_wait: Duration::from_millis(1) });
         for i in 0..7 {

@@ -63,6 +63,10 @@ pub struct Metrics {
     pub errors: AtomicU64,
     pub batches: AtomicU64,
     pub batched_requests: AtomicU64,
+    /// Total engine wall time spent executing batches, nanoseconds (the
+    /// per-element times in `Inference` are this divided out; the batch
+    /// total is kept here so nothing is lost to amortization).
+    pub batch_wall_ns: AtomicU64,
     pub latency: LatencyHistogram,
     /// (batch size) log for mean-batch-size reporting.
     pub batch_sizes: Mutex<Vec<usize>>,
@@ -73,6 +77,11 @@ impl Metrics {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
         self.batch_sizes.lock().unwrap().push(size);
+    }
+
+    /// Record the engine wall time of one executed batch.
+    pub fn record_batch_wall(&self, ns: u64) {
+        self.batch_wall_ns.fetch_add(ns, Ordering::Relaxed);
     }
 
     pub fn mean_batch(&self) -> f64 {
@@ -86,12 +95,14 @@ impl Metrics {
     pub fn summary(&self) -> String {
         format!(
             "requests={} responses={} errors={} batches={} mean_batch={:.2} \
-             lat_mean={:.0}us lat_p50~{}us lat_p99~{}us lat_max={}us",
+             batch_wall_ms={:.2} lat_mean={:.0}us lat_p50~{}us lat_p99~{}us \
+             lat_max={}us",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch(),
+            self.batch_wall_ns.load(Ordering::Relaxed) as f64 / 1e6,
             self.latency.mean_us(),
             self.latency.quantile_us(0.5),
             self.latency.quantile_us(0.99),
@@ -123,5 +134,9 @@ mod tests {
         m.record_batch(4);
         m.record_batch(8);
         assert!((m.mean_batch() - 6.0).abs() < 1e-9);
+        m.record_batch_wall(1_500_000);
+        m.record_batch_wall(500_000);
+        assert_eq!(m.batch_wall_ns.load(Ordering::Relaxed), 2_000_000);
+        assert!(m.summary().contains("batch_wall_ms=2.00"), "{}", m.summary());
     }
 }

@@ -1,18 +1,26 @@
-//! The inference pipeline: executes TinyCNN requests on either backend —
-//! the AOT PJRT executable (the production path) or the functional
-//! simulator (bit-identical, dependency-free) — while charging cycles
-//! against the accelerator's schedule for hardware-timeline reporting.
+//! The inference pipeline: executes requests for **any zoo model** on
+//! either backend — the AOT PJRT executable (TinyCNN only; the artifacts
+//! are compiled per network) or the model-generic functional simulator
+//! (`dataflow::forward`, bit-identical on TinyCNN) — while charging
+//! cycles against the model's accelerator schedule for hardware-timeline
+//! reporting.
 
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::scheduler::NetworkSchedule;
 use crate::arch::config::GridConfig;
 use crate::dataflow::engine::{Engine, EngineOptions};
+use crate::dataflow::forward::{
+    forward_engine_batch, forward_engine_planned, ForwardPlan,
+};
 use crate::dataflow::ScheduleOptions;
-use crate::models::tinycnn::{self, FusedTinyCnn, TinyCnnWeights};
-use crate::runtime::{exec, verify, Runtime};
+use crate::models::layer::Network;
+use crate::models::runner::{random_input_dims, FusedNet, NetWeights};
+use crate::models::tinycnn::{self, TinyCnnWeights};
+use crate::models::workload;
+use crate::runtime::{exec, Runtime};
 use crate::tensor::Tensor3;
 
 /// Which engine computes the numerics.
@@ -29,18 +37,30 @@ pub enum Backend {
 pub struct Inference {
     pub logits: Vec<i32>,
     pub class: usize,
-    /// Host wall-clock for the compute call.
+    /// Host wall-clock for the compute call, microseconds (truncated
+    /// from [`Inference::wall_ns`]).
     pub wall_us: u64,
+    /// Host wall-clock for the compute call, nanoseconds. For batched
+    /// sim inference this is the batch wall time divided by the batch
+    /// size — nanosecond-derived, so fast batches don't round to zero.
+    pub wall_ns: u64,
     /// Simulated accelerator cycles for this inference.
     pub accel_cycles: u64,
 }
 
-/// The TinyCNN inference engine.
+/// The model-generic inference engine.
 pub struct InferenceEngine {
     pub backend: Backend,
-    pub weights: TinyCnnWeights,
+    /// The model being served.
+    pub model: Network,
+    /// Seed-deterministic weights for the model.
+    pub weights: NetWeights,
+    /// Per-model accelerator schedule (cycle charging).
     pub schedule: NetworkSchedule,
+    plan: ForwardPlan,
     rt: Option<Runtime>,
+    /// TinyCNN-shaped weights for the AOT artifact call (Hlo only).
+    hlo_weights: Option<TinyCnnWeights>,
     sim: Option<SimPath>,
 }
 
@@ -48,11 +68,12 @@ pub struct InferenceEngine {
 /// weights are fused once at construction and shared across requests.
 struct SimPath {
     engine: Engine,
-    fused: FusedTinyCnn,
+    fused: FusedNet,
 }
 
 impl InferenceEngine {
-    /// Build an engine. `Hlo` needs the artifact directory; `Sim` is
+    /// Build a TinyCNN engine (the default model — existing artifacts
+    /// and tests). `Hlo` needs the artifact directory; `Sim` is
     /// self-contained. Worker threads default to one per core.
     pub fn new(backend: Backend, weight_seed: u64) -> Result<Self> {
         Self::with_options(backend, weight_seed, EngineOptions::default())
@@ -65,17 +86,54 @@ impl InferenceEngine {
         weight_seed: u64,
         eopt: EngineOptions,
     ) -> Result<Self> {
+        Self::for_network(tinycnn::tinycnn(), backend, weight_seed, eopt)
+    }
+
+    /// Build an engine for a zoo model by name (`tinycnn`, `vgg16`,
+    /// `mobilenet_v1`, `resnet34`, `squeezenet`, `alexnet`, or any
+    /// `<name>-test` scaled profile). Only `tinycnn` has AOT artifacts,
+    /// so `Backend::Hlo` rejects every other model.
+    pub fn for_model(
+        name: &str,
+        backend: Backend,
+        weight_seed: u64,
+        eopt: EngineOptions,
+    ) -> Result<Self> {
+        let Some(net) = workload::by_name(name) else {
+            bail!("unknown model `{name}`");
+        };
+        Self::for_network(net, backend, weight_seed, eopt)
+    }
+
+    /// Build an engine for an explicit network descriptor.
+    pub fn for_network(
+        net: Network,
+        backend: Backend,
+        weight_seed: u64,
+        eopt: EngineOptions,
+    ) -> Result<Self> {
+        let is_tinycnn = net.name == "TinyCNN";
+        if backend == Backend::Hlo && !is_tinycnn {
+            bail!(
+                "backend Hlo serves only the AOT-compiled TinyCNN artifact; \
+                 use --backend sim for `{}`",
+                net.name
+            );
+        }
+        let plan = ForwardPlan::infer(&net).map_err(anyhow::Error::msg)?;
         let grid = GridConfig::neuromax();
-        let schedule = NetworkSchedule::plan(
-            grid,
-            &tinycnn::tinycnn(),
-            ScheduleOptions::default(),
-        );
+        let schedule = NetworkSchedule::plan(grid, &net, ScheduleOptions::default());
         let rt = match backend {
             Backend::Hlo => Some(Runtime::from_default_dir()?),
             Backend::Sim => None,
         };
-        let weights = TinyCnnWeights::random(weight_seed);
+        let weights = NetWeights::random(&net, weight_seed);
+        let hlo_weights = match backend {
+            // derived from the SAME generic weights, not re-generated:
+            // one seed→weights source of truth for both backends
+            Backend::Hlo => Some(TinyCnnWeights::from_net_weights(weights.clone())),
+            Backend::Sim => None,
+        };
         let sim = match backend {
             Backend::Sim => Some(SimPath {
                 engine: Engine::new(eopt),
@@ -83,7 +141,16 @@ impl InferenceEngine {
             }),
             Backend::Hlo => None,
         };
-        Ok(InferenceEngine { backend, weights, schedule, rt, sim })
+        Ok(InferenceEngine {
+            backend,
+            model: net,
+            weights,
+            schedule,
+            plan,
+            rt,
+            hlo_weights,
+            sim,
+        })
     }
 
     /// Warm the compiled-executable cache (Hlo backend).
@@ -103,53 +170,70 @@ impl InferenceEngine {
                 // resident-weight TinyCnnSession by ~8% on this XLA build
                 // (execute copies literals regardless); see EXPERIMENTS.md
                 // §Perf iteration 4.
-                exec::tinycnn_forward(self.rt.as_mut().unwrap(), input, &self.weights)?
+                exec::tinycnn_forward(
+                    self.rt.as_mut().unwrap(),
+                    input,
+                    self.hlo_weights.as_ref().unwrap(),
+                )?
             }
             Backend::Sim => {
                 let s = self.sim.as_ref().unwrap();
-                verify::tinycnn_forward_engine(&s.engine, &s.fused, input)
+                forward_engine_planned(&s.engine, &self.model, &self.plan, &s.fused, input)
+                    .data
             }
         };
-        let wall_us = t0.elapsed().as_micros() as u64;
+        let wall_ns = t0.elapsed().as_nanos() as u64;
         let accel_cycles = self.schedule.total_cycles();
-        Ok(Self::package(logits, wall_us, accel_cycles))
+        Ok(Self::package(logits, wall_ns, accel_cycles))
     }
 
     /// Run a batch. On the sim backend the whole batch executes as one
-    /// parallel unit (`verify::tinycnn_forward_batch`: elements spread
-    /// across the engine's worker pool, bit-identical to serial
-    /// single-shot inference). The Hlo backend serializes through the
-    /// single PJRT executable, as the real single-CONV-core device would.
+    /// parallel unit (elements spread across the engine's worker pool,
+    /// bit-identical to serial single-shot inference). The Hlo backend
+    /// serializes through the single PJRT executable, as the real
+    /// single-CONV-core device would.
     pub fn infer_batch(&mut self, inputs: &[Tensor3]) -> Result<Vec<Inference>> {
         match self.backend {
             Backend::Hlo => inputs.iter().map(|i| self.infer(i)).collect(),
             Backend::Sim => {
                 let t0 = Instant::now();
                 let s = self.sim.as_ref().unwrap();
-                let all = verify::tinycnn_forward_batch(&s.engine, &s.fused, inputs);
-                // amortized per-element wall time: the batch ran as a unit
-                let wall_us =
-                    t0.elapsed().as_micros() as u64 / inputs.len().max(1) as u64;
+                let all =
+                    forward_engine_batch(&s.engine, &self.model, &self.plan, &s.fused, inputs);
+                // amortized per-element wall time, nanosecond-derived so
+                // fast batches don't truncate to 0
+                let wall_ns =
+                    (t0.elapsed().as_nanos() / inputs.len().max(1) as u128) as u64;
                 let accel_cycles = self.schedule.total_cycles();
                 Ok(all
                     .into_iter()
-                    .map(|logits| Self::package(logits, wall_us, accel_cycles))
+                    .map(|out| Self::package(out.data, wall_ns, accel_cycles))
                     .collect())
             }
         }
     }
 
-    fn package(logits: Vec<i32>, wall_us: u64, accel_cycles: u64) -> Inference {
-        let class = logits
-            .iter()
-            .enumerate()
-            .max_by_key(|(_, &v)| v)
-            .map(|(i, _)| i)
-            .unwrap_or(0);
-        Inference { class, wall_us, accel_cycles, logits }
+    /// Assemble an [`Inference`]: standard argmax — the **first** maximum
+    /// wins on ties (`max_by_key` would return the last).
+    fn package(logits: Vec<i32>, wall_ns: u64, accel_cycles: u64) -> Inference {
+        let mut class = 0;
+        for (i, &v) in logits.iter().enumerate() {
+            if v > logits[class] {
+                class = i;
+            }
+        }
+        Inference { class, wall_us: wall_ns / 1000, wall_ns, accel_cycles, logits }
     }
 
-    /// Synthesize the quantized input for a request seed.
+    /// Synthesize the quantized input for a request seed against this
+    /// engine's model dims.
+    pub fn input(&self, seed: u64) -> Tensor3 {
+        let l0 = &self.model.layers[0];
+        random_input_dims(l0.hin, l0.win, l0.cin, seed)
+    }
+
+    /// Synthesize the quantized TinyCNN input for a request seed
+    /// (back-compat; model-generic callers use [`InferenceEngine::input`]).
     pub fn input_for_seed(seed: u64) -> Tensor3 {
         tinycnn::random_input(seed)
     }
@@ -189,20 +273,71 @@ mod tests {
 
     #[test]
     fn engine_path_matches_reference_sim_at_any_thread_count() {
-        use crate::dataflow::engine::EngineOptions;
         let input = InferenceEngine::input_for_seed(3);
         let reference = {
-            let w = crate::models::tinycnn::TinyCnnWeights::random(7);
+            let w = TinyCnnWeights::random(7);
             crate::runtime::verify::tinycnn_forward_sim(&input, &w)
         };
         for threads in [1usize, 2, 4] {
             let mut e = InferenceEngine::with_options(
                 Backend::Sim,
                 7,
-                EngineOptions { num_threads: threads },
+                EngineOptions { num_threads: threads, ..Default::default() },
             )
             .unwrap();
             assert_eq!(e.infer(&input).unwrap().logits, reference, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn argmax_ties_take_first_maximum() {
+        let inf = InferenceEngine::package(vec![3, 7, 7, 1], 0, 0);
+        assert_eq!(inf.class, 1, "tie must resolve to the first maximum");
+        let inf = InferenceEngine::package(vec![-5, -5], 0, 0);
+        assert_eq!(inf.class, 0);
+        let inf = InferenceEngine::package(vec![], 42, 0);
+        assert_eq!(inf.class, 0, "empty logits default to class 0");
+    }
+
+    #[test]
+    fn serves_every_zoo_test_profile() {
+        use crate::models::workload;
+        for name in workload::ZOO_NAMES {
+            let net = workload::test_profile(name).unwrap();
+            let mut e = InferenceEngine::for_network(
+                net,
+                Backend::Sim,
+                7,
+                EngineOptions::default(),
+            )
+            .unwrap();
+            let input = e.input(1);
+            let out = e.infer(&input).unwrap();
+            assert!(!out.logits.is_empty(), "{name}");
+            assert!(out.class < out.logits.len(), "{name}");
+            assert!(out.accel_cycles > 0, "{name}");
+        }
+    }
+
+    #[test]
+    fn hlo_rejects_non_tinycnn_models() {
+        let err = InferenceEngine::for_model(
+            "mobilenet_v1",
+            Backend::Hlo,
+            7,
+            EngineOptions::default(),
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn batch_wall_time_is_ns_derived() {
+        let mut e = InferenceEngine::new(Backend::Sim, 7).unwrap();
+        let inputs: Vec<_> = (0..3).map(InferenceEngine::input_for_seed).collect();
+        let batch = e.infer_batch(&inputs).unwrap();
+        for inf in &batch {
+            assert!(inf.wall_ns > 0, "per-element wall_ns must not truncate to 0");
+            assert_eq!(inf.wall_us, inf.wall_ns / 1000);
         }
     }
 }

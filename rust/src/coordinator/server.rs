@@ -1,13 +1,26 @@
 //! TCP inference server: a line-oriented protocol over std::net with a
 //! dynamic batcher between the acceptor threads and the single engine
 //! thread (the CONV core is one device — requests serialize through it,
-//! batching amortizes scheduling overhead).
+//! batching amortizes scheduling overhead). Serves the whole model zoo:
+//! the engine thread keeps one lazily-built `InferenceEngine` per
+//! requested model (sim backend; Hlo is TinyCNN-only) and executes each
+//! dynamic batch grouped by model.
 //!
 //! Protocol (one line per message):
-//!   client → `INFER <seed>`        server → `OK <class> <wall_us>`
-//!   client → `STATS`               server → `STATS <summary>`
-//!   client → `QUIT`                server closes the connection.
+//!   client → `INFER <seed>`          server → `OK <class> <latency_us>`
+//!   client → `INFER <model> <seed>`  server → `OK <class> <latency_us>`
+//!   client → `STATS`                 server → `STATS <summary>`
+//!   client → `QUIT`                  server closes the connection.
+//!
+//! `<latency_us>` is total enqueue-to-reply latency (batching wait
+//! included), not engine wall time — see `Metrics::batch_wall_ns` for
+//! pure compute accounting.
+//!
+//! `<model>` is any zoo name `workload::by_name` accepts (including the
+//! `-test` scaled profiles); without one, requests run on the server's
+//! default model.
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::Ordering;
@@ -17,13 +30,16 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use super::batcher::{BatchPolicy, Batcher};
+use super::batcher::{BatchPolicy, Batcher, Job};
 use super::metrics::Metrics;
 use super::pipeline::{Backend, InferenceEngine};
 use crate::dataflow::engine::EngineOptions;
+use crate::models::workload;
 
 /// A pending request routed to the engine thread.
 struct Pending {
+    /// Zoo model name (`None` = the server's default model).
+    model: Option<String>,
     seed: u64,
     enqueued: Instant,
     reply: mpsc::Sender<(usize, u64)>,
@@ -39,8 +55,8 @@ pub struct Server {
 }
 
 impl Server {
-    /// Bind and start the engine + acceptor threads.
-    /// `addr` like "127.0.0.1:0" (0 = ephemeral port).
+    /// Bind and start the engine + acceptor threads with the default
+    /// model (TinyCNN). `addr` like "127.0.0.1:0" (0 = ephemeral port).
     pub fn start(addr: &str, backend: Backend, policy: BatchPolicy) -> Result<Server> {
         Self::start_with_options(addr, backend, policy, EngineOptions::default())
     }
@@ -53,69 +69,62 @@ impl Server {
         policy: BatchPolicy,
         eopt: EngineOptions,
     ) -> Result<Server> {
+        Self::start_with_model(addr, "tinycnn", backend, policy, eopt)
+    }
+
+    /// Full-control start: serve `default_model` (any zoo name) and
+    /// accept per-request model overrides.
+    pub fn start_with_model(
+        addr: &str,
+        default_model: &str,
+        backend: Backend,
+        policy: BatchPolicy,
+        eopt: EngineOptions,
+    ) -> Result<Server> {
+        let Some(default) = workload::canonical_name(default_model) else {
+            anyhow::bail!("unknown model `{default_model}`");
+        };
+        // fail fast on statically-known backend/model incompatibility —
+        // otherwise the engine thread dies silently and every request
+        // hangs out its reply timeout
+        anyhow::ensure!(
+            backend != Backend::Hlo || default == "TinyCNN",
+            "backend Hlo serves only the AOT-compiled TinyCNN artifact; \
+             use the sim backend for `{default}`"
+        );
         let listener = TcpListener::bind(addr)?;
         listener.set_nonblocking(true)?;
         let local = listener.local_addr()?;
         let metrics = Arc::new(Metrics::default());
         let batcher = Arc::new(Batcher::new(policy));
 
-        // engine thread: owns the single CONV-core engine. The PJRT client
-        // is !Send (Rc internals), so the engine is constructed *inside*
-        // its thread and never crosses it. Each dynamic batch executes as
-        // ONE parallel unit (`infer_batch` → the engine worker pool), so
-        // batching buys real throughput instead of only amortized
+        // engine thread: owns the single CONV-core engines (one per
+        // served model, lazily built). The PJRT client is !Send (Rc
+        // internals), so engines are constructed *inside* the thread and
+        // never cross it. Each dynamic batch executes as ONE parallel
+        // unit per model group (`infer_batch` → the engine worker pool),
+        // so batching buys real throughput instead of only amortized
         // scheduling overhead.
         let b = batcher.clone();
         let m = metrics.clone();
+        // `default` is canonical — per-request overrides are
+        // canonicalized the same way, so the cache in `run_batch`
+        // never duplicates engines across name spellings
         let engine_thread = thread::spawn(move || {
-            let mut engine = match InferenceEngine::with_options(backend, 7, eopt) {
+            let mut engines: HashMap<String, InferenceEngine> = HashMap::new();
+            match InferenceEngine::for_model(&default, backend, 7, eopt) {
                 Ok(mut e) => {
                     let _ = e.warmup();
-                    e
+                    engines.insert(default.clone(), e);
                 }
                 Err(e) => {
                     eprintln!("engine init failed: {e:#}");
                     return;
                 }
-            };
+            }
             while let Some(batch) = b.next_batch() {
                 m.record_batch(batch.len());
-                let inputs: Vec<_> = batch
-                    .iter()
-                    .map(|job| InferenceEngine::input_for_seed(job.payload.seed))
-                    .collect();
-                match engine.infer_batch(&inputs) {
-                    Ok(infs) => {
-                        for (job, inf) in batch.into_iter().zip(infs) {
-                            let p: Pending = job.payload;
-                            let total_us = p.enqueued.elapsed().as_micros() as u64;
-                            m.latency.record(total_us);
-                            m.responses.fetch_add(1, Ordering::Relaxed);
-                            let _ = p.reply.send((inf.class, total_us));
-                        }
-                    }
-                    Err(_) => {
-                        // batch execution short-circuits on the first bad
-                        // inference (Hlo path): retry per job so the good
-                        // ones still answer and only real failures error
-                        for (job, input) in batch.into_iter().zip(&inputs) {
-                            let p: Pending = job.payload;
-                            match engine.infer(input) {
-                                Ok(inf) => {
-                                    let total_us =
-                                        p.enqueued.elapsed().as_micros() as u64;
-                                    m.latency.record(total_us);
-                                    m.responses.fetch_add(1, Ordering::Relaxed);
-                                    let _ = p.reply.send((inf.class, total_us));
-                                }
-                                Err(_) => {
-                                    m.errors.fetch_add(1, Ordering::Relaxed);
-                                    let _ = p.reply.send((usize::MAX, 0));
-                                }
-                            }
-                        }
-                    }
-                }
+                run_batch(&mut engines, &default, backend, eopt, batch, &m);
             }
         });
 
@@ -169,6 +178,77 @@ impl Server {
     }
 }
 
+/// Execute one dynamic batch: group jobs by model, run each group as one
+/// parallel unit, fall back to per-job retries if a group fails (Hlo
+/// path), and answer every reply channel.
+fn run_batch(
+    engines: &mut HashMap<String, InferenceEngine>,
+    default: &str,
+    backend: Backend,
+    eopt: EngineOptions,
+    batch: Vec<Job<Pending>>,
+    m: &Metrics,
+) {
+    // group by model, preserving arrival order within a group
+    let mut groups: HashMap<String, Vec<Pending>> = HashMap::new();
+    for job in batch {
+        let p = job.payload;
+        let key = p.model.clone().unwrap_or_else(|| default.to_string());
+        groups.entry(key).or_default().push(p);
+    }
+    for (model, jobs) in groups {
+        let engine = match engines.entry(model.clone()) {
+            std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
+            std::collections::hash_map::Entry::Vacant(slot) => {
+                match InferenceEngine::for_model(&model, backend, 7, eopt) {
+                    Ok(e) => slot.insert(e),
+                    Err(err) => {
+                        eprintln!("engine for `{model}` failed: {err:#}");
+                        for p in jobs {
+                            m.errors.fetch_add(1, Ordering::Relaxed);
+                            let _ = p.reply.send((usize::MAX, 0));
+                        }
+                        continue;
+                    }
+                }
+            }
+        };
+        let inputs: Vec<_> = jobs.iter().map(|p| engine.input(p.seed)).collect();
+        let t0 = Instant::now();
+        match engine.infer_batch(&inputs) {
+            Ok(infs) => {
+                m.record_batch_wall(t0.elapsed().as_nanos() as u64);
+                for (p, inf) in jobs.into_iter().zip(infs) {
+                    let total_us = p.enqueued.elapsed().as_micros() as u64;
+                    m.latency.record(total_us);
+                    m.responses.fetch_add(1, Ordering::Relaxed);
+                    let _ = p.reply.send((inf.class, total_us));
+                }
+            }
+            Err(_) => {
+                m.record_batch_wall(t0.elapsed().as_nanos() as u64);
+                // batch execution short-circuits on the first bad
+                // inference (Hlo path): retry per job so the good ones
+                // still answer and only real failures error
+                for (p, input) in jobs.into_iter().zip(&inputs) {
+                    match engine.infer(input) {
+                        Ok(inf) => {
+                            let total_us = p.enqueued.elapsed().as_micros() as u64;
+                            m.latency.record(total_us);
+                            m.responses.fetch_add(1, Ordering::Relaxed);
+                            let _ = p.reply.send((inf.class, total_us));
+                        }
+                        Err(_) => {
+                            m.errors.fetch_add(1, Ordering::Relaxed);
+                            let _ = p.reply.send((usize::MAX, 0));
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
 fn handle_client(
     stream: TcpStream,
     batcher: Arc<Batcher<Pending>>,
@@ -182,10 +262,42 @@ fn handle_client(
         let mut it = line.split_whitespace();
         match it.next() {
             Some("INFER") => {
+                // `INFER <seed>` or `INFER <model> <seed>`
+                let (model, seed_tok) = match (it.next(), it.next()) {
+                    (Some(model), Some(seed)) => (Some(model), seed),
+                    (Some(seed), None) => (None, seed),
+                    _ => (None, "0"),
+                };
+                // canonicalize so `VGG16`/`vgg16`/`mobilenet` variants
+                // share one engine-cache entry downstream (name-only
+                // lookup — no Network is built on the request path)
+                let model = match model {
+                    Some(name) => match workload::canonical_name(name) {
+                        Some(canon) => Some(canon),
+                        None => {
+                            writeln!(writer, "ERR unknown model {name}")?;
+                            continue;
+                        }
+                    },
+                    None => None,
+                };
+                let Ok(seed) = seed_tok.parse::<u64>() else {
+                    // a lone valid model name means the seed was forgotten
+                    if workload::canonical_name(seed_tok).is_some() {
+                        writeln!(writer, "ERR missing seed (INFER <model> <seed>)")?;
+                    } else {
+                        writeln!(writer, "ERR bad seed {seed_tok}")?;
+                    }
+                    continue;
+                };
                 metrics.requests.fetch_add(1, Ordering::Relaxed);
-                let seed: u64 = it.next().unwrap_or("0").parse().unwrap_or(0);
                 let (tx, rx) = mpsc::channel();
-                batcher.push(Pending { seed, enqueued: Instant::now(), reply: tx });
+                batcher.push(Pending {
+                    model,
+                    seed,
+                    enqueued: Instant::now(),
+                    reply: tx,
+                });
                 match rx.recv_timeout(Duration::from_secs(30)) {
                     Ok((class, us)) if class != usize::MAX => {
                         writeln!(writer, "OK {class} {us}")?;
@@ -221,9 +333,20 @@ impl Client {
         Ok(Client { stream, reader })
     }
 
-    /// Send INFER, return (class, latency_us).
+    /// Send INFER against the server's default model, return
+    /// (class, latency_us).
     pub fn infer(&mut self, seed: u64) -> Result<(usize, u64)> {
         writeln!(self.stream, "INFER {seed}")?;
+        self.read_ok()
+    }
+
+    /// Send INFER against a named zoo model, return (class, latency_us).
+    pub fn infer_model(&mut self, model: &str, seed: u64) -> Result<(usize, u64)> {
+        writeln!(self.stream, "INFER {model} {seed}")?;
+        self.read_ok()
+    }
+
+    fn read_ok(&mut self) -> Result<(usize, u64)> {
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
         let mut it = line.split_whitespace();
@@ -295,6 +418,53 @@ mod tests {
             c.join().unwrap();
         }
         assert_eq!(metrics.responses.load(Ordering::Relaxed), 20);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn hlo_with_non_tinycnn_model_fails_at_start() {
+        let err = Server::start_with_model(
+            "127.0.0.1:0",
+            "vgg16-test",
+            Backend::Hlo,
+            BatchPolicy::default(),
+            EngineOptions::default(),
+        );
+        assert!(err.is_err(), "must fail fast, not die in the engine thread");
+        assert!(Server::start_with_model(
+            "127.0.0.1:0",
+            "not_a_model",
+            Backend::Sim,
+            BatchPolicy::default(),
+            EngineOptions::default(),
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn per_request_models_round_trip() {
+        let mut srv = Server::start(
+            "127.0.0.1:0",
+            Backend::Sim,
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        )
+        .unwrap();
+        let addr = srv.addr;
+        let client_thread = thread::spawn(move || {
+            let mut c = Client::connect(addr).unwrap();
+            // default model + two explicit zoo models in one session
+            let (class, _) = c.infer(7).unwrap();
+            assert!(class < 10);
+            let (class, _) = c.infer_model("alexnet-test", 7).unwrap();
+            assert!(class < 128, "alexnet-test flattens to 2x2x32 logits");
+            let (class2, _) = c.infer_model("alexnet-test", 7).unwrap();
+            assert_eq!(class, class2, "same model+seed, same class");
+            let (class, _) = c.infer_model("tinycnn", 9).unwrap();
+            assert!(class < 10);
+            assert!(c.infer_model("not_a_model", 1).is_err());
+        });
+        srv.serve_until(Some(Instant::now() + Duration::from_millis(2500))).unwrap();
+        client_thread.join().unwrap();
         srv.shutdown();
     }
 }

@@ -329,8 +329,11 @@ impl Engine {
             Op::Depthwise { stride, .. } => self.depthwise(&ap, w.unwrap(), stride),
             Op::Pointwise { stride } => self.pointwise(&ap, w.unwrap(), stride),
             Op::Pool { k, stride, max } => {
-                assert!(max, "avg pool not modelled on the code domain");
-                pool::maxpool(&ap, k, stride)
+                if max {
+                    pool::maxpool(&ap, k, stride)
+                } else {
+                    pool::avgpool(&ap, k, stride)
+                }
             }
             Op::Fc => {
                 let v = self.fc(&ap, w.unwrap());

@@ -139,8 +139,11 @@ pub fn run_layer(
         Op::Depthwise { stride, .. } => depthwise(&ap, wc.unwrap(), ws.unwrap(), stride),
         Op::Pointwise { stride } => pointwise(&ap, wc.unwrap(), ws.unwrap(), stride),
         Op::Pool { k, stride, max } => {
-            assert!(max, "avg pool not modelled on the code domain");
-            pool::maxpool(&ap, k, stride)
+            if max {
+                pool::maxpool(&ap, k, stride)
+            } else {
+                pool::avgpool(&ap, k, stride)
+            }
         }
         Op::Fc => {
             let v = fc(&ap, wc.unwrap(), ws.unwrap());

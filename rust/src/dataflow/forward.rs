@@ -1,0 +1,496 @@
+//! The model-generic graph executor: runs any zoo [`Network`] end-to-end
+//! on either numeric path — the reference executor (`dataflow::exec`) or
+//! the LUT-fused multi-threaded engine (`dataflow::engine`) — from one
+//! shared routing plan, so the two stay bit-identical by construction.
+//!
+//! The zoo describes networks as flat `Vec<LayerDesc>` chains, but two of
+//! them are not chains: SqueezeNet's fire modules fan the squeeze output
+//! out to both expand branches and concat the results, and ResNet-34's
+//! stage entries run a projection shortcut beside the block pair and
+//! merge. [`ForwardPlan::infer`] recovers that graph structure from
+//! shapes alone, with deterministic precedence rules:
+//!
+//! 1. `Fc` flattens the most recent shape-compatible output (HWC
+//!    row-major, matching `Engine::fc`).
+//! 2. If the two most recent *unconsumed* outputs both match the needed
+//!    `(h, w, c)`, they are a residual pair → elementwise code-max merge
+//!    (order-preserving on log codes, the same monotonicity argument as
+//!    max-pool; the identity adds of interior blocks stay on the
+//!    post-processing path exactly as before).
+//! 3. A single unconsumed match is a plain sequential edge.
+//! 4. No unconsumed match but a consumed one → branch fan-out: the layer
+//!    re-reads an earlier output (fire expand branches).
+//! 5. Two unconsumed outputs whose channels *sum* to the need (same
+//!    spatial dims) → channel concat in layer order (fire module output).
+//!
+//! Execution applies the layer kernels via [`exec`]/[`Engine`], padding
+//! from the descriptor, ReLU+requant between compute layers (the final
+//! layer's psums are returned raw, as the serving logits), pools passing
+//! codes straight through. Feature maps are freed at their last use so
+//! full-size nets stream with bounded memory.
+
+use std::borrow::Cow;
+
+use crate::arch::state_controller::pad_input;
+use crate::dataflow::engine::Engine;
+use crate::dataflow::exec;
+use crate::models::layer::{Network, Op};
+use crate::models::runner::{FusedNet, NetWeights};
+use crate::tensor::{Tensor3, Tensor4};
+
+/// Where a layer's input comes from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Source {
+    /// The network input tensor.
+    Input,
+    /// Output of layer `i` (post-requant codes).
+    Layer(usize),
+}
+
+/// How a layer's input tensor is assembled.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Routing {
+    /// Single producer, shapes match exactly.
+    Direct(Source),
+    /// Channel concatenation (in order) of two producers.
+    Concat(Source, Source),
+    /// Residual merge: elementwise code max of two same-shape producers.
+    Residual(Source, Source),
+    /// Row-major HWC flatten of one producer (Fc head).
+    Flatten(Source),
+}
+
+impl Routing {
+    fn sources(&self) -> [Option<Source>; 2] {
+        match *self {
+            Routing::Direct(a) | Routing::Flatten(a) => [Some(a), None],
+            Routing::Concat(a, b) | Routing::Residual(a, b) => [Some(a), Some(b)],
+        }
+    }
+}
+
+/// A fully-resolved execution plan: one [`Routing`] per layer, plus the
+/// last-use index of every source so executors can free feature maps.
+#[derive(Clone, Debug)]
+pub struct ForwardPlan {
+    pub routes: Vec<Routing>,
+    /// `last_use[i]` = index of the last layer reading layer `i`'s output.
+    last_use: Vec<usize>,
+}
+
+impl ForwardPlan {
+    /// Infer the routing for `net` from layer shapes (see module docs for
+    /// the precedence rules). Fails with a description of the first layer
+    /// whose input cannot be resolved.
+    pub fn infer(net: &Network) -> Result<ForwardPlan, String> {
+        let n = net.layers.len();
+        if n == 0 {
+            return Err("empty network".into());
+        }
+        // produced shapes: index 0 = Input, 1 + i = layer i
+        let l0 = &net.layers[0];
+        let mut shapes: Vec<(usize, usize, usize)> = vec![(l0.hin, l0.win, l0.cin)];
+        let mut consumed: Vec<bool> = vec![false];
+        let mut routes = Vec::with_capacity(n);
+        for (i, l) in net.layers.iter().enumerate() {
+            let need = (l.hin, l.win, l.cin);
+            let src = |slot: usize| -> Source {
+                if slot == 0 { Source::Input } else { Source::Layer(slot - 1) }
+            };
+            // candidate producer slots, most recent first
+            let matches: Vec<usize> = (0..shapes.len())
+                .rev()
+                .filter(|&s| shapes[s] == need)
+                .collect();
+            let unconsumed: Vec<usize> =
+                matches.iter().copied().filter(|&s| !consumed[s]).collect();
+            let route = if let Op::Fc = l.op {
+                let flat: Option<usize> = (0..shapes.len())
+                    .rev()
+                    .filter(|&s| {
+                        let (h, w, c) = shapes[s];
+                        h * w * c == l.cin
+                    })
+                    .max_by_key(|&s| (!consumed[s], s));
+                match flat {
+                    Some(s) => Routing::Flatten(src(s)),
+                    None => {
+                        return Err(format!(
+                            "layer {} ({}): no producer flattens to {}",
+                            i, l.name, l.cin
+                        ))
+                    }
+                }
+            } else if unconsumed.len() >= 2 {
+                // two live same-shape outputs: residual pair
+                Routing::Residual(src(unconsumed[1]), src(unconsumed[0]))
+            } else if let Some(&s) = unconsumed.first() {
+                Routing::Direct(src(s))
+            } else {
+                // no live exact match: try a channel concat of two live
+                // outputs (fire-module join) BEFORE falling back to a
+                // consumed producer — a stale same-shape output from an
+                // earlier module must not shadow the branch join
+                let live: Vec<usize> =
+                    (0..shapes.len()).rev().filter(|&s| !consumed[s]).collect();
+                let mut found = None;
+                'outer: for (ai, &a) in live.iter().enumerate() {
+                    for &b in &live[ai + 1..] {
+                        let (ha, wa, ca) = shapes[a];
+                        let (hb, wb, cb) = shapes[b];
+                        if (ha, wa) == (l.hin, l.win) && (hb, wb) == (ha, wa) && ca + cb == l.cin {
+                            // concat in layer order: earlier slot first
+                            found = Some((a.min(b), a.max(b)));
+                            break 'outer;
+                        }
+                    }
+                }
+                match (found, matches.first()) {
+                    (Some((a, b)), _) => Routing::Concat(src(a), src(b)),
+                    // branch fan-out: re-read an already-consumed output
+                    (None, Some(&s)) => Routing::Direct(src(s)),
+                    (None, None) => {
+                        return Err(format!(
+                            "layer {} ({}): no producer matches {}x{}x{}",
+                            i, l.name, l.hin, l.win, l.cin
+                        ))
+                    }
+                }
+            };
+            // mark consumption and record this layer's output shape
+            for s in route.sources().into_iter().flatten() {
+                let slot = match s {
+                    Source::Input => 0,
+                    Source::Layer(j) => j + 1,
+                };
+                consumed[slot] = true;
+            }
+            routes.push(route);
+            let (ho, wo) = l.out_dims();
+            shapes.push((ho, wo, l.cout));
+            consumed.push(false);
+        }
+        // last-use accounting for feature-map freeing
+        let mut last_use = vec![usize::MAX; n];
+        for (i, r) in routes.iter().enumerate() {
+            for s in r.sources().into_iter().flatten() {
+                if let Source::Layer(j) = s {
+                    last_use[j] = i;
+                }
+            }
+        }
+        Ok(ForwardPlan { routes, last_use })
+    }
+
+    /// True if any layer's input is a residual merge or channel concat
+    /// (i.e. the network is a genuine graph, not a chain).
+    pub fn has_branches(&self) -> bool {
+        self.routes
+            .iter()
+            .any(|r| matches!(r, Routing::Concat(..) | Routing::Residual(..)))
+    }
+}
+
+/// Channel-concat two same-spatial code tensors (a's channels first).
+fn concat_channels(a: &Tensor3, b: &Tensor3) -> Tensor3 {
+    assert_eq!((a.h, a.w), (b.h, b.w), "concat spatial mismatch");
+    let c = a.c + b.c;
+    let mut out = Tensor3::new(a.h, a.w, c);
+    for y in 0..a.h {
+        for x in 0..a.w {
+            let o = (y * a.w + x) * c;
+            let ia = (y * a.w + x) * a.c;
+            let ib = (y * b.w + x) * b.c;
+            out.data[o..o + a.c].copy_from_slice(&a.data[ia..ia + a.c]);
+            out.data[o + a.c..o + c].copy_from_slice(&b.data[ib..ib + b.c]);
+        }
+    }
+    out
+}
+
+/// Residual merge on the log-code domain: elementwise max (order-
+/// preserving, like max-pool — the dominant branch wins per element).
+fn residual_merge(a: &Tensor3, b: &Tensor3) -> Tensor3 {
+    assert_eq!((a.h, a.w, a.c), (b.h, b.w, b.c), "residual shape mismatch");
+    let data = a.data.iter().zip(&b.data).map(|(&x, &y)| x.max(y)).collect();
+    Tensor3 { h: a.h, w: a.w, c: a.c, data }
+}
+
+/// Flatten to `[1, 1, H·W·C]` (row-major HWC — the layout `fc` expects).
+fn flatten(a: &Tensor3) -> Tensor3 {
+    Tensor3::from_vec(1, 1, a.len(), a.data.clone())
+}
+
+/// Resolve a [`Source`] against the network input and produced outputs.
+fn fetch<'a>(outs: &'a [Option<Tensor3>], x: &'a Tensor3, s: Source) -> &'a Tensor3 {
+    match s {
+        Source::Input => x,
+        Source::Layer(j) => outs[j].as_ref().expect("freed before last use"),
+    }
+}
+
+/// The shared forward driver: routing, padding, requant and freeing live
+/// here; `run` computes one layer's raw output from its padded input.
+fn drive(
+    net: &Network,
+    plan: &ForwardPlan,
+    x: &Tensor3,
+    mut run: impl FnMut(usize, &Tensor3) -> Tensor3,
+) -> Tensor3 {
+    assert_eq!(plan.routes.len(), net.layers.len(), "plan/net mismatch");
+    let n = net.layers.len();
+    let mut outs: Vec<Option<Tensor3>> = vec![None; n];
+    let mut result = None;
+    for (i, l) in net.layers.iter().enumerate() {
+        let pad = match l.op {
+            Op::Conv { pad, .. } | Op::Depthwise { pad, .. } => pad,
+            _ => 0,
+        };
+        // assemble the input without copying on the sequential pad-0 hot
+        // path (pad_input clones even for pad == 0)
+        let input: Cow<Tensor3> = match plan.routes[i] {
+            Routing::Direct(s) => Cow::Borrowed(fetch(&outs, x, s)),
+            Routing::Flatten(s) => Cow::Owned(flatten(fetch(&outs, x, s))),
+            Routing::Concat(a, b) => {
+                Cow::Owned(concat_channels(fetch(&outs, x, a), fetch(&outs, x, b)))
+            }
+            Routing::Residual(a, b) => {
+                Cow::Owned(residual_merge(fetch(&outs, x, a), fetch(&outs, x, b)))
+            }
+        };
+        let padded: Cow<Tensor3> = if pad == 0 {
+            input
+        } else {
+            let p = pad_input(&input, pad);
+            drop(input); // release any borrow of `outs` before the write below
+            Cow::Owned(p)
+        };
+        let raw = run(i, &padded);
+        // end the Cow's borrow of `outs` before writing this layer's slot
+        drop(padded);
+        let out = if i + 1 == n {
+            // final layer: raw psums (compute) or codes (pool) — the logits
+            result = Some(raw);
+            None
+        } else if l.is_compute() {
+            Some(exec::requant(&raw))
+        } else {
+            Some(raw)
+        };
+        outs[i] = out;
+        // free feature maps past their last reader
+        for j in 0..=i {
+            if plan.last_use[j] <= i {
+                outs[j] = None;
+            }
+        }
+    }
+    result.expect("network has at least one layer")
+}
+
+/// Reference forward pass: any network, reference executor numerics.
+/// Returns the final layer's raw output (psums for compute layers, codes
+/// for pools) — flatten `.data` for logits.
+pub fn forward_ref(net: &Network, w: &NetWeights, x: &Tensor3) -> Tensor3 {
+    let plan = ForwardPlan::infer(net).expect("unroutable network");
+    forward_ref_planned(net, &plan, w, x)
+}
+
+/// [`forward_ref`] with a precomputed plan (serving path: plan once).
+pub fn forward_ref_planned(
+    net: &Network,
+    plan: &ForwardPlan,
+    w: &NetWeights,
+    x: &Tensor3,
+) -> Tensor3 {
+    forward_ref_with(net, plan, |i| w.layers[i].as_ref().map(|(c, s)| (c, s)), x)
+}
+
+/// [`forward_ref_planned`] with a borrowed per-layer weight lookup —
+/// lets callers holding weights in another layout (e.g.
+/// `TinyCnnWeights`) run the reference forward without cloning tensors.
+pub fn forward_ref_with<'w>(
+    net: &Network,
+    plan: &ForwardPlan,
+    weight: impl Fn(usize) -> Option<(&'w Tensor4, &'w Tensor4)>,
+    x: &Tensor3,
+) -> Tensor3 {
+    drive(net, plan, x, |i, a| {
+        let l = &net.layers[i];
+        let wpair = weight(i);
+        match l.op {
+            Op::Conv { stride, .. } => {
+                let (wc, ws) = wpair.unwrap();
+                exec::conv2d(a, wc, ws, stride)
+            }
+            Op::Depthwise { stride, .. } => {
+                let (wc, ws) = wpair.unwrap();
+                exec::depthwise(a, wc, ws, stride)
+            }
+            Op::Pointwise { stride } => {
+                let (wc, ws) = wpair.unwrap();
+                exec::pointwise(a, wc, ws, stride)
+            }
+            Op::Pool { k, stride, max } => {
+                if max {
+                    super::pool::maxpool(a, k, stride)
+                } else {
+                    super::pool::avgpool(a, k, stride)
+                }
+            }
+            Op::Fc => {
+                let (wc, ws) = wpair.unwrap();
+                let v = exec::fc(a, wc, ws);
+                let len = v.len();
+                Tensor3::from_vec(1, 1, len, v)
+            }
+        }
+    })
+}
+
+/// Engine forward pass: any network, LUT-fused multi-threaded numerics.
+/// Bit-identical to [`forward_ref`] on the same weights (pinned by
+/// `rust/tests/zoo_forward.rs` across the whole zoo).
+pub fn forward_engine(eng: &Engine, net: &Network, fw: &FusedNet, x: &Tensor3) -> Tensor3 {
+    let plan = ForwardPlan::infer(net).expect("unroutable network");
+    forward_engine_planned(eng, net, &plan, fw, x)
+}
+
+/// [`forward_engine`] with a precomputed plan (serving path: plan once).
+pub fn forward_engine_planned(
+    eng: &Engine,
+    net: &Network,
+    plan: &ForwardPlan,
+    fw: &FusedNet,
+    x: &Tensor3,
+) -> Tensor3 {
+    drive(net, plan, x, |i, a| {
+        let l = &net.layers[i];
+        let w = fw.layers[i].as_ref();
+        match l.op {
+            Op::Conv { stride, .. } => eng.conv2d(a, w.unwrap(), stride),
+            Op::Depthwise { stride, .. } => eng.depthwise(a, w.unwrap(), stride),
+            Op::Pointwise { stride } => eng.pointwise(a, w.unwrap(), stride),
+            Op::Pool { k, stride, max } => {
+                if max {
+                    super::pool::maxpool(a, k, stride)
+                } else {
+                    super::pool::avgpool(a, k, stride)
+                }
+            }
+            Op::Fc => {
+                let v = eng.fc(a, w.unwrap());
+                let len = v.len();
+                Tensor3::from_vec(1, 1, len, v)
+            }
+        }
+    })
+}
+
+/// Batched engine forward: elements spread across the worker pool, each
+/// on a serial engine (bit-identical to per-element [`forward_engine`],
+/// order preserved).
+pub fn forward_engine_batch(
+    eng: &Engine,
+    net: &Network,
+    plan: &ForwardPlan,
+    fw: &FusedNet,
+    inputs: &[Tensor3],
+) -> Vec<Tensor3> {
+    eng.par_map(inputs, |e, a| forward_engine_planned(e, net, plan, fw, a))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::runner::random_input_for;
+    use crate::models::{resnet34::resnet34_test, squeezenet::squeezenet_test, tinycnn::tinycnn};
+
+    #[test]
+    fn tinycnn_plan_is_a_pure_chain_with_flatten_head() {
+        let net = tinycnn();
+        let plan = ForwardPlan::infer(&net).unwrap();
+        assert!(!plan.has_branches());
+        assert_eq!(plan.routes[0], Routing::Direct(Source::Input));
+        for (i, r) in plan.routes.iter().enumerate().take(4).skip(1) {
+            assert_eq!(*r, Routing::Direct(Source::Layer(i - 1)));
+        }
+        assert_eq!(plan.routes[4], Routing::Flatten(Source::Layer(3)));
+    }
+
+    #[test]
+    fn squeezenet_plan_has_fanout_and_concat() {
+        let net = squeezenet_test();
+        let plan = ForwardPlan::infer(&net).unwrap();
+        assert!(plan.has_branches());
+        // FIRE2: SQ at index 2, E1 at 3, E3 at 4, FIRE3_SQ at 5
+        assert_eq!(plan.routes[3], Routing::Direct(Source::Layer(2)));
+        assert_eq!(plan.routes[4], Routing::Direct(Source::Layer(2)));
+        assert_eq!(
+            plan.routes[5],
+            Routing::Concat(Source::Layer(3), Source::Layer(4))
+        );
+    }
+
+    #[test]
+    fn resnet_plan_merges_projection_shortcuts() {
+        let net = resnet34_test();
+        let plan = ForwardPlan::infer(&net).unwrap();
+        let n_res = plan
+            .routes
+            .iter()
+            .filter(|r| matches!(r, Routing::Residual(..)))
+            .count();
+        assert_eq!(n_res, 3, "one merge per projection stage entry");
+    }
+
+    #[test]
+    fn whole_zoo_routes() {
+        use crate::models::workload;
+        for name in workload::ZOO_NAMES {
+            for net in [
+                workload::by_name(name).unwrap(),
+                workload::test_profile(name).unwrap(),
+            ] {
+                ForwardPlan::infer(&net)
+                    .unwrap_or_else(|e| panic!("{}: {e}", net.name));
+            }
+        }
+    }
+
+    #[test]
+    fn concat_interleaves_per_pixel() {
+        let a = Tensor3::from_vec(1, 2, 2, vec![1, 2, 3, 4]);
+        let b = Tensor3::from_vec(1, 2, 1, vec![9, 8]);
+        let c = concat_channels(&a, &b);
+        assert_eq!(c.data, vec![1, 2, 9, 3, 4, 8]);
+    }
+
+    #[test]
+    fn generic_forward_matches_legacy_tinycnn_chain() {
+        use crate::dataflow::exec as fexec;
+        use crate::models::tinycnn::TinyCnnWeights;
+        let w = TinyCnnWeights::random(5);
+        let a = crate::models::tinycnn::random_input(1);
+        // the pre-refactor hand-rolled chain, inlined
+        let x = fexec::requant(&fexec::conv2d(&a, &w.codes[0], &w.signs[0], 1));
+        let x = fexec::requant(&fexec::conv2d(&x, &w.codes[1], &w.signs[1], 2));
+        let x = fexec::requant(&fexec::pointwise(&x, &w.codes[2], &w.signs[2], 1));
+        let x = fexec::requant(&fexec::conv2d(&x, &w.codes[3], &w.signs[3], 1));
+        let legacy = fexec::fc(&x, &w.codes[4], &w.signs[4]);
+        let got = forward_ref(&tinycnn(), &w.to_net_weights(), &a);
+        assert_eq!(got.data, legacy);
+    }
+
+    #[test]
+    fn branchy_nets_run_end_to_end() {
+        for net in [squeezenet_test(), resnet34_test()] {
+            let w = NetWeights::random(&net, 9);
+            let x = random_input_for(&net, 4);
+            let out = forward_ref(&net, &w, &x);
+            let last = net.layers.last().unwrap();
+            let (ho, wo) = last.out_dims();
+            assert_eq!((out.h, out.w, out.c), (ho, wo, last.cout), "{}", net.name);
+        }
+    }
+}

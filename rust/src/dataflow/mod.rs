@@ -10,9 +10,11 @@
 
 pub mod engine;
 pub mod exec;
+pub mod forward;
 pub mod pool;
 pub mod schedule;
 pub mod tile;
 
 pub use engine::{Engine, EngineOptions, FusedWeights};
+pub use forward::{forward_engine, forward_ref, ForwardPlan};
 pub use schedule::{analyze, LayerPerf, ScheduleOptions};

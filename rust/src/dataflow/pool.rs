@@ -1,8 +1,15 @@
 //! Pooling on the log-code domain (paper §5.3: "the CONV core can also
 //! perform pooling operation by choosing the appropriate stride and
 //! kernel"). Max pooling is order-preserving on log codes, so it runs
-//! directly on codes without dequantization.
+//! directly on codes without dequantization. Average pooling expands each
+//! code to its Q19.12 magnitude (the same eq. 8 LUT value the compute
+//! threads use), takes the integer window mean, and re-quantizes through
+//! the shared post-processing table — so it reuses hardware the core
+//! already has (magnitude LUT + requant thresholds) and stays bit-exact
+//! across every executor by construction.
 
+use crate::lns::mult::magnitude;
+use crate::lns::tables::requant_act;
 use crate::tensor::{out_dim, Tensor3};
 
 /// Max pool over codes (ZERO_CODE is the smallest code, so zeros lose).
@@ -20,6 +27,33 @@ pub fn maxpool(a: &Tensor3, k: usize, stride: usize) -> Tensor3 {
                     }
                 }
                 out.set(i, j, ch, m);
+            }
+        }
+    }
+    out
+}
+
+/// Average pool over codes: window-sum the Q19.12 magnitudes
+/// (`magnitude(code)`, ZERO_CODE and deep-underflow codes contribute 0),
+/// floor-divide by the window size, and requantize the mean back to a
+/// code via [`requant_act`]. Returns codes (like [`maxpool`]), so pool
+/// layers compose identically regardless of kind.
+pub fn avgpool(a: &Tensor3, k: usize, stride: usize) -> Tensor3 {
+    let ho = out_dim(a.h, k, stride);
+    let wo = out_dim(a.w, k, stride);
+    let window = (k * k) as i64;
+    let mut out = Tensor3::new(ho, wo, a.c);
+    for i in 0..ho {
+        for j in 0..wo {
+            for ch in 0..a.c {
+                let mut sum = 0i64;
+                for dy in 0..k {
+                    for dx in 0..k {
+                        sum += magnitude(a.get(i * stride + dy, j * stride + dx, ch)) as i64;
+                    }
+                }
+                // mean <= max magnitude (~1.9e8), always fits i32
+                out.set(i, j, ch, requant_act((sum / window) as i32));
             }
         }
     }
@@ -58,5 +92,45 @@ mod tests {
         let a = Tensor3::new(112, 112, 64);
         let p = maxpool(&a, 2, 2);
         assert_eq!((p.h, p.w, p.c), (56, 56, 64));
+    }
+
+    #[test]
+    fn avg_of_equal_codes_is_identity() {
+        // a window of identical codes has mean magnitude == that
+        // magnitude, and requant(magnitude(c)) == c for in-range codes
+        for c in [-8i32, -2, 0, 3, 9] {
+            let a = Tensor3::filled(4, 4, 2, c);
+            let p = avgpool(&a, 2, 2);
+            assert_eq!((p.h, p.w, p.c), (2, 2, 2));
+            for &v in &p.data {
+                assert_eq!(v, c, "code {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn avg_of_zeros_is_zero() {
+        let a = Tensor3::filled(4, 4, 1, ZERO_CODE);
+        let p = avgpool(&a, 2, 2);
+        assert!(p.data.iter().all(|&v| v == ZERO_CODE));
+    }
+
+    #[test]
+    fn avg_lies_between_min_and_max_code() {
+        let mut a = Tensor3::filled(2, 2, 1, 0);
+        a.set(0, 0, 0, 6); // 8.0 in value; rest 1.0 → mean 2.75 → code 3
+        let p = avgpool(&a, 2, 2);
+        let got = p.get(0, 0, 0);
+        assert!((0..=6).contains(&got), "avg code {got} out of range");
+        // exact: (magnitude(6)+3*magnitude(0))/4 = (32768+12288)/4 = 11264
+        assert_eq!(got, crate::lns::tables::requant_act(11264));
+    }
+
+    #[test]
+    fn global_avgpool_reduces_to_1x1() {
+        let a = Tensor3::filled(14, 14, 3, 2);
+        let p = avgpool(&a, 14, 1);
+        assert_eq!((p.h, p.w, p.c), (1, 1, 3));
+        assert_eq!(p.get(0, 0, 0), 2);
     }
 }

@@ -3,9 +3,9 @@
 //! Subcommands:
 //!   report <id|all>        regenerate a paper table/figure
 //!   simulate <network>     per-layer cycle simulation of a CNN
-//!   infer [opts]           run TinyCNN inferences (PJRT or sim backend)
+//!   infer [opts]           run zoo-model inferences (PJRT or sim backend)
 //!   verify [opts]          sim-vs-HLO bit-exactness check
-//!   serve [opts]           TCP inference server
+//!   serve [opts]           TCP inference server (whole model zoo)
 //!   sweep                  design-space exploration (grid geometry)
 
 use std::time::{Duration, Instant};
@@ -47,13 +47,18 @@ fn main() -> Result<()> {
                 "usage: neuromax <report|simulate|infer|verify|serve|sweep|trace> ...\n\
                  \n\
                  report  <fig1|fig17|table1|fig18|fig19|fig20|table2|table3|sec5|all>\n\
-                 simulate <vgg16|mobilenet|resnet34|squeezenet|alexnet|tinycnn> [--packing]\n\
-                 infer   [--backend hlo|sim] [--count N] [--seed S] [--threads N]\n\
-                 verify  [--cases N] [--seed S]\n\
-                 serve   [--addr HOST:PORT] [--backend hlo|sim] [--secs N] [--batch N]\n\
-                         [--threads N]   (0 = one worker per core)\n\
+                 simulate <model> [--packing]\n\
+                 infer   [--model NAME] [--backend hlo|sim] [--count N] [--seed S]\n\
+                         [--threads N]   (hlo backend serves tinycnn only)\n\
+                 verify  [--cases N] [--seed S] [--model NAME] [--threads N]\n\
+                 serve   [--model NAME] [--addr HOST:PORT] [--backend hlo|sim]\n\
+                         [--secs N] [--batch N] [--threads N] (0 = one per core)\n\
                  sweep\n\
-                 trace   [--stride 1|2] [--cycles N]   (§5.1 pipeline waveform)"
+                 trace   [--stride 1|2] [--cycles N]   (§5.1 pipeline waveform)\n\
+                 \n\
+                 <model>/NAME: tinycnn | alexnet | vgg16 | resnet34 | mobilenet_v1\n\
+                   | squeezenet — or any `<name>-test` scaled profile; the server\n\
+                   protocol additionally accepts `INFER <model> <seed>` per request"
             );
             std::process::exit(2);
         }
@@ -151,18 +156,23 @@ fn cmd_infer(args: &[String]) -> Result<()> {
         Some("sim") => Backend::Sim,
         _ => Backend::Hlo,
     };
+    let model = opt(args, "--model").unwrap_or_else(|| "tinycnn".into());
     let count: usize = opt(args, "--count").and_then(|v| v.parse().ok()).unwrap_or(16);
     let seed: u64 = opt(args, "--seed").and_then(|v| v.parse().ok()).unwrap_or(1);
     let threads: usize = opt(args, "--threads").and_then(|v| v.parse().ok()).unwrap_or(0);
-    let mut engine =
-        InferenceEngine::with_options(backend, 7, EngineOptions { num_threads: threads })?;
+    let mut engine = InferenceEngine::for_model(
+        &model,
+        backend,
+        7,
+        EngineOptions { num_threads: threads, ..Default::default() },
+    )?;
     engine.warmup()?;
     let t0 = Instant::now();
-    let mut classes = vec![0usize; 10];
+    let mut classes: std::collections::HashMap<usize, usize> = Default::default();
     for i in 0..count {
-        let input = InferenceEngine::input_for_seed(seed + i as u64);
+        let input = engine.input(seed + i as u64);
         let inf = engine.infer(&input)?;
-        classes[inf.class] += 1;
+        *classes.entry(inf.class).or_default() += 1;
         if i < 4 {
             println!(
                 "req {i}: class {} wall {} us (accel: {} cycles = {:.1} us at 200 MHz)",
@@ -172,9 +182,15 @@ fn cmd_infer(args: &[String]) -> Result<()> {
         }
     }
     let dt = t0.elapsed().as_secs_f64();
+    let mut top: Vec<(usize, usize)> = classes.into_iter().collect();
+    top.sort_by_key(|&(_, n)| std::cmp::Reverse(n));
+    top.truncate(8);
     println!(
-        "{count} inferences ({backend:?}) in {:.3} s = {:.1} req/s; class histogram {classes:?}",
-        dt, count as f64 / dt
+        "{count} inferences of {} ({backend:?}) in {:.3} s = {:.1} req/s; \
+         top (class, hits): {top:?}",
+        engine.model.name,
+        dt,
+        count as f64 / dt
     );
     Ok(())
 }
@@ -182,6 +198,23 @@ fn cmd_infer(args: &[String]) -> Result<()> {
 fn cmd_verify(args: &[String]) -> Result<()> {
     let cases: usize = opt(args, "--cases").and_then(|v| v.parse().ok()).unwrap_or(8);
     let seed: u64 = opt(args, "--seed").and_then(|v| v.parse().ok()).unwrap_or(42);
+    if let Some(model) = opt(args, "--model") {
+        // PJRT-free path: reference executor vs LUT-fused engine over a
+        // zoo model (use the `-test` profiles for quick runs)
+        let threads: usize =
+            opt(args, "--threads").and_then(|v| v.parse().ok()).unwrap_or(4);
+        let net = workload::by_name(&model)
+            .with_context(|| format!("unknown network `{model}`"))?;
+        let r = verify::verify_zoo_model(&net, cases, seed, threads)?;
+        println!(
+            "{} ref-exec vs engine ({threads} threads) over {} cases: \
+             {} elements, {} mismatches",
+            net.name, r.cases, r.elements_compared, r.mismatches
+        );
+        anyhow::ensure!(r.ok(), "zoo verification FAILED");
+        println!("VERIFY OK — reference and engine agree bit-for-bit");
+        return Ok(());
+    }
     let mut rt = Runtime::from_default_dir()?;
     println!("platform: {}", rt.platform());
     let r = verify::verify_conv3x3(&mut rt, seed)?;
@@ -206,16 +239,18 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         Some("hlo") => Backend::Hlo,
         _ => Backend::Sim,
     };
+    let model = opt(args, "--model").unwrap_or_else(|| "tinycnn".into());
     let secs: u64 = opt(args, "--secs").and_then(|v| v.parse().ok()).unwrap_or(30);
     let max_batch: usize = opt(args, "--batch").and_then(|v| v.parse().ok()).unwrap_or(8);
     let threads: usize = opt(args, "--threads").and_then(|v| v.parse().ok()).unwrap_or(0);
-    let mut srv = Server::start_with_options(
+    let mut srv = Server::start_with_model(
         &addr,
+        &model,
         backend,
         BatchPolicy { max_batch, max_wait: Duration::from_millis(2) },
-        EngineOptions { num_threads: threads },
+        EngineOptions { num_threads: threads, ..Default::default() },
     )?;
-    println!("serving TinyCNN ({backend:?}) on {} for {secs}s ...", srv.addr);
+    println!("serving {model} ({backend:?}) on {} for {secs}s ...", srv.addr);
     srv.serve_until(Some(Instant::now() + Duration::from_secs(secs)))?;
     println!("{}", srv.metrics.summary());
     srv.shutdown();

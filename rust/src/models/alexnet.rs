@@ -6,16 +6,31 @@ use super::layer::{LayerDesc, Network};
 
 /// AlexNet conv stack (227×227 input, original single-tower sizes).
 pub fn alexnet() -> Network {
+    alexnet_scaled("AlexNet", 227, &[96, 256, 384, 384, 256])
+}
+
+/// Scaled-down AlexNet shape profile (same 5-conv/2-pool topology) for
+/// fast end-to-end execution tests.
+pub fn alexnet_test() -> Network {
+    alexnet_scaled("AlexNet-test", 51, &[12, 32, 48, 48, 32])
+}
+
+/// AlexNet topology generator: 11×11 s4 stem, two pooled 5×5/3×3 stages,
+/// then three 3×3 convs; dims chain-propagated from `hw0`.
+fn alexnet_scaled(name: &str, hw0: usize, c: &[usize; 5]) -> Network {
+    let h1 = (hw0 - 11) / 4 + 1;
+    let p1 = (h1 - 3) / 2 + 1;
+    let p2 = (p1 - 3) / 2 + 1;
     let l = vec![
-        LayerDesc::conv("CONV1", 11, 4, 0, 227, 227, 3, 96),
-        LayerDesc::pool("POOL1", 3, 2, 55, 55, 96),
-        LayerDesc::conv("CONV2", 5, 1, 2, 27, 27, 96, 256),
-        LayerDesc::pool("POOL2", 3, 2, 27, 27, 256),
-        LayerDesc::conv("CONV3", 3, 1, 1, 13, 13, 256, 384),
-        LayerDesc::conv("CONV4", 3, 1, 1, 13, 13, 384, 384),
-        LayerDesc::conv("CONV5", 3, 1, 1, 13, 13, 384, 256),
+        LayerDesc::conv("CONV1", 11, 4, 0, hw0, hw0, 3, c[0]),
+        LayerDesc::pool("POOL1", 3, 2, h1, h1, c[0]),
+        LayerDesc::conv("CONV2", 5, 1, 2, p1, p1, c[0], c[1]),
+        LayerDesc::pool("POOL2", 3, 2, p1, p1, c[1]),
+        LayerDesc::conv("CONV3", 3, 1, 1, p2, p2, c[1], c[2]),
+        LayerDesc::conv("CONV4", 3, 1, 1, p2, p2, c[2], c[3]),
+        LayerDesc::conv("CONV5", 3, 1, 1, p2, p2, c[3], c[4]),
     ];
-    Network { name: "AlexNet".into(), layers: l }
+    Network { name: name.into(), layers: l }
 }
 
 #[cfg(test)]
@@ -35,5 +50,13 @@ mod tests {
     fn pool_dims() {
         let net = alexnet();
         net.validate_chaining().unwrap_or_else(|e| panic!("{e}"));
+    }
+
+    #[test]
+    fn test_profile_chains_and_shrinks() {
+        let small = alexnet_test();
+        small.validate_chaining().unwrap_or_else(|e| panic!("{e}"));
+        assert_eq!(small.layers.len(), alexnet().layers.len());
+        assert!(small.total_macs() < alexnet().total_macs() / 500);
     }
 }

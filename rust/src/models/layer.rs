@@ -59,6 +59,14 @@ impl LayerDesc {
         }
     }
 
+    pub fn avgpool(name: &str, k: usize, stride: usize, hin: usize, win: usize, c: usize) -> Self {
+        LayerDesc {
+            name: name.into(),
+            op: Op::Pool { k, stride, max: false },
+            hin, win, cin: c, cout: c,
+        }
+    }
+
     pub fn fc(name: &str, cin: usize, cout: usize) -> Self {
         LayerDesc { name: name.into(), op: Op::Fc, hin: 1, win: 1, cin, cout }
     }

@@ -2,26 +2,40 @@
 
 use super::layer::{LayerDesc, Network};
 
+/// (stride of dw, width multiple of pw cout) per separable pair.
+const PAIRS: [(usize, usize); 13] = [
+    (1, 2), (2, 4), (1, 4), (2, 8), (1, 8), (2, 16),
+    (1, 16), (1, 16), (1, 16), (1, 16), (1, 16),
+    (2, 32), (1, 32),
+];
+
 /// Standard MobileNet v1 body: first conv s2, then 13 dw/pw pairs.
 pub fn mobilenet_v1() -> Network {
+    mobilenet_scaled("MobileNetV1", 224, 32)
+}
+
+/// Scaled-down MobileNet v1 shape profile (same 27-layer topology) for
+/// fast end-to-end execution tests.
+pub fn mobilenet_v1_test() -> Network {
+    mobilenet_scaled("MobileNetV1-test", 32, 4)
+}
+
+/// MobileNet topology generator: stem conv s2 to `c0` channels, then the
+/// 13 separable pairs with couts `c0 × PAIRS[i].1`; dims chain-propagated.
+fn mobilenet_scaled(name: &str, hw0: usize, c0: usize) -> Network {
     let mut l = Vec::new();
-    l.push(LayerDesc::conv("CONV1", 3, 2, 1, 224, 224, 3, 32));
-    // (stride of dw, cout of pw) per pair, input dims tracked manually
-    let spec: &[(usize, usize)] = &[
-        (1, 64), (2, 128), (1, 128), (2, 256), (1, 256), (2, 512),
-        (1, 512), (1, 512), (1, 512), (1, 512), (1, 512),
-        (2, 1024), (1, 1024),
-    ];
-    let mut hw = 112;
-    let mut cin = 32;
-    for (i, &(s, cout)) in spec.iter().enumerate() {
+    l.push(LayerDesc::conv("CONV1", 3, 2, 1, hw0, hw0, 3, c0));
+    let mut hw = hw0 / 2;
+    let mut cin = c0;
+    for (i, &(s, wm)) in PAIRS.iter().enumerate() {
+        let cout = c0 * wm;
         l.push(LayerDesc::depthwise(&format!("DW{}", i + 1), s, hw, hw, cin));
         let hw_out = if s == 2 { hw / 2 } else { hw };
         l.push(LayerDesc::pointwise(&format!("PW{}", i + 1), hw_out, hw_out, cin, cout));
         hw = hw_out;
         cin = cout;
     }
-    Network { name: "MobileNetV1".into(), layers: l }
+    Network { name: name.into(), layers: l }
 }
 
 #[cfg(test)]
@@ -31,6 +45,7 @@ mod tests {
     #[test]
     fn chains() {
         mobilenet_v1().validate_chaining().unwrap();
+        mobilenet_v1_test().validate_chaining().unwrap();
     }
 
     #[test]
@@ -54,5 +69,13 @@ mod tests {
             .filter(|l| matches!(l.op, super::super::layer::Op::Pointwise { .. }))
             .map(|l| l.macs()).sum();
         assert!(pw as f64 / net.total_macs() as f64 > 0.7);
+    }
+
+    #[test]
+    fn test_profile_ends_at_1x1x128() {
+        let net = mobilenet_v1_test();
+        let last = net.layers.last().unwrap();
+        assert_eq!(last.out_dims(), (1, 1));
+        assert_eq!(last.cout, 128);
     }
 }

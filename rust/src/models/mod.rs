@@ -6,9 +6,11 @@ pub mod alexnet;
 pub mod layer;
 pub mod mobilenet_v1;
 pub mod resnet34;
+pub mod runner;
 pub mod squeezenet;
 pub mod tinycnn;
 pub mod vgg16;
 pub mod workload;
 
 pub use layer::{LayerDesc, Network, Op};
+pub use runner::{FusedNet, NetWeights};

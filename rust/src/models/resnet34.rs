@@ -1,29 +1,37 @@
 //! ResNet-34 workload (224×224×3; basic blocks, conv layers only — the
-//! residual adds run on the post-processing path, not the PE grid).
+//! identity residual adds run on the post-processing path, not the PE
+//! grid; projection shortcuts are explicit 1×1 s2 layers and merge with
+//! the block output in the generic forward's residual routing).
 
 use super::layer::{LayerDesc, Network};
+
+/// Basic blocks per stage.
+const BLOCKS: [usize; 4] = [3, 4, 6, 3];
 
 /// ResNet-34: 7×7 s2 stem, maxpool, then stages of basic blocks
 /// (3, 4, 6, 3) with channel doubling and stride-2 entry convs.
 pub fn resnet34() -> Network {
-    let mut l = Vec::new();
-    l.push(LayerDesc::conv("CONV1", 7, 2, 3, 224, 224, 3, 64));
-    l.push(LayerDesc::pool("POOL1", 3, 2, 112, 112, 64));
-    // NB: 112 pad... standard resnet pools 112->56 with pad 1; model as
-    // k=2 s=2 for shape bookkeeping simplicity of the chain.
-    l.pop();
-    l.push(LayerDesc::pool("POOL1", 2, 2, 112, 112, 64));
+    resnet34_scaled("ResNet34", 224, 64)
+}
 
-    let stages: &[(usize, usize, usize)] = &[
-        // (blocks, channels, input hw)
-        (3, 64, 56),
-        (4, 128, 56),
-        (6, 256, 28),
-        (3, 512, 14),
-    ];
-    let mut cin = 64;
-    for (si, &(blocks, ch, hw_in)) in stages.iter().enumerate() {
-        let mut hw = hw_in;
+/// Scaled-down ResNet-34 shape profile (same 36-compute-layer topology)
+/// for fast end-to-end execution tests.
+pub fn resnet34_test() -> Network {
+    resnet34_scaled("ResNet34-test", 32, 8)
+}
+
+/// ResNet-34 topology generator: stem to `c0` channels, stages at
+/// `c0 × {1,2,4,8}`; dims chain-propagated from `hw0`.
+fn resnet34_scaled(name: &str, hw0: usize, c0: usize) -> Network {
+    let mut l = Vec::new();
+    l.push(LayerDesc::conv("CONV1", 7, 2, 3, hw0, hw0, 3, c0));
+    let mut hw = (hw0 + 2 * 3 - 7) / 2 + 1;
+    l.push(LayerDesc::pool("POOL1", 2, 2, hw, hw, c0));
+    hw /= 2;
+
+    let mut cin = c0;
+    for (si, &blocks) in BLOCKS.iter().enumerate() {
+        let ch = c0 << si;
         for b in 0..blocks {
             let stride = if si > 0 && b == 0 { 2 } else { 1 };
             let name_a = format!("S{}B{}_A", si + 1, b + 1);
@@ -46,7 +54,7 @@ pub fn resnet34() -> Network {
             cin = ch;
         }
     }
-    Network { name: "ResNet34".into(), layers: l }
+    Network { name: name.into(), layers: l }
 }
 
 #[cfg(test)]
@@ -68,5 +76,15 @@ mod tests {
         let s4 = net.layers.iter().find(|l| l.name == "S4B1_A").unwrap();
         assert_eq!((s4.hin, s4.win, s4.cin, s4.cout), (14, 14, 256, 512));
         assert_eq!(s4.out_dims(), (7, 7));
+    }
+
+    #[test]
+    fn test_profile_same_topology() {
+        let small = resnet34_test();
+        assert_eq!(small.compute_layers().count(), 36);
+        assert_eq!(small.layers.len(), resnet34().layers.len());
+        let last = small.layers.last().unwrap();
+        assert_eq!(last.out_dims(), (1, 1));
+        assert_eq!(last.cout, 64);
     }
 }

@@ -1,0 +1,192 @@
+//! Generic per-network weight container: seed-deterministic (codes,
+//! signs) tensors for every compute layer of any zoo [`Network`], plus
+//! the engine-fused form shared across requests. This is what lets the
+//! serving stack execute the whole model zoo instead of one hand-wired
+//! net: `dataflow::forward` consumes these alongside a [`ForwardPlan`].
+//!
+//! The random distribution (≈8% exact zeros, small codes) and the single
+//! PRNG stream across layers are identical to the original TinyCNN
+//! generator, so `NetWeights::random(&tinycnn(), seed)` reproduces
+//! `TinyCnnWeights::random(seed)` tensor-for-tensor — the AOT HLO
+//! artifacts and the python test vectors keep verifying unchanged.
+//!
+//! [`ForwardPlan`]: crate::dataflow::forward::ForwardPlan
+
+use super::layer::{LayerDesc, Network, Op};
+use crate::dataflow::engine::FusedWeights;
+use crate::lns::logquant::ZERO_CODE;
+use crate::tensor::{Tensor3, Tensor4};
+use crate::util::prng::SplitMix64;
+
+/// Weight tensor shape `[K, kh, kw, C]` for a layer, or `None` for
+/// weight-free layers (pools).
+pub fn weight_shape(l: &LayerDesc) -> Option<(usize, usize, usize, usize)> {
+    match l.op {
+        Op::Conv { kh, kw, .. } => Some((l.cout, kh, kw, l.cin)),
+        Op::Depthwise { k, .. } => Some((l.cin, k, k, 1)),
+        Op::Pointwise { .. } => Some((l.cout, 1, 1, l.cin)),
+        Op::Fc => Some((l.cout, 1, 1, l.cin)),
+        Op::Pool { .. } => None,
+    }
+}
+
+/// A full set of weights for one network: per-layer `(codes, signs)`
+/// tensor pairs aligned with `net.layers` (pools hold `None`).
+#[derive(Clone, Debug)]
+pub struct NetWeights {
+    pub layers: Vec<Option<(Tensor4, Tensor4)>>,
+}
+
+impl NetWeights {
+    /// Random plausible weights: mostly small codes, ~8% exact zeros —
+    /// the same distribution the python test-vector generator uses.
+    /// One PRNG stream across all layers, in layer order.
+    pub fn random(net: &Network, seed: u64) -> Self {
+        let mut rng = SplitMix64::new(seed);
+        let layers = net
+            .layers
+            .iter()
+            .map(|l| {
+                weight_shape(l).map(|(k, kh, kw, c)| {
+                    let mut tc = Tensor4::new(k, kh, kw, c);
+                    let mut ts = Tensor4::new(k, kh, kw, c);
+                    for v in tc.data.iter_mut() {
+                        *v = if rng.bool(0.08) { ZERO_CODE } else { rng.range_i32(-12, 5) };
+                    }
+                    for v in ts.data.iter_mut() {
+                        *v = rng.sign();
+                    }
+                    (tc, ts)
+                })
+            })
+            .collect();
+        NetWeights { layers }
+    }
+
+    /// Fuse every layer's (codes, signs) pair into engine LUT-row
+    /// indices — built once, shared by every request/batch element.
+    pub fn fuse(&self) -> FusedNet {
+        FusedNet {
+            layers: self
+                .layers
+                .iter()
+                .map(|w| w.as_ref().map(|(c, s)| FusedWeights::fuse(c, s)))
+                .collect(),
+        }
+    }
+
+    /// Total weight parameters held (sanity/reporting).
+    pub fn total_params(&self) -> usize {
+        self.layers
+            .iter()
+            .flatten()
+            .map(|(c, _)| c.len())
+            .sum()
+    }
+}
+
+/// A network's weights pre-fused for `dataflow::engine`, aligned with
+/// `net.layers` (pools hold `None`).
+#[derive(Clone, Debug)]
+pub struct FusedNet {
+    pub layers: Vec<Option<FusedWeights>>,
+}
+
+/// Random input codes (log-quantized image) for a network's declared
+/// input dims — same distribution/stream as the original TinyCNN input
+/// generator.
+pub fn random_input_for(net: &Network, seed: u64) -> Tensor3 {
+    let l0 = &net.layers[0];
+    random_input_dims(l0.hin, l0.win, l0.cin, seed)
+}
+
+/// Random input codes for explicit dims.
+pub fn random_input_dims(h: usize, w: usize, c: usize, seed: u64) -> Tensor3 {
+    let mut rng = SplitMix64::new(seed);
+    let mut a = Tensor3::new(h, w, c);
+    for v in a.data.iter_mut() {
+        *v = if rng.bool(0.05) { ZERO_CODE } else { rng.range_i32(-10, 5) };
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{squeezenet::squeezenet_test, tinycnn::tinycnn, workload};
+
+    #[test]
+    fn shapes_follow_ops() {
+        let l = LayerDesc::depthwise("dw", 1, 8, 8, 16);
+        assert_eq!(weight_shape(&l), Some((16, 3, 3, 1)));
+        let p = LayerDesc::pool("p", 2, 2, 8, 8, 16);
+        assert_eq!(weight_shape(&p), None);
+        let f = LayerDesc::fc("fc", 128, 10);
+        assert_eq!(weight_shape(&f), Some((10, 1, 1, 128)));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let net = squeezenet_test();
+        let a = NetWeights::random(&net, 11);
+        let b = NetWeights::random(&net, 11);
+        let c = NetWeights::random(&net, 12);
+        for (x, y) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(
+                x.as_ref().map(|(t, s)| (&t.data, &s.data)),
+                y.as_ref().map(|(t, s)| (&t.data, &s.data))
+            );
+        }
+        let first = |w: &NetWeights| w.layers[0].as_ref().unwrap().0.data.clone();
+        assert_ne!(first(&a), first(&c));
+    }
+
+    #[test]
+    fn pools_are_weight_free_and_fused_layers_align() {
+        let net = squeezenet_test();
+        let w = NetWeights::random(&net, 3);
+        let f = w.fuse();
+        assert_eq!(w.layers.len(), net.layers.len());
+        assert_eq!(f.layers.len(), net.layers.len());
+        for (l, (wl, fl)) in net.layers.iter().zip(w.layers.iter().zip(&f.layers)) {
+            assert_eq!(wl.is_some(), l.is_compute(), "{}", l.name);
+            assert_eq!(fl.is_some(), l.is_compute(), "{}", l.name);
+        }
+    }
+
+    #[test]
+    fn reproduces_tinycnn_generator_exactly() {
+        // the pre-refactor TinyCNN generator, inlined: one stream, codes
+        // then signs per layer over the fixed shape list
+        let shapes = [(8, 3, 3, 4), (16, 3, 3, 8), (24, 1, 1, 16), (32, 3, 3, 24), (10, 1, 1, 512)];
+        let mut rng = SplitMix64::new(77);
+        let mut legacy = Vec::new();
+        for (k, kh, kw, c) in shapes {
+            let mut tc = Tensor4::new(k, kh, kw, c);
+            let mut ts = Tensor4::new(k, kh, kw, c);
+            for v in tc.data.iter_mut() {
+                *v = if rng.bool(0.08) { ZERO_CODE } else { rng.range_i32(-12, 5) };
+            }
+            for v in ts.data.iter_mut() {
+                *v = rng.sign();
+            }
+            legacy.push((tc, ts));
+        }
+        let w = NetWeights::random(&tinycnn(), 77);
+        assert_eq!(w.layers.len(), legacy.len());
+        for (got, want) in w.layers.iter().zip(&legacy) {
+            let (gc, gs) = got.as_ref().unwrap();
+            assert_eq!(gc.data, want.0.data);
+            assert_eq!(gs.data, want.1.data);
+        }
+    }
+
+    #[test]
+    fn every_zoo_model_gets_weights() {
+        for name in workload::ZOO_NAMES {
+            let net = workload::by_name(name).unwrap();
+            let w = NetWeights::random(&net, 1);
+            assert!(w.total_params() > 0, "{name}");
+        }
+    }
+}

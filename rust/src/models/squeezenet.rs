@@ -1,6 +1,9 @@
 //! SqueezeNet v1.0 [16] workload (fire modules: squeeze 1×1 + expand
 //! 1×1/3×3). Used by the Fig. 1 quantization study and as a serving
-//! workload; expand branches are modelled as two parallel layers.
+//! workload. Expand branches are two layers consuming the same squeeze
+//! output; the generic forward's shape-directed routing runs them as a
+//! branch + channel concat. Ends with the classifier conv and its global
+//! average pool (the avg-pool kernel runs on Q19.12 magnitudes).
 
 use super::layer::{LayerDesc, Network};
 
@@ -12,26 +15,44 @@ fn fire(l: &mut Vec<LayerDesc>, name: &str, hw: usize, cin: usize, s: usize, e1:
 
 /// SqueezeNet v1.0 conv stack.
 pub fn squeezenet() -> Network {
+    squeezenet_scaled("SqueezeNet", 224, 8)
+}
+
+/// Scaled-down SqueezeNet shape profile (same fire-module topology) for
+/// fast end-to-end execution tests.
+pub fn squeezenet_test() -> Network {
+    squeezenet_scaled("SqueezeNet-test", 32, 1)
+}
+
+/// SqueezeNet topology generator: channel counts are `base × d` with
+/// `d = 8` at full size; dims chain-propagated from `hw0`.
+fn squeezenet_scaled(name: &str, hw0: usize, d: usize) -> Network {
     let mut l = Vec::new();
-    l.push(LayerDesc::conv("CONV1", 7, 2, 3, 224, 224, 3, 96));
-    l.push(LayerDesc::pool("POOL1", 2, 2, 112, 112, 96));
-    fire(&mut l, "FIRE2", 56, 96, 16, 64, 64);
-    fire(&mut l, "FIRE3", 56, 128, 16, 64, 64);
-    fire(&mut l, "FIRE4", 56, 128, 32, 128, 128);
-    l.push(LayerDesc::pool("POOL4", 2, 2, 56, 56, 256));
-    fire(&mut l, "FIRE5", 28, 256, 32, 128, 128);
-    fire(&mut l, "FIRE6", 28, 256, 48, 192, 192);
-    fire(&mut l, "FIRE7", 28, 384, 48, 192, 192);
-    fire(&mut l, "FIRE8", 28, 384, 64, 256, 256);
-    l.push(LayerDesc::pool("POOL8", 2, 2, 28, 28, 512));
-    fire(&mut l, "FIRE9", 14, 512, 64, 256, 256);
-    l.push(LayerDesc::pointwise("CONV10", 14, 14, 512, 1000));
-    Network { name: "SqueezeNet".into(), layers: l }
+    l.push(LayerDesc::conv("CONV1", 7, 2, 3, hw0, hw0, 3, 12 * d));
+    let mut hw = (hw0 + 2 * 3 - 7) / 2 + 1;
+    l.push(LayerDesc::pool("POOL1", 2, 2, hw, hw, 12 * d));
+    hw /= 2;
+    fire(&mut l, "FIRE2", hw, 12 * d, 2 * d, 8 * d, 8 * d);
+    fire(&mut l, "FIRE3", hw, 16 * d, 2 * d, 8 * d, 8 * d);
+    fire(&mut l, "FIRE4", hw, 16 * d, 4 * d, 16 * d, 16 * d);
+    l.push(LayerDesc::pool("POOL4", 2, 2, hw, hw, 32 * d));
+    hw /= 2;
+    fire(&mut l, "FIRE5", hw, 32 * d, 4 * d, 16 * d, 16 * d);
+    fire(&mut l, "FIRE6", hw, 32 * d, 6 * d, 24 * d, 24 * d);
+    fire(&mut l, "FIRE7", hw, 48 * d, 6 * d, 24 * d, 24 * d);
+    fire(&mut l, "FIRE8", hw, 48 * d, 8 * d, 32 * d, 32 * d);
+    l.push(LayerDesc::pool("POOL8", 2, 2, hw, hw, 64 * d));
+    hw /= 2;
+    fire(&mut l, "FIRE9", hw, 64 * d, 8 * d, 32 * d, 32 * d);
+    l.push(LayerDesc::pointwise("CONV10", hw, hw, 64 * d, 125 * d));
+    l.push(LayerDesc::avgpool("POOL10", hw, 1, hw, hw, 125 * d));
+    Network { name: name.into(), layers: l }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use super::super::layer::Op;
 
     #[test]
     fn structure() {
@@ -39,5 +60,34 @@ mod tests {
         assert_eq!(net.layers.iter().filter(|l| l.name.ends_with("_SQ")).count(), 8);
         let g = net.total_macs() as f64 / 1e9;
         assert!((0.7..1.0).contains(&g), "got {g} GMAC");
+    }
+
+    #[test]
+    fn full_size_matches_v1_0_channels() {
+        let net = squeezenet();
+        let c1 = net.layers.iter().find(|l| l.name == "CONV1").unwrap();
+        assert_eq!(c1.cout, 96);
+        let sq = net.layers.iter().find(|l| l.name == "FIRE9_SQ").unwrap();
+        assert_eq!((sq.cin, sq.cout), (512, 64));
+        let c10 = net.layers.iter().find(|l| l.name == "CONV10").unwrap();
+        assert_eq!((c10.cin, c10.cout), (512, 1000));
+    }
+
+    #[test]
+    fn ends_with_global_avgpool() {
+        for net in [squeezenet(), squeezenet_test()] {
+            let last = net.layers.last().unwrap();
+            assert!(matches!(last.op, Op::Pool { max: false, .. }), "{}", net.name);
+            assert_eq!(last.out_dims(), (1, 1), "{}", net.name);
+        }
+    }
+
+    #[test]
+    fn test_profile_same_topology() {
+        let (full, small) = (squeezenet(), squeezenet_test());
+        assert_eq!(full.layers.len(), small.layers.len());
+        for (a, b) in full.layers.iter().zip(&small.layers) {
+            assert_eq!(a.name, b.name);
+        }
     }
 }

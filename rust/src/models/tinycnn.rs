@@ -4,10 +4,8 @@
 //! pipeline and the sim-vs-HLO verification.
 
 use super::layer::{LayerDesc, Network};
-use crate::dataflow::engine::FusedWeights;
-use crate::lns::logquant::ZERO_CODE;
+use super::runner::{random_input_dims, FusedNet, NetWeights};
 use crate::tensor::{Tensor3, Tensor4};
-use crate::util::prng::SplitMix64;
 
 /// Input dims of TinyCNN.
 pub const IN_H: usize = 16;
@@ -52,56 +50,54 @@ impl TinyCnnWeights {
 
     /// Random plausible weights: mostly small codes, ~8% exact zeros —
     /// the same distribution the python test-vector generator uses.
+    /// Delegates to the generic [`NetWeights`] generator, which
+    /// reproduces the original TinyCNN stream tensor-for-tensor.
     pub fn random(seed: u64) -> Self {
-        let mut rng = SplitMix64::new(seed);
+        Self::from_net_weights(NetWeights::random(&tinycnn(), seed))
+    }
+
+    /// Re-shape generic [`NetWeights`] (for the TinyCNN network) into
+    /// the per-layer code/sign vectors the AOT artifact call expects —
+    /// the single seed→weights source of truth for both backends.
+    pub fn from_net_weights(nw: NetWeights) -> Self {
         let mut codes = Vec::new();
         let mut signs = Vec::new();
-        for (k, kh, kw, c) in Self::shapes() {
-            let mut tc = Tensor4::new(k, kh, kw, c);
-            let mut ts = Tensor4::new(k, kh, kw, c);
-            for v in tc.data.iter_mut() {
-                *v = if rng.bool(0.08) { ZERO_CODE } else { rng.range_i32(-12, 5) };
-            }
-            for v in ts.data.iter_mut() {
-                *v = rng.sign();
-            }
-            codes.push(tc);
-            signs.push(ts);
+        for pair in nw.layers.into_iter().flatten() {
+            codes.push(pair.0);
+            signs.push(pair.1);
         }
         TinyCnnWeights { codes, signs }
     }
-}
 
-/// TinyCNN weights pre-fused for `dataflow::engine` (one LUT-row index
-/// tensor per layer, in forward order): built once, shared by every
-/// request/batch element on the sim serving path.
-#[derive(Clone, Debug)]
-pub struct FusedTinyCnn {
-    pub layers: Vec<FusedWeights>,
-}
-
-impl TinyCnnWeights {
-    /// Fuse every layer's (codes, signs) pair into engine row indices.
-    pub fn fuse(&self) -> FusedTinyCnn {
-        FusedTinyCnn {
+    /// Borrow these weights as a generic [`NetWeights`] (clones the
+    /// tensors — use once at engine construction, not per request).
+    pub fn to_net_weights(&self) -> NetWeights {
+        NetWeights {
             layers: self
                 .codes
                 .iter()
                 .zip(&self.signs)
-                .map(|(c, s)| FusedWeights::fuse(c, s))
+                .map(|(c, s)| Some((c.clone(), s.clone())))
                 .collect(),
         }
     }
 }
 
+/// TinyCNN weights pre-fused for `dataflow::engine`: since the generic
+/// graph-executor refactor this is just the generic [`FusedNet`]
+/// (layer-aligned, pools `None` — TinyCNN has none).
+pub type FusedTinyCnn = FusedNet;
+
+impl TinyCnnWeights {
+    /// Fuse every layer's (codes, signs) pair into engine row indices.
+    pub fn fuse(&self) -> FusedTinyCnn {
+        self.to_net_weights().fuse()
+    }
+}
+
 /// Random input codes (log-quantized image).
 pub fn random_input(seed: u64) -> Tensor3 {
-    let mut rng = SplitMix64::new(seed);
-    let mut a = Tensor3::new(IN_H, IN_W, IN_C);
-    for v in a.data.iter_mut() {
-        *v = if rng.bool(0.05) { ZERO_CODE } else { rng.range_i32(-10, 5) };
-    }
-    a
+    random_input_dims(IN_H, IN_W, IN_C, seed)
 }
 
 #[cfg(test)]

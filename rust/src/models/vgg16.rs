@@ -6,28 +6,36 @@ use super::layer::{LayerDesc, Network};
 /// Build VGG-16 (conv layers + pools; FC head excluded, matching the
 /// paper's Table 3 / Fig. 19 which evaluate the conv stack).
 pub fn vgg16() -> Network {
+    vgg16_scaled("VGG16", 224, &[64, 128, 256, 512, 512])
+}
+
+/// Scaled-down VGG-16 shape profile (same 13-conv/4-pool topology) for
+/// fast end-to-end execution tests.
+pub fn vgg16_test() -> Network {
+    vgg16_scaled("VGG16-test", 32, &[4, 8, 8, 16, 16])
+}
+
+/// VGG topology generator: five stages of (2,2,3,3,3) 3×3 convs with a
+/// 2×2 max-pool between stages; dims chain-propagated from `hw0`.
+fn vgg16_scaled(name: &str, hw0: usize, widths: &[usize; 5]) -> Network {
+    let stage_convs = [2usize, 2, 3, 3, 3];
     let mut l = Vec::new();
-    let c = |name: &str, hw: usize, cin: usize, cout: usize| {
-        LayerDesc::conv(name, 3, 1, 1, hw, hw, cin, cout)
-    };
-    l.push(c("CONV1_1", 224, 3, 64));
-    l.push(c("CONV1_2", 224, 64, 64));
-    l.push(LayerDesc::pool("POOL1", 2, 2, 224, 224, 64));
-    l.push(c("CONV2_1", 112, 64, 128));
-    l.push(c("CONV2_2", 112, 128, 128));
-    l.push(LayerDesc::pool("POOL2", 2, 2, 112, 112, 128));
-    l.push(c("CONV3_1", 56, 128, 256));
-    l.push(c("CONV3_2", 56, 256, 256));
-    l.push(c("CONV3_3", 56, 256, 256));
-    l.push(LayerDesc::pool("POOL3", 2, 2, 56, 56, 256));
-    l.push(c("CONV4_1", 28, 256, 512));
-    l.push(c("CONV4_2", 28, 512, 512));
-    l.push(c("CONV4_3", 28, 512, 512));
-    l.push(LayerDesc::pool("POOL4", 2, 2, 28, 28, 512));
-    l.push(c("CONV5_1", 14, 512, 512));
-    l.push(c("CONV5_2", 14, 512, 512));
-    l.push(c("CONV5_3", 14, 512, 512));
-    Network { name: "VGG16".into(), layers: l }
+    let mut hw = hw0;
+    let mut cin = 3;
+    for (si, (&n, &cout)) in stage_convs.iter().zip(widths).enumerate() {
+        for ci in 0..n {
+            l.push(LayerDesc::conv(
+                &format!("CONV{}_{}", si + 1, ci + 1),
+                3, 1, 1, hw, hw, cin, cout,
+            ));
+            cin = cout;
+        }
+        if si < 4 {
+            l.push(LayerDesc::pool(&format!("POOL{}", si + 1), 2, 2, hw, hw, cout));
+            hw /= 2;
+        }
+    }
+    Network { name: name.into(), layers: l }
 }
 
 #[cfg(test)]
@@ -37,11 +45,13 @@ mod tests {
     #[test]
     fn chains() {
         vgg16().validate_chaining().unwrap();
+        vgg16_test().validate_chaining().unwrap();
     }
 
     #[test]
     fn thirteen_conv_layers() {
         assert_eq!(vgg16().compute_layers().count(), 13);
+        assert_eq!(vgg16_test().compute_layers().count(), 13);
     }
 
     #[test]
@@ -56,5 +66,16 @@ mod tests {
         let net = vgg16();
         let c12 = net.layers.iter().find(|l| l.name == "CONV1_2").unwrap();
         assert_eq!(c12.macs(), 1_849_688_064); // 224²·9·64·64
+    }
+
+    #[test]
+    fn test_profile_is_tiny_but_isomorphic() {
+        let (full, small) = (vgg16(), vgg16_test());
+        assert_eq!(full.layers.len(), small.layers.len());
+        for (a, b) in full.layers.iter().zip(&small.layers) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.kernel(), b.kernel());
+        }
+        assert!(small.total_macs() < full.total_macs() / 1000);
     }
 }

@@ -1,24 +1,83 @@
 //! Workload and request generation for the serving/benchmark harness.
 
-use super::alexnet::alexnet;
+use super::alexnet::{alexnet, alexnet_test};
 use super::layer::Network;
-use super::mobilenet_v1::mobilenet_v1;
-use super::resnet34::resnet34;
-use super::squeezenet::squeezenet;
+use super::mobilenet_v1::{mobilenet_v1, mobilenet_v1_test};
+use super::resnet34::{resnet34, resnet34_test};
+use super::squeezenet::{squeezenet, squeezenet_test};
 use super::tinycnn::tinycnn;
-use super::vgg16::vgg16;
+use super::vgg16::{vgg16, vgg16_test};
 use crate::util::prng::SplitMix64;
 
-/// All networks in the zoo by name.
+/// Canonical zoo model names (full-size profiles).
+pub const ZOO_NAMES: [&str; 6] =
+    ["tinycnn", "alexnet", "vgg16", "resnet34", "mobilenet_v1", "squeezenet"];
+
+/// Parse a zoo model name (with alias and `-test`/`_test` suffix
+/// handling) into its canonical base display name + test flag. Cheap —
+/// no `Network` is built.
+fn parse_name(name: &str) -> Option<(&'static str, bool)> {
+    let lower = name.to_ascii_lowercase();
+    let (base, test) = if let Some(b) = lower.strip_suffix("-test") {
+        (b, true)
+    } else if let Some(b) = lower.strip_suffix("_test") {
+        (b, true)
+    } else {
+        (lower.as_str(), false)
+    };
+    let canonical = match base {
+        "vgg16" => "VGG16",
+        "mobilenet" | "mobilenetv1" | "mobilenet_v1" => "MobileNetV1",
+        "resnet34" | "resnet-34" => "ResNet34",
+        "squeezenet" => "SqueezeNet",
+        "alexnet" => "AlexNet",
+        "tinycnn" => "TinyCNN",
+        _ => return None,
+    };
+    // TinyCNN is its own test profile
+    Some((canonical, test && canonical != "TinyCNN"))
+}
+
+/// Canonical display name for a zoo model name (e.g. `VGG16`,
+/// `AlexNet-test`), without building the network — alias/case/suffix
+/// variants all map to one spelling, itself accepted by [`by_name`].
+pub fn canonical_name(name: &str) -> Option<String> {
+    parse_name(name).map(|(base, test)| {
+        if test {
+            format!("{base}-test")
+        } else {
+            base.to_string()
+        }
+    })
+}
+
+/// All networks in the zoo by name. A `-test`/`_test` suffix selects the
+/// scaled-down shape profile (same topology, minutes → milliseconds) —
+/// e.g. `vgg16-test`; TinyCNN is its own test profile.
 pub fn by_name(name: &str) -> Option<Network> {
+    let (base, test) = parse_name(name)?;
+    let net = match (base, test) {
+        ("VGG16", false) => vgg16(),
+        ("VGG16", true) => vgg16_test(),
+        ("MobileNetV1", false) => mobilenet_v1(),
+        ("MobileNetV1", true) => mobilenet_v1_test(),
+        ("ResNet34", false) => resnet34(),
+        ("ResNet34", true) => resnet34_test(),
+        ("SqueezeNet", false) => squeezenet(),
+        ("SqueezeNet", true) => squeezenet_test(),
+        ("AlexNet", false) => alexnet(),
+        ("AlexNet", true) => alexnet_test(),
+        ("TinyCNN", _) => tinycnn(),
+        _ => unreachable!("parse_name returned an unknown canonical base"),
+    };
+    Some(net)
+}
+
+/// The scaled-down test profile of a zoo model (TinyCNN is already tiny).
+pub fn test_profile(name: &str) -> Option<Network> {
     match name.to_ascii_lowercase().as_str() {
-        "vgg16" => Some(vgg16()),
-        "mobilenet" | "mobilenetv1" | "mobilenet_v1" => Some(mobilenet_v1()),
-        "resnet34" | "resnet-34" => Some(resnet34()),
-        "squeezenet" => Some(squeezenet()),
-        "alexnet" => Some(alexnet()),
-        "tinycnn" => Some(tinycnn()),
-        _ => None,
+        "tinycnn" => by_name("tinycnn"),
+        other => by_name(&format!("{other}-test")),
     }
 }
 
@@ -84,6 +143,35 @@ mod tests {
             assert!(by_name(n).is_some(), "{n} missing");
         }
         assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn canonical_names_match_network_names() {
+        for n in [
+            "vgg16", "VGG16", "vgg16-test", "mobilenet", "mobilenet_v1_test",
+            "resnet-34", "squeezenet_test", "alexnet", "tinycnn", "TINYCNN-test",
+        ] {
+            let canon = canonical_name(n).unwrap_or_else(|| panic!("{n}"));
+            assert_eq!(canon, by_name(n).unwrap().name, "{n}");
+            // canonical form is itself resolvable and a fixed point
+            assert_eq!(canonical_name(&canon), Some(canon.clone()), "{n}");
+        }
+        assert!(canonical_name("nope").is_none());
+    }
+
+    #[test]
+    fn test_profiles_resolve_for_whole_zoo() {
+        for n in ZOO_NAMES {
+            let full = by_name(n).unwrap();
+            let small = test_profile(n).unwrap();
+            assert_eq!(full.layers.len(), small.layers.len(), "{n}");
+            // suffix spelling variants both resolve
+            if n != "tinycnn" {
+                assert!(by_name(&format!("{n}-test")).is_some(), "{n}-test");
+                assert!(by_name(&format!("{n}_test")).is_some(), "{n}_test");
+                assert!(small.total_macs() < full.total_macs(), "{n} not scaled");
+            }
+        }
     }
 
     #[test]

@@ -2,6 +2,14 @@
 //! and the AOT-compiled JAX/Pallas computation must agree **bit-for-bit**
 //! on the same quantized inputs — two independent implementations of the
 //! eq. 8 datapath pinning each other down.
+//!
+//! Since the graph-executor refactor the forwards here are thin wrappers
+//! over the model-generic `dataflow::forward` (one routing plan drives
+//! both numeric paths for *any* zoo network); the TinyCNN entry points
+//! remain because the AOT artifacts, the python test vectors and the
+//! serving benches are pinned to them.
+
+use std::sync::OnceLock;
 
 use anyhow::{ensure, Result};
 
@@ -9,41 +17,53 @@ use super::client::Runtime;
 use super::exec;
 use crate::dataflow::engine::Engine;
 use crate::dataflow::exec as fexec;
-use crate::models::tinycnn::{random_input, FusedTinyCnn, TinyCnnWeights};
+use crate::dataflow::forward::{
+    forward_engine_batch, forward_engine_planned, forward_ref_planned, forward_ref_with,
+    ForwardPlan,
+};
+use crate::models::layer::Network;
+use crate::models::runner::{FusedNet, NetWeights};
+use crate::models::tinycnn::{self, random_input, FusedTinyCnn, TinyCnnWeights};
 use crate::tensor::{Tensor3, Tensor4};
+
+/// Generic reference forward (reference executor numerics): returns the
+/// final layer's flattened output — logits for Fc-headed nets.
+pub fn forward_ref(net: &Network, w: &NetWeights, x: &Tensor3) -> Vec<i32> {
+    crate::dataflow::forward::forward_ref(net, w, x).data
+}
+
+/// Generic engine forward (LUT-fused multi-threaded numerics): bit-
+/// identical to [`forward_ref`] on the same weights.
+pub fn forward_engine(eng: &Engine, net: &Network, fw: &FusedNet, x: &Tensor3) -> Vec<i32> {
+    crate::dataflow::forward::forward_engine(eng, net, fw, x).data
+}
+
+fn tinycnn_net_plan() -> &'static (Network, ForwardPlan) {
+    static NP: OnceLock<(Network, ForwardPlan)> = OnceLock::new();
+    NP.get_or_init(|| {
+        let net = tinycnn::tinycnn();
+        let plan = ForwardPlan::infer(&net).expect("tinycnn routes");
+        (net, plan)
+    })
+}
 
 /// The rust-side functional TinyCNN forward (mirrors
 /// `model.tinycnn_forward` in python — conv → ReLU+requant chain, logits
-/// left in the psum domain).
+/// left in the psum domain). Wrapper over the generic executor.
 pub fn tinycnn_forward_sim(a: &Tensor3, w: &TinyCnnWeights) -> Vec<i32> {
-    // conv1: 16×16×4 -> 14×14×8
-    let x = fexec::requant(&fexec::conv2d(a, &w.codes[0], &w.signs[0], 1));
-    // conv2: 14×14×8 -> 6×6×16 (s2)
-    let x = fexec::requant(&fexec::conv2d(&x, &w.codes[1], &w.signs[1], 2));
-    // conv3 (1×1): 6×6×16 -> 6×6×24
-    let x = fexec::requant(&fexec::pointwise(&x, &w.codes[2], &w.signs[2], 1));
-    // conv4: 6×6×24 -> 4×4×32
-    let x = fexec::requant(&fexec::conv2d(&x, &w.codes[3], &w.signs[3], 1));
-    // fc head: 512 -> 10 (raw psums)
-    fexec::fc(&x, &w.codes[4], &w.signs[4])
+    let (net, plan) = tinycnn_net_plan();
+    // borrowed lookup: no per-call weight clones on the reference path
+    forward_ref_with(net, plan, |i| Some((&w.codes[i], &w.signs[i])), a).data
 }
 
 /// The engine-backed TinyCNN forward (the serving hot path): identical
 /// network chain as [`tinycnn_forward_sim`], computed by the LUT-fused,
 /// multi-threaded `dataflow::engine` on pre-fused weights. Bit-identical
 /// to the reference (pinned by tests here and in
-/// `rust/tests/engine_equiv.rs`).
+/// `rust/tests/engine_equiv.rs` / `rust/tests/zoo_forward.rs`).
 pub fn tinycnn_forward_engine(eng: &Engine, w: &FusedTinyCnn, a: &Tensor3) -> Vec<i32> {
-    // conv1: 16×16×4 -> 14×14×8
-    let x = fexec::requant(&eng.conv2d(a, &w.layers[0], 1));
-    // conv2: 14×14×8 -> 6×6×16 (s2)
-    let x = fexec::requant(&eng.conv2d(&x, &w.layers[1], 2));
-    // conv3 (1×1): 6×6×16 -> 6×6×24
-    let x = fexec::requant(&eng.pointwise(&x, &w.layers[2], 1));
-    // conv4: 6×6×24 -> 4×4×32
-    let x = fexec::requant(&eng.conv2d(&x, &w.layers[3], 1));
-    // fc head: 512 -> 10 (raw psums)
-    eng.fc(&x, &w.layers[4])
+    let (net, plan) = tinycnn_net_plan();
+    forward_engine_planned(eng, net, plan, w, a).data
 }
 
 /// Batched engine forward: the whole batch executes as one parallel unit
@@ -54,7 +74,11 @@ pub fn tinycnn_forward_batch(
     w: &FusedTinyCnn,
     inputs: &[Tensor3],
 ) -> Vec<Vec<i32>> {
-    eng.par_map(inputs, |e, a| tinycnn_forward_engine(e, w, a))
+    let (net, plan) = tinycnn_net_plan();
+    forward_engine_batch(eng, net, plan, w, inputs)
+        .into_iter()
+        .map(|t| t.data)
+        .collect()
 }
 
 /// Verification outcome.
@@ -82,6 +106,31 @@ pub fn verify_tinycnn(rt: &mut Runtime, cases: usize, seed: u64) -> Result<Verif
         ensure!(hlo.len() == sim.len(), "logit length mismatch");
         rep.elements_compared += hlo.len() as u64;
         rep.mismatches += hlo.iter().zip(&sim).filter(|(a, b)| a != b).count() as u64;
+    }
+    Ok(rep)
+}
+
+/// Verify reference vs engine forwards over a zoo network (no PJRT
+/// needed): `cases` random weight/input draws, engine at `threads`.
+pub fn verify_zoo_model(
+    net: &Network,
+    cases: usize,
+    seed: u64,
+    threads: usize,
+) -> Result<VerifyReport> {
+    let plan = ForwardPlan::infer(net).map_err(anyhow::Error::msg)?;
+    let eng = Engine::with_threads_forced(threads);
+    let mut rep = VerifyReport { cases, elements_compared: 0, mismatches: 0 };
+    for i in 0..cases {
+        let w = NetWeights::random(net, seed.wrapping_add(i as u64 * 7919));
+        let fused = w.fuse();
+        let a = crate::models::runner::random_input_for(net, seed ^ (i as u64) << 8);
+        let want = forward_ref_planned(net, &plan, &w, &a);
+        let got = forward_engine_planned(&eng, net, &plan, &fused, &a);
+        ensure!(want.len() == got.len(), "output length mismatch");
+        rep.elements_compared += want.len() as u64;
+        rep.mismatches +=
+            want.data.iter().zip(&got.data).filter(|(a, b)| a != b).count() as u64;
     }
     Ok(rep)
 }
@@ -166,5 +215,13 @@ mod tests {
         for (a, got) in inputs.iter().zip(&batch) {
             assert_eq!(got, &tinycnn_forward_engine(&eng, &fused, a));
         }
+    }
+
+    #[test]
+    fn zoo_verify_reports_zero_mismatches() {
+        let net = crate::models::workload::test_profile("alexnet").unwrap();
+        let rep = verify_zoo_model(&net, 2, 42, 2).unwrap();
+        assert!(rep.ok(), "{} mismatches", rep.mismatches);
+        assert!(rep.elements_compared > 0);
     }
 }

@@ -1,0 +1,106 @@
+//! Whole-zoo graph-executor equivalence: every model (scaled test
+//! profiles) must run end-to-end through both the reference forward
+//! (`dataflow::exec` numerics) and the LUT-fused engine forward
+//! (`dataflow::engine` numerics) with **bit-identical** outputs, at 1
+//! and 4 worker threads, single-shot and batched — plus the serving
+//! stack on top: per-request model selection over the TCP protocol.
+
+use std::time::{Duration, Instant};
+
+use neuromax::coordinator::batcher::BatchPolicy;
+use neuromax::coordinator::pipeline::{Backend, InferenceEngine};
+use neuromax::coordinator::server::{Client, Server};
+use neuromax::dataflow::engine::{Engine, EngineOptions};
+use neuromax::dataflow::forward::{
+    forward_engine_batch, forward_engine_planned, forward_ref_planned, ForwardPlan,
+};
+use neuromax::models::runner::{random_input_for, NetWeights};
+use neuromax::models::workload;
+
+const THREADS: [usize; 2] = [1, 4];
+
+#[test]
+fn every_zoo_model_engine_equals_reference() {
+    for name in workload::ZOO_NAMES {
+        let net = workload::test_profile(name).unwrap();
+        let plan = ForwardPlan::infer(&net).unwrap_or_else(|e| panic!("{name}: {e}"));
+        for seed in 0..2u64 {
+            let w = NetWeights::random(&net, seed.wrapping_mul(7919) ^ 0xBEEF);
+            let fused = w.fuse();
+            let x = random_input_for(&net, seed + 1);
+            let want = forward_ref_planned(&net, &plan, &w, &x);
+            assert!(!want.data.is_empty(), "{name}: empty output");
+            for threads in THREADS {
+                // forced: row-parallel path engages even on tiny layers
+                let eng = Engine::with_threads_forced(threads);
+                let got = forward_engine_planned(&eng, &net, &plan, &fused, &x);
+                assert_eq!(
+                    got, want,
+                    "{name}: engine != reference at seed={seed} threads={threads}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn every_zoo_model_batch_matches_singles() {
+    for name in workload::ZOO_NAMES {
+        let net = workload::test_profile(name).unwrap();
+        let plan = ForwardPlan::infer(&net).unwrap();
+        let w = NetWeights::random(&net, 0xC0DE);
+        let fused = w.fuse();
+        let inputs: Vec<_> = (0..5).map(|i| random_input_for(&net, i)).collect();
+        let eng = Engine::with_threads(4);
+        let batch = forward_engine_batch(&eng, &net, &plan, &fused, &inputs);
+        assert_eq!(batch.len(), inputs.len(), "{name}");
+        for (x, got) in inputs.iter().zip(&batch) {
+            let single = forward_engine_planned(&eng, &net, &plan, &fused, x);
+            assert_eq!(got, &single, "{name}: batch element != single-shot");
+        }
+    }
+}
+
+#[test]
+fn pipeline_serves_every_zoo_model_deterministically() {
+    for name in workload::ZOO_NAMES {
+        let net = workload::test_profile(name).unwrap();
+        let mut e =
+            InferenceEngine::for_network(net, Backend::Sim, 7, EngineOptions::default())
+                .unwrap();
+        let input = e.input(3);
+        let a = e.infer(&input).unwrap();
+        let b = e.infer(&input).unwrap();
+        assert_eq!(a.logits, b.logits, "{name}");
+        assert!(a.accel_cycles > 0, "{name}");
+        // the pipeline's logits equal the raw generic reference forward
+        let reference = neuromax::runtime::verify::forward_ref(&e.model, &e.weights, &input);
+        assert_eq!(a.logits, reference, "{name}: pipeline != reference");
+    }
+}
+
+#[test]
+fn server_roundtrip_with_per_request_model() {
+    let mut srv = Server::start(
+        "127.0.0.1:0",
+        Backend::Sim,
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+    )
+    .unwrap();
+    let addr = srv.addr;
+    let client = std::thread::spawn(move || {
+        let mut c = Client::connect(addr).unwrap();
+        // INFER <model> <seed> round-trips for several zoo test profiles
+        for model in ["tinycnn", "alexnet-test", "squeezenet_test", "mobilenet_v1-test"] {
+            let (class, _us) = c.infer_model(model, 11).unwrap();
+            let (class2, _us) = c.infer_model(model, 11).unwrap();
+            assert_eq!(class, class2, "{model}: same seed must repeat");
+        }
+        // default-model requests still interleave fine
+        let (class, _) = c.infer(5).unwrap();
+        assert!(class < 10);
+    });
+    srv.serve_until(Some(Instant::now() + Duration::from_secs(8))).unwrap();
+    client.join().unwrap();
+    srv.shutdown();
+}
