@@ -60,7 +60,7 @@ fn main() -> anyhow::Result<()> {
     let mut srv = Server::start(
         "127.0.0.1:0",
         Backend::Hlo,
-        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2), ..Default::default() },
     )?;
     let addr = srv.addr;
     let metrics = srv.metrics.clone();

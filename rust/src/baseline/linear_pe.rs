@@ -1,6 +1,11 @@
 //! Linear (multiplier-based) PE core — the baseline of Fig. 17 and the
 //! "traditional accelerator" strawman of §1: one 16-bit multiplier per PE,
 //! peak throughput/PE capped at 1 op/cycle.
+//!
+//! Contrast with the log PE (`arch::pe`): same output precision, but the
+//! log PE trades the multiplier for shifts + a small LUT, which is where
+//! the paper's area/throughput advantage (Fig. 17, `cost::area`) comes
+//! from.
 
 use crate::lns::fixed::to_fixed;
 #[cfg(test)]

@@ -1,6 +1,14 @@
 //! Dynamic batcher: accumulates inference requests until `max_batch` or
 //! `max_wait` elapses, then releases a batch — the standard serving
 //! trade-off (throughput vs tail latency) driving the e2e example.
+//!
+//! The queue is **bounded**: [`Batcher::try_push`] refuses work beyond
+//! `queue_cap` so the serving layer can answer `BUSY` instead of letting
+//! the queue (and every queued request's latency) grow without limit.
+//! On [`Batcher::close`] the consumer drains what is already queued —
+//! releasing partial batches immediately, without waiting out `max_wait`
+//! — and then receives `None`, which is what makes the server's graceful
+//! drain fast.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
@@ -15,14 +23,32 @@ pub struct Job<T> {
 /// Batching policy.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
+    /// Largest batch released to the consumer in one [`Batcher::next_batch`].
     pub max_batch: usize,
+    /// Longest a queued job waits before a partial batch is released.
     pub max_wait: Duration,
+    /// Admission bound: [`Batcher::try_push`] fails once this many jobs
+    /// are queued. `push` ignores it (legacy unbounded entry point).
+    pub queue_cap: usize,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) }
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 1024,
+        }
     }
+}
+
+/// Why [`Batcher::try_push`] refused a job; the payload is handed back so
+/// the caller can answer its reply channel.
+pub enum PushError<T> {
+    /// The queue is at `queue_cap`.
+    Full(T),
+    /// [`Batcher::close`] was already called.
+    Closed(T),
 }
 
 /// Thread-safe dynamic batcher.
@@ -43,17 +69,42 @@ impl<T> Batcher<T> {
         }
     }
 
-    /// Enqueue a job (non-blocking).
+    /// Enqueue a job unconditionally (no capacity check — serving paths
+    /// use [`Batcher::try_push`] so overload turns into `BUSY` replies).
     pub fn push(&self, payload: T) {
         let mut q = self.q.lock().unwrap();
         q.push_back(Job { payload, enqueued: Instant::now() });
         self.cv.notify_one();
     }
 
-    /// Mark the stream finished; wakes waiting consumers.
+    /// Enqueue a job if the queue has room and the batcher is open;
+    /// otherwise hand the payload back with the rejection reason.
+    pub fn try_push(&self, payload: T) -> Result<(), PushError<T>> {
+        let mut q = self.q.lock().unwrap();
+        // closed is checked while holding the queue lock (same q→closed
+        // order as next_batch): a push that wins the race against close()
+        // lands before the consumer's drain pass observes closed, so it
+        // is still delivered — never enqueued after the consumer exited
+        if self.is_closed() {
+            return Err(PushError::Closed(payload));
+        }
+        if q.len() >= self.policy.queue_cap {
+            return Err(PushError::Full(payload));
+        }
+        q.push_back(Job { payload, enqueued: Instant::now() });
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Mark the stream finished; wakes waiting consumers. Already-queued
+    /// jobs are still delivered (drain) before `next_batch` returns `None`.
     pub fn close(&self) {
         *self.closed.lock().unwrap() = true;
         self.cv.notify_all();
+    }
+
+    fn is_closed(&self) -> bool {
+        *self.closed.lock().unwrap()
     }
 
     /// Blocking: wait for a batch. Returns `None` when closed and drained.
@@ -64,6 +115,11 @@ impl<T> Batcher<T> {
                 break;
             }
             if !q.is_empty() {
+                // draining: ship whatever is queued without waiting for
+                // the batch to fill or the deadline to pass
+                if self.is_closed() {
+                    break;
+                }
                 // have some work: wait only until the oldest job's deadline
                 let oldest = q.front().unwrap().enqueued;
                 let elapsed = oldest.elapsed();
@@ -76,7 +132,7 @@ impl<T> Batcher<T> {
                     .unwrap();
                 q = guard;
             } else {
-                if *self.closed.lock().unwrap() {
+                if self.is_closed() {
                     return None;
                 }
                 let (guard, _) = self.cv.wait_timeout(q, Duration::from_millis(50)).unwrap();
@@ -97,9 +153,13 @@ mod tests {
     use super::*;
     use std::sync::Arc;
 
+    fn policy(max_batch: usize, max_wait: Duration) -> BatchPolicy {
+        BatchPolicy { max_batch, max_wait, ..Default::default() }
+    }
+
     #[test]
     fn full_batch_released_immediately() {
-        let b = Batcher::new(BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10) });
+        let b = Batcher::new(policy(4, Duration::from_secs(10)));
         for i in 0..4 {
             b.push(i);
         }
@@ -110,7 +170,7 @@ mod tests {
 
     #[test]
     fn partial_batch_released_after_deadline() {
-        let b = Batcher::new(BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(5) });
+        let b = Batcher::new(policy(64, Duration::from_millis(5)));
         b.push(1);
         let t0 = Instant::now();
         let batch = b.next_batch().unwrap();
@@ -120,10 +180,7 @@ mod tests {
 
     #[test]
     fn close_drains_and_ends() {
-        let b = Arc::new(Batcher::new(BatchPolicy {
-            max_batch: 2,
-            max_wait: Duration::from_millis(1),
-        }));
+        let b = Arc::new(Batcher::new(policy(2, Duration::from_millis(1))));
         let b2 = b.clone();
         let h = std::thread::spawn(move || {
             let mut total = 0;
@@ -144,10 +201,7 @@ mod tests {
     fn max_wait_releases_partial_batch_to_blocked_consumer() {
         // consumer blocks on an EMPTY queue first; a single push must
         // come back after ~max_wait even though the batch never fills
-        let b = Arc::new(Batcher::new(BatchPolicy {
-            max_batch: 64,
-            max_wait: Duration::from_millis(10),
-        }));
+        let b = Arc::new(Batcher::new(policy(64, Duration::from_millis(10))));
         let b2 = b.clone();
         let consumer = std::thread::spawn(move || {
             let t0 = Instant::now();
@@ -164,10 +218,7 @@ mod tests {
     #[test]
     fn close_wakes_blocked_consumer_without_deadlock() {
         // consumer parked on an empty queue; close() alone must end it
-        let b = Arc::new(Batcher::<u32>::new(BatchPolicy {
-            max_batch: 8,
-            max_wait: Duration::from_secs(10),
-        }));
+        let b = Arc::new(Batcher::<u32>::new(policy(8, Duration::from_secs(10))));
         let b2 = b.clone();
         let consumer = std::thread::spawn(move || b2.next_batch());
         std::thread::sleep(Duration::from_millis(10));
@@ -179,10 +230,7 @@ mod tests {
     fn close_drains_pending_jobs_from_blocked_consumer() {
         // jobs pushed while the consumer is parked, then close: every
         // job must still be delivered before the None
-        let b = Arc::new(Batcher::new(BatchPolicy {
-            max_batch: 4,
-            max_wait: Duration::from_millis(1),
-        }));
+        let b = Arc::new(Batcher::new(policy(4, Duration::from_millis(1))));
         let b2 = b.clone();
         let consumer = std::thread::spawn(move || {
             let mut total = 0;
@@ -203,12 +251,65 @@ mod tests {
 
     #[test]
     fn overfull_queue_splits_into_max_batches() {
-        let b = Batcher::new(BatchPolicy { max_batch: 3, max_wait: Duration::from_millis(1) });
+        let b = Batcher::new(policy(3, Duration::from_millis(1)));
         for i in 0..7 {
             b.push(i);
         }
         assert_eq!(b.next_batch().unwrap().len(), 3);
         assert_eq!(b.next_batch().unwrap().len(), 3);
         assert_eq!(b.depth(), 1);
+    }
+
+    #[test]
+    fn try_push_bounded_by_queue_cap() {
+        let b = Batcher::new(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            queue_cap: 2,
+        });
+        assert!(b.try_push(1).is_ok());
+        assert!(b.try_push(2).is_ok());
+        match b.try_push(3) {
+            Err(PushError::Full(v)) => assert_eq!(v, 3, "payload handed back"),
+            _ => panic!("third push must be refused at queue_cap=2"),
+        }
+        assert_eq!(b.depth(), 2, "refused job must not be queued");
+        // draining one batch frees capacity again
+        assert_eq!(b.next_batch().unwrap().len(), 2);
+        assert!(b.try_push(4).is_ok());
+    }
+
+    #[test]
+    fn try_push_after_close_is_rejected() {
+        let b = Batcher::new(BatchPolicy::default());
+        b.close();
+        match b.try_push(9) {
+            Err(PushError::Closed(v)) => assert_eq!(v, 9),
+            _ => panic!("closed batcher must reject try_push"),
+        }
+    }
+
+    #[test]
+    fn close_releases_partial_batch_without_waiting_deadline() {
+        // a job parked behind a long max_wait must be released promptly
+        // once the batcher closes — this is what makes server drain fast
+        let b = Arc::new(Batcher::new(policy(64, Duration::from_secs(10))));
+        let b2 = b.clone();
+        let consumer = std::thread::spawn(move || {
+            let t0 = Instant::now();
+            let first = b2.next_batch();
+            (first.map(|v| v.len()), b2.next_batch().is_none(), t0.elapsed())
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        b.push(1);
+        std::thread::sleep(Duration::from_millis(20));
+        b.close();
+        let (len, ended, waited) = consumer.join().unwrap();
+        assert_eq!(len, Some(1));
+        assert!(ended, "after the drained batch the stream must end");
+        assert!(
+            waited < Duration::from_secs(5),
+            "drain must not wait out max_wait ({waited:?})"
+        );
     }
 }

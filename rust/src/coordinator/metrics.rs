@@ -1,7 +1,24 @@
 //! Serving metrics: counters + latency histogram (no external crates).
+//!
+//! Three aggregation levels, all lock-light (atomics; one mutex each for
+//! the batch-size log and the per-model map):
+//!
+//! * **global** — requests/responses/errors, dynamic-batch accounting,
+//!   the enqueue-to-reply latency histogram, and per-reason admission
+//!   drop counters (`queue-full`, `unknown-model`, `shutdown`);
+//! * **per shard** ([`ShardStats`], presized by
+//!   [`Metrics::for_shards`]) — what each engine shard executed;
+//! * **per model** ([`ModelStats`], created on first use) — how traffic
+//!   split across the zoo.
+//!
+//! [`Metrics::summary`] renders everything on **one line** because the
+//! wire protocol's `STATS` reply is line-oriented (see
+//! `docs/PROTOCOL.md`); older clients that only parse the global prefix
+//! keep working.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Fixed log-scale latency histogram (µs buckets: 1, 2, 4, ... 2^31).
 #[derive(Debug, Default)]
@@ -55,6 +72,60 @@ impl LatencyHistogram {
     }
 }
 
+/// What one engine shard executed (see `coordinator::shard`).
+#[derive(Debug, Default)]
+pub struct ShardStats {
+    /// Jobs executed on this shard.
+    pub requests: AtomicU64,
+    /// Dynamic batches this shard's engine thread pulled.
+    pub batches: AtomicU64,
+    /// Engine wall time spent executing this shard's batches, ns.
+    pub wall_ns: AtomicU64,
+    /// Enqueue-to-reply latency of jobs answered by this shard.
+    pub latency: LatencyHistogram,
+}
+
+impl ShardStats {
+    pub fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.requests.fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.requests.load(Ordering::Relaxed) as f64 / b as f64
+    }
+}
+
+/// How one zoo model's traffic executed (model-group granularity: each
+/// dynamic batch is split into per-model groups before execution).
+#[derive(Debug, Default)]
+pub struct ModelStats {
+    /// Jobs answered for this model.
+    pub requests: AtomicU64,
+    /// Model groups executed (one engine call each).
+    pub batches: AtomicU64,
+    /// Engine wall time spent on this model's groups, ns.
+    pub wall_ns: AtomicU64,
+    /// Failed inferences for this model.
+    pub errors: AtomicU64,
+    /// Enqueue-to-reply latency of this model's jobs.
+    pub latency: LatencyHistogram,
+}
+
+impl ModelStats {
+    pub fn mean_batch(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.requests.load(Ordering::Relaxed) as f64 / b as f64
+    }
+}
+
 /// Server-wide metrics.
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -70,9 +141,47 @@ pub struct Metrics {
     pub latency: LatencyHistogram,
     /// (batch size) log for mean-batch-size reporting.
     pub batch_sizes: Mutex<Vec<usize>>,
+    /// Requests refused because the routed shard's queue was at capacity.
+    pub dropped_queue_full: AtomicU64,
+    /// Requests refused because the server was draining for shutdown.
+    pub dropped_shutdown: AtomicU64,
+    /// Requests refused at parse time for an unknown model name.
+    pub dropped_unknown_model: AtomicU64,
+    /// Jobs routed away from their model's home shard (load spill).
+    pub spills: AtomicU64,
+    /// Per-shard execution stats; empty unless built by
+    /// [`Metrics::for_shards`].
+    pub shards: Vec<ShardStats>,
+    /// Per-model execution stats, keyed by canonical model name.
+    pub models: Mutex<HashMap<String, Arc<ModelStats>>>,
 }
 
 impl Metrics {
+    /// Metrics presized for `n` engine shards.
+    pub fn for_shards(n: usize) -> Self {
+        Metrics {
+            shards: (0..n).map(|_| ShardStats::default()).collect(),
+            ..Default::default()
+        }
+    }
+
+    /// The stats slot of shard `i` (panics if not built by
+    /// [`Metrics::for_shards`] with enough shards).
+    pub fn shard(&self, i: usize) -> &ShardStats {
+        &self.shards[i]
+    }
+
+    /// The stats slot for `model` (canonical name), created on first use.
+    /// The common hit path allocates nothing (one lookup per model group
+    /// per batch on the serving path).
+    pub fn model(&self, model: &str) -> Arc<ModelStats> {
+        let mut map = self.models.lock().unwrap();
+        if let Some(ms) = map.get(model) {
+            return ms.clone();
+        }
+        map.entry(model.to_string()).or_default().clone()
+    }
+
     pub fn record_batch(&self, size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
@@ -92,11 +201,15 @@ impl Metrics {
         self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
     }
 
+    /// One-line summary: the global counters, then admission drops, then
+    /// per-shard and per-model segments (omitted when empty). Stays on
+    /// one line so the `STATS` protocol reply remains line-oriented.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} responses={} errors={} batches={} mean_batch={:.2} \
              batch_wall_ms={:.2} lat_mean={:.0}us lat_p50~{}us lat_p99~{}us \
-             lat_max={}us",
+             lat_max={}us busy_queue_full={} busy_shutdown={} unknown_model={} \
+             spills={}",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.errors.load(Ordering::Relaxed),
@@ -107,7 +220,54 @@ impl Metrics {
             self.latency.quantile_us(0.5),
             self.latency.quantile_us(0.99),
             self.latency.max_us(),
-        )
+            self.dropped_queue_full.load(Ordering::Relaxed),
+            self.dropped_shutdown.load(Ordering::Relaxed),
+            self.dropped_unknown_model.load(Ordering::Relaxed),
+            self.spills.load(Ordering::Relaxed),
+        );
+        if !self.shards.is_empty() {
+            s.push_str(" shards=[");
+            for (i, sh) in self.shards.iter().enumerate() {
+                if i > 0 {
+                    s.push_str("; ");
+                }
+                s.push_str(&format!(
+                    "s{i}: req={} batches={} mean_batch={:.2} p50~{}us p99~{}us \
+                     wall_ms={:.2}",
+                    sh.requests.load(Ordering::Relaxed),
+                    sh.batches.load(Ordering::Relaxed),
+                    sh.mean_batch(),
+                    sh.latency.quantile_us(0.5),
+                    sh.latency.quantile_us(0.99),
+                    sh.wall_ns.load(Ordering::Relaxed) as f64 / 1e6,
+                ));
+            }
+            s.push(']');
+        }
+        let models = self.models.lock().unwrap();
+        if !models.is_empty() {
+            let mut names: Vec<&String> = models.keys().collect();
+            names.sort();
+            s.push_str(" models=[");
+            for (i, name) in names.iter().enumerate() {
+                let ms = &models[*name];
+                if i > 0 {
+                    s.push_str("; ");
+                }
+                s.push_str(&format!(
+                    "{name}: req={} batches={} mean_batch={:.2} p50~{}us \
+                     p99~{}us wall_ms={:.2}",
+                    ms.requests.load(Ordering::Relaxed),
+                    ms.batches.load(Ordering::Relaxed),
+                    ms.mean_batch(),
+                    ms.latency.quantile_us(0.5),
+                    ms.latency.quantile_us(0.99),
+                    ms.wall_ns.load(Ordering::Relaxed) as f64 / 1e6,
+                ));
+            }
+            s.push(']');
+        }
+        s
     }
 }
 
@@ -138,5 +298,39 @@ mod tests {
         m.record_batch_wall(500_000);
         assert_eq!(m.batch_wall_ns.load(Ordering::Relaxed), 2_000_000);
         assert!(m.summary().contains("batch_wall_ms=2.00"), "{}", m.summary());
+    }
+
+    #[test]
+    fn shard_and_model_segments_render() {
+        let m = Metrics::for_shards(2);
+        m.shard(0).record_batch(4);
+        m.shard(0).latency.record(100);
+        m.shard(1).record_batch(2);
+        let ms = m.model("TinyCNN");
+        ms.requests.fetch_add(6, Ordering::Relaxed);
+        ms.batches.fetch_add(2, Ordering::Relaxed);
+        ms.latency.record(50);
+        let s = m.summary();
+        assert!(s.contains("shards=[s0: req=4 batches=1"), "{s}");
+        assert!(s.contains("s1: req=2 batches=1"), "{s}");
+        assert!(s.contains("models=[TinyCNN: req=6 batches=2 mean_batch=3.00"), "{s}");
+        assert!(!s.contains('\n'), "summary must stay one line: {s}");
+    }
+
+    #[test]
+    fn default_metrics_render_without_shard_or_model_segments() {
+        let m = Metrics::default();
+        let s = m.summary();
+        assert!(s.contains("busy_queue_full=0"), "{s}");
+        assert!(!s.contains("shards=["), "{s}");
+        assert!(!s.contains("models=["), "{s}");
+    }
+
+    #[test]
+    fn model_slots_are_shared_per_name() {
+        let m = Metrics::default();
+        m.model("VGG16").requests.fetch_add(1, Ordering::Relaxed);
+        m.model("VGG16").requests.fetch_add(1, Ordering::Relaxed);
+        assert_eq!(m.model("VGG16").requests.load(Ordering::Relaxed), 2);
     }
 }

@@ -1,7 +1,14 @@
 //! L3 coordinator: the serving/simulation stack around the CONV core —
 //! layer scheduler, inference pipeline (PJRT numerics + cycle-sim perf),
-//! dynamic batcher, TCP inference server, metrics, and the paper-table
-//! report printers.
+//! dynamic batcher, the sharded engine pool with its model-affinity
+//! dispatcher ([`shard`]), TCP inference server, metrics, and the
+//! paper-table report printers.
+//!
+//! Request lifecycle (full picture in `ARCHITECTURE.md`): an acceptor
+//! thread parses `INFER` lines, the dispatcher routes each request to an
+//! engine shard's bounded batch queue (or answers `BUSY`), the shard's
+//! engine thread executes each dynamic batch grouped by model, and the
+//! reply channel carries `(class, latency)` back to the connection.
 
 pub mod batcher;
 pub mod metrics;
@@ -9,6 +16,8 @@ pub mod pipeline;
 pub mod reports;
 pub mod scheduler;
 pub mod server;
+pub mod shard;
 
 pub use pipeline::InferenceEngine;
 pub use scheduler::NetworkSchedule;
+pub use shard::ShardPool;

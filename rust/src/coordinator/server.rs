@@ -1,16 +1,23 @@
-//! TCP inference server: a line-oriented protocol over std::net with a
-//! dynamic batcher between the acceptor threads and the single engine
-//! thread (the CONV core is one device — requests serialize through it,
-//! batching amortizes scheduling overhead). Serves the whole model zoo:
-//! the engine thread keeps one lazily-built `InferenceEngine` per
-//! requested model (sim backend; Hlo is TinyCNN-only) and executes each
-//! dynamic batch grouped by model.
+//! TCP inference server: a line-oriented protocol over `std::net` with
+//! dynamic batching between the acceptor threads and a **sharded engine
+//! pool** (`coordinator::shard`). Each shard is an engine thread with
+//! its own per-model `InferenceEngine` cache; a model-affinity
+//! dispatcher keeps a model's batches on its home shard (warm LUT-fused
+//! weights) and spills hot models to idle shards. Admission is bounded
+//! end-to-end: when every eligible shard queue is at capacity the
+//! server answers `BUSY` instead of queueing unbounded work, and
+//! shutdown drains in-flight batches before the engine threads exit.
 //!
-//! Protocol (one line per message):
-//!   client → `INFER <seed>`          server → `OK <class> <latency_us>`
-//!   client → `INFER <model> <seed>`  server → `OK <class> <latency_us>`
-//!   client → `STATS`                 server → `STATS <summary>`
-//!   client → `QUIT`                  server closes the connection.
+//! Protocol (one line per message — full spec in `docs/PROTOCOL.md`):
+//!
+//! ```text
+//! client → INFER <seed>          server → OK <class> <latency_us>
+//! client → INFER <model> <seed>  server → OK <class> <latency_us>
+//! client → STATS                 server → STATS <summary>
+//! client → QUIT                  server closes the connection
+//! (malformed / failed)           server → ERR <reason>
+//! (overloaded / draining)        server → BUSY <reason>
+//! ```
 //!
 //! `<latency_us>` is total enqueue-to-reply latency (batching wait
 //! included), not engine wall time — see `Metrics::batch_wall_ns` for
@@ -20,7 +27,6 @@
 //! `-test` scaled profiles); without one, requests run on the server's
 //! default model.
 
-use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::Ordering;
@@ -30,33 +36,25 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use super::batcher::{BatchPolicy, Batcher, Job};
+use super::batcher::BatchPolicy;
 use super::metrics::Metrics;
-use super::pipeline::{Backend, InferenceEngine};
+use super::pipeline::Backend;
+use super::shard::{Admission, Pending, ShardPool};
 use crate::dataflow::engine::EngineOptions;
 use crate::models::workload;
-
-/// A pending request routed to the engine thread.
-struct Pending {
-    /// Zoo model name (`None` = the server's default model).
-    model: Option<String>,
-    seed: u64,
-    enqueued: Instant,
-    reply: mpsc::Sender<(usize, u64)>,
-}
 
 /// Server handle (join on `threads` after `stop`).
 pub struct Server {
     pub addr: std::net::SocketAddr,
     pub metrics: Arc<Metrics>,
-    batcher: Arc<Batcher<Pending>>,
+    pool: Arc<ShardPool>,
     threads: Vec<thread::JoinHandle<()>>,
     listener: TcpListener,
 }
 
 impl Server {
-    /// Bind and start the engine + acceptor threads with the default
-    /// model (TinyCNN). `addr` like "127.0.0.1:0" (0 = ephemeral port).
+    /// Bind and start a single-shard server with the default model
+    /// (TinyCNN). `addr` like "127.0.0.1:0" (0 = ephemeral port).
     pub fn start(addr: &str, backend: Backend, policy: BatchPolicy) -> Result<Server> {
         Self::start_with_options(addr, backend, policy, EngineOptions::default())
     }
@@ -72,8 +70,8 @@ impl Server {
         Self::start_with_model(addr, "tinycnn", backend, policy, eopt)
     }
 
-    /// Full-control start: serve `default_model` (any zoo name) and
-    /// accept per-request model overrides.
+    /// Single-shard start serving `default_model` (any zoo name), with
+    /// per-request model overrides accepted.
     pub fn start_with_model(
         addr: &str,
         default_model: &str,
@@ -81,60 +79,39 @@ impl Server {
         policy: BatchPolicy,
         eopt: EngineOptions,
     ) -> Result<Server> {
-        let Some(default) = workload::canonical_name(default_model) else {
-            anyhow::bail!("unknown model `{default_model}`");
-        };
-        // fail fast on statically-known backend/model incompatibility —
-        // otherwise the engine thread dies silently and every request
-        // hangs out its reply timeout
-        anyhow::ensure!(
-            backend != Backend::Hlo || default == "TinyCNN",
-            "backend Hlo serves only the AOT-compiled TinyCNN artifact; \
-             use the sim backend for `{default}`"
-        );
+        Self::start_sharded(addr, default_model, backend, policy, eopt, 1)
+    }
+
+    /// Full-control start: an engine pool of `shards` worker shards
+    /// (0 = auto-size, available cores ÷ engine threads) behind the
+    /// model-affinity dispatcher. See `coordinator::shard` for the
+    /// routing and admission rules.
+    pub fn start_sharded(
+        addr: &str,
+        default_model: &str,
+        backend: Backend,
+        policy: BatchPolicy,
+        eopt: EngineOptions,
+        shards: usize,
+    ) -> Result<Server> {
+        // bind before starting engine threads so a bad address doesn't
+        // leave a live pool behind the error return
         let listener = TcpListener::bind(addr)?;
         listener.set_nonblocking(true)?;
         let local = listener.local_addr()?;
-        let metrics = Arc::new(Metrics::default());
-        let batcher = Arc::new(Batcher::new(policy));
-
-        // engine thread: owns the single CONV-core engines (one per
-        // served model, lazily built). The PJRT client is !Send (Rc
-        // internals), so engines are constructed *inside* the thread and
-        // never cross it. Each dynamic batch executes as ONE parallel
-        // unit per model group (`infer_batch` → the engine worker pool),
-        // so batching buys real throughput instead of only amortized
-        // scheduling overhead.
-        let b = batcher.clone();
-        let m = metrics.clone();
-        // `default` is canonical — per-request overrides are
-        // canonicalized the same way, so the cache in `run_batch`
-        // never duplicates engines across name spellings
-        let engine_thread = thread::spawn(move || {
-            let mut engines: HashMap<String, InferenceEngine> = HashMap::new();
-            match InferenceEngine::for_model(&default, backend, 7, eopt) {
-                Ok(mut e) => {
-                    let _ = e.warmup();
-                    engines.insert(default.clone(), e);
-                }
-                Err(e) => {
-                    eprintln!("engine init failed: {e:#}");
-                    return;
-                }
-            }
-            while let Some(batch) = b.next_batch() {
-                m.record_batch(batch.len());
-                run_batch(&mut engines, &default, backend, eopt, batch, &m);
-            }
-        });
-
+        let pool = Arc::new(ShardPool::start(default_model, backend, policy, eopt, shards)?);
         Ok(Server {
             addr: local,
-            metrics,
-            batcher,
-            threads: vec![engine_thread],
+            metrics: pool.metrics.clone(),
+            pool,
+            threads: Vec::new(),
             listener,
         })
+    }
+
+    /// Number of engine shards behind the dispatcher.
+    pub fn shards(&self) -> usize {
+        self.pool.num_shards()
     }
 
     /// Accept and serve connections until `deadline` (None = one pass of
@@ -144,10 +121,10 @@ impl Server {
         loop {
             match self.listener.accept() {
                 Ok((stream, _)) => {
-                    let batcher = self.batcher.clone();
+                    let pool = self.pool.clone();
                     let metrics = self.metrics.clone();
                     self.threads.push(thread::spawn(move || {
-                        let _ = handle_client(stream, batcher, metrics);
+                        let _ = handle_client(stream, pool, metrics);
                     }));
                 }
                 Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -169,89 +146,37 @@ impl Server {
         Ok(())
     }
 
-    /// Stop the engine and join all threads.
+    /// Serve in short accept slices until `done()` reports true, bounded
+    /// by `hard` — the driver loop for benchmarks/tests whose clients run
+    /// in threads ([`Server::serve_until`] alone always blocks to its
+    /// deadline). Typical predicate: every client `JoinHandle` is
+    /// finished.
+    pub fn serve_while(
+        &mut self,
+        hard: Duration,
+        mut done: impl FnMut() -> bool,
+    ) -> Result<()> {
+        let deadline = Instant::now() + hard;
+        while !done() && Instant::now() < deadline {
+            self.serve_until(Some(Instant::now() + Duration::from_millis(50)))?;
+        }
+        Ok(())
+    }
+
+    /// Graceful shutdown: refuse new work, drain the already-queued
+    /// batches through the engine shards (their replies still go out),
+    /// then join every thread.
     pub fn shutdown(self) {
-        self.batcher.close();
+        self.pool.drain();
         for t in self.threads {
             let _ = t.join();
         }
     }
 }
 
-/// Execute one dynamic batch: group jobs by model, run each group as one
-/// parallel unit, fall back to per-job retries if a group fails (Hlo
-/// path), and answer every reply channel.
-fn run_batch(
-    engines: &mut HashMap<String, InferenceEngine>,
-    default: &str,
-    backend: Backend,
-    eopt: EngineOptions,
-    batch: Vec<Job<Pending>>,
-    m: &Metrics,
-) {
-    // group by model, preserving arrival order within a group
-    let mut groups: HashMap<String, Vec<Pending>> = HashMap::new();
-    for job in batch {
-        let p = job.payload;
-        let key = p.model.clone().unwrap_or_else(|| default.to_string());
-        groups.entry(key).or_default().push(p);
-    }
-    for (model, jobs) in groups {
-        let engine = match engines.entry(model.clone()) {
-            std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
-            std::collections::hash_map::Entry::Vacant(slot) => {
-                match InferenceEngine::for_model(&model, backend, 7, eopt) {
-                    Ok(e) => slot.insert(e),
-                    Err(err) => {
-                        eprintln!("engine for `{model}` failed: {err:#}");
-                        for p in jobs {
-                            m.errors.fetch_add(1, Ordering::Relaxed);
-                            let _ = p.reply.send((usize::MAX, 0));
-                        }
-                        continue;
-                    }
-                }
-            }
-        };
-        let inputs: Vec<_> = jobs.iter().map(|p| engine.input(p.seed)).collect();
-        let t0 = Instant::now();
-        match engine.infer_batch(&inputs) {
-            Ok(infs) => {
-                m.record_batch_wall(t0.elapsed().as_nanos() as u64);
-                for (p, inf) in jobs.into_iter().zip(infs) {
-                    let total_us = p.enqueued.elapsed().as_micros() as u64;
-                    m.latency.record(total_us);
-                    m.responses.fetch_add(1, Ordering::Relaxed);
-                    let _ = p.reply.send((inf.class, total_us));
-                }
-            }
-            Err(_) => {
-                m.record_batch_wall(t0.elapsed().as_nanos() as u64);
-                // batch execution short-circuits on the first bad
-                // inference (Hlo path): retry per job so the good ones
-                // still answer and only real failures error
-                for (p, input) in jobs.into_iter().zip(&inputs) {
-                    match engine.infer(input) {
-                        Ok(inf) => {
-                            let total_us = p.enqueued.elapsed().as_micros() as u64;
-                            m.latency.record(total_us);
-                            m.responses.fetch_add(1, Ordering::Relaxed);
-                            let _ = p.reply.send((inf.class, total_us));
-                        }
-                        Err(_) => {
-                            m.errors.fetch_add(1, Ordering::Relaxed);
-                            let _ = p.reply.send((usize::MAX, 0));
-                        }
-                    }
-                }
-            }
-        }
-    }
-}
-
 fn handle_client(
     stream: TcpStream,
-    batcher: Arc<Batcher<Pending>>,
+    pool: Arc<ShardPool>,
     metrics: Arc<Metrics>,
 ) -> Result<()> {
     stream.set_nodelay(true)?;
@@ -275,6 +200,7 @@ fn handle_client(
                     Some(name) => match workload::canonical_name(name) {
                         Some(canon) => Some(canon),
                         None => {
+                            metrics.dropped_unknown_model.fetch_add(1, Ordering::Relaxed);
                             writeln!(writer, "ERR unknown model {name}")?;
                             continue;
                         }
@@ -292,18 +218,26 @@ fn handle_client(
                 };
                 metrics.requests.fetch_add(1, Ordering::Relaxed);
                 let (tx, rx) = mpsc::channel();
-                batcher.push(Pending {
+                let pending = Pending {
                     model,
                     seed,
                     enqueued: Instant::now(),
                     reply: tx,
-                });
-                match rx.recv_timeout(Duration::from_secs(30)) {
-                    Ok((class, us)) if class != usize::MAX => {
-                        writeln!(writer, "OK {class} {us}")?;
+                };
+                match pool.submit(pending) {
+                    Ok(_shard) => match rx.recv_timeout(Duration::from_secs(30)) {
+                        Ok((class, us)) if class != usize::MAX => {
+                            writeln!(writer, "OK {class} {us}")?;
+                        }
+                        _ => {
+                            writeln!(writer, "ERR inference failed")?;
+                        }
+                    },
+                    Err(Admission::Busy) => {
+                        writeln!(writer, "BUSY queue-full")?;
                     }
-                    _ => {
-                        writeln!(writer, "ERR inference failed")?;
+                    Err(Admission::ShuttingDown) => {
+                        writeln!(writer, "BUSY shutting-down")?;
                     }
                 }
             }
@@ -319,7 +253,18 @@ fn handle_client(
     Ok(())
 }
 
-/// Simple blocking client for tests and the serving example.
+/// One parsed server reply (see `docs/PROTOCOL.md`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Reply {
+    /// `OK <class> <latency_us>`
+    Ok { class: usize, latency_us: u64 },
+    /// `BUSY <reason>` — the request was refused, not queued; retry later.
+    Busy(String),
+    /// `ERR <reason>` (or any unrecognized line).
+    Err(String),
+}
+
+/// Simple blocking client for tests, the serving example, and `loadgen`.
 pub struct Client {
     stream: TcpStream,
     reader: BufReader<TcpStream>,
@@ -334,26 +279,53 @@ impl Client {
     }
 
     /// Send INFER against the server's default model, return
-    /// (class, latency_us).
+    /// (class, latency_us). Non-`OK` replies become errors; use
+    /// [`Client::request`] to observe `BUSY` without failing.
     pub fn infer(&mut self, seed: u64) -> Result<(usize, u64)> {
-        writeln!(self.stream, "INFER {seed}")?;
-        self.read_ok()
+        match self.request(None, seed)? {
+            Reply::Ok { class, latency_us } => Ok((class, latency_us)),
+            other => anyhow::bail!("server said: {other:?}"),
+        }
     }
 
     /// Send INFER against a named zoo model, return (class, latency_us).
     pub fn infer_model(&mut self, model: &str, seed: u64) -> Result<(usize, u64)> {
-        writeln!(self.stream, "INFER {model} {seed}")?;
-        self.read_ok()
+        match self.request(Some(model), seed)? {
+            Reply::Ok { class, latency_us } => Ok((class, latency_us)),
+            other => anyhow::bail!("server said: {other:?}"),
+        }
     }
 
-    fn read_ok(&mut self) -> Result<(usize, u64)> {
+    /// Send one INFER and parse whichever reply comes back (`OK`, `BUSY`
+    /// or `ERR`) — the admission-aware entry point for load generators.
+    pub fn request(&mut self, model: Option<&str>, seed: u64) -> Result<Reply> {
+        match model {
+            Some(m) => writeln!(self.stream, "INFER {m} {seed}")?,
+            None => writeln!(self.stream, "INFER {seed}")?,
+        }
+        self.read_reply()
+    }
+
+    fn read_reply(&mut self) -> Result<Reply> {
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
+        anyhow::ensure!(!line.is_empty(), "server closed the connection");
         let mut it = line.split_whitespace();
-        anyhow::ensure!(it.next() == Some("OK"), "server said: {line}");
-        let class = it.next().unwrap().parse()?;
-        let us = it.next().unwrap().parse()?;
-        Ok((class, us))
+        match it.next() {
+            Some("OK") => {
+                let class = it
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("malformed OK: {line}"))?
+                    .parse()?;
+                let latency_us = it
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("malformed OK: {line}"))?
+                    .parse()?;
+                Ok(Reply::Ok { class, latency_us })
+            }
+            Some("BUSY") => Ok(Reply::Busy(it.collect::<Vec<_>>().join(" "))),
+            _ => Ok(Reply::Err(line.trim().to_string())),
+        }
     }
 
     pub fn stats(&mut self) -> Result<String> {
@@ -368,14 +340,15 @@ impl Client {
 mod tests {
     use super::*;
 
+    fn policy(max_batch: usize, max_wait: Duration) -> BatchPolicy {
+        BatchPolicy { max_batch, max_wait, ..Default::default() }
+    }
+
     #[test]
     fn end_to_end_request_cycle() {
-        let mut srv = Server::start(
-            "127.0.0.1:0",
-            Backend::Sim,
-            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
-        )
-        .unwrap();
+        let mut srv =
+            Server::start("127.0.0.1:0", Backend::Sim, policy(4, Duration::from_millis(1)))
+                .unwrap();
         let addr = srv.addr;
         let client_thread = thread::spawn(move || {
             let mut c = Client::connect(addr).unwrap();
@@ -394,12 +367,9 @@ mod tests {
 
     #[test]
     fn concurrent_clients_all_served() {
-        let mut srv = Server::start(
-            "127.0.0.1:0",
-            Backend::Sim,
-            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
-        )
-        .unwrap();
+        let mut srv =
+            Server::start("127.0.0.1:0", Backend::Sim, policy(8, Duration::from_millis(1)))
+                .unwrap();
         let addr = srv.addr;
         let metrics = srv.metrics.clone();
         let clients: Vec<_> = (0..4)
@@ -443,12 +413,9 @@ mod tests {
 
     #[test]
     fn per_request_models_round_trip() {
-        let mut srv = Server::start(
-            "127.0.0.1:0",
-            Backend::Sim,
-            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
-        )
-        .unwrap();
+        let mut srv =
+            Server::start("127.0.0.1:0", Backend::Sim, policy(4, Duration::from_millis(1)))
+                .unwrap();
         let addr = srv.addr;
         let client_thread = thread::spawn(move || {
             let mut c = Client::connect(addr).unwrap();

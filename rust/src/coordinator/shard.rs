@@ -1,0 +1,407 @@
+//! Sharded engine pool: N engine worker shards behind a model-affinity
+//! dispatcher — the serving-layer mirror of the paper's multi-threaded
+//! PE core. One engine thread serializes every model's traffic through
+//! one `InferenceEngine` at a time; a pool keeps the simulator's
+//! parallel conv engine busy under mixed-model load by giving each shard
+//! its own engine cache (warm LUT-fused weights) and its own bounded
+//! batch queue.
+//!
+//! Routing (see [`home_shard`] / [`route`]): a model's **home shard** is
+//! a stable hash of its canonical name, so one model's batches stick to
+//! one shard and reuse its fused weights. When the home queue is deep
+//! (≥ the spill threshold, one full batch by default) the job **spills**
+//! to the least-loaded shard — a hot model borrows idle shards without
+//! evicting anyone's cache — and the spill is counted in
+//! `Metrics::spills`.
+//!
+//! Admission is bounded end-to-end: each shard queue has a capacity
+//! (`BatchPolicy::queue_cap`); when the routed shard and the fallback
+//! shard are both full, [`ShardPool::submit`] returns
+//! [`Admission::Busy`] and the server answers `BUSY` instead of queueing
+//! unbounded work. [`ShardPool::drain`] rejects new work, closes every
+//! queue, and joins the engine threads only after the in-flight batches
+//! have answered their reply channels — the graceful half of `QUIT`.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::batcher::{BatchPolicy, Batcher, Job, PushError};
+use super::metrics::{Metrics, ModelStats};
+use super::pipeline::{Backend, InferenceEngine};
+use crate::dataflow::engine::EngineOptions;
+use crate::models::workload;
+
+/// Weight seed shared by every server-built engine: one seed → one set
+/// of synthetic weights per model, identical across shards and across
+/// the verification tooling (`neuromax verify --model`).
+pub const WEIGHT_SEED: u64 = 7;
+
+/// A pending request routed to an engine shard.
+pub struct Pending {
+    /// Canonical zoo model name (`None` = the pool's default model).
+    pub model: Option<String>,
+    pub seed: u64,
+    pub enqueued: Instant,
+    /// Answered with `(class, enqueue_to_reply_us)`; `usize::MAX` marks a
+    /// failed inference.
+    pub reply: mpsc::Sender<(usize, u64)>,
+}
+
+/// Why [`ShardPool::submit`] refused a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// Every eligible shard queue is at capacity — retry later.
+    Busy,
+    /// The pool is draining for shutdown.
+    ShuttingDown,
+}
+
+/// FNV-1a 64-bit — a stable hash (unlike `DefaultHasher`, which is
+/// documented to vary across releases) so a model's home shard is
+/// reproducible in tests and across server restarts.
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The home shard of a model: a stable hash of its canonical name. All
+/// of a model's traffic lands here while the shard keeps up, so its
+/// fused weights and LUTs stay warm in one engine cache.
+pub fn home_shard(model: &str, shards: usize) -> usize {
+    (fnv1a(model) % shards.max(1) as u64) as usize
+}
+
+/// Pick the shard for a job: stick to `home` while its queue is shallow
+/// (< `spill_threshold`), otherwise spill to the least-loaded shard
+/// (ties keep `home`, then take the lowest index). Pure — unit-testable
+/// against scripted queue depths.
+pub fn route(home: usize, depths: &[usize], spill_threshold: usize) -> usize {
+    if depths.is_empty() {
+        return 0;
+    }
+    let home = home.min(depths.len() - 1);
+    if depths[home] < spill_threshold {
+        return home;
+    }
+    let (mut best, mut best_d) = (home, depths[home]);
+    for (i, &d) in depths.iter().enumerate() {
+        if d < best_d {
+            best = i;
+            best_d = d;
+        }
+    }
+    best
+}
+
+/// N engine shards, each an engine thread with its own bounded
+/// [`Batcher`] and its own per-model `InferenceEngine` cache.
+pub struct ShardPool {
+    shards: Vec<Arc<Batcher<Pending>>>,
+    handles: Mutex<Vec<thread::JoinHandle<()>>>,
+    draining: AtomicBool,
+    pub metrics: Arc<Metrics>,
+    default_model: String,
+    spill_threshold: usize,
+}
+
+impl ShardPool {
+    /// Validate the model/backend combination and start the engine
+    /// shards. `shards == 0` sizes the pool automatically: available
+    /// cores ÷ engine worker threads (so `--threads 0`, one worker per
+    /// core, keeps the classic single-shard layout). In the auto-threads
+    /// case the per-shard worker count is divided down so N shards never
+    /// oversubscribe the machine.
+    pub fn start(
+        default_model: &str,
+        backend: Backend,
+        policy: BatchPolicy,
+        eopt: EngineOptions,
+        shards: usize,
+    ) -> Result<ShardPool> {
+        let Some(default) = workload::canonical_name(default_model) else {
+            anyhow::bail!("unknown model `{default_model}`");
+        };
+        // fail fast on statically-known backend/model incompatibility —
+        // otherwise every shard dies silently and requests time out
+        anyhow::ensure!(
+            backend != Backend::Hlo || default == "TinyCNN",
+            "backend Hlo serves only the AOT-compiled TinyCNN artifact; \
+             use the sim backend for `{default}`"
+        );
+        let avail = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let engine_threads = if eopt.num_threads == 0 { avail } else { eopt.num_threads };
+        let n = if shards == 0 { (avail / engine_threads).max(1) } else { shards };
+        let eopt = if eopt.num_threads == 0 && n > 1 {
+            // auto threads + explicit sharding: split the cores across
+            // shards instead of giving every shard a full-width pool
+            EngineOptions { num_threads: (avail / n).max(1), ..eopt }
+        } else {
+            eopt
+        };
+        let metrics = Arc::new(Metrics::for_shards(n));
+        let shards: Vec<Arc<Batcher<Pending>>> =
+            (0..n).map(|_| Arc::new(Batcher::new(policy))).collect();
+        let default_home = home_shard(&default, n);
+        let mut handles = Vec::with_capacity(n);
+        for (sid, batcher) in shards.iter().enumerate() {
+            let b = batcher.clone();
+            let m = metrics.clone();
+            let default = default.clone();
+            // engine thread: owns this shard's engines (one per served
+            // model, lazily built — the PJRT client is !Send, so engines
+            // are constructed *inside* the thread and never cross it).
+            // Each dynamic batch executes as ONE parallel unit per model
+            // group (`infer_batch` → the engine worker pool).
+            let handle = thread::Builder::new()
+                .name(format!("engine-shard-{sid}"))
+                .spawn(move || {
+                    let mut engines: HashMap<String, InferenceEngine> = HashMap::new();
+                    if sid == default_home {
+                        // warm the default model on its home shard so the
+                        // first request doesn't pay engine construction
+                        match InferenceEngine::for_model(&default, backend, WEIGHT_SEED, eopt)
+                        {
+                            Ok(mut e) => {
+                                let _ = e.warmup();
+                                engines.insert(default.clone(), e);
+                            }
+                            Err(e) => {
+                                // keep serving: run_batch retries per
+                                // group and errors the affected jobs
+                                eprintln!("shard {sid}: engine init failed: {e:#}");
+                            }
+                        }
+                    }
+                    while let Some(batch) = b.next_batch() {
+                        m.record_batch(batch.len());
+                        m.shard(sid).record_batch(batch.len());
+                        run_batch(sid, &mut engines, &default, backend, eopt, batch, &m);
+                    }
+                })?;
+            handles.push(handle);
+        }
+        Ok(ShardPool {
+            shards,
+            handles: Mutex::new(handles),
+            draining: AtomicBool::new(false),
+            metrics,
+            default_model: default,
+            spill_threshold: policy.max_batch.max(1),
+        })
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Current queue depth of every shard (sampled, not atomic across
+    /// shards — for dispatch heuristics and introspection).
+    pub fn depths(&self) -> Vec<usize> {
+        self.shards.iter().map(|b| b.depth()).collect()
+    }
+
+    /// The pool's canonical default model name.
+    pub fn default_model(&self) -> &str {
+        &self.default_model
+    }
+
+    /// Route and enqueue one request; returns the shard it landed on.
+    /// `Err` means the request was **not** queued and its reply channel
+    /// will never fire — answer the client immediately.
+    pub fn submit(&self, p: Pending) -> Result<usize, Admission> {
+        if self.draining.load(Ordering::Acquire) {
+            self.metrics.dropped_shutdown.fetch_add(1, Ordering::Relaxed);
+            return Err(Admission::ShuttingDown);
+        }
+        let n = self.shards.len();
+        let home = {
+            let model = p.model.as_deref().unwrap_or(&self.default_model);
+            home_shard(model, n)
+        };
+        let depths = self.depths();
+        let chosen = route(home, &depths, self.spill_threshold);
+        match self.shards[chosen].try_push(p) {
+            Ok(()) => {
+                if chosen != home {
+                    self.metrics.spills.fetch_add(1, Ordering::Relaxed);
+                }
+                Ok(chosen)
+            }
+            Err(PushError::Closed(_)) => {
+                self.metrics.dropped_shutdown.fetch_add(1, Ordering::Relaxed);
+                Err(Admission::ShuttingDown)
+            }
+            Err(PushError::Full(p)) => {
+                // the routed shard filled under us: one fallback attempt
+                // at the least-loaded other shard, then BUSY
+                let (mut alt, mut best) = (chosen, usize::MAX);
+                for (i, b) in self.shards.iter().enumerate() {
+                    let d = b.depth();
+                    if i != chosen && d < best {
+                        alt = i;
+                        best = d;
+                    }
+                }
+                if alt != chosen {
+                    if self.shards[alt].try_push(p).is_ok() {
+                        if alt != home {
+                            self.metrics.spills.fetch_add(1, Ordering::Relaxed);
+                        }
+                        return Ok(alt);
+                    }
+                }
+                self.metrics.dropped_queue_full.fetch_add(1, Ordering::Relaxed);
+                Err(Admission::Busy)
+            }
+        }
+    }
+
+    /// Graceful drain: refuse new work, close every shard queue, and
+    /// join the engine threads once the already-queued batches have
+    /// executed and answered their reply channels. Idempotent.
+    pub fn drain(&self) {
+        self.draining.store(true, Ordering::Release);
+        for b in &self.shards {
+            b.close();
+        }
+        let handles = std::mem::take(&mut *self.handles.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Execute one dynamic batch on a shard: group jobs by model, run each
+/// group as one parallel unit, fall back to per-job retries if a group
+/// fails (Hlo path), and answer every reply channel.
+fn run_batch(
+    sid: usize,
+    engines: &mut HashMap<String, InferenceEngine>,
+    default: &str,
+    backend: Backend,
+    eopt: EngineOptions,
+    batch: Vec<Job<Pending>>,
+    m: &Metrics,
+) {
+    // group by model, preserving arrival order within a group
+    let mut groups: HashMap<String, Vec<Pending>> = HashMap::new();
+    for job in batch {
+        let p = job.payload;
+        let key = p.model.clone().unwrap_or_else(|| default.to_string());
+        groups.entry(key).or_default().push(p);
+    }
+    for (model, jobs) in groups {
+        let ms = m.model(&model);
+        ms.requests.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+        let engine = match engines.entry(model.clone()) {
+            std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
+            std::collections::hash_map::Entry::Vacant(slot) => {
+                match InferenceEngine::for_model(&model, backend, WEIGHT_SEED, eopt) {
+                    Ok(e) => slot.insert(e),
+                    Err(err) => {
+                        eprintln!("shard {sid}: engine for `{model}` failed: {err:#}");
+                        for p in jobs {
+                            answer_err(p, &ms, m);
+                        }
+                        continue;
+                    }
+                }
+            }
+        };
+        ms.batches.fetch_add(1, Ordering::Relaxed);
+        let inputs: Vec<_> = jobs.iter().map(|p| engine.input(p.seed)).collect();
+        let t0 = Instant::now();
+        let outcome = engine.infer_batch(&inputs);
+        let wall = t0.elapsed().as_nanos() as u64;
+        m.record_batch_wall(wall);
+        m.shard(sid).wall_ns.fetch_add(wall, Ordering::Relaxed);
+        ms.wall_ns.fetch_add(wall, Ordering::Relaxed);
+        match outcome {
+            Ok(infs) => {
+                for (p, inf) in jobs.into_iter().zip(infs) {
+                    answer_ok(p, inf.class, sid, &ms, m);
+                }
+            }
+            Err(_) => {
+                // batch execution short-circuits on the first bad
+                // inference (Hlo path): retry per job so the good ones
+                // still answer and only real failures error
+                for (p, input) in jobs.into_iter().zip(&inputs) {
+                    match engine.infer(input) {
+                        Ok(inf) => answer_ok(p, inf.class, sid, &ms, m),
+                        Err(_) => answer_err(p, &ms, m),
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Answer one job's reply channel and record its enqueue-to-reply
+/// latency at every aggregation level (global / shard / model).
+fn answer_ok(p: Pending, class: usize, sid: usize, ms: &ModelStats, m: &Metrics) {
+    let total_us = p.enqueued.elapsed().as_micros() as u64;
+    m.latency.record(total_us);
+    m.shard(sid).latency.record(total_us);
+    ms.latency.record(total_us);
+    m.responses.fetch_add(1, Ordering::Relaxed);
+    let _ = p.reply.send((class, total_us));
+}
+
+/// Answer one job as failed (`usize::MAX` class) and count the error.
+fn answer_err(p: Pending, ms: &ModelStats, m: &Metrics) {
+    m.errors.fetch_add(1, Ordering::Relaxed);
+    ms.errors.fetch_add(1, Ordering::Relaxed);
+    let _ = p.reply.send((usize::MAX, 0));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn home_shard_is_stable_and_in_range() {
+        for n in [1usize, 2, 4, 7] {
+            for model in ["TinyCNN", "VGG16", "AlexNet-test", "SqueezeNet"] {
+                let h = home_shard(model, n);
+                assert!(h < n, "{model}@{n}");
+                assert_eq!(h, home_shard(model, n), "{model}@{n} must be stable");
+            }
+        }
+        // shards=0 is tolerated (degenerate single-shard math)
+        assert_eq!(home_shard("TinyCNN", 0), 0);
+    }
+
+    #[test]
+    fn route_sticks_to_shallow_home() {
+        for depth in 0..4 {
+            assert_eq!(route(2, &[9, 9, depth, 9], 4), 2, "depth={depth}");
+        }
+    }
+
+    #[test]
+    fn route_spills_to_least_loaded_when_home_is_deep() {
+        // home at threshold → pick the global minimum (first index wins)
+        assert_eq!(route(0, &[5, 0, 0, 0], 4), 1);
+        assert_eq!(route(0, &[5, 3, 1, 2], 4), 2);
+        // everyone deep: move only if strictly shallower than home
+        assert_eq!(route(0, &[5, 4, 4, 4], 4), 1);
+        assert_eq!(route(0, &[4, 4, 4, 4], 4), 0, "ties keep the home shard");
+    }
+
+    #[test]
+    fn route_handles_degenerate_inputs() {
+        assert_eq!(route(3, &[], 4), 0);
+        assert_eq!(route(9, &[1, 1], 4), 1, "out-of-range home clamps");
+        assert_eq!(route(0, &[0], 1), 0);
+    }
+}

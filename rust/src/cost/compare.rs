@@ -2,6 +2,9 @@
 //! models (never copied from the paper): peak GOPS from the grid config,
 //! adjusted PE count from the area model, LUTs/power from the rollup,
 //! achieved GOPS from the simulator.
+//!
+//! The published columns it sits next to live in `baseline::published`;
+//! `neuromax report table2` renders the combined table.
 
 use super::area;
 use super::power;

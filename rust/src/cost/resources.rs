@@ -1,5 +1,10 @@
 //! Full-core resource rollup: Table 1 (20,680 LUTs / 17,207 FFs /
 //! 108 BRAMs / 2.727 W) and the Fig. 18 per-module breakdown.
+//!
+//! Composes the PE-level area model (`cost::area`) across the grid
+//! geometry (`arch::config::GridConfig`) plus the fixed-function blocks
+//! (adder networks, SRAM banks, controller). Regenerate with
+//! `neuromax report table1` / `neuromax report fig18`.
 
 use super::area::{self, Cost};
 use crate::arch::config::GridConfig;

@@ -54,7 +54,7 @@ const LUT_ROWS: usize = 256;
 /// 64 KiB, built at compile time from `lns::mult::magnitude` (eq. 8 with
 /// flush-to-zero and shift saturation), so it cannot drift from the
 /// reference datapath. Column 0 (zero activation) is zero in every row.
-static PROD_LUT: [[i32; ACT_COLS]; LUT_ROWS] = build_prod_lut();
+pub static PROD_LUT: [[i32; ACT_COLS]; LUT_ROWS] = build_prod_lut();
 
 const fn build_prod_lut() -> [[i32; ACT_COLS]; LUT_ROWS] {
     let mut t = [[0i32; ACT_COLS]; LUT_ROWS];
@@ -159,7 +159,7 @@ pub struct EngineOptions {
 /// worth a scoped thread spawn/join (~tens of µs): ≈0.25 ms of serial
 /// LUT work. Below this a layer runs serial; above it the spawn cost is
 /// a few percent.
-const PAR_MIN_WORK: u64 = 1 << 18;
+pub const PAR_MIN_WORK: u64 = 1 << 18;
 
 /// The LUT-fused executor. Cheap to construct and `Sync`; hold one per
 /// serving engine and share it across layers.

@@ -39,8 +39,8 @@ pub fn thread_mult_spec(w_code: i32, w_sign: i32, a_code: i32) -> i32 {
 }
 
 /// Product magnitude for an exponent sum `g = w_code + a_code` (eq. 8,
-/// flush/saturate included). Const-evaluable: both [`MAG_TABLE`] here and
-/// the engine's 2D product LUT (`dataflow::engine::PROD_LUT`) are built
+/// flush/saturate included). Const-evaluable: both `MAG_TABLE` here and
+/// the engine's 2D product LUT ([`crate::dataflow::engine::PROD_LUT`]) are built
 /// from this single definition, so the two hot paths cannot drift.
 pub const fn magnitude(g: i32) -> i32 {
     // g = 2i + f with f ∈ {0,1}: arithmetic shift right == floor division.

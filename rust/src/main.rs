@@ -1,13 +1,22 @@
 //! `neuromax` CLI — the coordinator's front door.
 //!
-//! Subcommands:
-//!   report <id|all>        regenerate a paper table/figure
-//!   simulate <network>     per-layer cycle simulation of a CNN
-//!   infer [opts]           run zoo-model inferences (PJRT or sim backend)
-//!   verify [opts]          sim-vs-HLO bit-exactness check
-//!   serve [opts]           TCP inference server (whole model zoo)
-//!   sweep                  design-space exploration (grid geometry)
+//! ```text
+//! report <id|all>        regenerate a paper table/figure
+//! simulate <network>     per-layer cycle simulation of a CNN
+//! infer [opts]           run zoo-model inferences (PJRT or sim backend)
+//! verify [opts]          sim-vs-HLO bit-exactness check
+//! serve [opts]           TCP inference server (whole zoo, sharded pool)
+//! loadgen [opts]         closed-loop load generator -> BENCH_serve.json
+//! sweep                  design-space exploration (grid geometry)
+//! trace [opts]           §5.1 pipeline waveform
+//! ```
+//!
+//! Operator documentation: `README.md` §"Operating the server" and
+//! `docs/PROTOCOL.md` (wire protocol).
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
@@ -16,12 +25,14 @@ use neuromax::arch::config::GridConfig;
 use neuromax::coordinator::batcher::BatchPolicy;
 use neuromax::coordinator::pipeline::{Backend, InferenceEngine};
 use neuromax::coordinator::reports;
-use neuromax::coordinator::server::Server;
+use neuromax::coordinator::server::{Client, Reply, Server};
 use neuromax::coordinator::NetworkSchedule;
 use neuromax::dataflow::{EngineOptions, ScheduleOptions};
 use neuromax::models::workload;
 use neuromax::runtime::{verify, Runtime};
 use neuromax::sim::stats::simulate_network;
+use neuromax::util::bench::{BenchLog, Measurement};
+use neuromax::util::prng::SplitMix64;
 use neuromax::util::table;
 
 fn flag(args: &[String], name: &str) -> bool {
@@ -40,11 +51,12 @@ fn main() -> Result<()> {
         Some("infer") => cmd_infer(&args[1..]),
         Some("verify") => cmd_verify(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
+        Some("loadgen") => cmd_loadgen(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
         Some("trace") => cmd_trace(&args[1..]),
         _ => {
             eprintln!(
-                "usage: neuromax <report|simulate|infer|verify|serve|sweep|trace> ...\n\
+                "usage: neuromax <report|simulate|infer|verify|serve|loadgen|sweep|trace> ...\n\
                  \n\
                  report  <fig1|fig17|table1|fig18|fig19|fig20|table2|table3|sec5|all>\n\
                  simulate <model> [--packing]\n\
@@ -52,7 +64,12 @@ fn main() -> Result<()> {
                          [--threads N]   (hlo backend serves tinycnn only)\n\
                  verify  [--cases N] [--seed S] [--model NAME] [--threads N]\n\
                  serve   [--model NAME] [--addr HOST:PORT] [--backend hlo|sim]\n\
-                         [--secs N] [--batch N] [--threads N] (0 = one per core)\n\
+                         [--secs N] [--batch N] [--wait-ms N] [--queue-cap N]\n\
+                         [--threads N (0 = one per core)]\n\
+                         [--shards N (0 = auto: cores / engine threads)]\n\
+                 loadgen [--shards LIST e.g. 1,2,4] [--conns N] [--requests N]\n\
+                         [--mix name:w,name:w] [--batch N] [--wait-ms N]\n\
+                         [--queue-cap N] [--threads N] [--out PATH]\n\
                  sweep\n\
                  trace   [--stride 1|2] [--cycles N]   (§5.1 pipeline waveform)\n\
                  \n\
@@ -67,7 +84,6 @@ fn main() -> Result<()> {
 
 fn cmd_trace(args: &[String]) -> Result<()> {
     use neuromax::tensor::{Tensor3, Tensor4};
-    use neuromax::util::prng::SplitMix64;
     let stride: usize = opt(args, "--stride").and_then(|v| v.parse().ok()).unwrap_or(1);
     let max: usize = opt(args, "--cycles").and_then(|v| v.parse().ok()).unwrap_or(16);
     let mut rng = SplitMix64::new(1);
@@ -241,19 +257,210 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     };
     let model = opt(args, "--model").unwrap_or_else(|| "tinycnn".into());
     let secs: u64 = opt(args, "--secs").and_then(|v| v.parse().ok()).unwrap_or(30);
-    let max_batch: usize = opt(args, "--batch").and_then(|v| v.parse().ok()).unwrap_or(8);
+    let policy = batch_policy_from_args(args);
     let threads: usize = opt(args, "--threads").and_then(|v| v.parse().ok()).unwrap_or(0);
-    let mut srv = Server::start_with_model(
+    // 0 = auto-size the pool (available cores / engine threads); with the
+    // default --threads 0 (one worker per core) that resolves to 1 shard,
+    // the classic layout
+    let shards: usize = opt(args, "--shards").and_then(|v| v.parse().ok()).unwrap_or(0);
+    let mut srv = Server::start_sharded(
         &addr,
         &model,
         backend,
-        BatchPolicy { max_batch, max_wait: Duration::from_millis(2) },
+        policy,
         EngineOptions { num_threads: threads, ..Default::default() },
+        shards,
     )?;
-    println!("serving {model} ({backend:?}) on {} for {secs}s ...", srv.addr);
+    println!(
+        "serving {model} ({backend:?}) on {} for {secs}s — {} engine shard(s), \
+         batch {} / wait {:?} / queue cap {}",
+        srv.addr,
+        srv.shards(),
+        policy.max_batch,
+        policy.max_wait,
+        policy.queue_cap
+    );
     srv.serve_until(Some(Instant::now() + Duration::from_secs(secs)))?;
-    println!("{}", srv.metrics.summary());
+    let metrics = srv.metrics.clone();
     srv.shutdown();
+    // after shutdown: the drained requests' replies are in the counters
+    println!("{}", metrics.summary());
+    Ok(())
+}
+
+/// Shared `--batch` / `--wait-ms` / `--queue-cap` parsing for the serving
+/// commands.
+fn batch_policy_from_args(args: &[String]) -> BatchPolicy {
+    let d = BatchPolicy::default();
+    BatchPolicy {
+        max_batch: opt(args, "--batch").and_then(|v| v.parse().ok()).unwrap_or(d.max_batch),
+        max_wait: Duration::from_millis(
+            opt(args, "--wait-ms").and_then(|v| v.parse().ok()).unwrap_or(2),
+        ),
+        queue_cap: opt(args, "--queue-cap")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(d.queue_cap),
+    }
+}
+
+/// One completed loadgen run against a fresh in-process server.
+struct LoadgenRun {
+    completed: usize,
+    busy_retries: u64,
+    elapsed: Duration,
+    p50_us: u64,
+    p99_us: u64,
+}
+
+/// Closed-loop load generator: `conns` connections each send their share
+/// of `total` requests back-to-back (a new request only after the
+/// previous reply), drawing models from the weighted `mix`. `BUSY`
+/// replies back off and retry, so every request eventually completes.
+fn drive_loadgen(
+    shards: usize,
+    conns: usize,
+    total: usize,
+    mix: &[(String, u64)],
+    policy: BatchPolicy,
+    eopt: EngineOptions,
+) -> Result<LoadgenRun> {
+    let mut srv =
+        Server::start_sharded("127.0.0.1:0", "tinycnn", Backend::Sim, policy, eopt, shards)?;
+    let addr = srv.addr;
+    let busy = Arc::new(AtomicU64::new(0));
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..conns)
+        .map(|c| {
+            let n = total / conns + usize::from(c < total % conns);
+            let busy = busy.clone();
+            let mix = mix.to_vec();
+            thread::spawn(move || -> Result<Vec<u64>> {
+                let mut rng =
+                    SplitMix64::new(0xC0FFEE ^ (c as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                let mut cl = Client::connect(addr)?;
+                let weight_sum: u64 = mix.iter().map(|(_, w)| *w).sum();
+                let mut lats = Vec::with_capacity(n);
+                for i in 0..n {
+                    let mut t = rng.below(weight_sum.max(1));
+                    let mut model = mix.last().map(|(m, _)| m.as_str());
+                    for (m, w) in &mix {
+                        if t < *w {
+                            model = Some(m.as_str());
+                            break;
+                        }
+                        t -= w;
+                    }
+                    let seed = (c * 100_000 + i) as u64;
+                    loop {
+                        match cl.request(model, seed)? {
+                            Reply::Ok { latency_us, .. } => {
+                                lats.push(latency_us);
+                                break;
+                            }
+                            Reply::Busy(_) => {
+                                busy.fetch_add(1, Ordering::Relaxed);
+                                thread::sleep(Duration::from_micros(500));
+                            }
+                            Reply::Err(e) => bail!("loadgen request failed: {e}"),
+                        }
+                    }
+                }
+                Ok(lats)
+            })
+        })
+        .collect();
+    // is_finished (not a success counter): a connection that errors out
+    // must end the loop too, not stall until the hard deadline
+    srv.serve_while(Duration::from_secs(600), || {
+        handles.iter().all(|h| h.is_finished())
+    })?;
+    let mut all = Vec::new();
+    for h in handles {
+        all.extend(h.join().unwrap()?);
+    }
+    let elapsed = t0.elapsed();
+    srv.shutdown();
+    all.sort_unstable();
+    anyhow::ensure!(!all.is_empty(), "loadgen completed zero requests");
+    let n = all.len();
+    Ok(LoadgenRun {
+        completed: n,
+        busy_retries: busy.load(Ordering::Relaxed),
+        elapsed,
+        p50_us: all[n / 2],
+        p99_us: all[(n * 99 / 100).min(n - 1)],
+    })
+}
+
+fn cmd_loadgen(args: &[String]) -> Result<()> {
+    let shard_counts: Vec<usize> = opt(args, "--shards")
+        .unwrap_or_else(|| "1,2,4".into())
+        .split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(|s| {
+            s.trim()
+                .parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("bad --shards entry `{s}`"))
+        })
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(!shard_counts.is_empty(), "--shards list is empty");
+    let conns: usize = opt(args, "--conns").and_then(|v| v.parse().ok()).unwrap_or(8).max(1);
+    let total: usize =
+        opt(args, "--requests").and_then(|v| v.parse().ok()).unwrap_or(400).max(1);
+    let mix_spec = opt(args, "--mix")
+        .unwrap_or_else(|| "tinycnn:6,squeezenet-test:2,alexnet-test:2".into());
+    let mix: Vec<(String, u64)> = mix_spec
+        .split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(|pair| {
+            let (name, w) = pair.split_once(':').unwrap_or((pair, "1"));
+            let canon = workload::canonical_name(name.trim())
+                .with_context(|| format!("unknown model `{name}` in --mix"))?;
+            let w: u64 = w.trim().parse().map_err(|_| {
+                anyhow::anyhow!("bad weight `{w}` for `{name}` in --mix")
+            })?;
+            Ok((canon, w.max(1)))
+        })
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(!mix.is_empty(), "--mix resolved to no models");
+    let policy = batch_policy_from_args(args);
+    let threads: usize = opt(args, "--threads").and_then(|v| v.parse().ok()).unwrap_or(0);
+    let eopt = EngineOptions { num_threads: threads, ..Default::default() };
+    let out = opt(args, "--out").unwrap_or_else(|| "BENCH_serve.json".into());
+
+    let mix_label: Vec<String> =
+        mix.iter().map(|(m, w)| format!("{m}:{w}")).collect();
+    println!(
+        "loadgen: closed loop, {conns} connections x {total} total requests, \
+         mix [{}], batch {} / wait {:?} / queue cap {}",
+        mix_label.join(","),
+        policy.max_batch,
+        policy.max_wait,
+        policy.queue_cap
+    );
+    let mut log = BenchLog::new();
+    for &s in &shard_counts {
+        let r = drive_loadgen(s, conns, total, &mix, policy, eopt)?;
+        let m = Measurement { median: r.elapsed, min: r.elapsed, max: r.elapsed, runs: 1 };
+        log.report(
+            &format!("serve loadgen shards={s} conns={conns} reqs={}", r.completed),
+            m,
+            r.completed as u64,
+            "req",
+        );
+        println!(
+            "  shards={s}: {} reqs in {:.2}s = {:.0} req/s | p50 {} us p99 {} us | \
+             {} busy retries",
+            r.completed,
+            r.elapsed.as_secs_f64(),
+            r.completed as f64 / r.elapsed.as_secs_f64(),
+            r.p50_us,
+            r.p99_us,
+            r.busy_retries
+        );
+    }
+    log.write_json(&out)?;
+    println!("wrote {out}");
     Ok(())
 }
 

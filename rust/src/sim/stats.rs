@@ -1,5 +1,10 @@
 //! Per-layer and per-network simulation reports (the data behind Fig. 19,
 //! Fig. 20 and Table 3).
+//!
+//! Wraps `dataflow::schedule::analyze` over every layer of a network and
+//! aggregates cycles, utilization, latency, GOPS (paper accounting and
+//! physical) and DDR traffic; `neuromax simulate <model>` prints these
+//! per layer, and `coordinator::reports` formats the paper tables.
 
 use crate::arch::config::GridConfig;
 use crate::dataflow::{analyze, LayerPerf, ScheduleOptions};

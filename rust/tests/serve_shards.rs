@@ -1,0 +1,287 @@
+//! Sharded-serving behavior: model-affinity stickiness, spill routing,
+//! bounded admission (`BUSY`, never a hang), graceful drain of in-flight
+//! batches, and per-model `STATS` accounting against a scripted traffic
+//! trace. Pure routing math is unit-tested in `coordinator::shard`; this
+//! file drives the real TCP server.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use neuromax::coordinator::batcher::BatchPolicy;
+use neuromax::coordinator::pipeline::Backend;
+use neuromax::coordinator::server::{Client, Reply, Server};
+use neuromax::coordinator::shard::{Admission, Pending, ShardPool};
+use neuromax::dataflow::engine::EngineOptions;
+
+fn one_worker() -> EngineOptions {
+    EngineOptions { num_threads: 1, ..Default::default() }
+}
+
+/// Serve until every client thread finished (bounded by `hard` seconds).
+fn serve_clients<T>(srv: &mut Server, clients: &[thread::JoinHandle<T>], hard: u64) {
+    srv.serve_while(Duration::from_secs(hard), || {
+        clients.iter().all(|c| c.is_finished())
+    })
+    .unwrap();
+}
+
+#[test]
+fn single_model_traffic_sticks_to_one_shard() {
+    let mut srv = Server::start_sharded(
+        "127.0.0.1:0",
+        "tinycnn",
+        Backend::Sim,
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1), ..Default::default() },
+        one_worker(),
+        4,
+    )
+    .unwrap();
+    let addr = srv.addr;
+    let client = thread::spawn(move || {
+        let mut c = Client::connect(addr).unwrap();
+        // closed loop: each reply lands before the next request, so the
+        // home queue is never deep enough to trigger a spill
+        for seed in 0..8 {
+            let (class, _) = c.infer(seed).unwrap();
+            assert!(class < 10);
+        }
+    });
+    serve_clients(&mut srv, std::slice::from_ref(&client), 60);
+    client.join().unwrap();
+    let busy_shards = srv
+        .metrics
+        .shards
+        .iter()
+        .filter(|s| s.requests.load(Ordering::Relaxed) > 0)
+        .count();
+    assert_eq!(busy_shards, 1, "one model under light load must stay on its home shard");
+    assert_eq!(srv.metrics.spills.load(Ordering::Relaxed), 0);
+    srv.shutdown();
+}
+
+#[test]
+fn full_queue_answers_busy_immediately_instead_of_hanging() {
+    // queue_cap=1 and a long batching deadline: the first request parks
+    // in the only queue slot for ~1.5s, so a second request must be
+    // refused with BUSY right away (not queued, not hung).
+    let mut srv = Server::start_sharded(
+        "127.0.0.1:0",
+        "tinycnn",
+        Backend::Sim,
+        BatchPolicy {
+            max_batch: 64,
+            max_wait: Duration::from_millis(1500),
+            queue_cap: 1,
+        },
+        one_worker(),
+        1,
+    )
+    .unwrap();
+    let addr = srv.addr;
+    let metrics = srv.metrics.clone();
+    let a = thread::spawn(move || {
+        let mut c = Client::connect(addr).unwrap();
+        c.request(None, 1).unwrap()
+    });
+    let b = {
+        let metrics = metrics.clone();
+        thread::spawn(move || {
+            // wait until A's request is admitted, then hit the full queue
+            while metrics.requests.load(Ordering::Relaxed) < 1 {
+                thread::sleep(Duration::from_millis(5));
+            }
+            thread::sleep(Duration::from_millis(100));
+            let mut c = Client::connect(addr).unwrap();
+            let t0 = Instant::now();
+            let r = c.request(None, 2).unwrap();
+            (r, t0.elapsed())
+        })
+    };
+    srv.serve_while(Duration::from_secs(60), || a.is_finished() && b.is_finished())
+        .unwrap();
+    let ra = a.join().unwrap();
+    let (rb, waited) = b.join().unwrap();
+    assert!(
+        matches!(ra, Reply::Ok { .. }),
+        "the queued request must still be answered: {ra:?}"
+    );
+    assert!(matches!(rb, Reply::Busy(_)), "expected BUSY, got {rb:?}");
+    assert!(
+        waited < Duration::from_millis(1000),
+        "BUSY must be immediate, took {waited:?}"
+    );
+    assert!(metrics.dropped_queue_full.load(Ordering::Relaxed) >= 1);
+    srv.shutdown();
+}
+
+#[test]
+fn spilled_request_lands_on_idle_shard_and_is_counted() {
+    // Deterministic end-to-end spill via the queue-full fallback: with 2
+    // shards and queue_cap=1, request A parks in the home shard's only
+    // slot (long batching deadline); request B for the same model routes
+    // home, finds it full, and must spill to the idle shard — answered
+    // OK (not BUSY), with the spill counted.
+    let mut srv = Server::start_sharded(
+        "127.0.0.1:0",
+        "tinycnn",
+        Backend::Sim,
+        BatchPolicy {
+            max_batch: 64,
+            max_wait: Duration::from_millis(1500),
+            queue_cap: 1,
+        },
+        one_worker(),
+        2,
+    )
+    .unwrap();
+    let addr = srv.addr;
+    let metrics = srv.metrics.clone();
+    let a = thread::spawn(move || {
+        let mut c = Client::connect(addr).unwrap();
+        c.request(None, 1).unwrap()
+    });
+    let b = {
+        let metrics = metrics.clone();
+        thread::spawn(move || {
+            while metrics.requests.load(Ordering::Relaxed) < 1 {
+                thread::sleep(Duration::from_millis(5));
+            }
+            thread::sleep(Duration::from_millis(100));
+            let mut c = Client::connect(addr).unwrap();
+            c.request(None, 2).unwrap()
+        })
+    };
+    srv.serve_while(Duration::from_secs(60), || a.is_finished() && b.is_finished())
+        .unwrap();
+    let ra = a.join().unwrap();
+    let rb = b.join().unwrap();
+    assert!(matches!(ra, Reply::Ok { .. }), "home-shard request failed: {ra:?}");
+    assert!(
+        matches!(rb, Reply::Ok { .. }),
+        "with an idle shard available the request must spill, not bounce: {rb:?}"
+    );
+    assert_eq!(metrics.spills.load(Ordering::Relaxed), 1, "{}", metrics.summary());
+    assert_eq!(metrics.dropped_queue_full.load(Ordering::Relaxed), 0);
+    let busy_shards = metrics
+        .shards
+        .iter()
+        .filter(|s| s.requests.load(Ordering::Relaxed) > 0)
+        .count();
+    assert_eq!(busy_shards, 2, "the spilled job must execute on the other shard");
+    srv.shutdown();
+}
+
+#[test]
+fn graceful_shutdown_drains_in_flight_requests() {
+    // a long max_wait parks every request in the shard queues; shutdown
+    // must release and execute them (drain), not strand the clients
+    let mut srv = Server::start_sharded(
+        "127.0.0.1:0",
+        "tinycnn",
+        Backend::Sim,
+        BatchPolicy {
+            max_batch: 64,
+            max_wait: Duration::from_secs(10),
+            queue_cap: 64,
+        },
+        one_worker(),
+        2,
+    )
+    .unwrap();
+    let addr = srv.addr;
+    let metrics = srv.metrics.clone();
+    let clients: Vec<_> = (0..6)
+        .map(|i| {
+            thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                let model = if i % 2 == 0 { "tinycnn" } else { "alexnet-test" };
+                c.infer_model(model, i as u64).unwrap()
+            })
+        })
+        .collect();
+    // accept until all six requests are queued, then shut down mid-wait
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while metrics.requests.load(Ordering::Relaxed) < 6 && Instant::now() < deadline {
+        srv.serve_until(Some(Instant::now() + Duration::from_millis(20))).unwrap();
+    }
+    assert_eq!(metrics.requests.load(Ordering::Relaxed), 6, "requests never arrived");
+    thread::sleep(Duration::from_millis(100));
+    let t0 = Instant::now();
+    srv.shutdown();
+    assert!(
+        t0.elapsed() < Duration::from_secs(8),
+        "drain must not wait out the 10s batch deadline"
+    );
+    for c in clients {
+        let (_class, _us) = c.join().unwrap();
+    }
+    assert_eq!(
+        metrics.responses.load(Ordering::Relaxed),
+        6,
+        "every in-flight request must be answered during drain: {}",
+        metrics.summary()
+    );
+}
+
+#[test]
+fn pool_rejects_new_work_while_draining() {
+    let pool = ShardPool::start(
+        "tinycnn",
+        Backend::Sim,
+        BatchPolicy::default(),
+        one_worker(),
+        2,
+    )
+    .unwrap();
+    assert_eq!(pool.num_shards(), 2);
+    pool.drain();
+    let (tx, _rx) = mpsc::channel();
+    let refused = pool.submit(Pending {
+        model: None,
+        seed: 1,
+        enqueued: Instant::now(),
+        reply: tx,
+    });
+    assert_eq!(refused.unwrap_err(), Admission::ShuttingDown);
+    assert_eq!(pool.metrics.dropped_shutdown.load(Ordering::Relaxed), 1);
+    // idempotent
+    pool.drain();
+}
+
+#[test]
+fn stats_per_model_counters_match_scripted_trace() {
+    let mut srv = Server::start_sharded(
+        "127.0.0.1:0",
+        "tinycnn",
+        Backend::Sim,
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1), ..Default::default() },
+        one_worker(),
+        1,
+    )
+    .unwrap();
+    let addr = srv.addr;
+    let client = thread::spawn(move || {
+        let mut c = Client::connect(addr).unwrap();
+        // scripted trace: 3 default (TinyCNN), 2 AlexNet-test, 1
+        // SqueezeNet-test — closed loop, so the counts are exact
+        for seed in 0..3 {
+            c.infer(seed).unwrap();
+        }
+        for seed in 0..2 {
+            c.infer_model("alexnet-test", seed).unwrap();
+        }
+        c.infer_model("squeezenet_test", 0).unwrap();
+        c.stats().unwrap()
+    });
+    serve_clients(&mut srv, std::slice::from_ref(&client), 60);
+    let stats = client.join().unwrap();
+    assert!(stats.starts_with("STATS requests=6 responses=6"), "{stats}");
+    assert!(stats.contains("TinyCNN: req=3"), "{stats}");
+    assert!(stats.contains("AlexNet-test: req=2"), "{stats}");
+    assert!(stats.contains("SqueezeNet-test: req=1"), "{stats}");
+    assert!(stats.contains("shards=[s0: req=6"), "{stats}");
+    assert_eq!(srv.metrics.spills.load(Ordering::Relaxed), 0);
+    srv.shutdown();
+}

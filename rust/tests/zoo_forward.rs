@@ -10,6 +10,7 @@ use std::time::{Duration, Instant};
 use neuromax::coordinator::batcher::BatchPolicy;
 use neuromax::coordinator::pipeline::{Backend, InferenceEngine};
 use neuromax::coordinator::server::{Client, Server};
+use neuromax::coordinator::shard::WEIGHT_SEED;
 use neuromax::dataflow::engine::{Engine, EngineOptions};
 use neuromax::dataflow::forward::{
     forward_engine_batch, forward_engine_planned, forward_ref_planned, ForwardPlan,
@@ -84,7 +85,7 @@ fn server_roundtrip_with_per_request_model() {
     let mut srv = Server::start(
         "127.0.0.1:0",
         Backend::Sim,
-        BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1), ..Default::default() },
     )
     .unwrap();
     let addr = srv.addr;
@@ -102,5 +103,75 @@ fn server_roundtrip_with_per_request_model() {
     });
     srv.serve_until(Some(Instant::now() + Duration::from_secs(8))).unwrap();
     client.join().unwrap();
+    srv.shutdown();
+}
+
+#[test]
+fn sharded_server_bit_exact_under_mixed_model_traffic() {
+    // Acceptance pin for the sharded pool: a shards=4 server answering
+    // interleaved multi-model traffic must classify exactly like a
+    // locally-built engine (same weight seed) — shard placement, model
+    // grouping and spills may change scheduling, never numerics.
+    const MODELS: [&str; 6] = [
+        "tinycnn",
+        "alexnet-test",
+        "vgg16-test",
+        "resnet34-test",
+        "mobilenet_v1-test",
+        "squeezenet-test",
+    ];
+    const SEEDS: [u64; 2] = [11, 23];
+    let mut expected = std::collections::HashMap::new();
+    for name in MODELS {
+        let mut e =
+            InferenceEngine::for_model(name, Backend::Sim, WEIGHT_SEED, EngineOptions::default())
+                .unwrap();
+        for seed in SEEDS {
+            let input = e.input(seed);
+            expected.insert((name, seed), e.infer(&input).unwrap().class);
+        }
+    }
+    let expected = std::sync::Arc::new(expected);
+
+    let mut srv = Server::start_sharded(
+        "127.0.0.1:0",
+        "tinycnn",
+        Backend::Sim,
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1), ..Default::default() },
+        EngineOptions { num_threads: 2, ..Default::default() },
+        4,
+    )
+    .unwrap();
+    assert_eq!(srv.shards(), 4);
+    let addr = srv.addr;
+    let clients: Vec<_> = (0..3)
+        .map(|t| {
+            let expected = expected.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                // each client walks the zoo in a different order so the
+                // dynamic batches mix models differently per shard
+                for step in 0..MODELS.len() * SEEDS.len() {
+                    let idx = (step + t * 5) % (MODELS.len() * SEEDS.len());
+                    let (model, seed) =
+                        (MODELS[idx % MODELS.len()], SEEDS[idx / MODELS.len()]);
+                    let (class, _us) = c.infer_model(model, seed).unwrap();
+                    assert_eq!(
+                        class, expected[&(model, seed)],
+                        "{model} seed={seed}: sharded server disagrees with reference"
+                    );
+                }
+            })
+        })
+        .collect();
+    srv.serve_while(Duration::from_secs(120), || clients.iter().all(|c| c.is_finished()))
+        .unwrap();
+    for c in clients {
+        c.join().unwrap();
+    }
+    assert_eq!(
+        srv.metrics.responses.load(std::sync::atomic::Ordering::Relaxed),
+        3 * (MODELS.len() as u64 * SEEDS.len() as u64)
+    );
     srv.shutdown();
 }
