@@ -14,9 +14,14 @@
 //! (machine-readable; override the path with $BENCH_JSON_OUT) so future
 //! PRs can track the perf trajectory.
 
+use std::sync::Arc;
+
 use neuromax::arch::config::GridConfig;
 use neuromax::arch::ConvCore;
-use neuromax::dataflow::{analyze, exec, Engine, FusedWeights, ScheduleOptions};
+use neuromax::dataflow::{
+    analyze, exec, Engine, FusedWeights, ModelProgram, ProgramExecutor, ScheduleOptions,
+    WorkerPool,
+};
 use neuromax::lns::mult::thread_mult;
 use neuromax::lns::tables::requant_act;
 use neuromax::models::vgg16::vgg16;
@@ -79,6 +84,15 @@ fn main() {
         blackbox(engn.conv2d(&a, &fused, 1));
     });
     log.report(&format!("L3b engine conv2d 56x56x32x16 ({nt}T)"), m, macs, "MAC");
+
+    // L3b'': same kernel on the persistent worker pool (parked workers,
+    // no per-layer scoped-thread spawn/join — the serving substrate)
+    let wpool = WorkerPool::new(nt);
+    let engp = Engine::pooled(wpool, Default::default());
+    let m = time(5, || {
+        blackbox(engp.conv2d(&a, &fused, 1));
+    });
+    log.report(&format!("L3b engine conv2d 56x56x32x16 (pool {nt}T)"), m, macs, "MAC");
 
     // L3b': stride-2 + 1x1 engine coverage (generic kernel path)
     let m = time(5, || {
@@ -192,6 +206,45 @@ fn main() {
     });
     log.report(
         &format!("SIM tinycnn forward_batch {nt}T (50)"),
+        m,
+        50,
+        "inference",
+    );
+
+    // PROG: the compiled-program serving path — plan/compile once, then
+    // execute against a warm arena (zero steady-state allocation). Must
+    // be at least as fast as the legacy per-request driver above.
+    let net = neuromax::models::tinycnn::tinycnn();
+    let prog_fused = w.to_net_weights().fuse();
+    let prog = Arc::new(ModelProgram::compile(&net).unwrap());
+    let mut pexec = ProgramExecutor::new(prog.clone());
+    let mut prog_out = Vec::new();
+    pexec.run_into(&eng1, &prog_fused, &input, &mut prog_out);
+    assert_eq!(
+        prog_out,
+        neuromax::runtime::verify::tinycnn_forward_sim(&input, &w),
+        "program executor must stay bit-exact before being timed"
+    );
+    let m = time(5, || {
+        for _ in 0..50 {
+            pexec.run_into(&eng1, &prog_fused, &input, &mut prog_out);
+            blackbox(&prog_out);
+        }
+    });
+    log.report("SIM tinycnn program exec 1T (50)", m, 50, "inference");
+
+    // program executor on the pooled engine (TinyCNN layers sit below
+    // PAR_MIN_WORK, so this doubles as a no-regression guard for the
+    // pool dispatch overhead on small layers)
+    let mut pexec_pool = ProgramExecutor::new(prog);
+    let m = time(5, || {
+        for _ in 0..50 {
+            pexec_pool.run_into(&engp, &prog_fused, &input, &mut prog_out);
+            blackbox(&prog_out);
+        }
+    });
+    log.report(
+        &format!("SIM tinycnn program exec pool {nt}T (50)"),
         m,
         50,
         "inference",

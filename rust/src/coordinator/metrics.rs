@@ -114,6 +114,16 @@ pub struct ModelStats {
     pub errors: AtomicU64,
     /// Enqueue-to-reply latency of this model's jobs.
     pub latency: LatencyHistogram,
+    /// High-water activation-arena footprint across this model's
+    /// program executors, bytes (per-engine sums, max over shards).
+    pub arena_peak_bytes: AtomicU64,
+    /// Arena buffer grow events charged to this model's requests. Grows
+    /// only during warmup — a warmed engine adds 0 per request, so the
+    /// cumulative `allocs_per_req` ratio in `STATS` *trends toward* 0
+    /// as traffic accumulates (it never exactly reaches it after a
+    /// nonzero warmup; alert on growth of this counter, not on the
+    /// ratio being nonzero).
+    pub arena_allocs: AtomicU64,
 }
 
 impl ModelStats {
@@ -123,6 +133,16 @@ impl ModelStats {
             return 0.0;
         }
         self.requests.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    /// Cumulative arena grow events per answered request (trends
+    /// toward 0.000 once engines are warm).
+    pub fn allocs_per_req(&self) -> f64 {
+        let r = self.requests.load(Ordering::Relaxed);
+        if r == 0 {
+            return 0.0;
+        }
+        self.arena_allocs.load(Ordering::Relaxed) as f64 / r as f64
     }
 }
 
@@ -256,13 +276,16 @@ impl Metrics {
                 }
                 s.push_str(&format!(
                     "{name}: req={} batches={} mean_batch={:.2} p50~{}us \
-                     p99~{}us wall_ms={:.2}",
+                     p99~{}us wall_ms={:.2} arena_peak_kb={:.1} \
+                     allocs_per_req={:.3}",
                     ms.requests.load(Ordering::Relaxed),
                     ms.batches.load(Ordering::Relaxed),
                     ms.mean_batch(),
                     ms.latency.quantile_us(0.5),
                     ms.latency.quantile_us(0.99),
                     ms.wall_ns.load(Ordering::Relaxed) as f64 / 1e6,
+                    ms.arena_peak_bytes.load(Ordering::Relaxed) as f64 / 1024.0,
+                    ms.allocs_per_req(),
                 ));
             }
             s.push(']');
@@ -324,6 +347,22 @@ mod tests {
         assert!(s.contains("busy_queue_full=0"), "{s}");
         assert!(!s.contains("shards=["), "{s}");
         assert!(!s.contains("models=["), "{s}");
+    }
+
+    #[test]
+    fn arena_gauges_render_per_model() {
+        let m = Metrics::default();
+        let ms = m.model("SqueezeNet-test");
+        ms.requests.fetch_add(4, Ordering::Relaxed);
+        ms.arena_peak_bytes.fetch_max(8 * 1024, Ordering::Relaxed);
+        ms.arena_allocs.fetch_add(6, Ordering::Relaxed);
+        assert!((ms.allocs_per_req() - 1.5).abs() < 1e-9);
+        let s = m.summary();
+        assert!(s.contains("arena_peak_kb=8.0"), "{s}");
+        assert!(s.contains("allocs_per_req=1.500"), "{s}");
+        // warmed engines trend to 0
+        ms.requests.fetch_add(9996, Ordering::Relaxed);
+        assert!(m.summary().contains("allocs_per_req=0.001"), "{}", m.summary());
     }
 
     #[test]

@@ -1,10 +1,18 @@
 //! The inference pipeline: executes requests for **any zoo model** on
 //! either backend — the AOT PJRT executable (TinyCNN only; the artifacts
-//! are compiled per network) or the model-generic functional simulator
-//! (`dataflow::forward`, bit-identical on TinyCNN) — while charging
-//! cycles against the model's accelerator schedule for hardware-timeline
-//! reporting.
+//! are compiled per network) or the model-generic functional simulator —
+//! while charging cycles against the model's accelerator schedule for
+//! hardware-timeline reporting.
+//!
+//! The sim backend is the compiled-program path: the model's
+//! [`ModelProgram`](crate::dataflow::ModelProgram) comes from the
+//! process-wide program cache (compiled once per (model, profile)), and
+//! each engine owns one [`ProgramExecutor`] per worker lane — arenas
+//! warm up on the first request and then serve with zero steady-state
+//! allocation. Bit-exactness vs the reference executor is pinned by
+//! `rust/tests/zoo_forward.rs` and `rust/tests/program_slots.rs`.
 
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -12,9 +20,8 @@ use anyhow::{bail, Result};
 use super::scheduler::NetworkSchedule;
 use crate::arch::config::GridConfig;
 use crate::dataflow::engine::{Engine, EngineOptions};
-use crate::dataflow::forward::{
-    forward_engine_batch, forward_engine_planned, ForwardPlan,
-};
+use crate::dataflow::program::{cached_program, ProgramExecutor};
+use crate::dataflow::workers::WorkerPool;
 use crate::dataflow::ScheduleOptions;
 use crate::models::layer::Network;
 use crate::models::runner::{random_input_dims, FusedNet, NetWeights};
@@ -57,18 +64,45 @@ pub struct InferenceEngine {
     pub weights: NetWeights,
     /// Per-model accelerator schedule (cycle charging).
     pub schedule: NetworkSchedule,
-    plan: ForwardPlan,
     rt: Option<Runtime>,
     /// TinyCNN-shaped weights for the AOT artifact call (Hlo only).
     hlo_weights: Option<TinyCnnWeights>,
     sim: Option<SimPath>,
+    /// Arena grow-events already surfaced via
+    /// [`InferenceEngine::take_arena_stats`].
+    reported_grow: u64,
 }
 
-/// The LUT-fused, multi-threaded simulator path (`dataflow::engine`):
-/// weights are fused once at construction and shared across requests.
+/// The compiled-program simulator path: the cached [`ModelProgram`]
+/// (via its executors), fused weights shared across requests, and the
+/// LUT engine — pool-backed when the owner passed a shared
+/// [`WorkerPool`].
+///
+/// [`ModelProgram`]: crate::dataflow::ModelProgram
 struct SimPath {
     engine: Engine,
     fused: FusedNet,
+    /// One executor (program + private arena) per worker lane; batch
+    /// elements borrow whichever lane is free.
+    execs: Vec<Mutex<ProgramExecutor>>,
+}
+
+/// Borrow any currently-free executor lane. At most `execs.len()`
+/// chunks execute concurrently (the engine's worker count), so a free
+/// lane always exists; the scan is uncontended in the common case.
+fn with_executor<R>(
+    execs: &[Mutex<ProgramExecutor>],
+    f: impl FnOnce(&mut ProgramExecutor) -> R,
+) -> R {
+    let mut f = Some(f);
+    loop {
+        for m in execs {
+            if let Ok(mut ex) = m.try_lock() {
+                return (f.take().expect("single call"))(&mut ex);
+            }
+        }
+        std::thread::yield_now();
+    }
 }
 
 impl InferenceEngine {
@@ -99,10 +133,23 @@ impl InferenceEngine {
         weight_seed: u64,
         eopt: EngineOptions,
     ) -> Result<Self> {
+        Self::for_model_pooled(name, backend, weight_seed, eopt, None)
+    }
+
+    /// [`InferenceEngine::for_model`] with an optional shared persistent
+    /// worker pool (the serving path: one pool per engine shard, shared
+    /// by every model that shard serves).
+    pub fn for_model_pooled(
+        name: &str,
+        backend: Backend,
+        weight_seed: u64,
+        eopt: EngineOptions,
+        pool: Option<Arc<WorkerPool>>,
+    ) -> Result<Self> {
         let Some(net) = workload::by_name(name) else {
             bail!("unknown model `{name}`");
         };
-        Self::for_network(net, backend, weight_seed, eopt)
+        Self::for_network_pooled(net, backend, weight_seed, eopt, pool)
     }
 
     /// Build an engine for an explicit network descriptor.
@@ -112,6 +159,18 @@ impl InferenceEngine {
         weight_seed: u64,
         eopt: EngineOptions,
     ) -> Result<Self> {
+        Self::for_network_pooled(net, backend, weight_seed, eopt, None)
+    }
+
+    /// [`InferenceEngine::for_network`] with an optional shared worker
+    /// pool for the sim backend's parallel sections.
+    pub fn for_network_pooled(
+        net: Network,
+        backend: Backend,
+        weight_seed: u64,
+        eopt: EngineOptions,
+        pool: Option<Arc<WorkerPool>>,
+    ) -> Result<Self> {
         let is_tinycnn = net.name == "TinyCNN";
         if backend == Backend::Hlo && !is_tinycnn {
             bail!(
@@ -120,7 +179,6 @@ impl InferenceEngine {
                 net.name
             );
         }
-        let plan = ForwardPlan::infer(&net).map_err(anyhow::Error::msg)?;
         let grid = GridConfig::neuromax();
         let schedule = NetworkSchedule::plan(grid, &net, ScheduleOptions::default());
         let rt = match backend {
@@ -135,10 +193,19 @@ impl InferenceEngine {
             Backend::Sim => None,
         };
         let sim = match backend {
-            Backend::Sim => Some(SimPath {
-                engine: Engine::new(eopt),
-                fused: weights.fuse(),
-            }),
+            Backend::Sim => {
+                // compiled once per (model, profile), shared process-wide
+                let program = cached_program(&net).map_err(anyhow::Error::msg)?;
+                let engine = match pool {
+                    Some(p) => Engine::pooled(p, eopt),
+                    None => Engine::new(eopt),
+                };
+                let lanes = engine.num_threads().max(1);
+                let execs = (0..lanes)
+                    .map(|_| Mutex::new(ProgramExecutor::new(program.clone())))
+                    .collect();
+                Some(SimPath { engine, fused: weights.fuse(), execs })
+            }
             Backend::Hlo => None,
         };
         Ok(InferenceEngine {
@@ -146,10 +213,10 @@ impl InferenceEngine {
             model: net,
             weights,
             schedule,
-            plan,
             rt,
             hlo_weights,
             sim,
+            reported_grow: 0,
         })
     }
 
@@ -178,8 +245,11 @@ impl InferenceEngine {
             }
             Backend::Sim => {
                 let s = self.sim.as_ref().unwrap();
-                forward_engine_planned(&s.engine, &self.model, &self.plan, &s.fused, input)
-                    .data
+                let mut logits = Vec::new();
+                with_executor(&s.execs, |ex| {
+                    ex.run_into(&s.engine, &s.fused, input, &mut logits)
+                });
+                logits
             }
         };
         let wall_ns = t0.elapsed().as_nanos() as u64;
@@ -198,8 +268,16 @@ impl InferenceEngine {
             Backend::Sim => {
                 let t0 = Instant::now();
                 let s = self.sim.as_ref().unwrap();
-                let all =
-                    forward_engine_batch(&s.engine, &self.model, &self.plan, &s.fused, inputs);
+                // elements spread across the worker pool; each runs its
+                // whole program serially on a free executor lane
+                // (bit-identical to single-shot, order preserved)
+                let all: Vec<Vec<i32>> = s.engine.par_map(inputs, |lane, input| {
+                    let mut logits = Vec::new();
+                    with_executor(&s.execs, |ex| {
+                        ex.run_into(lane, &s.fused, input, &mut logits)
+                    });
+                    logits
+                });
                 // amortized per-element wall time, nanosecond-derived so
                 // fast batches don't truncate to 0
                 let wall_ns =
@@ -207,7 +285,7 @@ impl InferenceEngine {
                 let accel_cycles = self.schedule.total_cycles();
                 Ok(all
                     .into_iter()
-                    .map(|out| Self::package(out.data, wall_ns, accel_cycles))
+                    .map(|logits| Self::package(logits, wall_ns, accel_cycles))
                     .collect())
             }
         }
@@ -223,6 +301,24 @@ impl InferenceEngine {
             }
         }
         Inference { class, wall_us: wall_ns / 1000, wall_ns, accel_cycles, logits }
+    }
+
+    /// Activation-arena gauges for the serving metrics: the high-water
+    /// arena footprint across this engine's executor lanes (bytes) and
+    /// the arena grow events since the last call (0 in steady state —
+    /// the zero-per-request-allocation property). Hlo engines report
+    /// (0, 0).
+    pub fn take_arena_stats(&mut self) -> (u64, u64) {
+        let Some(s) = &self.sim else { return (0, 0) };
+        let (mut peak, mut total) = (0u64, 0u64);
+        for m in &s.execs {
+            let ex = m.lock().unwrap();
+            peak += ex.arena_peak_bytes() as u64;
+            total += ex.arena_grow_events();
+        }
+        let delta = total.saturating_sub(self.reported_grow);
+        self.reported_grow = total;
+        (peak, delta)
     }
 
     /// Synthesize the quantized input for a request seed against this
@@ -316,6 +412,50 @@ mod tests {
             assert!(!out.logits.is_empty(), "{name}");
             assert!(out.class < out.logits.len(), "{name}");
             assert!(out.accel_cycles > 0, "{name}");
+        }
+    }
+
+    #[test]
+    fn arena_stats_warm_up_then_go_quiet() {
+        let mut e = InferenceEngine::new(Backend::Sim, 7).unwrap();
+        let input = InferenceEngine::input_for_seed(1);
+        e.infer(&input).unwrap();
+        let (peak, warm) = e.take_arena_stats();
+        assert!(peak > 0, "arena must report a footprint");
+        assert!(warm > 0, "the first request warms the arena");
+        for _ in 0..5 {
+            e.infer(&input).unwrap();
+        }
+        let (_, steady) = e.take_arena_stats();
+        assert_eq!(steady, 0, "steady-state requests must not grow the arena");
+    }
+
+    #[test]
+    fn pooled_engine_matches_unpooled_single_and_batched() {
+        let pool = WorkerPool::new(2);
+        let net = workload::test_profile("squeezenet").unwrap();
+        let mut a = InferenceEngine::for_network_pooled(
+            net.clone(),
+            Backend::Sim,
+            7,
+            EngineOptions::default(),
+            Some(pool),
+        )
+        .unwrap();
+        let mut b = InferenceEngine::for_network(
+            net,
+            Backend::Sim,
+            7,
+            EngineOptions { num_threads: 1, ..Default::default() },
+        )
+        .unwrap();
+        let x = a.input(3);
+        assert_eq!(a.infer(&x).unwrap().logits, b.infer(&x).unwrap().logits);
+        let inputs: Vec<_> = (0..5).map(|i| a.input(i)).collect();
+        let ba = a.infer_batch(&inputs).unwrap();
+        let bb = b.infer_batch(&inputs).unwrap();
+        for (ia, ib) in ba.iter().zip(&bb) {
+            assert_eq!(ia.logits, ib.logits, "pooled batch diverged");
         }
     }
 

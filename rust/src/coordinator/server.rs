@@ -1,12 +1,19 @@
 //! TCP inference server: a line-oriented protocol over `std::net` with
 //! dynamic batching between the acceptor threads and a **sharded engine
 //! pool** (`coordinator::shard`). Each shard is an engine thread with
-//! its own per-model `InferenceEngine` cache; a model-affinity
-//! dispatcher keeps a model's batches on its home shard (warm LUT-fused
-//! weights) and spills hot models to idle shards. Admission is bounded
-//! end-to-end: when every eligible shard queue is at capacity the
-//! server answers `BUSY` instead of queueing unbounded work, and
-//! shutdown drains in-flight batches before the engine threads exit.
+//! its own per-model `InferenceEngine` cache, its own persistent worker
+//! pool, and per-lane activation arenas; a model-affinity dispatcher
+//! keeps a model's batches on its home shard (warm LUT-fused weights
+//! and warm arenas) and spills hot models to idle shards. Models
+//! execute as **compiled programs** (`dataflow::program`, compiled once
+//! per (model, profile) process-wide and cached), so steady-state
+//! requests pay no planning, no per-layer thread spawn, and no heap
+//! allocation in the compute loop — the `STATS` per-model
+//! `arena_peak_kb` / `allocs_per_req` gauges make that observable on
+//! the wire. Admission is bounded end-to-end: when every eligible shard
+//! queue is at capacity the server answers `BUSY` instead of queueing
+//! unbounded work, and shutdown drains in-flight batches before the
+//! engine threads exit.
 //!
 //! Protocol (one line per message — full spec in `docs/PROTOCOL.md`):
 //!

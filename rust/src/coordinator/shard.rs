@@ -33,7 +33,8 @@ use anyhow::Result;
 use super::batcher::{BatchPolicy, Batcher, Job, PushError};
 use super::metrics::{Metrics, ModelStats};
 use super::pipeline::{Backend, InferenceEngine};
-use crate::dataflow::engine::EngineOptions;
+use crate::dataflow::engine::{resolve_threads, EngineOptions};
+use crate::dataflow::workers::WorkerPool;
 use crate::models::workload;
 
 /// Weight seed shared by every server-built engine: one seed → one set
@@ -158,18 +159,27 @@ impl ShardPool {
             let default = default.clone();
             // engine thread: owns this shard's engines (one per served
             // model, lazily built — the PJRT client is !Send, so engines
-            // are constructed *inside* the thread and never cross it).
-            // Each dynamic batch executes as ONE parallel unit per model
-            // group (`infer_batch` → the engine worker pool).
+            // are constructed *inside* the thread and never cross it)
+            // and ONE persistent worker pool shared by every model the
+            // shard serves: workers park between batches, and no layer
+            // ever pays a thread spawn/join again. Each dynamic batch
+            // executes as ONE parallel unit per model group
+            // (`infer_batch` → the shard's pool).
             let handle = thread::Builder::new()
                 .name(format!("engine-shard-{sid}"))
                 .spawn(move || {
+                    let wpool = WorkerPool::new(resolve_threads(eopt.num_threads));
                     let mut engines: HashMap<String, InferenceEngine> = HashMap::new();
                     if sid == default_home {
                         // warm the default model on its home shard so the
                         // first request doesn't pay engine construction
-                        match InferenceEngine::for_model(&default, backend, WEIGHT_SEED, eopt)
-                        {
+                        match InferenceEngine::for_model_pooled(
+                            &default,
+                            backend,
+                            WEIGHT_SEED,
+                            eopt,
+                            Some(wpool.clone()),
+                        ) {
                             Ok(mut e) => {
                                 let _ = e.warmup();
                                 engines.insert(default.clone(), e);
@@ -184,7 +194,7 @@ impl ShardPool {
                     while let Some(batch) = b.next_batch() {
                         m.record_batch(batch.len());
                         m.shard(sid).record_batch(batch.len());
-                        run_batch(sid, &mut engines, &default, backend, eopt, batch, &m);
+                        run_batch(sid, &mut engines, &default, backend, eopt, &wpool, batch, &m);
                     }
                 })?;
             handles.push(handle);
@@ -281,14 +291,18 @@ impl ShardPool {
 }
 
 /// Execute one dynamic batch on a shard: group jobs by model, run each
-/// group as one parallel unit, fall back to per-job retries if a group
-/// fails (Hlo path), and answer every reply channel.
+/// group as one parallel unit on the shard's persistent worker pool,
+/// fall back to per-job retries if a group fails (Hlo path), answer
+/// every reply channel, and roll the arena gauges into the per-model
+/// stats.
+#[allow(clippy::too_many_arguments)]
 fn run_batch(
     sid: usize,
     engines: &mut HashMap<String, InferenceEngine>,
     default: &str,
     backend: Backend,
     eopt: EngineOptions,
+    wpool: &Arc<WorkerPool>,
     batch: Vec<Job<Pending>>,
     m: &Metrics,
 ) {
@@ -305,7 +319,13 @@ fn run_batch(
         let engine = match engines.entry(model.clone()) {
             std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
             std::collections::hash_map::Entry::Vacant(slot) => {
-                match InferenceEngine::for_model(&model, backend, WEIGHT_SEED, eopt) {
+                match InferenceEngine::for_model_pooled(
+                    &model,
+                    backend,
+                    WEIGHT_SEED,
+                    eopt,
+                    Some(wpool.clone()),
+                ) {
                     Ok(e) => slot.insert(e),
                     Err(err) => {
                         eprintln!("shard {sid}: engine for `{model}` failed: {err:#}");
@@ -325,6 +345,10 @@ fn run_batch(
         m.record_batch_wall(wall);
         m.shard(sid).wall_ns.fetch_add(wall, Ordering::Relaxed);
         ms.wall_ns.fetch_add(wall, Ordering::Relaxed);
+        // arena gauges: high-water footprint + grow events (0 once warm)
+        let (arena_peak, arena_grow) = engine.take_arena_stats();
+        ms.arena_peak_bytes.fetch_max(arena_peak, Ordering::Relaxed);
+        ms.arena_allocs.fetch_add(arena_grow, Ordering::Relaxed);
         match outcome {
             Ok(infs) => {
                 for (p, inf) in jobs.into_iter().zip(infs) {

@@ -1,0 +1,88 @@
+//! Grow-only activation arena: the reusable buffer store a
+//! [`ProgramExecutor`](crate::dataflow::program::ProgramExecutor) runs
+//! its compiled program against.
+//!
+//! `dataflow::forward::drive` heap-allocates every feature map, padded
+//! input, and merge staging buffer on every request. The arena replaces
+//! all of that with a fixed set of slots sized by the program's
+//! liveness-based slot-reuse assignment: each slot is grown to its
+//! program-wide maximum on first use (warmup) and then reused verbatim
+//! — the steady-state serve loop performs **zero** heap allocations
+//! (pinned by `rust/tests/alloc_steady.rs`).
+//!
+//! The arena also owns the `u8` activation-column scratch the LUT
+//! engine's fused kernels consume, and counts every buffer growth in
+//! [`ActivationArena::grow_events`] — the source of the serving stack's
+//! `allocs_per_req` gauge (a healthy warmed engine reports 0).
+
+/// Reusable buffers for one program executor. Cheap to construct; all
+/// capacity is acquired lazily on first run and kept.
+#[derive(Debug, Default)]
+pub struct ActivationArena {
+    /// One buffer per program slot (activations and psums, i32 domain).
+    pub(crate) slots: Vec<Vec<i32>>,
+    /// Scratch for LUT column encoding of the current staged input.
+    pub(crate) cols: Vec<u8>,
+    /// Buffer growth events since construction (warmup only, then 0).
+    pub(crate) grow_events: u64,
+}
+
+impl ActivationArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Make sure `n` slot buffers exist (empty until first grown).
+    pub(crate) fn reserve_slots(&mut self, n: usize) {
+        if self.slots.len() < n {
+            self.grow_events += 1;
+            self.slots.resize_with(n, Vec::new);
+        }
+    }
+
+    /// High-water footprint in bytes (slot capacities + column scratch).
+    pub fn peak_bytes(&self) -> usize {
+        self.slots.iter().map(|s| s.capacity() * std::mem::size_of::<i32>()).sum::<usize>()
+            + self.cols.capacity()
+    }
+
+    /// Buffer growth events since construction. After the first request
+    /// on a given program this stops moving — the serving metrics report
+    /// its per-request rate as `allocs_per_req`.
+    pub fn grow_events(&self) -> u64 {
+        self.grow_events
+    }
+}
+
+/// Grow `buf` to `len` elements if needed, counting the growth. The
+/// standard slot-preparation step: programs size every slot to its
+/// program-wide maximum, so this fires once per slot per executor.
+pub(crate) fn ensure_len(buf: &mut Vec<i32>, len: usize, grow_events: &mut u64) {
+    if buf.len() < len {
+        *grow_events += 1;
+        buf.resize(len, 0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grow_events_count_only_growth() {
+        let mut a = ActivationArena::new();
+        a.reserve_slots(3);
+        assert_eq!(a.grow_events(), 1);
+        a.reserve_slots(2); // shrink request: no-op
+        assert_eq!(a.grow_events(), 1);
+        let mut g = a.grow_events;
+        let mut buf = std::mem::take(&mut a.slots[0]);
+        ensure_len(&mut buf, 64, &mut g);
+        ensure_len(&mut buf, 64, &mut g);
+        ensure_len(&mut buf, 32, &mut g);
+        a.slots[0] = buf;
+        a.grow_events = g;
+        assert_eq!(a.grow_events(), 2, "only the first resize grows");
+        assert!(a.peak_bytes() >= 64 * 4);
+    }
+}

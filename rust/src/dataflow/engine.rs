@@ -30,14 +30,27 @@
 //! `exec::conv2d` and the hardware-faithful `arch::ConvCore` across random
 //! shapes, strides, padding and zero-density, at 1 and 4 threads.
 
+use std::sync::Arc;
+
 use super::pool;
 use super::schedule::{analyze, LayerPerf, ScheduleOptions};
+use super::workers::WorkerPool;
 use crate::arch::config::GridConfig;
 use crate::arch::state_controller::pad_input;
 use crate::lns::logquant::{CODE_MAX, ZERO_CODE};
 use crate::lns::mult::magnitude;
 use crate::models::layer::{LayerDesc, Op};
 use crate::tensor::{out_dim, Tensor3, Tensor4};
+
+/// Resolve a requested worker-thread count: 0 means one per available
+/// core (shared by [`Engine::new`] and the shard pool sizing).
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        requested
+    }
+}
 
 /// Activation-code columns per LUT row (the 6-bit code space −32..=31).
 pub const ACT_COLS: usize = 64;
@@ -107,6 +120,14 @@ fn act_cols(a: &Tensor3) -> Vec<u8> {
     a.data.iter().map(|&v| act_col(v)).collect()
 }
 
+/// Encode activation codes into LUT column indices, reusing `cols`'
+/// capacity (the program executor's zero-steady-state-allocation path —
+/// after warmup this never touches the allocator).
+pub fn encode_cols(src: &[i32], cols: &mut Vec<u8>) {
+    cols.clear();
+    cols.extend(src.iter().map(|&v| act_col(v)));
+}
+
 /// A weight tensor pre-fused for the engine: one `u8` LUT-row index per
 /// `[K, kh, kw, C]` element, built once per layer and shared across every
 /// request/batch element that uses the layer.
@@ -163,30 +184,47 @@ pub const PAR_MIN_WORK: u64 = 1 << 18;
 
 /// The LUT-fused executor. Cheap to construct and `Sync`; hold one per
 /// serving engine and share it across layers.
+///
+/// Parallel sections run on one of two substrates: a shared persistent
+/// [`WorkerPool`] (serving path — workers are parked between layers, no
+/// per-layer thread spawn/join) when built via [`Engine::pooled`], or
+/// ad-hoc scoped threads (legacy/compat path) otherwise. The substrate
+/// never affects numerics: log-domain products are exact integers and
+/// i32 wrapping addition is order-independent.
 #[derive(Clone, Debug)]
 pub struct Engine {
     threads: usize,
     par_min_work: u64,
+    pool: Option<Arc<WorkerPool>>,
 }
 
 impl Engine {
     pub fn new(opt: EngineOptions) -> Self {
-        let threads = if opt.num_threads == 0 {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        } else {
-            opt.num_threads
-        };
+        let threads = resolve_threads(opt.num_threads);
         let par_min_work = if opt.par_min_work == 0 {
             PAR_MIN_WORK
         } else {
             opt.par_min_work
         };
-        Engine { threads, par_min_work }
+        Engine { threads, par_min_work, pool: None }
+    }
+
+    /// Engine backed by a shared persistent worker pool: all parallel
+    /// sections (row chunks, batch elements) run on `pool`'s parked
+    /// workers instead of freshly-spawned scoped threads. `opt`'s
+    /// `num_threads` is ignored — the pool's width is the thread count.
+    pub fn pooled(pool: Arc<WorkerPool>, opt: EngineOptions) -> Self {
+        let par_min_work = if opt.par_min_work == 0 {
+            PAR_MIN_WORK
+        } else {
+            opt.par_min_work
+        };
+        Engine { threads: pool.threads(), par_min_work, pool: Some(pool) }
     }
 
     /// Engine with an explicit worker count (≥ 1 enforced).
     pub fn with_threads(n: usize) -> Self {
-        Engine { threads: n.max(1), par_min_work: PAR_MIN_WORK }
+        Engine { threads: n.max(1), par_min_work: PAR_MIN_WORK, pool: None }
     }
 
     /// Serial engine (reference ordering; used per-worker inside batches).
@@ -196,11 +234,22 @@ impl Engine {
 
     /// Test/bench helper: parallelize regardless of layer size.
     pub fn with_threads_forced(n: usize) -> Self {
-        Engine { threads: n.max(1), par_min_work: 1 }
+        Engine { threads: n.max(1), par_min_work: 1, pool: None }
+    }
+
+    /// Test helper: pool-backed engine that parallelizes regardless of
+    /// layer size.
+    pub fn pooled_forced(pool: Arc<WorkerPool>) -> Self {
+        Engine { threads: pool.threads(), par_min_work: 1, pool: Some(pool) }
     }
 
     pub fn num_threads(&self) -> usize {
         self.threads
+    }
+
+    /// The shared worker pool backing this engine, if any.
+    pub fn worker_pool(&self) -> Option<&Arc<WorkerPool>> {
+        self.pool.as_ref()
     }
 
     /// Split `out` (= `ho` rows of `rowlen` i32) across the worker pool;
@@ -224,12 +273,30 @@ impl Engine {
             return;
         }
         let chunk_rows = ho.div_ceil(threads);
-        std::thread::scope(|s| {
-            for (ti, chunk) in out.chunks_mut(chunk_rows * rowlen).enumerate() {
-                let b = &body;
-                s.spawn(move || b(ti * chunk_rows, chunk));
-            }
-        });
+        if let Some(pool) = &self.pool {
+            // persistent-pool path: chunk indices map to disjoint row
+            // blocks of `out`; workers are already parked and waiting
+            let n_chunks = ho.div_ceil(chunk_rows);
+            let chunk_elems = chunk_rows * rowlen;
+            let total = out.len();
+            let base = SendPtr(out.as_mut_ptr());
+            pool.run(n_chunks, &|ci| {
+                let start = ci * chunk_elems;
+                let len = chunk_elems.min(total - start);
+                // SAFETY: chunk `ci` owns rows [ci*chunk_rows, ..) —
+                // disjoint element ranges of `out` per chunk index
+                let chunk =
+                    unsafe { std::slice::from_raw_parts_mut(base.0.add(start), len) };
+                body(ci * chunk_rows, chunk);
+            });
+        } else {
+            std::thread::scope(|s| {
+                for (ti, chunk) in out.chunks_mut(chunk_rows * rowlen).enumerate() {
+                    let b = &body;
+                    s.spawn(move || b(ti * chunk_rows, chunk));
+                }
+            });
+        }
     }
 
     /// LUT-fused log-domain convolution: `a [H,W,C] ⊛ fused [K,kh,kw,C] →
@@ -237,34 +304,72 @@ impl Engine {
     /// Bit-identical to `exec::conv2d` on the un-fused tensors.
     pub fn conv2d(&self, a: &Tensor3, fw: &FusedWeights, stride: usize) -> Tensor3 {
         assert_eq!(a.c, fw.c, "channel mismatch");
-        assert!(stride >= 1, "stride must be >= 1");
         let cols = act_cols(a);
         let ho = out_dim(a.h, fw.kh, stride);
         let wo = out_dim(a.w, fw.kw, stride);
         let mut out = Tensor3::new(ho, wo, fw.k);
+        self.conv2d_cols(&cols, a.h, a.w, fw, stride, &mut out.data);
+        out
+    }
+
+    /// [`Engine::conv2d`] over pre-encoded activation columns, writing
+    /// psums into a caller-owned buffer — the allocation-free entry the
+    /// program executor drives against arena slots.
+    pub fn conv2d_cols(
+        &self,
+        cols: &[u8],
+        ah: usize,
+        aw: usize,
+        fw: &FusedWeights,
+        stride: usize,
+        out: &mut [i32],
+    ) {
+        assert!(stride >= 1, "stride must be >= 1");
+        assert_eq!(cols.len(), ah * aw * fw.c, "cols/shape mismatch");
+        let ho = out_dim(ah, fw.kh, stride);
+        let wo = out_dim(aw, fw.kw, stride);
+        assert_eq!(out.len(), ho * wo * fw.k, "out/shape mismatch");
+        out.fill(0); // conv_rows accumulates into the existing psums
         let rowlen = wo * fw.k;
         let work = (ho * wo * fw.k * fw.kh * fw.kw * fw.c) as u64;
-        let aw = a.w;
-        self.par_rows(ho, rowlen, work, &mut out.data, |i0, rows| {
-            conv_rows(&cols, aw, fw, stride, i0, rows, wo);
+        self.par_rows(ho, rowlen, work, out, |i0, rows| {
+            conv_rows(cols, aw, fw, stride, i0, rows, wo);
         });
-        out
     }
 
     /// Depthwise convolution: `a [H,W,C]`, fused `[C,k,k,1]` → `[Ho,Wo,C]`.
     pub fn depthwise(&self, a: &Tensor3, fw: &FusedWeights, stride: usize) -> Tensor3 {
         assert_eq!(a.c, fw.k, "depthwise: one filter per channel");
-        assert_eq!(fw.c, 1, "depthwise weights are [C,k,k,1]");
         let cols = act_cols(a);
         let ho = out_dim(a.h, fw.kh, stride);
         let wo = out_dim(a.w, fw.kw, stride);
         let mut out = Tensor3::new(ho, wo, a.c);
-        let rowlen = wo * a.c;
-        let work = (ho * wo * a.c * fw.kh * fw.kw) as u64;
-        let (aw, c) = (a.w, a.c);
+        self.depthwise_cols(&cols, a.h, a.w, fw, stride, &mut out.data);
+        out
+    }
+
+    /// [`Engine::depthwise`] over pre-encoded columns into a caller
+    /// buffer (every output element is written, no pre-zeroing needed).
+    pub fn depthwise_cols(
+        &self,
+        cols: &[u8],
+        ah: usize,
+        aw: usize,
+        fw: &FusedWeights,
+        stride: usize,
+        out: &mut [i32],
+    ) {
+        assert_eq!(fw.c, 1, "depthwise weights are [C,k,k,1]");
+        let c = fw.k; // one filter per channel
+        assert_eq!(cols.len(), ah * aw * c, "cols/shape mismatch");
+        let ho = out_dim(ah, fw.kh, stride);
+        let wo = out_dim(aw, fw.kw, stride);
+        assert_eq!(out.len(), ho * wo * c, "out/shape mismatch");
+        let rowlen = wo * c;
+        let work = (ho * wo * c * fw.kh * fw.kw) as u64;
         let (kh, kw) = (fw.kh, fw.kw);
         let wrows = &fw.rows;
-        self.par_rows(ho, rowlen, work, &mut out.data, |i0, orows| {
+        self.par_rows(ho, rowlen, work, out, |i0, orows| {
             for (ri, orow) in orows.chunks_exact_mut(rowlen).enumerate() {
                 let i = i0 + ri;
                 for j in 0..wo {
@@ -285,7 +390,6 @@ impl Engine {
                 }
             }
         });
-        out
     }
 
     /// Pointwise (1×1, arbitrary stride): fused `[K,1,1,C]` → `[Ho,Wo,K]`.
@@ -296,15 +400,21 @@ impl Engine {
     /// Fully connected head: flattened input (row-major HWC) vs fused
     /// `[K,1,1,N]`.
     pub fn fc(&self, a: &Tensor3, fw: &FusedWeights) -> Vec<i32> {
-        let n = a.len();
-        assert_eq!(fw.c, n, "fc: weight width != flattened input");
-        assert_eq!(fw.kh * fw.kw, 1, "fc weights are [K,1,1,N]");
         let cols = act_cols(a);
         let mut out = vec![0i32; fw.k];
-        for (k, o) in out.iter_mut().enumerate() {
-            *o = dot(&fw.rows[k * n..(k + 1) * n], &cols, 0);
-        }
+        self.fc_cols(&cols, fw, &mut out);
         out
+    }
+
+    /// [`Engine::fc`] over pre-encoded columns into a caller buffer.
+    pub fn fc_cols(&self, cols: &[u8], fw: &FusedWeights, out: &mut [i32]) {
+        let n = cols.len();
+        assert_eq!(fw.c, n, "fc: weight width != flattened input");
+        assert_eq!(fw.kh * fw.kw, 1, "fc weights are [K,1,1,N]");
+        assert_eq!(out.len(), fw.k, "out/shape mismatch");
+        for (k, o) in out.iter_mut().enumerate() {
+            *o = dot(&fw.rows[k * n..(k + 1) * n], cols, 0);
+        }
     }
 
     /// Execute one layer on the engine (mirror of `exec::run_layer`, with
@@ -362,20 +472,46 @@ impl Engine {
         let chunk = n.div_ceil(threads);
         let mut out: Vec<Option<U>> = Vec::new();
         out.resize_with(n, || None);
-        std::thread::scope(|s| {
-            for (ic, oc) in items.chunks(chunk).zip(out.chunks_mut(chunk)) {
-                let fr = &f;
-                let er = &single;
-                s.spawn(move || {
-                    for (t, o) in ic.iter().zip(oc.iter_mut()) {
-                        *o = Some(fr(er, t));
-                    }
-                });
-            }
-        });
+        if let Some(pool) = &self.pool {
+            let n_chunks = n.div_ceil(chunk);
+            let optr = SendPtrOf(out.as_mut_ptr());
+            pool.run(n_chunks, &|ci| {
+                let start = ci * chunk;
+                let end = (start + chunk).min(n);
+                for (i, t) in items[start..end].iter().enumerate() {
+                    let v = f(&single, t);
+                    // SAFETY: chunk `ci` owns output indices [start, end)
+                    unsafe { *optr.0.add(start + i) = Some(v) };
+                }
+            });
+        } else {
+            std::thread::scope(|s| {
+                for (ic, oc) in items.chunks(chunk).zip(out.chunks_mut(chunk)) {
+                    let fr = &f;
+                    let er = &single;
+                    s.spawn(move || {
+                        for (t, o) in ic.iter().zip(oc.iter_mut()) {
+                            *o = Some(fr(er, t));
+                        }
+                    });
+                }
+            });
+        }
         out.into_iter().map(|o| o.expect("par_map slot filled")).collect()
     }
 }
+
+/// Shareable raw base pointer for handing disjoint sub-ranges of one
+/// buffer to worker-pool chunks (each chunk index touches a distinct
+/// element range, so the aliasing is only apparent).
+struct SendPtr(*mut i32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Typed variant of [`SendPtr`] for `par_map`'s output slots.
+struct SendPtrOf<T>(*mut T);
+unsafe impl<T> Send for SendPtrOf<T> {}
+unsafe impl<T> Sync for SendPtrOf<T> {}
 
 /// Branch-free fused dot product over one contiguous tap row.
 #[inline(always)]
@@ -587,6 +723,68 @@ mod tests {
         // empty input
         let empty: Vec<usize> = vec![];
         assert!(eng.par_map(&empty, |_, &x| x).is_empty());
+    }
+
+    #[test]
+    fn pooled_engine_matches_exec_across_kernels() {
+        // persistent-pool substrate vs reference executor (and thereby vs
+        // the scoped-thread substrate, which is pinned above)
+        let mut rng = SplitMix64::new(21);
+        let pool = crate::dataflow::workers::WorkerPool::new(3);
+        let eng = Engine::pooled_forced(pool);
+        assert_eq!(eng.num_threads(), 3);
+        assert!(eng.worker_pool().is_some());
+        assert!(Engine::single_threaded().worker_pool().is_none());
+        for (k, kh, kw, stride) in
+            [(3usize, 3usize, 3usize, 1usize), (3, 3, 3, 2), (2, 5, 5, 1), (4, 1, 1, 1)]
+        {
+            let a = rand_t3(&mut rng, 13, 11, 5, 0.15);
+            let (wc, ws) = rand_t4(&mut rng, k, kh, kw, 5, 0.15);
+            let want = exec::conv2d(&a, &wc, &ws, stride);
+            let fw = FusedWeights::fuse(&wc, &ws);
+            assert_eq!(eng.conv2d(&a, &fw, stride), want, "k={k} kh={kh} s={stride}");
+        }
+        let a = rand_t3(&mut rng, 9, 8, 4, 0.1);
+        let (wc, ws) = rand_t4(&mut rng, 4, 3, 3, 1, 0.1);
+        let fw = FusedWeights::fuse(&wc, &ws);
+        assert_eq!(eng.depthwise(&a, &fw, 1), exec::depthwise(&a, &wc, &ws, 1));
+    }
+
+    #[test]
+    fn pooled_par_map_preserves_order_and_reuses_workers() {
+        let pool = crate::dataflow::workers::WorkerPool::new(3);
+        let eng = Engine::pooled(pool, EngineOptions::default());
+        for _ in 0..20 {
+            let items: Vec<usize> = (0..23).collect();
+            let out = eng.par_map(&items, |e, &x| {
+                assert_eq!(e.num_threads(), 1);
+                x * 3
+            });
+            assert_eq!(out, items.iter().map(|&x| x * 3).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn cols_kernels_match_tensor_wrappers() {
+        let mut rng = SplitMix64::new(33);
+        let a = rand_t3(&mut rng, 10, 9, 3, 0.2);
+        let (wc, ws) = rand_t4(&mut rng, 4, 3, 3, 3, 0.2);
+        let fw = FusedWeights::fuse(&wc, &ws);
+        let eng = Engine::single_threaded();
+        let mut cols = Vec::new();
+        encode_cols(&a.data, &mut cols);
+        let want = eng.conv2d(&a, &fw, 1);
+        let mut got = vec![7i32; want.len()]; // dirty buffer: must be zeroed
+        eng.conv2d_cols(&cols, a.h, a.w, &fw, 1, &mut got);
+        assert_eq!(got, want.data);
+
+        let n = a.len();
+        let (fc_c, fc_s) = rand_t4(&mut rng, 5, 1, 1, n, 0.2);
+        let ffc = FusedWeights::fuse(&fc_c, &fc_s);
+        let flat = Tensor3::from_vec(1, 1, n, a.data.clone());
+        let mut got = vec![0i32; 5];
+        eng.fc_cols(&cols, &ffc, &mut got);
+        assert_eq!(got, eng.fc(&flat, &ffc));
     }
 
     #[test]

@@ -7,9 +7,11 @@
 //! prove it.
 //!
 //! This module is the *reference* executor. The serving hot path is
-//! `dataflow::engine` (LUT-fused, multi-threaded, 5–20× faster), which is
-//! pinned bit-for-bit against these loops by `rust/tests/engine_equiv.rs`
-//! and benchmarked side-by-side in `benches/perf_hotpath.rs`.
+//! `dataflow::engine` (LUT-fused, multi-threaded, 5–20× faster) driven
+//! through compiled `dataflow::program` plans; both are pinned
+//! bit-for-bit against these loops (`rust/tests/engine_equiv.rs`,
+//! `rust/tests/program_slots.rs`) and benchmarked side-by-side in
+//! `benches/perf_hotpath.rs`.
 
 use super::pool;
 use super::schedule::{analyze, LayerPerf, ScheduleOptions};

@@ -34,6 +34,7 @@ use std::borrow::Cow;
 use crate::arch::state_controller::pad_input;
 use crate::dataflow::engine::Engine;
 use crate::dataflow::exec;
+use crate::lns::logquant::ZERO_CODE;
 use crate::models::layer::{Network, Op};
 use crate::models::runner::{FusedNet, NetWeights};
 use crate::tensor::{Tensor3, Tensor4};
@@ -61,7 +62,8 @@ pub enum Routing {
 }
 
 impl Routing {
-    fn sources(&self) -> [Option<Source>; 2] {
+    /// The (up to two) producers this routing reads.
+    pub fn sources(&self) -> [Option<Source>; 2] {
         match *self {
             Routing::Direct(a) | Routing::Flatten(a) => [Some(a), None],
             Routing::Concat(a, b) | Routing::Residual(a, b) => [Some(a), Some(b)],
@@ -189,16 +191,31 @@ impl ForwardPlan {
             .iter()
             .any(|r| matches!(r, Routing::Concat(..) | Routing::Residual(..)))
     }
+
+    /// `last_use[i]` = index of the last layer reading layer `i`'s
+    /// output (`usize::MAX` if never read — e.g. the final layer). The
+    /// program compiler derives its slot-liveness from this.
+    pub fn last_use(&self) -> &[usize] {
+        &self.last_use
+    }
 }
 
-/// Channel-concat two same-spatial code tensors (a's channels first).
-fn concat_channels(a: &Tensor3, b: &Tensor3) -> Tensor3 {
+/// Channel-concat two same-spatial code tensors (a's channels first)
+/// directly into a `pad`-bordered buffer — one copy, whatever the next
+/// layer's padding. The border is ZERO_CODE, exactly what `pad_input`
+/// would have produced from the unpadded concat.
+fn concat_padded(a: &Tensor3, b: &Tensor3, pad: usize) -> Tensor3 {
     assert_eq!((a.h, a.w), (b.h, b.w), "concat spatial mismatch");
     let c = a.c + b.c;
-    let mut out = Tensor3::new(a.h, a.w, c);
+    let (oh, ow) = (a.h + 2 * pad, a.w + 2 * pad);
+    let mut out = if pad == 0 {
+        Tensor3::new(oh, ow, c)
+    } else {
+        Tensor3::filled(oh, ow, c, ZERO_CODE)
+    };
     for y in 0..a.h {
         for x in 0..a.w {
-            let o = (y * a.w + x) * c;
+            let o = ((y + pad) * ow + x + pad) * c;
             let ia = (y * a.w + x) * a.c;
             let ib = (y * b.w + x) * b.c;
             out.data[o..o + a.c].copy_from_slice(&a.data[ia..ia + a.c]);
@@ -208,12 +225,31 @@ fn concat_channels(a: &Tensor3, b: &Tensor3) -> Tensor3 {
     out
 }
 
-/// Residual merge on the log-code domain: elementwise max (order-
-/// preserving, like max-pool — the dominant branch wins per element).
-fn residual_merge(a: &Tensor3, b: &Tensor3) -> Tensor3 {
+/// Residual merge on the log-code domain — elementwise max (order-
+/// preserving, like max-pool; the dominant branch wins per element) —
+/// staged directly into a `pad`-bordered buffer (one copy, see
+/// [`concat_padded`]).
+fn residual_padded(a: &Tensor3, b: &Tensor3, pad: usize) -> Tensor3 {
     assert_eq!((a.h, a.w, a.c), (b.h, b.w, b.c), "residual shape mismatch");
-    let data = a.data.iter().zip(&b.data).map(|(&x, &y)| x.max(y)).collect();
-    Tensor3 { h: a.h, w: a.w, c: a.c, data }
+    if pad == 0 {
+        let data = a.data.iter().zip(&b.data).map(|(&x, &y)| x.max(y)).collect();
+        return Tensor3 { h: a.h, w: a.w, c: a.c, data };
+    }
+    let (oh, ow) = (a.h + 2 * pad, a.w + 2 * pad);
+    let mut out = Tensor3::filled(oh, ow, a.c, ZERO_CODE);
+    let rowlen = a.w * a.c;
+    for y in 0..a.h {
+        let src = y * rowlen;
+        let dst = ((y + pad) * ow + pad) * a.c;
+        for ((&x, &yv), o) in a.data[src..src + rowlen]
+            .iter()
+            .zip(&b.data[src..src + rowlen])
+            .zip(&mut out.data[dst..dst + rowlen])
+        {
+            *o = x.max(yv);
+        }
+    }
+    out
 }
 
 /// Flatten to `[1, 1, H·W·C]` (row-major HWC — the layout `fc` expects).
@@ -246,24 +282,26 @@ fn drive(
             Op::Conv { pad, .. } | Op::Depthwise { pad, .. } => pad,
             _ => 0,
         };
-        // assemble the input without copying on the sequential pad-0 hot
-        // path (pad_input clones even for pad == 0)
-        let input: Cow<Tensor3> = match plan.routes[i] {
-            Routing::Direct(s) => Cow::Borrowed(fetch(&outs, x, s)),
+        // assemble the padded input in at most ONE copy: merges stage
+        // straight into the pad-bordered buffer (no merge-then-pad
+        // double copy), and the sequential pad-0 hot path borrows
+        let padded: Cow<Tensor3> = match plan.routes[i] {
+            Routing::Direct(s) => {
+                let t = fetch(&outs, x, s);
+                if pad == 0 {
+                    Cow::Borrowed(t)
+                } else {
+                    Cow::Owned(pad_input(t, pad))
+                }
+            }
+            // Fc layers are never padded, so flatten needs no border
             Routing::Flatten(s) => Cow::Owned(flatten(fetch(&outs, x, s))),
             Routing::Concat(a, b) => {
-                Cow::Owned(concat_channels(fetch(&outs, x, a), fetch(&outs, x, b)))
+                Cow::Owned(concat_padded(fetch(&outs, x, a), fetch(&outs, x, b), pad))
             }
             Routing::Residual(a, b) => {
-                Cow::Owned(residual_merge(fetch(&outs, x, a), fetch(&outs, x, b)))
+                Cow::Owned(residual_padded(fetch(&outs, x, a), fetch(&outs, x, b), pad))
             }
-        };
-        let padded: Cow<Tensor3> = if pad == 0 {
-            input
-        } else {
-            let p = pad_input(&input, pad);
-            drop(input); // release any borrow of `outs` before the write below
-            Cow::Owned(p)
         };
         let raw = run(i, &padded);
         // end the Cow's borrow of `outs` before writing this layer's slot
@@ -462,8 +500,21 @@ mod tests {
     fn concat_interleaves_per_pixel() {
         let a = Tensor3::from_vec(1, 2, 2, vec![1, 2, 3, 4]);
         let b = Tensor3::from_vec(1, 2, 1, vec![9, 8]);
-        let c = concat_channels(&a, &b);
+        let c = concat_padded(&a, &b, 0);
         assert_eq!(c.data, vec![1, 2, 9, 3, 4, 8]);
+    }
+
+    #[test]
+    fn padded_merges_equal_merge_then_pad() {
+        // the single-copy staging must equal the old two-copy pipeline
+        let a = Tensor3::from_vec(2, 2, 2, vec![1, -3, 2, 0, -7, 4, 5, -1]);
+        let b = Tensor3::from_vec(2, 2, 1, vec![9, 8, -2, 6]);
+        let two_step = pad_input(&concat_padded(&a, &b, 0), 1);
+        assert_eq!(concat_padded(&a, &b, 1), two_step);
+
+        let b2 = Tensor3::from_vec(2, 2, 2, vec![0, -9, 3, 1, -8, 2, 4, 7]);
+        let two_step = pad_input(&residual_padded(&a, &b2, 0), 2);
+        assert_eq!(residual_padded(&a, &b2, 2), two_step);
     }
 
     #[test]

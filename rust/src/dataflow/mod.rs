@@ -7,14 +7,27 @@
 //! `schedule::analyze` and `exec::run_layer` share the same tiling
 //! arithmetic; `arch::conv_core` is the hardware-faithful (slow) twin used
 //! to validate both.
+//!
+//! The serving path is the plan/compile/execute split: `program`
+//! compiles a network into a [`ModelProgram`] (liveness-based buffer
+//! slots, kernel selection, staged merges, folded requant) executed by a
+//! [`ProgramExecutor`] against a grow-only [`ActivationArena`] on a
+//! persistent [`WorkerPool`] — zero steady-state allocation, no
+//! per-layer thread spawn/join.
 
+pub mod arena;
 pub mod engine;
 pub mod exec;
 pub mod forward;
 pub mod pool;
+pub mod program;
 pub mod schedule;
 pub mod tile;
+pub mod workers;
 
+pub use arena::ActivationArena;
 pub use engine::{Engine, EngineOptions, FusedWeights};
 pub use forward::{forward_engine, forward_ref, ForwardPlan};
+pub use program::{cached_program, ModelProgram, ProgramExecutor};
 pub use schedule::{analyze, LayerPerf, ScheduleOptions};
+pub use workers::WorkerPool;

@@ -16,21 +16,40 @@ use crate::tensor::{out_dim, Tensor3};
 pub fn maxpool(a: &Tensor3, k: usize, stride: usize) -> Tensor3 {
     let ho = out_dim(a.h, k, stride);
     let wo = out_dim(a.w, k, stride);
-    let mut out = Tensor3::filled(ho, wo, a.c, i32::MIN);
+    let mut out = Tensor3::new(ho, wo, a.c);
+    maxpool_into(&a.data, a.h, a.w, a.c, k, stride, &mut out.data);
+    out
+}
+
+/// [`maxpool`] over a raw `[H,W,C]` code slice into a caller buffer —
+/// the allocation-free entry the program executor drives against arena
+/// slots. Every output element is written.
+pub fn maxpool_into(
+    src: &[i32],
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    out: &mut [i32],
+) {
+    let ho = out_dim(h, k, stride);
+    let wo = out_dim(w, k, stride);
+    assert_eq!(src.len(), h * w * c, "src/shape mismatch");
+    assert_eq!(out.len(), ho * wo * c, "out/shape mismatch");
     for i in 0..ho {
         for j in 0..wo {
-            for ch in 0..a.c {
+            for ch in 0..c {
                 let mut m = i32::MIN;
                 for dy in 0..k {
                     for dx in 0..k {
-                        m = m.max(a.get(i * stride + dy, j * stride + dx, ch));
+                        m = m.max(src[((i * stride + dy) * w + j * stride + dx) * c + ch]);
                     }
                 }
-                out.set(i, j, ch, m);
+                out[(i * wo + j) * c + ch] = m;
             }
         }
     }
-    out
 }
 
 /// Average pool over codes: window-sum the Q19.12 magnitudes
@@ -41,23 +60,43 @@ pub fn maxpool(a: &Tensor3, k: usize, stride: usize) -> Tensor3 {
 pub fn avgpool(a: &Tensor3, k: usize, stride: usize) -> Tensor3 {
     let ho = out_dim(a.h, k, stride);
     let wo = out_dim(a.w, k, stride);
-    let window = (k * k) as i64;
     let mut out = Tensor3::new(ho, wo, a.c);
+    avgpool_into(&a.data, a.h, a.w, a.c, k, stride, &mut out.data);
+    out
+}
+
+/// [`avgpool`] over a raw `[H,W,C]` code slice into a caller buffer
+/// (see [`maxpool_into`]). Every output element is written.
+pub fn avgpool_into(
+    src: &[i32],
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    out: &mut [i32],
+) {
+    let ho = out_dim(h, k, stride);
+    let wo = out_dim(w, k, stride);
+    assert_eq!(src.len(), h * w * c, "src/shape mismatch");
+    assert_eq!(out.len(), ho * wo * c, "out/shape mismatch");
+    let window = (k * k) as i64;
     for i in 0..ho {
         for j in 0..wo {
-            for ch in 0..a.c {
+            for ch in 0..c {
                 let mut sum = 0i64;
                 for dy in 0..k {
                     for dx in 0..k {
-                        sum += magnitude(a.get(i * stride + dy, j * stride + dx, ch)) as i64;
+                        sum +=
+                            magnitude(src[((i * stride + dy) * w + j * stride + dx) * c + ch])
+                                as i64;
                     }
                 }
                 // mean <= max magnitude (~1.9e8), always fits i32
-                out.set(i, j, ch, requant_act((sum / window) as i32));
+                out[(i * wo + j) * c + ch] = requant_act((sum / window) as i32);
             }
         }
     }
-    out
 }
 
 #[cfg(test)]

@@ -1,0 +1,648 @@
+//! Compile-once model programs: the plan/compile/execute split of the
+//! serving stack.
+//!
+//! `forward::drive` re-derives everything per request: it allocates
+//! every feature map, pad border, concat and residual merge on the fly,
+//! and routes layer inputs by interpreting the [`ForwardPlan`] each
+//! time. Shen et al. (*Maximizing CNN Accelerator Efficiency Through
+//! Resource Partitioning*) compile per-layer resource plans once per
+//! network; this module brings the same split to the simulator's
+//! serving path:
+//!
+//! * [`ModelProgram::compile`] runs once per (model, profile): shape
+//!   inference for every step, **liveness-based buffer-slot reuse** (a
+//!   feature map's slot is recycled the step after its last reader —
+//!   generalizing `drive`'s `last_use` freeing into a static
+//!   assignment), per-layer **kernel selection** (3×3-s1 fast path /
+//!   generic conv / depthwise / max- or avg-pool / fc), pad and
+//!   concat/residual staging resolved into fixed buffer offsets, and
+//!   ReLU+requant folded into each compute step (the final layer stays
+//!   raw — its psums are the serving logits).
+//! * [`ProgramExecutor::run_into`] executes the program against a
+//!   reusable [`ActivationArena`]: grow-only slots, zero steady-state
+//!   allocation (pinned by `rust/tests/alloc_steady.rs`), kernels driven
+//!   through the engine's slice-level `_cols`/`_into` entry points.
+//!
+//! Numerics are untouched: every kernel still derives from
+//! `lns::mult::magnitude` through the same LUT the legacy driver uses,
+//! and `rust/tests/program_slots.rs` pins the program executor
+//! bit-for-bit against `forward_ref` / `forward_engine` over random
+//! zoo-like graphs; `tests/zoo_forward.rs` pins the whole zoo.
+//!
+//! Programs are the unit of caching: [`cached_program`] memoizes one
+//! compiled program per (model name, shape fingerprint) process-wide,
+//! so every shard and every request shares the same compiled form.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::arena::{ensure_len, ActivationArena};
+use super::engine::{encode_cols, Engine};
+use super::forward::{ForwardPlan, Routing, Source};
+use super::pool::{avgpool_into, maxpool_into};
+use crate::lns::logquant::ZERO_CODE;
+use crate::lns::tables::requant_act;
+use crate::models::layer::{Network, Op};
+use crate::models::runner::FusedNet;
+use crate::tensor::Tensor3;
+
+/// Where a step reads a tensor: the request input (`slot == None`) or
+/// an arena slot holding an earlier step's output. Dims are the
+/// *logical* dims of the read (flatten reinterprets them — same data,
+/// `[1, 1, H·W·C]` view), `src_layer` records the producing layer for
+/// slot-safety validation (`usize::MAX` = the request input).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Operand {
+    pub slot: Option<usize>,
+    pub src_layer: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl Operand {
+    pub fn len(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// How a staged input buffer is filled (always at fixed, precomputed
+/// offsets inside the pad border — merges never pay a second pad copy).
+#[derive(Clone, Debug)]
+pub enum Merge {
+    /// One source copied into the padded interior.
+    Copy(Operand),
+    /// Channel concat: `a`'s channels then `b`'s, per pixel.
+    Concat(Operand, Operand),
+    /// Residual merge: elementwise code max of two same-shape sources.
+    Residual(Operand, Operand),
+}
+
+/// A staged (padded and/or merged) input: which transient slot it lives
+/// in, its padded dims, and how it is filled.
+#[derive(Clone, Debug)]
+pub struct StagePlan {
+    pub slot: usize,
+    /// Padded dims (`h = hin + 2·pad`, ...).
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub pad: usize,
+    pub merge: Merge,
+}
+
+/// A step's input: read a producer buffer in place (pad-0 direct edges
+/// and flattens — no copy at all), or a staged buffer.
+#[derive(Clone, Debug)]
+pub enum Input {
+    Direct(Operand),
+    Staged(StagePlan),
+}
+
+/// The kernel selected for a step at compile time. `Conv3x3S1` records
+/// that the layer qualifies for the engine's contiguous-slice 3×3
+/// stride-1 row kernel — today both conv variants execute through
+/// [`Engine::conv2d_cols`] (whose row dispatch applies that fast path),
+/// so the variant is the compile-time record future backends key on,
+/// not a separate execution route.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// 3×3 stride-1 convolution (fast-path eligible).
+    Conv3x3S1,
+    /// Generic k×k/stride convolution (includes 1×1 pointwise).
+    Conv { stride: usize },
+    Depthwise { stride: usize },
+    MaxPool { k: usize, stride: usize },
+    AvgPool { k: usize, stride: usize },
+    Fc,
+}
+
+/// One compiled layer execution.
+#[derive(Clone, Debug)]
+pub struct Step {
+    /// Index into `net.layers` / `FusedNet.layers` (weight lookup).
+    pub layer: usize,
+    pub kernel: Kernel,
+    pub input: Input,
+    pub out_slot: usize,
+    pub out_h: usize,
+    pub out_w: usize,
+    pub out_c: usize,
+    /// Fold ReLU+requant into this step's output (every compute layer
+    /// except the last; pools pass codes through unchanged).
+    pub requant: bool,
+}
+
+impl Step {
+    pub fn out_len(&self) -> usize {
+        self.out_h * self.out_w * self.out_c
+    }
+}
+
+/// A network compiled for execution: steps plus the slot plan.
+#[derive(Clone, Debug)]
+pub struct ModelProgram {
+    pub name: String,
+    pub input_dims: (usize, usize, usize),
+    pub steps: Vec<Step>,
+    /// Element capacity of each arena slot (the max any step needs).
+    pub slot_sizes: Vec<usize>,
+    /// Slot holding the final layer's output after a run.
+    pub out_slot: usize,
+    pub out_dims: (usize, usize, usize),
+}
+
+/// Acquire a slot: reuse a dead one (LIFO for locality) or mint a new
+/// one; either way the slot's capacity covers `len`.
+fn alloc_slot(sizes: &mut Vec<usize>, free: &mut Vec<usize>, len: usize) -> usize {
+    if let Some(s) = free.pop() {
+        sizes[s] = sizes[s].max(len);
+        s
+    } else {
+        sizes.push(len);
+        sizes.len() - 1
+    }
+}
+
+impl ModelProgram {
+    /// Infer the routing plan and compile it. One call per (model,
+    /// profile) — see [`cached_program`] for the process-wide cache.
+    pub fn compile(net: &Network) -> Result<ModelProgram, String> {
+        let plan = ForwardPlan::infer(net)?;
+        Ok(Self::from_plan(net, &plan))
+    }
+
+    /// Compile against a precomputed routing plan.
+    pub fn from_plan(net: &Network, plan: &ForwardPlan) -> ModelProgram {
+        let n = net.layers.len();
+        assert_eq!(plan.routes.len(), n, "plan/net mismatch");
+        let last_use = plan.last_use();
+        let l0 = &net.layers[0];
+        let input_dims = (l0.hin, l0.win, l0.cin);
+
+        let mut slot_sizes: Vec<usize> = Vec::new();
+        let mut free: Vec<usize> = Vec::new();
+        // per produced layer: its slot and output dims
+        let mut out_slot_of: Vec<usize> = vec![usize::MAX; n];
+        let mut out_dims_of: Vec<(usize, usize, usize)> = Vec::with_capacity(n);
+        let mut steps: Vec<Step> = Vec::with_capacity(n);
+
+        for (i, l) in net.layers.iter().enumerate() {
+            let pad = match l.op {
+                Op::Conv { pad, .. } | Op::Depthwise { pad, .. } => pad,
+                _ => 0,
+            };
+            let operand = |s: Source| -> Operand {
+                match s {
+                    Source::Input => Operand {
+                        slot: None,
+                        src_layer: usize::MAX,
+                        h: input_dims.0,
+                        w: input_dims.1,
+                        c: input_dims.2,
+                    },
+                    Source::Layer(j) => {
+                        let (h, w, c) = out_dims_of[j];
+                        Operand { slot: Some(out_slot_of[j]), src_layer: j, h, w, c }
+                    }
+                }
+            };
+            let route = plan.routes[i];
+            let input = match route {
+                Routing::Direct(s) => {
+                    let op = operand(s);
+                    if pad == 0 {
+                        Input::Direct(op)
+                    } else {
+                        let (h, w, c) = (op.h + 2 * pad, op.w + 2 * pad, op.c);
+                        let slot = alloc_slot(&mut slot_sizes, &mut free, h * w * c);
+                        Input::Staged(StagePlan { slot, h, w, c, pad, merge: Merge::Copy(op) })
+                    }
+                }
+                Routing::Flatten(s) => {
+                    // Fc is never padded: a pure dims reinterpretation
+                    let op = operand(s);
+                    Input::Direct(Operand {
+                        slot: op.slot,
+                        src_layer: op.src_layer,
+                        h: 1,
+                        w: 1,
+                        c: op.len(),
+                    })
+                }
+                Routing::Concat(a, b) => {
+                    let (oa, ob) = (operand(a), operand(b));
+                    let (h, w, c) =
+                        (l.hin + 2 * pad, l.win + 2 * pad, oa.c + ob.c);
+                    let slot = alloc_slot(&mut slot_sizes, &mut free, h * w * c);
+                    Input::Staged(StagePlan { slot, h, w, c, pad, merge: Merge::Concat(oa, ob) })
+                }
+                Routing::Residual(a, b) => {
+                    let (oa, ob) = (operand(a), operand(b));
+                    let (h, w, c) = (l.hin + 2 * pad, l.win + 2 * pad, oa.c);
+                    Input::Staged(StagePlan {
+                        slot: alloc_slot(&mut slot_sizes, &mut free, h * w * c),
+                        h,
+                        w,
+                        c,
+                        pad,
+                        merge: Merge::Residual(oa, ob),
+                    })
+                }
+            };
+            let kernel = match l.op {
+                Op::Conv { kh, kw, stride, .. } => {
+                    if kh == 3 && kw == 3 && stride == 1 {
+                        Kernel::Conv3x3S1
+                    } else {
+                        Kernel::Conv { stride }
+                    }
+                }
+                Op::Pointwise { stride } => Kernel::Conv { stride },
+                Op::Depthwise { stride, .. } => Kernel::Depthwise { stride },
+                Op::Pool { k, stride, max } => {
+                    if max {
+                        Kernel::MaxPool { k, stride }
+                    } else {
+                        Kernel::AvgPool { k, stride }
+                    }
+                }
+                Op::Fc => Kernel::Fc,
+            };
+            let (out_h, out_w) = l.out_dims();
+            let out_c = l.cout;
+            // the output slot is acquired while the stage slot and every
+            // live source are still held, so it can alias none of them
+            let out_slot = alloc_slot(&mut slot_sizes, &mut free, out_h * out_w * out_c);
+            out_slot_of[i] = out_slot;
+            out_dims_of.push((out_h, out_w, out_c));
+            // the staged input dies with the step; sources die after
+            // their last reader
+            if let Input::Staged(sp) = &input {
+                free.push(sp.slot);
+            }
+            for s in route.sources().into_iter().flatten() {
+                if let Source::Layer(j) = s {
+                    if last_use[j] == i {
+                        free.push(out_slot_of[j]);
+                    }
+                }
+            }
+            steps.push(Step {
+                layer: i,
+                kernel,
+                input,
+                out_slot,
+                out_h,
+                out_w,
+                out_c,
+                requant: l.is_compute() && i + 1 < n,
+            });
+        }
+        let last = steps.last().expect("network has at least one layer");
+        let (out_slot, out_dims) = (last.out_slot, (last.out_h, last.out_w, last.out_c));
+        ModelProgram {
+            name: net.name.clone(),
+            input_dims,
+            steps,
+            slot_sizes,
+            out_slot,
+            out_dims,
+        }
+    }
+
+    /// Total arena footprint the program's slots require, bytes.
+    pub fn slot_bytes(&self) -> usize {
+        self.slot_sizes.iter().sum::<usize>() * std::mem::size_of::<i32>()
+    }
+}
+
+/// Stable shape fingerprint (FNV-1a over every layer's op + dims) so
+/// the program cache cannot confuse two different networks that share a
+/// display name.
+fn fingerprint(net: &Network) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mix = |h: &mut u64, v: u64| {
+        *h ^= v;
+        *h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    for l in &net.layers {
+        let (kh, kw, stride) = l.kernel();
+        let (disc, pad) = match l.op {
+            Op::Conv { pad, .. } => (1u64, pad),
+            Op::Depthwise { pad, .. } => (2, pad),
+            Op::Pointwise { .. } => (3, 0),
+            Op::Pool { max, .. } => (if max { 4 } else { 5 }, 0),
+            Op::Fc => (6, 0),
+        };
+        for v in [disc, kh as u64, kw as u64, stride as u64, pad as u64] {
+            mix(&mut h, v);
+        }
+        for v in [l.hin, l.win, l.cin, l.cout] {
+            mix(&mut h, v as u64);
+        }
+    }
+    h
+}
+
+type ProgramCache = Mutex<HashMap<(String, u64), Arc<ModelProgram>>>;
+static PROGRAM_CACHE: OnceLock<ProgramCache> = OnceLock::new();
+
+/// The process-wide compiled-program cache: one [`ModelProgram`] per
+/// (model name, shape fingerprint), shared by every shard and engine.
+/// This is what makes programs the unit of caching — a model's program
+/// is compiled exactly once no matter how many shards serve it.
+pub fn cached_program(net: &Network) -> Result<Arc<ModelProgram>, String> {
+    let cache = PROGRAM_CACHE.get_or_init(Default::default);
+    let key = (net.name.clone(), fingerprint(net));
+    if let Some(p) = cache.lock().unwrap().get(&key) {
+        return Ok(p.clone());
+    }
+    let p = Arc::new(ModelProgram::compile(net)?);
+    // racing compilers agree (compile is deterministic); first insert wins
+    Ok(cache.lock().unwrap().entry(key).or_insert(p).clone())
+}
+
+/// Resolve an operand to its backing slice.
+fn operand_slice<'a>(op: &Operand, slots: &'a [Vec<i32>], x: &'a Tensor3) -> &'a [i32] {
+    match op.slot {
+        None => &x.data,
+        Some(s) => &slots[s][..op.len()],
+    }
+}
+
+/// Fill a staged input buffer: ZERO_CODE border (when padded) plus the
+/// merge, written at the precomputed offsets in one pass.
+fn stage_into(buf: &mut [i32], sp: &StagePlan, slots: &[Vec<i32>], x: &Tensor3) {
+    if sp.pad > 0 {
+        buf.fill(ZERO_CODE);
+    }
+    let pad = sp.pad;
+    match &sp.merge {
+        Merge::Copy(op) => {
+            let src = operand_slice(op, slots, x);
+            let rowlen = op.w * op.c;
+            for y in 0..op.h {
+                let dst = ((y + pad) * sp.w + pad) * sp.c;
+                buf[dst..dst + rowlen].copy_from_slice(&src[y * rowlen..(y + 1) * rowlen]);
+            }
+        }
+        Merge::Concat(a, b) => {
+            let (sa, sb) = (operand_slice(a, slots, x), operand_slice(b, slots, x));
+            for y in 0..a.h {
+                for xx in 0..a.w {
+                    let o = ((y + pad) * sp.w + xx + pad) * sp.c;
+                    let ia = (y * a.w + xx) * a.c;
+                    let ib = (y * b.w + xx) * b.c;
+                    buf[o..o + a.c].copy_from_slice(&sa[ia..ia + a.c]);
+                    buf[o + a.c..o + a.c + b.c].copy_from_slice(&sb[ib..ib + b.c]);
+                }
+            }
+        }
+        Merge::Residual(a, b) => {
+            let (sa, sb) = (operand_slice(a, slots, x), operand_slice(b, slots, x));
+            let rowlen = a.w * a.c;
+            for y in 0..a.h {
+                let dst = ((y + pad) * sp.w + pad) * sp.c;
+                let ra = &sa[y * rowlen..(y + 1) * rowlen];
+                let rb = &sb[y * rowlen..(y + 1) * rowlen];
+                for ((&p, &q), o) in ra.iter().zip(rb).zip(&mut buf[dst..dst + rowlen]) {
+                    *o = p.max(q);
+                }
+            }
+        }
+    }
+}
+
+/// Track growth of the activation-column scratch alongside slot growth.
+fn encode_cols_counted(src: &[i32], cols: &mut Vec<u8>, grow_events: &mut u64) {
+    if cols.capacity() < src.len() {
+        *grow_events += 1;
+    }
+    encode_cols(src, cols);
+}
+
+/// Executes one compiled program against a private [`ActivationArena`].
+/// Hold one per concurrent execution lane (they are cheap; all capacity
+/// is acquired on the first run and reused forever after).
+#[derive(Debug)]
+pub struct ProgramExecutor {
+    program: Arc<ModelProgram>,
+    arena: ActivationArena,
+}
+
+impl ProgramExecutor {
+    pub fn new(program: Arc<ModelProgram>) -> Self {
+        ProgramExecutor { program, arena: ActivationArena::new() }
+    }
+
+    pub fn program(&self) -> &Arc<ModelProgram> {
+        &self.program
+    }
+
+    /// High-water arena footprint, bytes.
+    pub fn arena_peak_bytes(&self) -> usize {
+        self.arena.peak_bytes()
+    }
+
+    /// Arena buffer growth events so far (0 growth after warmup is the
+    /// zero-steady-state-allocation property).
+    pub fn arena_grow_events(&self) -> u64 {
+        self.arena.grow_events()
+    }
+
+    /// Run one inference. The final layer's output (raw psums for
+    /// compute layers — the serving logits — or codes for pools) is
+    /// written into `out` (cleared first; capacity is reused, so a
+    /// caller-retained buffer makes the whole call allocation-free
+    /// after warmup). Returns the output dims.
+    pub fn run_into(
+        &mut self,
+        eng: &Engine,
+        fused: &FusedNet,
+        x: &Tensor3,
+        out: &mut Vec<i32>,
+    ) -> (usize, usize, usize) {
+        let prog = &self.program;
+        let arena = &mut self.arena;
+        assert_eq!(
+            (x.h, x.w, x.c),
+            prog.input_dims,
+            "{}: input dims mismatch",
+            prog.name
+        );
+        arena.reserve_slots(prog.slot_sizes.len());
+        for step in &prog.steps {
+            // 1. stage the padded/merged input when the plan says so
+            if let Input::Staged(sp) = &step.input {
+                let mut buf = std::mem::take(&mut arena.slots[sp.slot]);
+                ensure_len(&mut buf, prog.slot_sizes[sp.slot], &mut arena.grow_events);
+                stage_into(&mut buf[..sp.h * sp.w * sp.c], sp, &arena.slots, x);
+                arena.slots[sp.slot] = buf;
+            }
+            // 2. kernel into the output slot (taken out so the sources
+            // can be read from the arena while we write)
+            let mut outbuf = std::mem::take(&mut arena.slots[step.out_slot]);
+            ensure_len(&mut outbuf, prog.slot_sizes[step.out_slot], &mut arena.grow_events);
+            {
+                let slots = &arena.slots;
+                let cols = &mut arena.cols;
+                let grow = &mut arena.grow_events;
+                let (src, sh, sw, sc) = match &step.input {
+                    Input::Staged(sp) => {
+                        (&slots[sp.slot][..sp.h * sp.w * sp.c], sp.h, sp.w, sp.c)
+                    }
+                    Input::Direct(op) => (operand_slice(op, slots, x), op.h, op.w, op.c),
+                };
+                let dst = &mut outbuf[..step.out_len()];
+                let fw = fused.layers[step.layer].as_ref();
+                match step.kernel {
+                    k @ (Kernel::Conv3x3S1 | Kernel::Conv { .. }) => {
+                        let stride = if let Kernel::Conv { stride } = k { stride } else { 1 };
+                        encode_cols_counted(src, cols, grow);
+                        eng.conv2d_cols(cols, sh, sw, fw.expect("conv weights"), stride, dst);
+                    }
+                    Kernel::Depthwise { stride } => {
+                        encode_cols_counted(src, cols, grow);
+                        eng.depthwise_cols(cols, sh, sw, fw.expect("dw weights"), stride, dst);
+                    }
+                    Kernel::MaxPool { k, stride } => {
+                        maxpool_into(src, sh, sw, sc, k, stride, dst)
+                    }
+                    Kernel::AvgPool { k, stride } => {
+                        avgpool_into(src, sh, sw, sc, k, stride, dst)
+                    }
+                    Kernel::Fc => {
+                        encode_cols_counted(src, cols, grow);
+                        eng.fc_cols(cols, fw.expect("fc weights"), dst);
+                    }
+                }
+                if step.requant {
+                    for v in dst.iter_mut() {
+                        *v = requant_act(*v);
+                    }
+                }
+            }
+            arena.slots[step.out_slot] = outbuf;
+        }
+        let (oh, ow, oc) = prog.out_dims;
+        out.clear();
+        out.extend_from_slice(&arena.slots[prog.out_slot][..oh * ow * oc]);
+        (oh, ow, oc)
+    }
+
+    /// [`ProgramExecutor::run_into`] returning an owned tensor
+    /// (convenience for tests and one-shot tools).
+    pub fn run(&mut self, eng: &Engine, fused: &FusedNet, x: &Tensor3) -> Tensor3 {
+        let mut data = Vec::new();
+        let (h, w, c) = self.run_into(eng, fused, x, &mut data);
+        Tensor3::from_vec(h, w, c, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::forward::{forward_ref_planned, ForwardPlan};
+    use crate::models::runner::{random_input_for, NetWeights};
+    use crate::models::tinycnn::tinycnn;
+    use crate::models::workload;
+
+    #[test]
+    fn tinycnn_program_selects_expected_kernels_and_reuses_slots() {
+        let prog = ModelProgram::compile(&tinycnn()).unwrap();
+        assert_eq!(prog.steps.len(), 5);
+        assert!(matches!(prog.steps[0].kernel, Kernel::Conv3x3S1));
+        assert!(matches!(prog.steps[1].kernel, Kernel::Conv { stride: 2 }));
+        assert!(matches!(prog.steps[2].kernel, Kernel::Conv { stride: 1 }));
+        assert!(matches!(prog.steps[4].kernel, Kernel::Fc));
+        assert!(!prog.steps[4].requant, "final layer stays raw");
+        assert!(prog.steps[0].requant, "interior compute layers fold requant");
+        // a 5-layer chain must not need 5 live buffers
+        assert!(
+            prog.slot_sizes.len() <= 3,
+            "chain should ping-pong slots, got {:?}",
+            prog.slot_sizes
+        );
+        assert_eq!(
+            prog.slot_bytes(),
+            prog.slot_sizes.iter().sum::<usize>() * 4,
+            "slot footprint accounting"
+        );
+    }
+
+    #[test]
+    fn branchy_programs_stage_merges_at_fixed_offsets() {
+        let sq = ModelProgram::compile(&workload::test_profile("squeezenet").unwrap()).unwrap();
+        assert!(sq.steps.iter().any(|s| matches!(
+            &s.input,
+            Input::Staged(sp) if matches!(sp.merge, Merge::Concat(..))
+        )));
+        let rn = ModelProgram::compile(&workload::test_profile("resnet34").unwrap()).unwrap();
+        assert!(rn.steps.iter().any(|s| matches!(
+            &s.input,
+            Input::Staged(sp) if matches!(sp.merge, Merge::Residual(..)) && sp.pad > 0
+        )));
+    }
+
+    #[test]
+    fn program_executor_is_bit_exact_vs_reference_across_the_zoo() {
+        let eng = Engine::single_threaded();
+        for name in workload::ZOO_NAMES {
+            let net = workload::test_profile(name).unwrap();
+            let plan = ForwardPlan::infer(&net).unwrap();
+            let w = NetWeights::random(&net, 0xFACE ^ name.len() as u64);
+            let fused = w.fuse();
+            let x = random_input_for(&net, 3);
+            let want = forward_ref_planned(&net, &plan, &w, &x);
+            let mut ex = ProgramExecutor::new(Arc::new(ModelProgram::from_plan(&net, &plan)));
+            let got = ex.run(&eng, &fused, &x);
+            assert_eq!(got, want, "{name}: program executor != reference");
+            // arena reuse: a second run must be identical and grow nothing
+            let grows = ex.arena_grow_events();
+            let again = ex.run(&eng, &fused, &x);
+            assert_eq!(again, want, "{name}: arena reuse changed the result");
+            assert_eq!(
+                ex.arena_grow_events(),
+                grows,
+                "{name}: steady-state run grew the arena"
+            );
+        }
+    }
+
+    #[test]
+    fn cached_program_is_shared_and_shape_keyed() {
+        let net = workload::test_profile("alexnet").unwrap();
+        let a = cached_program(&net).unwrap();
+        let b = cached_program(&net).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "same (name, shapes) must share one program");
+        // same name, different shapes → different cache entry
+        let mut other = workload::test_profile("alexnet").unwrap();
+        other.layers[0].cout += 1;
+        other.layers[1].cin += 1;
+        let c = cached_program(&other).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c), "fingerprint must split shape variants");
+    }
+
+    #[test]
+    fn run_into_reuses_the_output_buffer() {
+        let net = tinycnn();
+        let w = NetWeights::random(&net, 5);
+        let fused = w.fuse();
+        let prog = Arc::new(ModelProgram::compile(&net).unwrap());
+        let mut ex = ProgramExecutor::new(prog);
+        let eng = Engine::single_threaded();
+        let mut out = Vec::new();
+        let dims = ex.run_into(&eng, &fused, &random_input_for(&net, 1), &mut out);
+        assert_eq!(dims, (1, 1, 10));
+        let first = out.clone();
+        let cap = out.capacity();
+        ex.run_into(&eng, &fused, &random_input_for(&net, 1), &mut out);
+        assert_eq!(out, first);
+        assert_eq!(out.capacity(), cap, "reused buffer must not reallocate");
+    }
+}

@@ -1,0 +1,319 @@
+//! Persistent worker pool: parked OS threads pulling chunks off a
+//! per-job queue — the replacement for the per-layer
+//! `std::thread::scope` spawn/join the engine used through PR 3.
+//!
+//! A scoped spawn costs tens of microseconds per layer (thread create +
+//! stack setup + join), paid again for every layer of every request.
+//! The paper's fixed-function pipeline has no analogue of that cost: its
+//! PE threads exist for the lifetime of the device. This pool is the
+//! software mirror — workers are created once per engine shard, park on
+//! a condvar between jobs, and every layer of every batched request
+//! reuses them.
+//!
+//! Model: a *job* is a chunk count plus a `Fn(usize)` body; workers (and
+//! the submitting thread, which participates) grab chunk indices from a
+//! shared counter until the job is exhausted. [`WorkerPool::run`]
+//! returns only after every chunk has executed, which is what makes the
+//! borrow-erasure below sound: the body and everything it borrows
+//! outlive the job by construction.
+//!
+//! Re-entrancy: if `run` is called while another job is active (e.g. a
+//! nested parallel section from inside a chunk body), the nested call
+//! executes its chunks inline on the calling thread — the pool never
+//! deadlocks on itself. Panics inside a chunk body abort the process
+//! (std policy for panics that cross a worker thread), so a poisoned
+//! job cannot silently hang the submitter.
+
+use std::fmt;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+/// Type-erased pointer to the current job's chunk body. The raw pointer
+/// is only dereferenced between job publication and completion, a window
+/// in which [`WorkerPool::run`] keeps the underlying closure alive.
+#[derive(Clone, Copy)]
+struct TaskRef(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (the bound on `run`'s body) and is kept
+// alive for the whole time any worker can observe the pointer.
+unsafe impl Send for TaskRef {}
+
+struct State {
+    /// The active job's body, `None` when idle.
+    task: Option<TaskRef>,
+    /// Monotonic job counter: lets a submitter recognize that the
+    /// counters it is looking at belong to a *different* job (its own
+    /// having already completed) and must not be touched.
+    epoch: u64,
+    /// Next chunk index to hand out.
+    next_chunk: usize,
+    /// Total chunks of the active job.
+    chunks: usize,
+    /// Threads currently executing a chunk of the active job.
+    active: usize,
+    /// Set once by `Drop`; workers exit.
+    shutdown: bool,
+}
+
+struct Shared {
+    m: Mutex<State>,
+    /// Workers park here between jobs.
+    work_cv: Condvar,
+    /// The submitter parks here while the last chunks finish.
+    done_cv: Condvar,
+}
+
+/// A fixed-size pool of parked worker threads executing chunked jobs.
+/// One per engine shard; shared by every layer and batch element that
+/// shard executes (see [`crate::dataflow::engine::Engine`]).
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    threads: usize,
+    handles: Mutex<Vec<thread::JoinHandle<()>>>,
+}
+
+impl WorkerPool {
+    /// Build a pool with `threads` total execution lanes (`threads - 1`
+    /// parked workers; the thread calling [`WorkerPool::run`] is the
+    /// last lane). `threads == 0` is clamped to 1 (a pool that always
+    /// runs inline).
+    pub fn new(threads: usize) -> Arc<WorkerPool> {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            m: Mutex::new(State {
+                task: None,
+                epoch: 0,
+                next_chunk: 0,
+                chunks: 0,
+                active: 0,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let mut handles = Vec::with_capacity(threads.saturating_sub(1));
+        for i in 1..threads {
+            let sh = shared.clone();
+            let h = thread::Builder::new()
+                .name(format!("engine-worker-{i}"))
+                .spawn(move || worker_loop(&sh))
+                .expect("spawn engine worker");
+            handles.push(h);
+        }
+        Arc::new(WorkerPool { shared, threads, handles: Mutex::new(handles) })
+    }
+
+    /// Total execution lanes (parked workers + the submitting thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Execute `body(0..chunks)` across the pool; returns when every
+    /// chunk has completed. The submitting thread participates, so a
+    /// 1-thread pool degrades to a plain serial loop. Chunk bodies must
+    /// only touch disjoint data per chunk index (the callers in
+    /// `engine.rs` hand out disjoint row/item ranges).
+    pub fn run(&self, chunks: usize, body: &(dyn Fn(usize) + Sync)) {
+        if chunks == 0 {
+            return;
+        }
+        if self.threads <= 1 || chunks == 1 {
+            for c in 0..chunks {
+                body(c);
+            }
+            return;
+        }
+        // Erase the borrow: sound because this function does not return
+        // until the job is fully drained (task cleared, active == 0).
+        let task = TaskRef(unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(
+                body,
+            ) as *const _
+        });
+        {
+            let mut st = self.shared.m.lock().unwrap();
+            if st.task.is_some() {
+                // nested submission (a chunk body re-entered the pool):
+                // run inline rather than deadlock on our own job
+                drop(st);
+                for c in 0..chunks {
+                    body(c);
+                }
+                return;
+            }
+            st.task = Some(task);
+            st.epoch += 1;
+            st.chunks = chunks;
+            st.next_chunk = 0;
+            let my_epoch = st.epoch;
+            self.shared.work_cv.notify_all();
+            drop(st);
+            // the submitting thread is a worker too — but only for ITS
+            // job: once the epoch moves on, these counters belong to a
+            // later submitter's job and must not be touched
+            loop {
+                let mut st = self.shared.m.lock().unwrap();
+                let live = st.epoch == my_epoch && st.task.is_some();
+                if !live || st.next_chunk >= st.chunks {
+                    break;
+                }
+                let c = st.next_chunk;
+                st.next_chunk += 1;
+                st.active += 1;
+                drop(st);
+                body(c);
+                let mut st = self.shared.m.lock().unwrap();
+                st.active -= 1;
+                finish_if_done(&self.shared, &mut st);
+            }
+            // wait out the chunks other workers still hold
+            let mut st = self.shared.m.lock().unwrap();
+            while st.epoch == my_epoch && st.task.is_some() {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+        }
+    }
+}
+
+impl fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("WorkerPool").field("threads", &self.threads).finish()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.m.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Clear the job and wake the submitter once the last chunk retires.
+/// Callers hold the state lock and have already decremented `active`.
+fn finish_if_done(shared: &Shared, st: &mut State) {
+    if st.task.is_some() && st.next_chunk >= st.chunks && st.active == 0 {
+        st.task = None;
+        shared.done_cv.notify_all();
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut st = shared.m.lock().unwrap();
+    loop {
+        if st.shutdown {
+            return;
+        }
+        if let Some(task) = st.task {
+            if st.next_chunk < st.chunks {
+                let c = st.next_chunk;
+                st.next_chunk += 1;
+                st.active += 1;
+                drop(st);
+                // SAFETY: `run` keeps the closure (and its borrows)
+                // alive until this chunk — counted in `active` — retires.
+                unsafe { (*task.0)(c) };
+                st = shared.m.lock().unwrap();
+                st.active -= 1;
+                finish_if_done(shared, &mut st);
+                continue;
+            }
+        }
+        st = shared.work_cv.wait(st).unwrap();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn every_chunk_runs_exactly_once() {
+        let pool = WorkerPool::new(4);
+        for chunks in [1usize, 2, 3, 7, 64] {
+            let hits: Vec<AtomicUsize> =
+                (0..chunks).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(chunks, &|c| {
+                hits[c].fetch_add(1, Ordering::Relaxed);
+            });
+            for (c, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "chunk {c} of {chunks}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_jobs() {
+        let pool = WorkerPool::new(3);
+        let total = AtomicUsize::new(0);
+        for _ in 0..200 {
+            pool.run(5, &|c| {
+                total.fetch_add(c + 1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 200 * (1 + 2 + 3 + 4 + 5));
+    }
+
+    #[test]
+    fn disjoint_chunk_writes_compose_a_result() {
+        let pool = WorkerPool::new(4);
+        let mut out = vec![0u64; 37];
+        {
+            let base = out.as_mut_ptr() as usize;
+            let len = out.len();
+            pool.run(5, &|c| {
+                let chunk = 8usize; // 5 chunks of 8 cover 37
+                let start = c * chunk;
+                let n = chunk.min(len.saturating_sub(start));
+                for i in 0..n {
+                    // SAFETY (test): chunks write disjoint index ranges
+                    unsafe { *(base as *mut u64).add(start + i) = (start + i) as u64 }
+                }
+            });
+        }
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as u64);
+        }
+    }
+
+    #[test]
+    fn nested_run_falls_back_to_inline_execution() {
+        let pool = WorkerPool::new(2);
+        let outer = AtomicUsize::new(0);
+        let inner = AtomicUsize::new(0);
+        let p2 = pool.clone();
+        pool.run(2, &|_| {
+            outer.fetch_add(1, Ordering::Relaxed);
+            // nested job: must complete inline, not deadlock
+            p2.run(3, &|_| {
+                inner.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(outer.load(Ordering::Relaxed), 2);
+        assert_eq!(inner.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn single_thread_pool_runs_serially() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let hits = AtomicUsize::new(0);
+        pool.run(9, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 9);
+    }
+
+    #[test]
+    fn zero_threads_clamps_to_one() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.threads(), 1);
+        pool.run(0, &|_| panic!("no chunks, no calls"));
+    }
+}

@@ -310,6 +310,11 @@ struct LoadgenRun {
     elapsed: Duration,
     p50_us: u64,
     p99_us: u64,
+    /// Largest per-model activation-arena high-water mark, bytes.
+    arena_peak_bytes: u64,
+    /// Total arena grow events across all models (warmup only; a warmed
+    /// server adds none per request).
+    arena_allocs: u64,
 }
 
 /// Closed-loop load generator: `conns` connections each send their share
@@ -379,6 +384,13 @@ fn drive_loadgen(
         all.extend(h.join().unwrap()?);
     }
     let elapsed = t0.elapsed();
+    // arena gauges before teardown: peak footprint + total grow events
+    let (mut arena_peak_bytes, mut arena_allocs) = (0u64, 0u64);
+    for ms in srv.metrics.models.lock().unwrap().values() {
+        arena_peak_bytes =
+            arena_peak_bytes.max(ms.arena_peak_bytes.load(Ordering::Relaxed));
+        arena_allocs += ms.arena_allocs.load(Ordering::Relaxed);
+    }
     srv.shutdown();
     all.sort_unstable();
     anyhow::ensure!(!all.is_empty(), "loadgen completed zero requests");
@@ -389,6 +401,8 @@ fn drive_loadgen(
         elapsed,
         p50_us: all[n / 2],
         p99_us: all[(n * 99 / 100).min(n - 1)],
+        arena_peak_bytes,
+        arena_allocs,
     })
 }
 
@@ -448,15 +462,33 @@ fn cmd_loadgen(args: &[String]) -> Result<()> {
             r.completed as u64,
             "req",
         );
+        // arena trail: peak footprint + warmup-only grow events, so the
+        // per-request allocation trajectory is trackable across PRs
+        log.report(
+            &format!("serve arena peak shards={s}"),
+            m,
+            r.arena_peak_bytes,
+            "B",
+        );
+        log.report(
+            &format!("serve arena grow events shards={s}"),
+            m,
+            r.arena_allocs,
+            "grow",
+        );
         println!(
             "  shards={s}: {} reqs in {:.2}s = {:.0} req/s | p50 {} us p99 {} us | \
-             {} busy retries",
+             {} busy retries | arena peak {:.1} KiB, {} grow events \
+             ({:.3}/req)",
             r.completed,
             r.elapsed.as_secs_f64(),
             r.completed as f64 / r.elapsed.as_secs_f64(),
             r.p50_us,
             r.p99_us,
-            r.busy_retries
+            r.busy_retries,
+            r.arena_peak_bytes as f64 / 1024.0,
+            r.arena_allocs,
+            r.arena_allocs as f64 / r.completed.max(1) as f64,
         );
     }
     log.write_json(&out)?;

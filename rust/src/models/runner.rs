@@ -86,10 +86,19 @@ impl NetWeights {
 }
 
 /// A network's weights pre-fused for `dataflow::engine`, aligned with
-/// `net.layers` (pools hold `None`).
+/// `net.layers` (pools hold `None`). One `FusedNet` per (model, seed)
+/// is shared by every request and every program executor lane.
 #[derive(Clone, Debug)]
 pub struct FusedNet {
     pub layers: Vec<Option<FusedWeights>>,
+}
+
+impl FusedNet {
+    /// Total fused-weight footprint in bytes (one `u8` per parameter —
+    /// the resident working set a serving shard streams per layer).
+    pub fn bytes(&self) -> usize {
+        self.layers.iter().flatten().map(|f| f.bytes()).sum()
+    }
 }
 
 /// Random input codes (log-quantized image) for a network's declared
@@ -152,6 +161,8 @@ mod tests {
             assert_eq!(wl.is_some(), l.is_compute(), "{}", l.name);
             assert_eq!(fl.is_some(), l.is_compute(), "{}", l.name);
         }
+        // one fused byte per parameter
+        assert_eq!(f.bytes(), w.total_params());
     }
 
     #[test]
