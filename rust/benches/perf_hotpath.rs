@@ -14,14 +14,16 @@
 //! (machine-readable; override the path with $BENCH_JSON_OUT) so future
 //! PRs can track the perf trajectory.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use neuromax::arch::config::GridConfig;
 use neuromax::arch::ConvCore;
+use neuromax::dataflow::engine::encode_cols;
 use neuromax::dataflow::{
-    analyze, exec, Engine, FusedWeights, ModelProgram, ProgramExecutor, ScheduleOptions,
-    WorkerPool,
+    analyze, exec, plan_rows, run_batch_lockstep, Engine, FusedWeights, ModelProgram,
+    ProgramExecutor, ScheduleOptions, SwCost, WorkerPool,
 };
+use neuromax::models::layer::{LayerDesc, Network};
 use neuromax::lns::mult::thread_mult;
 use neuromax::lns::tables::requant_act;
 use neuromax::models::vgg16::vgg16;
@@ -249,6 +251,133 @@ fn main() {
         50,
         "inference",
     );
+
+    // PLN: cost-guided step plans vs the PAR_MIN_WORK heuristic. The
+    // planned rows must be no slower on the big shape, and the nested
+    // batch×row lockstep must beat one-element-per-lane on the small-
+    // fmap / deep-channel shape (the software CONV1_1-style case).
+    {
+        // big shape (the L3b kernel): heuristic wrapper vs explicit plan
+        let mut cols = Vec::new();
+        encode_cols(&a.data, &mut cols);
+        let plan = plan_rows(54, macs, nt, &SwCost::pooled());
+        let mut planned_out = vec![0i32; 54 * 54 * 16];
+        engp.conv2d_cols_plan(&cols, 56, 56, &fused, 1, &mut planned_out, &plan, false, None);
+        assert_eq!(
+            planned_out,
+            eng1.conv2d(&a, &fused, 1).data,
+            "planned conv must stay bit-exact before being timed"
+        );
+        let m = time(5, || {
+            engp.conv2d_cols_plan(
+                &cols, 56, 56, &fused, 1, &mut planned_out, &plan, false, None,
+            );
+            blackbox(&planned_out);
+        });
+        log.report(&format!("PLN conv2d 56x56x32x16 planned (pool {nt}T)"), m, macs, "MAC");
+
+        // small-fmap / deep-channel tail: 9x9x128 ⊛ 3x3x128→128 (ho=7
+        // rows — fewer rows than lanes on most machines)
+        let (ta, twc, tws) = rand_tensors(9, 9, 128, 128, 5);
+        let tfused = FusedWeights::fuse(&twc, &tws);
+        let tmacs = (7 * 7 * 9 * 128 * 128) as u64;
+        let m = time(5, || {
+            blackbox(engp.conv2d(&ta, &tfused, 1));
+        });
+        log.report(
+            &format!("PLN tail conv2d 9x9x128x128 heuristic (pool {nt}T)"),
+            m,
+            tmacs,
+            "MAC",
+        );
+        let mut tcols = Vec::new();
+        encode_cols(&ta.data, &mut tcols);
+        let tplan = plan_rows(7, tmacs, nt, &SwCost::pooled());
+        let mut tout = vec![0i32; 7 * 7 * 128];
+        let m = time(5, || {
+            engp.conv2d_cols_plan(&tcols, 9, 9, &tfused, 1, &mut tout, &tplan, false, None);
+            blackbox(&tout);
+        });
+        log.report(
+            &format!("PLN tail conv2d 9x9x128x128 planned (pool {nt}T)"),
+            m,
+            tmacs,
+            "MAC",
+        );
+
+        // batched tail: one-element-per-lane (batch axis only) vs the
+        // nested batch×row lockstep — the planned split that keeps every
+        // lane busy when ho < threads
+        let tail = Network {
+            name: "bench-restail".into(),
+            layers: vec![
+                LayerDesc::conv("t1", 3, 1, 1, 7, 7, 128, 128),
+                LayerDesc::conv("t2", 3, 1, 1, 7, 7, 128, 128),
+            ],
+        };
+        let tw = neuromax::models::runner::NetWeights::random(&tail, 9);
+        let tf = tw.fuse();
+        let tprog = Arc::new(ModelProgram::compile(&tail).unwrap());
+        let b = 4usize;
+        let inputs: Vec<neuromax::tensor::Tensor3> = (0..b as u64)
+            .map(|i| neuromax::models::runner::random_input_for(&tail, i))
+            .collect();
+        // reference output for the bit-exactness pre-assert
+        let mut exref = ProgramExecutor::new(tprog.clone());
+        let want: Vec<Vec<i32>> =
+            inputs.iter().map(|x| exref.run(&eng1, &tf, x).data).collect();
+        // batch axis only: elements spread over lanes, serial inside
+        let lanes: Vec<Mutex<ProgramExecutor>> =
+            (0..nt).map(|_| Mutex::new(ProgramExecutor::new(tprog.clone()))).collect();
+        let run_batch_axis = |outs: &mut Vec<Vec<i32>>| {
+            *outs = engp.par_map(&inputs, |lane, x| {
+                let mut logits = Vec::new();
+                loop {
+                    if let Some(mut ex) = lanes.iter().find_map(|m| m.try_lock().ok()) {
+                        ex.run_into(lane, &tf, x, &mut logits);
+                        break;
+                    }
+                    std::thread::yield_now();
+                }
+                logits
+            });
+        };
+        let mut outs = Vec::new();
+        run_batch_axis(&mut outs);
+        assert_eq!(outs, want, "batch-axis path must stay bit-exact before being timed");
+        let m = time(5, || {
+            run_batch_axis(&mut outs);
+            blackbox(&outs);
+        });
+        log.report(
+            &format!("PLN restail batch{b} one-per-lane (pool {nt}T)"),
+            m,
+            b as u64,
+            "inference",
+        );
+        // nested batch×row lockstep
+        let tplan = tprog.plans_for(nt, true, false);
+        let mut lexecs: Vec<ProgramExecutor> =
+            (0..b).map(|_| ProgramExecutor::new(tprog.clone())).collect();
+        let xrefs: Vec<&neuromax::tensor::Tensor3> = inputs.iter().collect();
+        let mut louts: Vec<Vec<i32>> = vec![Vec::new(); b];
+        {
+            let mut refs: Vec<&mut ProgramExecutor> = lexecs.iter_mut().collect();
+            run_batch_lockstep(&engp, &tf, &tplan, &mut refs, &xrefs, &mut louts);
+        }
+        assert_eq!(louts, want, "lockstep path must stay bit-exact before being timed");
+        let m = time(5, || {
+            let mut refs: Vec<&mut ProgramExecutor> = lexecs.iter_mut().collect();
+            run_batch_lockstep(&engp, &tf, &tplan, &mut refs, &xrefs, &mut louts);
+            blackbox(&louts);
+        });
+        log.report(
+            &format!("PLN restail batch{b} lockstep batch x row (pool {nt}T)"),
+            m,
+            b as u64,
+            "inference",
+        );
+    }
 
     // machine-readable trail for cross-PR tracking
     let path = std::env::var("BENCH_JSON_OUT").unwrap_or_else(|_| "BENCH_hotpath.json".into());

@@ -124,6 +124,14 @@ pub struct ModelStats {
     /// nonzero warmup; alert on growth of this counter, not on the
     /// ratio being nonzero).
     pub arena_allocs: AtomicU64,
+    /// Busy worker-lane time measured while executing this model's
+    /// planned program steps, nanoseconds.
+    pub busy_ns: AtomicU64,
+    /// Lane capacity over the same sections (`threads × section wall`),
+    /// nanoseconds. `busy_ns / cap_ns` is the measured engine
+    /// utilization — the software twin of the paper's Fig. 19 per-layer
+    /// hardware utilization, reported in `STATS` as `util_pct`.
+    pub cap_ns: AtomicU64,
 }
 
 impl ModelStats {
@@ -144,6 +152,28 @@ impl ModelStats {
         }
         self.arena_allocs.load(Ordering::Relaxed) as f64 / r as f64
     }
+
+    /// Measured engine-lane utilization, percent (0 until the first
+    /// planned execution reports in).
+    pub fn util_pct(&self) -> f64 {
+        let cap = self.cap_ns.load(Ordering::Relaxed);
+        if cap == 0 {
+            return 0.0;
+        }
+        100.0 * self.busy_ns.load(Ordering::Relaxed) as f64 / cap as f64
+    }
+}
+
+/// Pull one per-model gauge (e.g. `util_pct`) out of a rendered `STATS`
+/// summary line — the wire-format consumer the load generator uses, so
+/// the `BENCH_serve.json` trail exercises exactly what clients see.
+pub fn parse_model_gauge(summary: &str, model: &str, key: &str) -> Option<f64> {
+    let models = &summary[summary.find("models=[")? + "models=[".len()..];
+    let seg = &models[models.find(&format!("{model}: "))?..];
+    let seg = &seg[..seg.find([';', ']']).unwrap_or(seg.len())];
+    let v = &seg[seg.find(&format!("{key}="))? + key.len() + 1..];
+    let end = v.find(' ').unwrap_or(v.len());
+    v[..end].parse().ok()
 }
 
 /// Server-wide metrics.
@@ -277,7 +307,7 @@ impl Metrics {
                 s.push_str(&format!(
                     "{name}: req={} batches={} mean_batch={:.2} p50~{}us \
                      p99~{}us wall_ms={:.2} arena_peak_kb={:.1} \
-                     allocs_per_req={:.3}",
+                     allocs_per_req={:.3} util_pct={:.1}",
                     ms.requests.load(Ordering::Relaxed),
                     ms.batches.load(Ordering::Relaxed),
                     ms.mean_batch(),
@@ -286,6 +316,7 @@ impl Metrics {
                     ms.wall_ns.load(Ordering::Relaxed) as f64 / 1e6,
                     ms.arena_peak_bytes.load(Ordering::Relaxed) as f64 / 1024.0,
                     ms.allocs_per_req(),
+                    ms.util_pct(),
                 ));
             }
             s.push(']');
@@ -363,6 +394,40 @@ mod tests {
         // warmed engines trend to 0
         ms.requests.fetch_add(9996, Ordering::Relaxed);
         assert!(m.summary().contains("allocs_per_req=0.001"), "{}", m.summary());
+    }
+
+    #[test]
+    fn util_pct_renders_and_parses_back_from_the_wire_line() {
+        let m = Metrics::default();
+        let ms = m.model("VGG16");
+        ms.requests.fetch_add(2, Ordering::Relaxed);
+        ms.busy_ns.fetch_add(750, Ordering::Relaxed);
+        ms.cap_ns.fetch_add(1000, Ordering::Relaxed);
+        assert!((ms.util_pct() - 75.0).abs() < 1e-9);
+        let s = m.summary();
+        assert!(s.contains("util_pct=75.0"), "{s}");
+        assert_eq!(parse_model_gauge(&s, "VGG16", "util_pct"), Some(75.0));
+        assert_eq!(parse_model_gauge(&s, "VGG16", "allocs_per_req"), Some(0.0));
+        assert_eq!(parse_model_gauge(&s, "TinyCNN", "util_pct"), None);
+        assert_eq!(parse_model_gauge("no models", "VGG16", "util_pct"), None);
+        // a model with no planned executions reports 0 (not NaN)
+        let idle = m.model("AlexNet");
+        assert_eq!(idle.util_pct(), 0.0);
+    }
+
+    #[test]
+    fn parse_model_gauge_reads_the_last_model_in_the_segment() {
+        let m = Metrics::default();
+        let a = m.model("AlexNet-test");
+        a.busy_ns.fetch_add(100, Ordering::Relaxed);
+        a.cap_ns.fetch_add(400, Ordering::Relaxed);
+        let b = m.model("TinyCNN");
+        b.busy_ns.fetch_add(300, Ordering::Relaxed);
+        b.cap_ns.fetch_add(400, Ordering::Relaxed);
+        let s = m.summary();
+        assert_eq!(parse_model_gauge(&s, "AlexNet-test", "util_pct"), Some(25.0));
+        // the `]`-terminated final segment parses too
+        assert_eq!(parse_model_gauge(&s, "TinyCNN", "util_pct"), Some(75.0));
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! allocation. Bit-exactness vs the reference executor is pinned by
 //! `rust/tests/zoo_forward.rs` and `rust/tests/program_slots.rs`.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -19,8 +20,10 @@ use anyhow::{bail, Result};
 
 use super::scheduler::NetworkSchedule;
 use crate::arch::config::GridConfig;
-use crate::dataflow::engine::{Engine, EngineOptions};
-use crate::dataflow::program::{cached_program, ProgramExecutor};
+use crate::dataflow::engine::{Engine, EngineOptions, PlanTimer};
+use crate::dataflow::program::{
+    cached_program, run_batch_lockstep, ProgramExecutor, ProgramPlan,
+};
 use crate::dataflow::workers::WorkerPool;
 use crate::dataflow::ScheduleOptions;
 use crate::models::layer::Network;
@@ -71,6 +74,10 @@ pub struct InferenceEngine {
     /// Arena grow-events already surfaced via
     /// [`InferenceEngine::take_arena_stats`].
     reported_grow: u64,
+    /// Utilization counters already surfaced via
+    /// [`InferenceEngine::take_util_stats`].
+    reported_busy: u64,
+    reported_cap: u64,
 }
 
 /// The compiled-program simulator path: the cached [`ModelProgram`]
@@ -82,9 +89,17 @@ pub struct InferenceEngine {
 struct SimPath {
     engine: Engine,
     fused: FusedNet,
+    /// The program plan for this engine's shape, looked up once at
+    /// construction — the batch dispatcher consults it lock-free (the
+    /// process-wide plan cache is never touched on the serving path).
+    plan: Arc<ProgramPlan>,
     /// One executor (program + private arena) per worker lane; batch
     /// elements borrow whichever lane is free.
     execs: Vec<Mutex<ProgramExecutor>>,
+    /// Batch-dispatch utilization accounting for the one-element-per-
+    /// lane (`par_map`) path, whose width-1 lane engines cannot measure
+    /// themselves against the full lane count.
+    timer: PlanTimer,
 }
 
 /// Borrow any currently-free executor lane. At most `execs.len()`
@@ -204,7 +219,18 @@ impl InferenceEngine {
                 let execs = (0..lanes)
                     .map(|_| Mutex::new(ProgramExecutor::new(program.clone())))
                     .collect();
-                Some(SimPath { engine, fused: weights.fuse(), execs })
+                let plan = program.plans_for(
+                    engine.num_threads(),
+                    engine.worker_pool().is_some(),
+                    engine.forced_parallel(),
+                );
+                Some(SimPath {
+                    engine,
+                    fused: weights.fuse(),
+                    plan,
+                    execs,
+                    timer: PlanTimer::default(),
+                })
             }
             Backend::Hlo => None,
         };
@@ -217,6 +243,8 @@ impl InferenceEngine {
             hlo_weights,
             sim,
             reported_grow: 0,
+            reported_busy: 0,
+            reported_cap: 0,
         })
     }
 
@@ -258,8 +286,14 @@ impl InferenceEngine {
     }
 
     /// Run a batch. On the sim backend the whole batch executes as one
-    /// parallel unit (elements spread across the engine's worker pool,
-    /// bit-identical to serial single-shot inference). The Hlo backend
+    /// parallel unit, with the axis split chosen by the compiled plan:
+    /// batches at least as wide as the worker pool spread one element
+    /// per lane (batch axis), while smaller batches on a pooled engine
+    /// run the **nested batch×row** lockstep — all elements advance
+    /// step by step together, every step one pool job over
+    /// (element × row-chunk) pairs, so small-fmap layers that cannot
+    /// fill the pool from one element still saturate it. Both paths are
+    /// bit-identical to serial single-shot inference. The Hlo backend
     /// serializes through the single PJRT executable, as the real
     /// single-CONV-core device would.
     pub fn infer_batch(&mut self, inputs: &[Tensor3]) -> Result<Vec<Inference>> {
@@ -268,16 +302,66 @@ impl InferenceEngine {
             Backend::Sim => {
                 let t0 = Instant::now();
                 let s = self.sim.as_ref().unwrap();
-                // elements spread across the worker pool; each runs its
-                // whole program serially on a free executor lane
-                // (bit-identical to single-shot, order preserved)
-                let all: Vec<Vec<i32>> = s.engine.par_map(inputs, |lane, input| {
-                    let mut logits = Vec::new();
-                    with_executor(&s.execs, |ex| {
-                        ex.run_into(lane, &s.fused, input, &mut logits)
+                let b = inputs.len();
+                let threads = s.engine.num_threads();
+                let lockstep = b > 1
+                    && b < threads
+                    && s.engine.worker_pool().is_some()
+                    && s.plan.parallel_steps() > 0;
+                let all: Vec<Vec<i32>> = if lockstep {
+                    // collect one executor lane per element (the engine
+                    // thread owns this engine, so lanes are free)
+                    let mut guards = Vec::with_capacity(b);
+                    while guards.len() < b {
+                        for m in &s.execs {
+                            if guards.len() == b {
+                                break;
+                            }
+                            if let Ok(g) = m.try_lock() {
+                                guards.push(g);
+                            }
+                        }
+                        if guards.len() < b {
+                            std::thread::yield_now();
+                        }
+                    }
+                    let mut execs: Vec<&mut ProgramExecutor> =
+                        guards.iter_mut().map(|g| &mut **g).collect();
+                    let xrefs: Vec<&Tensor3> = inputs.iter().collect();
+                    let mut outs: Vec<Vec<i32>> = (0..b).map(|_| Vec::new()).collect();
+                    run_batch_lockstep(
+                        &s.engine,
+                        &s.fused,
+                        &s.plan,
+                        &mut execs,
+                        &xrefs,
+                        &mut outs,
+                    );
+                    outs
+                } else {
+                    // one element per lane; each runs its whole program
+                    // serially on a free executor (order preserved)
+                    let busy = AtomicU64::new(0);
+                    let all = s.engine.par_map(inputs, |lane, input| {
+                        let e0 = Instant::now();
+                        let mut logits = Vec::new();
+                        with_executor(&s.execs, |ex| {
+                            ex.run_into(lane, &s.fused, input, &mut logits)
+                        });
+                        busy.fetch_add(e0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                        logits
                     });
-                    logits
-                });
+                    // batch-level utilization: the lanes are width-1
+                    // engines and cannot account for idle siblings
+                    if threads > 1 && b > 1 {
+                        s.timer.record_parallel(
+                            busy.load(Ordering::Relaxed),
+                            t0.elapsed().as_nanos() as u64,
+                            threads,
+                        );
+                    }
+                    all
+                };
                 // amortized per-element wall time, nanosecond-derived so
                 // fast batches don't truncate to 0
                 let wall_ns =
@@ -319,6 +403,27 @@ impl InferenceEngine {
         let delta = total.saturating_sub(self.reported_grow);
         self.reported_grow = total;
         (peak, delta)
+    }
+
+    /// Measured utilization counters for the serving metrics: the
+    /// (busy_ns, capacity_ns) accumulated since the last call across
+    /// this engine's executor lanes and its batch dispatcher.
+    /// `STATS` reports `util_pct = 100 · busy / capacity` per model —
+    /// the measured half of the predicted-vs-measured utilization pair
+    /// (`EXPLAIN` carries the predictions). Hlo engines report (0, 0).
+    pub fn take_util_stats(&mut self) -> (u64, u64) {
+        let Some(s) = &self.sim else { return (0, 0) };
+        let (mut busy, mut cap) = s.timer.busy_cap();
+        for m in &s.execs {
+            let (b, c) = m.lock().unwrap().util_ns();
+            busy += b;
+            cap += c;
+        }
+        let db = busy.saturating_sub(self.reported_busy);
+        let dc = cap.saturating_sub(self.reported_cap);
+        self.reported_busy = busy;
+        self.reported_cap = cap;
+        (db, dc)
     }
 
     /// Synthesize the quantized input for a request seed against this
@@ -457,6 +562,50 @@ mod tests {
         for (ia, ib) in ba.iter().zip(&bb) {
             assert_eq!(ia.logits, ib.logits, "pooled batch diverged");
         }
+    }
+
+    #[test]
+    fn small_batches_take_the_lockstep_path_and_stay_bit_exact() {
+        use crate::models::layer::{LayerDesc, Network};
+        // layers big enough that the pooled cost model row-splits them
+        // (≈330k MACs each), so a 2-element batch on a 4-lane pool
+        // qualifies for the nested batch×row dispatch
+        let net = Network {
+            name: "locktest".into(),
+            layers: vec![
+                LayerDesc::conv("a", 3, 1, 1, 12, 12, 8, 16),
+                LayerDesc::conv("b", 3, 1, 1, 12, 12, 16, 16),
+            ],
+        };
+        let pool = WorkerPool::new(4);
+        let mut pooled = InferenceEngine::for_network_pooled(
+            net.clone(),
+            Backend::Sim,
+            7,
+            EngineOptions::default(),
+            Some(pool),
+        )
+        .unwrap();
+        assert_eq!(pooled.model.name, "locktest");
+        let plan = pooled.sim.as_ref().unwrap().plan.clone();
+        assert!(plan.parallel_steps() > 0, "test net must qualify for lockstep");
+        let mut serial = InferenceEngine::for_network(
+            net,
+            Backend::Sim,
+            7,
+            EngineOptions { num_threads: 1, ..Default::default() },
+        )
+        .unwrap();
+        let inputs: Vec<_> = (0..2).map(|i| pooled.input(i)).collect();
+        let got = pooled.infer_batch(&inputs).unwrap();
+        let want = serial.infer_batch(&inputs).unwrap();
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.logits, w.logits, "lockstep batch diverged from serial");
+        }
+        // utilization counters must have moved on the pooled engine
+        let (busy, cap) = pooled.take_util_stats();
+        assert!(cap > 0, "lockstep must record capacity (busy={busy})");
+        assert_eq!(pooled.take_util_stats(), (0, 0), "take drains the counters");
     }
 
     #[test]

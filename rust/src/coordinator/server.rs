@@ -21,10 +21,19 @@
 //! client → INFER <seed>          server → OK <class> <latency_us>
 //! client → INFER <model> <seed>  server → OK <class> <latency_us>
 //! client → STATS                 server → STATS <summary>
+//! client → EXPLAIN [<model>]     server → PLAN <model> steps=<n> threads=<t>
+//!                                         STEP <i> ... (one per step)
+//!                                         END
 //! client → QUIT                  server closes the connection
 //! (malformed / failed)           server → ERR <reason>
 //! (overloaded / draining)        server → BUSY <reason>
 //! ```
+//!
+//! `EXPLAIN` dumps the model's compiled plan table — per step: kernel,
+//! shapes, parallel split, chunk count, cost-model work, and the
+//! predicted hardware/software utilization pair (the serving-stack
+//! counterpart of paper Fig. 19); `STATS` carries the measured
+//! `util_pct` per model to compare against.
 //!
 //! `<latency_us>` is total enqueue-to-reply latency (batching wait
 //! included), not engine wall time — see `Metrics::batch_wall_ns` for
@@ -251,6 +260,20 @@ fn handle_client(
             Some("STATS") => {
                 writeln!(writer, "STATS {}", metrics.summary())?;
             }
+            Some("EXPLAIN") => {
+                // `EXPLAIN` (default model) or `EXPLAIN <model>`
+                let model = it.next().unwrap_or_else(|| pool.default_model());
+                match pool.explain(model) {
+                    Ok((canon, threads, rows)) => {
+                        writeln!(writer, "PLAN {canon} steps={} threads={threads}", rows.len())?;
+                        for row in &rows {
+                            writeln!(writer, "{row}")?;
+                        }
+                        writeln!(writer, "END")?;
+                    }
+                    Err(e) => writeln!(writer, "ERR {e}")?,
+                }
+            }
             Some("QUIT") | None => break,
             Some(other) => {
                 writeln!(writer, "ERR unknown command {other}")?;
@@ -341,6 +364,31 @@ impl Client {
         self.reader.read_line(&mut line)?;
         Ok(line.trim().to_string())
     }
+
+    /// Send `EXPLAIN <model>` and collect the plan table: the `PLAN`
+    /// header followed by one `STEP` row per program step (the `END`
+    /// terminator is consumed, not returned). Non-`PLAN` replies (e.g.
+    /// `ERR unknown model`) become errors.
+    pub fn explain(&mut self, model: &str) -> Result<Vec<String>> {
+        writeln!(self.stream, "EXPLAIN {model}")?;
+        let mut first = String::new();
+        self.reader.read_line(&mut first)?;
+        let first = first.trim().to_string();
+        anyhow::ensure!(first.starts_with("PLAN "), "server said: {first}");
+        let mut rows = vec![first];
+        loop {
+            let mut line = String::new();
+            anyhow::ensure!(
+                self.reader.read_line(&mut line)? > 0,
+                "connection closed mid-table"
+            );
+            let line = line.trim();
+            if line == "END" {
+                return Ok(rows);
+            }
+            rows.push(line.to_string());
+        }
+    }
 }
 
 #[cfg(test)]
@@ -416,6 +464,33 @@ mod tests {
             EngineOptions::default(),
         )
         .is_err());
+    }
+
+    #[test]
+    fn explain_round_trips_a_plan_table() {
+        let mut srv =
+            Server::start("127.0.0.1:0", Backend::Sim, policy(4, Duration::from_millis(1)))
+                .unwrap();
+        let addr = srv.addr;
+        let client_thread = thread::spawn(move || {
+            let mut c = Client::connect(addr).unwrap();
+            // default model (TinyCNN): header + one STEP row per layer
+            let rows = c.explain("tinycnn").unwrap();
+            assert!(rows[0].starts_with("PLAN TinyCNN steps=5 threads="), "{}", rows[0]);
+            assert_eq!(rows.len(), 6, "{rows:?}");
+            for (i, row) in rows[1..].iter().enumerate() {
+                assert!(row.starts_with(&format!("STEP {i} ")), "{row}");
+                assert!(row.contains("sw_util="), "{row}");
+            }
+            // unknown models error instead of hanging the table read
+            assert!(c.explain("not_a_model").is_err());
+            // the connection still serves after an EXPLAIN exchange
+            let (class, _) = c.infer(3).unwrap();
+            assert!(class < 10);
+        });
+        srv.serve_until(Some(Instant::now() + Duration::from_millis(1500))).unwrap();
+        client_thread.join().unwrap();
+        srv.shutdown();
     }
 
     #[test]

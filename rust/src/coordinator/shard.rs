@@ -34,6 +34,7 @@ use super::batcher::{BatchPolicy, Batcher, Job, PushError};
 use super::metrics::{Metrics, ModelStats};
 use super::pipeline::{Backend, InferenceEngine};
 use crate::dataflow::engine::{resolve_threads, EngineOptions};
+use crate::dataflow::program::{cached_program, explain_rows};
 use crate::dataflow::workers::WorkerPool;
 use crate::models::workload;
 
@@ -112,6 +113,9 @@ pub struct ShardPool {
     pub metrics: Arc<Metrics>,
     default_model: String,
     spill_threshold: usize,
+    /// Resolved per-shard engine worker-lane count (what `EXPLAIN`
+    /// compiles plans against).
+    engine_threads: usize,
 }
 
 impl ShardPool {
@@ -206,11 +210,30 @@ impl ShardPool {
             metrics,
             default_model: default,
             spill_threshold: policy.max_batch.max(1),
+            engine_threads: resolve_threads(eopt.num_threads),
         })
     }
 
     pub fn num_shards(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Worker lanes per engine shard (the width `EXPLAIN` plans at).
+    pub fn engine_threads(&self) -> usize {
+        self.engine_threads
+    }
+
+    /// Compile (or fetch, everything is cached) `model`'s program and
+    /// step plans at this pool's engine width and render the `EXPLAIN`
+    /// table: (canonical name, planned width, one row per step).
+    pub fn explain(&self, model: &str) -> Result<(String, usize, Vec<String>)> {
+        let Some(canon) = workload::canonical_name(model) else {
+            anyhow::bail!("unknown model {model}");
+        };
+        let net = workload::by_name(&canon).expect("canonical name resolves");
+        let prog = cached_program(&net).map_err(anyhow::Error::msg)?;
+        let plan = prog.plans_for(self.engine_threads, true, false);
+        Ok((canon, self.engine_threads, explain_rows(&net, &prog, &plan)))
     }
 
     /// Current queue depth of every shard (sampled, not atomic across
@@ -349,6 +372,11 @@ fn run_batch(
         let (arena_peak, arena_grow) = engine.take_arena_stats();
         ms.arena_peak_bytes.fetch_max(arena_peak, Ordering::Relaxed);
         ms.arena_allocs.fetch_add(arena_grow, Ordering::Relaxed);
+        // measured utilization: busy lane time vs lane capacity over the
+        // planned sections this batch executed (STATS `util_pct`)
+        let (busy, cap) = engine.take_util_stats();
+        ms.busy_ns.fetch_add(busy, Ordering::Relaxed);
+        ms.cap_ns.fetch_add(cap, Ordering::Relaxed);
         match outcome {
             Ok(infs) => {
                 for (p, inf) in jobs.into_iter().zip(infs) {

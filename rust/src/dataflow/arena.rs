@@ -15,6 +15,8 @@
 //! [`ActivationArena::grow_events`] — the source of the serving stack's
 //! `allocs_per_req` gauge (a healthy warmed engine reports 0).
 
+use super::engine::PlanTimer;
+
 /// Reusable buffers for one program executor. Cheap to construct; all
 /// capacity is acquired lazily on first run and kept.
 #[derive(Debug, Default)]
@@ -25,6 +27,10 @@ pub struct ActivationArena {
     pub(crate) cols: Vec<u8>,
     /// Buffer growth events since construction (warmup only, then 0).
     pub(crate) grow_events: u64,
+    /// Measured busy/capacity time of the planned sections executed
+    /// against this arena — the per-executor source of the serving
+    /// stack's `util_pct` gauge (predicted-vs-measured utilization).
+    pub(crate) timer: PlanTimer,
 }
 
 impl ActivationArena {
@@ -51,6 +57,12 @@ impl ActivationArena {
     /// its per-request rate as `allocs_per_req`.
     pub fn grow_events(&self) -> u64 {
         self.grow_events
+    }
+
+    /// Cumulative measured (busy, capacity) nanoseconds of planned
+    /// sections run against this arena (`util_pct = busy / capacity`).
+    pub fn util_ns(&self) -> (u64, u64) {
+        self.timer.busy_cap()
     }
 }
 

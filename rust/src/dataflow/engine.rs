@@ -30,15 +30,20 @@
 //! `exec::conv2d` and the hardware-faithful `arch::ConvCore` across random
 //! shapes, strides, padding and zero-density, at 1 and 4 threads.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 use super::pool;
-use super::schedule::{analyze, LayerPerf, ScheduleOptions};
+use super::schedule::{
+    analyze, balanced_chunks, plan_rows_threshold, LayerPerf, ScheduleOptions, Split, StepPlan,
+};
 use super::workers::WorkerPool;
 use crate::arch::config::GridConfig;
 use crate::arch::state_controller::pad_input;
 use crate::lns::logquant::{CODE_MAX, ZERO_CODE};
 use crate::lns::mult::magnitude;
+use crate::lns::tables::requant_act;
 use crate::models::layer::{LayerDesc, Op};
 use crate::tensor::{out_dim, Tensor3, Tensor4};
 
@@ -179,8 +184,41 @@ pub struct EngineOptions {
 /// Minimum estimated MACs in a layer before the row-parallel path is
 /// worth a scoped thread spawn/join (~tens of µs): ≈0.25 ms of serial
 /// LUT work. Below this a layer runs serial; above it the spawn cost is
-/// a few percent.
+/// a few percent. Only the tensor-level compatibility wrappers consult
+/// this — the compiled-program path carries a cost-derived
+/// [`StepPlan`] per step instead (see `dataflow::program`).
 pub const PAR_MIN_WORK: u64 = 1 << 18;
+
+/// Measured busy-lane time vs lane capacity for planned sections:
+/// `busy_ns` sums the wall time of every executed chunk (and serial
+/// body), `cap_ns` sums `threads × section wall`. Their ratio is the
+/// measured utilization the serving stack reports as `util_pct` — the
+/// software twin of the paper's Fig. 19 per-layer hardware utilization.
+#[derive(Debug, Default)]
+pub struct PlanTimer {
+    pub busy_ns: AtomicU64,
+    pub cap_ns: AtomicU64,
+}
+
+impl PlanTimer {
+    /// Record a section that ran on the submitting thread alone.
+    pub fn record_serial(&self, wall_ns: u64, threads: usize) {
+        self.record_parallel(wall_ns, wall_ns, threads);
+    }
+
+    /// Record a parallel section: summed per-chunk busy time plus the
+    /// section's lane capacity (`threads × wall`).
+    pub fn record_parallel(&self, busy_ns: u64, wall_ns: u64, threads: usize) {
+        self.busy_ns.fetch_add(busy_ns, Ordering::Relaxed);
+        self.cap_ns
+            .fetch_add(wall_ns.saturating_mul(threads.max(1) as u64), Ordering::Relaxed);
+    }
+
+    /// Cumulative (busy, capacity) nanoseconds.
+    pub fn busy_cap(&self) -> (u64, u64) {
+        (self.busy_ns.load(Ordering::Relaxed), self.cap_ns.load(Ordering::Relaxed))
+    }
+}
 
 /// The LUT-fused executor. Cheap to construct and `Sync`; hold one per
 /// serving engine and share it across layers.
@@ -252,12 +290,19 @@ impl Engine {
         self.pool.as_ref()
     }
 
+    /// Is this a forced-parallel test engine (`par_min_work <= 1`)? The
+    /// program planner mirrors the forcing so planned execution still
+    /// exercises the parallel machinery on tiny test tensors.
+    pub(crate) fn forced_parallel(&self) -> bool {
+        self.par_min_work <= 1
+    }
+
     /// Split `out` (= `ho` rows of `rowlen` i32) across the worker pool;
-    /// `body(first_row, rows)` fills each contiguous row block. `work` is
-    /// the layer's estimated MAC count: below [`PAR_MIN_WORK`] the scoped
-    /// thread spawn/join would cost more than it saves, so small layers
-    /// run serial (batch-level parallelism in [`Engine::par_map`] still
-    /// covers them on the serving path).
+    /// `body(first_row, rows)` fills each contiguous row block. `work`
+    /// is the layer's estimated MAC count, consulted against the legacy
+    /// [`PAR_MIN_WORK`] threshold — this is the tensor-level
+    /// compatibility wrapper; the compiled-program path executes a
+    /// cost-derived [`StepPlan`] through [`Engine::par_plan`] instead.
     fn par_rows(
         &self,
         ho: usize,
@@ -267,35 +312,81 @@ impl Engine {
         body: impl Fn(usize, &mut [i32]) + Sync,
     ) {
         debug_assert_eq!(out.len(), ho * rowlen);
-        let threads = self.threads.clamp(1, ho.max(1));
-        if threads <= 1 || work < self.par_min_work {
+        let plan =
+            plan_rows_threshold(ho, work, self.threads, self.par_min_work, self.pool.is_some());
+        self.par_plan(&plan, rowlen, out, None, body);
+    }
+
+    /// Execute a compiled [`StepPlan`] verbatim: serial plans run on the
+    /// submitting thread; row plans hand the precomputed balanced chunks
+    /// to the persistent pool (or scoped threads). No runtime heuristic
+    /// is consulted — the plan *is* the decision. With `timer` set, the
+    /// measured busy/capacity times feed the `util_pct` gauge.
+    pub fn par_plan(
+        &self,
+        plan: &StepPlan,
+        rowlen: usize,
+        out: &mut [i32],
+        timer: Option<&PlanTimer>,
+        body: impl Fn(usize, &mut [i32]) + Sync,
+    ) {
+        if plan.split == Split::Serial || plan.chunks.len() <= 1 || self.threads <= 1 {
+            let t0 = timer.map(|_| Instant::now());
             body(0, out);
+            if let (Some(tm), Some(t0)) = (timer, t0) {
+                tm.record_serial(t0.elapsed().as_nanos() as u64, self.threads);
+            }
             return;
         }
-        let chunk_rows = ho.div_ceil(threads);
+        debug_assert_eq!(
+            plan.chunks.iter().map(|&(_, r)| r).sum::<usize>() * rowlen,
+            out.len(),
+            "plan does not cover the output"
+        );
+        let busy = AtomicU64::new(0);
+        let measure = timer.is_some();
+        let t0 = Instant::now();
+        let chunks = &plan.chunks;
         if let Some(pool) = &self.pool {
-            // persistent-pool path: chunk indices map to disjoint row
-            // blocks of `out`; workers are already parked and waiting
-            let n_chunks = ho.div_ceil(chunk_rows);
-            let chunk_elems = chunk_rows * rowlen;
-            let total = out.len();
             let base = SendPtr(out.as_mut_ptr());
-            pool.run(n_chunks, &|ci| {
-                let start = ci * chunk_elems;
-                let len = chunk_elems.min(total - start);
-                // SAFETY: chunk `ci` owns rows [ci*chunk_rows, ..) —
-                // disjoint element ranges of `out` per chunk index
-                let chunk =
-                    unsafe { std::slice::from_raw_parts_mut(base.0.add(start), len) };
-                body(ci * chunk_rows, chunk);
+            pool.run(chunks.len(), &|ci| {
+                let (start, rows) = chunks[ci];
+                // SAFETY: the plan's chunks partition `out` into
+                // disjoint row ranges (pinned by the schedule partition
+                // property tests), so each chunk index owns its slice
+                let chunk = unsafe {
+                    std::slice::from_raw_parts_mut(base.0.add(start * rowlen), rows * rowlen)
+                };
+                let c0 = measure.then(Instant::now);
+                body(start, chunk);
+                if let Some(c0) = c0 {
+                    busy.fetch_add(c0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                }
             });
         } else {
             std::thread::scope(|s| {
-                for (ti, chunk) in out.chunks_mut(chunk_rows * rowlen).enumerate() {
+                let mut rest = &mut *out;
+                for &(start, rows) in chunks {
+                    let (head, tail) = rest.split_at_mut(rows * rowlen);
+                    rest = tail;
                     let b = &body;
-                    s.spawn(move || b(ti * chunk_rows, chunk));
+                    let busy = &busy;
+                    s.spawn(move || {
+                        let c0 = measure.then(Instant::now);
+                        b(start, head);
+                        if let Some(c0) = c0 {
+                            busy.fetch_add(c0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                        }
+                    });
                 }
             });
+        }
+        if let Some(tm) = timer {
+            tm.record_parallel(
+                busy.load(Ordering::Relaxed),
+                t0.elapsed().as_nanos() as u64,
+                self.threads,
+            );
         }
     }
 
@@ -337,6 +428,38 @@ impl Engine {
         });
     }
 
+    /// [`Engine::conv2d_cols`] under an explicit compiled [`StepPlan`]
+    /// — the program executor's entry: no `PAR_MIN_WORK` heuristic, the
+    /// plan decides, and `requant` folds ReLU+requant into each chunk
+    /// (elementwise on fully-accumulated psums, so bits are unchanged).
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv2d_cols_plan(
+        &self,
+        cols: &[u8],
+        ah: usize,
+        aw: usize,
+        fw: &FusedWeights,
+        stride: usize,
+        out: &mut [i32],
+        plan: &StepPlan,
+        requant: bool,
+        timer: Option<&PlanTimer>,
+    ) {
+        assert!(stride >= 1, "stride must be >= 1");
+        assert_eq!(cols.len(), ah * aw * fw.c, "cols/shape mismatch");
+        let ho = out_dim(ah, fw.kh, stride);
+        let wo = out_dim(aw, fw.kw, stride);
+        assert_eq!(out.len(), ho * wo * fw.k, "out/shape mismatch");
+        let rowlen = wo * fw.k;
+        self.par_plan(plan, rowlen, out, timer, |i0, rows| {
+            rows.fill(0); // conv_rows accumulates into the existing psums
+            conv_rows(cols, aw, fw, stride, i0, rows, wo);
+            if requant {
+                requant_rows(rows);
+            }
+        });
+    }
+
     /// Depthwise convolution: `a [H,W,C]`, fused `[C,k,k,1]` → `[Ho,Wo,C]`.
     pub fn depthwise(&self, a: &Tensor3, fw: &FusedWeights, stride: usize) -> Tensor3 {
         assert_eq!(a.c, fw.k, "depthwise: one filter per channel");
@@ -367,27 +490,36 @@ impl Engine {
         assert_eq!(out.len(), ho * wo * c, "out/shape mismatch");
         let rowlen = wo * c;
         let work = (ho * wo * c * fw.kh * fw.kw) as u64;
-        let (kh, kw) = (fw.kh, fw.kw);
-        let wrows = &fw.rows;
         self.par_rows(ho, rowlen, work, out, |i0, orows| {
-            for (ri, orow) in orows.chunks_exact_mut(rowlen).enumerate() {
-                let i = i0 + ri;
-                for j in 0..wo {
-                    for ch in 0..c {
-                        let mut acc = 0i32;
-                        for dy in 0..kh {
-                            let abase = ((i * stride + dy) * aw + j * stride) * c + ch;
-                            for dx in 0..kw {
-                                let r = wrows[(ch * kh + dy) * kw + dx];
-                                let col = cols[abase + dx * c];
-                                acc = acc.wrapping_add(
-                                    PROD_LUT[r as usize][(col & 63) as usize],
-                                );
-                            }
-                        }
-                        orow[j * c + ch] = acc;
-                    }
-                }
+            depthwise_rows(cols, aw, fw, stride, i0, orows, wo);
+        });
+    }
+
+    /// [`Engine::depthwise_cols`] under an explicit compiled
+    /// [`StepPlan`] (see [`Engine::conv2d_cols_plan`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn depthwise_cols_plan(
+        &self,
+        cols: &[u8],
+        ah: usize,
+        aw: usize,
+        fw: &FusedWeights,
+        stride: usize,
+        out: &mut [i32],
+        plan: &StepPlan,
+        requant: bool,
+        timer: Option<&PlanTimer>,
+    ) {
+        assert_eq!(fw.c, 1, "depthwise weights are [C,k,k,1]");
+        let c = fw.k;
+        assert_eq!(cols.len(), ah * aw * c, "cols/shape mismatch");
+        let ho = out_dim(ah, fw.kh, stride);
+        let wo = out_dim(aw, fw.kw, stride);
+        assert_eq!(out.len(), ho * wo * c, "out/shape mismatch");
+        self.par_plan(plan, wo * c, out, timer, |i0, rows| {
+            depthwise_rows(cols, aw, fw, stride, i0, rows, wo);
+            if requant {
+                requant_rows(rows);
             }
         });
     }
@@ -408,13 +540,80 @@ impl Engine {
 
     /// [`Engine::fc`] over pre-encoded columns into a caller buffer.
     pub fn fc_cols(&self, cols: &[u8], fw: &FusedWeights, out: &mut [i32]) {
-        let n = cols.len();
-        assert_eq!(fw.c, n, "fc: weight width != flattened input");
+        assert_eq!(fw.c, cols.len(), "fc: weight width != flattened input");
         assert_eq!(fw.kh * fw.kw, 1, "fc weights are [K,1,1,N]");
         assert_eq!(out.len(), fw.k, "out/shape mismatch");
-        for (k, o) in out.iter_mut().enumerate() {
-            *o = dot(&fw.rows[k * n..(k + 1) * n], cols, 0);
-        }
+        fc_rows(cols, fw, 0, out);
+    }
+
+    /// [`Engine::fc_cols`] under an explicit compiled [`StepPlan`]: the
+    /// plan's row axis is the output-neuron axis (`rowlen == 1`), so a
+    /// deep head (VGG's 4096-wide Fc) spreads across the lanes.
+    pub fn fc_cols_plan(
+        &self,
+        cols: &[u8],
+        fw: &FusedWeights,
+        out: &mut [i32],
+        plan: &StepPlan,
+        requant: bool,
+        timer: Option<&PlanTimer>,
+    ) {
+        assert_eq!(fw.c, cols.len(), "fc: weight width != flattened input");
+        assert_eq!(fw.kh * fw.kw, 1, "fc weights are [K,1,1,N]");
+        assert_eq!(out.len(), fw.k, "out/shape mismatch");
+        self.par_plan(plan, 1, out, timer, |i0, chunk| {
+            fc_rows(cols, fw, i0, chunk);
+            if requant {
+                requant_rows(chunk);
+            }
+        });
+    }
+
+    /// Max pool under an explicit compiled [`StepPlan`] (codes in, codes
+    /// out — pools never requant).
+    #[allow(clippy::too_many_arguments)]
+    pub fn maxpool_plan(
+        &self,
+        src: &[i32],
+        h: usize,
+        w: usize,
+        c: usize,
+        k: usize,
+        stride: usize,
+        out: &mut [i32],
+        plan: &StepPlan,
+        timer: Option<&PlanTimer>,
+    ) {
+        let ho = out_dim(h, k, stride);
+        let wo = out_dim(w, k, stride);
+        assert_eq!(src.len(), h * w * c, "src/shape mismatch");
+        assert_eq!(out.len(), ho * wo * c, "out/shape mismatch");
+        self.par_plan(plan, wo * c, out, timer, |i0, rows| {
+            pool::maxpool_rows(src, w, c, k, stride, i0, rows, wo);
+        });
+    }
+
+    /// Average pool under an explicit compiled [`StepPlan`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn avgpool_plan(
+        &self,
+        src: &[i32],
+        h: usize,
+        w: usize,
+        c: usize,
+        k: usize,
+        stride: usize,
+        out: &mut [i32],
+        plan: &StepPlan,
+        timer: Option<&PlanTimer>,
+    ) {
+        let ho = out_dim(h, k, stride);
+        let wo = out_dim(w, k, stride);
+        assert_eq!(src.len(), h * w * c, "src/shape mismatch");
+        assert_eq!(out.len(), ho * wo * c, "out/shape mismatch");
+        self.par_plan(plan, wo * c, out, timer, |i0, rows| {
+            pool::avgpool_rows(src, w, c, k, stride, i0, rows, wo);
+        });
     }
 
     /// Execute one layer on the engine (mirror of `exec::run_layer`, with
@@ -456,7 +655,9 @@ impl Engine {
 
     /// Map `f` over `items` on the worker pool, preserving order. Each
     /// worker gets a single-threaded engine so nested parallel sections
-    /// don't oversubscribe — this is the batch-serving primitive.
+    /// don't oversubscribe — this is the batch-serving primitive. Items
+    /// are split into balanced chunks (one per lane, the planned-split
+    /// form of the old uniform chunking).
     pub fn par_map<T, U, F>(&self, items: &[T], f: F) -> Vec<U>
     where
         T: Sync,
@@ -469,24 +670,29 @@ impl Engine {
             return items.iter().map(|t| f(self, t)).collect();
         }
         let single = Engine::single_threaded();
-        let chunk = n.div_ceil(threads);
+        let chunks = balanced_chunks(n, threads);
         let mut out: Vec<Option<U>> = Vec::new();
         out.resize_with(n, || None);
         if let Some(pool) = &self.pool {
-            let n_chunks = n.div_ceil(chunk);
             let optr = SendPtrOf(out.as_mut_ptr());
-            pool.run(n_chunks, &|ci| {
-                let start = ci * chunk;
-                let end = (start + chunk).min(n);
-                for (i, t) in items[start..end].iter().enumerate() {
+            pool.run(chunks.len(), &|ci| {
+                let (start, len) = chunks[ci];
+                for (i, t) in items[start..start + len].iter().enumerate() {
                     let v = f(&single, t);
-                    // SAFETY: chunk `ci` owns output indices [start, end)
+                    // SAFETY: chunk `ci` owns output indices
+                    // [start, start + len)
                     unsafe { *optr.0.add(start + i) = Some(v) };
                 }
             });
         } else {
             std::thread::scope(|s| {
-                for (ic, oc) in items.chunks(chunk).zip(out.chunks_mut(chunk)) {
+                let mut rest_items = items;
+                let mut rest_out = &mut out[..];
+                for &(_, len) in &chunks {
+                    let (ic, ir) = rest_items.split_at(len);
+                    rest_items = ir;
+                    let (oc, or) = rest_out.split_at_mut(len);
+                    rest_out = or;
                     let fr = &f;
                     let er = &single;
                     s.spawn(move || {
@@ -522,9 +728,63 @@ fn dot(w: &[u8], a: &[u8], mut acc: i32) -> i32 {
     acc
 }
 
+/// Fold ReLU+requant over a chunk of fully-accumulated psums (the
+/// planned kernels run this inside each chunk body — elementwise, so
+/// chunking never changes bits).
+#[inline]
+pub(crate) fn requant_rows(rows: &mut [i32]) {
+    for v in rows.iter_mut() {
+        *v = requant_act(*v);
+    }
+}
+
+/// Fused dot products for fc output neurons `i0 .. i0 + out.len()` (the
+/// planned fc chunk kernel).
+pub(crate) fn fc_rows(cols: &[u8], fw: &FusedWeights, i0: usize, out: &mut [i32]) {
+    let n = cols.len();
+    for (j, o) in out.iter_mut().enumerate() {
+        let k = i0 + j;
+        *o = dot(&fw.rows[k * n..(k + 1) * n], cols, 0);
+    }
+}
+
+/// Depthwise row kernel: output rows `i0..` as contiguous `[wo × C]`
+/// blocks (one filter per channel).
+pub(crate) fn depthwise_rows(
+    cols: &[u8],
+    aw: usize,
+    fw: &FusedWeights,
+    stride: usize,
+    i0: usize,
+    out: &mut [i32],
+    wo: usize,
+) {
+    let c = fw.k;
+    let (kh, kw) = (fw.kh, fw.kw);
+    let wrows = &fw.rows;
+    let rowlen = wo * c;
+    for (ri, orow) in out.chunks_exact_mut(rowlen).enumerate() {
+        let i = i0 + ri;
+        for j in 0..wo {
+            for ch in 0..c {
+                let mut acc = 0i32;
+                for dy in 0..kh {
+                    let abase = ((i * stride + dy) * aw + j * stride) * c + ch;
+                    for dx in 0..kw {
+                        let r = wrows[(ch * kh + dy) * kw + dx];
+                        let col = cols[abase + dx * c];
+                        acc = acc.wrapping_add(PROD_LUT[r as usize][(col & 63) as usize]);
+                    }
+                }
+                orow[j * c + ch] = acc;
+            }
+        }
+    }
+}
+
 /// Generic k×k/stride row kernel (dispatches to the 3×3 s1 fast path).
 /// `out` covers output rows `i0..` as contiguous `[wo × K]` blocks.
-fn conv_rows(
+pub(crate) fn conv_rows(
     cols: &[u8],
     aw: usize,
     fw: &FusedWeights,
@@ -785,6 +1045,100 @@ mod tests {
         let mut got = vec![0i32; 5];
         eng.fc_cols(&cols, &ffc, &mut got);
         assert_eq!(got, eng.fc(&flat, &ffc));
+    }
+
+    #[test]
+    fn planned_kernels_match_wrappers_for_any_plan_shape() {
+        use crate::dataflow::schedule::{plan_rows_forced, SwCost};
+        let mut rng = SplitMix64::new(55);
+        let a = rand_t3(&mut rng, 12, 10, 4, 0.15);
+        let (wc, ws) = rand_t4(&mut rng, 5, 3, 3, 4, 0.15);
+        let fw = FusedWeights::fuse(&wc, &ws);
+        let eng1 = Engine::single_threaded();
+        let want = eng1.conv2d(&a, &fw, 1);
+        let mut cols = Vec::new();
+        encode_cols(&a.data, &mut cols);
+        let ho = want.h;
+        let timer = PlanTimer::default();
+        let pool = crate::dataflow::workers::WorkerPool::new(3);
+        for eng in [Engine::with_threads(3), Engine::pooled_forced(pool.clone())] {
+            // serial plan, a forced plan, and deliberately odd chunkings
+            let mut plans = vec![
+                StepPlan::serial(1, eng.num_threads()),
+                plan_rows_forced(ho, 1 << 20, eng.num_threads(), &SwCost::pooled()),
+            ];
+            for n in [2usize, 3, ho] {
+                plans.push(StepPlan {
+                    split: Split::Rows,
+                    chunks: balanced_chunks(ho, n),
+                    threads: eng.num_threads(),
+                    work: 1 << 20,
+                    predicted_util: 0.5,
+                });
+            }
+            for (pi, plan) in plans.iter().enumerate() {
+                let mut got = vec![7i32; want.len()];
+                eng.conv2d_cols_plan(
+                    &cols,
+                    a.h,
+                    a.w,
+                    &fw,
+                    1,
+                    &mut got,
+                    plan,
+                    false,
+                    Some(&timer),
+                );
+                assert_eq!(got, want.data, "plan {pi}");
+                // requant fold == kernel then requant
+                let mut rq = vec![0i32; want.len()];
+                eng.conv2d_cols_plan(&cols, a.h, a.w, &fw, 1, &mut rq, plan, true, None);
+                let mut want_rq = want.data.clone();
+                for v in want_rq.iter_mut() {
+                    *v = requant_act(*v);
+                }
+                assert_eq!(rq, want_rq, "plan {pi} requant fold");
+            }
+        }
+        let (_busy, cap) = timer.busy_cap();
+        assert!(cap > 0, "timed sections must record capacity");
+
+        // fc: planned neuron-axis split matches the serial wrapper
+        let n = a.len();
+        let (fc_c, fc_s) = rand_t4(&mut rng, 9, 1, 1, n, 0.2);
+        let ffc = FusedWeights::fuse(&fc_c, &fc_s);
+        let mut want_fc = vec![0i32; 9];
+        eng1.fc_cols(&cols, &ffc, &mut want_fc);
+        let eng3 = Engine::with_threads(3);
+        let plan = StepPlan {
+            split: Split::Rows,
+            chunks: balanced_chunks(9, 4),
+            threads: 3,
+            work: 1,
+            predicted_util: 0.5,
+        };
+        let mut got_fc = vec![0i32; 9];
+        eng3.fc_cols_plan(&cols, &ffc, &mut got_fc, &plan, false, None);
+        assert_eq!(got_fc, want_fc);
+
+        // pools: planned row split matches the direct _into kernels
+        let mut want_mp = vec![0i32; 6 * 5 * 4];
+        pool::maxpool_into(&a.data, a.h, a.w, a.c, 2, 2, &mut want_mp);
+        let mut got_mp = vec![0i32; want_mp.len()];
+        let pplan = StepPlan {
+            split: Split::Rows,
+            chunks: balanced_chunks(6, 3),
+            threads: 3,
+            work: 1,
+            predicted_util: 0.5,
+        };
+        eng3.maxpool_plan(&a.data, a.h, a.w, a.c, 2, 2, &mut got_mp, &pplan, None);
+        assert_eq!(got_mp, want_mp);
+        let mut want_ap = vec![0i32; want_mp.len()];
+        pool::avgpool_into(&a.data, a.h, a.w, a.c, 2, 2, &mut want_ap);
+        let mut got_ap = vec![0i32; want_ap.len()];
+        eng3.avgpool_plan(&a.data, a.h, a.w, a.c, 2, 2, &mut got_ap, &pplan, None);
+        assert_eq!(got_ap, want_ap);
     }
 
     #[test]

@@ -13,7 +13,13 @@
 //! slots, kernel selection, staged merges, folded requant) executed by a
 //! [`ProgramExecutor`] against a grow-only [`ActivationArena`] on a
 //! persistent [`WorkerPool`] — zero steady-state allocation, no
-//! per-layer thread spawn/join.
+//! per-layer thread spawn/join. One planner covers both sides: the same
+//! module that models per-layer *hardware* utilization (`schedule`)
+//! also carries the calibrated software cost table ([`SwCost`]) from
+//! which every program step gets a compile-time [`StepPlan`] — split
+//! decision, balanced chunk partition, predicted utilization — executed
+//! verbatim by the engine (`Engine::par_plan`), with batches running
+//! the nested batch×row form ([`run_batch_lockstep`]).
 
 pub mod arena;
 pub mod engine;
@@ -26,8 +32,13 @@ pub mod tile;
 pub mod workers;
 
 pub use arena::ActivationArena;
-pub use engine::{Engine, EngineOptions, FusedWeights};
+pub use engine::{Engine, EngineOptions, FusedWeights, PlanTimer};
 pub use forward::{forward_engine, forward_ref, ForwardPlan};
-pub use program::{cached_program, ModelProgram, ProgramExecutor};
-pub use schedule::{analyze, LayerPerf, ScheduleOptions};
+pub use program::{
+    cached_program, explain_rows, run_batch_lockstep, ModelProgram, ProgramExecutor, ProgramPlan,
+};
+pub use schedule::{
+    analyze, balanced_chunks, plan_rows, plan_rows_forced, plan_rows_threshold, LayerPerf,
+    ScheduleOptions, Split, StepPlan, SwCost,
+};
 pub use workers::WorkerPool;

@@ -37,7 +37,25 @@ pub fn maxpool_into(
     let wo = out_dim(w, k, stride);
     assert_eq!(src.len(), h * w * c, "src/shape mismatch");
     assert_eq!(out.len(), ho * wo * c, "out/shape mismatch");
-    for i in 0..ho {
+    maxpool_rows(src, w, c, k, stride, 0, out, wo);
+}
+
+/// Row-range core of [`maxpool_into`]: fill the output rows starting at
+/// `i0` (`out` holds exactly those rows) — the planned-chunk entry the
+/// engine's `maxpool_plan` drives.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn maxpool_rows(
+    src: &[i32],
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    i0: usize,
+    out: &mut [i32],
+    wo: usize,
+) {
+    for (ri, orow) in out.chunks_exact_mut(wo * c).enumerate() {
+        let i = i0 + ri;
         for j in 0..wo {
             for ch in 0..c {
                 let mut m = i32::MIN;
@@ -46,7 +64,7 @@ pub fn maxpool_into(
                         m = m.max(src[((i * stride + dy) * w + j * stride + dx) * c + ch]);
                     }
                 }
-                out[(i * wo + j) * c + ch] = m;
+                orow[j * c + ch] = m;
             }
         }
     }
@@ -80,8 +98,24 @@ pub fn avgpool_into(
     let wo = out_dim(w, k, stride);
     assert_eq!(src.len(), h * w * c, "src/shape mismatch");
     assert_eq!(out.len(), ho * wo * c, "out/shape mismatch");
+    avgpool_rows(src, w, c, k, stride, 0, out, wo);
+}
+
+/// Row-range core of [`avgpool_into`] (see [`maxpool_rows`]).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn avgpool_rows(
+    src: &[i32],
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    i0: usize,
+    out: &mut [i32],
+    wo: usize,
+) {
     let window = (k * k) as i64;
-    for i in 0..ho {
+    for (ri, orow) in out.chunks_exact_mut(wo * c).enumerate() {
+        let i = i0 + ri;
         for j in 0..wo {
             for ch in 0..c {
                 let mut sum = 0i64;
@@ -93,7 +127,7 @@ pub fn avgpool_into(
                     }
                 }
                 // mean <= max magnitude (~1.9e8), always fits i32
-                out[(i * wo + j) * c + ch] = requant_act((sum / window) as i32);
+                orow[j * c + ch] = requant_act((sum / window) as i32);
             }
         }
     }

@@ -18,10 +18,20 @@
 //!   concat/residual staging resolved into fixed buffer offsets, and
 //!   ReLU+requant folded into each compute step (the final layer stays
 //!   raw — its psums are the serving logits).
+//! * [`ModelProgram::plans_for`] attaches a cost-derived
+//!   [`StepPlan`] to every step for a given engine shape (lane count +
+//!   substrate), from the same planner module that models the
+//!   hardware's per-layer utilization (`schedule`): split decision
+//!   (serial / balanced row chunks), chunk partition, and predicted
+//!   utilization — cached process-wide per (program, shape), so the
+//!   serving path only ever looks plans up.
 //! * [`ProgramExecutor::run_into`] executes the program against a
 //!   reusable [`ActivationArena`]: grow-only slots, zero steady-state
 //!   allocation (pinned by `rust/tests/alloc_steady.rs`), kernels driven
-//!   through the engine's slice-level `_cols`/`_into` entry points.
+//!   through the engine's planned slice-level `_plan` entry points — no
+//!   `PAR_MIN_WORK` heuristic anywhere on this path. Batches smaller
+//!   than the lane count run [`run_batch_lockstep`]'s nested batch×row
+//!   split instead of one-element-per-lane.
 //!
 //! Numerics are untouched: every kernel still derives from
 //! `lns::mult::magnitude` through the same LUT the legacy driver uses,
@@ -34,14 +44,21 @@
 //! so every shard and every request shares the same compiled form.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
 
 use super::arena::{ensure_len, ActivationArena};
-use super::engine::{encode_cols, Engine};
+use super::engine::{
+    conv_rows, depthwise_rows, encode_cols, fc_rows, requant_rows, Engine, PlanTimer,
+};
 use super::forward::{ForwardPlan, Routing, Source};
-use super::pool::{avgpool_into, maxpool_into};
+use super::pool::{avgpool_rows, maxpool_rows};
+use super::schedule::{
+    analyze, plan_rows, plan_rows_forced, ScheduleOptions, Split, StepPlan, SwCost,
+};
+use crate::arch::config::GridConfig;
 use crate::lns::logquant::ZERO_CODE;
-use crate::lns::tables::requant_act;
 use crate::models::layer::{Network, Op};
 use crate::models::runner::FusedNet;
 use crate::tensor::Tensor3;
@@ -135,11 +152,28 @@ pub struct Step {
     /// Fold ReLU+requant into this step's output (every compute layer
     /// except the last; pools pass codes through unchanged).
     pub requant: bool,
+    /// Software cost-model work estimate: LUT-MACs for compute layers,
+    /// element ops for pools — the input of every [`StepPlan`] decision.
+    pub work: u64,
+    /// Analytic *hardware* utilization of this layer on the NeuroMAX
+    /// grid (`schedule::analyze`, default options) — the paper-Fig.19
+    /// column of the `EXPLAIN` table, carried next to the software plan
+    /// so one table answers both sides of "one planner".
+    pub hw_util: f64,
 }
 
 impl Step {
     pub fn out_len(&self) -> usize {
         self.out_h * self.out_w * self.out_c
+    }
+
+    /// The step's planned row axis: output rows, except for Fc where
+    /// the output-neuron axis is split (`rowlen == 1`).
+    pub fn plan_rows_axis(&self) -> usize {
+        match self.kernel {
+            Kernel::Fc => self.out_c,
+            _ => self.out_h,
+        }
     }
 }
 
@@ -154,6 +188,9 @@ pub struct ModelProgram {
     /// Slot holding the final layer's output after a run.
     pub out_slot: usize,
     pub out_dims: (usize, usize, usize),
+    /// Shape fingerprint (also the plan-cache key — see
+    /// [`ModelProgram::plans_for`]).
+    pub fingerprint: u64,
 }
 
 /// Acquire a slot: reuse a dead one (LIFO for locality) or mint a new
@@ -183,6 +220,9 @@ impl ModelProgram {
         let last_use = plan.last_use();
         let l0 = &net.layers[0];
         let input_dims = (l0.hin, l0.win, l0.cin);
+        // the hardware side of "one planner": every step carries its
+        // analytic grid utilization next to the software step plan
+        let grid = GridConfig::neuromax();
 
         let mut slot_sizes: Vec<usize> = Vec::new();
         let mut free: Vec<usize> = Vec::new();
@@ -292,6 +332,11 @@ impl ModelProgram {
                     }
                 }
             }
+            let work = match l.op {
+                Op::Pool { k, .. } => (out_h * out_w * out_c * k * k) as u64,
+                _ => l.macs(),
+            };
+            let hw_util = analyze(&grid, l, ScheduleOptions::default()).util_total(&grid);
             steps.push(Step {
                 layer: i,
                 kernel,
@@ -301,6 +346,8 @@ impl ModelProgram {
                 out_w,
                 out_c,
                 requant: l.is_compute() && i + 1 < n,
+                work,
+                hw_util,
             });
         }
         let last = steps.last().expect("network has at least one layer");
@@ -312,6 +359,7 @@ impl ModelProgram {
             slot_sizes,
             out_slot,
             out_dims,
+            fingerprint: fingerprint(net),
         }
     }
 
@@ -319,6 +367,112 @@ impl ModelProgram {
     pub fn slot_bytes(&self) -> usize {
         self.slot_sizes.iter().sum::<usize>() * std::mem::size_of::<i32>()
     }
+
+    /// The compiled [`ProgramPlan`] for an engine shape, from the
+    /// process-wide plan cache: one plan per (program fingerprint,
+    /// lanes, substrate, forced) — shared by every executor lane and
+    /// every shard at that width, computed once. This is the "compile
+    /// time" of the cost-guided split: the serving path only ever looks
+    /// plans up.
+    pub fn plans_for(&self, threads: usize, pooled: bool, forced: bool) -> Arc<ProgramPlan> {
+        type PlanCache = Mutex<HashMap<(u64, usize, bool, bool), Arc<ProgramPlan>>>;
+        static PLAN_CACHE: OnceLock<PlanCache> = OnceLock::new();
+        let cache = PLAN_CACHE.get_or_init(Default::default);
+        let key = (self.fingerprint, threads, pooled, forced);
+        if let Some(p) = cache.lock().unwrap().get(&key) {
+            return p.clone();
+        }
+        let p = Arc::new(ProgramPlan::compile(self, threads, pooled, forced));
+        // racing planners agree (planning is deterministic)
+        cache.lock().unwrap().entry(key).or_insert(p).clone()
+    }
+}
+
+/// One compiled execution plan: a cost-derived [`StepPlan`] per program
+/// step, for a specific engine shape (lane count + substrate). The
+/// program stays shape-only and process-shared; plans are the
+/// width-dependent layer on top, cached per width.
+#[derive(Clone, Debug)]
+pub struct ProgramPlan {
+    /// Worker lanes the plan was compiled for.
+    pub threads: usize,
+    /// Compiled for the persistent-pool substrate (vs scoped threads).
+    pub pooled: bool,
+    /// One plan per program step, same order as `ModelProgram::steps`.
+    pub steps: Vec<StepPlan>,
+}
+
+impl ProgramPlan {
+    /// Plan every step of `prog` for an engine with `threads` lanes on
+    /// the given substrate. `forced` mirrors the forced-parallel test
+    /// engines (`par_min_work == 1`): every step with >1 row splits.
+    pub fn compile(prog: &ModelProgram, threads: usize, pooled: bool, forced: bool) -> ProgramPlan {
+        let cost = SwCost::for_substrate(pooled);
+        let steps = prog
+            .steps
+            .iter()
+            .map(|s| {
+                let rows = s.plan_rows_axis();
+                if forced {
+                    plan_rows_forced(rows, s.work, threads, &cost)
+                } else {
+                    plan_rows(rows, s.work, threads, &cost)
+                }
+            })
+            .collect();
+        ProgramPlan { threads, pooled, steps }
+    }
+
+    /// Steps planned for row-parallel execution (0 means a batch gains
+    /// nothing from lockstep nesting).
+    pub fn parallel_steps(&self) -> usize {
+        self.steps.iter().filter(|p| p.split == Split::Rows).count()
+    }
+}
+
+/// Render the compiled plan table, one line per step — the payload of
+/// the `EXPLAIN <model>` protocol verb and the `explain` CLI: step
+/// index, layer, kernel, shapes, split, chunk count, cost-model work,
+/// and the predicted utilization pair (analytic hardware grid vs
+/// software engine) — the serving-stack counterpart of paper Fig. 19.
+pub fn explain_rows(net: &Network, prog: &ModelProgram, plan: &ProgramPlan) -> Vec<String> {
+    assert_eq!(prog.steps.len(), plan.steps.len(), "plan/program mismatch");
+    prog.steps
+        .iter()
+        .zip(&plan.steps)
+        .map(|(s, p)| {
+            let l = &net.layers[s.layer];
+            let (ih, iw, ic) = match &s.input {
+                Input::Staged(sp) => (sp.h, sp.w, sp.c),
+                Input::Direct(op) => (op.h, op.w, op.c),
+            };
+            let kernel = match s.kernel {
+                Kernel::Conv3x3S1 => "conv3x3s1".to_string(),
+                Kernel::Conv { stride } => format!("conv_s{stride}"),
+                Kernel::Depthwise { stride } => format!("dw_s{stride}"),
+                Kernel::MaxPool { k, stride } => format!("maxpool{k}_s{stride}"),
+                Kernel::AvgPool { k, stride } => format!("avgpool{k}_s{stride}"),
+                Kernel::Fc => "fc".to_string(),
+            };
+            let split = match p.split {
+                Split::Serial => "serial",
+                Split::Rows => "rows",
+            };
+            format!(
+                "STEP {} {} kernel={kernel} in={ih}x{iw}x{ic} out={}x{}x{} \
+                 split={split} chunks={} work={} hw_util={:.1}% sw_util={:.1}%",
+                s.layer,
+                l.name,
+                s.out_h,
+                s.out_w,
+                s.out_c,
+                p.chunks.len().max(1),
+                s.work,
+                100.0 * s.hw_util,
+                100.0 * p.predicted_util,
+            )
+        })
+        .collect()
 }
 
 /// Stable shape fingerprint (FNV-1a over every layer's op + dims) so
@@ -375,6 +529,23 @@ fn operand_slice<'a>(op: &Operand, slots: &'a [Vec<i32>], x: &'a Tensor3) -> &'a
     }
 }
 
+/// Resolve a step's kernel-input slice and dims from an arena.
+fn step_src<'a>(
+    step: &Step,
+    slots: &'a [Vec<i32>],
+    x: &'a Tensor3,
+) -> (&'a [i32], usize, usize, usize) {
+    match &step.input {
+        Input::Staged(sp) => (&slots[sp.slot][..sp.h * sp.w * sp.c], sp.h, sp.w, sp.c),
+        Input::Direct(op) => (operand_slice(op, slots, x), op.h, op.w, op.c),
+    }
+}
+
+/// Does this kernel consume LUT-encoded activation columns?
+fn needs_cols(kernel: Kernel) -> bool {
+    !matches!(kernel, Kernel::MaxPool { .. } | Kernel::AvgPool { .. })
+}
+
 /// Fill a staged input buffer: ZERO_CODE border (when padded) plus the
 /// merge, written at the precomputed offsets in one pass.
 fn stage_into(buf: &mut [i32], sp: &StagePlan, slots: &[Vec<i32>], x: &Tensor3) {
@@ -426,6 +597,10 @@ fn encode_cols_counted(src: &[i32], cols: &mut Vec<u8>, grow_events: &mut u64) {
     encode_cols(src, cols);
 }
 
+/// An engine's plan-relevant shape: (lanes, pooled substrate, forced
+/// parallelism) — the per-executor plan memo key.
+type PlanKey = (usize, bool, bool);
+
 /// Executes one compiled program against a private [`ActivationArena`].
 /// Hold one per concurrent execution lane (they are cheap; all capacity
 /// is acquired on the first run and reused forever after).
@@ -433,15 +608,39 @@ fn encode_cols_counted(src: &[i32], cols: &mut Vec<u8>, grow_events: &mut u64) {
 pub struct ProgramExecutor {
     program: Arc<ModelProgram>,
     arena: ActivationArena,
+    /// Memoized plan for the last engine shape this executor ran on —
+    /// skips the global plan-cache mutex on the steady-state path.
+    plan_memo: Option<(PlanKey, Arc<ProgramPlan>)>,
 }
 
 impl ProgramExecutor {
     pub fn new(program: Arc<ModelProgram>) -> Self {
-        ProgramExecutor { program, arena: ActivationArena::new() }
+        ProgramExecutor { program, arena: ActivationArena::new(), plan_memo: None }
     }
 
     pub fn program(&self) -> &Arc<ModelProgram> {
         &self.program
+    }
+
+    /// The program plan matching `eng`'s shape (width-1 lane engines get
+    /// the all-serial plan). Memoized per executor; allocation-free once
+    /// warm.
+    fn plan_for_engine(&mut self, eng: &Engine) -> Arc<ProgramPlan> {
+        let key = (eng.num_threads(), eng.worker_pool().is_some(), eng.forced_parallel());
+        if let Some((k, p)) = &self.plan_memo {
+            if *k == key {
+                return p.clone();
+            }
+        }
+        let p = self.program.plans_for(key.0, key.1, key.2);
+        self.plan_memo = Some((key, p.clone()));
+        p
+    }
+
+    /// Measured (busy, capacity) nanoseconds of this executor's planned
+    /// sections — numerator and denominator of the `util_pct` gauge.
+    pub fn util_ns(&self) -> (u64, u64) {
+        self.arena.util_ns()
     }
 
     /// High-water arena footprint, bytes.
@@ -467,6 +666,9 @@ impl ProgramExecutor {
         x: &Tensor3,
         out: &mut Vec<i32>,
     ) -> (usize, usize, usize) {
+        // every step executes through its compile-time StepPlan — no
+        // PAR_MIN_WORK consult anywhere on this path
+        let plan = self.plan_for_engine(eng);
         let prog = &self.program;
         let arena = &mut self.arena;
         assert_eq!(
@@ -476,7 +678,8 @@ impl ProgramExecutor {
             prog.name
         );
         arena.reserve_slots(prog.slot_sizes.len());
-        for step in &prog.steps {
+        let threads = eng.num_threads();
+        for (si, step) in prog.steps.iter().enumerate() {
             // 1. stage the padded/merged input when the plan says so
             if let Input::Staged(sp) = &step.input {
                 let mut buf = std::mem::take(&mut arena.slots[sp.slot]);
@@ -484,46 +687,67 @@ impl ProgramExecutor {
                 stage_into(&mut buf[..sp.h * sp.w * sp.c], sp, &arena.slots, x);
                 arena.slots[sp.slot] = buf;
             }
-            // 2. kernel into the output slot (taken out so the sources
-            // can be read from the arena while we write)
+            // 2. planned kernel into the output slot (taken out so the
+            // sources can be read from the arena while we write)
             let mut outbuf = std::mem::take(&mut arena.slots[step.out_slot]);
             ensure_len(&mut outbuf, prog.slot_sizes[step.out_slot], &mut arena.grow_events);
             {
                 let slots = &arena.slots;
                 let cols = &mut arena.cols;
                 let grow = &mut arena.grow_events;
-                let (src, sh, sw, sc) = match &step.input {
-                    Input::Staged(sp) => {
-                        (&slots[sp.slot][..sp.h * sp.w * sp.c], sp.h, sp.w, sp.c)
-                    }
-                    Input::Direct(op) => (operand_slice(op, slots, x), op.h, op.w, op.c),
-                };
+                // measured utilization is only meaningful against a
+                // multi-lane engine (a 1-wide lane is 100% by definition)
+                let timer = if threads > 1 { Some(&arena.timer) } else { None };
+                let sp = &plan.steps[si];
+                let (src, sh, sw, sc) = step_src(step, slots, x);
                 let dst = &mut outbuf[..step.out_len()];
                 let fw = fused.layers[step.layer].as_ref();
                 match step.kernel {
                     k @ (Kernel::Conv3x3S1 | Kernel::Conv { .. }) => {
                         let stride = if let Kernel::Conv { stride } = k { stride } else { 1 };
                         encode_cols_counted(src, cols, grow);
-                        eng.conv2d_cols(cols, sh, sw, fw.expect("conv weights"), stride, dst);
+                        eng.conv2d_cols_plan(
+                            cols,
+                            sh,
+                            sw,
+                            fw.expect("conv weights"),
+                            stride,
+                            dst,
+                            sp,
+                            step.requant,
+                            timer,
+                        );
                     }
                     Kernel::Depthwise { stride } => {
                         encode_cols_counted(src, cols, grow);
-                        eng.depthwise_cols(cols, sh, sw, fw.expect("dw weights"), stride, dst);
+                        eng.depthwise_cols_plan(
+                            cols,
+                            sh,
+                            sw,
+                            fw.expect("dw weights"),
+                            stride,
+                            dst,
+                            sp,
+                            step.requant,
+                            timer,
+                        );
                     }
                     Kernel::MaxPool { k, stride } => {
-                        maxpool_into(src, sh, sw, sc, k, stride, dst)
+                        eng.maxpool_plan(src, sh, sw, sc, k, stride, dst, sp, timer)
                     }
                     Kernel::AvgPool { k, stride } => {
-                        avgpool_into(src, sh, sw, sc, k, stride, dst)
+                        eng.avgpool_plan(src, sh, sw, sc, k, stride, dst, sp, timer)
                     }
                     Kernel::Fc => {
                         encode_cols_counted(src, cols, grow);
-                        eng.fc_cols(cols, fw.expect("fc weights"), dst);
-                    }
-                }
-                if step.requant {
-                    for v in dst.iter_mut() {
-                        *v = requant_act(*v);
+                        eng.fc_cols_plan(
+                            cols,
+                            fw.expect("fc weights"),
+                            dst,
+                            sp,
+                            step.requant,
+                            timer,
+                        );
                     }
                 }
             }
@@ -542,6 +766,213 @@ impl ProgramExecutor {
         let (h, w, c) = self.run_into(eng, fused, x, &mut data);
         Tensor3::from_vec(h, w, c, data)
     }
+}
+
+/// Raw views one batch element contributes to a lockstep step job,
+/// valid for the duration of that job: its encoded columns, its kernel
+/// input, and its (taken-out) output buffer. Elements own disjoint
+/// arenas, so sharing the table across worker threads is sound.
+struct ElemCtx {
+    cols: *const u8,
+    cols_len: usize,
+    src: *const i32,
+    src_len: usize,
+    dst: *mut i32,
+    dst_len: usize,
+}
+
+struct CtxTable<'a>(&'a [ElemCtx]);
+// SAFETY: the pointers reference per-element buffers that are disjoint
+// across elements and stable (no growth) while a job is in flight; the
+// job partitions work so no two chunks touch one element's row twice.
+unsafe impl Send for CtxTable<'_> {}
+unsafe impl Sync for CtxTable<'_> {}
+
+/// Execute one compiled program over a whole batch **in lockstep**: the
+/// elements advance step by step together, and every step runs as one
+/// worker-pool job whose chunks are (element × row-chunk) pairs — the
+/// nested batch×row split of the step plan. With `b` elements and a
+/// step planned into `C` row chunks the job has `b·C` chunks, so a
+/// small-fmap layer (`ho < threads`) that cannot fill the pool from one
+/// element alone saturates it from the batch axis instead; steps whose
+/// plan is serial contribute one chunk per element (pure batch axis).
+/// `plan` is the caller's (cached) plan for `eng`'s shape — typically
+/// `program.plans_for(threads, pooled, forced)` looked up once at
+/// engine construction, so the steady-state batch path takes no
+/// plan-cache lock at all. The dispatcher's three context spines are
+/// per-call (not per-step) allocations; the per-element arenas stay
+/// grow-free like the single-request path.
+///
+/// Numerics are bit-exact vs per-element [`ProgramExecutor::run_into`]:
+/// each element's kernels, chunk partitions, and summation structure
+/// are unchanged — only the interleaving across elements differs, and
+/// elements never share buffers.
+pub fn run_batch_lockstep(
+    eng: &Engine,
+    fused: &FusedNet,
+    plan: &ProgramPlan,
+    execs: &mut [&mut ProgramExecutor],
+    inputs: &[&Tensor3],
+    outs: &mut [Vec<i32>],
+) -> (usize, usize, usize) {
+    let k = execs.len();
+    assert!(k > 0, "lockstep needs at least one element");
+    assert_eq!(inputs.len(), k, "inputs/executors mismatch");
+    assert_eq!(outs.len(), k, "outs/executors mismatch");
+    let prog = execs[0].program.clone();
+    for (e, ex) in execs.iter().enumerate() {
+        assert!(Arc::ptr_eq(&ex.program, &prog), "element {e} runs a different program");
+    }
+    assert_eq!(plan.steps.len(), prog.steps.len(), "plan/program mismatch");
+    let threads = eng.num_threads();
+    for (ex, &x) in execs.iter_mut().zip(inputs) {
+        assert_eq!((x.h, x.w, x.c), prog.input_dims, "{}: input dims mismatch", prog.name);
+        ex.arena.reserve_slots(prog.slot_sizes.len());
+    }
+    // context spines reused across every step of the batch
+    let mut dsts: Vec<Vec<i32>> = Vec::with_capacity(k);
+    let mut colbufs: Vec<Vec<u8>> = Vec::with_capacity(k);
+    let mut ctx_buf: Vec<ElemCtx> = Vec::with_capacity(k);
+    for (si, step) in prog.steps.iter().enumerate() {
+        let sp = &plan.steps[si];
+        // phase 1 (submitting thread): stage/encode every element and
+        // take its output + column buffers out of the arena
+        dsts.clear();
+        colbufs.clear();
+        for (ex, &x) in execs.iter_mut().zip(inputs) {
+            let arena = &mut ex.arena;
+            if let Input::Staged(spl) = &step.input {
+                let mut buf = std::mem::take(&mut arena.slots[spl.slot]);
+                ensure_len(&mut buf, prog.slot_sizes[spl.slot], &mut arena.grow_events);
+                stage_into(&mut buf[..spl.h * spl.w * spl.c], spl, &arena.slots, x);
+                arena.slots[spl.slot] = buf;
+            }
+            let mut outbuf = std::mem::take(&mut arena.slots[step.out_slot]);
+            ensure_len(&mut outbuf, prog.slot_sizes[step.out_slot], &mut arena.grow_events);
+            let mut cols = std::mem::take(&mut arena.cols);
+            if needs_cols(step.kernel) {
+                let (src, _, _, _) = step_src(step, &arena.slots, x);
+                encode_cols_counted(src, &mut cols, &mut arena.grow_events);
+            }
+            dsts.push(outbuf);
+            colbufs.push(cols);
+        }
+        // phase 2: ONE job over (element × chunk) pairs. Buffers are
+        // frozen now — the context table below captures raw views.
+        {
+            ctx_buf.clear();
+            for e in 0..k {
+                let (src, _, _, _) = step_src(step, &execs[e].arena.slots, inputs[e]);
+                ctx_buf.push(ElemCtx {
+                    cols: colbufs[e].as_ptr(),
+                    cols_len: colbufs[e].len(),
+                    src: src.as_ptr(),
+                    src_len: src.len(),
+                    dst: dsts[e].as_mut_ptr(),
+                    dst_len: step.out_len(),
+                });
+            }
+            let ctxs = CtxTable(&ctx_buf);
+            let (sw_in, sc_in) = match &step.input {
+                Input::Staged(spl) => (spl.w, spl.c),
+                Input::Direct(op) => (op.w, op.c),
+            };
+            let wo = step.out_w;
+            let rowlen = match step.kernel {
+                Kernel::Fc => 1,
+                _ => step.out_w * step.out_c,
+            };
+            let total_rows = step.plan_rows_axis();
+            let per = if sp.split == Split::Rows { sp.chunks.len().max(1) } else { 1 };
+            let fw = fused.layers[step.layer].as_ref();
+            let measure = threads > 1;
+            let busy = AtomicU64::new(0);
+            let t0 = Instant::now();
+            let job = |ci: usize| {
+                let (e, c) = (ci / per, ci % per);
+                let ctx = &ctxs.0[e];
+                let (start, rows) =
+                    if sp.split == Split::Rows { sp.chunks[c] } else { (0, total_rows) };
+                // SAFETY: chunk (e, c) touches only element e's buffers,
+                // and within an element the plan's row chunks are
+                // disjoint (schedule partition property tests); every
+                // buffer is frozen for the duration of the job.
+                let cols = unsafe { std::slice::from_raw_parts(ctx.cols, ctx.cols_len) };
+                let src = unsafe { std::slice::from_raw_parts(ctx.src, ctx.src_len) };
+                debug_assert!((start + rows) * rowlen <= ctx.dst_len);
+                let dst = unsafe {
+                    std::slice::from_raw_parts_mut(ctx.dst.add(start * rowlen), rows * rowlen)
+                };
+                let c0 = measure.then(Instant::now);
+                match step.kernel {
+                    kk @ (Kernel::Conv3x3S1 | Kernel::Conv { .. }) => {
+                        let stride =
+                            if let Kernel::Conv { stride } = kk { stride } else { 1 };
+                        dst.fill(0);
+                        conv_rows(cols, sw_in, fw.expect("conv weights"), stride, start, dst, wo);
+                        if step.requant {
+                            requant_rows(dst);
+                        }
+                    }
+                    Kernel::Depthwise { stride } => {
+                        depthwise_rows(
+                            cols,
+                            sw_in,
+                            fw.expect("dw weights"),
+                            stride,
+                            start,
+                            dst,
+                            wo,
+                        );
+                        if step.requant {
+                            requant_rows(dst);
+                        }
+                    }
+                    Kernel::MaxPool { k: kk, stride } => {
+                        maxpool_rows(src, sw_in, sc_in, kk, stride, start, dst, wo)
+                    }
+                    Kernel::AvgPool { k: kk, stride } => {
+                        avgpool_rows(src, sw_in, sc_in, kk, stride, start, dst, wo)
+                    }
+                    Kernel::Fc => {
+                        fc_rows(cols, fw.expect("fc weights"), start, dst);
+                        if step.requant {
+                            requant_rows(dst);
+                        }
+                    }
+                }
+                if let Some(c0) = c0 {
+                    busy.fetch_add(c0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                }
+            };
+            match eng.worker_pool() {
+                Some(pool) => pool.run(k * per, &job),
+                // no pool substrate: run the same chunks inline (the
+                // lockstep dispatcher only selects this path when a pool
+                // exists; this keeps the function correct standalone)
+                None => (0..k * per).for_each(&job),
+            }
+            if measure {
+                execs[0].arena.timer.record_parallel(
+                    busy.load(Ordering::Relaxed),
+                    t0.elapsed().as_nanos() as u64,
+                    threads,
+                );
+            }
+        }
+        // phase 3: hand the buffers back to their arenas (drain keeps
+        // the spines' capacity for the next step)
+        for ((ex, dst), cols) in execs.iter_mut().zip(dsts.drain(..)).zip(colbufs.drain(..)) {
+            ex.arena.slots[step.out_slot] = dst;
+            ex.arena.cols = cols;
+        }
+    }
+    let (oh, ow, oc) = prog.out_dims;
+    for (ex, out) in execs.iter_mut().zip(outs.iter_mut()) {
+        out.clear();
+        out.extend_from_slice(&ex.arena.slots[prog.out_slot][..oh * ow * oc]);
+    }
+    (oh, ow, oc)
 }
 
 #[cfg(test)]
@@ -626,6 +1057,102 @@ mod tests {
         other.layers[1].cin += 1;
         let c = cached_program(&other).unwrap();
         assert!(!Arc::ptr_eq(&a, &c), "fingerprint must split shape variants");
+    }
+
+    #[test]
+    fn plans_are_cached_per_engine_shape_and_cover_every_step() {
+        let prog = cached_program(&workload::test_profile("vgg16").unwrap()).unwrap();
+        let a = prog.plans_for(4, true, false);
+        let b = prog.plans_for(4, true, false);
+        assert!(Arc::ptr_eq(&a, &b), "same shape must share one plan");
+        assert_eq!(a.steps.len(), prog.steps.len(), "one StepPlan per step");
+        let serial = prog.plans_for(1, true, false);
+        assert!(!Arc::ptr_eq(&a, &serial), "width is part of the plan key");
+        assert_eq!(serial.parallel_steps(), 0, "1-lane plans are all serial");
+        // forced plans split every step with >1 row (the test engines)
+        let forced = prog.plans_for(4, true, true);
+        let splittable =
+            prog.steps.iter().filter(|s| s.plan_rows_axis() > 1).count();
+        assert_eq!(forced.parallel_steps(), splittable);
+        // every Rows plan covers its step's row axis exactly
+        for (s, p) in prog.steps.iter().zip(&forced.steps) {
+            if p.split == Split::Rows {
+                assert_eq!(
+                    p.chunks.iter().map(|&(_, r)| r).sum::<usize>(),
+                    s.plan_rows_axis(),
+                    "step {} chunks must cover its rows",
+                    s.layer
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn steps_carry_cost_model_work_and_hardware_utilization() {
+        let prog = ModelProgram::compile(&tinycnn()).unwrap();
+        for s in &prog.steps {
+            assert!(s.work > 0, "step {} has no work estimate", s.layer);
+            assert!(
+                (0.0..=1.0).contains(&s.hw_util),
+                "step {} hw_util {} out of range",
+                s.layer,
+                s.hw_util
+            );
+        }
+        // compute steps carry MACs, matching the layer descriptor
+        let net = tinycnn();
+        assert_eq!(prog.steps[0].work, net.layers[0].macs());
+    }
+
+    #[test]
+    fn explain_rows_render_one_line_per_step() {
+        let net = workload::test_profile("squeezenet").unwrap();
+        let prog = cached_program(&net).unwrap();
+        let plan = prog.plans_for(8, true, false);
+        let rows = explain_rows(&net, &prog, &plan);
+        assert_eq!(rows.len(), prog.steps.len());
+        for (i, row) in rows.iter().enumerate() {
+            assert!(row.starts_with(&format!("STEP {i} ")), "{row}");
+            let keys =
+                ["kernel=", "in=", "out=", "split=", "chunks=", "work=", "hw_util=", "sw_util="];
+            for key in keys {
+                assert!(row.contains(key), "row {i} missing {key}: {row}");
+            }
+        }
+    }
+
+    #[test]
+    fn lockstep_batches_match_per_element_execution() {
+        let pool = crate::dataflow::workers::WorkerPool::new(3);
+        for name in ["tinycnn", "squeezenet", "resnet34"] {
+            let net = workload::test_profile(name).unwrap();
+            let prog = Arc::new(ModelProgram::compile(&net).unwrap());
+            let w = NetWeights::random(&net, 0xBA7C4 ^ name.len() as u64);
+            let fused = w.fuse();
+            let b = 3;
+            let xs: Vec<Tensor3> = (0..b as u64).map(|i| random_input_for(&net, i)).collect();
+            // reference: per-element serial execution
+            let eng1 = Engine::single_threaded();
+            let mut exr = ProgramExecutor::new(prog.clone());
+            let want: Vec<Tensor3> = xs.iter().map(|x| exr.run(&eng1, &fused, x)).collect();
+            // lockstep on the pooled engine; forced so the tiny test
+            // profiles still exercise row-chunked jobs
+            let engp = Engine::pooled_forced(pool.clone());
+            let pplan = prog.plans_for(engp.num_threads(), true, true);
+            let mut execs: Vec<ProgramExecutor> =
+                (0..b).map(|_| ProgramExecutor::new(prog.clone())).collect();
+            let mut refs: Vec<&mut ProgramExecutor> = execs.iter_mut().collect();
+            let xrefs: Vec<&Tensor3> = xs.iter().collect();
+            let mut outs = vec![Vec::new(); b];
+            let dims = run_batch_lockstep(&engp, &fused, &pplan, &mut refs, &xrefs, &mut outs);
+            for (e, (got, want)) in outs.iter().zip(&want).enumerate() {
+                assert_eq!(dims, (want.h, want.w, want.c), "{name}");
+                assert_eq!(got, &want.data, "{name}: lockstep element {e} diverged");
+            }
+            // lockstep records utilization against the first executor
+            let (_busy, cap) = execs[0].util_ns();
+            assert!(cap > 0, "{name}: lockstep must record lane capacity");
+        }
     }
 
     #[test]

@@ -184,6 +184,203 @@ pub fn analyze(grid: &GridConfig, l: &LayerDesc, opt: ScheduleOptions) -> LayerP
     }
 }
 
+// ---------------------------------------------------------------------------
+// The software planner — the engine-side half of "one planner".
+//
+// `analyze` above models the *hardware's* per-layer cycles/utilization
+// under the 2D weight-broadcast dataflow. The functions below are its
+// software twin: they plan how the LUT-fused engine partitions a layer
+// across worker lanes, from a small calibrated cost table instead of a
+// single global work threshold. `ModelProgram` compiles one `StepPlan`
+// per step from this planner (see `dataflow::program`), and the engine
+// executes the plan verbatim — the serving-stack counterpart of the
+// paper's per-layer utilization analysis (Fig. 19).
+// ---------------------------------------------------------------------------
+
+/// Calibrated software-engine cost table (nanoseconds) — the inputs of
+/// every serial-vs-parallel break-even decision. Two instances exist,
+/// one per parallel substrate: the persistent [`WorkerPool`] wakes
+/// parked workers (cheap dispatch, cheap chunks), while the legacy
+/// scoped-thread substrate pays a full thread spawn per chunk.
+///
+/// [`WorkerPool`]: crate::dataflow::workers::WorkerPool
+#[derive(Clone, Copy, Debug)]
+pub struct SwCost {
+    /// Serial cost of one fused LUT-MAC (element op for pools) through
+    /// the engine's row kernels.
+    pub ns_per_mac: f64,
+    /// One-time cost of publishing a job to the parallel substrate
+    /// (condvar broadcast for the pool; scope setup for scoped threads).
+    pub dispatch_ns: f64,
+    /// Per-chunk overhead: queue pop + cold first touch on the pool, a
+    /// thread spawn/join on the scoped substrate.
+    pub chunk_ns: f64,
+    /// Target chunks per worker. >1 lets the pool's greedy chunk queue
+    /// rebalance uneven progress; scoped threads pay a spawn per chunk,
+    /// so they want exactly one.
+    pub chunks_per_worker: usize,
+}
+
+impl SwCost {
+    /// Costs for the persistent worker-pool substrate (parked workers).
+    pub fn pooled() -> Self {
+        SwCost { ns_per_mac: 0.7, dispatch_ns: 6_000.0, chunk_ns: 400.0, chunks_per_worker: 2 }
+    }
+
+    /// Costs for the legacy scoped-thread substrate (spawn per chunk).
+    pub fn scoped() -> Self {
+        SwCost {
+            ns_per_mac: 0.7,
+            dispatch_ns: 40_000.0,
+            chunk_ns: 12_000.0,
+            chunks_per_worker: 1,
+        }
+    }
+
+    /// The cost table for a substrate (`pooled` = persistent pool).
+    pub fn for_substrate(pooled: bool) -> Self {
+        if pooled {
+            Self::pooled()
+        } else {
+            Self::scoped()
+        }
+    }
+
+    /// Does splitting `work` over `threads` lanes pay for its dispatch
+    /// and per-chunk overhead? The break-even behind every
+    /// [`Split::Serial`] decision.
+    pub fn parallel_pays(&self, rows: usize, work: u64, threads: usize) -> bool {
+        if threads <= 1 || rows <= 1 {
+            return false;
+        }
+        let lanes = threads.min(rows) as f64;
+        let serial_ns = work as f64 * self.ns_per_mac;
+        let chunks = (threads * self.chunks_per_worker).min(rows) as f64;
+        serial_ns * (1.0 - 1.0 / lanes) > self.dispatch_ns + self.chunk_ns * chunks
+    }
+}
+
+/// How one compiled step's row axis is divided across engine lanes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    /// Below the parallel break-even point (or a 1-lane engine): the
+    /// step runs on the submitting thread.
+    Serial,
+    /// Balanced row chunks spread across the worker lanes.
+    Rows,
+}
+
+/// The compile-time execution plan of one program step: the split
+/// decision, the exact balanced row partition the engine executes
+/// verbatim, and the cost model's utilization prediction (compared
+/// against the measured `util_pct` gauge on the serving path).
+#[derive(Clone, Debug)]
+pub struct StepPlan {
+    pub split: Split,
+    /// Balanced `(first_row, rows)` chunks covering the row axis exactly
+    /// once, in order (empty for serial plans).
+    pub chunks: Vec<(usize, usize)>,
+    /// Worker lanes the plan was sized for.
+    pub threads: usize,
+    /// Cost-model work estimate (LUT-MACs; element ops for pools).
+    pub work: u64,
+    /// Predicted software utilization: busy-lane time over
+    /// `threads × predicted step wall`.
+    pub predicted_util: f64,
+}
+
+impl StepPlan {
+    /// A serial plan (the submitting thread does everything).
+    pub fn serial(work: u64, threads: usize) -> StepPlan {
+        let t = threads.max(1);
+        StepPlan {
+            split: Split::Serial,
+            chunks: Vec::new(),
+            threads: t,
+            work,
+            predicted_util: 1.0 / t as f64,
+        }
+    }
+}
+
+/// Split `rows` into `n` balanced contiguous chunks (floor/ceil mix):
+/// no chunk exceeds the mean by more than one row, and the chunks cover
+/// `0..rows` exactly once, in order.
+pub fn balanced_chunks(rows: usize, n: usize) -> Vec<(usize, usize)> {
+    let n = n.clamp(1, rows.max(1));
+    let base = rows / n;
+    let rem = rows % n;
+    let mut out = Vec::with_capacity(n);
+    let mut start = 0;
+    for i in 0..n {
+        let len = base + usize::from(i < rem);
+        out.push((start, len));
+        start += len;
+    }
+    debug_assert_eq!(start, rows, "balanced chunks must cover every row");
+    out
+}
+
+/// Plan one step's row axis from the cost table: serial below the
+/// break-even point, otherwise a balanced partition at the substrate's
+/// chunks-per-worker ratio.
+pub fn plan_rows(rows: usize, work: u64, threads: usize, cost: &SwCost) -> StepPlan {
+    if !cost.parallel_pays(rows, work, threads.max(1)) {
+        return StepPlan::serial(work, threads);
+    }
+    plan_rows_forced(rows, work, threads, cost)
+}
+
+/// A row-parallel plan regardless of break-even (the forced-parallel
+/// test engines; also the tail of [`plan_rows`]). Degenerate shapes
+/// (1 lane, ≤1 row) still fall back to serial.
+pub fn plan_rows_forced(rows: usize, work: u64, threads: usize, cost: &SwCost) -> StepPlan {
+    let t = threads.max(1);
+    if t == 1 || rows <= 1 {
+        return StepPlan::serial(work, threads);
+    }
+    let chunks = balanced_chunks(rows, (t * cost.chunks_per_worker).min(rows));
+    // greedy round-robin assignment bound for the wall prediction
+    let mut loads = vec![0usize; t];
+    for (i, &(_, r)) in chunks.iter().enumerate() {
+        loads[i % t] += r;
+    }
+    let wall_rows = loads.iter().copied().max().unwrap_or(rows);
+    let serial_ns = (work as f64 * cost.ns_per_mac).max(1.0);
+    let wall_ns = serial_ns * wall_rows as f64 / rows as f64
+        + cost.dispatch_ns
+        + cost.chunk_ns * chunks.len() as f64 / t as f64;
+    StepPlan {
+        split: Split::Rows,
+        chunks,
+        threads: t,
+        work,
+        predicted_util: (serial_ns / (t as f64 * wall_ns)).clamp(0.0, 1.0),
+    }
+}
+
+/// The legacy `PAR_MIN_WORK`-threshold plan the engine's tensor-level
+/// wrappers still build per call (the compiled-program path plans by
+/// [`SwCost`] instead): parallel iff `work >= par_min_work`, balanced
+/// chunks at the substrate ratio. Built per call on a hot path, so it
+/// skips the utilization-prediction math (`predicted_util` is reported
+/// as 0 — these throwaway plans are executed, never cached or dumped
+/// by `EXPLAIN`).
+pub fn plan_rows_threshold(
+    rows: usize,
+    work: u64,
+    threads: usize,
+    par_min_work: u64,
+    pooled: bool,
+) -> StepPlan {
+    if threads <= 1 || rows <= 1 || work < par_min_work {
+        return StepPlan::serial(work, threads);
+    }
+    let ratio = SwCost::for_substrate(pooled).chunks_per_worker;
+    let chunks = balanced_chunks(rows, (threads * ratio).min(rows));
+    StepPlan { split: Split::Rows, chunks, threads, work, predicted_util: 0.0 }
+}
+
 /// Analyze a whole network; returns per-layer perf.
 pub fn analyze_network(
     grid: &GridConfig,
@@ -325,6 +522,108 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn balanced_chunks_partition_exactly() {
+        for (rows, n) in [(1usize, 1usize), (7, 3), (8, 8), (33, 8), (5, 9), (100, 7)] {
+            let chunks = balanced_chunks(rows, n);
+            assert!(chunks.len() <= n.max(1));
+            let mut next = 0;
+            for &(start, len) in &chunks {
+                assert_eq!(start, next, "rows={rows} n={n}");
+                next += len;
+            }
+            assert_eq!(next, rows, "rows={rows} n={n}");
+            let max = chunks.iter().map(|&(_, l)| l).max().unwrap();
+            let min = chunks.iter().map(|&(_, l)| l).min().unwrap();
+            assert!(max - min <= 1, "rows={rows} n={n}: {max} vs {min}");
+        }
+    }
+
+    #[test]
+    fn plans_partition_rows_and_serial_matches_the_cost_threshold() {
+        crate::util::proptest::check("plan-partition", 300, |rng| {
+            let rows = 1 + rng.below(200) as usize;
+            let threads = 1 + rng.below(12) as usize;
+            let work = rng.below(1 << 24);
+            let pooled = rng.bool(0.5);
+            let cost = SwCost::for_substrate(pooled);
+            for plan in [
+                plan_rows(rows, work, threads, &cost),
+                plan_rows_forced(rows, work, threads, &cost),
+                plan_rows_threshold(rows, work, threads, 1 << 18, pooled),
+            ] {
+                crate::prop_assert!(
+                    (0.0..=1.0).contains(&plan.predicted_util),
+                    "predicted util {} out of range",
+                    plan.predicted_util
+                );
+                match plan.split {
+                    Split::Serial => crate::prop_assert!(
+                        plan.chunks.is_empty(),
+                        "serial plan with chunks (rows={rows} threads={threads})"
+                    ),
+                    Split::Rows => {
+                        crate::prop_assert!(
+                            plan.chunks.len() <= threads * cost.chunks_per_worker,
+                            "too many chunks: {} for {threads} lanes",
+                            plan.chunks.len()
+                        );
+                        let mut next = 0;
+                        for &(start, len) in &plan.chunks {
+                            crate::prop_assert!(
+                                start == next && len > 0,
+                                "gap/overlap at row {next} (rows={rows} threads={threads})"
+                            );
+                            next += len;
+                        }
+                        crate::prop_assert!(
+                            next == rows,
+                            "chunks cover {next} of {rows} rows"
+                        );
+                        let max = plan.chunks.iter().map(|&(_, l)| l).max().unwrap();
+                        let min = plan.chunks.iter().map(|&(_, l)| l).min().unwrap();
+                        crate::prop_assert!(
+                            max - min <= 1,
+                            "imbalanced chunks: {max} vs {min} rows"
+                        );
+                    }
+                }
+            }
+            // the serial fallback is exactly the cost-table break-even
+            let p = plan_rows(rows, work, threads, &cost);
+            crate::prop_assert!(
+                (p.split == Split::Serial) == !cost.parallel_pays(rows, work, threads),
+                "serial decision diverged from the cost threshold \
+                 (rows={rows} work={work} threads={threads} pooled={pooled})"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pooled_substrate_parallelizes_smaller_layers_than_scoped() {
+        // the pool's cheap dispatch moves the break-even down: a layer
+        // too small for a scoped spawn still pays on parked workers
+        let rows = 12;
+        let threads = 8;
+        let work = 60_000; // ~42 µs serial at 0.7 ns/MAC
+        assert!(SwCost::pooled().parallel_pays(rows, work, threads));
+        assert!(!SwCost::scoped().parallel_pays(rows, work, threads));
+        // and a VGG-sized layer parallelizes everywhere
+        let big = 100_000_000;
+        assert!(SwCost::scoped().parallel_pays(rows, big, threads));
+    }
+
+    #[test]
+    fn one_lane_and_one_row_plans_are_serial() {
+        let cost = SwCost::pooled();
+        assert_eq!(plan_rows(100, u64::MAX >> 8, 1, &cost).split, Split::Serial);
+        assert_eq!(plan_rows(1, u64::MAX >> 8, 8, &cost).split, Split::Serial);
+        assert_eq!(plan_rows_forced(1, 1 << 30, 8, &cost).split, Split::Serial);
+        let serial = StepPlan::serial(10, 4);
+        assert!((serial.predicted_util - 0.25).abs() < 1e-9);
     }
 
     #[test]

@@ -300,6 +300,79 @@ mod tests {
     }
 
     #[test]
+    fn epoch_guard_keeps_thousands_of_small_jobs_apart() {
+        // thousands of back-to-back small jobs: a chunk of job N leaking
+        // into job N+1 (a broken epoch guard) would read a stale job id
+        let pool = WorkerPool::new(4);
+        let current = AtomicUsize::new(usize::MAX);
+        let leaks = AtomicUsize::new(0);
+        let ran = AtomicUsize::new(0);
+        let mut expect = 0usize;
+        for j in 0..4000usize {
+            let chunks = 1 + (j % 5);
+            expect += chunks;
+            current.store(j, Ordering::SeqCst);
+            pool.run(chunks, &|_| {
+                if current.load(Ordering::SeqCst) != j {
+                    leaks.fetch_add(1, Ordering::SeqCst);
+                }
+                ran.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(leaks.load(Ordering::SeqCst), 0, "a chunk crossed a job boundary");
+        assert_eq!(ran.load(Ordering::SeqCst), expect, "chunks lost or duplicated");
+    }
+
+    #[test]
+    fn stress_two_pools_and_concurrent_submitters() {
+        // two pools alive at once, hammered by two submitter threads
+        // each (a second submitter to a busy pool degrades to inline
+        // execution — either way every chunk must run exactly once),
+        // with periodic nested re-entry from inside chunk bodies
+        let pool_a = WorkerPool::new(3);
+        let pool_b = WorkerPool::new(2);
+        let total = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let a = pool_a.clone();
+            let b = pool_b.clone();
+            let total = total.clone();
+            handles.push(std::thread::spawn(move || {
+                for j in 0..500usize {
+                    let pool = if (t + j) % 2 == 0 { &a } else { &b };
+                    let other = if (t + j) % 2 == 0 { &b } else { &a };
+                    let chunks = 1 + (j % 4);
+                    pool.run(chunks, &|_| {
+                        total.fetch_add(1, Ordering::Relaxed);
+                        if j % 97 == 0 {
+                            // nested submission across pools: pool A's
+                            // chunk feeding pool B (and vice versa) must
+                            // complete, not deadlock
+                            other.run(2, &|_| {
+                                total.fetch_add(1, Ordering::Relaxed);
+                            });
+                        }
+                    });
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // expected per submitter: each job runs `chunks` chunks, and a
+        // nested job adds 2 more per outer chunk
+        let mut per_submitter = 0usize;
+        for j in 0..500usize {
+            let chunks = 1 + (j % 4);
+            per_submitter += chunks;
+            if j % 97 == 0 {
+                per_submitter += 2 * chunks;
+            }
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 4 * per_submitter);
+    }
+
+    #[test]
     fn single_thread_pool_runs_serially() {
         let pool = WorkerPool::new(1);
         assert_eq!(pool.threads(), 1);

@@ -23,11 +23,13 @@ use anyhow::{bail, Context, Result};
 
 use neuromax::arch::config::GridConfig;
 use neuromax::coordinator::batcher::BatchPolicy;
+use neuromax::coordinator::metrics::parse_model_gauge;
 use neuromax::coordinator::pipeline::{Backend, InferenceEngine};
 use neuromax::coordinator::reports;
 use neuromax::coordinator::server::{Client, Reply, Server};
 use neuromax::coordinator::NetworkSchedule;
-use neuromax::dataflow::{EngineOptions, ScheduleOptions};
+use neuromax::dataflow::engine::resolve_threads;
+use neuromax::dataflow::{cached_program, explain_rows, EngineOptions, ScheduleOptions};
 use neuromax::models::workload;
 use neuromax::runtime::{verify, Runtime};
 use neuromax::sim::stats::simulate_network;
@@ -52,11 +54,13 @@ fn main() -> Result<()> {
         Some("verify") => cmd_verify(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("loadgen") => cmd_loadgen(&args[1..]),
+        Some("explain") => cmd_explain(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
         Some("trace") => cmd_trace(&args[1..]),
         _ => {
             eprintln!(
-                "usage: neuromax <report|simulate|infer|verify|serve|loadgen|sweep|trace> ...\n\
+                "usage: neuromax <subcommand> ...   (report | simulate | infer | verify\n\
+                 \x20        | serve | loadgen | explain | sweep | trace)\n\
                  \n\
                  report  <fig1|fig17|table1|fig18|fig19|fig20|table2|table3|sec5|all>\n\
                  simulate <model> [--packing]\n\
@@ -70,6 +74,10 @@ fn main() -> Result<()> {
                  loadgen [--shards LIST e.g. 1,2,4] [--conns N] [--requests N]\n\
                          [--mix name:w,name:w] [--batch N] [--wait-ms N]\n\
                          [--queue-cap N] [--threads N] [--out PATH]\n\
+                 explain [MODEL | --model NAME] [--threads N (0 = one per core)]\n\
+                         (compiled step-plan table: kernel, split, chunks,\n\
+                          predicted hw/sw utilization — Fig. 19's software twin;\n\
+                          live servers answer the same table to `EXPLAIN <model>`)\n\
                  sweep\n\
                  trace   [--stride 1|2] [--cycles N]   (§5.1 pipeline waveform)\n\
                  \n\
@@ -315,6 +323,11 @@ struct LoadgenRun {
     /// Total arena grow events across all models (warmup only; a warmed
     /// server adds none per request).
     arena_allocs: u64,
+    /// Jobs routed away from their home shard.
+    spills: u64,
+    /// Measured per-model engine utilization, parsed back out of the
+    /// `STATS` wire line (`util_pct`), in `--mix` order.
+    model_utils: Vec<(String, f64)>,
 }
 
 /// Closed-loop load generator: `conns` connections each send their share
@@ -391,6 +404,14 @@ fn drive_loadgen(
             arena_peak_bytes.max(ms.arena_peak_bytes.load(Ordering::Relaxed));
         arena_allocs += ms.arena_allocs.load(Ordering::Relaxed);
     }
+    // per-model utilization: pull util_pct back out of the STATS wire
+    // line, so the JSON trail exercises what clients actually see
+    let summary = srv.metrics.summary();
+    let model_utils: Vec<(String, f64)> = mix
+        .iter()
+        .map(|(m, _)| (m.clone(), parse_model_gauge(&summary, m, "util_pct").unwrap_or(0.0)))
+        .collect();
+    let spills = srv.metrics.spills.load(Ordering::Relaxed);
     srv.shutdown();
     all.sort_unstable();
     anyhow::ensure!(!all.is_empty(), "loadgen completed zero requests");
@@ -403,6 +424,8 @@ fn drive_loadgen(
         p99_us: all[(n * 99 / 100).min(n - 1)],
         arena_peak_bytes,
         arena_allocs,
+        spills,
+        model_utils,
     })
 }
 
@@ -476,23 +499,85 @@ fn cmd_loadgen(args: &[String]) -> Result<()> {
             r.arena_allocs,
             "grow",
         );
+        // admission/routing pressure columns + per-model utilization
+        // (util_pct from STATS, recorded in basis points: 100 bp = 1%)
+        log.report(&format!("serve busy replies shards={s}"), m, r.busy_retries, "busy");
+        log.report(&format!("serve spills shards={s}"), m, r.spills, "spill");
+        for (model, util) in &r.model_utils {
+            log.report(
+                &format!("serve util_pct {model} shards={s}"),
+                m,
+                (util * 100.0).round() as u64,
+                "bp",
+            );
+        }
+        let util_label: Vec<String> = r
+            .model_utils
+            .iter()
+            .map(|(model, util)| format!("{model} {util:.1}%"))
+            .collect();
         println!(
             "  shards={s}: {} reqs in {:.2}s = {:.0} req/s | p50 {} us p99 {} us | \
-             {} busy retries | arena peak {:.1} KiB, {} grow events \
-             ({:.3}/req)",
+             {} busy retries, {} spills | arena peak {:.1} KiB, {} grow events \
+             ({:.3}/req) | util [{}]",
             r.completed,
             r.elapsed.as_secs_f64(),
             r.completed as f64 / r.elapsed.as_secs_f64(),
             r.p50_us,
             r.p99_us,
             r.busy_retries,
+            r.spills,
             r.arena_peak_bytes as f64 / 1024.0,
             r.arena_allocs,
             r.arena_allocs as f64 / r.completed.max(1) as f64,
+            util_label.join(", "),
         );
     }
     log.write_json(&out)?;
     println!("wrote {out}");
+    Ok(())
+}
+
+/// Dump a model's compiled step-plan table (same rows the server's
+/// `EXPLAIN <model>` verb answers): per step the kernel, shapes, the
+/// cost-guided split, chunk partition size, work estimate, and the
+/// predicted hardware-vs-software utilization pair.
+fn cmd_explain(args: &[String]) -> Result<()> {
+    // positional MODEL may appear before or after flags (`explain vgg16`
+    // or `explain --threads 8 vgg16`); every explain flag takes a value,
+    // so skip flag/value pairs rather than only probing args[0]
+    let positional = || {
+        let mut i = 0;
+        while i < args.len() {
+            if args[i].starts_with("--") {
+                i += 2;
+            } else {
+                return Some(args[i].clone());
+            }
+        }
+        None
+    };
+    let model = opt(args, "--model")
+        .or_else(positional)
+        .unwrap_or_else(|| "tinycnn".into());
+    let threads =
+        resolve_threads(opt(args, "--threads").and_then(|v| v.parse().ok()).unwrap_or(0));
+    let net = workload::by_name(&model)
+        .with_context(|| format!("unknown network `{model}`"))?;
+    let prog = cached_program(&net).map_err(anyhow::Error::msg)?;
+    let plan = prog.plans_for(threads, true, false);
+    println!("PLAN {} steps={} threads={threads}", net.name, prog.steps.len());
+    for row in explain_rows(&net, &prog, &plan) {
+        println!("{row}");
+    }
+    println!("END");
+    let rows = plan.parallel_steps();
+    println!(
+        "{} of {} steps row-parallel at {threads} lanes; serial steps ride the \
+         batch axis (lockstep) when batched",
+        rows,
+        prog.steps.len()
+    );
     Ok(())
 }
 

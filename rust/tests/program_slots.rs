@@ -24,9 +24,12 @@
 use std::sync::Arc;
 
 use neuromax::dataflow::forward::{forward_engine_planned, forward_ref_planned, ForwardPlan};
-use neuromax::dataflow::program::{Input, Merge, ModelProgram, Operand, ProgramExecutor};
+use neuromax::dataflow::program::{
+    run_batch_lockstep, Input, Merge, ModelProgram, Operand, ProgramExecutor,
+};
 use neuromax::dataflow::workers::WorkerPool;
-use neuromax::dataflow::Engine;
+use neuromax::dataflow::{Engine, Split};
+use neuromax::tensor::Tensor3;
 use neuromax::models::layer::{LayerDesc, Network};
 use neuromax::models::runner::{random_input_for, NetWeights};
 use neuromax::models::workload;
@@ -241,6 +244,62 @@ fn random_graphs_recycle_slots_safely_and_stay_bit_exact() {
             "{}: warmed arena grew on re-run",
             net.name
         );
+        Ok(())
+    });
+}
+
+#[test]
+fn lockstep_batches_match_per_element_execution_on_random_graphs() {
+    // the nested batch×row executor must be bit-identical to running
+    // each element through the per-element executor, for any routable
+    // graph shape and any batch size — and its per-step plans must
+    // cover every output row of every element exactly once (checked
+    // indirectly: a gap leaves stale psums, an overlap double-writes;
+    // both break the exact comparison)
+    let pool = WorkerPool::new(4);
+    check("lockstep-batch", 12, |rng| {
+        let tag = rng.next_u64() & 0xFFFF;
+        let net = random_net(rng, tag);
+        let plan = ForwardPlan::infer(&net)
+            .map_err(|e| format!("{}: plan failed: {e}", net.name))?;
+        let prog = Arc::new(ModelProgram::from_plan(&net, &plan));
+        let w = NetWeights::random(&net, rng.next_u64());
+        let fused = w.fuse();
+        let b = 2 + rng.below(4) as usize;
+        let xs: Vec<Tensor3> =
+            (0..b as u64).map(|i| random_input_for(&net, rng.next_u64() ^ i)).collect();
+        let eng1 = Engine::single_threaded();
+        let mut exr = ProgramExecutor::new(prog.clone());
+        let want: Vec<Tensor3> = xs.iter().map(|x| exr.run(&eng1, &fused, x)).collect();
+        // forced pooled engine: every step with >1 row splits, so the
+        // job really interleaves (element × chunk) pairs
+        let engp = Engine::pooled_forced(pool.clone());
+        let pplan = prog.plans_for(engp.num_threads(), true, true);
+        neuromax::prop_assert!(
+            pplan.steps.iter().any(|p| p.split == Split::Rows)
+                || prog.steps.iter().all(|s| s.plan_rows_axis() <= 1),
+            "{}: forced plan should row-split something",
+            net.name
+        );
+        let mut execs: Vec<ProgramExecutor> =
+            (0..b).map(|_| ProgramExecutor::new(prog.clone())).collect();
+        let mut refs: Vec<&mut ProgramExecutor> = execs.iter_mut().collect();
+        let xrefs: Vec<&Tensor3> = xs.iter().collect();
+        let mut outs = vec![Vec::new(); b];
+        let dims = run_batch_lockstep(&engp, &fused, &pplan, &mut refs, &xrefs, &mut outs);
+        for (e, (got, want)) in outs.iter().zip(&want).enumerate() {
+            neuromax::prop_assert!(
+                dims == (want.h, want.w, want.c),
+                "{}: lockstep dims {:?}",
+                net.name,
+                dims
+            );
+            neuromax::prop_assert!(
+                got == &want.data,
+                "{}: lockstep element {e}/{b} diverged",
+                net.name
+            );
+        }
         Ok(())
     });
 }

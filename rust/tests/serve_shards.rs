@@ -282,6 +282,54 @@ fn stats_per_model_counters_match_scripted_trace() {
     assert!(stats.contains("AlexNet-test: req=2"), "{stats}");
     assert!(stats.contains("SqueezeNet-test: req=1"), "{stats}");
     assert!(stats.contains("shards=[s0: req=6"), "{stats}");
+    assert!(stats.contains("util_pct="), "{stats}");
     assert_eq!(srv.metrics.spills.load(Ordering::Relaxed), 0);
+    srv.shutdown();
+}
+
+#[test]
+fn explain_and_util_pct_ride_the_wire_together() {
+    // EXPLAIN (predicted per-step utilization) and STATS util_pct
+    // (measured) are the two halves of the Fig.-19-style story; both
+    // must round-trip the line protocol on a sharded server
+    let mut srv = Server::start_sharded(
+        "127.0.0.1:0",
+        "tinycnn",
+        Backend::Sim,
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1), ..Default::default() },
+        EngineOptions { num_threads: 2, ..Default::default() },
+        2,
+    )
+    .unwrap();
+    let addr = srv.addr;
+    let client = thread::spawn(move || {
+        let mut c = Client::connect(addr).unwrap();
+        let rows = c.explain("squeezenet-test").unwrap();
+        assert!(rows[0].starts_with("PLAN SqueezeNet-test steps="), "{}", rows[0]);
+        assert!(rows[0].ends_with("threads=2"), "{}", rows[0]);
+        let steps_tok = rows[0].split("steps=").nth(1).unwrap();
+        let steps: usize =
+            steps_tok.split_whitespace().next().unwrap().parse().unwrap();
+        assert_eq!(rows.len() - 1, steps, "one STEP row per program step");
+        for row in &rows[1..] {
+            assert!(row.contains("hw_util=") && row.contains("sw_util="), "{row}");
+            assert!(row.contains("split=serial") || row.contains("split=rows"), "{row}");
+        }
+        // traffic, then the measured gauge appears in STATS
+        for seed in 0..4 {
+            c.infer_model("squeezenet-test", seed).unwrap();
+        }
+        let stats = c.stats().unwrap();
+        assert!(stats.contains("SqueezeNet-test: req=4"), "{stats}");
+        let util = neuromax::coordinator::metrics::parse_model_gauge(
+            &stats,
+            "SqueezeNet-test",
+            "util_pct",
+        );
+        assert!(util.is_some(), "util_pct must parse from: {stats}");
+        stats
+    });
+    serve_clients(&mut srv, std::slice::from_ref(&client), 60);
+    client.join().unwrap();
     srv.shutdown();
 }
