@@ -14,6 +14,8 @@ use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::util::sync::{plock, pwait_timeout};
+
 /// A queued job (opaque payload + enqueue timestamp).
 pub struct Job<T> {
     pub payload: T,
@@ -72,7 +74,7 @@ impl<T> Batcher<T> {
     /// Enqueue a job unconditionally (no capacity check — serving paths
     /// use [`Batcher::try_push`] so overload turns into `BUSY` replies).
     pub fn push(&self, payload: T) {
-        let mut q = self.q.lock().unwrap();
+        let mut q = plock(&self.q);
         q.push_back(Job { payload, enqueued: Instant::now() });
         self.cv.notify_one();
     }
@@ -80,7 +82,7 @@ impl<T> Batcher<T> {
     /// Enqueue a job if the queue has room and the batcher is open;
     /// otherwise hand the payload back with the rejection reason.
     pub fn try_push(&self, payload: T) -> Result<(), PushError<T>> {
-        let mut q = self.q.lock().unwrap();
+        let mut q = plock(&self.q);
         // closed is checked while holding the queue lock (same q→closed
         // order as next_batch): a push that wins the race against close()
         // lands before the consumer's drain pass observes closed, so it
@@ -99,17 +101,28 @@ impl<T> Batcher<T> {
     /// Mark the stream finished; wakes waiting consumers. Already-queued
     /// jobs are still delivered (drain) before `next_batch` returns `None`.
     pub fn close(&self) {
-        *self.closed.lock().unwrap() = true;
+        *plock(&self.closed) = true;
         self.cv.notify_all();
     }
 
-    fn is_closed(&self) -> bool {
-        *self.closed.lock().unwrap()
+    /// Has [`Batcher::close`] been called? (Queued jobs may still be
+    /// pending delivery.)
+    pub fn is_closed(&self) -> bool {
+        *plock(&self.closed)
+    }
+
+    /// Drain every queued job *without* closing the batcher: the shard
+    /// supervisor's bounce path — a quarantined shard empties its queue
+    /// so waiting clients get an immediate `ERR internal` instead of
+    /// sitting behind a rebuild, then keeps the queue open for after
+    /// readmission.
+    pub fn take_pending(&self) -> Vec<Job<T>> {
+        plock(&self.q).drain(..).collect()
     }
 
     /// Blocking: wait for a batch. Returns `None` when closed and drained.
     pub fn next_batch(&self) -> Option<Vec<Job<T>>> {
-        let mut q = self.q.lock().unwrap();
+        let mut q = plock(&self.q);
         loop {
             if q.len() >= self.policy.max_batch {
                 break;
@@ -126,16 +139,13 @@ impl<T> Batcher<T> {
                 if elapsed >= self.policy.max_wait {
                     break;
                 }
-                let (guard, _) = self
-                    .cv
-                    .wait_timeout(q, self.policy.max_wait - elapsed)
-                    .unwrap();
+                let (guard, _) = pwait_timeout(&self.cv, q, self.policy.max_wait - elapsed);
                 q = guard;
             } else {
                 if self.is_closed() {
                     return None;
                 }
-                let (guard, _) = self.cv.wait_timeout(q, Duration::from_millis(50)).unwrap();
+                let (guard, _) = pwait_timeout(&self.cv, q, Duration::from_millis(50));
                 q = guard;
             }
         }
@@ -144,7 +154,7 @@ impl<T> Batcher<T> {
     }
 
     pub fn depth(&self) -> usize {
-        self.q.lock().unwrap().len()
+        plock(&self.q).len()
     }
 }
 
@@ -277,6 +287,21 @@ mod tests {
         // draining one batch frees capacity again
         assert_eq!(b.next_batch().unwrap().len(), 2);
         assert!(b.try_push(4).is_ok());
+    }
+
+    #[test]
+    fn take_pending_empties_the_queue_but_leaves_it_open() {
+        let b = Batcher::new(policy(8, Duration::from_millis(5)));
+        for i in 0..5 {
+            b.push(i);
+        }
+        let bounced = b.take_pending();
+        assert_eq!(bounced.len(), 5);
+        assert_eq!(bounced[0].payload, 0);
+        assert_eq!(b.depth(), 0);
+        // still open: new work is accepted and delivered normally
+        assert!(b.try_push(9).is_ok());
+        assert_eq!(b.next_batch().unwrap()[0].payload, 9);
     }
 
     #[test]

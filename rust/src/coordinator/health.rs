@@ -1,0 +1,200 @@
+//! Per-shard health tracking: healthy → degraded → quarantined.
+//!
+//! Each shard carries a [`ShardHealth`] (owned by [`Metrics`] so both
+//! the shard engine thread and the admission path can see it). The
+//! state machine is deliberately simple:
+//!
+//! ```text
+//!            failure                 failure × quarantine_after
+//!  Healthy ──────────▶ Degraded ──────────────────────────────▶ Quarantined
+//!     ▲                   │                                          │
+//!     └──── success ──────┘              readmit (after rebuild) ────┘
+//! ```
+//!
+//! Only the shard's own engine thread *mutates* health (single-mutator
+//! discipline — it records batch outcomes and performs the rebuild +
+//! readmit), while the admission path only *reads* `is_quarantined`,
+//! so the atomics here need no stronger ordering than acq/rel.
+//!
+//! [`Metrics`]: crate::coordinator::metrics::Metrics
+
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::sync::plock;
+
+/// Supervision state of one shard.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HealthState {
+    /// Serving normally.
+    Healthy,
+    /// At least one recent consecutive failure; still serving.
+    Degraded,
+    /// Pulled from routing; engine + arena being rebuilt.
+    Quarantined,
+}
+
+impl HealthState {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            HealthState::Healthy => "healthy",
+            HealthState::Degraded => "degraded",
+            HealthState::Quarantined => "quarantined",
+        }
+    }
+
+    fn from_u8(v: u8) -> HealthState {
+        match v {
+            0 => HealthState::Healthy,
+            1 => HealthState::Degraded,
+            _ => HealthState::Quarantined,
+        }
+    }
+}
+
+/// Knobs for the supervision loop.
+#[derive(Clone, Copy, Debug)]
+pub struct HealthPolicy {
+    /// Consecutive batch failures before a shard is quarantined.
+    pub quarantine_after: u32,
+    /// Pause between rebuild attempts while quarantined.
+    pub rebuild_backoff: Duration,
+}
+
+impl Default for HealthPolicy {
+    fn default() -> Self {
+        HealthPolicy { quarantine_after: 3, rebuild_backoff: Duration::from_millis(10) }
+    }
+}
+
+/// Health record for one shard. All methods are `&self`; see the
+/// module docs for the single-mutator discipline.
+#[derive(Debug, Default)]
+pub struct ShardHealth {
+    state: AtomicU8,
+    consec_failures: AtomicU32,
+    /// When the current quarantine began (None while not quarantined).
+    since: Mutex<Option<Instant>>,
+    /// Total time spent quarantined, summed over completed
+    /// quarantine→readmit cycles.
+    quarantine_ns: AtomicU64,
+}
+
+impl ShardHealth {
+    pub fn state(&self) -> HealthState {
+        HealthState::from_u8(self.state.load(Ordering::Acquire))
+    }
+
+    #[inline]
+    pub fn is_quarantined(&self) -> bool {
+        self.state() == HealthState::Quarantined
+    }
+
+    /// Total quarantined time over completed cycles, in nanoseconds.
+    pub fn quarantine_ns(&self) -> u64 {
+        self.quarantine_ns.load(Ordering::Relaxed)
+    }
+
+    /// Record a successful batch: clears the failure streak. A success
+    /// cannot un-quarantine a shard — only `readmit` (after a rebuild)
+    /// does that.
+    pub fn record_ok(&self) {
+        if self.is_quarantined() {
+            return;
+        }
+        self.consec_failures.store(0, Ordering::Relaxed);
+        self.state.store(HealthState::Healthy as u8, Ordering::Release);
+    }
+
+    /// Record a failed batch. Returns `true` iff this failure newly
+    /// tripped the shard into quarantine (so the caller can bump the
+    /// quarantine counter exactly once per episode).
+    pub fn record_failure(&self, policy: &HealthPolicy) -> bool {
+        if self.is_quarantined() {
+            return false;
+        }
+        let streak = self.consec_failures.fetch_add(1, Ordering::Relaxed) + 1;
+        if streak >= policy.quarantine_after {
+            *plock(&self.since) = Some(Instant::now());
+            self.state.store(HealthState::Quarantined as u8, Ordering::Release);
+            true
+        } else {
+            self.state.store(HealthState::Degraded as u8, Ordering::Release);
+            false
+        }
+    }
+
+    /// Readmit a quarantined shard after its engine + arena were
+    /// rebuilt: folds the quarantine duration into `quarantine_ns` and
+    /// returns the shard to `Healthy`.
+    pub fn readmit(&self) {
+        if let Some(start) = plock(&self.since).take() {
+            let ns = start.elapsed().as_nanos() as u64;
+            self.quarantine_ns.fetch_add(ns, Ordering::Relaxed);
+        }
+        self.consec_failures.store(0, Ordering::Relaxed);
+        self.state.store(HealthState::Healthy as u8, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_healthy() {
+        let h = ShardHealth::default();
+        assert_eq!(h.state(), HealthState::Healthy);
+        assert!(!h.is_quarantined());
+    }
+
+    #[test]
+    fn degrades_then_quarantines_after_k_consecutive_failures() {
+        let h = ShardHealth::default();
+        let p = HealthPolicy { quarantine_after: 3, ..HealthPolicy::default() };
+        assert!(!h.record_failure(&p));
+        assert_eq!(h.state(), HealthState::Degraded);
+        assert!(!h.record_failure(&p));
+        assert_eq!(h.state(), HealthState::Degraded);
+        assert!(h.record_failure(&p), "third failure should trip quarantine");
+        assert_eq!(h.state(), HealthState::Quarantined);
+        // Further failures while quarantined don't re-trip.
+        assert!(!h.record_failure(&p));
+    }
+
+    #[test]
+    fn success_resets_the_failure_streak() {
+        let h = ShardHealth::default();
+        let p = HealthPolicy { quarantine_after: 2, ..HealthPolicy::default() };
+        assert!(!h.record_failure(&p));
+        h.record_ok();
+        assert_eq!(h.state(), HealthState::Healthy);
+        // Streak restarted: one more failure only degrades.
+        assert!(!h.record_failure(&p));
+        assert_eq!(h.state(), HealthState::Degraded);
+    }
+
+    #[test]
+    fn success_does_not_unquarantine() {
+        let h = ShardHealth::default();
+        let p = HealthPolicy { quarantine_after: 1, ..HealthPolicy::default() };
+        assert!(h.record_failure(&p));
+        h.record_ok();
+        assert_eq!(h.state(), HealthState::Quarantined);
+    }
+
+    #[test]
+    fn readmit_restores_health_and_accumulates_quarantine_time() {
+        let h = ShardHealth::default();
+        let p = HealthPolicy { quarantine_after: 1, ..HealthPolicy::default() };
+        assert!(h.record_failure(&p));
+        std::thread::sleep(Duration::from_millis(2));
+        h.readmit();
+        assert_eq!(h.state(), HealthState::Healthy);
+        assert!(h.quarantine_ns() > 0, "quarantine duration should be recorded");
+        // A fresh episode works again after readmission.
+        assert!(h.record_failure(&p));
+        assert!(h.is_quarantined());
+    }
+}

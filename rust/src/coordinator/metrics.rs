@@ -4,21 +4,91 @@
 //! the batch-size log and the per-model map):
 //!
 //! * **global** — requests/responses/errors, dynamic-batch accounting,
-//!   the enqueue-to-reply latency histogram, and per-reason admission
-//!   drop counters (`queue-full`, `unknown-model`, `shutdown`);
+//!   the enqueue-to-reply latency histogram, per-reason admission drop
+//!   counters (`queue-full`, `unknown-model`, `shutdown`, `deadline`,
+//!   `unhealthy`), per-[`ErrCode`] error counters, and the fault-
+//!   containment counters (panics caught, quarantines, recoveries,
+//!   worker respawns, reaped connections);
 //! * **per shard** ([`ShardStats`], presized by
-//!   [`Metrics::for_shards`]) — what each engine shard executed;
+//!   [`Metrics::for_shards`]) — what each engine shard executed, plus
+//!   its supervision state ([`ShardHealth`], rendered in the `health=`
+//!   segment);
 //! * **per model** ([`ModelStats`], created on first use) — how traffic
 //!   split across the zoo.
 //!
 //! [`Metrics::summary`] renders everything on **one line** because the
 //! wire protocol's `STATS` reply is line-oriented (see
 //! `docs/PROTOCOL.md`); older clients that only parse the global prefix
-//! keep working.
+//! keep working — new keys and segments only ever append after the
+//! pre-existing ones.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+
+use crate::coordinator::health::ShardHealth;
+use crate::util::sync::plock;
+
+/// Stable wire codes for `ERR <code> <detail>` replies. The code is
+/// machine-parseable and append-only (codes are never renamed or
+/// reused); the detail after it is free-form human text. Each code has
+/// a counter in [`Metrics`], rendered in the `err=[...]` segment of
+/// `STATS`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrCode {
+    /// The request reached an engine and failed there (panic, engine
+    /// build failure, inference error, bounced from a quarantined
+    /// shard's queue).
+    Internal,
+    /// The request's deadline expired while it waited in a queue.
+    Deadline,
+    /// The requested model is not in the zoo.
+    UnknownModel,
+    /// The seed token did not parse as an integer.
+    BadSeed,
+    /// `INFER <model>` without a seed.
+    MissingSeed,
+    /// The deadline token did not parse as an integer.
+    BadDeadline,
+    /// Unrecognized protocol verb.
+    UnknownCommand,
+}
+
+impl ErrCode {
+    pub const ALL: [ErrCode; 7] = [
+        ErrCode::Internal,
+        ErrCode::Deadline,
+        ErrCode::UnknownModel,
+        ErrCode::BadSeed,
+        ErrCode::MissingSeed,
+        ErrCode::BadDeadline,
+        ErrCode::UnknownCommand,
+    ];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrCode::Internal => "internal",
+            ErrCode::Deadline => "deadline",
+            ErrCode::UnknownModel => "unknown-model",
+            ErrCode::BadSeed => "bad-seed",
+            ErrCode::MissingSeed => "missing-seed",
+            ErrCode::BadDeadline => "bad-deadline",
+            ErrCode::UnknownCommand => "unknown-command",
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            ErrCode::Internal => 0,
+            ErrCode::Deadline => 1,
+            ErrCode::UnknownModel => 2,
+            ErrCode::BadSeed => 3,
+            ErrCode::MissingSeed => 4,
+            ErrCode::BadDeadline => 5,
+            ErrCode::UnknownCommand => 6,
+        }
+    }
+}
 
 /// Fixed log-scale latency histogram (µs buckets: 1, 2, 4, ... 2^31).
 #[derive(Debug, Default)]
@@ -199,9 +269,34 @@ pub struct Metrics {
     pub dropped_unknown_model: AtomicU64,
     /// Jobs routed away from their model's home shard (load spill).
     pub spills: AtomicU64,
+    /// Requests refused at admission because the predicted cost could
+    /// not meet the request deadline (`BUSY deadline`).
+    pub dropped_deadline: AtomicU64,
+    /// Requests refused because every candidate shard was quarantined
+    /// (`BUSY no-healthy-shard`).
+    pub dropped_unhealthy: AtomicU64,
+    /// `ERR` replies by wire code, indexed by [`ErrCode`] order.
+    pub err_counts: [AtomicU64; 7],
+    /// Shards tripped into quarantine (episodes, not failures).
+    pub quarantines: AtomicU64,
+    /// Quarantined shards rebuilt and readmitted.
+    pub recoveries: AtomicU64,
+    /// Batch executions that panicked and were contained by the shard
+    /// supervisor.
+    pub panics_caught: AtomicU64,
+    /// Dead worker threads replaced by [`WorkerPool::respawn_dead`]
+    /// during fault recovery.
+    ///
+    /// [`WorkerPool::respawn_dead`]: crate::dataflow::workers::WorkerPool::respawn_dead
+    pub worker_respawns: AtomicU64,
+    /// Client connections closed by the server's idle/stall reaper.
+    pub reaped_conns: AtomicU64,
     /// Per-shard execution stats; empty unless built by
     /// [`Metrics::for_shards`].
     pub shards: Vec<ShardStats>,
+    /// Per-shard supervision state; sized with `shards` by
+    /// [`Metrics::for_shards`].
+    pub health: Vec<ShardHealth>,
     /// Per-model execution stats, keyed by canonical model name.
     pub models: Mutex<HashMap<String, Arc<ModelStats>>>,
 }
@@ -211,8 +306,16 @@ impl Metrics {
     pub fn for_shards(n: usize) -> Self {
         Metrics {
             shards: (0..n).map(|_| ShardStats::default()).collect(),
+            health: (0..n).map(|_| ShardHealth::default()).collect(),
             ..Default::default()
         }
+    }
+
+    /// Count one `ERR <code>` reply. Separate from the legacy `errors`
+    /// counter (failed inferences): this counts what actually went out
+    /// on the wire, including parse-time rejections.
+    pub fn record_err_code(&self, code: ErrCode) {
+        self.err_counts[code.idx()].fetch_add(1, Ordering::Relaxed);
     }
 
     /// The stats slot of shard `i` (panics if not built by
@@ -225,7 +328,7 @@ impl Metrics {
     /// The common hit path allocates nothing (one lookup per model group
     /// per batch on the serving path).
     pub fn model(&self, model: &str) -> Arc<ModelStats> {
-        let mut map = self.models.lock().unwrap();
+        let mut map = plock(&self.models);
         if let Some(ms) = map.get(model) {
             return ms.clone();
         }
@@ -235,7 +338,7 @@ impl Metrics {
     pub fn record_batch(&self, size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
-        self.batch_sizes.lock().unwrap().push(size);
+        plock(&self.batch_sizes).push(size);
     }
 
     /// Record the engine wall time of one executed batch.
@@ -275,6 +378,42 @@ impl Metrics {
             self.dropped_unknown_model.load(Ordering::Relaxed),
             self.spills.load(Ordering::Relaxed),
         );
+        // fault-containment counters and the per-code error table append
+        // AFTER the legacy prefix (wire-stability: old parsers that stop
+        // at `spills=` keep working)
+        s.push_str(&format!(
+            " busy_deadline={} busy_unhealthy={} quarantines={} recoveries={} \
+             panics_caught={} worker_respawns={} reaped_conns={}",
+            self.dropped_deadline.load(Ordering::Relaxed),
+            self.dropped_unhealthy.load(Ordering::Relaxed),
+            self.quarantines.load(Ordering::Relaxed),
+            self.recoveries.load(Ordering::Relaxed),
+            self.panics_caught.load(Ordering::Relaxed),
+            self.worker_respawns.load(Ordering::Relaxed),
+            self.reaped_conns.load(Ordering::Relaxed),
+        ));
+        s.push_str(" err=[");
+        for (i, code) in ErrCode::ALL.iter().enumerate() {
+            if i > 0 {
+                s.push(' ');
+            }
+            s.push_str(&format!(
+                "{}={}",
+                code.as_str(),
+                self.err_counts[code.idx()].load(Ordering::Relaxed)
+            ));
+        }
+        s.push(']');
+        if !self.health.is_empty() {
+            s.push_str(" health=[");
+            for (i, h) in self.health.iter().enumerate() {
+                if i > 0 {
+                    s.push_str("; ");
+                }
+                s.push_str(&format!("s{i}: {}", h.state().as_str()));
+            }
+            s.push(']');
+        }
         if !self.shards.is_empty() {
             s.push_str(" shards=[");
             for (i, sh) in self.shards.iter().enumerate() {
@@ -294,7 +433,7 @@ impl Metrics {
             }
             s.push(']');
         }
-        let models = self.models.lock().unwrap();
+        let models = plock(&self.models);
         if !models.is_empty() {
             let mut names: Vec<&String> = models.keys().collect();
             names.sort();
@@ -428,6 +567,48 @@ mod tests {
         assert_eq!(parse_model_gauge(&s, "AlexNet-test", "util_pct"), Some(25.0));
         // the `]`-terminated final segment parses too
         assert_eq!(parse_model_gauge(&s, "TinyCNN", "util_pct"), Some(75.0));
+    }
+
+    #[test]
+    fn err_code_counters_render_in_stable_order() {
+        let m = Metrics::default();
+        m.record_err_code(ErrCode::Internal);
+        m.record_err_code(ErrCode::Internal);
+        m.record_err_code(ErrCode::Deadline);
+        m.record_err_code(ErrCode::UnknownCommand);
+        let s = m.summary();
+        assert!(
+            s.contains(
+                "err=[internal=2 deadline=1 unknown-model=0 bad-seed=0 \
+                 missing-seed=0 bad-deadline=0 unknown-command=1]"
+            ),
+            "{s}"
+        );
+        assert!(!s.contains('\n'), "summary must stay one line: {s}");
+    }
+
+    #[test]
+    fn health_segment_renders_supervision_states() {
+        use crate::coordinator::health::HealthPolicy;
+        let m = Metrics::for_shards(3);
+        let p = HealthPolicy { quarantine_after: 1, ..HealthPolicy::default() };
+        m.health[1].record_failure(&p);
+        let s = m.summary();
+        assert!(s.contains("health=[s0: healthy; s1: quarantined; s2: healthy]"), "{s}");
+        // default metrics (no shards) omit the segment entirely
+        assert!(!Metrics::default().summary().contains("health=["));
+    }
+
+    #[test]
+    fn new_counters_append_after_the_legacy_prefix() {
+        let m = Metrics::default();
+        let s = m.summary();
+        let spills = s.find("spills=").expect("legacy prefix intact");
+        let busy_deadline = s.find("busy_deadline=").expect("new keys present");
+        assert!(busy_deadline > spills, "new keys must append after spills=: {s}");
+        assert!(s.contains("busy_unhealthy=0"), "{s}");
+        assert!(s.contains("quarantines=0 recoveries=0"), "{s}");
+        assert!(s.contains("panics_caught=0 worker_respawns=0 reaped_conns=0"), "{s}");
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //! reply channel carries `(class, latency)` back to the connection.
 
 pub mod batcher;
+pub mod health;
 pub mod metrics;
 pub mod pipeline;
 pub mod reports;

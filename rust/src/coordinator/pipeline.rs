@@ -13,7 +13,7 @@
 //! `rust/tests/zoo_forward.rs` and `rust/tests/program_slots.rs`.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, TryLockError};
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -105,6 +105,13 @@ struct SimPath {
 /// Borrow any currently-free executor lane. At most `execs.len()`
 /// chunks execute concurrently (the engine's worker count), so a free
 /// lane always exists; the scan is uncontended in the common case.
+///
+/// A lane whose mutex was poisoned (a caught panic mid-run) is
+/// *recovered*, not skipped: treating `Poisoned` as busy would spin
+/// forever once every lane had seen a panic. Recovery is sound because
+/// every program step writes its output slot before anything reads it,
+/// so a fresh run on a torn arena still computes the right answer —
+/// arena contents are scratch between runs.
 fn with_executor<R>(
     execs: &[Mutex<ProgramExecutor>],
     f: impl FnOnce(&mut ProgramExecutor) -> R,
@@ -112,8 +119,13 @@ fn with_executor<R>(
     let mut f = Some(f);
     loop {
         for m in execs {
-            if let Ok(mut ex) = m.try_lock() {
-                return (f.take().expect("single call"))(&mut ex);
+            match m.try_lock() {
+                Ok(mut ex) => return (f.take().expect("single call"))(&mut ex),
+                Err(TryLockError::Poisoned(p)) => {
+                    let mut ex = p.into_inner();
+                    return (f.take().expect("single call"))(&mut ex);
+                }
+                Err(TryLockError::WouldBlock) => {}
             }
         }
         std::thread::yield_now();
@@ -317,8 +329,13 @@ impl InferenceEngine {
                             if guards.len() == b {
                                 break;
                             }
-                            if let Ok(g) = m.try_lock() {
-                                guards.push(g);
+                            match m.try_lock() {
+                                Ok(g) => guards.push(g),
+                                // recovered, same argument as with_executor
+                                Err(TryLockError::Poisoned(p)) => {
+                                    guards.push(p.into_inner())
+                                }
+                                Err(TryLockError::WouldBlock) => {}
                             }
                         }
                         if guards.len() < b {
@@ -396,7 +413,7 @@ impl InferenceEngine {
         let Some(s) = &self.sim else { return (0, 0) };
         let (mut peak, mut total) = (0u64, 0u64);
         for m in &s.execs {
-            let ex = m.lock().unwrap();
+            let ex = crate::util::sync::plock(m);
             peak += ex.arena_peak_bytes() as u64;
             total += ex.arena_grow_events();
         }
@@ -415,7 +432,7 @@ impl InferenceEngine {
         let Some(s) = &self.sim else { return (0, 0) };
         let (mut busy, mut cap) = s.timer.busy_cap();
         for m in &s.execs {
-            let (b, c) = m.lock().unwrap().util_ns();
+            let (b, c) = crate::util::sync::plock(m).util_ns();
             busy += b;
             cap += c;
         }
@@ -424,6 +441,18 @@ impl InferenceEngine {
         self.reported_busy = busy;
         self.reported_cap = cap;
         (db, dc)
+    }
+
+    /// One end-to-end probe inference, used by the shard supervisor to
+    /// prove a rebuilt engine is actually servable before readmitting
+    /// its shard. Fails if inference errors or produces no logits.
+    pub fn self_test(&mut self) -> Result<()> {
+        let input = self.input(0);
+        let out = self.infer(&input)?;
+        if out.logits.is_empty() {
+            bail!("self test produced no logits");
+        }
+        Ok(())
     }
 
     /// Synthesize the quantized input for a request seed against this

@@ -18,16 +18,30 @@
 //! Protocol (one line per message — full spec in `docs/PROTOCOL.md`):
 //!
 //! ```text
-//! client → INFER <seed>          server → OK <class> <latency_us>
-//! client → INFER <model> <seed>  server → OK <class> <latency_us>
+//! client → INFER <seed> [deadline_ms]          server → OK <class> <latency_us>
+//! client → INFER <model> <seed> [deadline_ms]  server → OK <class> <latency_us>
 //! client → STATS                 server → STATS <summary>
 //! client → EXPLAIN [<model>]     server → PLAN <model> steps=<n> threads=<t>
 //!                                         STEP <i> ... (one per step)
 //!                                         END
 //! client → QUIT                  server closes the connection
-//! (malformed / failed)           server → ERR <reason>
-//! (overloaded / draining)        server → BUSY <reason>
+//! (malformed / failed)           server → ERR <code> <detail>
+//! (overloaded / refused)         server → BUSY <reason>
 //! ```
+//!
+//! Every `ERR` line leads with a stable machine-readable code (see
+//! [`ServeError`] and the table in `docs/PROTOCOL.md`); per-code
+//! counters ride in the `STATS` `err=[...]` segment. `BUSY` means the
+//! request was *refused before queueing* — `queue-full` (retry after
+//! backoff, see [`busy_backoff_us`]), `shutting-down`, `deadline` (the
+//! plan-predicted cost cannot meet the attached budget), or
+//! `no-healthy-shard` (every shard quarantined).
+//!
+//! `deadline_ms` is an end-to-end budget: admission refuses requests
+//! that cannot fit it (`BUSY deadline`), and a request whose budget
+//! expires while queued answers `ERR deadline` without executing.
+//! Connections are reaped after [`ConnPolicy::idle`] without a request
+//! so a stalled client cannot pin an acceptor thread forever.
 //!
 //! `EXPLAIN` dumps the model's compiled plan table — per step: kernel,
 //! shapes, parallel split, chunk count, cost-model work, and the
@@ -41,9 +55,11 @@
 //!
 //! `<model>` is any zoo name `workload::by_name` accepts (including the
 //! `-test` scaled profiles); without one, requests run on the server's
-//! default model.
+//! default model. Model names are never pure integers, which is what
+//! makes the `INFER` grammar unambiguous: a leading integer token is
+//! always the seed.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc};
@@ -53,11 +69,139 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::batcher::BatchPolicy;
-use super::metrics::Metrics;
+use super::metrics::{ErrCode, Metrics};
 use super::pipeline::Backend;
-use super::shard::{Admission, Pending, ShardPool};
+use super::shard::{Admission, Pending, ShardPool, ShardReply};
 use crate::dataflow::engine::EngineOptions;
 use crate::models::workload;
+use crate::util::prng::SplitMix64;
+
+/// A request-level failure with a stable wire code: rendered as
+/// `ERR <code> <detail>` and counted per-code in the `STATS`
+/// `err=[...]` segment.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// `INFER`/`EXPLAIN` named a model the zoo doesn't know.
+    UnknownModel(String),
+    /// The seed token didn't parse as an unsigned integer.
+    BadSeed(String),
+    /// A model name was given but the seed was left off.
+    MissingSeed,
+    /// The deadline token didn't parse as unsigned milliseconds.
+    BadDeadline(String),
+    /// The command verb itself was not recognized.
+    UnknownCommand(String),
+    /// The request's deadline expired while it waited in a shard queue.
+    DeadlineExceeded,
+    /// The engine failed or panicked; the detail is intentionally
+    /// generic (internals go to the server log, not the wire).
+    Internal(&'static str),
+}
+
+impl ServeError {
+    /// The stable code this error is counted under.
+    pub fn code(&self) -> ErrCode {
+        match self {
+            ServeError::UnknownModel(_) => ErrCode::UnknownModel,
+            ServeError::BadSeed(_) => ErrCode::BadSeed,
+            ServeError::MissingSeed => ErrCode::MissingSeed,
+            ServeError::BadDeadline(_) => ErrCode::BadDeadline,
+            ServeError::UnknownCommand(_) => ErrCode::UnknownCommand,
+            ServeError::DeadlineExceeded => ErrCode::Deadline,
+            ServeError::Internal(_) => ErrCode::Internal,
+        }
+    }
+
+    /// The full `ERR <code> <detail>` wire line (without newline).
+    pub fn wire(&self) -> String {
+        match self {
+            ServeError::UnknownModel(name) => format!("ERR unknown-model {name}"),
+            ServeError::BadSeed(tok) => format!("ERR bad-seed {tok}"),
+            ServeError::MissingSeed => {
+                "ERR missing-seed (INFER [<model>] <seed> [deadline_ms])".to_string()
+            }
+            ServeError::BadDeadline(tok) => format!("ERR bad-deadline {tok}"),
+            ServeError::UnknownCommand(cmd) => format!("ERR unknown-command {cmd}"),
+            ServeError::DeadlineExceeded => "ERR deadline missed-in-queue".to_string(),
+            ServeError::Internal(detail) => format!("ERR internal {detail}"),
+        }
+    }
+}
+
+/// Parse the argument tokens of an `INFER` line into
+/// `(model, seed, deadline)`. Grammar (model names are never pure
+/// integers, so a leading integer token is always the seed):
+///
+/// ```text
+/// INFER <seed> [deadline_ms]
+/// INFER <model> <seed> [deadline_ms]
+/// ```
+///
+/// A bare `INFER` runs seed 0 on the default model (legacy behavior).
+/// The returned model is canonicalized so `VGG16`/`vgg16` share one
+/// engine-cache entry downstream.
+pub fn parse_infer(
+    toks: &[&str],
+) -> std::result::Result<(Option<String>, u64, Option<Duration>), ServeError> {
+    let parse_deadline = |tok: Option<&&str>| -> Result<Option<Duration>, ServeError> {
+        match tok {
+            None => Ok(None),
+            Some(t) => t
+                .parse::<u64>()
+                .map(|ms| Some(Duration::from_millis(ms)))
+                .map_err(|_| ServeError::BadDeadline(t.to_string())),
+        }
+    };
+    match toks {
+        [] => Ok((None, 0, None)),
+        [first, rest @ ..] => {
+            if let Ok(seed) = first.parse::<u64>() {
+                // leading integer = seed (default-model form)
+                if rest.len() > 1 {
+                    return Err(ServeError::BadDeadline(rest[1].to_string()));
+                }
+                return Ok((None, seed, parse_deadline(rest.first())?));
+            }
+            // leading non-integer = model name
+            let Some(canon) = workload::canonical_name(first) else {
+                // a lone unparseable token keeps the legacy diagnosis:
+                // it sat in seed position, so call it a bad seed
+                if rest.is_empty() {
+                    return Err(ServeError::BadSeed(first.to_string()));
+                }
+                return Err(ServeError::UnknownModel(first.to_string()));
+            };
+            let Some(seed_tok) = rest.first() else {
+                return Err(ServeError::MissingSeed);
+            };
+            let Ok(seed) = seed_tok.parse::<u64>() else {
+                return Err(ServeError::BadSeed(seed_tok.to_string()));
+            };
+            if rest.len() > 2 {
+                return Err(ServeError::BadDeadline(rest[2].to_string()));
+            }
+            Ok((Some(canon), seed, parse_deadline(rest.get(1))?))
+        }
+    }
+}
+
+/// Per-connection socket policy: how long a silent client may hold its
+/// connection ([`ConnPolicy::idle`] — the reaper that keeps stalled
+/// clients from pinning acceptor threads) and how long a reply write
+/// may block ([`ConnPolicy::write`]).
+#[derive(Clone, Copy, Debug)]
+pub struct ConnPolicy {
+    /// Max silence between requests before the connection is reaped.
+    pub idle: Duration,
+    /// Max block on a reply write (a client that stops reading).
+    pub write: Duration,
+}
+
+impl Default for ConnPolicy {
+    fn default() -> Self {
+        ConnPolicy { idle: Duration::from_secs(60), write: Duration::from_secs(10) }
+    }
+}
 
 /// Server handle (join on `threads` after `stop`).
 pub struct Server {
@@ -66,6 +210,7 @@ pub struct Server {
     pool: Arc<ShardPool>,
     threads: Vec<thread::JoinHandle<()>>,
     listener: TcpListener,
+    conn_policy: ConnPolicy,
 }
 
 impl Server {
@@ -122,12 +267,25 @@ impl Server {
             pool,
             threads: Vec::new(),
             listener,
+            conn_policy: ConnPolicy::default(),
         })
     }
 
     /// Number of engine shards behind the dispatcher.
     pub fn shards(&self) -> usize {
         self.pool.num_shards()
+    }
+
+    /// Direct handle to the shard pool (supervision-policy tweaks and
+    /// white-box assertions in tests).
+    pub fn pool(&self) -> &Arc<ShardPool> {
+        &self.pool
+    }
+
+    /// Override the per-connection socket policy (idle reaping / write
+    /// timeout) for connections accepted *after* this call.
+    pub fn set_conn_policy(&mut self, cp: ConnPolicy) {
+        self.conn_policy = cp;
     }
 
     /// Accept and serve connections until `deadline` (None = one pass of
@@ -139,11 +297,12 @@ impl Server {
                 Ok((stream, _)) => {
                     let pool = self.pool.clone();
                     let metrics = self.metrics.clone();
+                    let cp = self.conn_policy;
                     self.threads.push(thread::spawn(move || {
-                        let _ = handle_client(stream, pool, metrics);
+                        let _ = handle_client(stream, pool, metrics, cp);
                     }));
                 }
-                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                Err(ref e) if e.kind() == ErrorKind::WouldBlock => {
                     match deadline {
                         Some(d) if Instant::now() < d => {
                             thread::sleep(Duration::from_millis(1));
@@ -190,47 +349,54 @@ impl Server {
     }
 }
 
+/// Write one typed error line and bump its per-code counter — the single
+/// choke point that keeps the wire and the `STATS err=[...]` segment in
+/// agreement.
+fn write_err(w: &mut impl Write, metrics: &Metrics, e: &ServeError) -> std::io::Result<()> {
+    metrics.record_err_code(e.code());
+    writeln!(w, "{}", e.wire())
+}
+
 fn handle_client(
     stream: TcpStream,
     pool: Arc<ShardPool>,
     metrics: Arc<Metrics>,
+    cp: ConnPolicy,
 ) -> Result<()> {
     stream.set_nodelay(true)?;
+    // socket timeouts are per-fd, so setting them before the clone
+    // covers both the read and write halves
+    stream.set_read_timeout(Some(cp.idle))?;
+    stream.set_write_timeout(Some(cp.write))?;
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // EOF: client closed cleanly
+            Ok(_) => {}
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                // idle reaper: a silent client loses the connection so it
+                // cannot pin this acceptor thread forever
+                metrics.reaped_conns.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+            Err(e) => return Err(e.into()),
+        }
         let mut it = line.split_whitespace();
         match it.next() {
             Some("INFER") => {
-                // `INFER <seed>` or `INFER <model> <seed>`
-                let (model, seed_tok) = match (it.next(), it.next()) {
-                    (Some(model), Some(seed)) => (Some(model), seed),
-                    (Some(seed), None) => (None, seed),
-                    _ => (None, "0"),
-                };
-                // canonicalize so `VGG16`/`vgg16`/`mobilenet` variants
-                // share one engine-cache entry downstream (name-only
-                // lookup — no Network is built on the request path)
-                let model = match model {
-                    Some(name) => match workload::canonical_name(name) {
-                        Some(canon) => Some(canon),
-                        None => {
+                let toks: Vec<&str> = it.collect();
+                let (model, seed, deadline) = match parse_infer(&toks) {
+                    Ok(parsed) => parsed,
+                    Err(e) => {
+                        if matches!(e, ServeError::UnknownModel(_)) {
                             metrics.dropped_unknown_model.fetch_add(1, Ordering::Relaxed);
-                            writeln!(writer, "ERR unknown model {name}")?;
-                            continue;
                         }
-                    },
-                    None => None,
-                };
-                let Ok(seed) = seed_tok.parse::<u64>() else {
-                    // a lone valid model name means the seed was forgotten
-                    if workload::canonical_name(seed_tok).is_some() {
-                        writeln!(writer, "ERR missing seed (INFER <model> <seed>)")?;
-                    } else {
-                        writeln!(writer, "ERR bad seed {seed_tok}")?;
+                        write_err(&mut writer, &metrics, &e)?;
+                        continue;
                     }
-                    continue;
                 };
                 metrics.requests.fetch_add(1, Ordering::Relaxed);
                 let (tx, rx) = mpsc::channel();
@@ -238,22 +404,56 @@ fn handle_client(
                     model,
                     seed,
                     enqueued: Instant::now(),
+                    deadline,
                     reply: tx,
                 };
                 match pool.submit(pending) {
-                    Ok(_shard) => match rx.recv_timeout(Duration::from_secs(30)) {
-                        Ok((class, us)) if class != usize::MAX => {
-                            writeln!(writer, "OK {class} {us}")?;
+                    Ok(_shard) => {
+                        // reply wait: the request's own budget plus grace,
+                        // capped by the legacy 30s backstop
+                        let wait = deadline
+                            .map(|d| (d + Duration::from_secs(2)).min(Duration::from_secs(30)))
+                            .unwrap_or(Duration::from_secs(30));
+                        match rx.recv_timeout(wait) {
+                            Ok(ShardReply::Ok { class, latency_us }) => {
+                                let msg = format!("OK {class} {latency_us}\n");
+                                if crate::util::fault::torn_reply() {
+                                    // injected torn write: half the reply,
+                                    // then drop the connection — clients
+                                    // must treat it as an io error
+                                    let half = msg.len() / 2;
+                                    let _ = writer.write_all(&msg.as_bytes()[..half]);
+                                    let _ = writer.flush();
+                                    return Ok(());
+                                }
+                                writer.write_all(msg.as_bytes())?;
+                            }
+                            Ok(ShardReply::Err(code)) => {
+                                let e = match code {
+                                    ErrCode::Deadline => ServeError::DeadlineExceeded,
+                                    _ => ServeError::Internal("inference-failed"),
+                                };
+                                write_err(&mut writer, &metrics, &e)?;
+                            }
+                            Err(_) => {
+                                // shard never answered inside the window —
+                                // still a contained, typed failure
+                                let e = ServeError::Internal("reply-timeout");
+                                write_err(&mut writer, &metrics, &e)?;
+                            }
                         }
-                        _ => {
-                            writeln!(writer, "ERR inference failed")?;
-                        }
-                    },
+                    }
                     Err(Admission::Busy) => {
                         writeln!(writer, "BUSY queue-full")?;
                     }
                     Err(Admission::ShuttingDown) => {
                         writeln!(writer, "BUSY shutting-down")?;
+                    }
+                    Err(Admission::Deadline) => {
+                        writeln!(writer, "BUSY deadline")?;
+                    }
+                    Err(Admission::Unhealthy) => {
+                        writeln!(writer, "BUSY no-healthy-shard")?;
                     }
                 }
             }
@@ -271,12 +471,24 @@ fn handle_client(
                         }
                         writeln!(writer, "END")?;
                     }
-                    Err(e) => writeln!(writer, "ERR {e}")?,
+                    Err(e) => {
+                        let e = if workload::canonical_name(model).is_none() {
+                            ServeError::UnknownModel(model.to_string())
+                        } else {
+                            eprintln!("EXPLAIN {model} failed: {e:#}");
+                            ServeError::Internal("plan-compile-failed")
+                        };
+                        write_err(&mut writer, &metrics, &e)?;
+                    }
                 }
             }
             Some("QUIT") | None => break,
             Some(other) => {
-                writeln!(writer, "ERR unknown command {other}")?;
+                write_err(
+                    &mut writer,
+                    &metrics,
+                    &ServeError::UnknownCommand(other.to_string()),
+                )?;
             }
         }
     }
@@ -292,6 +504,17 @@ pub enum Reply {
     Busy(String),
     /// `ERR <reason>` (or any unrecognized line).
     Err(String),
+}
+
+/// Jittered exponential backoff before retrying a `BUSY queue-full`
+/// reply: attempt `a` sleeps a uniformly random duration in
+/// `[cap/2, cap]` µs where `cap = min(200 · 2^a, 10_000)`. The full
+/// jitter half keeps a fleet of load generators from re-converging on
+/// the queue in lockstep; the cap bounds the worst added latency at
+/// 10 ms per attempt. Deterministic given a seeded [`SplitMix64`].
+pub fn busy_backoff_us(attempt: u32, rng: &mut SplitMix64) -> u64 {
+    let cap = 200u64.saturating_mul(1u64 << attempt.min(6)).min(10_000);
+    cap / 2 + rng.below(cap / 2 + 1)
 }
 
 /// Simple blocking client for tests, the serving example, and `loadgen`.
@@ -336,10 +559,62 @@ impl Client {
         self.read_reply()
     }
 
+    /// [`Client::request`] with an end-to-end deadline attached: the
+    /// server refuses it up front (`BUSY deadline`) when the predicted
+    /// cost cannot fit, and answers `ERR deadline` if the budget expires
+    /// in the queue.
+    pub fn request_deadline(
+        &mut self,
+        model: Option<&str>,
+        seed: u64,
+        deadline: Duration,
+    ) -> Result<Reply> {
+        let ms = deadline.as_millis().min(u64::MAX as u128) as u64;
+        match model {
+            Some(m) => writeln!(self.stream, "INFER {m} {seed} {ms}")?,
+            None => writeln!(self.stream, "INFER {seed} {ms}")?,
+        }
+        self.read_reply()
+    }
+
+    /// [`Client::request`] that retries `BUSY queue-full` with jittered
+    /// exponential backoff ([`busy_backoff_us`]) until `budget` elapses.
+    /// Every other reply — including the non-retryable `BUSY` reasons
+    /// (`deadline`, `shutting-down`, `no-healthy-shard`) — returns
+    /// immediately.
+    pub fn request_retry(
+        &mut self,
+        model: Option<&str>,
+        seed: u64,
+        budget: Duration,
+        rng: &mut SplitMix64,
+    ) -> Result<Reply> {
+        let t0 = Instant::now();
+        let mut attempt = 0u32;
+        loop {
+            let reply = self.request(model, seed)?;
+            match &reply {
+                Reply::Busy(reason)
+                    if reason == "queue-full" && t0.elapsed() < budget =>
+                {
+                    thread::sleep(Duration::from_micros(busy_backoff_us(attempt, rng)));
+                    attempt += 1;
+                }
+                _ => return Ok(reply),
+            }
+        }
+    }
+
     fn read_reply(&mut self) -> Result<Reply> {
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
         anyhow::ensure!(!line.is_empty(), "server closed the connection");
+        // torn-reply containment: an OK line must end in '\n' or it was
+        // cut mid-write — surface an io-style error, not a parsed reply
+        anyhow::ensure!(
+            line.ends_with('\n'),
+            "connection dropped mid-reply: {line:?}"
+        );
         let mut it = line.split_whitespace();
         match it.next() {
             Some("OK") => {
@@ -368,7 +643,7 @@ impl Client {
     /// Send `EXPLAIN <model>` and collect the plan table: the `PLAN`
     /// header followed by one `STEP` row per program step (the `END`
     /// terminator is consumed, not returned). Non-`PLAN` replies (e.g.
-    /// `ERR unknown model`) become errors.
+    /// `ERR unknown-model`) become errors.
     pub fn explain(&mut self, model: &str) -> Result<Vec<String>> {
         writeln!(self.stream, "EXPLAIN {model}")?;
         let mut first = String::new();
@@ -515,5 +790,87 @@ mod tests {
         srv.serve_until(Some(Instant::now() + Duration::from_millis(2500))).unwrap();
         client_thread.join().unwrap();
         srv.shutdown();
+    }
+
+    #[test]
+    fn parse_infer_accepts_every_grammar_form() {
+        // bare INFER: legacy seed-0 default
+        assert_eq!(parse_infer(&[]).unwrap(), (None, 0, None));
+        // leading integer = seed
+        assert_eq!(parse_infer(&["42"]).unwrap(), (None, 42, None));
+        assert_eq!(
+            parse_infer(&["42", "250"]).unwrap(),
+            (None, 42, Some(Duration::from_millis(250)))
+        );
+        // leading name = model (canonicalized), then seed [+ deadline]
+        assert_eq!(
+            parse_infer(&["tinycnn", "7"]).unwrap(),
+            (Some("TinyCNN".to_string()), 7, None)
+        );
+        assert_eq!(
+            parse_infer(&["vgg16-test", "7", "1000"]).unwrap(),
+            (Some("VGG16-test".to_string()), 7, Some(Duration::from_millis(1000)))
+        );
+        // a zero deadline is legal (and unmeetable — admission refuses)
+        assert_eq!(
+            parse_infer(&["5", "0"]).unwrap(),
+            (None, 5, Some(Duration::ZERO))
+        );
+    }
+
+    #[test]
+    fn parse_infer_rejects_with_typed_codes() {
+        use ServeError::*;
+        assert_eq!(parse_infer(&["nope"]), Err(BadSeed("nope".into())));
+        assert_eq!(parse_infer(&["nope", "3"]), Err(UnknownModel("nope".into())));
+        assert_eq!(parse_infer(&["tinycnn"]), Err(MissingSeed));
+        assert_eq!(parse_infer(&["tinycnn", "x"]), Err(BadSeed("x".into())));
+        assert_eq!(
+            parse_infer(&["tinycnn", "3", "soon"]),
+            Err(BadDeadline("soon".into()))
+        );
+        assert_eq!(parse_infer(&["3", "4", "5"]), Err(BadDeadline("5".into())));
+        assert_eq!(
+            parse_infer(&["tinycnn", "3", "4", "5"]),
+            Err(BadDeadline("5".into()))
+        );
+        // every variant renders `ERR <code> ...` with its stable code
+        for (e, code) in [
+            (UnknownModel("m".into()), "unknown-model"),
+            (BadSeed("x".into()), "bad-seed"),
+            (MissingSeed, "missing-seed"),
+            (BadDeadline("x".into()), "bad-deadline"),
+            (UnknownCommand("x".into()), "unknown-command"),
+            (DeadlineExceeded, "deadline"),
+            (Internal("x"), "internal"),
+        ] {
+            assert!(
+                e.wire().starts_with(&format!("ERR {code}")),
+                "{:?} → {}",
+                e,
+                e.wire()
+            );
+            assert_eq!(e.code().as_str(), code);
+        }
+    }
+
+    #[test]
+    fn busy_backoff_is_jittered_bounded_and_deterministic() {
+        let mut rng = SplitMix64::new(9);
+        for attempt in 0..12 {
+            let cap = 200u64.saturating_mul(1u64 << attempt.min(6)).min(10_000);
+            for _ in 0..50 {
+                let us = busy_backoff_us(attempt, &mut rng);
+                assert!(us >= cap / 2 && us <= cap, "attempt {attempt}: {us} vs cap {cap}");
+            }
+        }
+        // capped: deep attempts never exceed 10ms
+        let mut rng = SplitMix64::new(1);
+        assert!(busy_backoff_us(30, &mut rng) <= 10_000);
+        // deterministic for a fixed seed + attempt sequence
+        let (mut a, mut b) = (SplitMix64::new(77), SplitMix64::new(77));
+        for attempt in 0..8 {
+            assert_eq!(busy_backoff_us(attempt, &mut a), busy_backoff_us(attempt, &mut b));
+        }
     }
 }

@@ -6,42 +6,76 @@
 //! its own engine cache (warm LUT-fused weights) and its own bounded
 //! batch queue.
 //!
-//! Routing (see [`home_shard`] / [`route`]): a model's **home shard** is
-//! a stable hash of its canonical name, so one model's batches stick to
-//! one shard and reuse its fused weights. When the home queue is deep
-//! (≥ the spill threshold, one full batch by default) the job **spills**
-//! to the least-loaded shard — a hot model borrows idle shards without
-//! evicting anyone's cache — and the spill is counted in
-//! `Metrics::spills`.
+//! Routing (see [`home_shard`] / [`route`] / [`route_healthy`]): a
+//! model's **home shard** is a stable hash of its canonical name, so one
+//! model's batches stick to one shard and reuse its fused weights. When
+//! the home queue is deep (≥ the spill threshold, one full batch by
+//! default) the job **spills** to the least-loaded shard — a hot model
+//! borrows idle shards without evicting anyone's cache — and the spill
+//! is counted in `Metrics::spills`. Quarantined shards are excluded
+//! from routing entirely.
 //!
 //! Admission is bounded end-to-end: each shard queue has a capacity
 //! (`BatchPolicy::queue_cap`); when the routed shard and the fallback
 //! shard are both full, [`ShardPool::submit`] returns
 //! [`Admission::Busy`] and the server answers `BUSY` instead of queueing
-//! unbounded work. [`ShardPool::drain`] rejects new work, closes every
-//! queue, and joins the engine threads only after the in-flight batches
-//! have answered their reply channels — the graceful half of `QUIT`.
+//! unbounded work. Requests carrying a deadline are refused up front
+//! ([`Admission::Deadline`]) when the plan-predicted execution cost plus
+//! the queue-depth wait estimate cannot fit the budget — see
+//! [`ShardPool::predicted_ns`]. [`ShardPool::drain`] rejects new work,
+//! closes every queue, and joins the engine threads only after the
+//! in-flight batches have answered their reply channels — the graceful
+//! half of `QUIT`.
+//!
+//! Fault containment (see `coordinator::health`): each shard's batch
+//! execution runs under `catch_unwind`, so a panicking request answers
+//! [`ErrCode::Internal`] instead of killing the engine thread. The
+//! engine thread doubles as the shard's supervisor: consecutive failed
+//! batches degrade and then **quarantine** the shard (routing bounces
+//! around it, queued jobs are answered `ERR internal` immediately), and
+//! the supervisor rebuilds the shard's worker pool + engines + arenas in
+//! place, proving the rebuilt engine with a self-test inference before
+//! readmitting the shard. Only the shard's own thread mutates its
+//! health record — the single-mutator discipline that keeps the state
+//! machine race-free.
 
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use super::batcher::{BatchPolicy, Batcher, Job, PushError};
-use super::metrics::{Metrics, ModelStats};
+use super::health::{HealthPolicy, ShardHealth};
+use super::metrics::{ErrCode, Metrics, ModelStats};
 use super::pipeline::{Backend, InferenceEngine};
 use crate::dataflow::engine::{resolve_threads, EngineOptions};
 use crate::dataflow::program::{cached_program, explain_rows};
 use crate::dataflow::workers::WorkerPool;
 use crate::models::workload;
+use crate::util::sync::plock;
 
 /// Weight seed shared by every server-built engine: one seed → one set
 /// of synthetic weights per model, identical across shards and across
 /// the verification tooling (`neuromax verify --model`).
 pub const WEIGHT_SEED: u64 = 7;
+
+/// How a shard answers one request's reply channel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardReply {
+    Ok {
+        class: usize,
+        /// Enqueue-to-reply latency, microseconds.
+        latency_us: u64,
+    },
+    /// The request failed; the code says how (today: `Internal` for
+    /// engine failures and bounced jobs, `Deadline` for jobs whose
+    /// deadline expired in the queue).
+    Err(ErrCode),
+}
 
 /// A pending request routed to an engine shard.
 pub struct Pending {
@@ -49,9 +83,11 @@ pub struct Pending {
     pub model: Option<String>,
     pub seed: u64,
     pub enqueued: Instant,
-    /// Answered with `(class, enqueue_to_reply_us)`; `usize::MAX` marks a
-    /// failed inference.
-    pub reply: mpsc::Sender<(usize, u64)>,
+    /// End-to-end budget the client attached (`INFER ... [deadline_ms]`).
+    /// Checked at admission (predicted cost) and again at execution
+    /// (missed-in-queue).
+    pub deadline: Option<Duration>,
+    pub reply: mpsc::Sender<ShardReply>,
 }
 
 /// Why [`ShardPool::submit`] refused a request.
@@ -61,6 +97,10 @@ pub enum Admission {
     Busy,
     /// The pool is draining for shutdown.
     ShuttingDown,
+    /// The predicted cost cannot meet the request's deadline.
+    Deadline,
+    /// Every candidate shard is quarantined.
+    Unhealthy,
 }
 
 /// FNV-1a 64-bit — a stable hash (unlike `DefaultHasher`, which is
@@ -104,6 +144,43 @@ pub fn route(home: usize, depths: &[usize], spill_threshold: usize) -> usize {
     best
 }
 
+/// [`route`] with quarantined shards excluded. With nothing quarantined
+/// this delegates to `route` (exact behavioral parity with the
+/// pre-health dispatcher); otherwise it routes as if the quarantined
+/// shards did not exist — home if healthy and shallow, else the
+/// least-loaded *healthy* shard (ties keep home, then lowest index).
+/// `None` means no healthy shard exists at all.
+pub fn route_healthy(
+    home: usize,
+    depths: &[usize],
+    spill_threshold: usize,
+    quarantined: &[bool],
+) -> Option<usize> {
+    if depths.is_empty() {
+        return Some(0);
+    }
+    if !quarantined.iter().any(|&q| q) {
+        return Some(route(home, depths, spill_threshold));
+    }
+    let healthy = |i: usize| !quarantined.get(i).copied().unwrap_or(false);
+    let home = home.min(depths.len() - 1);
+    if healthy(home) && depths[home] < spill_threshold {
+        return Some(home);
+    }
+    // least-loaded healthy shard; starting from home keeps the tie rule
+    let mut best = if healthy(home) { Some((home, depths[home])) } else { None };
+    for (i, &d) in depths.iter().enumerate() {
+        if !healthy(i) {
+            continue;
+        }
+        match best {
+            Some((_, bd)) if d >= bd => {}
+            _ => best = Some((i, d)),
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
 /// N engine shards, each an engine thread with its own bounded
 /// [`Batcher`] and its own per-model `InferenceEngine` cache.
 pub struct ShardPool {
@@ -116,21 +193,45 @@ pub struct ShardPool {
     /// Resolved per-shard engine worker-lane count (what `EXPLAIN`
     /// compiles plans against).
     engine_threads: usize,
+    /// Per-model predicted single-request wall time, ns (memoized
+    /// [`ShardPool::predicted_ns`] lookups — deadline admission).
+    predicted: Mutex<HashMap<String, u64>>,
 }
 
 impl ShardPool {
-    /// Validate the model/backend combination and start the engine
-    /// shards. `shards == 0` sizes the pool automatically: available
-    /// cores ÷ engine worker threads (so `--threads 0`, one worker per
-    /// core, keeps the classic single-shard layout). In the auto-threads
-    /// case the per-shard worker count is divided down so N shards never
-    /// oversubscribe the machine.
+    /// [`ShardPool::start_with_health`] with the default supervision
+    /// policy (quarantine after 3 consecutive failed batches).
     pub fn start(
         default_model: &str,
         backend: Backend,
         policy: BatchPolicy,
         eopt: EngineOptions,
         shards: usize,
+    ) -> Result<ShardPool> {
+        Self::start_with_health(
+            default_model,
+            backend,
+            policy,
+            eopt,
+            shards,
+            HealthPolicy::default(),
+        )
+    }
+
+    /// Validate the model/backend combination and start the engine
+    /// shards. `shards == 0` sizes the pool automatically: available
+    /// cores ÷ engine worker threads (so `--threads 0`, one worker per
+    /// core, keeps the classic single-shard layout). In the auto-threads
+    /// case the per-shard worker count is divided down so N shards never
+    /// oversubscribe the machine. `hp` tunes the supervisor (tests use
+    /// a low quarantine threshold and a short rebuild backoff).
+    pub fn start_with_health(
+        default_model: &str,
+        backend: Backend,
+        policy: BatchPolicy,
+        eopt: EngineOptions,
+        shards: usize,
+        hp: HealthPolicy,
     ) -> Result<ShardPool> {
         let Some(default) = workload::canonical_name(default_model) else {
             anyhow::bail!("unknown model `{default_model}`");
@@ -168,37 +269,99 @@ impl ShardPool {
             // shard serves: workers park between batches, and no layer
             // ever pays a thread spawn/join again. Each dynamic batch
             // executes as ONE parallel unit per model group
-            // (`infer_batch` → the shard's pool).
+            // (`infer_batch` → the shard's pool). The same thread is the
+            // shard's supervisor: it records batch outcomes into its
+            // health slot and performs quarantine rebuilds in place.
             let handle = thread::Builder::new()
                 .name(format!("engine-shard-{sid}"))
                 .spawn(move || {
-                    let wpool = WorkerPool::new(resolve_threads(eopt.num_threads));
+                    let mut wpool = WorkerPool::new(resolve_threads(eopt.num_threads));
                     let mut engines: HashMap<String, InferenceEngine> = HashMap::new();
                     if sid == default_home {
                         // warm the default model on its home shard so the
-                        // first request doesn't pay engine construction
-                        match InferenceEngine::for_model_pooled(
-                            &default,
-                            backend,
-                            WEIGHT_SEED,
-                            eopt,
-                            Some(wpool.clone()),
-                        ) {
-                            Ok(mut e) => {
-                                let _ = e.warmup();
-                                engines.insert(default.clone(), e);
+                        // first request doesn't pay engine construction —
+                        // under catch_unwind so a fault injected during
+                        // warmup degrades to a cold start, not a dead shard
+                        let warmed = catch_unwind(AssertUnwindSafe(|| {
+                            InferenceEngine::for_model_pooled(
+                                &default,
+                                backend,
+                                WEIGHT_SEED,
+                                eopt,
+                                Some(wpool.clone()),
+                            )
+                        }));
+                        match warmed {
+                            Ok(Ok(mut e)) => {
+                                if catch_unwind(AssertUnwindSafe(|| e.warmup())).is_ok() {
+                                    engines.insert(default.clone(), e);
+                                }
                             }
-                            Err(e) => {
+                            Ok(Err(e)) => {
                                 // keep serving: run_batch retries per
                                 // group and errors the affected jobs
                                 eprintln!("shard {sid}: engine init failed: {e:#}");
                             }
+                            Err(_) => {
+                                let _ = wpool.respawn_dead();
+                            }
                         }
                     }
-                    while let Some(batch) = b.next_batch() {
+                    loop {
+                        if m.health.get(sid).is_some_and(ShardHealth::is_quarantined) {
+                            // quarantined: bounce queued jobs immediately
+                            // (nobody should wait out a rebuild) ...
+                            for job in b.take_pending() {
+                                let p = job.payload;
+                                let name =
+                                    p.model.clone().unwrap_or_else(|| default.clone());
+                                let ms = m.model(&name);
+                                answer_err(p, ErrCode::Internal, &ms, &m);
+                            }
+                            if b.is_closed() {
+                                // draining while quarantined: exit rather
+                                // than spin on rebuilds forever
+                                break;
+                            }
+                            // ... then rebuild the whole execution
+                            // substrate: fresh worker pool, fresh engines
+                            // (and thus fresh arenas), and prove it with a
+                            // self-test inference before readmission
+                            engines.clear();
+                            wpool = WorkerPool::new(resolve_threads(eopt.num_threads));
+                            let pool = wpool.clone();
+                            let rebuilt = catch_unwind(AssertUnwindSafe(|| {
+                                let mut e = InferenceEngine::for_model_pooled(
+                                    &default,
+                                    backend,
+                                    WEIGHT_SEED,
+                                    eopt,
+                                    Some(pool),
+                                )?;
+                                e.self_test()?;
+                                Ok::<_, anyhow::Error>(e)
+                            }));
+                            match rebuilt {
+                                Ok(Ok(e)) => {
+                                    engines.insert(default.clone(), e);
+                                    if let Some(h) = m.health.get(sid) {
+                                        h.readmit();
+                                    }
+                                    m.recoveries.fetch_add(1, Ordering::Relaxed);
+                                }
+                                // rebuild failed or panicked (faults still
+                                // firing): back off and try again
+                                _ => thread::sleep(hp.rebuild_backoff),
+                            }
+                            continue;
+                        }
+                        let Some(batch) = b.next_batch() else { break };
                         m.record_batch(batch.len());
                         m.shard(sid).record_batch(batch.len());
-                        run_batch(sid, &mut engines, &default, backend, eopt, &wpool, batch, &m);
+                        run_batch(
+                            sid, &mut engines, &default, backend, eopt, &wpool, batch,
+                            &m, &hp,
+                        );
                     }
                 })?;
             handles.push(handle);
@@ -211,6 +374,7 @@ impl ShardPool {
             default_model: default,
             spill_threshold: policy.max_batch.max(1),
             engine_threads: resolve_threads(eopt.num_threads),
+            predicted: Mutex::new(HashMap::new()),
         })
     }
 
@@ -236,6 +400,25 @@ impl ShardPool {
         Ok((canon, self.engine_threads, explain_rows(&net, &prog, &plan)))
     }
 
+    /// Plan-predicted single-request wall time for `model` (canonical
+    /// name) at this pool's engine width, nanoseconds — the admission
+    /// controller's deadline estimate, from the same `SwCost`/`StepPlan`
+    /// model `EXPLAIN` renders. Memoized per model; 0 for unknown models
+    /// (admission rejects those earlier on the parse path).
+    pub fn predicted_ns(&self, model: &str) -> u64 {
+        if let Some(&ns) = plock(&self.predicted).get(model) {
+            return ns;
+        }
+        let ns = workload::by_name(model)
+            .and_then(|net| cached_program(&net).ok())
+            .map(|prog| {
+                prog.plans_for(self.engine_threads, true, false).predicted_wall_ns(&prog)
+            })
+            .unwrap_or(0);
+        plock(&self.predicted).insert(model.to_string(), ns);
+        ns
+    }
+
     /// Current queue depth of every shard (sampled, not atomic across
     /// shards — for dispatch heuristics and introspection).
     pub fn depths(&self) -> Vec<usize> {
@@ -249,19 +432,39 @@ impl ShardPool {
 
     /// Route and enqueue one request; returns the shard it landed on.
     /// `Err` means the request was **not** queued and its reply channel
-    /// will never fire — answer the client immediately.
+    /// will never fire — answer the client immediately. Quarantined
+    /// shards are bypassed; a request with a deadline is refused when
+    /// the predicted execution cost plus a queue-wait estimate
+    /// (`depth × cost`) exceeds its budget.
     pub fn submit(&self, p: Pending) -> Result<usize, Admission> {
         if self.draining.load(Ordering::Acquire) {
             self.metrics.dropped_shutdown.fetch_add(1, Ordering::Relaxed);
             return Err(Admission::ShuttingDown);
         }
         let n = self.shards.len();
-        let home = {
+        let (home, exec_ns) = {
             let model = p.model.as_deref().unwrap_or(&self.default_model);
-            home_shard(model, n)
+            let exec = if p.deadline.is_some() { self.predicted_ns(model) } else { 0 };
+            (home_shard(model, n), exec)
         };
         let depths = self.depths();
-        let chosen = route(home, &depths, self.spill_threshold);
+        let quarantined: Vec<bool> =
+            self.metrics.health.iter().map(ShardHealth::is_quarantined).collect();
+        let Some(chosen) = route_healthy(home, &depths, self.spill_threshold, &quarantined)
+        else {
+            self.metrics.dropped_unhealthy.fetch_add(1, Ordering::Relaxed);
+            return Err(Admission::Unhealthy);
+        };
+        if let Some(d) = p.deadline {
+            // wait estimate: everything already queued ahead of us on the
+            // chosen shard, each costing one predicted execution
+            let wait_ns = (depths[chosen] as u64).saturating_mul(exec_ns);
+            let budget = d.as_nanos().min(u64::MAX as u128) as u64;
+            if exec_ns.saturating_add(wait_ns) > budget {
+                self.metrics.dropped_deadline.fetch_add(1, Ordering::Relaxed);
+                return Err(Admission::Deadline);
+            }
+        }
         match self.shards[chosen].try_push(p) {
             Ok(()) => {
                 if chosen != home {
@@ -275,22 +478,23 @@ impl ShardPool {
             }
             Err(PushError::Full(p)) => {
                 // the routed shard filled under us: one fallback attempt
-                // at the least-loaded other shard, then BUSY
+                // at the least-loaded other *healthy* shard, then BUSY
                 let (mut alt, mut best) = (chosen, usize::MAX);
                 for (i, b) in self.shards.iter().enumerate() {
+                    if i == chosen || quarantined.get(i).copied().unwrap_or(false) {
+                        continue;
+                    }
                     let d = b.depth();
-                    if i != chosen && d < best {
+                    if d < best {
                         alt = i;
                         best = d;
                     }
                 }
-                if alt != chosen {
-                    if self.shards[alt].try_push(p).is_ok() {
-                        if alt != home {
-                            self.metrics.spills.fetch_add(1, Ordering::Relaxed);
-                        }
-                        return Ok(alt);
+                if alt != chosen && self.shards[alt].try_push(p).is_ok() {
+                    if alt != home {
+                        self.metrics.spills.fetch_add(1, Ordering::Relaxed);
                     }
+                    return Ok(alt);
                 }
                 self.metrics.dropped_queue_full.fetch_add(1, Ordering::Relaxed);
                 Err(Admission::Busy)
@@ -306,17 +510,20 @@ impl ShardPool {
         for b in &self.shards {
             b.close();
         }
-        let handles = std::mem::take(&mut *self.handles.lock().unwrap());
+        let handles = std::mem::take(&mut *plock(&self.handles));
         for h in handles {
             let _ = h.join();
         }
     }
 }
 
-/// Execute one dynamic batch on a shard: group jobs by model, run each
-/// group as one parallel unit on the shard's persistent worker pool,
-/// fall back to per-job retries if a group fails (Hlo path), answer
-/// every reply channel, and roll the arena gauges into the per-model
+/// Execute one dynamic batch on a shard: group jobs by model, expire
+/// jobs whose deadline already passed in the queue, run each group as
+/// one parallel unit on the shard's persistent worker pool (under
+/// `catch_unwind` — a panicking group answers `ERR internal`, not a
+/// dead thread), fall back to per-job retries if a group fails cleanly
+/// (Hlo path), answer every reply channel, record the outcome in the
+/// shard's health slot, and roll the arena gauges into the per-model
 /// stats.
 #[allow(clippy::too_many_arguments)]
 fn run_batch(
@@ -328,6 +535,7 @@ fn run_batch(
     wpool: &Arc<WorkerPool>,
     batch: Vec<Job<Pending>>,
     m: &Metrics,
+    hp: &HealthPolicy,
 ) {
     // group by model, preserving arrival order within a group
     let mut groups: HashMap<String, Vec<Pending>> = HashMap::new();
@@ -339,61 +547,135 @@ fn run_batch(
     for (model, jobs) in groups {
         let ms = m.model(&model);
         ms.requests.fetch_add(jobs.len() as u64, Ordering::Relaxed);
-        let engine = match engines.entry(model.clone()) {
-            std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
-            std::collections::hash_map::Entry::Vacant(slot) => {
-                match InferenceEngine::for_model_pooled(
+        // deadline expiry: jobs that waited out their budget in the
+        // queue answer `ERR deadline` without executing
+        let mut live = Vec::with_capacity(jobs.len());
+        for p in jobs {
+            if p.deadline.is_some_and(|d| p.enqueued.elapsed() > d) {
+                answer_err(p, ErrCode::Deadline, &ms, m);
+            } else {
+                live.push(p);
+            }
+        }
+        let jobs = live;
+        if jobs.is_empty() {
+            continue;
+        }
+        if !engines.contains_key(&model) {
+            let built = catch_unwind(AssertUnwindSafe(|| {
+                InferenceEngine::for_model_pooled(
                     &model,
                     backend,
                     WEIGHT_SEED,
                     eopt,
                     Some(wpool.clone()),
-                ) {
-                    Ok(e) => slot.insert(e),
-                    Err(err) => {
-                        eprintln!("shard {sid}: engine for `{model}` failed: {err:#}");
-                        for p in jobs {
-                            answer_err(p, &ms, m);
-                        }
-                        continue;
+                )
+            }));
+            match built {
+                Ok(Ok(e)) => {
+                    engines.insert(model.clone(), e);
+                }
+                Ok(Err(err)) => {
+                    // clean construction failure (bad model/backend
+                    // combination): an error, not a shard-health event
+                    eprintln!("shard {sid}: engine for `{model}` failed: {err:#}");
+                    for p in jobs {
+                        answer_err(p, ErrCode::Internal, &ms, m);
                     }
+                    continue;
+                }
+                Err(_) => {
+                    // construction panicked: contain, answer, count it
+                    // against shard health like any other faulted batch
+                    m.panics_caught.fetch_add(1, Ordering::Relaxed);
+                    m.worker_respawns
+                        .fetch_add(wpool.respawn_dead() as u64, Ordering::Relaxed);
+                    for p in jobs {
+                        answer_err(p, ErrCode::Internal, &ms, m);
+                    }
+                    record_shard_failure(sid, m, hp);
+                    continue;
                 }
             }
-        };
+        }
         ms.batches.fetch_add(1, Ordering::Relaxed);
-        let inputs: Vec<_> = jobs.iter().map(|p| engine.input(p.seed)).collect();
-        let t0 = Instant::now();
-        let outcome = engine.infer_batch(&inputs);
-        let wall = t0.elapsed().as_nanos() as u64;
-        m.record_batch_wall(wall);
-        m.shard(sid).wall_ns.fetch_add(wall, Ordering::Relaxed);
-        ms.wall_ns.fetch_add(wall, Ordering::Relaxed);
-        // arena gauges: high-water footprint + grow events (0 once warm)
-        let (arena_peak, arena_grow) = engine.take_arena_stats();
-        ms.arena_peak_bytes.fetch_max(arena_peak, Ordering::Relaxed);
-        ms.arena_allocs.fetch_add(arena_grow, Ordering::Relaxed);
-        // measured utilization: busy lane time vs lane capacity over the
-        // planned sections this batch executed (STATS `util_pct`)
-        let (busy, cap) = engine.take_util_stats();
-        ms.busy_ns.fetch_add(busy, Ordering::Relaxed);
-        ms.cap_ns.fetch_add(cap, Ordering::Relaxed);
-        match outcome {
-            Ok(infs) => {
-                for (p, inf) in jobs.into_iter().zip(infs) {
-                    answer_ok(p, inf.class, sid, &ms, m);
+        let mut group_panicked = false;
+        {
+            let engine = engines.get_mut(&model).expect("engine just ensured");
+            let inputs: Vec<_> = jobs.iter().map(|p| engine.input(p.seed)).collect();
+            let t0 = Instant::now();
+            let outcome = catch_unwind(AssertUnwindSafe(|| engine.infer_batch(&inputs)));
+            let wall = t0.elapsed().as_nanos() as u64;
+            m.record_batch_wall(wall);
+            m.shard(sid).wall_ns.fetch_add(wall, Ordering::Relaxed);
+            ms.wall_ns.fetch_add(wall, Ordering::Relaxed);
+            // arena gauges: high-water footprint + grow events (0 once
+            // warm). Taken even after a panic — a faulted batch may have
+            // grown arenas before failing.
+            let (arena_peak, arena_grow) = engine.take_arena_stats();
+            ms.arena_peak_bytes.fetch_max(arena_peak, Ordering::Relaxed);
+            ms.arena_allocs.fetch_add(arena_grow, Ordering::Relaxed);
+            // measured utilization: busy lane time vs lane capacity over
+            // the planned sections this batch executed (STATS `util_pct`)
+            let (busy, cap) = engine.take_util_stats();
+            ms.busy_ns.fetch_add(busy, Ordering::Relaxed);
+            ms.cap_ns.fetch_add(cap, Ordering::Relaxed);
+            match outcome {
+                Ok(Ok(infs)) => {
+                    for (p, inf) in jobs.into_iter().zip(infs) {
+                        answer_ok(p, inf.class, sid, &ms, m);
+                    }
                 }
-            }
-            Err(_) => {
-                // batch execution short-circuits on the first bad
-                // inference (Hlo path): retry per job so the good ones
-                // still answer and only real failures error
-                for (p, input) in jobs.into_iter().zip(&inputs) {
-                    match engine.infer(input) {
-                        Ok(inf) => answer_ok(p, inf.class, sid, &ms, m),
-                        Err(_) => answer_err(p, &ms, m),
+                Ok(Err(_)) => {
+                    // batch execution failed cleanly on some inference
+                    // (Hlo path): retry per job so the good ones still
+                    // answer — but stop retrying if a retry panics
+                    for (p, input) in jobs.into_iter().zip(&inputs) {
+                        if group_panicked {
+                            answer_err(p, ErrCode::Internal, &ms, m);
+                            continue;
+                        }
+                        match catch_unwind(AssertUnwindSafe(|| engine.infer(input))) {
+                            Ok(Ok(inf)) => answer_ok(p, inf.class, sid, &ms, m),
+                            Ok(Err(_)) => answer_err(p, ErrCode::Internal, &ms, m),
+                            Err(_) => {
+                                group_panicked = true;
+                                answer_err(p, ErrCode::Internal, &ms, m);
+                            }
+                        }
+                    }
+                }
+                Err(_) => {
+                    // the whole group panicked (workers contained their
+                    // chunks; the submitter re-raised PooledJobPanic):
+                    // every job answers ERR internal, the thread lives
+                    group_panicked = true;
+                    for p in jobs {
+                        answer_err(p, ErrCode::Internal, &ms, m);
                     }
                 }
             }
+        }
+        if group_panicked {
+            m.panics_caught.fetch_add(1, Ordering::Relaxed);
+            m.worker_respawns.fetch_add(wpool.respawn_dead() as u64, Ordering::Relaxed);
+            // drop the engine whose run was torn mid-flight: a fresh
+            // build is cheap relative to a faulted batch, and it clears
+            // any executor-lane state a panic left behind
+            engines.remove(&model);
+            record_shard_failure(sid, m, hp);
+        } else if let Some(h) = m.health.get(sid) {
+            h.record_ok();
+        }
+    }
+}
+
+/// Count one failed batch against shard health, bumping the quarantine
+/// counter when this failure newly trips the threshold.
+fn record_shard_failure(sid: usize, m: &Metrics, hp: &HealthPolicy) {
+    if let Some(h) = m.health.get(sid) {
+        if h.record_failure(hp) {
+            m.quarantines.fetch_add(1, Ordering::Relaxed);
         }
     }
 }
@@ -406,14 +688,14 @@ fn answer_ok(p: Pending, class: usize, sid: usize, ms: &ModelStats, m: &Metrics)
     m.shard(sid).latency.record(total_us);
     ms.latency.record(total_us);
     m.responses.fetch_add(1, Ordering::Relaxed);
-    let _ = p.reply.send((class, total_us));
+    let _ = p.reply.send(ShardReply::Ok { class, latency_us: total_us });
 }
 
-/// Answer one job as failed (`usize::MAX` class) and count the error.
-fn answer_err(p: Pending, ms: &ModelStats, m: &Metrics) {
+/// Answer one job as failed with a typed code and count the error.
+fn answer_err(p: Pending, code: ErrCode, ms: &ModelStats, m: &Metrics) {
     m.errors.fetch_add(1, Ordering::Relaxed);
     ms.errors.fetch_add(1, Ordering::Relaxed);
-    let _ = p.reply.send((usize::MAX, 0));
+    let _ = p.reply.send(ShardReply::Err(code));
 }
 
 #[cfg(test)]
@@ -455,5 +737,42 @@ mod tests {
         assert_eq!(route(3, &[], 4), 0);
         assert_eq!(route(9, &[1, 1], 4), 1, "out-of-range home clamps");
         assert_eq!(route(0, &[0], 1), 0);
+    }
+
+    #[test]
+    fn route_healthy_matches_route_when_nothing_is_quarantined() {
+        let none = [false, false, false, false];
+        for (home, depths, st) in [
+            (2usize, vec![9, 9, 1, 9], 4usize),
+            (0, vec![5, 3, 1, 2], 4),
+            (0, vec![4, 4, 4, 4], 4),
+        ] {
+            assert_eq!(
+                route_healthy(home, &depths, st, &none),
+                Some(route(home, &depths, st)),
+                "home={home} depths={depths:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn route_healthy_bypasses_quarantined_shards() {
+        // healthy home stays preferred even with a quarantined sibling
+        let q = [false, true, false, false];
+        assert_eq!(route_healthy(0, &[1, 0, 0, 0], 4, &q), Some(0));
+        // quarantined home: go to the least-loaded healthy shard
+        let q = [true, false, false, false];
+        assert_eq!(route_healthy(0, &[0, 7, 2, 5], 4, &q), Some(2));
+        // quarantined least-loaded shard is skipped on spill
+        let q = [false, true, false, false];
+        assert_eq!(route_healthy(0, &[9, 0, 3, 5], 4, &q), Some(2));
+        // deep-everywhere ties keep the healthy home
+        let q = [false, false, false, true];
+        assert_eq!(route_healthy(0, &[4, 4, 4, 0], 4, &q), Some(0));
+    }
+
+    #[test]
+    fn route_healthy_returns_none_when_everything_is_quarantined() {
+        assert_eq!(route_healthy(1, &[1, 2, 3], 4, &[true, true, true]), None);
     }
 }

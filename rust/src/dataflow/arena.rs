@@ -71,6 +71,10 @@ impl ActivationArena {
 /// program-wide maximum, so this fires once per slot per executor.
 pub(crate) fn ensure_len(buf: &mut Vec<i32>, len: usize, grow_events: &mut u64) {
     if buf.len() < len {
+        // Chaos injection point: a grow can be made to fail (panic) to
+        // exercise arena rebuild on shard recovery. Steady-state serving
+        // never reaches this branch, so the disabled-path cost is zero.
+        crate::util::fault::on_arena_grow();
         *grow_events += 1;
         buf.resize(len, 0);
     }

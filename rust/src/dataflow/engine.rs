@@ -332,6 +332,7 @@ impl Engine {
     ) {
         if plan.split == Split::Serial || plan.chunks.len() <= 1 || self.threads <= 1 {
             let t0 = timer.map(|_| Instant::now());
+            crate::util::fault::on_chunk(0);
             body(0, out);
             if let (Some(tm), Some(t0)) = (timer, t0) {
                 tm.record_serial(t0.elapsed().as_nanos() as u64, self.threads);
@@ -350,6 +351,7 @@ impl Engine {
         if let Some(pool) = &self.pool {
             let base = SendPtr(out.as_mut_ptr());
             pool.run(chunks.len(), &|ci| {
+                crate::util::fault::on_chunk(ci);
                 let (start, rows) = chunks[ci];
                 // SAFETY: the plan's chunks partition `out` into
                 // disjoint row ranges (pinned by the schedule partition
@@ -366,12 +368,13 @@ impl Engine {
         } else {
             std::thread::scope(|s| {
                 let mut rest = &mut *out;
-                for &(start, rows) in chunks {
+                for (ci, &(start, rows)) in chunks.iter().enumerate() {
                     let (head, tail) = rest.split_at_mut(rows * rowlen);
                     rest = tail;
                     let b = &body;
                     let busy = &busy;
                     s.spawn(move || {
+                        crate::util::fault::on_chunk(ci);
                         let c0 = measure.then(Instant::now);
                         b(start, head);
                         if let Some(c0) = c0 {

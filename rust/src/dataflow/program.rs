@@ -62,6 +62,7 @@ use crate::lns::logquant::ZERO_CODE;
 use crate::models::layer::{Network, Op};
 use crate::models::runner::FusedNet;
 use crate::tensor::Tensor3;
+use crate::util::sync::plock;
 
 /// Where a step reads a tensor: the request input (`slot == None`) or
 /// an arena slot holding an earlier step's output. Dims are the
@@ -379,12 +380,12 @@ impl ModelProgram {
         static PLAN_CACHE: OnceLock<PlanCache> = OnceLock::new();
         let cache = PLAN_CACHE.get_or_init(Default::default);
         let key = (self.fingerprint, threads, pooled, forced);
-        if let Some(p) = cache.lock().unwrap().get(&key) {
+        if let Some(p) = plock(cache).get(&key) {
             return p.clone();
         }
         let p = Arc::new(ProgramPlan::compile(self, threads, pooled, forced));
         // racing planners agree (planning is deterministic)
-        cache.lock().unwrap().entry(key).or_insert(p).clone()
+        plock(cache).entry(key).or_insert(p).clone()
     }
 }
 
@@ -427,6 +428,30 @@ impl ProgramPlan {
     /// nothing from lockstep nesting).
     pub fn parallel_steps(&self) -> usize {
         self.steps.iter().filter(|p| p.split == Split::Rows).count()
+    }
+
+    /// Predicted single-request wall time for `prog` under this plan,
+    /// in nanoseconds — the admission controller's deadline estimate.
+    /// Serial steps cost `work × ns_per_mac`; row-split steps divide
+    /// that by the effective parallelism the planner already computed
+    /// (`threads × predicted_util`). Same cost model the plan was
+    /// compiled with, so the estimate and the split decisions agree.
+    pub fn predicted_wall_ns(&self, prog: &ModelProgram) -> u64 {
+        debug_assert_eq!(prog.steps.len(), self.steps.len(), "plan/program mismatch");
+        let cost = SwCost::for_substrate(self.pooled);
+        self.steps
+            .iter()
+            .map(|p| {
+                let serial = p.work as f64 * cost.ns_per_mac;
+                match p.split {
+                    Split::Rows => {
+                        let eff = (p.threads.max(1) as f64) * p.predicted_util.max(1e-6);
+                        (serial / eff) as u64
+                    }
+                    Split::Serial => serial as u64,
+                }
+            })
+            .sum()
     }
 }
 
@@ -513,12 +538,12 @@ static PROGRAM_CACHE: OnceLock<ProgramCache> = OnceLock::new();
 pub fn cached_program(net: &Network) -> Result<Arc<ModelProgram>, String> {
     let cache = PROGRAM_CACHE.get_or_init(Default::default);
     let key = (net.name.clone(), fingerprint(net));
-    if let Some(p) = cache.lock().unwrap().get(&key) {
+    if let Some(p) = plock(cache).get(&key) {
         return Ok(p.clone());
     }
     let p = Arc::new(ModelProgram::compile(net)?);
     // racing compilers agree (compile is deterministic); first insert wins
-    Ok(cache.lock().unwrap().entry(key).or_insert(p).clone())
+    Ok(plock(cache).entry(key).or_insert(p).clone())
 }
 
 /// Resolve an operand to its backing slice.
@@ -680,6 +705,8 @@ impl ProgramExecutor {
         arena.reserve_slots(prog.slot_sizes.len());
         let threads = eng.num_threads();
         for (si, step) in prog.steps.iter().enumerate() {
+            // publish the step coordinate for deterministic fault injection
+            crate::util::fault::set_step(si);
             // 1. stage the padded/merged input when the plan says so
             if let Input::Staged(sp) = &step.input {
                 let mut buf = std::mem::take(&mut arena.slots[sp.slot]);
@@ -835,6 +862,8 @@ pub fn run_batch_lockstep(
     let mut ctx_buf: Vec<ElemCtx> = Vec::with_capacity(k);
     for (si, step) in prog.steps.iter().enumerate() {
         let sp = &plan.steps[si];
+        // publish the step coordinate for deterministic fault injection
+        crate::util::fault::set_step(si);
         // phase 1 (submitting thread): stage/encode every element and
         // take its output + column buffers out of the arena
         dsts.clear();
@@ -889,6 +918,7 @@ pub fn run_batch_lockstep(
             let busy = AtomicU64::new(0);
             let t0 = Instant::now();
             let job = |ci: usize| {
+                crate::util::fault::on_chunk(ci);
                 let (e, c) = (ci / per, ci % per);
                 let ctx = &ctxs.0[e];
                 let (start, rows) =

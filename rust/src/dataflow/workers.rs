@@ -20,13 +20,36 @@
 //! Re-entrancy: if `run` is called while another job is active (e.g. a
 //! nested parallel section from inside a chunk body), the nested call
 //! executes its chunks inline on the calling thread — the pool never
-//! deadlocks on itself. Panics inside a chunk body abort the process
-//! (std policy for panics that cross a worker thread), so a poisoned
-//! job cannot silently hang the submitter.
+//! deadlocks on itself.
+//!
+//! Panic containment: a panic inside a chunk body is caught on whichever
+//! lane ran it (worker threads survive and park for the next job), the
+//! job still drains every remaining chunk, and `run` then re-raises the
+//! failure *on the submitting thread* as a [`PooledJobPanic`] carrying
+//! the panicked-chunk count. The shard supervisor catches that, answers
+//! the affected requests `ERR internal`, and decides whether to
+//! quarantine the shard — a panic's blast radius is one job, not one
+//! pool. All pool locks go through the poison-recovering helpers in
+//! [`crate::util::sync`], so even a panic at an unexpected point cannot
+//! permanently wedge `run`/shutdown paths.
 
 use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
+
+use crate::util::sync::{plock, pwait};
+
+/// Panic payload re-raised by [`WorkerPool::run`] on the submitting
+/// thread after a job with one or more panicked chunks has fully
+/// drained. Supervisors downcast to this to distinguish "a request's
+/// chunks failed" from a panic in the supervisor itself.
+#[derive(Debug)]
+pub struct PooledJobPanic {
+    /// How many chunks of the job panicked.
+    pub chunks: usize,
+}
 
 /// Type-erased pointer to the current job's chunk body. The raw pointer
 /// is only dereferenced between job publication and completion, a window
@@ -38,9 +61,23 @@ struct TaskRef(*const (dyn Fn(usize) + Sync));
 // alive for the whole time any worker can observe the pointer.
 unsafe impl Send for TaskRef {}
 
+/// Type-erased pointer to the submitting thread's panicked-chunk
+/// counter. Published and retired together with [`TaskRef`], so the
+/// same liveness argument applies: `run` owns the counter on its stack
+/// and does not return until the job is fully drained.
+#[derive(Clone, Copy)]
+struct PanicsRef(*const AtomicUsize);
+
+// SAFETY: see TaskRef — the pointee is an atomic (Sync) kept alive by
+// the submitter for as long as any worker can observe the pointer.
+unsafe impl Send for PanicsRef {}
+
 struct State {
     /// The active job's body, `None` when idle.
     task: Option<TaskRef>,
+    /// The active job's panicked-chunk counter (on the submitter's
+    /// stack); set and cleared together with `task`.
+    panics: Option<PanicsRef>,
     /// Monotonic job counter: lets a submitter recognize that the
     /// counters it is looking at belong to a *different* job (its own
     /// having already completed) and must not be touched.
@@ -72,6 +109,13 @@ pub struct WorkerPool {
     handles: Mutex<Vec<thread::JoinHandle<()>>>,
 }
 
+fn spawn_worker(shared: Arc<Shared>, name: String) -> thread::JoinHandle<()> {
+    thread::Builder::new()
+        .name(name)
+        .spawn(move || worker_loop(&shared))
+        .expect("spawn engine worker")
+}
+
 impl WorkerPool {
     /// Build a pool with `threads` total execution lanes (`threads - 1`
     /// parked workers; the thread calling [`WorkerPool::run`] is the
@@ -82,6 +126,7 @@ impl WorkerPool {
         let shared = Arc::new(Shared {
             m: Mutex::new(State {
                 task: None,
+                panics: None,
                 epoch: 0,
                 next_chunk: 0,
                 chunks: 0,
@@ -93,12 +138,7 @@ impl WorkerPool {
         });
         let mut handles = Vec::with_capacity(threads.saturating_sub(1));
         for i in 1..threads {
-            let sh = shared.clone();
-            let h = thread::Builder::new()
-                .name(format!("engine-worker-{i}"))
-                .spawn(move || worker_loop(&sh))
-                .expect("spawn engine worker");
-            handles.push(h);
+            handles.push(spawn_worker(shared.clone(), format!("engine-worker-{i}")));
         }
         Arc::new(WorkerPool { shared, threads, handles: Mutex::new(handles) })
     }
@@ -108,11 +148,49 @@ impl WorkerPool {
         self.threads
     }
 
+    /// Join any worker threads that have died and spawn replacements,
+    /// returning how many were respawned. Workers catch chunk panics
+    /// and survive them, so this normally returns 0 — it exists as the
+    /// supervisor's belt-and-braces repair step after a caught fault
+    /// (a worker can still die to a double panic or a panic outside
+    /// the chunk guard).
+    pub fn respawn_dead(&self) -> usize {
+        let mut handles = plock(&self.handles);
+        if plock(&self.shared.m).shutdown {
+            return 0;
+        }
+        let mut respawned = 0;
+        let mut alive = Vec::with_capacity(handles.len());
+        for h in handles.drain(..) {
+            if h.is_finished() {
+                let name = h
+                    .thread()
+                    .name()
+                    .unwrap_or("engine-worker-respawn")
+                    .to_string();
+                let _ = h.join();
+                alive.push(spawn_worker(self.shared.clone(), name));
+                respawned += 1;
+            } else {
+                alive.push(h);
+            }
+        }
+        *handles = alive;
+        respawned
+    }
+
     /// Execute `body(0..chunks)` across the pool; returns when every
     /// chunk has completed. The submitting thread participates, so a
     /// 1-thread pool degrades to a plain serial loop. Chunk bodies must
     /// only touch disjoint data per chunk index (the callers in
     /// `engine.rs` hand out disjoint row/item ranges).
+    ///
+    /// If any chunk panics, the panic is caught on its lane, the job
+    /// still drains, and this call then panics on the submitting thread
+    /// with a [`PooledJobPanic`] payload. Inline fallback paths
+    /// (1-thread pools, single-chunk jobs, nested submissions) let the
+    /// original panic propagate on the submitter directly — same blast
+    /// radius, original payload.
     pub fn run(&self, chunks: usize, body: &(dyn Fn(usize) + Sync)) {
         if chunks == 0 {
             return;
@@ -130,8 +208,13 @@ impl WorkerPool {
                 body,
             ) as *const _
         });
+        // Panicked-chunk tally for THIS job, on this stack frame.
+        // Workers reach it through the `PanicsRef` published alongside
+        // the task; we read it only after the job has fully drained.
+        let my_panics = AtomicUsize::new(0);
+        let my_epoch;
         {
-            let mut st = self.shared.m.lock().unwrap();
+            let mut st = plock(&self.shared.m);
             if st.task.is_some() {
                 // nested submission (a chunk body re-entered the pool):
                 // run inline rather than deadlock on our own job
@@ -142,35 +225,45 @@ impl WorkerPool {
                 return;
             }
             st.task = Some(task);
+            st.panics = Some(PanicsRef(&my_panics as *const _));
             st.epoch += 1;
             st.chunks = chunks;
             st.next_chunk = 0;
-            let my_epoch = st.epoch;
+            my_epoch = st.epoch;
             self.shared.work_cv.notify_all();
+        }
+        // the submitting thread is a worker too — but only for ITS
+        // job: once the epoch moves on, these counters belong to a
+        // later submitter's job and must not be touched
+        loop {
+            let mut st = plock(&self.shared.m);
+            let live = st.epoch == my_epoch && st.task.is_some();
+            if !live || st.next_chunk >= st.chunks {
+                break;
+            }
+            let c = st.next_chunk;
+            st.next_chunk += 1;
+            st.active += 1;
             drop(st);
-            // the submitting thread is a worker too — but only for ITS
-            // job: once the epoch moves on, these counters belong to a
-            // later submitter's job and must not be touched
-            loop {
-                let mut st = self.shared.m.lock().unwrap();
-                let live = st.epoch == my_epoch && st.task.is_some();
-                if !live || st.next_chunk >= st.chunks {
-                    break;
-                }
-                let c = st.next_chunk;
-                st.next_chunk += 1;
-                st.active += 1;
-                drop(st);
-                body(c);
-                let mut st = self.shared.m.lock().unwrap();
-                st.active -= 1;
-                finish_if_done(&self.shared, &mut st);
+            if catch_unwind(AssertUnwindSafe(|| body(c))).is_err() {
+                my_panics.fetch_add(1, Ordering::Relaxed);
             }
-            // wait out the chunks other workers still hold
-            let mut st = self.shared.m.lock().unwrap();
-            while st.epoch == my_epoch && st.task.is_some() {
-                st = self.shared.done_cv.wait(st).unwrap();
-            }
+            let mut st = plock(&self.shared.m);
+            st.active -= 1;
+            finish_if_done(&self.shared, &mut st);
+        }
+        // wait out the chunks other workers still hold
+        let mut st = plock(&self.shared.m);
+        while st.epoch == my_epoch && st.task.is_some() {
+            st = pwait(&self.shared.done_cv, st);
+        }
+        drop(st);
+        // Job fully drained: no lane can touch `my_panics` anymore.
+        // Surface caught chunk panics to the caller now that pool state
+        // is clean — the pool stays reusable, the caller decides policy.
+        let panicked = my_panics.load(Ordering::Relaxed);
+        if panicked > 0 {
+            std::panic::panic_any(PooledJobPanic { chunks: panicked });
         }
     }
 }
@@ -184,11 +277,11 @@ impl fmt::Debug for WorkerPool {
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         {
-            let mut st = self.shared.m.lock().unwrap();
+            let mut st = plock(&self.shared.m);
             st.shutdown = true;
             self.shared.work_cv.notify_all();
         }
-        for h in self.handles.lock().unwrap().drain(..) {
+        for h in plock(&self.handles).drain(..) {
             let _ = h.join();
         }
     }
@@ -199,12 +292,13 @@ impl Drop for WorkerPool {
 fn finish_if_done(shared: &Shared, st: &mut State) {
     if st.task.is_some() && st.next_chunk >= st.chunks && st.active == 0 {
         st.task = None;
+        st.panics = None;
         shared.done_cv.notify_all();
     }
 }
 
 fn worker_loop(shared: &Shared) {
-    let mut st = shared.m.lock().unwrap();
+    let mut st = plock(&shared.m);
     loop {
         if st.shutdown {
             return;
@@ -212,19 +306,26 @@ fn worker_loop(shared: &Shared) {
         if let Some(task) = st.task {
             if st.next_chunk < st.chunks {
                 let c = st.next_chunk;
+                let panics = st.panics;
                 st.next_chunk += 1;
                 st.active += 1;
                 drop(st);
                 // SAFETY: `run` keeps the closure (and its borrows)
                 // alive until this chunk — counted in `active` — retires.
-                unsafe { (*task.0)(c) };
-                st = shared.m.lock().unwrap();
+                let r = catch_unwind(AssertUnwindSafe(|| unsafe { (*task.0)(c) }));
+                if let Some(p) = panics.filter(|_| r.is_err()) {
+                    // SAFETY: published with the task; the submitter
+                    // keeps the counter alive until active == 0, and
+                    // this lane is still counted in `active`.
+                    unsafe { (*p.0).fetch_add(1, Ordering::Relaxed) };
+                }
+                st = plock(&shared.m);
                 st.active -= 1;
                 finish_if_done(shared, &mut st);
                 continue;
             }
         }
-        st = shared.work_cv.wait(st).unwrap();
+        st = pwait(&shared.work_cv, st);
     }
 }
 
@@ -388,5 +489,69 @@ mod tests {
         let pool = WorkerPool::new(0);
         assert_eq!(pool.threads(), 1);
         pool.run(0, &|_| panic!("no chunks, no calls"));
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_chunk_and_stays_usable() {
+        crate::util::fault::silence_injected_panics();
+        let pool = WorkerPool::new(4);
+        let ran = AtomicUsize::new(0);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(16, &|c| {
+                if c == 5 {
+                    std::panic::panic_any(crate::util::fault::InjectedFault("test"));
+                }
+                ran.fetch_add(1, Ordering::Relaxed);
+            });
+        }));
+        // The failure surfaces on the submitter as PooledJobPanic...
+        let payload = r.expect_err("panicking chunk must surface on the submitter");
+        let pjp = payload
+            .downcast_ref::<PooledJobPanic>()
+            .expect("payload should be PooledJobPanic");
+        assert_eq!(pjp.chunks, 1);
+        // ...after the job drained: every other chunk still ran.
+        assert_eq!(ran.load(Ordering::Relaxed), 15);
+        // Workers caught the panic and survived.
+        assert_eq!(pool.respawn_dead(), 0, "no worker thread should have died");
+        // And the pool is immediately reusable.
+        let again = AtomicUsize::new(0);
+        pool.run(8, &|_| {
+            again.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(again.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn epoch_guard_holds_across_many_panicking_jobs() {
+        crate::util::fault::silence_injected_panics();
+        let pool = WorkerPool::new(3);
+        let ran = AtomicUsize::new(0);
+        let mut expect_ok = 0usize;
+        let mut expect_panics = 0usize;
+        for j in 0..600usize {
+            let chunks = 2 + (j % 4);
+            let poisoned = j % 7 == 0;
+            if poisoned {
+                expect_ok += chunks - 1;
+                expect_panics += 1;
+            } else {
+                expect_ok += chunks;
+            }
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                pool.run(chunks, &|c| {
+                    if poisoned && c == 0 {
+                        std::panic::panic_any(crate::util::fault::InjectedFault(
+                            "test",
+                        ));
+                    }
+                    ran.fetch_add(1, Ordering::Relaxed);
+                });
+            }));
+            assert_eq!(r.is_err(), poisoned, "job {j}");
+        }
+        assert_eq!(ran.load(Ordering::Relaxed), expect_ok);
+        assert!(expect_panics > 0);
+        assert_eq!(pool.respawn_dead(), 0);
     }
 }

@@ -23,10 +23,11 @@ use anyhow::{bail, Context, Result};
 
 use neuromax::arch::config::GridConfig;
 use neuromax::coordinator::batcher::BatchPolicy;
+use neuromax::coordinator::health::HealthState;
 use neuromax::coordinator::metrics::parse_model_gauge;
 use neuromax::coordinator::pipeline::{Backend, InferenceEngine};
 use neuromax::coordinator::reports;
-use neuromax::coordinator::server::{Client, Reply, Server};
+use neuromax::coordinator::server::{busy_backoff_us, Client, Reply, Server};
 use neuromax::coordinator::NetworkSchedule;
 use neuromax::dataflow::engine::resolve_threads;
 use neuromax::dataflow::{cached_program, explain_rows, EngineOptions, ScheduleOptions};
@@ -71,9 +72,15 @@ fn main() -> Result<()> {
                          [--secs N] [--batch N] [--wait-ms N] [--queue-cap N]\n\
                          [--threads N (0 = one per core)]\n\
                          [--shards N (0 = auto: cores / engine threads)]\n\
+                         [--chaos SPEC e.g. seed=1,panic=10,slow=5,slow_us=2000\n\
+                          — or set NEUROMAX_CHAOS; see docs/PROTOCOL.md]\n\
                  loadgen [--shards LIST e.g. 1,2,4] [--conns N] [--requests N]\n\
                          [--mix name:w,name:w] [--batch N] [--wait-ms N]\n\
                          [--queue-cap N] [--threads N] [--out PATH]\n\
+                         [--chaos  (deterministic fault-injection harness:\n\
+                          2 shards, injected panics/slow-chunks/torn replies,\n\
+                          quarantine + recovery check -> BENCH_faults.json)]\n\
+                         [--chaos-spec SPEC  (override the harness fault mix)]\n\
                  explain [MODEL | --model NAME] [--threads N (0 = one per core)]\n\
                          (compiled step-plan table: kernel, split, chunks,\n\
                           predicted hw/sw utilization — Fig. 19's software twin;\n\
@@ -271,6 +278,19 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     // default --threads 0 (one worker per core) that resolves to 1 shard,
     // the classic layout
     let shards: usize = opt(args, "--shards").and_then(|v| v.parse().ok()).unwrap_or(0);
+    // deterministic fault injection: `--chaos <spec>` wins, else the
+    // NEUROMAX_CHAOS env var; either way injected panics are silenced
+    // (they are contained and answered `ERR internal`, not crashes)
+    if let Some(raw) = opt(args, "--chaos") {
+        let spec = neuromax::util::fault::FaultSpec::parse(&raw)
+            .map_err(|e| anyhow::anyhow!("--chaos: {e}"))?;
+        neuromax::util::fault::silence_injected_panics();
+        neuromax::util::fault::install(spec);
+        println!("chaos: {spec:?}");
+    } else if let Some(plan) = neuromax::util::fault::install_from_env() {
+        neuromax::util::fault::silence_injected_panics();
+        println!("chaos (NEUROMAX_CHAOS): {:?}", plan.spec());
+    }
     let mut srv = Server::start_sharded(
         &addr,
         &model,
@@ -369,6 +389,11 @@ fn drive_loadgen(
                         t -= w;
                     }
                     let seed = (c * 100_000 + i) as u64;
+                    // BUSY backoff: jittered exponential (seeded — runs are
+                    // reproducible), reset once a request gets through, so
+                    // a burst of refusals doesn't turn into lockstep retry
+                    // storms at a fixed period
+                    let mut attempt = 0u32;
                     loop {
                         match cl.request(model, seed)? {
                             Reply::Ok { latency_us, .. } => {
@@ -377,7 +402,10 @@ fn drive_loadgen(
                             }
                             Reply::Busy(_) => {
                                 busy.fetch_add(1, Ordering::Relaxed);
-                                thread::sleep(Duration::from_micros(500));
+                                thread::sleep(Duration::from_micros(busy_backoff_us(
+                                    attempt, &mut rng,
+                                )));
+                                attempt += 1;
                             }
                             Reply::Err(e) => bail!("loadgen request failed: {e}"),
                         }
@@ -430,6 +458,9 @@ fn drive_loadgen(
 }
 
 fn cmd_loadgen(args: &[String]) -> Result<()> {
+    if flag(args, "--chaos") {
+        return cmd_loadgen_chaos(args);
+    }
     let shard_counts: Vec<usize> = opt(args, "--shards")
         .unwrap_or_else(|| "1,2,4".into())
         .split(',')
@@ -533,6 +564,277 @@ fn cmd_loadgen(args: &[String]) -> Result<()> {
             util_label.join(", "),
         );
     }
+    log.write_json(&out)?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+/// What the chaos driver thread measured (see [`cmd_loadgen_chaos`]).
+struct ChaosOutcome {
+    /// Requests that got *some* terminal outcome: OK, typed ERR, a BUSY
+    /// refusal, or a torn connection the client detected. Must equal
+    /// the request total — nothing may wedge.
+    answered: u64,
+    ok: u64,
+    /// `ERR internal` / `ERR deadline` replies.
+    errs: u64,
+    /// `BUSY deadline` / `BUSY no-healthy-shard` refusals.
+    busy_refused: u64,
+    /// Torn replies: connection dropped mid-`OK`, detected client-side.
+    torn_conns: u64,
+    p99_us: u64,
+    /// Blackout start → first quarantine trip.
+    blackout_ms: u64,
+    /// Faults cleared → every shard readmitted.
+    recovery_ms: u64,
+}
+
+/// `loadgen --chaos`: the deterministic fault-injection harness.
+///
+/// Three phases against a fresh in-process sharded server:
+/// 1. clean baseline inferences (no faults armed — also settles warmup);
+/// 2. closed-loop traffic under a seeded moderate [`FaultSpec`]
+///    (injected chunk panics, slow chunks, arena-grow failures, torn
+///    replies) plus an unmeetable deadline on every 7th request — every
+///    request must come back answered, and panics must stay contained;
+/// 3. blackout (every chunk panics) until a shard quarantines, then
+///    faults stop and the supervisor's rebuild + readmission is timed.
+///
+/// Hard assertions: all requests answered, ≥1 quarantine, recoveries
+/// match quarantines, every shard healthy at exit, and a clean
+/// `Server::shutdown` (zero wedged threads). Results land in
+/// `BENCH_faults.json`.
+///
+/// [`FaultSpec`]: neuromax::util::fault::FaultSpec
+fn cmd_loadgen_chaos(args: &[String]) -> Result<()> {
+    use neuromax::util::fault::{self, FaultSpec};
+
+    let shards: usize =
+        opt(args, "--shards").and_then(|v| v.parse().ok()).unwrap_or(2).max(1);
+    let conns: usize = opt(args, "--conns").and_then(|v| v.parse().ok()).unwrap_or(4).max(1);
+    let total: usize =
+        opt(args, "--requests").and_then(|v| v.parse().ok()).unwrap_or(300).max(conns);
+    let spec = match opt(args, "--chaos-spec") {
+        Some(raw) => {
+            FaultSpec::parse(&raw).map_err(|e| anyhow::anyhow!("--chaos-spec: {e}"))?
+        }
+        None => FaultSpec {
+            seed: 9,
+            panic_per_mille: 10,
+            slow_per_mille: 5,
+            slow_us: 2000,
+            grow_per_mille: 2,
+            torn_per_mille: 3,
+        },
+    };
+    let out = opt(args, "--out").unwrap_or_else(|| "BENCH_faults.json".into());
+    let policy = batch_policy_from_args(args);
+    let threads: usize = opt(args, "--threads").and_then(|v| v.parse().ok()).unwrap_or(2);
+    let eopt = EngineOptions { num_threads: threads, ..Default::default() };
+
+    fault::silence_injected_panics();
+    let mut srv =
+        Server::start_sharded("127.0.0.1:0", "tinycnn", Backend::Sim, policy, eopt, shards)?;
+    let addr = srv.addr;
+    let metrics = srv.metrics.clone();
+    println!(
+        "chaos loadgen: {} shard(s), {conns} connections x {total} requests, spec {spec:?}",
+        srv.shards()
+    );
+    let t_all = Instant::now();
+
+    let dm = metrics.clone();
+    let driver = thread::spawn(move || -> Result<ChaosOutcome> {
+        // phase 1: prove the pool clean before any fault is armed (this
+        // also finishes warmup, so injection never races construction)
+        let mut cl = Client::connect(addr)?;
+        for s in 0..4u64 {
+            let (class, _) = cl.infer(s)?;
+            anyhow::ensure!(class < 10, "clean-baseline inference failed");
+        }
+
+        // phase 2: moderate mixed faults under closed-loop traffic
+        let plan = fault::install(spec);
+        let handles: Vec<_> = (0..conns)
+            .map(|c| {
+                let n = total / conns + usize::from(c < total % conns);
+                thread::spawn(move || -> Result<(u64, u64, u64, u64, Vec<u64>)> {
+                    let mut rng = SplitMix64::new(
+                        0xFA17 ^ (c as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                    );
+                    let mut cl = Client::connect(addr)?;
+                    let (mut ok, mut errs, mut busy_refused, mut torn) =
+                        (0u64, 0u64, 0u64, 0u64);
+                    let mut lats = Vec::with_capacity(n);
+                    for i in 0..n {
+                        let seed = (c * 100_000 + i) as u64;
+                        // every 7th request carries an unmeetable zero
+                        // deadline — a deterministic `BUSY deadline`
+                        let zero_deadline = i % 7 == 3;
+                        let mut attempt = 0u32;
+                        loop {
+                            let reply = if zero_deadline {
+                                cl.request_deadline(None, seed, Duration::ZERO)
+                            } else {
+                                cl.request(None, seed)
+                            };
+                            match reply {
+                                Ok(Reply::Ok { latency_us, .. }) => {
+                                    ok += 1;
+                                    lats.push(latency_us);
+                                    break;
+                                }
+                                Ok(Reply::Busy(r)) if r == "queue-full" => {
+                                    thread::sleep(Duration::from_micros(
+                                        busy_backoff_us(attempt, &mut rng),
+                                    ));
+                                    attempt += 1;
+                                }
+                                Ok(Reply::Busy(_)) => {
+                                    // deadline / no-healthy-shard: refused
+                                    // up front — answered, move on
+                                    busy_refused += 1;
+                                    break;
+                                }
+                                Ok(Reply::Err(_)) => {
+                                    errs += 1;
+                                    break;
+                                }
+                                Err(_) => {
+                                    // torn reply or dropped connection:
+                                    // detected; reconnect and move on
+                                    torn += 1;
+                                    cl = Client::connect(addr)?;
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                    Ok((ok, errs, busy_refused, torn, lats))
+                })
+            })
+            .collect();
+        let (mut ok, mut errs, mut busy_refused, mut torn_conns) = (0u64, 0u64, 0u64, 0u64);
+        let mut lats = Vec::new();
+        for h in handles {
+            let (o, e, b, t, l) = h.join().unwrap()?;
+            ok += o;
+            errs += e;
+            busy_refused += b;
+            torn_conns += t;
+            lats.extend(l);
+        }
+        println!(
+            "  under faults: {ok} ok, {errs} err, {busy_refused} busy-refused, \
+             {torn_conns} torn conns | injected: {} panics, {} slow chunks, \
+             {} grow-fails, {} torn replies",
+            plan.panics_injected.load(Ordering::Relaxed),
+            plan.slows_injected.load(Ordering::Relaxed),
+            plan.grow_fails_injected.load(Ordering::Relaxed),
+            plan.torn_injected.load(Ordering::Relaxed),
+        );
+
+        // phase 3: blackout — every chunk panics until a shard trips
+        // quarantine (deterministic: consecutive batch failures cannot
+        // miss), then faults stop and recovery is timed
+        fault::install(FaultSpec {
+            seed: spec.seed,
+            panic_per_mille: 1000,
+            ..FaultSpec::default()
+        });
+        let t_black = Instant::now();
+        let mut probe_seed = 1_000_000u64;
+        while dm.quarantines.load(Ordering::Relaxed) == 0 {
+            anyhow::ensure!(
+                t_black.elapsed() < Duration::from_secs(30),
+                "blackout never tripped a quarantine"
+            );
+            probe_seed += 1;
+            if cl.request(None, probe_seed).is_err() {
+                cl = Client::connect(addr)?;
+            }
+        }
+        let blackout_ms = t_black.elapsed().as_millis() as u64;
+        fault::clear();
+        let t_clear = Instant::now();
+        while !dm.health.iter().all(|h| h.state() == HealthState::Healthy) {
+            anyhow::ensure!(
+                t_clear.elapsed() < Duration::from_secs(10),
+                "quarantined shard was never readmitted"
+            );
+            thread::sleep(Duration::from_millis(2));
+        }
+        let recovery_ms = t_clear.elapsed().as_millis() as u64;
+        // the rebuilt shards must actually serve again
+        for s in 0..4u64 {
+            let reply = cl.request(None, 2_000_000 + s)?;
+            anyhow::ensure!(
+                matches!(reply, Reply::Ok { .. }),
+                "post-recovery probe said {reply:?}"
+            );
+        }
+        lats.sort_unstable();
+        let p99_us = if lats.is_empty() {
+            0
+        } else {
+            lats[(lats.len() * 99 / 100).min(lats.len() - 1)]
+        };
+        Ok(ChaosOutcome {
+            answered: ok + errs + busy_refused + torn_conns,
+            ok,
+            errs,
+            busy_refused,
+            torn_conns,
+            p99_us,
+            blackout_ms,
+            recovery_ms,
+        })
+    });
+    srv.serve_while(Duration::from_secs(600), || driver.is_finished())?;
+    let r = driver.join().unwrap()?;
+    let elapsed = t_all.elapsed();
+    // a completing shutdown IS the zero-wedged-threads check: it joins
+    // every engine shard and every connection thread
+    srv.shutdown();
+
+    let quarantines = metrics.quarantines.load(Ordering::Relaxed);
+    let recoveries = metrics.recoveries.load(Ordering::Relaxed);
+    let panics_caught = metrics.panics_caught.load(Ordering::Relaxed);
+    anyhow::ensure!(
+        r.answered == total as u64,
+        "every request must be answered: {} of {total}",
+        r.answered
+    );
+    anyhow::ensure!(r.ok > 0, "chaos run completed zero successful requests");
+    anyhow::ensure!(quarantines >= 1, "blackout must quarantine at least one shard");
+    anyhow::ensure!(
+        recoveries == quarantines,
+        "every quarantine must recover: {recoveries} recoveries vs {quarantines}"
+    );
+    anyhow::ensure!(
+        metrics.health.iter().all(|h| h.state() == HealthState::Healthy),
+        "every shard must end healthy"
+    );
+    println!(
+        "  containment: {panics_caught} panics caught | {quarantines} quarantine(s), \
+         {recoveries} recovered | blackout->quarantine {} ms, clear->healthy {} ms | \
+         p99 under faults {} us",
+        r.blackout_ms, r.recovery_ms, r.p99_us
+    );
+
+    let mut log = BenchLog::new();
+    let m = Measurement { median: elapsed, min: elapsed, max: elapsed, runs: 1 };
+    log.report("chaos answered", m, r.answered, "req");
+    log.report("chaos ok", m, r.ok, "req");
+    log.report("chaos err replies", m, r.errs, "req");
+    log.report("chaos busy refusals", m, r.busy_refused, "req");
+    log.report("chaos torn connections", m, r.torn_conns, "req");
+    log.report("chaos p99 under faults", m, r.p99_us, "us");
+    log.report("chaos panics caught", m, panics_caught, "panic");
+    log.report("chaos quarantines", m, quarantines, "quarantine");
+    log.report("chaos recoveries", m, recoveries, "recovery");
+    log.report("chaos blackout-to-quarantine", m, r.blackout_ms, "ms");
+    log.report("chaos clear-to-healthy", m, r.recovery_ms, "ms");
     log.write_json(&out)?;
     println!("wrote {out}");
     Ok(())

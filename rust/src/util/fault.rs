@@ -1,0 +1,357 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] decides, from a seed and a per-mille rate, whether a
+//! given *(kind, step, chunk, event#)* coordinate fires a fault. The
+//! decision is a pure hash — two runs with the same seed and the same
+//! traffic inject faults at the same coordinates, which is what lets
+//! the chaos harness (`loadgen --chaos`) make reproducible assertions
+//! about error rates and quarantine behavior.
+//!
+//! Injection sites live on hot paths (every kernel chunk, every arena
+//! grow), so the disabled fast path is a single relaxed atomic load:
+//! when no plan is installed, `on_chunk`/`on_arena_grow`/`set_step`
+//! return immediately without touching the plan slot. This preserves
+//! the zero-steady-state-allocation pin (`alloc_steady`) and the
+//! bit-exactness pins (`engine_equiv`, `zoo_forward`) — with faults
+//! disabled, nothing observable changes.
+//!
+//! Fault kinds:
+//! - **chunk panic** — `panic_any(InjectedFault)` inside a worker
+//!   chunk; exercises `WorkerPool` panic isolation and shard
+//!   supervision.
+//! - **slow chunk** — sleeps `slow_us` inside a chunk; exercises
+//!   deadline misses and tail latency under faults.
+//! - **arena grow failure** — panics inside `ensure_len`'s grow
+//!   branch; exercises arena rebuild on shard recovery.
+//! - **torn wire reply** — the server writes half an `OK` line and
+//!   drops the connection; exercises client-side retry handling.
+//!
+//! Install globally with [`install`] (or [`install_from_env`] via
+//! `NEUROMAX_CHAOS=seed=1,panic=10,...`), remove with [`clear`].
+//! Installation is process-global: tests that install a plan must
+//! serialize with each other (see `tests/fault_containment.rs`).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+/// Panic payload used for every injected panic, so supervisors and the
+/// process panic hook can tell injected faults from real bugs.
+#[derive(Debug)]
+pub struct InjectedFault(pub &'static str);
+
+/// Per-kind fault rates (per mille) plus the plan seed. `Default` is
+/// all-zero: a plan with no rates never fires.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultSpec {
+    /// Seed for the coordinate hash; same seed + same traffic → same
+    /// injected faults.
+    pub seed: u64,
+    /// Chunk-panic rate, per 1000 chunk executions.
+    pub panic_per_mille: u32,
+    /// Slow-chunk rate, per 1000 chunk executions.
+    pub slow_per_mille: u32,
+    /// How long a slow chunk sleeps, in microseconds.
+    pub slow_us: u64,
+    /// Arena-grow failure rate, per 1000 grow events.
+    pub grow_per_mille: u32,
+    /// Torn-reply rate, per 1000 `OK` replies written.
+    pub torn_per_mille: u32,
+}
+
+impl FaultSpec {
+    /// Parse a `key=value` comma list, e.g.
+    /// `seed=1,panic=10,slow=5,slow_us=2000,grow=2,torn=5`.
+    /// Unknown keys are an error; omitted keys default to zero.
+    pub fn parse(s: &str) -> Result<FaultSpec, String> {
+        let mut spec = FaultSpec::default();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| format!("fault spec `{part}`: expected key=value"))?;
+            let n: u64 = val
+                .trim()
+                .parse()
+                .map_err(|_| format!("fault spec `{part}`: bad number `{val}`"))?;
+            match key.trim() {
+                "seed" => spec.seed = n,
+                "panic" => spec.panic_per_mille = n as u32,
+                "slow" => spec.slow_per_mille = n as u32,
+                "slow_us" => spec.slow_us = n,
+                "grow" => spec.grow_per_mille = n as u32,
+                "torn" => spec.torn_per_mille = n as u32,
+                other => return Err(format!("fault spec: unknown key `{other}`")),
+            }
+        }
+        Ok(spec)
+    }
+}
+
+/// Installed fault plan: the spec plus live injection counters. The
+/// counters let the chaos harness report how many faults actually
+/// fired (vs. how many errors surfaced on the wire).
+pub struct FaultPlan {
+    spec: FaultSpec,
+    /// Monotone event counter; decorrelates repeated visits to the
+    /// same (step, chunk) coordinate across requests.
+    events: AtomicU64,
+    /// Current step index, set by the executor before each step so
+    /// chunk-level sites know their (step, chunk) coordinate.
+    step: AtomicUsize,
+    pub panics_injected: AtomicU64,
+    pub slows_injected: AtomicU64,
+    pub grow_fails_injected: AtomicU64,
+    pub torn_injected: AtomicU64,
+}
+
+const KIND_PANIC: u64 = 1;
+const KIND_SLOW: u64 = 2;
+const KIND_GROW: u64 = 3;
+const KIND_TORN: u64 = 4;
+
+impl FaultPlan {
+    pub fn new(spec: FaultSpec) -> FaultPlan {
+        FaultPlan {
+            spec,
+            events: AtomicU64::new(0),
+            step: AtomicUsize::new(0),
+            panics_injected: AtomicU64::new(0),
+            slows_injected: AtomicU64::new(0),
+            grow_fails_injected: AtomicU64::new(0),
+            torn_injected: AtomicU64::new(0),
+        }
+    }
+
+    pub fn spec(&self) -> FaultSpec {
+        self.spec
+    }
+
+    /// Pure fire decision: hash (seed, kind, step, chunk, event#) and
+    /// compare against the per-mille rate. SplitMix64 finalizer — the
+    /// same mixer as `util::prng`, applied as a hash.
+    fn fires(&self, kind: u64, step: usize, chunk: usize, per_mille: u32) -> bool {
+        if per_mille == 0 {
+            return false;
+        }
+        let event = self.events.fetch_add(1, Ordering::Relaxed);
+        let mut z = self
+            .spec
+            .seed
+            .wrapping_add(kind.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .wrapping_add((step as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9))
+            .wrapping_add((chunk as u64).wrapping_mul(0x94D0_49BB_1331_11EB))
+            .wrapping_add(event.wrapping_mul(0xD6E8_FEB8_6659_FD93));
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        (z % 1000) < per_mille as u64
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+fn plan_slot() -> &'static Mutex<Option<Arc<FaultPlan>>> {
+    static SLOT: OnceLock<Mutex<Option<Arc<FaultPlan>>>> = OnceLock::new();
+    SLOT.get_or_init(|| Mutex::new(None))
+}
+
+/// Install `spec` as the process-global fault plan and return a handle
+/// to its counters. Replaces any previously installed plan.
+pub fn install(spec: FaultSpec) -> Arc<FaultPlan> {
+    let plan = Arc::new(FaultPlan::new(spec));
+    *crate::util::sync::plock(plan_slot()) = Some(plan.clone());
+    ENABLED.store(true, Ordering::Release);
+    plan
+}
+
+/// Remove the global fault plan; all injection sites return to the
+/// single-atomic-load fast path.
+pub fn clear() {
+    ENABLED.store(false, Ordering::Release);
+    *crate::util::sync::plock(plan_slot()) = None;
+}
+
+/// Cheap probe: is any fault plan installed?
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Clone the installed plan handle, if any.
+pub fn current() -> Option<Arc<FaultPlan>> {
+    if !enabled() {
+        return None;
+    }
+    crate::util::sync::plock(plan_slot()).clone()
+}
+
+/// Install from the `NEUROMAX_CHAOS` environment variable if set.
+/// Returns the plan handle, or `None` when the variable is absent.
+/// Panics on a malformed spec (a chaos run with a typo'd spec should
+/// fail loudly, not silently run clean).
+pub fn install_from_env() -> Option<Arc<FaultPlan>> {
+    let raw = std::env::var("NEUROMAX_CHAOS").ok()?;
+    let spec = FaultSpec::parse(&raw)
+        .unwrap_or_else(|e| panic!("NEUROMAX_CHAOS: {e}"));
+    Some(install(spec))
+}
+
+/// Record the executing step index; called by the program executor at
+/// the top of each step so chunk sites know their coordinate.
+#[inline]
+pub fn set_step(si: usize) {
+    if !enabled() {
+        return;
+    }
+    if let Some(plan) = current() {
+        plan.step.store(si, Ordering::Relaxed);
+    }
+}
+
+/// Chunk-level injection site: may sleep (slow chunk) and may panic
+/// (chunk panic). Called at the top of every parallel chunk body and
+/// once per serial step.
+#[inline]
+pub fn on_chunk(chunk: usize) {
+    if !enabled() {
+        return;
+    }
+    let Some(plan) = current() else { return };
+    let step = plan.step.load(Ordering::Relaxed);
+    if plan.fires(KIND_SLOW, step, chunk, plan.spec.slow_per_mille) {
+        plan.slows_injected.fetch_add(1, Ordering::Relaxed);
+        std::thread::sleep(Duration::from_micros(plan.spec.slow_us));
+    }
+    if plan.fires(KIND_PANIC, step, chunk, plan.spec.panic_per_mille) {
+        plan.panics_injected.fetch_add(1, Ordering::Relaxed);
+        std::panic::panic_any(InjectedFault("chunk"));
+    }
+}
+
+/// Arena-grow injection site: may panic in place of a grow. Called
+/// from `ensure_len`'s grow branch only — never on the steady state.
+#[inline]
+pub fn on_arena_grow() {
+    if !enabled() {
+        return;
+    }
+    let Some(plan) = current() else { return };
+    let step = plan.step.load(Ordering::Relaxed);
+    if plan.fires(KIND_GROW, step, 0, plan.spec.grow_per_mille) {
+        plan.grow_fails_injected.fetch_add(1, Ordering::Relaxed);
+        std::panic::panic_any(InjectedFault("arena-grow"));
+    }
+}
+
+/// Wire-level injection site: should this `OK` reply be torn (half
+/// written, connection dropped)? The server checks this before
+/// writing a success reply.
+#[inline]
+pub fn torn_reply() -> bool {
+    if !enabled() {
+        return false;
+    }
+    let Some(plan) = current() else { return false };
+    if plan.fires(KIND_TORN, 0, 0, plan.spec.torn_per_mille) {
+        plan.torn_injected.fetch_add(1, Ordering::Relaxed);
+        return true;
+    }
+    false
+}
+
+/// Install a process panic hook that suppresses backtrace spew for
+/// injected faults and for `PooledJobPanic` (the pool's re-panic
+/// wrapper), while delegating real panics to the previous hook.
+/// Idempotent; used by chaos runs so thousands of injected panics
+/// don't flood stderr.
+pub fn silence_injected_panics() {
+    use std::sync::Once;
+    static HOOK: Once = Once::new();
+    HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let payload = info.payload();
+            if payload.downcast_ref::<InjectedFault>().is_some()
+                || payload
+                    .downcast_ref::<crate::dataflow::workers::PooledJobPanic>()
+                    .is_some()
+            {
+                return;
+            }
+            prev(info);
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_spec() {
+        let s = FaultSpec::parse("seed=9,panic=10,slow=5,slow_us=2000,grow=2,torn=5").unwrap();
+        assert_eq!(
+            s,
+            FaultSpec {
+                seed: 9,
+                panic_per_mille: 10,
+                slow_per_mille: 5,
+                slow_us: 2000,
+                grow_per_mille: 2,
+                torn_per_mille: 5,
+            }
+        );
+    }
+
+    #[test]
+    fn parse_rejects_unknown_key_and_bad_number() {
+        assert!(FaultSpec::parse("bogus=1").is_err());
+        assert!(FaultSpec::parse("panic=lots").is_err());
+        assert!(FaultSpec::parse("panic").is_err());
+    }
+
+    #[test]
+    fn parse_empty_spec_is_all_zero() {
+        assert_eq!(FaultSpec::parse("").unwrap(), FaultSpec::default());
+    }
+
+    #[test]
+    fn zero_rate_never_fires() {
+        let plan = FaultPlan::new(FaultSpec { seed: 1, ..FaultSpec::default() });
+        for i in 0..10_000 {
+            assert!(!plan.fires(KIND_PANIC, 0, i, 0));
+        }
+    }
+
+    #[test]
+    fn full_rate_always_fires() {
+        let plan = FaultPlan::new(FaultSpec { seed: 1, ..FaultSpec::default() });
+        for i in 0..1_000 {
+            assert!(plan.fires(KIND_PANIC, i, i, 1000));
+        }
+    }
+
+    #[test]
+    fn fire_rate_tracks_per_mille() {
+        let plan = FaultPlan::new(FaultSpec { seed: 42, ..FaultSpec::default() });
+        let n = 100_000;
+        let hits = (0..n).filter(|&i| plan.fires(KIND_PANIC, 0, i, 10)).count();
+        // 10 per mille of 100k = ~1000; allow generous slack.
+        assert!(
+            (600..1400).contains(&hits),
+            "expected ~1000 hits at 10 per mille, got {hits}"
+        );
+    }
+
+    #[test]
+    fn same_seed_same_decisions() {
+        let a = FaultPlan::new(FaultSpec { seed: 7, ..FaultSpec::default() });
+        let b = FaultPlan::new(FaultSpec { seed: 7, ..FaultSpec::default() });
+        for i in 0..5_000 {
+            assert_eq!(
+                a.fires(KIND_SLOW, i % 13, i, 25),
+                b.fires(KIND_SLOW, i % 13, i, 25)
+            );
+        }
+    }
+}

@@ -2,6 +2,8 @@
 //! tables (offline environment — no rand/proptest/serde crates).
 
 pub mod bench;
+pub mod fault;
 pub mod prng;
 pub mod proptest;
+pub mod sync;
 pub mod table;

@@ -1,0 +1,58 @@
+//! Poison-recovering synchronization helpers.
+//!
+//! `std`'s mutexes poison when a holder panics, and every later
+//! `.lock().unwrap()` then panics too — one caught worker panic would
+//! otherwise wedge the whole worker pool (and everything queued behind
+//! it) forever. The serving stack treats poisoning as survivable: the
+//! data guarded by these locks is either scalar bookkeeping (chunk
+//! counters, queue depths) or is discarded and rebuilt by the shard
+//! supervisor after a fault, so recovering the guard is always sound
+//! here. Use these helpers instead of `.lock().unwrap()` on any path
+//! that must stay alive across a caught panic.
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError, WaitTimeoutResult};
+use std::time::Duration;
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+#[inline]
+pub fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Condvar wait that recovers the guard on poison (see [`plock`]).
+#[inline]
+pub fn pwait<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Bounded condvar wait that recovers the guard on poison (see
+/// [`plock`]).
+#[inline]
+pub fn pwait_timeout<'a, T>(
+    cv: &Condvar,
+    g: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    cv.wait_timeout(g, dur).unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::Mutex;
+
+    #[test]
+    fn plock_recovers_a_poisoned_mutex() {
+        let m = Mutex::new(7u32);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let _g = m.lock().unwrap();
+            panic!("poison it");
+        }));
+        assert!(r.is_err());
+        assert!(m.lock().is_err(), "mutex must actually be poisoned");
+        assert_eq!(*plock(&m), 7, "plock must still hand out the guard");
+        *plock(&m) = 8;
+        assert_eq!(*plock(&m), 8);
+    }
+}

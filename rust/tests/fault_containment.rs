@@ -1,0 +1,243 @@
+//! Fault-containment integration tests: injected panics answer
+//! `ERR internal` instead of killing threads, shards quarantine after
+//! consecutive failures and recover after a rebuild, deadline-refused
+//! requests never execute, and stalled connections are reaped while
+//! live ones keep serving.
+//!
+//! Fault installation (`util::fault::install`) is **process-global**,
+//! so every test in this binary serializes through [`faults_guard`] —
+//! and tests that install plans live ONLY in this file. Each test
+//! clears any leftover plan on entry so a panicked predecessor cannot
+//! poison it.
+
+use std::io::Read;
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Mutex, MutexGuard, OnceLock};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use neuromax::coordinator::batcher::BatchPolicy;
+use neuromax::coordinator::health::{HealthPolicy, HealthState};
+use neuromax::coordinator::metrics::ErrCode;
+use neuromax::coordinator::pipeline::Backend;
+use neuromax::coordinator::server::{Client, ConnPolicy, Reply, Server};
+use neuromax::coordinator::shard::{Admission, Pending, ShardPool, ShardReply};
+use neuromax::dataflow::engine::EngineOptions;
+use neuromax::util::fault::{self, FaultSpec};
+
+/// Serialize tests that touch the process-global fault plan. Poison is
+/// recovered on purpose: a failing test must not wedge the rest.
+fn faults_guard() -> MutexGuard<'static, ()> {
+    static GUARD: OnceLock<Mutex<()>> = OnceLock::new();
+    GUARD
+        .get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+fn workers(n: usize) -> EngineOptions {
+    EngineOptions { num_threads: n, ..Default::default() }
+}
+
+fn tight_policy() -> BatchPolicy {
+    BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1), ..Default::default() }
+}
+
+/// Submit one default-model request and wait for its reply.
+fn roundtrip(pool: &ShardPool, seed: u64) -> Result<ShardReply, Admission> {
+    let (tx, rx) = mpsc::channel();
+    pool.submit(Pending {
+        model: None,
+        seed,
+        enqueued: Instant::now(),
+        deadline: None,
+        reply: tx,
+    })?;
+    Ok(rx.recv_timeout(Duration::from_secs(10)).expect("shard must answer"))
+}
+
+#[test]
+fn injected_panic_answers_err_internal_and_the_server_keeps_serving() {
+    let _g = faults_guard();
+    fault::clear();
+    fault::silence_injected_panics();
+    let mut srv = Server::start_sharded(
+        "127.0.0.1:0",
+        "tinycnn",
+        Backend::Sim,
+        tight_policy(),
+        workers(2),
+        1,
+    )
+    .unwrap();
+    let addr = srv.addr;
+    let metrics = srv.metrics.clone();
+    let client = thread::spawn(move || {
+        let mut c = Client::connect(addr).unwrap();
+        // clean request first: proves health and finishes warmup, so the
+        // blackout below cannot race engine construction
+        let (class, _) = c.infer(1).unwrap();
+        assert!(class < 10);
+        fault::install(FaultSpec { seed: 3, panic_per_mille: 1000, ..FaultSpec::default() });
+        let reply = c.request(None, 2).unwrap();
+        assert_eq!(reply, Reply::Err("ERR internal inference-failed".into()));
+        fault::clear();
+        // the SAME connection and the SAME shard thread still serve
+        let (class, _) = c.infer(3).unwrap();
+        assert!(class < 10);
+        let stats = c.stats().unwrap();
+        assert!(stats.contains("internal=1"), "per-code counter missing: {stats}");
+    });
+    srv.serve_while(Duration::from_secs(30), || client.is_finished()).unwrap();
+    client.join().unwrap();
+    assert!(
+        metrics.panics_caught.load(Ordering::Relaxed) >= 1,
+        "the panic must be caught, not fatal"
+    );
+    assert_eq!(metrics.errors.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.responses.load(Ordering::Relaxed), 2);
+    srv.shutdown();
+}
+
+#[test]
+fn shard_quarantines_after_consecutive_failures_and_recovers() {
+    let _g = faults_guard();
+    fault::clear();
+    fault::silence_injected_panics();
+    let hp = HealthPolicy { quarantine_after: 2, rebuild_backoff: Duration::from_millis(2) };
+    let pool = ShardPool::start_with_health(
+        "tinycnn",
+        Backend::Sim,
+        tight_policy(),
+        workers(1),
+        1,
+        hp,
+    )
+    .unwrap();
+    // healthy baseline
+    assert!(matches!(roundtrip(&pool, 1), Ok(ShardReply::Ok { .. })));
+    assert_eq!(pool.metrics.health[0].state(), HealthState::Healthy);
+
+    // blackout: every chunk panics → each batch fails, replies ERR
+    fault::install(FaultSpec { seed: 5, panic_per_mille: 1000, ..FaultSpec::default() });
+    for seed in [2u64, 3] {
+        match roundtrip(&pool, seed) {
+            Ok(ShardReply::Err(ErrCode::Internal)) => {}
+            other => panic!("expected ERR internal under blackout, got {other:?}"),
+        }
+    }
+    // two consecutive failures trip quarantine; admission starts bouncing
+    let t0 = Instant::now();
+    loop {
+        match roundtrip(&pool, 99) {
+            Err(Admission::Unhealthy) => break,
+            Ok(_) => {} // raced the trip; queued job was answered, retry
+            Err(other) => panic!("unexpected admission {other:?}"),
+        }
+        assert!(t0.elapsed() < Duration::from_secs(5), "pool never quarantined");
+    }
+    assert_eq!(pool.metrics.quarantines.load(Ordering::Relaxed), 1);
+    assert_eq!(pool.metrics.health[0].state(), HealthState::Quarantined);
+    let summary = pool.metrics.summary();
+    assert!(summary.contains("health=[s0: quarantined]"), "{summary}");
+
+    // faults stop → the supervisor rebuilds, self-tests, readmits
+    fault::clear();
+    let t0 = Instant::now();
+    loop {
+        match roundtrip(&pool, 7) {
+            Ok(ShardReply::Ok { .. }) => break,
+            Ok(ShardReply::Err(_)) | Err(Admission::Unhealthy) => {
+                thread::sleep(Duration::from_millis(2));
+            }
+            Err(other) => panic!("unexpected admission {other:?}"),
+        }
+        assert!(t0.elapsed() < Duration::from_secs(5), "shard never recovered");
+    }
+    assert_eq!(pool.metrics.recoveries.load(Ordering::Relaxed), 1);
+    assert_eq!(pool.metrics.health[0].state(), HealthState::Healthy);
+    assert!(pool.metrics.health[0].quarantine_ns() > 0, "episode must be timed");
+    pool.drain();
+}
+
+#[test]
+fn deadline_refused_up_front_without_executing() {
+    let _g = faults_guard();
+    fault::clear();
+    let mut srv = Server::start_sharded(
+        "127.0.0.1:0",
+        "tinycnn",
+        Backend::Sim,
+        BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1), ..Default::default() },
+        workers(1),
+        1,
+    )
+    .unwrap();
+    let addr = srv.addr;
+    let metrics = srv.metrics.clone();
+    let client = thread::spawn(move || {
+        let mut c = Client::connect(addr).unwrap();
+        // zero budget: the plan-predicted cost can never fit → refused
+        // before any queueing or execution
+        let reply = c.request_deadline(None, 5, Duration::ZERO).unwrap();
+        assert_eq!(reply, Reply::Busy("deadline".into()));
+        // a generous budget sails through on the same connection
+        let reply = c.request_deadline(None, 5, Duration::from_secs(5)).unwrap();
+        assert!(matches!(reply, Reply::Ok { .. }), "{reply:?}");
+        let stats = c.stats().unwrap();
+        assert!(stats.contains("busy_deadline=1"), "{stats}");
+    });
+    srv.serve_while(Duration::from_secs(30), || client.is_finished()).unwrap();
+    client.join().unwrap();
+    assert_eq!(metrics.dropped_deadline.load(Ordering::Relaxed), 1);
+    // refused means *not executed*: one response (the OK), zero errors
+    assert_eq!(metrics.responses.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.errors.load(Ordering::Relaxed), 0);
+    srv.shutdown();
+}
+
+#[test]
+fn stalled_connection_is_reaped_while_live_ones_serve() {
+    let _g = faults_guard();
+    fault::clear();
+    let mut srv = Server::start_sharded(
+        "127.0.0.1:0",
+        "tinycnn",
+        Backend::Sim,
+        tight_policy(),
+        workers(1),
+        1,
+    )
+    .unwrap();
+    srv.set_conn_policy(ConnPolicy {
+        idle: Duration::from_millis(150),
+        write: Duration::from_secs(2),
+    });
+    let addr = srv.addr;
+    let metrics = srv.metrics.clone();
+    let client = thread::spawn(move || {
+        // stalled: connects and never sends a byte
+        let stalled = TcpStream::connect(addr).unwrap();
+        // live: keeps requesting straight through the reap window
+        let mut c = Client::connect(addr).unwrap();
+        for i in 0..4u64 {
+            let (class, _) = c.infer(i).unwrap();
+            assert!(class < 10);
+            thread::sleep(Duration::from_millis(60));
+        }
+        // the reaper must have closed the stalled socket: EOF, not hang
+        stalled.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut buf = [0u8; 8];
+        let n = (&stalled).read(&mut buf).unwrap();
+        assert_eq!(n, 0, "server must close the reaped connection");
+    });
+    srv.serve_while(Duration::from_secs(30), || client.is_finished()).unwrap();
+    client.join().unwrap();
+    assert!(
+        metrics.reaped_conns.load(Ordering::Relaxed) >= 1,
+        "idle connection must be reaped: {}",
+        metrics.summary()
+    );
+    srv.shutdown();
+}

@@ -242,6 +242,7 @@ fn pool_rejects_new_work_while_draining() {
         model: None,
         seed: 1,
         enqueued: Instant::now(),
+        deadline: None,
         reply: tx,
     });
     assert_eq!(refused.unwrap_err(), Admission::ShuttingDown);
