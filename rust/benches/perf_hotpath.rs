@@ -20,8 +20,8 @@ use neuromax::arch::config::GridConfig;
 use neuromax::arch::ConvCore;
 use neuromax::dataflow::engine::encode_cols;
 use neuromax::dataflow::{
-    analyze, exec, plan_rows, run_batch_lockstep, Engine, FusedWeights, ModelProgram,
-    ProgramExecutor, ScheduleOptions, SwCost, WorkerPool,
+    analyze, exec, plan_rows, plan_rows_gemm, run_batch_lockstep, Engine, FusedWeights,
+    ModelProgram, ProgramExecutor, ScheduleOptions, SwCost, WorkerPool,
 };
 use neuromax::models::layer::{LayerDesc, Network};
 use neuromax::lns::mult::thread_mult;
@@ -50,6 +50,93 @@ fn rand_tensors(h: usize, w: usize, c: usize, k: usize, seed: u64) -> (Tensor3, 
 
 fn main() {
     let mut log = BenchLog::new();
+    // $NEUROMAX_BENCH_QUICK=1 runs only the GEM section below (with fewer
+    // repetitions) and exits — the CI smoke job gates the GEMM-vs-row
+    // comparison and its bit-exactness pre-asserts without the full sweep.
+    let quick = std::env::var("NEUROMAX_BENCH_QUICK").map(|v| v != "0").unwrap_or(false);
+    let reps = if quick { 2 } else { 5 };
+
+    // GEM: packed LUT-GEMM vs the row kernels on the two acceptance
+    // shapes — the planner-selected conv hot path (see dataflow::gemm).
+    // Bit-exactness is asserted on both paths before anything is timed.
+    {
+        let eng1 = Engine::with_threads(1);
+        let nt = Engine::new(Default::default()).num_threads();
+        let engp = Engine::pooled(WorkerPool::new(nt), Default::default());
+        let cost = SwCost::pooled();
+        for (name, h, w, c, k) in [
+            ("56x56x32x16", 56usize, 56usize, 32usize, 16usize),
+            ("9x9x128x128 tail", 9, 9, 128, 128),
+        ] {
+            let (a, wc, ws) = rand_tensors(h, w, c, k, 11);
+            let fw = FusedWeights::fuse(&wc, &ws);
+            let (ho, wo) = (h - 2, w - 2); // 3x3 s1
+            let macs = (ho * wo * 9 * c * k) as u64;
+            // the cost model must route both acceptance shapes to GEMM
+            assert!(
+                cost.gemm_pays(macs, ho * wo * fw.kdim()),
+                "planner no longer selects GEMM for {name}"
+            );
+            let mut cols = Vec::new();
+            encode_cols(&a.data, &mut cols);
+            let want = eng1.conv2d(&a, &fw, 1).data;
+            let engines: [(String, &Engine); 2] =
+                [("1T".into(), &eng1), (format!("pool {nt}T"), &engp)];
+            for (label, eng) in &engines {
+                let rplan = plan_rows(ho, macs, eng.num_threads(), &cost);
+                let mut rout = vec![0i32; ho * wo * k];
+                eng.conv2d_cols_plan(&cols, h, w, &fw, 1, &mut rout, &rplan, false, None);
+                assert_eq!(
+                    rout, want,
+                    "row path must stay bit-exact before being timed ({name} {label})"
+                );
+                let m = time(reps, || {
+                    eng.conv2d_cols_plan(&cols, h, w, &fw, 1, &mut rout, &rplan, false, None);
+                    blackbox(&rout);
+                });
+                log.report(&format!("GEM conv {name} rows ({label})"), m, macs, "MAC");
+
+                let gplan =
+                    plan_rows_gemm(ho, macs, wo, fw.kdim(), eng.num_threads(), &cost, false);
+                let tile = gplan.gemm.clone().expect("gemm plan carries a tile");
+                let mut scratch = vec![0u8; tile.scratch_len];
+                let mut gout = vec![0i32; ho * wo * k];
+                eng.conv2d_gemm_plan(
+                    &cols, h, w, &fw, 1, &mut gout, &gplan, &tile, false, None, &mut scratch,
+                );
+                assert_eq!(
+                    gout, want,
+                    "GEMM path must stay bit-exact before being timed ({name} {label})"
+                );
+                let m = time(reps, || {
+                    eng.conv2d_gemm_plan(
+                        &cols, h, w, &fw, 1, &mut gout, &gplan, &tile, false, None, &mut scratch,
+                    );
+                    blackbox(&gout);
+                });
+                log.report(
+                    &format!("GEM conv {name} gemm tile={}x{} ({label})", tile.mr, tile.nr),
+                    m,
+                    macs,
+                    "MAC",
+                );
+            }
+        }
+    }
+
+    if quick {
+        // default to a distinct path so a smoke run never clobbers the
+        // tracked full-sweep BENCH_hotpath.json
+        let path =
+            std::env::var("BENCH_JSON_OUT").unwrap_or_else(|_| "BENCH_hotpath_quick.json".into());
+        match log.write_json(&path) {
+            Ok(()) => {
+                println!("\nwrote {} bench records to {path} (quick mode)", log.entries.len())
+            }
+            Err(e) => eprintln!("\nfailed writing {path}: {e}"),
+        }
+        return;
+    }
 
     // L3a: raw multiply datapath
     let mut rng = SplitMix64::new(7);

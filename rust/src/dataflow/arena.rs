@@ -25,6 +25,11 @@ pub struct ActivationArena {
     pub(crate) slots: Vec<Vec<i32>>,
     /// Scratch for LUT column encoding of the current staged input.
     pub(crate) cols: Vec<u8>,
+    /// im2col pixel-panel scratch for the packed-GEMM conv path, sized
+    /// to the largest planned `GemmTile::scratch_len` on first use (the
+    /// GEMM twin of `cols` — grow-only, so the zero-steady-state-
+    /// allocation pin holds on the GEMM path too).
+    pub(crate) gemm: Vec<u8>,
     /// Buffer growth events since construction (warmup only, then 0).
     pub(crate) grow_events: u64,
     /// Measured busy/capacity time of the planned sections executed
@@ -50,6 +55,7 @@ impl ActivationArena {
     pub fn peak_bytes(&self) -> usize {
         self.slots.iter().map(|s| s.capacity() * std::mem::size_of::<i32>()).sum::<usize>()
             + self.cols.capacity()
+            + self.gemm.capacity()
     }
 
     /// Buffer growth events since construction. After the first request
@@ -80,6 +86,16 @@ pub(crate) fn ensure_len(buf: &mut Vec<i32>, len: usize, grow_events: &mut u64) 
     }
 }
 
+/// [`ensure_len`] for the `u8` GEMM panel scratch: same grow-only
+/// contract and chaos hook, byte-domain buffer.
+pub(crate) fn ensure_len_u8(buf: &mut Vec<u8>, len: usize, grow_events: &mut u64) {
+    if buf.len() < len {
+        crate::util::fault::on_arena_grow();
+        *grow_events += 1;
+        buf.resize(len, 0);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -100,5 +116,14 @@ mod tests {
         a.grow_events = g;
         assert_eq!(a.grow_events(), 2, "only the first resize grows");
         assert!(a.peak_bytes() >= 64 * 4);
+        // the u8 GEMM scratch follows the same grow-only contract
+        let before = a.peak_bytes();
+        let mut g = a.grow_events;
+        ensure_len_u8(&mut a.gemm, 128, &mut g);
+        ensure_len_u8(&mut a.gemm, 128, &mut g);
+        ensure_len_u8(&mut a.gemm, 16, &mut g);
+        a.grow_events = g;
+        assert_eq!(a.grow_events(), 3, "u8 scratch grows once");
+        assert!(a.peak_bytes() >= before + 128);
     }
 }

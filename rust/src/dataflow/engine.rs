@@ -31,12 +31,14 @@
 //! shapes, strides, padding and zero-density, at 1 and 4 threads.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use std::time::Instant;
 
+use super::gemm::{gemm_chunk, pack_weight_panels, PanelData};
 use super::pool;
 use super::schedule::{
-    analyze, balanced_chunks, plan_rows_threshold, LayerPerf, ScheduleOptions, Split, StepPlan,
+    analyze, balanced_chunks, plan_rows_threshold, GemmTile, LayerPerf, ScheduleOptions, Split,
+    StepPlan,
 };
 use super::workers::WorkerPool;
 use crate::arch::config::GridConfig;
@@ -143,6 +145,9 @@ pub struct FusedWeights {
     pub kw: usize,
     pub c: usize,
     rows: Vec<u8>,
+    /// GEMM weight panels, packed lazily on first GEMM execution (the
+    /// rows are per-layer constants, so the panels are too).
+    panels: OnceLock<PanelData>,
 }
 
 impl FusedWeights {
@@ -159,13 +164,33 @@ impl FusedWeights {
             .zip(&ws.data)
             .map(|(&code, &sign)| fuse_row(code, sign))
             .collect();
-        FusedWeights { k: wc.k, kh: wc.kh, kw: wc.kw, c: wc.c, rows }
+        FusedWeights { k: wc.k, kh: wc.kh, kw: wc.kw, c: wc.c, rows, panels: OnceLock::new() }
     }
 
     /// Fused footprint in bytes (8× smaller than the two-i32 code+sign
     /// pair it replaces).
     pub fn bytes(&self) -> usize {
         self.rows.len()
+    }
+
+    /// im2col depth `kh·kw·c`: fused bytes per filter.
+    pub fn kdim(&self) -> usize {
+        self.kh * self.kw * self.c
+    }
+
+    /// The raw fused LUT rows (`[K, kh, kw, C]` layout).
+    pub(crate) fn rows(&self) -> &[u8] {
+        &self.rows
+    }
+
+    /// The [`GEMM_NR`]-wide weight panels for the packed-GEMM kernel,
+    /// packed once on first use and cached for the layer's lifetime
+    /// (subsequent calls are a load — the zero-steady-state-allocation
+    /// pin in `tests/alloc_steady.rs` covers the GEMM path).
+    ///
+    /// [`GEMM_NR`]: super::gemm::GEMM_NR
+    pub fn gemm_panels(&self) -> &PanelData {
+        self.panels.get_or_init(|| pack_weight_panels(&self.rows, self.k, self.kdim()))
     }
 }
 
@@ -330,10 +355,25 @@ impl Engine {
         timer: Option<&PlanTimer>,
         body: impl Fn(usize, &mut [i32]) + Sync,
     ) {
+        self.par_plan_indexed(plan, rowlen, out, timer, |_ci, start, chunk| body(start, chunk));
+    }
+
+    /// [`Engine::par_plan`] with the executing chunk's *index* passed to
+    /// the body alongside its first row — the GEMM path keys its
+    /// per-chunk scratch window off the index (serial fallbacks run as
+    /// chunk 0 over the whole output).
+    pub fn par_plan_indexed(
+        &self,
+        plan: &StepPlan,
+        rowlen: usize,
+        out: &mut [i32],
+        timer: Option<&PlanTimer>,
+        body: impl Fn(usize, usize, &mut [i32]) + Sync,
+    ) {
         if plan.split == Split::Serial || plan.chunks.len() <= 1 || self.threads <= 1 {
             let t0 = timer.map(|_| Instant::now());
             crate::util::fault::on_chunk(0);
-            body(0, out);
+            body(0, 0, out);
             if let (Some(tm), Some(t0)) = (timer, t0) {
                 tm.record_serial(t0.elapsed().as_nanos() as u64, self.threads);
             }
@@ -360,7 +400,7 @@ impl Engine {
                     std::slice::from_raw_parts_mut(base.0.add(start * rowlen), rows * rowlen)
                 };
                 let c0 = measure.then(Instant::now);
-                body(start, chunk);
+                body(ci, start, chunk);
                 if let Some(c0) = c0 {
                     busy.fetch_add(c0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 }
@@ -376,7 +416,7 @@ impl Engine {
                     s.spawn(move || {
                         crate::util::fault::on_chunk(ci);
                         let c0 = measure.then(Instant::now);
-                        b(start, head);
+                        b(ci, start, head);
                         if let Some(c0) = c0 {
                             busy.fetch_add(c0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                         }
@@ -460,6 +500,55 @@ impl Engine {
             if requant {
                 requant_rows(rows);
             }
+        });
+    }
+
+    /// The packed-GEMM conv kernel under a compiled [`StepPlan`] whose
+    /// planner attached a [`GemmTile`]: each chunk packs its im2col
+    /// pixel panels into its own disjoint window of `scratch` (laid out
+    /// by `plan_gemm_tile`'s prefix sums) and sweeps the register-
+    /// blocked micro-kernel, requant folded into the tile epilogue.
+    /// Bit-identical to [`Engine::conv2d_cols_plan`] — the GEMM-vs-row
+    /// choice is pure performance, never numerics.
+    ///
+    /// `scratch` must hold at least `tile.scratch_len` bytes (the
+    /// program executor passes the arena's grow-only GEMM scratch).
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv2d_gemm_plan(
+        &self,
+        cols: &[u8],
+        ah: usize,
+        aw: usize,
+        fw: &FusedWeights,
+        stride: usize,
+        out: &mut [i32],
+        plan: &StepPlan,
+        tile: &GemmTile,
+        requant: bool,
+        timer: Option<&PlanTimer>,
+        scratch: &mut [u8],
+    ) {
+        assert!(stride >= 1, "stride must be >= 1");
+        assert_eq!(cols.len(), ah * aw * fw.c, "cols/shape mismatch");
+        let ho = out_dim(ah, fw.kh, stride);
+        let wo = out_dim(aw, fw.kw, stride);
+        assert_eq!(out.len(), ho * wo * fw.k, "out/shape mismatch");
+        assert_eq!(tile.kdim, fw.kdim(), "tile planned for a different layer");
+        assert!(scratch.len() >= tile.scratch_len, "gemm scratch undersized");
+        let rowlen = wo * fw.k;
+        let sbase = SendPtrOf(scratch.as_mut_ptr());
+        self.par_plan_indexed(plan, rowlen, out, timer, |ci, i0, chunk| {
+            let rows = chunk.len() / rowlen;
+            let need = (rows * wo).div_ceil(tile.mr) * tile.mr * tile.kdim;
+            let off = tile.scratch_off.get(ci).copied().unwrap_or(0);
+            // SAFETY: parallel chunks use the tile's prefix-sum windows,
+            // which are disjoint by construction and sized for exactly
+            // this chunk's padded panel count; serial fallbacks run as a
+            // single chunk 0 at offset 0, and div_ceil subadditivity
+            // (pinned in the schedule tests) keeps the whole-output
+            // window within `scratch_len`.
+            let sc = unsafe { std::slice::from_raw_parts_mut(sbase.0.add(off), need) };
+            gemm_chunk(cols, aw, fw, stride, i0, chunk, wo, tile.mr, sc, requant);
         });
     }
 
@@ -1077,6 +1166,7 @@ mod tests {
                     threads: eng.num_threads(),
                     work: 1 << 20,
                     predicted_util: 0.5,
+                    gemm: None,
                 });
             }
             for (pi, plan) in plans.iter().enumerate() {
@@ -1119,6 +1209,7 @@ mod tests {
             threads: 3,
             work: 1,
             predicted_util: 0.5,
+            gemm: None,
         };
         let mut got_fc = vec![0i32; 9];
         eng3.fc_cols_plan(&cols, &ffc, &mut got_fc, &plan, false, None);
@@ -1134,6 +1225,7 @@ mod tests {
             threads: 3,
             work: 1,
             predicted_util: 0.5,
+            gemm: None,
         };
         eng3.maxpool_plan(&a.data, a.h, a.w, a.c, 2, 2, &mut got_mp, &pplan, None);
         assert_eq!(got_mp, want_mp);
@@ -1142,6 +1234,119 @@ mod tests {
         let mut got_ap = vec![0i32; want_ap.len()];
         eng3.avgpool_plan(&a.data, a.h, a.w, a.c, 2, 2, &mut got_ap, &pplan, None);
         assert_eq!(got_ap, want_ap);
+    }
+
+    #[test]
+    fn gemm_plan_matches_row_kernels_on_both_substrates() {
+        use crate::dataflow::schedule::{plan_gemm_tile, plan_rows_gemm, SwCost};
+        let mut rng = SplitMix64::new(77);
+        let pool = crate::dataflow::workers::WorkerPool::new(3);
+        for (h, w, c, k, kh, kw, stride) in [
+            (12usize, 10usize, 4usize, 5usize, 3usize, 3usize, 1usize),
+            (9, 9, 3, 6, 3, 3, 2),
+            (7, 7, 2, 3, 5, 5, 1),
+        ] {
+            let a = rand_t3(&mut rng, h, w, c, 0.15);
+            let (wc, ws) = rand_t4(&mut rng, k, kh, kw, c, 0.15);
+            let fw = FusedWeights::fuse(&wc, &ws);
+            let want = Engine::single_threaded().conv2d(&a, &fw, stride);
+            let mut cols = Vec::new();
+            encode_cols(&a.data, &mut cols);
+            let (ho, wo) = (want.h, want.w);
+            let work = (ho * wo * k * kh * kw * c) as u64;
+            for eng in [
+                Engine::single_threaded(),
+                Engine::with_threads(3),
+                Engine::pooled_forced(pool.clone()),
+            ] {
+                for forced in [false, true] {
+                    let plan = plan_rows_gemm(
+                        ho,
+                        work,
+                        wo,
+                        fw.kdim(),
+                        eng.num_threads(),
+                        &SwCost::pooled(),
+                        forced,
+                    );
+                    let tile = plan.gemm.clone().expect("gemm plan carries a tile");
+                    let mut scratch = vec![0u8; tile.scratch_len];
+                    for requant in [false, true] {
+                        let mut got = vec![7i32; want.len()];
+                        eng.conv2d_gemm_plan(
+                            &cols,
+                            a.h,
+                            a.w,
+                            &fw,
+                            stride,
+                            &mut got,
+                            &plan,
+                            &tile,
+                            requant,
+                            None,
+                            &mut scratch,
+                        );
+                        let mut expect = want.data.clone();
+                        if requant {
+                            requant_rows(&mut expect);
+                        }
+                        assert_eq!(
+                            got, expect,
+                            "h={h} k={k} s={stride} threads={} forced={forced} rq={requant}",
+                            eng.num_threads()
+                        );
+                    }
+                }
+            }
+            // a parallel plan executed serially (1-thread engine) must
+            // fit its whole-output pack in the same scratch
+            let par = plan_rows_gemm(ho, work, wo, fw.kdim(), 3, &SwCost::pooled(), true);
+            if let Some(tile) = &par.gemm {
+                let mut scratch = vec![0u8; tile.scratch_len];
+                let mut got = vec![0i32; want.len()];
+                Engine::single_threaded().conv2d_gemm_plan(
+                    &cols,
+                    a.h,
+                    a.w,
+                    &fw,
+                    stride,
+                    &mut got,
+                    &par,
+                    tile,
+                    false,
+                    None,
+                    &mut scratch,
+                );
+                assert_eq!(got, want.data, "serial fallback of parallel plan");
+            }
+            // tile built for explicit odd chunkings still matches
+            let chunks = balanced_chunks(ho, 3);
+            let tile = plan_gemm_tile(&chunks, ho, wo, fw.kdim());
+            let plan = StepPlan {
+                split: Split::Rows,
+                chunks,
+                threads: 3,
+                work,
+                predicted_util: 0.5,
+                gemm: Some(tile.clone()),
+            };
+            let mut scratch = vec![0u8; tile.scratch_len];
+            let mut got = vec![0i32; want.len()];
+            Engine::with_threads(3).conv2d_gemm_plan(
+                &cols,
+                a.h,
+                a.w,
+                &fw,
+                stride,
+                &mut got,
+                &plan,
+                &tile,
+                false,
+                None,
+                &mut scratch,
+            );
+            assert_eq!(got, want.data, "explicit 3-chunk tiling h={h} k={k}");
+        }
     }
 
     #[test]

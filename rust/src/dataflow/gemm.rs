@@ -1,0 +1,365 @@
+//! Packed LUT-GEMM: the im2col / panel-packed conv kernel.
+//!
+//! The row kernels in `engine` walk the input patch per output pixel, so
+//! every MAC pays an address computation against the layer's shape. This
+//! module recasts conv as the classic packed-panel GEMM (the
+//! `ConvGemm` + `tract_linalg::MatMul` structure, BLIS-style), adapted
+//! to the u8 LUT domain:
+//!
+//! * **Weight panels** ([`pack_weight_panels`]): the fused `[K, kh, kw,
+//!   C]` LUT rows are repacked once per layer into [`GEMM_NR`]-wide
+//!   column panels — `data[jb·NR·kdim + t·NR + j]` — so the micro-kernel
+//!   reads NR weight bytes per tap from one contiguous, forward-moving
+//!   stream. Filter tails pad with row 0 (the all-zero LUT row), which
+//!   is numerically free.
+//! * **Pixel panels** ([`pack_cols`]): im2col over the encoded
+//!   activation columns, `mr` output pixels interleaved per tap —
+//!   `dst[pb·mr·kdim + t·mr + lane]` — so the micro-kernel reads MR
+//!   activation bytes per tap from a second contiguous stream. Dead
+//!   lanes pad with column 0 (zero product), also free.
+//! * **Micro-kernel** (`tile_into`): an MR×NR register tile of i32
+//!   accumulators; each tap is MR+NR byte loads feeding MR·NR unrolled
+//!   LUT gathers (16 at the full 4×4 tile). ReLU+requant folds into the
+//!   tile epilogue on fully-accumulated psums.
+//!
+//! Bit-exactness is free by construction: log-domain products are exact
+//! integers, i32 wrapping addition is order-independent, and every pad
+//! lane/row contributes an exact 0 — so the GEMM path produces the same
+//! bits as `exec::conv2d` and the row kernels (pinned in
+//! `tests/gemm_kernel.rs`).
+//!
+//! The planner — not this module — decides when the GEMM path runs and
+//! how it tiles: see `schedule::plan_rows_gemm` / `GemmTile`.
+
+use super::engine::{FusedWeights, PROD_LUT};
+use crate::lns::tables::requant_act;
+
+/// Filter-panel width (micro-kernel columns). Fixed: 4 i32 accumulator
+/// columns × the 4-deep pixel dimension keeps the full tile in
+/// registers on every 64-bit target.
+pub const GEMM_NR: usize = 4;
+
+/// A weight tensor repacked into [`GEMM_NR`]-wide column panels, built
+/// once per layer (lazily, at first GEMM execution) and shared across
+/// every request that runs the layer.
+#[derive(Clone, Debug)]
+pub struct PanelData {
+    /// Panel width the data was packed at (= [`GEMM_NR`]).
+    pub nr: usize,
+    /// im2col depth `kh·kw·c`: bytes per filter.
+    pub kdim: usize,
+    /// Live filters (panel tails beyond `k` are zero rows).
+    pub k: usize,
+    /// `ceil(k/nr)` panels of `nr·kdim` bytes:
+    /// `data[jb·nr·kdim + t·nr + j]` is filter `jb·nr + j`, tap `t`.
+    pub data: Vec<u8>,
+}
+
+/// Repack fused LUT rows (`[K, kh, kw, C]`, `kdim` bytes per filter)
+/// into [`GEMM_NR`]-wide panels. Tail filters beyond `k` pack LUT row 0
+/// (all-zero products), so the micro-kernel never branches on the
+/// filter tail.
+pub fn pack_weight_panels(rows: &[u8], k: usize, kdim: usize) -> PanelData {
+    assert_eq!(rows.len(), k * kdim, "fused rows/shape mismatch");
+    let npanels = k.div_ceil(GEMM_NR).max(1);
+    let mut data = vec![0u8; npanels * GEMM_NR * kdim];
+    for (f, filter) in rows.chunks_exact(kdim).enumerate() {
+        let (jb, j) = (f / GEMM_NR, f % GEMM_NR);
+        let pbase = jb * GEMM_NR * kdim;
+        for (t, &r) in filter.iter().enumerate() {
+            data[pbase + t * GEMM_NR + j] = r;
+        }
+    }
+    PanelData { nr: GEMM_NR, kdim, k, data }
+}
+
+/// im2col pixel-panel packing: gather the receptive fields of `npix`
+/// consecutive output pixels (absolute pixel index `p0 ..`, row-major
+/// over a `wo`-wide output) from the encoded activation `cols`
+/// (`[ah, aw, c]`, already padded) into `mr`-lane interleaved panels:
+/// `dst[pb·mr·kdim + t·mr + lane]` is pixel `p0 + pb·mr + lane`, tap
+/// `t = (dy·kw + dx)·c + ch` — the exact tap order of the fused weight
+/// rows. Dead lanes (pixel tail) stay column 0 (zero product).
+///
+/// `dst` must hold exactly `ceil(npix/mr)·mr·kdim` bytes.
+#[allow(clippy::too_many_arguments)]
+pub fn pack_cols(
+    cols: &[u8],
+    aw: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    wo: usize,
+    p0: usize,
+    npix: usize,
+    mr: usize,
+    dst: &mut [u8],
+) {
+    let kdim = kh * kw * c;
+    let npanels = npix.div_ceil(mr);
+    assert_eq!(dst.len(), npanels * mr * kdim, "panel scratch/shape mismatch");
+    dst.fill(0);
+    for pb in 0..npanels {
+        let pbase = pb * mr * kdim;
+        let live = (npix - pb * mr).min(mr);
+        for lane in 0..live {
+            let p = p0 + pb * mr + lane;
+            let (i, j) = (p / wo, p % wo);
+            let abase = (i * stride * aw + j * stride) * c;
+            for dy in 0..kh {
+                for dx in 0..kw {
+                    let src = &cols[abase + (dy * aw + dx) * c..][..c];
+                    let tbase = pbase + (dy * kw + dx) * c * mr + lane;
+                    for (ch, &col) in src.iter().enumerate() {
+                        dst[tbase + ch * mr] = col;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The register-blocked micro-kernel: one MR×[`GEMM_NR`] tile of i32
+/// accumulators over `kdim` taps — MR+NR byte loads feeding MR·NR
+/// unrolled LUT gathers per tap (16 at the full 4×4 tile). The epilogue
+/// writes the `live × jlive` live corner into the pixel-major output
+/// (`out[pixel·k + filter]`), folding ReLU+requant on the
+/// fully-accumulated psums when asked.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn tile_into<const MR: usize>(
+    apanel: &[u8],
+    wpanel: &[u8],
+    kdim: usize,
+    out: &mut [i32],
+    p0: usize,
+    live: usize,
+    j0: usize,
+    jlive: usize,
+    k: usize,
+    requant: bool,
+) {
+    let mut acc = [[0i32; GEMM_NR]; MR];
+    for t in 0..kdim {
+        let a = &apanel[t * MR..t * MR + MR];
+        let w = &wpanel[t * GEMM_NR..t * GEMM_NR + GEMM_NR];
+        for (lane, arow) in acc.iter_mut().enumerate() {
+            let col = (a[lane] & 63) as usize;
+            for (j, av) in arow.iter_mut().enumerate() {
+                *av = av.wrapping_add(PROD_LUT[w[j] as usize][col]);
+            }
+        }
+    }
+    for (lane, arow) in acc.iter().enumerate().take(live) {
+        let obase = (p0 + lane) * k + j0;
+        for (j, o) in out[obase..obase + jlive].iter_mut().enumerate() {
+            *o = if requant { requant_act(arow[j]) } else { arow[j] };
+        }
+    }
+}
+
+/// Run the packed-GEMM conv kernel over one chunk of output rows:
+/// pack the chunk's pixel panels into `scratch` (its private window of
+/// the arena's GEMM scratch), then sweep pixel panels × weight panels
+/// through the micro-kernel. `out` covers output rows `i0 ..` as
+/// contiguous `[wo × K]` blocks — the same contract as
+/// `engine::conv_rows` — and every output element is written exactly
+/// once (no pre-zeroing needed).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_chunk(
+    cols: &[u8],
+    aw: usize,
+    fw: &FusedWeights,
+    stride: usize,
+    i0: usize,
+    out: &mut [i32],
+    wo: usize,
+    mr: usize,
+    scratch: &mut [u8],
+    requant: bool,
+) {
+    let k = fw.k;
+    let kdim = fw.kdim();
+    debug_assert_eq!(out.len() % (wo * k), 0, "out must be whole output rows");
+    let npix = out.len() / k;
+    let npanels = npix.div_ceil(mr);
+    let panels = fw.gemm_panels();
+    debug_assert_eq!(panels.kdim, kdim);
+    pack_cols(
+        cols,
+        aw,
+        fw.c,
+        fw.kh,
+        fw.kw,
+        stride,
+        wo,
+        i0 * wo,
+        npix,
+        mr,
+        &mut scratch[..npanels * mr * kdim],
+    );
+    let nj = k.div_ceil(GEMM_NR);
+    for pb in 0..npanels {
+        let apanel = &scratch[pb * mr * kdim..(pb + 1) * mr * kdim];
+        let p0 = pb * mr;
+        let live = (npix - p0).min(mr);
+        for jb in 0..nj {
+            let wpanel = &panels.data[jb * GEMM_NR * kdim..(jb + 1) * GEMM_NR * kdim];
+            let j0 = jb * GEMM_NR;
+            let jlive = (k - j0).min(GEMM_NR);
+            match mr {
+                4 => tile_into::<4>(apanel, wpanel, kdim, out, p0, live, j0, jlive, k, requant),
+                2 => tile_into::<2>(apanel, wpanel, kdim, out, p0, live, j0, jlive, k, requant),
+                _ => tile_into::<1>(apanel, wpanel, kdim, out, p0, live, j0, jlive, k, requant),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::engine::{conv_rows, encode_cols, FusedWeights};
+    use crate::lns::logquant::ZERO_CODE;
+    use crate::tensor::{out_dim, Tensor3, Tensor4};
+    use crate::util::prng::SplitMix64;
+
+    fn rand_fused(rng: &mut SplitMix64, k: usize, kh: usize, kw: usize, c: usize) -> FusedWeights {
+        let mut wc = Tensor4::new(k, kh, kw, c);
+        let mut ws = Tensor4::new(k, kh, kw, c);
+        for v in wc.data.iter_mut() {
+            *v = if rng.bool(0.15) { ZERO_CODE } else { rng.range_i32(-12, 8) };
+        }
+        for v in ws.data.iter_mut() {
+            *v = rng.sign();
+        }
+        FusedWeights::fuse(&wc, &ws)
+    }
+
+    fn rand_cols(rng: &mut SplitMix64, h: usize, w: usize, c: usize) -> Vec<u8> {
+        let mut t = Tensor3::new(h, w, c);
+        for v in t.data.iter_mut() {
+            *v = if rng.bool(0.15) { ZERO_CODE } else { rng.range_i32(-12, 8) };
+        }
+        let mut cols = Vec::new();
+        encode_cols(&t.data, &mut cols);
+        cols
+    }
+
+    #[test]
+    fn weight_panels_round_trip_with_ragged_k() {
+        let mut rng = SplitMix64::new(11);
+        for k in [1usize, 3, 4, 5, 8, 9] {
+            let fw = rand_fused(&mut rng, k, 3, 3, 5);
+            let kdim = fw.kdim();
+            let p = pack_weight_panels(fw.rows(), k, kdim);
+            assert_eq!(p.data.len(), k.div_ceil(GEMM_NR) * GEMM_NR * kdim, "k={k}");
+            for f in 0..k.div_ceil(GEMM_NR) * GEMM_NR {
+                for t in 0..kdim {
+                    let got = p.data[(f / GEMM_NR) * GEMM_NR * kdim + t * GEMM_NR + f % GEMM_NR];
+                    let want = if f < k { fw.rows()[f * kdim + t] } else { 0 };
+                    assert_eq!(got, want, "k={k} filter {f} tap {t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pixel_panels_round_trip_against_naive_gather() {
+        // ragged edges: c=1, pixel tails shorter than mr, stride 2
+        let mut rng = SplitMix64::new(13);
+        for (h, w, c, kh, kw, stride, mr) in [
+            (7usize, 6usize, 3usize, 3usize, 3usize, 1usize, 4usize),
+            (6, 5, 1, 3, 3, 1, 4),  // channels = 1
+            (4, 4, 2, 2, 2, 2, 4),  // stride 2
+            (3, 3, 2, 3, 3, 1, 4),  // single output pixel < mr
+            (5, 7, 4, 1, 1, 1, 2),  // pointwise, mr 2
+            (4, 6, 2, 3, 1, 1, 1),  // mr 1 degenerate
+        ] {
+            let cols = rand_cols(&mut rng, h, w, c);
+            let (ho, wo) = (out_dim(h, kh, stride), out_dim(w, kw, stride));
+            let (kdim, npix) = (kh * kw * c, ho * wo);
+            let mut dst = vec![0xAAu8; npix.div_ceil(mr) * mr * kdim];
+            pack_cols(&cols, w, c, kh, kw, stride, wo, 0, npix, mr, &mut dst);
+            for pb in 0..npix.div_ceil(mr) {
+                for lane in 0..mr {
+                    let p = pb * mr + lane;
+                    for t in 0..kdim {
+                        let got = dst[pb * mr * kdim + t * mr + lane];
+                        let want = if p < npix {
+                            let (i, j) = (p / wo, p % wo);
+                            let (dy, rest) = (t / (kw * c), t % (kw * c));
+                            let (dx, ch) = (rest / c, rest % c);
+                            cols[((i * stride + dy) * w + j * stride + dx) * c + ch]
+                        } else {
+                            0 // dead lane: zero column, zero product
+                        };
+                        assert_eq!(got, want, "h={h} w={w} c={c} p={p} tap {t}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_chunk_matches_conv_rows_including_partial_chunks() {
+        let mut rng = SplitMix64::new(17);
+        for (h, w, c, k, kh, kw, stride) in [
+            (9usize, 8usize, 3usize, 5usize, 3usize, 3usize, 1usize),
+            (8, 7, 2, 4, 3, 3, 2),
+            (6, 6, 4, 3, 1, 1, 1), // pointwise, ragged k
+            (5, 5, 1, 9, 5, 5, 1), // big kernel, c=1, single output row
+        ] {
+            let cols = rand_cols(&mut rng, h, w, c);
+            let fw = rand_fused(&mut rng, k, kh, kw, c);
+            let (ho, wo) = (out_dim(h, kh, stride), out_dim(w, kw, stride));
+            let mut want = vec![0i32; ho * wo * k];
+            conv_rows(&cols, w, &fw, stride, 0, &mut want, wo);
+            for mr in [4usize, 2, 1] {
+                // full output in one chunk
+                let mut scratch = vec![0u8; (ho * wo).div_ceil(mr) * mr * fw.kdim()];
+                let mut got = vec![7i32; want.len()];
+                gemm_chunk(&cols, w, &fw, stride, 0, &mut got, wo, mr, &mut scratch, false);
+                assert_eq!(got, want, "h={h} k={k} stride={stride} mr={mr}");
+                // split into row chunks like a parallel plan would
+                if ho > 1 {
+                    let mut got2 = vec![7i32; want.len()];
+                    let mid = ho / 2;
+                    for (i0, rows) in [(0, mid), (mid, ho - mid)] {
+                        let need = (rows * wo).div_ceil(mr) * mr * fw.kdim();
+                        let mut sc = vec![0u8; need];
+                        gemm_chunk(
+                            &cols,
+                            w,
+                            &fw,
+                            stride,
+                            i0,
+                            &mut got2[i0 * wo * k..(i0 + rows) * wo * k],
+                            wo,
+                            mr,
+                            &mut sc,
+                            false,
+                        );
+                    }
+                    assert_eq!(got2, want, "chunked h={h} k={k} mr={mr}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn requant_folds_into_the_tile_epilogue() {
+        let mut rng = SplitMix64::new(19);
+        let cols = rand_cols(&mut rng, 8, 8, 3);
+        let fw = rand_fused(&mut rng, 6, 3, 3, 3);
+        let (ho, wo) = (6, 6);
+        let mut plain = vec![0i32; ho * wo * 6];
+        conv_rows(&cols, 8, &fw, 1, 0, &mut plain, wo);
+        let want: Vec<i32> = plain.iter().map(|&v| requant_act(v)).collect();
+        let mut scratch = vec![0u8; (ho * wo).div_ceil(4) * 4 * fw.kdim()];
+        let mut got = vec![0i32; want.len()];
+        gemm_chunk(&cols, 8, &fw, 1, 0, &mut got, wo, 4, &mut scratch, true);
+        assert_eq!(got, want);
+    }
+}

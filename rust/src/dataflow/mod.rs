@@ -20,11 +20,19 @@
 //! decision, balanced chunk partition, predicted utilization — executed
 //! verbatim by the engine (`Engine::par_plan`), with batches running
 //! the nested batch×row form ([`run_batch_lockstep`]).
+//!
+//! The conv hot path itself has two planner-selected forms: the row
+//! kernels (`engine::conv_rows` and its 3×3-s1 fast path) and the
+//! packed LUT-GEMM path (`gemm`) — im2col pixel panels packed into
+//! arena scratch driving a register-blocked MR×NR micro-kernel, chosen
+//! per step by [`SwCost::gemm_pays`] and carried on the [`StepPlan`] as
+//! a [`GemmTile`]. Both produce identical bits by construction.
 
 pub mod arena;
 pub mod engine;
 pub mod exec;
 pub mod forward;
+pub mod gemm;
 pub mod pool;
 pub mod program;
 pub mod schedule;
@@ -34,11 +42,12 @@ pub mod workers;
 pub use arena::ActivationArena;
 pub use engine::{Engine, EngineOptions, FusedWeights, PlanTimer};
 pub use forward::{forward_engine, forward_ref, ForwardPlan};
+pub use gemm::{pack_cols, pack_weight_panels, PanelData, GEMM_NR};
 pub use program::{
     cached_program, explain_rows, run_batch_lockstep, ModelProgram, ProgramExecutor, ProgramPlan,
 };
 pub use schedule::{
-    analyze, balanced_chunks, plan_rows, plan_rows_forced, plan_rows_threshold, LayerPerf,
-    ScheduleOptions, Split, StepPlan, SwCost,
+    analyze, balanced_chunks, plan_gemm_tile, plan_rows, plan_rows_forced, plan_rows_gemm,
+    plan_rows_threshold, GemmTile, LayerPerf, ScheduleOptions, Split, StepPlan, SwCost,
 };
 pub use workers::WorkerPool;

@@ -48,14 +48,15 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
-use super::arena::{ensure_len, ActivationArena};
+use super::arena::{ensure_len, ensure_len_u8, ActivationArena};
 use super::engine::{
     conv_rows, depthwise_rows, encode_cols, fc_rows, requant_rows, Engine, PlanTimer,
 };
 use super::forward::{ForwardPlan, Routing, Source};
+use super::gemm::gemm_chunk;
 use super::pool::{avgpool_rows, maxpool_rows};
 use super::schedule::{
-    analyze, plan_rows, plan_rows_forced, ScheduleOptions, Split, StepPlan, SwCost,
+    analyze, plan_rows, plan_rows_forced, plan_rows_gemm, ScheduleOptions, Split, StepPlan, SwCost,
 };
 use crate::arch::config::GridConfig;
 use crate::lns::logquant::ZERO_CODE;
@@ -156,6 +157,9 @@ pub struct Step {
     /// Software cost-model work estimate: LUT-MACs for compute layers,
     /// element ops for pools — the input of every [`StepPlan`] decision.
     pub work: u64,
+    /// im2col depth `kh·kw·cin` for standard-conv steps (the GEMM
+    /// planner's pack-cost input), 0 for every other kernel.
+    pub kdim: usize,
     /// Analytic *hardware* utilization of this layer on the NeuroMAX
     /// grid (`schedule::analyze`, default options) — the paper-Fig.19
     /// column of the `EXPLAIN` table, carried next to the software plan
@@ -337,6 +341,15 @@ impl ModelProgram {
                 Op::Pool { k, .. } => (out_h * out_w * out_c * k * k) as u64,
                 _ => l.macs(),
             };
+            // GEMM candidates are the standard-conv kernels (depthwise
+            // has no shared im2col panel; pools/fc have no patch walk)
+            let kdim = match l.op {
+                Op::Conv { .. } | Op::Pointwise { .. } => {
+                    let (kh2, kw2, _) = l.kernel();
+                    kh2 * kw2 * l.cin
+                }
+                _ => 0,
+            };
             let hw_util = analyze(&grid, l, ScheduleOptions::default()).util_total(&grid);
             steps.push(Step {
                 layer: i,
@@ -348,6 +361,7 @@ impl ModelProgram {
                 out_c,
                 requant: l.is_compute() && i + 1 < n,
                 work,
+                kdim,
                 hw_util,
             });
         }
@@ -407,6 +421,10 @@ impl ProgramPlan {
     /// Plan every step of `prog` for an engine with `threads` lanes on
     /// the given substrate. `forced` mirrors the forced-parallel test
     /// engines (`par_min_work == 1`): every step with >1 row splits.
+    ///
+    /// Standard-conv steps are routed between the row kernels and the
+    /// packed-GEMM kernel here, from [`SwCost::gemm_pays`] — the planner
+    /// owns the kernel choice; the executor runs whatever the plan says.
     pub fn compile(prog: &ModelProgram, threads: usize, pooled: bool, forced: bool) -> ProgramPlan {
         let cost = SwCost::for_substrate(pooled);
         let steps = prog
@@ -414,7 +432,12 @@ impl ProgramPlan {
             .iter()
             .map(|s| {
                 let rows = s.plan_rows_axis();
-                if forced {
+                let gemm_eligible = s.kdim > 0
+                    && matches!(s.kernel, Kernel::Conv3x3S1 | Kernel::Conv { .. });
+                let pack_bytes = s.out_h * s.out_w * s.kdim;
+                if gemm_eligible && cost.gemm_pays(s.work, pack_bytes) {
+                    plan_rows_gemm(rows, s.work, s.out_w, s.kdim, threads, &cost, forced)
+                } else if forced {
                     plan_rows_forced(rows, s.work, threads, &cost)
                 } else {
                     plan_rows(rows, s.work, threads, &cost)
@@ -442,7 +465,10 @@ impl ProgramPlan {
         self.steps
             .iter()
             .map(|p| {
-                let serial = p.work as f64 * cost.ns_per_mac;
+                let serial = match &p.gemm {
+                    Some(t) => cost.gemm_serial_ns(p.work, t.scratch_len),
+                    None => p.work as f64 * cost.ns_per_mac,
+                };
                 match p.split {
                     Split::Rows => {
                         let eff = (p.threads.max(1) as f64) * p.predicted_util.max(1e-6);
@@ -457,9 +483,13 @@ impl ProgramPlan {
 
 /// Render the compiled plan table, one line per step — the payload of
 /// the `EXPLAIN <model>` protocol verb and the `explain` CLI: step
-/// index, layer, kernel, shapes, split, chunk count, cost-model work,
-/// and the predicted utilization pair (analytic hardware grid vs
-/// software engine) — the serving-stack counterpart of paper Fig. 19.
+/// index, layer, the kernel the planner *chose* for this engine shape
+/// (`gemm` + its tile when the cost model routed the conv to the
+/// packed-GEMM path, `row3x3`/`generic` for the row kernels,
+/// `depthwise`/`pool`/`fc` otherwise), shapes, split, chunk count,
+/// cost-model work, and the predicted utilization pair (analytic
+/// hardware grid vs software engine) — the serving-stack counterpart of
+/// paper Fig. 19.
 pub fn explain_rows(net: &Network, prog: &ModelProgram, plan: &ProgramPlan) -> Vec<String> {
     assert_eq!(prog.steps.len(), plan.steps.len(), "plan/program mismatch");
     prog.steps
@@ -471,13 +501,15 @@ pub fn explain_rows(net: &Network, prog: &ModelProgram, plan: &ProgramPlan) -> V
                 Input::Staged(sp) => (sp.h, sp.w, sp.c),
                 Input::Direct(op) => (op.h, op.w, op.c),
             };
-            let kernel = match s.kernel {
-                Kernel::Conv3x3S1 => "conv3x3s1".to_string(),
-                Kernel::Conv { stride } => format!("conv_s{stride}"),
-                Kernel::Depthwise { stride } => format!("dw_s{stride}"),
-                Kernel::MaxPool { k, stride } => format!("maxpool{k}_s{stride}"),
-                Kernel::AvgPool { k, stride } => format!("avgpool{k}_s{stride}"),
-                Kernel::Fc => "fc".to_string(),
+            let kernel = match (s.kernel, p.gemm.as_ref()) {
+                (Kernel::Conv3x3S1 | Kernel::Conv { .. }, Some(t)) => {
+                    format!("gemm tile={}x{}", t.mr, t.nr)
+                }
+                (Kernel::Conv3x3S1, None) => "row3x3".to_string(),
+                (Kernel::Conv { .. }, None) => "generic".to_string(),
+                (Kernel::Depthwise { .. }, _) => "depthwise".to_string(),
+                (Kernel::MaxPool { .. } | Kernel::AvgPool { .. }, _) => "pool".to_string(),
+                (Kernel::Fc, _) => "fc".to_string(),
             };
             let split = match p.split {
                 Split::Serial => "serial",
@@ -721,6 +753,7 @@ impl ProgramExecutor {
             {
                 let slots = &arena.slots;
                 let cols = &mut arena.cols;
+                let gemm_scratch = &mut arena.gemm;
                 let grow = &mut arena.grow_events;
                 // measured utilization is only meaningful against a
                 // multi-lane engine (a 1-wide lane is 100% by definition)
@@ -733,17 +766,36 @@ impl ProgramExecutor {
                     k @ (Kernel::Conv3x3S1 | Kernel::Conv { .. }) => {
                         let stride = if let Kernel::Conv { stride } = k { stride } else { 1 };
                         encode_cols_counted(src, cols, grow);
-                        eng.conv2d_cols_plan(
-                            cols,
-                            sh,
-                            sw,
-                            fw.expect("conv weights"),
-                            stride,
-                            dst,
-                            sp,
-                            step.requant,
-                            timer,
-                        );
+                        if let Some(tile) = &sp.gemm {
+                            // planner routed this conv to the packed-GEMM
+                            // kernel; scratch grows once per executor
+                            ensure_len_u8(gemm_scratch, tile.scratch_len, grow);
+                            eng.conv2d_gemm_plan(
+                                cols,
+                                sh,
+                                sw,
+                                fw.expect("conv weights"),
+                                stride,
+                                dst,
+                                sp,
+                                tile,
+                                step.requant,
+                                timer,
+                                gemm_scratch,
+                            );
+                        } else {
+                            eng.conv2d_cols_plan(
+                                cols,
+                                sh,
+                                sw,
+                                fw.expect("conv weights"),
+                                stride,
+                                dst,
+                                sp,
+                                step.requant,
+                                timer,
+                            );
+                        }
                     }
                     Kernel::Depthwise { stride } => {
                         encode_cols_counted(src, cols, grow);
@@ -806,6 +858,11 @@ struct ElemCtx {
     src_len: usize,
     dst: *mut i32,
     dst_len: usize,
+    /// The element's GEMM panel scratch (null-able only in the sense of
+    /// being empty when the step has no GEMM tile); row chunks index
+    /// disjoint windows via the tile's prefix-sum offsets.
+    gemm: *mut u8,
+    gemm_len: usize,
 }
 
 struct CtxTable<'a>(&'a [ElemCtx]);
@@ -859,15 +916,18 @@ pub fn run_batch_lockstep(
     // context spines reused across every step of the batch
     let mut dsts: Vec<Vec<i32>> = Vec::with_capacity(k);
     let mut colbufs: Vec<Vec<u8>> = Vec::with_capacity(k);
+    let mut gembufs: Vec<Vec<u8>> = Vec::with_capacity(k);
     let mut ctx_buf: Vec<ElemCtx> = Vec::with_capacity(k);
     for (si, step) in prog.steps.iter().enumerate() {
         let sp = &plan.steps[si];
         // publish the step coordinate for deterministic fault injection
         crate::util::fault::set_step(si);
         // phase 1 (submitting thread): stage/encode every element and
-        // take its output + column buffers out of the arena
+        // take its output + column (+ GEMM scratch) buffers out of the
+        // arena
         dsts.clear();
         colbufs.clear();
+        gembufs.clear();
         for (ex, &x) in execs.iter_mut().zip(inputs) {
             let arena = &mut ex.arena;
             if let Input::Staged(spl) = &step.input {
@@ -883,8 +943,13 @@ pub fn run_batch_lockstep(
                 let (src, _, _, _) = step_src(step, &arena.slots, x);
                 encode_cols_counted(src, &mut cols, &mut arena.grow_events);
             }
+            let mut gemm = std::mem::take(&mut arena.gemm);
+            if let Some(tile) = &sp.gemm {
+                ensure_len_u8(&mut gemm, tile.scratch_len, &mut arena.grow_events);
+            }
             dsts.push(outbuf);
             colbufs.push(cols);
+            gembufs.push(gemm);
         }
         // phase 2: ONE job over (element × chunk) pairs. Buffers are
         // frozen now — the context table below captures raw views.
@@ -899,6 +964,8 @@ pub fn run_batch_lockstep(
                     src_len: src.len(),
                     dst: dsts[e].as_mut_ptr(),
                     dst_len: step.out_len(),
+                    gemm: gembufs[e].as_mut_ptr(),
+                    gemm_len: gembufs[e].len(),
                 });
             }
             let ctxs = CtxTable(&ctx_buf);
@@ -938,10 +1005,46 @@ pub fn run_batch_lockstep(
                     kk @ (Kernel::Conv3x3S1 | Kernel::Conv { .. }) => {
                         let stride =
                             if let Kernel::Conv { stride } = kk { stride } else { 1 };
-                        dst.fill(0);
-                        conv_rows(cols, sw_in, fw.expect("conv weights"), stride, start, dst, wo);
-                        if step.requant {
-                            requant_rows(dst);
+                        if let Some(tile) = &sp.gemm {
+                            let need = (rows * wo).div_ceil(tile.mr) * tile.mr * tile.kdim;
+                            let off = if sp.split == Split::Rows {
+                                tile.scratch_off[c]
+                            } else {
+                                0
+                            };
+                            debug_assert!(off + need <= ctx.gemm_len);
+                            // SAFETY: same disjointness argument as dst —
+                            // the tile's prefix-sum windows partition
+                            // element e's scratch across its row chunks
+                            let sc = unsafe {
+                                std::slice::from_raw_parts_mut(ctx.gemm.add(off), need)
+                            };
+                            gemm_chunk(
+                                cols,
+                                sw_in,
+                                fw.expect("conv weights"),
+                                stride,
+                                start,
+                                dst,
+                                wo,
+                                tile.mr,
+                                sc,
+                                step.requant,
+                            );
+                        } else {
+                            dst.fill(0);
+                            conv_rows(
+                                cols,
+                                sw_in,
+                                fw.expect("conv weights"),
+                                stride,
+                                start,
+                                dst,
+                                wo,
+                            );
+                            if step.requant {
+                                requant_rows(dst);
+                            }
                         }
                     }
                     Kernel::Depthwise { stride } => {
@@ -992,9 +1095,15 @@ pub fn run_batch_lockstep(
         }
         // phase 3: hand the buffers back to their arenas (drain keeps
         // the spines' capacity for the next step)
-        for ((ex, dst), cols) in execs.iter_mut().zip(dsts.drain(..)).zip(colbufs.drain(..)) {
+        for (((ex, dst), cols), gemm) in execs
+            .iter_mut()
+            .zip(dsts.drain(..))
+            .zip(colbufs.drain(..))
+            .zip(gembufs.drain(..))
+        {
             ex.arena.slots[step.out_slot] = dst;
             ex.arena.cols = cols;
+            ex.arena.gemm = gemm;
         }
     }
     let (oh, ow, oc) = prog.out_dims;
@@ -1148,6 +1257,52 @@ mod tests {
             for key in keys {
                 assert!(row.contains(key), "row {i} missing {key}: {row}");
             }
+        }
+    }
+
+    #[test]
+    fn planner_routes_big_convs_to_gemm_and_explain_shows_it() {
+        // every zoo test profile has at least one conv past the GEMM
+        // break-even; depthwise/pool/fc steps never carry a tile
+        for name in ["tinycnn", "squeezenet", "resnet34"] {
+            let net = workload::test_profile(name).unwrap();
+            let prog = cached_program(&net).unwrap();
+            let plan = prog.plans_for(4, true, false);
+            let mut gemm_steps = 0;
+            for (s, p) in prog.steps.iter().zip(&plan.steps) {
+                match s.kernel {
+                    Kernel::Conv3x3S1 | Kernel::Conv { .. } => {
+                        if let Some(t) = &p.gemm {
+                            gemm_steps += 1;
+                            assert_eq!(t.kdim, s.kdim, "{name}: tile kdim mismatch");
+                            assert!(t.scratch_len > 0, "{name}: empty gemm scratch");
+                        }
+                    }
+                    _ => assert!(p.gemm.is_none(), "{name}: non-conv step carries a tile"),
+                }
+            }
+            assert!(gemm_steps > 0, "{name}: planner never chose the GEMM kernel");
+            let rows = explain_rows(&net, &prog, &plan);
+            assert!(
+                rows.iter().any(|r| r.contains("kernel=gemm tile=")),
+                "{name}: EXPLAIN must show the gemm kernel choice"
+            );
+        }
+        // the planner decision follows the cost model exactly
+        let net = workload::test_profile("resnet34").unwrap();
+        let prog = cached_program(&net).unwrap();
+        let cost = SwCost::pooled();
+        let plan = prog.plans_for(4, true, false);
+        for (s, p) in prog.steps.iter().zip(&plan.steps) {
+            let eligible = s.kdim > 0
+                && matches!(s.kernel, Kernel::Conv3x3S1 | Kernel::Conv { .. });
+            let expect = eligible && cost.gemm_pays(s.work, s.out_h * s.out_w * s.kdim);
+            assert_eq!(
+                p.gemm.is_some(),
+                expect,
+                "layer {} diverged from the cost model",
+                s.layer
+            );
         }
     }
 

@@ -17,6 +17,7 @@
 //! * 1×1: channels spread over matrix columns (3/matrix → 18 in parallel),
 //!   6 pixels per matrix row, 3 filters per thread triple (Fig. 11/12).
 
+use super::gemm::GEMM_NR;
 use super::tile::{self, Traffic};
 use crate::arch::config::GridConfig;
 use crate::models::layer::{LayerDesc, Op};
@@ -209,6 +210,17 @@ pub struct SwCost {
     /// Serial cost of one fused LUT-MAC (element op for pools) through
     /// the engine's row kernels.
     pub ns_per_mac: f64,
+    /// Serial cost of one fused LUT-MAC through the packed-GEMM
+    /// micro-kernel (register-blocked MR×NR tiles amortize loads over
+    /// MR+NR bytes per MR·NR products, so this sits well below
+    /// `ns_per_mac`).
+    pub ns_per_mac_gemm: f64,
+    /// Per-byte cost of im2col panel packing (gather + store per packed
+    /// activation byte) — the price the GEMM path pays up front.
+    pub gemm_pack_ns: f64,
+    /// Fixed per-step overhead of the GEMM path (tile bookkeeping,
+    /// scratch window setup) — keeps trivial layers on the row kernels.
+    pub gemm_setup_ns: f64,
     /// One-time cost of publishing a job to the parallel substrate
     /// (condvar broadcast for the pool; scope setup for scoped threads).
     pub dispatch_ns: f64,
@@ -224,13 +236,26 @@ pub struct SwCost {
 impl SwCost {
     /// Costs for the persistent worker-pool substrate (parked workers).
     pub fn pooled() -> Self {
-        SwCost { ns_per_mac: 0.7, dispatch_ns: 6_000.0, chunk_ns: 400.0, chunks_per_worker: 2 }
+        SwCost {
+            ns_per_mac: 0.7,
+            ns_per_mac_gemm: 0.45,
+            gemm_pack_ns: 1.2,
+            gemm_setup_ns: 2_000.0,
+            dispatch_ns: 6_000.0,
+            chunk_ns: 400.0,
+            chunks_per_worker: 2,
+        }
     }
 
     /// Costs for the legacy scoped-thread substrate (spawn per chunk).
+    /// The micro-kernel constants match [`SwCost::pooled`] — the GEMM
+    /// inner loop does not depend on the parallel substrate.
     pub fn scoped() -> Self {
         SwCost {
             ns_per_mac: 0.7,
+            ns_per_mac_gemm: 0.45,
+            gemm_pack_ns: 1.2,
+            gemm_setup_ns: 2_000.0,
             dispatch_ns: 40_000.0,
             chunk_ns: 12_000.0,
             chunks_per_worker: 1,
@@ -250,13 +275,35 @@ impl SwCost {
     /// and per-chunk overhead? The break-even behind every
     /// [`Split::Serial`] decision.
     pub fn parallel_pays(&self, rows: usize, work: u64, threads: usize) -> bool {
+        self.parallel_pays_ns(rows, work as f64 * self.ns_per_mac, threads)
+    }
+
+    /// Substrate break-even for an arbitrary serial cost estimate — the
+    /// shared tail of [`SwCost::parallel_pays`] (row kernels) and the
+    /// GEMM path's split decision, which amortizes packing differently.
+    pub fn parallel_pays_ns(&self, rows: usize, serial_ns: f64, threads: usize) -> bool {
         if threads <= 1 || rows <= 1 {
             return false;
         }
         let lanes = threads.min(rows) as f64;
-        let serial_ns = work as f64 * self.ns_per_mac;
         let chunks = (threads * self.chunks_per_worker).min(rows) as f64;
         serial_ns * (1.0 - 1.0 / lanes) > self.dispatch_ns + self.chunk_ns * chunks
+    }
+
+    /// Predicted serial wall of the packed-GEMM path: micro-kernel MACs
+    /// plus the up-front im2col pack of `pack_bytes` activation bytes
+    /// plus the fixed setup toll.
+    pub fn gemm_serial_ns(&self, work: u64, pack_bytes: usize) -> f64 {
+        work as f64 * self.ns_per_mac_gemm
+            + pack_bytes as f64 * self.gemm_pack_ns
+            + self.gemm_setup_ns
+    }
+
+    /// Does the packed-GEMM path beat the row kernels on this step? The
+    /// GEMM-vs-row decision the program compiler makes per conv step —
+    /// the planner, not the runtime, owns the kernel choice.
+    pub fn gemm_pays(&self, work: u64, pack_bytes: usize) -> bool {
+        work as f64 * self.ns_per_mac > self.gemm_serial_ns(work, pack_bytes)
     }
 }
 
@@ -268,6 +315,29 @@ pub enum Split {
     Serial,
     /// Balanced row chunks spread across the worker lanes.
     Rows,
+}
+
+/// Compile-time tiling of one packed-GEMM conv step: the micro-kernel
+/// tile shape plus the per-chunk im2col scratch partition. Built by
+/// [`plan_gemm_tile`] and executed verbatim by the engine — every chunk
+/// packs its pixel panels into its own disjoint scratch window, so the
+/// parallel GEMM path needs no locking and no per-call allocation.
+#[derive(Clone, Debug)]
+pub struct GemmTile {
+    /// Pixel-panel height (micro-kernel rows): 4 when every chunk has
+    /// ≥4 output pixels, degrading to 2 / 1 on tiny tails.
+    pub mr: usize,
+    /// Filter-panel width (micro-kernel columns) — fixed at
+    /// [`GEMM_NR`]; filter tails are zero-row padded inside the panel.
+    pub nr: usize,
+    /// im2col depth `kh·kw·cin`: bytes per packed pixel lane.
+    pub kdim: usize,
+    /// Byte offset of each chunk's scratch window, aligned with
+    /// `StepPlan::chunks` (a single `[0]` entry for serial plans).
+    pub scratch_off: Vec<usize>,
+    /// Total im2col scratch bytes the step needs (sum of the padded
+    /// per-chunk windows).
+    pub scratch_len: usize,
 }
 
 /// The compile-time execution plan of one program step: the split
@@ -287,6 +357,9 @@ pub struct StepPlan {
     /// Predicted software utilization: busy-lane time over
     /// `threads × predicted step wall`.
     pub predicted_util: f64,
+    /// Packed-GEMM tiling when the cost model routed this conv step to
+    /// the GEMM kernel (`None` → row kernels).
+    pub gemm: Option<GemmTile>,
 }
 
 impl StepPlan {
@@ -299,6 +372,7 @@ impl StepPlan {
             threads: t,
             work,
             predicted_util: 1.0 / t as f64,
+            gemm: None,
         }
     }
 }
@@ -335,6 +409,21 @@ pub fn plan_rows(rows: usize, work: u64, threads: usize, cost: &SwCost) -> StepP
 /// test engines; also the tail of [`plan_rows`]). Degenerate shapes
 /// (1 lane, ≤1 row) still fall back to serial.
 pub fn plan_rows_forced(rows: usize, work: u64, threads: usize, cost: &SwCost) -> StepPlan {
+    let serial_ns = (work as f64 * cost.ns_per_mac).max(1.0);
+    plan_rows_partitioned(rows, work, serial_ns, threads, cost)
+}
+
+/// Shared partition tail: balanced chunks at the substrate ratio plus
+/// the wall/utilization prediction for an explicit serial-cost estimate
+/// (row kernels pass `work·ns_per_mac`; the GEMM planner passes
+/// [`SwCost::gemm_serial_ns`]).
+fn plan_rows_partitioned(
+    rows: usize,
+    work: u64,
+    serial_ns: f64,
+    threads: usize,
+    cost: &SwCost,
+) -> StepPlan {
     let t = threads.max(1);
     if t == 1 || rows <= 1 {
         return StepPlan::serial(work, threads);
@@ -346,7 +435,7 @@ pub fn plan_rows_forced(rows: usize, work: u64, threads: usize, cost: &SwCost) -
         loads[i % t] += r;
     }
     let wall_rows = loads.iter().copied().max().unwrap_or(rows);
-    let serial_ns = (work as f64 * cost.ns_per_mac).max(1.0);
+    let serial_ns = serial_ns.max(1.0);
     let wall_ns = serial_ns * wall_rows as f64 / rows as f64
         + cost.dispatch_ns
         + cost.chunk_ns * chunks.len() as f64 / t as f64;
@@ -356,7 +445,65 @@ pub fn plan_rows_forced(rows: usize, work: u64, threads: usize, cost: &SwCost) -
         threads: t,
         work,
         predicted_util: (serial_ns / (t as f64 * wall_ns)).clamp(0.0, 1.0),
+        gemm: None,
     }
+}
+
+/// Tile a GEMM-routed conv step over its planned row chunks: pick the
+/// pixel-panel height MR from the smallest chunk (4 → 2 → 1 so tails
+/// never pack a panel taller than their pixel count) and lay out one
+/// disjoint, padded im2col scratch window per chunk via prefix sums.
+///
+/// The per-chunk window is `ceil(pixels/mr)·mr·kdim` bytes — padded to
+/// whole panels, with dead lanes zero-filled by the packer (LUT column
+/// 0 contributes an exact 0, so panel padding is numerically free).
+/// `div_ceil` subadditivity makes the sum of per-chunk windows at least
+/// the whole-step window, so a serial fallback of a parallel plan
+/// (chunk 0, all rows, offset 0) always fits in `scratch_len`.
+pub fn plan_gemm_tile(chunks: &[(usize, usize)], rows: usize, wo: usize, kdim: usize) -> GemmTile {
+    let serial_part = [(0usize, rows)];
+    let parts: &[(usize, usize)] = if chunks.is_empty() { &serial_part } else { chunks };
+    let min_pixels = parts.iter().map(|&(_, r)| r * wo).min().unwrap_or(0).max(1);
+    let mr = if min_pixels >= 4 {
+        4
+    } else if min_pixels >= 2 {
+        2
+    } else {
+        1
+    };
+    let mut scratch_off = Vec::with_capacity(parts.len());
+    let mut off = 0usize;
+    for &(_, r) in parts {
+        scratch_off.push(off);
+        off += (r * wo).div_ceil(mr) * mr * kdim;
+    }
+    GemmTile { mr, nr: GEMM_NR, kdim, scratch_off, scratch_len: off }
+}
+
+/// Plan a conv step routed to the packed-GEMM kernel: the serial-vs-
+/// parallel break-even runs on [`SwCost::gemm_serial_ns`] (packing
+/// amortizes across lanes just like MACs — each chunk packs its own
+/// window), and the plan always carries the [`GemmTile`] scratch
+/// layout. `forced` mirrors [`plan_rows_forced`] for the
+/// forced-parallel test engines.
+pub fn plan_rows_gemm(
+    rows: usize,
+    work: u64,
+    wo: usize,
+    kdim: usize,
+    threads: usize,
+    cost: &SwCost,
+    forced: bool,
+) -> StepPlan {
+    let pack_bytes = rows * wo * kdim;
+    let serial_ns = cost.gemm_serial_ns(work, pack_bytes);
+    let mut plan = if !forced && !cost.parallel_pays_ns(rows, serial_ns, threads.max(1)) {
+        StepPlan::serial(work, threads)
+    } else {
+        plan_rows_partitioned(rows, work, serial_ns, threads, cost)
+    };
+    plan.gemm = Some(plan_gemm_tile(&plan.chunks, rows, wo, kdim));
+    plan
 }
 
 /// The legacy `PAR_MIN_WORK`-threshold plan the engine's tensor-level
@@ -378,7 +525,7 @@ pub fn plan_rows_threshold(
     }
     let ratio = SwCost::for_substrate(pooled).chunks_per_worker;
     let chunks = balanced_chunks(rows, (threads * ratio).min(rows));
-    StepPlan { split: Split::Rows, chunks, threads, work, predicted_util: 0.0 }
+    StepPlan { split: Split::Rows, chunks, threads, work, predicted_util: 0.0, gemm: None }
 }
 
 /// Analyze a whole network; returns per-layer perf.
@@ -624,6 +771,75 @@ mod tests {
         assert_eq!(plan_rows_forced(1, 1 << 30, 8, &cost).split, Split::Serial);
         let serial = StepPlan::serial(10, 4);
         assert!((serial.predicted_util - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gemm_pays_on_the_acceptance_shapes() {
+        for cost in [SwCost::pooled(), SwCost::scoped()] {
+            // 56²×32→16, 3×3 s1 pad1: the bench's mid shape
+            let work = 56u64 * 56 * 32 * 16 * 9;
+            let pack = 56 * 56 * (9 * 32);
+            assert!(cost.gemm_pays(work, pack), "56²×32×16 must route to gemm");
+            // 9²×128→128 tail: small fmap, deep channels — gemm territory
+            let work = 9u64 * 9 * 128 * 128 * 9;
+            let pack = 9 * 9 * (9 * 128);
+            assert!(cost.gemm_pays(work, pack), "9²×128×128 must route to gemm");
+            // a tiny layer must stay on the row kernels (setup toll wins)
+            let work = 4u64 * 4 * 2 * 2 * 9;
+            let pack = 4 * 4 * (9 * 2);
+            assert!(!cost.gemm_pays(work, pack), "tiny conv must stay on rows");
+        }
+    }
+
+    #[test]
+    fn gemm_tile_partitions_scratch_disjointly() {
+        crate::util::proptest::check("gemm-tile", 300, |rng| {
+            let rows = 1 + rng.below(64) as usize;
+            let wo = 1 + rng.below(64) as usize;
+            let kdim = 1 + rng.below(600) as usize;
+            let threads = 1 + rng.below(12) as usize;
+            let cost = SwCost::for_substrate(rng.bool(0.5));
+            let forced = rng.bool(0.5);
+            let work = (rows * wo) as u64 * kdim as u64 * 8;
+            let plan = plan_rows_gemm(rows, work, wo, kdim, threads, &cost, forced);
+            let tile = plan.gemm.as_ref().expect("gemm plan must carry a tile");
+            crate::prop_assert!(tile.nr == GEMM_NR, "nr {}", tile.nr);
+            crate::prop_assert!([1, 2, 4].contains(&tile.mr), "mr {}", tile.mr);
+            let parts: Vec<(usize, usize)> = if plan.chunks.is_empty() {
+                vec![(0, rows)]
+            } else {
+                plan.chunks.clone()
+            };
+            crate::prop_assert!(
+                tile.scratch_off.len() == parts.len(),
+                "offsets {} for {} chunks",
+                tile.scratch_off.len(),
+                parts.len()
+            );
+            // every chunk's padded window fits, windows are disjoint and
+            // in order, and the total is exactly scratch_len
+            let mut end = 0usize;
+            for (&off, &(_, r)) in tile.scratch_off.iter().zip(&parts) {
+                crate::prop_assert!(off == end, "window gap at {off} (expect {end})");
+                crate::prop_assert!(r * wo >= 1, "empty chunk");
+                crate::prop_assert!(
+                    (r * wo).div_ceil(tile.mr) * tile.mr >= tile.mr,
+                    "window shorter than one panel"
+                );
+                end = off + (r * wo).div_ceil(tile.mr) * tile.mr * kdim;
+            }
+            crate::prop_assert!(end == tile.scratch_len, "len {} != {end}", tile.scratch_len);
+            // serial fallback of a parallel plan: the whole-step window
+            // must fit in the same scratch (div_ceil subadditivity)
+            crate::prop_assert!(
+                (rows * wo).div_ceil(tile.mr) * tile.mr * kdim <= tile.scratch_len,
+                "serial fallback overflows scratch"
+            );
+            // mr never exceeds the smallest chunk's pixel count
+            let min_pix = parts.iter().map(|&(_, r)| r * wo).min().unwrap();
+            crate::prop_assert!(tile.mr <= min_pix.max(1), "mr {} > min pixels {min_pix}", tile.mr);
+            Ok(())
+        });
     }
 
     #[test]

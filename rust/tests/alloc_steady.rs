@@ -73,6 +73,15 @@ fn warmed_program_executor_serves_without_heap_allocations() {
         }
         let expected = out.clone();
         let warm_grows = ex.arena_grow_events();
+        // the pin must cover the packed-GEMM path: at this engine shape
+        // every zoo profile routes at least one conv through it, so a
+        // GEMM-side allocation (panel pack, scratch growth) after warmup
+        // would fail the zero-allocation assert below
+        let plan = ex.program().plans_for(1, false, false);
+        assert!(
+            plan.steps.iter().any(|p| p.gemm.is_some()),
+            "{name}: no step routed to the GEMM kernel — pin no longer covers it"
+        );
 
         let before = ALLOCS.load(Ordering::Relaxed);
         for _ in 0..10 {

@@ -1,0 +1,193 @@
+//! Packed LUT-GEMM pins: the planner-routed GEMM conv path must be
+//! bit-exact against `exec::conv2d` (the reference executor) across
+//! random shapes, strides, thread counts and substrates, with requant
+//! folded into the tile epilogue; and the panel packers must round-trip
+//! against the naive gather on ragged edges (K not a multiple of the
+//! panel width, fewer output pixels than the tile height, channels=1).
+//!
+//! Bit-exactness is the whole contract: the GEMM-vs-row choice is pure
+//! performance (see `dataflow::gemm`), so any diverging bit is a bug.
+
+use neuromax::dataflow::engine::{encode_cols, fuse_row, FusedWeights};
+use neuromax::dataflow::{
+    exec, pack_cols, pack_weight_panels, plan_rows_gemm, Engine, SwCost, WorkerPool, GEMM_NR,
+};
+use neuromax::lns::logquant::ZERO_CODE;
+use neuromax::lns::tables::requant_act;
+use neuromax::tensor::{out_dim, Tensor3, Tensor4};
+use neuromax::util::prng::SplitMix64;
+use neuromax::util::proptest::check;
+
+fn rand_t3(rng: &mut SplitMix64, h: usize, w: usize, c: usize) -> Tensor3 {
+    let mut t = Tensor3::new(h, w, c);
+    for v in t.data.iter_mut() {
+        *v = if rng.bool(0.15) { ZERO_CODE } else { rng.range_i32(-12, 8) };
+    }
+    t
+}
+
+fn rand_t4(rng: &mut SplitMix64, k: usize, kh: usize, kw: usize, c: usize) -> (Tensor4, Tensor4) {
+    let mut wc = Tensor4::new(k, kh, kw, c);
+    let mut ws = Tensor4::new(k, kh, kw, c);
+    for v in wc.data.iter_mut() {
+        *v = if rng.bool(0.15) { ZERO_CODE } else { rng.range_i32(-12, 8) };
+    }
+    for v in ws.data.iter_mut() {
+        *v = rng.sign();
+    }
+    (wc, ws)
+}
+
+#[test]
+fn gemm_path_is_bit_exact_vs_exec_across_random_shapes() {
+    let pool = WorkerPool::new(3);
+    check("gemm-vs-exec", 40, |rng| {
+        let kh = [1usize, 2, 3, 5][rng.below(4) as usize];
+        let kw = if rng.bool(0.8) { kh } else { 1 + rng.below(4) as usize };
+        let stride = 1 + rng.below(2) as usize;
+        let c = 1 + rng.below(6) as usize; // includes channels = 1
+        let k = 1 + rng.below(9) as usize; // ragged vs the NR=4 panels
+        // small heights sometimes leave fewer pixels than a full tile
+        let h = kh.max(kw) + rng.below(12) as usize;
+        let w = kh.max(kw) + rng.below(12) as usize;
+        let a = rand_t3(rng, h, w, c);
+        let (wc, ws) = rand_t4(rng, k, kh, kw, c);
+        let want = exec::conv2d(&a, &wc, &ws, stride);
+        let fw = FusedWeights::fuse(&wc, &ws);
+        let mut cols = Vec::new();
+        encode_cols(&a.data, &mut cols);
+        let (ho, wo) = (out_dim(h, kh, stride), out_dim(w, kw, stride));
+        let work = (ho * wo * k * kh * kw * c) as u64;
+        for eng in [
+            Engine::single_threaded(),
+            Engine::with_threads(3),
+            Engine::pooled_forced(pool.clone()),
+        ] {
+            for forced in [false, true] {
+                let plan = plan_rows_gemm(
+                    ho,
+                    work,
+                    wo,
+                    fw.kdim(),
+                    eng.num_threads(),
+                    &SwCost::pooled(),
+                    forced,
+                );
+                let tile = plan.gemm.clone().expect("gemm plan carries a tile");
+                neuromax::prop_assert!(
+                    tile.nr == GEMM_NR && [1, 2, 4].contains(&tile.mr),
+                    "bad tile {}x{}",
+                    tile.mr,
+                    tile.nr
+                );
+                let mut scratch = vec![0u8; tile.scratch_len];
+                for requant in [false, true] {
+                    let mut got = vec![7i32; want.len()];
+                    eng.conv2d_gemm_plan(
+                        &cols,
+                        h,
+                        w,
+                        &fw,
+                        stride,
+                        &mut got,
+                        &plan,
+                        &tile,
+                        requant,
+                        None,
+                        &mut scratch,
+                    );
+                    let mut expect = want.data.clone();
+                    if requant {
+                        for v in expect.iter_mut() {
+                            *v = requant_act(*v);
+                        }
+                    }
+                    neuromax::prop_assert!(
+                        got == expect,
+                        "GEMM diverged: h={h} w={w} c={c} k={k} kh={kh} kw={kw} \
+                         stride={stride} threads={} forced={forced} requant={requant}",
+                        eng.num_threads()
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn panel_packers_round_trip_against_the_naive_gather() {
+    check("panel-pack-round-trip", 80, |rng| {
+        // ---- weight panels: ragged K against the naive row layout ----
+        let k = 1 + rng.below(11) as usize;
+        let kh = 1 + rng.below(4) as usize;
+        let kw = 1 + rng.below(4) as usize;
+        let c = 1 + rng.below(5) as usize;
+        let kdim = kh * kw * c;
+        let rows: Vec<u8> = (0..k * kdim)
+            .map(|_| {
+                if rng.bool(0.2) {
+                    0
+                } else {
+                    fuse_row(rng.range_i32(-12, 8), rng.sign())
+                }
+            })
+            .collect();
+        let p = pack_weight_panels(&rows, k, kdim);
+        neuromax::prop_assert!(
+            p.nr == GEMM_NR && p.k == k && p.kdim == kdim,
+            "panel header mismatch (k={k} kdim={kdim})"
+        );
+        let padded_k = k.div_ceil(GEMM_NR) * GEMM_NR;
+        neuromax::prop_assert!(
+            p.data.len() == padded_k * kdim,
+            "panel bytes {} != {padded_k}·{kdim}",
+            p.data.len()
+        );
+        for f in 0..padded_k {
+            for t in 0..kdim {
+                let got = p.data[(f / GEMM_NR) * GEMM_NR * kdim + t * GEMM_NR + f % GEMM_NR];
+                let want = if f < k { rows[f * kdim + t] } else { 0 };
+                neuromax::prop_assert!(
+                    got == want,
+                    "weight panel (filter {f}, tap {t}) = {got}, want {want} (k={k})"
+                );
+            }
+        }
+        // ---- pixel panels: ragged pixel tails, c=1, strides ----
+        let stride = 1 + rng.below(2) as usize;
+        let h = kh.max(kw) + rng.below(8) as usize;
+        let w = kh.max(kw) + rng.below(8) as usize;
+        let a = rand_t3(rng, h, w, c);
+        let mut cols = Vec::new();
+        encode_cols(&a.data, &mut cols);
+        let (ho, wo) = (out_dim(h, kh, stride), out_dim(w, kw, stride));
+        let npix = ho * wo;
+        let mr = [1usize, 2, 4][rng.below(3) as usize];
+        let mut dst = vec![0xAAu8; npix.div_ceil(mr) * mr * kdim];
+        pack_cols(&cols, w, c, kh, kw, stride, wo, 0, npix, mr, &mut dst);
+        for pb in 0..npix.div_ceil(mr) {
+            for lane in 0..mr {
+                let pix = pb * mr + lane;
+                for t in 0..kdim {
+                    let got = dst[pb * mr * kdim + t * mr + lane];
+                    let want = if pix < npix {
+                        // naive gather: decode (pixel, tap) -> input byte
+                        let (i, j) = (pix / wo, pix % wo);
+                        let (dy, rest) = (t / (kw * c), t % (kw * c));
+                        let (dx, ch) = (rest / c, rest % c);
+                        cols[((i * stride + dy) * w + j * stride + dx) * c + ch]
+                    } else {
+                        0 // dead lane must pack the zero column
+                    };
+                    neuromax::prop_assert!(
+                        got == want,
+                        "pixel panel (pix {pix}, tap {t}) = {got}, want {want} \
+                         (h={h} w={w} c={c} kh={kh} kw={kw} stride={stride} mr={mr})"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
