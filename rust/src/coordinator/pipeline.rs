@@ -22,10 +22,10 @@ use super::scheduler::NetworkSchedule;
 use crate::arch::config::GridConfig;
 use crate::dataflow::engine::{Engine, EngineOptions, PlanTimer};
 use crate::dataflow::program::{
-    cached_program, run_batch_lockstep, ProgramExecutor, ProgramPlan,
+    cached_program, run_batch_lockstep, ModelProgram, ProgramExecutor, ProgramPlan,
 };
 use crate::dataflow::workers::WorkerPool;
-use crate::dataflow::ScheduleOptions;
+use crate::dataflow::{default_pipeline, run_pipeline, Graph, ScheduleOptions};
 use crate::models::layer::Network;
 use crate::models::runner::{random_input_dims, FusedNet, NetWeights};
 use crate::models::tinycnn::{self, TinyCnnWeights};
@@ -88,6 +88,10 @@ pub struct InferenceEngine {
 /// [`ModelProgram`]: crate::dataflow::ModelProgram
 struct SimPath {
     engine: Engine,
+    /// The compiled program the executors share (authoritative for
+    /// input/output dims — IR-compiled graphs may serve an input shape
+    /// no single layer descriptor states).
+    program: Arc<ModelProgram>,
     fused: FusedNet,
     /// The program plan for this engine's shape, looked up once at
     /// construction — the batch dispatcher consults it lock-free (the
@@ -238,6 +242,7 @@ impl InferenceEngine {
                 );
                 Some(SimPath {
                     engine,
+                    program,
                     fused: weights.fuse(),
                     plan,
                     execs,
@@ -253,6 +258,63 @@ impl InferenceEngine {
             schedule,
             rt,
             hlo_weights,
+            sim,
+            reported_grow: 0,
+            reported_busy: 0,
+            reported_cap: 0,
+        })
+    }
+
+    /// Build a sim engine directly from a typed-IR [`Graph`] — the path
+    /// for model structures the flat layer list cannot express (diamond
+    /// fan-out, shared merge values). Runs the standard pass pipeline,
+    /// compiles the post-pass graph with
+    /// [`ModelProgram::from_graph`], and derives weights from the
+    /// graph's weight network (same seed→weights source of truth as
+    /// [`InferenceEngine::for_network`]).
+    pub fn for_graph(
+        graph: &Graph,
+        weight_seed: u64,
+        eopt: EngineOptions,
+        pool: Option<Arc<WorkerPool>>,
+    ) -> Result<Self> {
+        let g = run_pipeline(graph, &default_pipeline()).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let net = g.weight_network();
+        let grid = GridConfig::neuromax();
+        let schedule = NetworkSchedule::plan(grid, &net, ScheduleOptions::default());
+        let weights = NetWeights::random(&net, weight_seed);
+        // graph programs are not cached: the process-wide cache is keyed
+        // by (name, layer fingerprint), which cannot see graph structure
+        let program =
+            Arc::new(ModelProgram::from_graph(&g).map_err(|e| anyhow::anyhow!("{e}"))?);
+        let engine = match pool {
+            Some(p) => Engine::pooled(p, eopt),
+            None => Engine::new(eopt),
+        };
+        let lanes = engine.num_threads().max(1);
+        let execs = (0..lanes)
+            .map(|_| Mutex::new(ProgramExecutor::new(program.clone())))
+            .collect();
+        let plan = program.plans_for(
+            engine.num_threads(),
+            engine.worker_pool().is_some(),
+            engine.forced_parallel(),
+        );
+        let sim = Some(SimPath {
+            engine,
+            program,
+            fused: weights.fuse(),
+            plan,
+            execs,
+            timer: PlanTimer::default(),
+        });
+        Ok(InferenceEngine {
+            backend: Backend::Sim,
+            model: net,
+            weights,
+            schedule,
+            rt: None,
+            hlo_weights: None,
             sim,
             reported_grow: 0,
             reported_busy: 0,
@@ -456,10 +518,18 @@ impl InferenceEngine {
     }
 
     /// Synthesize the quantized input for a request seed against this
-    /// engine's model dims.
+    /// engine's model dims. The compiled program is authoritative when
+    /// present (IR-built graphs can serve input shapes the flat layer
+    /// list alone does not pin down); Hlo engines fall back to layer 0.
     pub fn input(&self, seed: u64) -> Tensor3 {
-        let l0 = &self.model.layers[0];
-        random_input_dims(l0.hin, l0.win, l0.cin, seed)
+        let (h, w, c) = match &self.sim {
+            Some(s) => s.program.input_dims,
+            None => {
+                let l0 = &self.model.layers[0];
+                (l0.hin, l0.win, l0.cin)
+            }
+        };
+        random_input_dims(h, w, c, seed)
     }
 
     /// Synthesize the quantized TinyCNN input for a request seed

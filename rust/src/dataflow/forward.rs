@@ -84,96 +84,20 @@ impl ForwardPlan {
     /// Infer the routing for `net` from layer shapes (see module docs for
     /// the precedence rules). Fails with a description of the first layer
     /// whose input cannot be resolved.
+    ///
+    /// Implemented by lowering to the typed IR and reading the structure
+    /// back: `ir::Graph::lower` ports the precedence rules verbatim and
+    /// additionally rejects malformed layer lists (zero dims/stride,
+    /// oversized kernels, depthwise/pool channel mismatches) up front with
+    /// a typed `GraphError` instead of panicking mid-execution.
     pub fn infer(net: &Network) -> Result<ForwardPlan, String> {
-        let n = net.layers.len();
-        if n == 0 {
-            return Err("empty network".into());
-        }
-        // produced shapes: index 0 = Input, 1 + i = layer i
-        let l0 = &net.layers[0];
-        let mut shapes: Vec<(usize, usize, usize)> = vec![(l0.hin, l0.win, l0.cin)];
-        let mut consumed: Vec<bool> = vec![false];
-        let mut routes = Vec::with_capacity(n);
-        for (i, l) in net.layers.iter().enumerate() {
-            let need = (l.hin, l.win, l.cin);
-            let src = |slot: usize| -> Source {
-                if slot == 0 { Source::Input } else { Source::Layer(slot - 1) }
-            };
-            // candidate producer slots, most recent first
-            let matches: Vec<usize> = (0..shapes.len())
-                .rev()
-                .filter(|&s| shapes[s] == need)
-                .collect();
-            let unconsumed: Vec<usize> =
-                matches.iter().copied().filter(|&s| !consumed[s]).collect();
-            let route = if let Op::Fc = l.op {
-                let flat: Option<usize> = (0..shapes.len())
-                    .rev()
-                    .filter(|&s| {
-                        let (h, w, c) = shapes[s];
-                        h * w * c == l.cin
-                    })
-                    .max_by_key(|&s| (!consumed[s], s));
-                match flat {
-                    Some(s) => Routing::Flatten(src(s)),
-                    None => {
-                        return Err(format!(
-                            "layer {} ({}): no producer flattens to {}",
-                            i, l.name, l.cin
-                        ))
-                    }
-                }
-            } else if unconsumed.len() >= 2 {
-                // two live same-shape outputs: residual pair
-                Routing::Residual(src(unconsumed[1]), src(unconsumed[0]))
-            } else if let Some(&s) = unconsumed.first() {
-                Routing::Direct(src(s))
-            } else {
-                // no live exact match: try a channel concat of two live
-                // outputs (fire-module join) BEFORE falling back to a
-                // consumed producer — a stale same-shape output from an
-                // earlier module must not shadow the branch join
-                let live: Vec<usize> =
-                    (0..shapes.len()).rev().filter(|&s| !consumed[s]).collect();
-                let mut found = None;
-                'outer: for (ai, &a) in live.iter().enumerate() {
-                    for &b in &live[ai + 1..] {
-                        let (ha, wa, ca) = shapes[a];
-                        let (hb, wb, cb) = shapes[b];
-                        if (ha, wa) == (l.hin, l.win) && (hb, wb) == (ha, wa) && ca + cb == l.cin {
-                            // concat in layer order: earlier slot first
-                            found = Some((a.min(b), a.max(b)));
-                            break 'outer;
-                        }
-                    }
-                }
-                match (found, matches.first()) {
-                    (Some((a, b)), _) => Routing::Concat(src(a), src(b)),
-                    // branch fan-out: re-read an already-consumed output
-                    (None, Some(&s)) => Routing::Direct(src(s)),
-                    (None, None) => {
-                        return Err(format!(
-                            "layer {} ({}): no producer matches {}x{}x{}",
-                            i, l.name, l.hin, l.win, l.cin
-                        ))
-                    }
-                }
-            };
-            // mark consumption and record this layer's output shape
-            for s in route.sources().into_iter().flatten() {
-                let slot = match s {
-                    Source::Input => 0,
-                    Source::Layer(j) => j + 1,
-                };
-                consumed[slot] = true;
-            }
-            routes.push(route);
-            let (ho, wo) = l.out_dims();
-            shapes.push((ho, wo, l.cout));
-            consumed.push(false);
-        }
-        // last-use accounting for feature-map freeing
-        let mut last_use = vec![usize::MAX; n];
+        let g = super::ir::Graph::lower(net).map_err(|e| e.to_string())?;
+        Ok(g.forward_plan())
+    }
+
+    /// Assemble a plan from explicit routes, computing last-use liveness.
+    pub fn from_routes(routes: Vec<Routing>) -> ForwardPlan {
+        let mut last_use = vec![usize::MAX; routes.len()];
         for (i, r) in routes.iter().enumerate() {
             for s in r.sources().into_iter().flatten() {
                 if let Source::Layer(j) = s {
@@ -181,7 +105,7 @@ impl ForwardPlan {
                 }
             }
         }
-        Ok(ForwardPlan { routes, last_use })
+        ForwardPlan { routes, last_use }
     }
 
     /// True if any layer's input is a residual merge or channel concat

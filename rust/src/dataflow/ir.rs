@@ -1,0 +1,1156 @@
+//! Typed graph IR: the structural truth the compiler and planner work on.
+//!
+//! The zoo describes models as flat `Vec<LayerDesc>` lists; serving needs a
+//! *graph* — who reads whom, where requant happens, which merges exist.
+//! [`Graph::lower`] recovers that graph once, up front, with typed errors
+//! ([`GraphError`]) instead of the deep-execution panics the old
+//! shape-matching path admitted. Every node carries inferred facts — a
+//! [`Shape`] and a quantization [`Domain`] — and [`Graph::validate`]
+//! recomputes all of them, so a rewrite pass (see [`super::passes`]) is
+//! "semantics-pinned": it must leave a graph that re-validates *and* that
+//! [`reference_forward`] evaluates to the same bits.
+//!
+//! Node/edge model:
+//!
+//! - Node 0 is always [`NodeOp::Input`]; edges are explicit `inputs` ids in
+//!   topological order (`inputs[j] < id`).
+//! - Kernel nodes (conv / depthwise / pointwise / pool / fc) carry
+//!   `layer: Some(i)` — the index into [`Graph::layers`] that owns their
+//!   descriptor and weight slot. Passes may rewrite descriptors in place
+//!   but never remove or reorder `layers` entries, so `NetWeights`
+//!   built for the original network stay aligned.
+//! - Assembly nodes (concat / residual / flatten) and [`NodeOp::Requant`]
+//!   express data movement and quantization explicitly; compute nodes
+//!   produce raw psums ([`Domain::Psum`]) until a requant (node or folded
+//!   `requant: true` flag) returns them to the code domain.
+//! - `fused_pool` records a pool folded into its producing conv — the
+//!   conv+pool fusion pass's annotation; `FusedPool::layer` still points
+//!   at the original pool descriptor.
+//!
+//! [`GraphBuilder`] constructs graphs the flat-list zoo could never
+//! express (diamond fan-out, nested concats) for `ModelProgram::from_graph`
+//! to compile, and [`reference_forward`] is the interpreter both pre- and
+//! post-pass graphs are pinned against.
+
+use std::fmt;
+
+use crate::arch::state_controller::pad_input;
+use crate::dataflow::forward::{ForwardPlan, Routing, Source};
+use crate::dataflow::{exec, pool};
+use crate::models::layer::{LayerDesc, Network, Op};
+use crate::models::runner::NetWeights;
+use crate::tensor::Tensor3;
+
+/// Index into [`Graph::nodes`].
+pub type NodeId = usize;
+
+/// An inferred tensor shape fact (H × W × C).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shape {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl Shape {
+    pub fn len(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}x{}x{}", self.h, self.w, self.c)
+    }
+}
+
+/// Quantization domain of a node's output values.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Domain {
+    /// Log-quantized activation codes (what kernels consume).
+    Code,
+    /// Raw i32 partial sums (only a requant may consume these).
+    Psum,
+}
+
+/// A pool folded into its producing conv node (conv+pool fusion).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FusedPool {
+    pub k: usize,
+    pub stride: usize,
+    pub max: bool,
+    /// Index of the original pool descriptor in [`Graph::layers`].
+    pub layer: usize,
+}
+
+/// Node operation. Kernel ops mirror [`Op`]; the rest are structure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeOp {
+    /// The network input tensor (always node 0).
+    Input,
+    Conv { kh: usize, kw: usize, stride: usize, pad: usize },
+    Depthwise { k: usize, stride: usize, pad: usize },
+    Pointwise { stride: usize },
+    Pool { k: usize, stride: usize, max: bool },
+    Fc,
+    /// Channel concatenation of n ≥ 2 inputs, in order.
+    Concat,
+    /// Elementwise code-max merge of two same-shape inputs.
+    Residual,
+    /// Row-major HWC flatten to `1×1×(H·W·C)`.
+    Flatten,
+    /// ReLU + log re-quantization (psums → codes).
+    Requant,
+}
+
+impl NodeOp {
+    /// MAC kernel with weights (conv / depthwise / pointwise / fc).
+    pub fn is_compute(&self) -> bool {
+        matches!(
+            self,
+            NodeOp::Conv { .. } | NodeOp::Depthwise { .. } | NodeOp::Pointwise { .. } | NodeOp::Fc
+        )
+    }
+
+    /// Multi-input assembly node (concat / residual).
+    pub fn is_merge(&self) -> bool {
+        matches!(self, NodeOp::Concat | NodeOp::Residual)
+    }
+}
+
+/// One IR node: an op, explicit input edges, and inferred facts.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Node {
+    pub op: NodeOp,
+    /// Producer node ids, all `<` this node's id (topological order).
+    pub inputs: Vec<NodeId>,
+    /// Owning index into [`Graph::layers`] for kernel (and requant) nodes.
+    pub layer: Option<usize>,
+    /// Output shape fact.
+    pub shape: Shape,
+    /// Output quantization domain fact.
+    pub domain: Domain,
+    /// Folded requant: this compute node's psums are requanted in-step
+    /// (set by the requant-folding pass; lowering emits explicit nodes).
+    pub requant: bool,
+    /// Pool folded into this conv (set by the conv+pool fusion pass).
+    pub fused_pool: Option<FusedPool>,
+}
+
+/// A typed model graph plus the layer descriptors its kernels reference.
+///
+/// Invariant maintained by every pass: `layers` entries are never removed
+/// or reordered, so `layer` indices — and the per-layer weight stream of
+/// `NetWeights::random` — stay valid across rewrites.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Graph {
+    pub name: String,
+    pub nodes: Vec<Node>,
+    /// Node whose value is the network output (raw psums for compute).
+    pub output: NodeId,
+    pub layers: Vec<LayerDesc>,
+}
+
+/// Typed lowering / validation error — what `ForwardPlan::infer` used to
+/// report as a string or, worse, defer to a panic deep in execution.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum GraphError {
+    Empty,
+    ZeroDim { layer: usize, name: String },
+    ZeroStride { layer: usize, name: String },
+    KernelTooLarge { layer: usize, name: String },
+    ChannelMismatch { layer: usize, name: String },
+    NoProducer { layer: usize, name: String, h: usize, w: usize, c: usize },
+    NoFlatProducer { layer: usize, name: String, need: usize },
+    ConcatArity { node: NodeId, arity: usize },
+    ShapeMismatch { node: NodeId, detail: String },
+    DomainMismatch { node: NodeId, detail: String },
+    NotTopological { node: NodeId },
+    BadOutput { node: NodeId },
+    UnfoldedRequant { node: NodeId },
+    Malformed { node: NodeId, detail: String },
+}
+
+impl fmt::Display for GraphError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            GraphError::Empty => write!(f, "empty network"),
+            GraphError::ZeroDim { layer, name } => {
+                write!(f, "layer {layer} ({name}): zero dimension")
+            }
+            GraphError::ZeroStride { layer, name } => {
+                write!(f, "layer {layer} ({name}): zero stride")
+            }
+            GraphError::KernelTooLarge { layer, name } => {
+                write!(f, "layer {layer} ({name}): kernel exceeds padded input")
+            }
+            GraphError::ChannelMismatch { layer, name } => {
+                write!(f, "layer {layer} ({name}): cout must equal cin for this op")
+            }
+            GraphError::NoProducer { layer, name, h, w, c } => {
+                write!(f, "layer {layer} ({name}): no producer matches {h}x{w}x{c}")
+            }
+            GraphError::NoFlatProducer { layer, name, need } => {
+                write!(f, "layer {layer} ({name}): no producer flattens to {need}")
+            }
+            GraphError::ConcatArity { node, arity } => {
+                write!(f, "node {node}: concat needs >= 2 inputs, got {arity}")
+            }
+            GraphError::ShapeMismatch { node, detail } => {
+                write!(f, "node {node}: shape mismatch: {detail}")
+            }
+            GraphError::DomainMismatch { node, detail } => {
+                write!(f, "node {node}: domain mismatch: {detail}")
+            }
+            GraphError::NotTopological { node } => {
+                write!(f, "node {node}: input edge from a later node")
+            }
+            GraphError::BadOutput { node } => {
+                write!(f, "output node {node} out of range")
+            }
+            GraphError::UnfoldedRequant { node } => {
+                write!(f, "node {node}: explicit requant not folded (run the pass pipeline)")
+            }
+            GraphError::Malformed { node, detail } => {
+                write!(f, "node {node}: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for GraphError {}
+
+/// Per-layer structural checks — everything that used to surface as an
+/// `out_dims` assert or an `exec` channel-mismatch panic mid-run.
+pub fn check_layer(i: usize, l: &LayerDesc) -> Result<(), GraphError> {
+    let err_ctx = || (i, l.name.clone());
+    if l.hin == 0 || l.win == 0 || l.cin == 0 || l.cout == 0 {
+        let (layer, name) = err_ctx();
+        return Err(GraphError::ZeroDim { layer, name });
+    }
+    let (kh, kw, s) = l.kernel();
+    if s == 0 {
+        let (layer, name) = err_ctx();
+        return Err(GraphError::ZeroStride { layer, name });
+    }
+    let (hp, wp) = l.padded();
+    if kh == 0 || kw == 0 || hp < kh || wp < kw {
+        let (layer, name) = err_ctx();
+        return Err(GraphError::KernelTooLarge { layer, name });
+    }
+    if matches!(l.op, Op::Depthwise { .. } | Op::Pool { .. }) && l.cout != l.cin {
+        let (layer, name) = err_ctx();
+        return Err(GraphError::ChannelMismatch { layer, name });
+    }
+    Ok(())
+}
+
+fn node_op_of(op: &Op) -> NodeOp {
+    match *op {
+        Op::Conv { kh, kw, stride, pad } => NodeOp::Conv { kh, kw, stride, pad },
+        Op::Depthwise { k, stride, pad } => NodeOp::Depthwise { k, stride, pad },
+        Op::Pointwise { stride } => NodeOp::Pointwise { stride },
+        Op::Pool { k, stride, max } => NodeOp::Pool { k, stride, max },
+        Op::Fc => NodeOp::Fc,
+    }
+}
+
+fn op_matches(nop: &NodeOp, lop: &Op) -> bool {
+    node_op_of(lop) == *nop
+}
+
+impl Graph {
+    /// Lower a flat layer list to the typed IR.
+    ///
+    /// Routing precedence is a verbatim port of `ForwardPlan::infer` (see
+    /// `dataflow::forward` module docs), so every net the old matcher
+    /// routed lowers to the same structure — pinned by
+    /// [`Graph::forward_plan`] round-trip tests. Unlike the old matcher,
+    /// malformed layers are rejected up front with a typed [`GraphError`].
+    pub fn lower(net: &Network) -> Result<Graph, GraphError> {
+        let n = net.layers.len();
+        if n == 0 {
+            return Err(GraphError::Empty);
+        }
+        for (i, l) in net.layers.iter().enumerate() {
+            check_layer(i, l)?;
+        }
+        let l0 = &net.layers[0];
+        let mut nodes = vec![Node {
+            op: NodeOp::Input,
+            inputs: vec![],
+            layer: None,
+            shape: Shape { h: l0.hin, w: l0.win, c: l0.cin },
+            domain: Domain::Code,
+            requant: false,
+            fused_pool: None,
+        }];
+        // producer slots: index 0 = Input, 1 + i = layer i (as in infer)
+        let mut shapes: Vec<(usize, usize, usize)> = vec![(l0.hin, l0.win, l0.cin)];
+        let mut consumed: Vec<bool> = vec![false];
+        let mut val: Vec<NodeId> = vec![0];
+        enum Take {
+            One(usize),
+            Merge2(usize, usize, bool), // (slot a, slot b, residual?)
+            Flat(usize),
+        }
+        for (i, l) in net.layers.iter().enumerate() {
+            let need = (l.hin, l.win, l.cin);
+            let matches: Vec<usize> =
+                (0..shapes.len()).rev().filter(|&s| shapes[s] == need).collect();
+            let unconsumed: Vec<usize> =
+                matches.iter().copied().filter(|&s| !consumed[s]).collect();
+            let take = if let Op::Fc = l.op {
+                let flat: Option<usize> = (0..shapes.len())
+                    .rev()
+                    .filter(|&s| {
+                        let (h, w, c) = shapes[s];
+                        h * w * c == l.cin
+                    })
+                    .max_by_key(|&s| (!consumed[s], s));
+                match flat {
+                    Some(s) => Take::Flat(s),
+                    None => {
+                        return Err(GraphError::NoFlatProducer {
+                            layer: i,
+                            name: l.name.clone(),
+                            need: l.cin,
+                        })
+                    }
+                }
+            } else if unconsumed.len() >= 2 {
+                // two live same-shape outputs: residual pair (older first)
+                Take::Merge2(unconsumed[1], unconsumed[0], true)
+            } else if let Some(&s) = unconsumed.first() {
+                Take::One(s)
+            } else {
+                // no live exact match: try a channel concat of two live
+                // outputs (fire-module join) BEFORE falling back to a
+                // consumed producer — a stale same-shape output from an
+                // earlier module must not shadow the branch join
+                let live: Vec<usize> =
+                    (0..shapes.len()).rev().filter(|&s| !consumed[s]).collect();
+                let mut found = None;
+                'outer: for (ai, &a) in live.iter().enumerate() {
+                    for &b in &live[ai + 1..] {
+                        let (ha, wa, ca) = shapes[a];
+                        let (hb, wb, cb) = shapes[b];
+                        if (ha, wa) == (l.hin, l.win) && (hb, wb) == (ha, wa) && ca + cb == l.cin
+                        {
+                            // concat in layer order: earlier slot first
+                            found = Some((a.min(b), a.max(b)));
+                            break 'outer;
+                        }
+                    }
+                }
+                match (found, matches.first()) {
+                    (Some((a, b)), _) => Take::Merge2(a, b, false),
+                    // branch fan-out: re-read an already-consumed output
+                    (None, Some(&s)) => Take::One(s),
+                    (None, None) => {
+                        return Err(GraphError::NoProducer {
+                            layer: i,
+                            name: l.name.clone(),
+                            h: l.hin,
+                            w: l.win,
+                            c: l.cin,
+                        })
+                    }
+                }
+            };
+            // mark consumption and emit the (optional) assembly node
+            let in_id = match take {
+                Take::One(s) => {
+                    consumed[s] = true;
+                    val[s]
+                }
+                Take::Flat(s) => {
+                    consumed[s] = true;
+                    let (h, w, c) = shapes[s];
+                    nodes.push(Node {
+                        op: NodeOp::Flatten,
+                        inputs: vec![val[s]],
+                        layer: None,
+                        shape: Shape { h: 1, w: 1, c: h * w * c },
+                        domain: Domain::Code,
+                        requant: false,
+                        fused_pool: None,
+                    });
+                    nodes.len() - 1
+                }
+                Take::Merge2(a, b, residual) => {
+                    consumed[a] = true;
+                    consumed[b] = true;
+                    nodes.push(Node {
+                        op: if residual { NodeOp::Residual } else { NodeOp::Concat },
+                        inputs: vec![val[a], val[b]],
+                        layer: None,
+                        shape: Shape { h: l.hin, w: l.win, c: l.cin },
+                        domain: Domain::Code,
+                        requant: false,
+                        fused_pool: None,
+                    });
+                    nodes.len() - 1
+                }
+            };
+            // the kernel node, plus an explicit requant between layers
+            let (ho, wo) = l.out_dims();
+            let shape = Shape { h: ho, w: wo, c: l.cout };
+            nodes.push(Node {
+                op: node_op_of(&l.op),
+                inputs: vec![in_id],
+                layer: Some(i),
+                shape,
+                domain: if l.is_compute() { Domain::Psum } else { Domain::Code },
+                requant: false,
+                fused_pool: None,
+            });
+            let kid = nodes.len() - 1;
+            let vid = if l.is_compute() && i + 1 < n {
+                nodes.push(Node {
+                    op: NodeOp::Requant,
+                    inputs: vec![kid],
+                    layer: Some(i),
+                    shape,
+                    domain: Domain::Code,
+                    requant: false,
+                    fused_pool: None,
+                });
+                nodes.len() - 1
+            } else {
+                kid
+            };
+            shapes.push((ho, wo, l.cout));
+            consumed.push(false);
+            val.push(vid);
+        }
+        let g = Graph {
+            name: net.name.clone(),
+            nodes,
+            output: *val.last().expect("n >= 1"),
+            layers: net.layers.clone(),
+        };
+        g.validate()?;
+        Ok(g)
+    }
+
+    /// Recover the legacy per-layer [`ForwardPlan`] from a *freshly
+    /// lowered* graph (one kernel node per layer, binary concats). This is
+    /// how `ForwardPlan::infer` is implemented now; post-pass graphs may
+    /// not satisfy its assumptions.
+    pub fn forward_plan(&self) -> ForwardPlan {
+        let src_of = |id: NodeId| -> Source {
+            match self.nodes[id].layer {
+                None => Source::Input,
+                Some(j) => Source::Layer(j),
+            }
+        };
+        let mut routes = Vec::with_capacity(self.layers.len());
+        for li in 0..self.layers.len() {
+            let kid = self
+                .nodes
+                .iter()
+                .position(|nd| nd.layer == Some(li) && nd.op != NodeOp::Requant)
+                .expect("lowered graph has a kernel node per layer");
+            let in_id = self.nodes[kid].inputs[0];
+            let inn = &self.nodes[in_id];
+            let route = match inn.op {
+                NodeOp::Concat => Routing::Concat(src_of(inn.inputs[0]), src_of(inn.inputs[1])),
+                NodeOp::Residual => {
+                    Routing::Residual(src_of(inn.inputs[0]), src_of(inn.inputs[1]))
+                }
+                NodeOp::Flatten => Routing::Flatten(src_of(inn.inputs[0])),
+                _ => Routing::Direct(src_of(in_id)),
+            };
+            routes.push(route);
+        }
+        ForwardPlan::from_routes(routes)
+    }
+
+    /// The network to draw weights for: same name, the graph's (possibly
+    /// pass-rewritten) descriptors. Safe across passes because `layers`
+    /// entries are never removed or reordered and every rewrite preserves
+    /// the per-layer weight shape.
+    pub fn weight_network(&self) -> Network {
+        Network { name: self.name.clone(), layers: self.layers.clone() }
+    }
+
+    /// Reads per node (the graph output is not counted as a read).
+    pub fn consumer_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.nodes.len()];
+        for nd in &self.nodes {
+            for &i in &nd.inputs {
+                counts[i] += 1;
+            }
+        }
+        counts
+    }
+
+    /// Recompute every inferred fact and check every structural invariant.
+    /// A pass is only admitted to the pipeline if its output re-validates.
+    pub fn validate(&self) -> Result<(), GraphError> {
+        if self.nodes.is_empty() {
+            return Err(GraphError::Empty);
+        }
+        if self.output >= self.nodes.len() {
+            return Err(GraphError::BadOutput { node: self.output });
+        }
+        for (id, nd) in self.nodes.iter().enumerate() {
+            let malformed = |detail: &str| GraphError::Malformed { node: id, detail: detail.into() };
+            if nd.inputs.iter().any(|&i| i >= id) {
+                return Err(GraphError::NotTopological { node: id });
+            }
+            // arity + placement
+            let arity = nd.inputs.len();
+            match nd.op {
+                NodeOp::Input => {
+                    if id != 0 {
+                        return Err(malformed("Input node must be node 0"));
+                    }
+                    if arity != 0 {
+                        return Err(malformed("Input node takes no inputs"));
+                    }
+                }
+                NodeOp::Concat => {
+                    if arity < 2 {
+                        return Err(GraphError::ConcatArity { node: id, arity });
+                    }
+                }
+                NodeOp::Residual => {
+                    if arity != 2 {
+                        return Err(malformed("Residual takes exactly 2 inputs"));
+                    }
+                }
+                _ => {
+                    if arity != 1 {
+                        return Err(malformed("unary op takes exactly 1 input"));
+                    }
+                }
+            }
+            if id == 0 && nd.op != NodeOp::Input {
+                return Err(malformed("node 0 must be Input"));
+            }
+            if nd.requant && !nd.op.is_compute() {
+                return Err(GraphError::DomainMismatch {
+                    node: id,
+                    detail: "requant flag on a non-compute node".into(),
+                });
+            }
+            if nd.fused_pool.is_some()
+                && !matches!(
+                    nd.op,
+                    NodeOp::Conv { .. } | NodeOp::Depthwise { .. } | NodeOp::Pointwise { .. }
+                )
+            {
+                return Err(malformed("fused_pool on a non-conv node"));
+            }
+            if matches!(
+                nd.op,
+                NodeOp::Input | NodeOp::Concat | NodeOp::Residual | NodeOp::Flatten
+            ) && nd.layer.is_some()
+            {
+                return Err(malformed("assembly node with a layer index"));
+            }
+            // domain discipline: psums flow only into requants
+            let want_in = if nd.op == NodeOp::Requant { Domain::Psum } else { Domain::Code };
+            for &i in &nd.inputs {
+                if self.nodes[i].domain != want_in {
+                    return Err(GraphError::DomainMismatch {
+                        node: id,
+                        detail: format!(
+                            "input node {i} is {:?}, expected {:?}",
+                            self.nodes[i].domain, want_in
+                        ),
+                    });
+                }
+            }
+            // shape + domain recomputation per op
+            let ishape = |k: usize| self.nodes[nd.inputs[k]].shape;
+            match nd.op {
+                NodeOp::Input => {
+                    if nd.domain != Domain::Code {
+                        return Err(GraphError::DomainMismatch {
+                            node: id,
+                            detail: "Input must produce codes".into(),
+                        });
+                    }
+                }
+                NodeOp::Conv { .. }
+                | NodeOp::Depthwise { .. }
+                | NodeOp::Pointwise { .. }
+                | NodeOp::Pool { .. }
+                | NodeOp::Fc => {
+                    let li = match nd.layer {
+                        Some(li) if li < self.layers.len() => li,
+                        _ => return Err(malformed("kernel node without a valid layer index")),
+                    };
+                    let l = &self.layers[li];
+                    check_layer(li, l)?;
+                    if !op_matches(&nd.op, &l.op) {
+                        return Err(malformed("node op disagrees with its layer descriptor"));
+                    }
+                    let ins = ishape(0);
+                    if (ins.h, ins.w, ins.c) != (l.hin, l.win, l.cin) {
+                        return Err(GraphError::ShapeMismatch {
+                            node: id,
+                            detail: format!(
+                                "input {ins} != descriptor input {}x{}x{}",
+                                l.hin, l.win, l.cin
+                            ),
+                        });
+                    }
+                    let (ho, wo) = l.out_dims();
+                    let mut out = Shape { h: ho, w: wo, c: l.cout };
+                    let mut want = if l.is_compute() && !nd.requant {
+                        Domain::Psum
+                    } else {
+                        Domain::Code
+                    };
+                    if let Some(fp) = nd.fused_pool {
+                        if !nd.requant {
+                            return Err(GraphError::DomainMismatch {
+                                node: id,
+                                detail: "fused pool over raw psums".into(),
+                            });
+                        }
+                        let pl = match self.layers.get(fp.layer) {
+                            Some(pl) => pl,
+                            None => return Err(malformed("fused_pool layer out of range")),
+                        };
+                        match pl.op {
+                            Op::Pool { k, stride, max }
+                                if (k, stride, max) == (fp.k, fp.stride, fp.max) => {}
+                            _ => {
+                                return Err(malformed(
+                                    "fused_pool disagrees with its pool descriptor",
+                                ))
+                            }
+                        }
+                        if (pl.hin, pl.win, pl.cin) != (out.h, out.w, out.c) {
+                            return Err(GraphError::ShapeMismatch {
+                                node: id,
+                                detail: format!(
+                                    "fused pool input {}x{}x{} != conv output {out}",
+                                    pl.hin, pl.win, pl.cin
+                                ),
+                            });
+                        }
+                        let (ph, pw) = pl.out_dims();
+                        out = Shape { h: ph, w: pw, c: pl.cout };
+                        want = Domain::Code;
+                    }
+                    if nd.shape != out {
+                        return Err(GraphError::ShapeMismatch {
+                            node: id,
+                            detail: format!("declared {} != computed {out}", nd.shape),
+                        });
+                    }
+                    if nd.domain != want {
+                        return Err(GraphError::DomainMismatch {
+                            node: id,
+                            detail: format!("declared {:?}, computed {want:?}", nd.domain),
+                        });
+                    }
+                }
+                NodeOp::Concat => {
+                    let s0 = ishape(0);
+                    let mut c = 0;
+                    for &i in &nd.inputs {
+                        let s = self.nodes[i].shape;
+                        if (s.h, s.w) != (s0.h, s0.w) {
+                            return Err(GraphError::ShapeMismatch {
+                                node: id,
+                                detail: format!("concat spatial mismatch: {s} vs {s0}"),
+                            });
+                        }
+                        c += s.c;
+                    }
+                    let out = Shape { h: s0.h, w: s0.w, c };
+                    if nd.shape != out {
+                        return Err(GraphError::ShapeMismatch {
+                            node: id,
+                            detail: format!("declared {} != computed {out}", nd.shape),
+                        });
+                    }
+                }
+                NodeOp::Residual => {
+                    let (a, b) = (ishape(0), ishape(1));
+                    if a != b {
+                        return Err(GraphError::ShapeMismatch {
+                            node: id,
+                            detail: format!("residual shape mismatch: {a} vs {b}"),
+                        });
+                    }
+                    if nd.shape != a {
+                        return Err(GraphError::ShapeMismatch {
+                            node: id,
+                            detail: format!("declared {} != merged {a}", nd.shape),
+                        });
+                    }
+                }
+                NodeOp::Flatten => {
+                    let s0 = ishape(0);
+                    let out = Shape { h: 1, w: 1, c: s0.len() };
+                    if nd.shape != out {
+                        return Err(GraphError::ShapeMismatch {
+                            node: id,
+                            detail: format!("declared {} != flattened {out}", nd.shape),
+                        });
+                    }
+                }
+                NodeOp::Requant => {
+                    let s0 = ishape(0);
+                    if nd.shape != s0 {
+                        return Err(GraphError::ShapeMismatch {
+                            node: id,
+                            detail: format!("declared {} != input {s0}", nd.shape),
+                        });
+                    }
+                    if nd.domain != Domain::Code {
+                        return Err(GraphError::DomainMismatch {
+                            node: id,
+                            detail: "requant must produce codes".into(),
+                        });
+                    }
+                }
+            }
+            // non-kernel, non-input nodes all produce codes
+            if !nd.op.is_compute()
+                && !matches!(nd.op, NodeOp::Pool { .. })
+                && nd.domain != Domain::Code
+            {
+                return Err(GraphError::DomainMismatch {
+                    node: id,
+                    detail: "assembly nodes produce codes".into(),
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Builder for graphs the flat-list zoo cannot express (diamond fan-out,
+/// nested concats, dead branches). Compute builders return the *requant*
+/// node id — the code-domain value downstream ops consume — mirroring what
+/// lowering emits; [`GraphBuilder::finish`] re-points an output that lands
+/// on a requant to its raw-psum producer (the serving logits are raw), and
+/// dead-node elimination sweeps the leftover.
+pub struct GraphBuilder {
+    name: String,
+    nodes: Vec<Node>,
+    layers: Vec<LayerDesc>,
+}
+
+impl GraphBuilder {
+    pub fn new(name: &str, h: usize, w: usize, c: usize) -> Self {
+        GraphBuilder {
+            name: name.into(),
+            nodes: vec![Node {
+                op: NodeOp::Input,
+                inputs: vec![],
+                layer: None,
+                shape: Shape { h, w, c },
+                domain: Domain::Code,
+                requant: false,
+                fused_pool: None,
+            }],
+            layers: Vec::new(),
+        }
+    }
+
+    /// The input node (always id 0).
+    pub fn input(&self) -> NodeId {
+        0
+    }
+
+    pub fn shape(&self, id: NodeId) -> Shape {
+        self.nodes[id].shape
+    }
+
+    fn push(&mut self, nd: Node) -> NodeId {
+        self.nodes.push(nd);
+        self.nodes.len() - 1
+    }
+
+    /// Append a kernel layer reading `src`; returns the code-domain value
+    /// node (the requant for compute ops, the kernel itself for pools).
+    fn kernel(&mut self, src: NodeId, desc: LayerDesc) -> Result<NodeId, GraphError> {
+        let li = self.layers.len();
+        check_layer(li, &desc)?;
+        let s = self.nodes[src].shape;
+        if (s.h, s.w, s.c) != (desc.hin, desc.win, desc.cin) {
+            return Err(GraphError::ShapeMismatch {
+                node: self.nodes.len(),
+                detail: format!(
+                    "source {s} != layer input {}x{}x{}",
+                    desc.hin, desc.win, desc.cin
+                ),
+            });
+        }
+        let (ho, wo) = desc.out_dims();
+        let shape = Shape { h: ho, w: wo, c: desc.cout };
+        let op = node_op_of(&desc.op);
+        let compute = desc.is_compute();
+        self.layers.push(desc);
+        let kid = self.push(Node {
+            op,
+            inputs: vec![src],
+            layer: Some(li),
+            shape,
+            domain: if compute { Domain::Psum } else { Domain::Code },
+            requant: false,
+            fused_pool: None,
+        });
+        if compute {
+            Ok(self.push(Node {
+                op: NodeOp::Requant,
+                inputs: vec![kid],
+                layer: Some(li),
+                shape,
+                domain: Domain::Code,
+                requant: false,
+                fused_pool: None,
+            }))
+        } else {
+            Ok(kid)
+        }
+    }
+
+    pub fn conv(
+        &mut self,
+        src: NodeId,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        cout: usize,
+    ) -> Result<NodeId, GraphError> {
+        let s = self.shape(src);
+        let name = format!("conv{}", self.layers.len());
+        self.kernel(src, LayerDesc::conv(&name, k, stride, pad, s.h, s.w, s.c, cout))
+    }
+
+    pub fn pointwise(&mut self, src: NodeId, cout: usize) -> Result<NodeId, GraphError> {
+        let s = self.shape(src);
+        let name = format!("pw{}", self.layers.len());
+        self.kernel(src, LayerDesc::pointwise(&name, s.h, s.w, s.c, cout))
+    }
+
+    pub fn depthwise(&mut self, src: NodeId, stride: usize) -> Result<NodeId, GraphError> {
+        let s = self.shape(src);
+        let name = format!("dw{}", self.layers.len());
+        self.kernel(src, LayerDesc::depthwise(&name, stride, s.h, s.w, s.c))
+    }
+
+    pub fn maxpool(&mut self, src: NodeId, k: usize, stride: usize) -> Result<NodeId, GraphError> {
+        let s = self.shape(src);
+        let name = format!("pool{}", self.layers.len());
+        self.kernel(src, LayerDesc::pool(&name, k, stride, s.h, s.w, s.c))
+    }
+
+    pub fn avgpool(&mut self, src: NodeId, k: usize, stride: usize) -> Result<NodeId, GraphError> {
+        let s = self.shape(src);
+        let name = format!("apool{}", self.layers.len());
+        self.kernel(src, LayerDesc::avgpool(&name, k, stride, s.h, s.w, s.c))
+    }
+
+    /// Fully-connected head; inserts a flatten when `src` is not 1×1.
+    pub fn fc(&mut self, src: NodeId, cout: usize) -> Result<NodeId, GraphError> {
+        let s = self.shape(src);
+        let src = if (s.h, s.w) != (1, 1) {
+            self.push(Node {
+                op: NodeOp::Flatten,
+                inputs: vec![src],
+                layer: None,
+                shape: Shape { h: 1, w: 1, c: s.len() },
+                domain: Domain::Code,
+                requant: false,
+                fused_pool: None,
+            })
+        } else {
+            src
+        };
+        let name = format!("fc{}", self.layers.len());
+        self.kernel(src, LayerDesc::fc(&name, s.len(), cout))
+    }
+
+    /// Channel concat of `parts`, in order (supports n ≥ 2 — more than
+    /// lowering's binary concats).
+    pub fn concat(&mut self, parts: &[NodeId]) -> Result<NodeId, GraphError> {
+        if parts.len() < 2 {
+            return Err(GraphError::ConcatArity { node: self.nodes.len(), arity: parts.len() });
+        }
+        let s0 = self.shape(parts[0]);
+        let mut c = 0;
+        for &p in parts {
+            let s = self.shape(p);
+            if (s.h, s.w) != (s0.h, s0.w) {
+                return Err(GraphError::ShapeMismatch {
+                    node: self.nodes.len(),
+                    detail: format!("concat spatial mismatch: {s} vs {s0}"),
+                });
+            }
+            c += s.c;
+        }
+        Ok(self.push(Node {
+            op: NodeOp::Concat,
+            inputs: parts.to_vec(),
+            layer: None,
+            shape: Shape { h: s0.h, w: s0.w, c },
+            domain: Domain::Code,
+            requant: false,
+            fused_pool: None,
+        }))
+    }
+
+    /// Residual (elementwise code-max) merge of two same-shape values.
+    pub fn residual(&mut self, a: NodeId, b: NodeId) -> Result<NodeId, GraphError> {
+        let (sa, sb) = (self.shape(a), self.shape(b));
+        if sa != sb {
+            return Err(GraphError::ShapeMismatch {
+                node: self.nodes.len(),
+                detail: format!("residual shape mismatch: {sa} vs {sb}"),
+            });
+        }
+        Ok(self.push(Node {
+            op: NodeOp::Residual,
+            inputs: vec![a, b],
+            layer: None,
+            shape: sa,
+            domain: Domain::Code,
+            requant: false,
+            fused_pool: None,
+        }))
+    }
+
+    /// Seal the graph with `output` as the served value. An output on a
+    /// requant node is re-pointed at its raw-psum producer (final-layer
+    /// logits are served raw, exactly as `drive` did).
+    pub fn finish(self, output: NodeId) -> Result<Graph, GraphError> {
+        if output >= self.nodes.len() {
+            return Err(GraphError::BadOutput { node: output });
+        }
+        let output = if self.nodes[output].op == NodeOp::Requant {
+            self.nodes[output].inputs[0]
+        } else {
+            output
+        };
+        let g = Graph { name: self.name, nodes: self.nodes, output, layers: self.layers };
+        g.validate()?;
+        Ok(g)
+    }
+}
+
+/// Channel-concat `parts` (in order) per pixel — the n-ary generalization
+/// of `forward::concat_padded` at pad 0; `Merge::Concat` staging follows
+/// the same part order.
+pub fn concat_channels(parts: &[&Tensor3]) -> Tensor3 {
+    let (h, w) = (parts[0].h, parts[0].w);
+    let c: usize = parts.iter().map(|p| p.c).sum();
+    let mut out = Tensor3::new(h, w, c);
+    for y in 0..h {
+        for x in 0..w {
+            let mut off = (y * w + x) * c;
+            for p in parts {
+                let i = (y * p.w + x) * p.c;
+                out.data[off..off + p.c].copy_from_slice(&p.data[i..i + p.c]);
+                off += p.c;
+            }
+        }
+    }
+    out
+}
+
+/// Reference interpreter: evaluate `g` node by node with the reference
+/// executor. This is the semantic ground truth every pass is pinned
+/// against — `reference_forward(pre_pass) == reference_forward(post_pass)`
+/// bit-for-bit, and `forward_ref` agrees with it on lowered graphs.
+pub fn reference_forward(g: &Graph, w: &NetWeights, x: &Tensor3) -> Tensor3 {
+    let mut vals: Vec<Option<Tensor3>> = vec![None; g.nodes.len()];
+    for (id, nd) in g.nodes.iter().enumerate() {
+        let y = {
+            let input = |k: usize| -> &Tensor3 {
+                vals[nd.inputs[k]].as_ref().expect("inputs precede consumers")
+            };
+            let wpair = |li: usize| -> (&crate::tensor::Tensor4, &crate::tensor::Tensor4) {
+                w.layers[li]
+                    .as_ref()
+                    .map(|(c, s)| (c, s))
+                    .expect("compute layer without weights")
+            };
+            match nd.op {
+                NodeOp::Input => x.clone(),
+                NodeOp::Conv { stride, pad, .. } => {
+                    let (wc, ws) = wpair(nd.layer.expect("kernel node"));
+                    let a = input(0);
+                    if pad > 0 {
+                        exec::conv2d(&pad_input(a, pad), wc, ws, stride)
+                    } else {
+                        exec::conv2d(a, wc, ws, stride)
+                    }
+                }
+                NodeOp::Depthwise { stride, pad, .. } => {
+                    let (wc, ws) = wpair(nd.layer.expect("kernel node"));
+                    let a = input(0);
+                    if pad > 0 {
+                        exec::depthwise(&pad_input(a, pad), wc, ws, stride)
+                    } else {
+                        exec::depthwise(a, wc, ws, stride)
+                    }
+                }
+                NodeOp::Pointwise { stride } => {
+                    let (wc, ws) = wpair(nd.layer.expect("kernel node"));
+                    exec::pointwise(input(0), wc, ws, stride)
+                }
+                NodeOp::Pool { k, stride, max } => {
+                    if max {
+                        pool::maxpool(input(0), k, stride)
+                    } else {
+                        pool::avgpool(input(0), k, stride)
+                    }
+                }
+                NodeOp::Fc => {
+                    let (wc, ws) = wpair(nd.layer.expect("kernel node"));
+                    let v = exec::fc(input(0), wc, ws);
+                    let len = v.len();
+                    Tensor3::from_vec(1, 1, len, v)
+                }
+                NodeOp::Concat => {
+                    let parts: Vec<&Tensor3> = (0..nd.inputs.len()).map(input).collect();
+                    concat_channels(&parts)
+                }
+                NodeOp::Residual => {
+                    let (a, b) = (input(0), input(1));
+                    let data =
+                        a.data.iter().zip(&b.data).map(|(&p, &q)| p.max(q)).collect();
+                    Tensor3 { h: a.h, w: a.w, c: a.c, data }
+                }
+                NodeOp::Flatten => {
+                    let a = input(0);
+                    Tensor3::from_vec(1, 1, a.len(), a.data.clone())
+                }
+                NodeOp::Requant => exec::requant(input(0)),
+            }
+        };
+        let y = if nd.requant { exec::requant(&y) } else { y };
+        let y = match nd.fused_pool {
+            Some(fp) if fp.max => pool::maxpool(&y, fp.k, fp.stride),
+            Some(fp) => pool::avgpool(&y, fp.k, fp.stride),
+            None => y,
+        };
+        vals[id] = Some(y);
+    }
+    vals[g.output].take().expect("output node evaluated")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::runner::random_input_for;
+    use crate::models::{squeezenet::squeezenet_test, tinycnn::tinycnn};
+
+    #[test]
+    fn lower_round_trips_infer_routes() {
+        for net in [tinycnn(), squeezenet_test()] {
+            let legacy = ForwardPlan::infer(&net).unwrap();
+            let g = Graph::lower(&net).unwrap();
+            assert_eq!(g.forward_plan().routes, legacy.routes, "{}", net.name);
+        }
+    }
+
+    #[test]
+    fn lowered_graph_interprets_bit_exact() {
+        let net = tinycnn();
+        let w = NetWeights::random(&net, 11);
+        let x = random_input_for(&net, 3);
+        let g = Graph::lower(&net).unwrap();
+        let got = reference_forward(&g, &w, &x);
+        let want = crate::dataflow::forward::forward_ref(&net, &w, &x);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn malformed_layers_are_typed_errors() {
+        assert_eq!(
+            Graph::lower(&Network { name: "e".into(), layers: vec![] }),
+            Err(GraphError::Empty)
+        );
+        // depthwise with cout != cin: the old path panicked deep in exec
+        let bad = Network {
+            name: "dw".into(),
+            layers: vec![LayerDesc {
+                name: "dw0".into(),
+                op: Op::Depthwise { k: 3, stride: 1, pad: 1 },
+                hin: 8,
+                win: 8,
+                cin: 4,
+                cout: 5,
+            }],
+        };
+        assert!(matches!(
+            Graph::lower(&bad),
+            Err(GraphError::ChannelMismatch { layer: 0, .. })
+        ));
+        // kernel larger than the padded input: the old path hit an assert
+        let small = Network {
+            name: "small".into(),
+            layers: vec![LayerDesc::conv("c", 5, 1, 0, 3, 3, 2, 4)],
+        };
+        assert!(matches!(
+            Graph::lower(&small),
+            Err(GraphError::KernelTooLarge { layer: 0, .. })
+        ));
+        let z = Network {
+            name: "z".into(),
+            layers: vec![LayerDesc {
+                name: "z0".into(),
+                op: Op::Conv { kh: 3, kw: 3, stride: 0, pad: 1 },
+                hin: 8,
+                win: 8,
+                cin: 2,
+                cout: 4,
+            }],
+        };
+        assert!(matches!(Graph::lower(&z), Err(GraphError::ZeroStride { layer: 0, .. })));
+    }
+
+    #[test]
+    fn builder_rejects_bad_merges() {
+        let mut b = GraphBuilder::new("bad", 8, 8, 3);
+        let a = b.conv(b.input(), 3, 1, 1, 4).unwrap();
+        assert!(matches!(b.concat(&[a]), Err(GraphError::ConcatArity { arity: 1, .. })));
+        let p = b.maxpool(a, 2, 2).unwrap();
+        assert!(matches!(b.concat(&[a, p]), Err(GraphError::ShapeMismatch { .. })));
+        assert!(matches!(b.residual(a, p), Err(GraphError::ShapeMismatch { .. })));
+    }
+
+    #[test]
+    fn builder_diamond_validates_and_runs() {
+        let mut b = GraphBuilder::new("diamond", 8, 8, 3);
+        let a = b.conv(b.input(), 3, 1, 1, 4).unwrap();
+        let p = b.conv(a, 3, 1, 1, 4).unwrap();
+        let q = b.pointwise(a, 4).unwrap();
+        let m = b.residual(p, q).unwrap();
+        let out = b.conv(m, 3, 1, 1, 5).unwrap();
+        let g = b.finish(out).unwrap();
+        assert_eq!(g.nodes[g.output].domain, Domain::Psum);
+        let net = g.weight_network();
+        let w = NetWeights::random(&net, 7);
+        let x = random_input_for(&net, 2);
+        let y = reference_forward(&g, &w, &x);
+        assert_eq!((y.h, y.w, y.c), (8, 8, 5));
+    }
+
+    #[test]
+    fn concat_channels_matches_binary_helper() {
+        let a = Tensor3::from_vec(1, 2, 2, vec![1, 2, 3, 4]);
+        let b = Tensor3::from_vec(1, 2, 1, vec![9, 8]);
+        let c = concat_channels(&[&a, &b]);
+        assert_eq!(c.data, vec![1, 2, 9, 3, 4, 8]);
+        let d = concat_channels(&[&a, &b, &a]);
+        assert_eq!(d.data, vec![1, 2, 9, 1, 2, 3, 4, 8, 3, 4]);
+    }
+}

@@ -27,12 +27,21 @@
 //! arena scratch driving a register-blocked MR×NR micro-kernel, chosen
 //! per step by [`SwCost::gemm_pays`] and carried on the [`StepPlan`] as
 //! a [`GemmTile`]. Both produce identical bits by construction.
+//!
+//! Model structure itself lives in the typed IR (`ir`): flat layer lists
+//! lower to a [`Graph`] of nodes with explicit edges and inferred
+//! shape/quant facts, the rewrite pipeline (`passes`: declutter → fuse →
+//! plan) rewrites it under a machine-checked semantics contract, and
+//! `ModelProgram::compile` consumes the post-pass graph — so the
+//! compiler, `EXPLAIN`, and the executors all sit on one IR.
 
 pub mod arena;
 pub mod engine;
 pub mod exec;
 pub mod forward;
 pub mod gemm;
+pub mod ir;
+pub mod passes;
 pub mod pool;
 pub mod program;
 pub mod schedule;
@@ -42,6 +51,8 @@ pub mod workers;
 pub use arena::ActivationArena;
 pub use engine::{Engine, EngineOptions, FusedWeights, PlanTimer};
 pub use forward::{forward_engine, forward_ref, ForwardPlan};
+pub use ir::{reference_forward, Graph, GraphBuilder, GraphError, NodeOp};
+pub use passes::{default_pipeline, run_pipeline, Pass};
 pub use gemm::{pack_cols, pack_weight_panels, PanelData, GEMM_NR};
 pub use program::{
     cached_program, explain_rows, run_batch_lockstep, ModelProgram, ProgramExecutor, ProgramPlan,

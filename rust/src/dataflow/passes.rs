@@ -1,0 +1,289 @@
+//! Rewrite passes over the typed IR: declutter → fuse → plan.
+//!
+//! Every pass is a pure `&Graph -> Graph` function with a machine-checked
+//! "preserves semantics" contract, enforced two ways:
+//!
+//! 1. **Structural:** [`run_pipeline`] re-runs [`Graph::validate`] after
+//!    every pass — a rewrite that breaks a shape, domain, or topology fact
+//!    is rejected at compile time with a typed [`GraphError`].
+//! 2. **Numeric:** `tests/ir_passes.rs` pins
+//!    `reference_forward(pre) == reference_forward(post)` bit-for-bit over
+//!    randomized graphs, per pass and for the whole pipeline, plus
+//!    idempotence (`p(p(g)) == p(g)`).
+//!
+//! Passes never remove or reorder [`Graph::layers`] entries (the
+//! `NetWeights` alignment invariant); they only rewrite nodes, fold
+//! structure, and — for the 1×1-conv→fc rewrite — retag a descriptor's op
+//! with an identically-shaped one.
+
+use crate::dataflow::ir::{FusedPool, Graph, GraphError, Node, NodeId, NodeOp};
+use crate::models::layer::Op;
+
+/// A named rewrite pass.
+#[derive(Clone, Copy)]
+pub struct Pass {
+    pub name: &'static str,
+    pub run: fn(&Graph) -> Graph,
+}
+
+/// The standard pipeline, in order. Requant folding runs after dead-node
+/// elimination so the builder's dead output-requant is swept before
+/// folding (folding it would wrongly requant the served logits); the
+/// structural rewrites run last, over the folded graph.
+pub fn default_pipeline() -> Vec<Pass> {
+    vec![
+        Pass { name: "dead-node-elimination", run: dead_node_elimination },
+        Pass { name: "fold-requant", run: fold_requant },
+        Pass { name: "1x1-conv-to-fc", run: one_by_one_conv_to_fc },
+        Pass { name: "fuse-conv-pool", run: fuse_conv_pool },
+        Pass { name: "elide-concat-chains", run: elide_concat_chains },
+    ]
+}
+
+/// Run `passes` in order, re-validating after each one. The returned
+/// graph is structurally sound; numeric equivalence is pinned by tests.
+pub fn run_pipeline(g: &Graph, passes: &[Pass]) -> Result<Graph, GraphError> {
+    let mut cur = g.clone();
+    for p in passes {
+        cur = (p.run)(&cur);
+        cur.validate()?;
+    }
+    Ok(cur)
+}
+
+/// Drop every node the output cannot reach, renumbering the survivors
+/// (order-preserving, so topological order is maintained). `layers`
+/// entries for dead kernels are kept — dead layers keep harmless weight
+/// entries, preserving the weight-stream alignment.
+fn compact(g: &Graph, keep: &[bool]) -> Graph {
+    let mut remap = vec![usize::MAX; g.nodes.len()];
+    let mut nodes: Vec<Node> = Vec::new();
+    for (id, nd) in g.nodes.iter().enumerate() {
+        if !keep[id] {
+            continue;
+        }
+        let mut nd = nd.clone();
+        for i in nd.inputs.iter_mut() {
+            debug_assert_ne!(remap[*i], usize::MAX, "kept node reads a dropped node");
+            *i = remap[*i];
+        }
+        remap[id] = nodes.len();
+        nodes.push(nd);
+    }
+    Graph {
+        name: g.name.clone(),
+        nodes,
+        output: remap[g.output],
+        layers: g.layers.clone(),
+    }
+}
+
+/// Redirect every edge (and the output) reading `from` to read `to`.
+fn rewire(g: &mut Graph, from: NodeId, to: NodeId) {
+    for nd in g.nodes.iter_mut() {
+        for i in nd.inputs.iter_mut() {
+            if *i == from {
+                *i = to;
+            }
+        }
+    }
+    if g.output == from {
+        g.output = to;
+    }
+}
+
+/// Dead-node elimination: keep exactly the nodes reachable from the
+/// output (plus node 0, the input anchor every program needs).
+pub fn dead_node_elimination(g: &Graph) -> Graph {
+    let mut keep = vec![false; g.nodes.len()];
+    keep[0] = true;
+    let mut stack = vec![g.output];
+    while let Some(id) = stack.pop() {
+        if keep[id] {
+            continue;
+        }
+        keep[id] = true;
+        stack.extend(g.nodes[id].inputs.iter().copied());
+    }
+    compact(g, &keep)
+}
+
+/// Requant folding: an explicit [`NodeOp::Requant`] whose producer is a
+/// compute node with no folded requant yet becomes a `requant: true` flag
+/// on the producer — one fused step instead of two, exactly the fold
+/// `ModelProgram` executes.
+pub fn fold_requant(g: &Graph) -> Graph {
+    let mut out = g.clone();
+    loop {
+        let mut folded = None;
+        for (id, nd) in out.nodes.iter().enumerate() {
+            if nd.op != NodeOp::Requant {
+                continue;
+            }
+            let p = nd.inputs[0];
+            if out.nodes[p].op.is_compute() && !out.nodes[p].requant {
+                folded = Some((id, p));
+                break;
+            }
+        }
+        let Some((id, p)) = folded else { break };
+        out.nodes[p].requant = true;
+        rewire(&mut out, id, p);
+        let mut keep = vec![true; out.nodes.len()];
+        keep[id] = false;
+        out = compact(&out, &keep);
+    }
+    out
+}
+
+/// 1×1-conv→fc: a pointwise (or 1×1, pad-0 conv) over a 1×1 feature map
+/// *is* a fully-connected layer — same weight shape `(cout,1,1,cin)`,
+/// same MACs, bit-identical output (`exec::fc == exec::pointwise` on flat
+/// input, unit-pinned). Retag both the node and its descriptor so the
+/// planner costs it as the Fc it is (Fc steps split over `out_c`, not
+/// rows).
+pub fn one_by_one_conv_to_fc(g: &Graph) -> Graph {
+    let mut out = g.clone();
+    for id in 0..out.nodes.len() {
+        let nd = &out.nodes[id];
+        let one_by_one = match nd.op {
+            NodeOp::Pointwise { .. } => true,
+            NodeOp::Conv { kh: 1, kw: 1, pad: 0, .. } => true,
+            _ => false,
+        };
+        if !one_by_one || nd.fused_pool.is_some() {
+            continue;
+        }
+        let ins = out.nodes[nd.inputs[0]].shape;
+        if (ins.h, ins.w) != (1, 1) {
+            continue;
+        }
+        let li = nd.layer.expect("kernel node has a layer");
+        out.nodes[id].op = NodeOp::Fc;
+        let l = &mut out.layers[li];
+        l.op = Op::Fc;
+        l.hin = 1;
+        l.win = 1;
+    }
+    out
+}
+
+/// Conv+pool fusion: a pool whose producer is a requanted compute node
+/// read by nobody else folds into the producer as a [`FusedPool`]
+/// annotation. The program compiler re-expands it to the same two steps
+/// (the paper's pooling unit sits behind the PE grid, not inside it), so
+/// execution is unchanged — but the planner sees one logical node and
+/// `EXPLAIN` marks both halves `fused=pool`.
+pub fn fuse_conv_pool(g: &Graph) -> Graph {
+    let mut out = g.clone();
+    let counts = out.consumer_counts();
+    let mut fuses: Vec<(NodeId, NodeId)> = Vec::new(); // (conv, pool)
+    for (id, nd) in out.nodes.iter().enumerate() {
+        if !matches!(nd.op, NodeOp::Pool { .. }) {
+            continue;
+        }
+        let p = nd.inputs[0];
+        let pn = &out.nodes[p];
+        let fusable = matches!(
+            pn.op,
+            NodeOp::Conv { .. } | NodeOp::Depthwise { .. } | NodeOp::Pointwise { .. }
+        ) && pn.requant
+            && pn.fused_pool.is_none()
+            && counts[p] == 1
+            && out.output != p;
+        if fusable {
+            fuses.push((p, id));
+        }
+    }
+    let mut drop = vec![true; out.nodes.len()];
+    for (conv, pool) in fuses {
+        let NodeOp::Pool { k, stride, max } = out.nodes[pool].op else { unreachable!() };
+        let layer = out.nodes[pool].layer.expect("pool node has a layer");
+        out.nodes[conv].fused_pool = Some(FusedPool { k, stride, max, layer });
+        out.nodes[conv].shape = out.nodes[pool].shape;
+        rewire(&mut out, pool, conv);
+        drop[pool] = false;
+    }
+    compact(&out, &drop)
+}
+
+/// Concat elision: a concat feeding exactly one other concat inlines its
+/// parts into the outer one — back-to-back concats become a single n-ary
+/// concat the program stages with one pass of pre-offset writes instead
+/// of materializing the inner result.
+pub fn elide_concat_chains(g: &Graph) -> Graph {
+    let mut out = g.clone();
+    let counts = out.consumer_counts();
+    let mut dropped = vec![false; out.nodes.len()];
+    // walk in id order so chains cascade: by the time an outer concat is
+    // visited, any inner concat it reads has already inlined *its* inners
+    for id in 0..out.nodes.len() {
+        if out.nodes[id].op != NodeOp::Concat {
+            continue;
+        }
+        let mut inlined = Vec::new();
+        for &i in &out.nodes[id].inputs {
+            let inner = &out.nodes[i];
+            if inner.op == NodeOp::Concat && counts[i] == 1 && out.output != i {
+                inlined.extend(inner.inputs.iter().copied());
+                dropped[i] = true;
+            } else {
+                inlined.push(i);
+            }
+        }
+        out.nodes[id].inputs = inlined;
+    }
+    let keep: Vec<bool> = dropped.iter().map(|&d| !d).collect();
+    compact(&out, &keep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::ir::GraphBuilder;
+
+    fn chain_with_orphan() -> Graph {
+        let mut b = GraphBuilder::new("orphan", 8, 8, 3);
+        let a = b.conv(b.input(), 3, 1, 1, 4).unwrap();
+        let _dead = b.pointwise(a, 7).unwrap(); // never reaches the output
+        let out = b.conv(a, 3, 1, 1, 5).unwrap();
+        b.finish(out).unwrap()
+    }
+
+    #[test]
+    fn dce_drops_orphans_and_revalidates() {
+        let g = chain_with_orphan();
+        let d = dead_node_elimination(&g);
+        d.validate().unwrap();
+        assert!(d.nodes.len() < g.nodes.len());
+        // layers are never removed, only nodes
+        assert_eq!(d.layers.len(), g.layers.len());
+        assert_eq!(dead_node_elimination(&d), d, "idempotent");
+    }
+
+    #[test]
+    fn fold_requant_leaves_no_explicit_requants() {
+        let g = dead_node_elimination(&chain_with_orphan());
+        let f = fold_requant(&g);
+        f.validate().unwrap();
+        assert!(f.nodes.iter().all(|n| n.op != NodeOp::Requant));
+        assert_eq!(fold_requant(&f), f, "idempotent");
+    }
+
+    #[test]
+    fn nested_concats_flatten_to_nary() {
+        let mut b = GraphBuilder::new("cc", 6, 6, 2);
+        let a = b.conv(b.input(), 3, 1, 1, 2).unwrap();
+        let p = b.pointwise(a, 3).unwrap();
+        let q = b.depthwise(a, 1).unwrap();
+        let inner = b.concat(&[p, q]).unwrap();
+        let outer = b.concat(&[inner, a]).unwrap();
+        let out = b.pointwise(outer, 4).unwrap();
+        let g = b.finish(out).unwrap();
+        let e = run_pipeline(&g, &default_pipeline()).unwrap();
+        let concats: Vec<&Node> =
+            e.nodes.iter().filter(|n| n.op == NodeOp::Concat).collect();
+        assert_eq!(concats.len(), 1, "inner concat elided");
+        assert_eq!(concats[0].inputs.len(), 3, "3-way pre-offset concat");
+    }
+}

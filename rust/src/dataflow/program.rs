@@ -54,6 +54,7 @@ use super::engine::{
 };
 use super::forward::{ForwardPlan, Routing, Source};
 use super::gemm::gemm_chunk;
+use super::ir::{Graph, GraphError, NodeOp};
 use super::pool::{avgpool_rows, maxpool_rows};
 use super::schedule::{
     analyze, plan_rows, plan_rows_forced, plan_rows_gemm, ScheduleOptions, Split, StepPlan, SwCost,
@@ -95,8 +96,9 @@ impl Operand {
 pub enum Merge {
     /// One source copied into the padded interior.
     Copy(Operand),
-    /// Channel concat: `a`'s channels then `b`'s, per pixel.
-    Concat(Operand, Operand),
+    /// Channel concat: each part's channels in order, per pixel (n-ary —
+    /// elided concat chains stage all their parts in one pass).
+    Concat(Vec<Operand>),
     /// Residual merge: elementwise code max of two same-shape sources.
     Residual(Operand, Operand),
 }
@@ -138,6 +140,11 @@ pub enum Kernel {
     MaxPool { k: usize, stride: usize },
     AvgPool { k: usize, stride: usize },
     Fc,
+    /// Materialize a staged merge whose value is read by more than one
+    /// consumer (or re-merged): the staging pass *is* the step — no
+    /// kernel runs, the out slot is the stage slot. Only graphs beyond
+    /// the flat zoo language produce these.
+    Stage,
 }
 
 /// One compiled layer execution.
@@ -165,6 +172,10 @@ pub struct Step {
     /// column of the `EXPLAIN` table, carried next to the software plan
     /// so one table answers both sides of "one planner".
     pub hw_util: f64,
+    /// This step is one half of an IR-level conv+pool fusion (marked on
+    /// both halves; `EXPLAIN` renders `fused=pool`). Execution is
+    /// unchanged — the fusion is a planner-visibility annotation.
+    pub fused: bool,
 }
 
 impl Step {
@@ -173,10 +184,12 @@ impl Step {
     }
 
     /// The step's planned row axis: output rows, except for Fc where
-    /// the output-neuron axis is split (`rowlen == 1`).
+    /// the output-neuron axis is split (`rowlen == 1`). Stage steps run
+    /// on the submitting thread (axis 1 → always planned serial).
     pub fn plan_rows_axis(&self) -> usize {
         match self.kernel {
             Kernel::Fc => self.out_c,
+            Kernel::Stage => 1,
             _ => self.out_h,
         }
     }
@@ -193,8 +206,11 @@ pub struct ModelProgram {
     /// Slot holding the final layer's output after a run.
     pub out_slot: usize,
     pub out_dims: (usize, usize, usize),
-    /// Shape fingerprint (also the plan-cache key — see
-    /// [`ModelProgram::plans_for`]).
+    /// Step-structure fingerprint (also the plan-cache key — see
+    /// [`ModelProgram::plans_for`]). Hashed over the compiled steps,
+    /// not the source layer list, so two programs that compile the same
+    /// network differently (e.g. the routing path vs the IR pipeline)
+    /// never collide in the plan cache.
     pub fingerprint: u64,
 }
 
@@ -211,11 +227,17 @@ fn alloc_slot(sizes: &mut Vec<usize>, free: &mut Vec<usize>, len: usize) -> usiz
 }
 
 impl ModelProgram {
-    /// Infer the routing plan and compile it. One call per (model,
-    /// profile) — see [`cached_program`] for the process-wide cache.
+    /// Lower the flat layer list to the typed IR, run the rewrite
+    /// pipeline (declutter → fuse → plan), and compile the post-pass
+    /// graph. One call per (model, profile) — see [`cached_program`]
+    /// for the process-wide cache. Malformed layer lists are rejected
+    /// up front by lowering (typed [`GraphError`]) instead of panicking
+    /// deep in execution.
     pub fn compile(net: &Network) -> Result<ModelProgram, String> {
-        let plan = ForwardPlan::infer(net)?;
-        Ok(Self::from_plan(net, &plan))
+        let g = Graph::lower(net).map_err(|e| e.to_string())?;
+        let g = super::passes::run_pipeline(&g, &super::passes::default_pipeline())
+            .map_err(|e| e.to_string())?;
+        Self::from_graph(&g).map_err(|e| e.to_string())
     }
 
     /// Compile against a precomputed routing plan.
@@ -284,7 +306,14 @@ impl ModelProgram {
                     let (h, w, c) =
                         (l.hin + 2 * pad, l.win + 2 * pad, oa.c + ob.c);
                     let slot = alloc_slot(&mut slot_sizes, &mut free, h * w * c);
-                    Input::Staged(StagePlan { slot, h, w, c, pad, merge: Merge::Concat(oa, ob) })
+                    Input::Staged(StagePlan {
+                        slot,
+                        h,
+                        w,
+                        c,
+                        pad,
+                        merge: Merge::Concat(vec![oa, ob]),
+                    })
                 }
                 Routing::Residual(a, b) => {
                     let (oa, ob) = (operand(a), operand(b));
@@ -363,10 +392,12 @@ impl ModelProgram {
                 work,
                 kdim,
                 hw_util,
+                fused: false,
             });
         }
         let last = steps.last().expect("network has at least one layer");
         let (out_slot, out_dims) = (last.out_slot, (last.out_h, last.out_w, last.out_c));
+        let fp = fingerprint_steps(&steps);
         ModelProgram {
             name: net.name.clone(),
             input_dims,
@@ -374,8 +405,343 @@ impl ModelProgram {
             slot_sizes,
             out_slot,
             out_dims,
-            fingerprint: fingerprint(net),
+            fingerprint: fp,
         }
+    }
+
+    /// Compile a post-pass typed-IR [`Graph`] into a program. This is
+    /// the general path: it handles everything [`Self::from_plan`] does
+    /// (and produces the identical step/slot sequence for graphs lowered
+    /// from flat zoo layer lists) plus the shapes only the IR can
+    /// express — n-ary concats, fused conv+pool nodes, and merge values
+    /// read by more than one consumer (materialized by [`Kernel::Stage`]
+    /// steps). Explicit [`NodeOp::Requant`] nodes must already be folded
+    /// (`passes::fold_requant`); weights are looked up by each node's
+    /// `layer` index against the graph's untouched `layers` list.
+    pub fn from_graph(g: &Graph) -> Result<ModelProgram, GraphError> {
+        g.validate()?;
+        for (id, nd) in g.nodes.iter().enumerate() {
+            if nd.op == NodeOp::Requant {
+                return Err(GraphError::UnfoldedRequant { node: id });
+            }
+        }
+        let nn = g.nodes.len();
+        let grid = GridConfig::neuromax();
+        let s0 = g.nodes[0].shape;
+        let input_dims = (s0.h, s0.w, s0.c);
+
+        let is_kernel = |id: usize| g.nodes[id].op.is_compute() || matches!(g.nodes[id].op, NodeOp::Pool { .. });
+        // single consumer per node (usize::MAX when 0 or >1 consumers)
+        let counts = g.consumer_counts();
+        let mut single_consumer = vec![usize::MAX; nn];
+        for (id, nd) in g.nodes.iter().enumerate() {
+            for &i in &nd.inputs {
+                single_consumer[i] = if counts[i] == 1 { id } else { usize::MAX };
+            }
+        }
+        // a merge folds into its consumer's staged input iff it has
+        // exactly one consumer, that consumer is a kernel node, and the
+        // merge is not the served output; otherwise a Stage step
+        // materializes it
+        let mut foldable = vec![false; nn];
+        for (id, nd) in g.nodes.iter().enumerate() {
+            foldable[id] = nd.op.is_merge()
+                && g.output != id
+                && single_consumer[id] != usize::MAX
+                && is_kernel(single_consumer[id]);
+        }
+        // resolve an edge target through flatten views to the node whose
+        // buffer is actually read; `flat` records the reinterpretation
+        fn resolve_node(g: &Graph, mut id: usize) -> (usize, bool) {
+            let mut flat = false;
+            while g.nodes[id].op == NodeOp::Flatten {
+                flat = true;
+                id = g.nodes[id].inputs[0];
+            }
+            (id, flat)
+        }
+        // liveness: the last emission (by emitting node id) that reads
+        // each materialized node's buffer. A foldable merge's reads
+        // happen inside its consumer's staging; flatten views read
+        // nothing themselves.
+        let mut last_read = vec![0usize; nn];
+        for (r, nd) in g.nodes.iter().enumerate() {
+            if nd.op == NodeOp::Flatten {
+                continue;
+            }
+            let site = if foldable[r] { single_consumer[r] } else { r };
+            for &i in &nd.inputs {
+                let (u, _) = resolve_node(g, i);
+                if !foldable[u] {
+                    last_read[u] = last_read[u].max(site);
+                }
+            }
+        }
+        let (out_node, out_flat) = resolve_node(g, g.output);
+        if g.nodes[out_node].op == NodeOp::Input {
+            return Err(GraphError::Malformed {
+                node: g.output,
+                detail: "program output is the network input".into(),
+            });
+        }
+        last_read[out_node] = usize::MAX; // the served logits never die
+
+        let mut slot_sizes: Vec<usize> = Vec::new();
+        let mut free: Vec<usize> = Vec::new();
+        // per materialized node: its slot and provenance tag (the layer
+        // index producing its value, or a synthetic tag for Stage steps)
+        let mut slot_of = vec![usize::MAX; nn];
+        let mut tag_of = vec![usize::MAX; nn];
+        let mut steps: Vec<Step> = Vec::new();
+
+        let mk_operand = |slot_of: &[usize], tag_of: &[usize], u: usize, flat: bool| -> Operand {
+            let s = g.nodes[u].shape;
+            let (h, w, c) = if flat { (1, 1, s.len()) } else { (s.h, s.w, s.c) };
+            if g.nodes[u].op == NodeOp::Input {
+                Operand { slot: None, src_layer: usize::MAX, h, w, c }
+            } else {
+                Operand { slot: Some(slot_of[u]), src_layer: tag_of[u], h, w, c }
+            }
+        };
+
+        for (id, nd) in g.nodes.iter().enumerate() {
+            // the materialized nodes this step reads, in operand order
+            // (for the post-alloc liveness frees, deduped)
+            let mut reads: Vec<usize> = Vec::new();
+            match nd.op {
+                NodeOp::Input | NodeOp::Flatten | NodeOp::Requant => continue,
+                NodeOp::Concat | NodeOp::Residual => {
+                    if foldable[id] {
+                        continue; // staged inside the consumer's step
+                    }
+                    let ops: Vec<Operand> = nd
+                        .inputs
+                        .iter()
+                        .map(|&i| {
+                            let (u, fl) = resolve_node(g, i);
+                            reads.push(u);
+                            mk_operand(&slot_of, &tag_of, u, fl)
+                        })
+                        .collect();
+                    let (h, w, c) = (nd.shape.h, nd.shape.w, nd.shape.c);
+                    // one slot is both the stage target and the output
+                    let slot = alloc_slot(&mut slot_sizes, &mut free, h * w * c);
+                    let merge = match nd.op {
+                        NodeOp::Residual => Merge::Residual(ops[0], ops[1]),
+                        _ => Merge::Concat(ops),
+                    };
+                    let tag = usize::MAX - 1 - id;
+                    steps.push(Step {
+                        layer: tag,
+                        kernel: Kernel::Stage,
+                        input: Input::Staged(StagePlan { slot, h, w, c, pad: 0, merge }),
+                        out_slot: slot,
+                        out_h: h,
+                        out_w: w,
+                        out_c: c,
+                        requant: false,
+                        work: (h * w * c) as u64,
+                        kdim: 0,
+                        hw_util: 0.0,
+                        fused: false,
+                    });
+                    slot_of[id] = slot;
+                    tag_of[id] = tag;
+                    let mut dying: Vec<usize> = Vec::new();
+                    for &u in &reads {
+                        if slot_of[u] != usize::MAX
+                            && last_read[u] == id
+                            && !dying.contains(&slot_of[u])
+                        {
+                            dying.push(slot_of[u]);
+                        }
+                    }
+                    free.extend(dying);
+                }
+                _ => {
+                    // kernel node: conv / depthwise / pointwise / pool / fc
+                    let li = nd.layer.expect("kernel node has a layer");
+                    let l = &g.layers[li];
+                    let pad = match l.op {
+                        Op::Conv { pad, .. } | Op::Depthwise { pad, .. } => pad,
+                        _ => 0,
+                    };
+                    let in_id = nd.inputs[0];
+                    let mut stage_slot = None;
+                    let input = if foldable[in_id] {
+                        // merge folded into this step's staged input
+                        let inn = &g.nodes[in_id];
+                        let ops: Vec<Operand> = inn
+                            .inputs
+                            .iter()
+                            .map(|&i| {
+                                let (u, fl) = resolve_node(g, i);
+                                reads.push(u);
+                                mk_operand(&slot_of, &tag_of, u, fl)
+                            })
+                            .collect();
+                        let (h, w) = (l.hin + 2 * pad, l.win + 2 * pad);
+                        let c = match inn.op {
+                            NodeOp::Residual => ops[0].c,
+                            _ => ops.iter().map(|o| o.c).sum(),
+                        };
+                        let slot = alloc_slot(&mut slot_sizes, &mut free, h * w * c);
+                        stage_slot = Some(slot);
+                        let merge = match inn.op {
+                            NodeOp::Residual => Merge::Residual(ops[0], ops[1]),
+                            _ => Merge::Concat(ops),
+                        };
+                        Input::Staged(StagePlan { slot, h, w, c, pad, merge })
+                    } else {
+                        let (u, fl) = resolve_node(g, in_id);
+                        reads.push(u);
+                        let op = mk_operand(&slot_of, &tag_of, u, fl);
+                        if pad == 0 {
+                            Input::Direct(op)
+                        } else {
+                            let (h, w, c) = (op.h + 2 * pad, op.w + 2 * pad, op.c);
+                            let slot = alloc_slot(&mut slot_sizes, &mut free, h * w * c);
+                            stage_slot = Some(slot);
+                            Input::Staged(StagePlan {
+                                slot,
+                                h,
+                                w,
+                                c,
+                                pad,
+                                merge: Merge::Copy(op),
+                            })
+                        }
+                    };
+                    // kernel selection keys on the NODE op — the
+                    // 1×1-conv→fc pass retags nodes (and descs) to Fc
+                    let kernel = match nd.op {
+                        NodeOp::Conv { kh, kw, stride, .. } => {
+                            if kh == 3 && kw == 3 && stride == 1 {
+                                Kernel::Conv3x3S1
+                            } else {
+                                Kernel::Conv { stride }
+                            }
+                        }
+                        NodeOp::Pointwise { stride } => Kernel::Conv { stride },
+                        NodeOp::Depthwise { stride, .. } => Kernel::Depthwise { stride },
+                        NodeOp::Pool { k, stride, max } => {
+                            if max {
+                                Kernel::MaxPool { k, stride }
+                            } else {
+                                Kernel::AvgPool { k, stride }
+                            }
+                        }
+                        NodeOp::Fc => Kernel::Fc,
+                        _ => unreachable!("assembly ops handled above"),
+                    };
+                    // output dims from the DESC (for a fused node the
+                    // node shape is the pool-out; the conv half still
+                    // writes the conv-out intermediate)
+                    let (out_h, out_w) = l.out_dims();
+                    let out_c = l.cout;
+                    let out_slot = alloc_slot(&mut slot_sizes, &mut free, out_h * out_w * out_c);
+                    if let Some(s) = stage_slot {
+                        free.push(s);
+                    }
+                    // sources whose last reader is this node die with the
+                    // kernel half (out/pool slots were acquired while
+                    // they were held, so nothing aliases)
+                    let mut dying: Vec<usize> = Vec::new();
+                    for &u in &reads {
+                        if slot_of[u] != usize::MAX
+                            && last_read[u] == id
+                            && !dying.contains(&slot_of[u])
+                        {
+                            dying.push(slot_of[u]);
+                        }
+                    }
+                    free.extend(dying);
+                    let work = match l.op {
+                        Op::Pool { k, .. } => (out_h * out_w * out_c * k * k) as u64,
+                        _ => l.macs(),
+                    };
+                    let kdim = match l.op {
+                        Op::Conv { .. } | Op::Pointwise { .. } => {
+                            let (kh2, kw2, _) = l.kernel();
+                            kh2 * kw2 * l.cin
+                        }
+                        _ => 0,
+                    };
+                    let hw_util = analyze(&grid, l, ScheduleOptions::default()).util_total(&grid);
+                    let fused_flag = nd.fused_pool.is_some();
+                    steps.push(Step {
+                        layer: li,
+                        kernel,
+                        input,
+                        out_slot,
+                        out_h,
+                        out_w,
+                        out_c,
+                        requant: nd.requant,
+                        work,
+                        kdim,
+                        hw_util,
+                        fused: fused_flag,
+                    });
+                    if let Some(fp) = nd.fused_pool {
+                        // second half of the fusion: the pool step reads
+                        // the conv intermediate and produces the node's
+                        // value (the intermediate dies with the pool —
+                        // single-consumer is the fusion contract)
+                        let pl = &g.layers[fp.layer];
+                        let (ph, pw) = pl.out_dims();
+                        let pc = pl.cout;
+                        let conv_op = Operand {
+                            slot: Some(out_slot),
+                            src_layer: li,
+                            h: out_h,
+                            w: out_w,
+                            c: out_c,
+                        };
+                        let pool_slot = alloc_slot(&mut slot_sizes, &mut free, ph * pw * pc);
+                        free.push(out_slot);
+                        steps.push(Step {
+                            layer: fp.layer,
+                            kernel: if fp.max {
+                                Kernel::MaxPool { k: fp.k, stride: fp.stride }
+                            } else {
+                                Kernel::AvgPool { k: fp.k, stride: fp.stride }
+                            },
+                            input: Input::Direct(conv_op),
+                            out_slot: pool_slot,
+                            out_h: ph,
+                            out_w: pw,
+                            out_c: pc,
+                            requant: false,
+                            work: (ph * pw * pc * fp.k * fp.k) as u64,
+                            kdim: 0,
+                            hw_util: analyze(&grid, pl, ScheduleOptions::default())
+                                .util_total(&grid),
+                            fused: true,
+                        });
+                        slot_of[id] = pool_slot;
+                        tag_of[id] = fp.layer;
+                    } else {
+                        slot_of[id] = out_slot;
+                        tag_of[id] = li;
+                    }
+                }
+            }
+        }
+        debug_assert!(!steps.is_empty(), "non-input output implies at least one step");
+        let oop = mk_operand(&slot_of, &tag_of, out_node, out_flat);
+        let out_slot = oop.slot.expect("output is not the input");
+        let out_dims = (oop.h, oop.w, oop.c);
+        let fp = fingerprint_steps(&steps);
+        Ok(ModelProgram {
+            name: g.name.clone(),
+            input_dims,
+            steps,
+            slot_sizes,
+            out_slot,
+            out_dims,
+            fingerprint: fp,
+        })
     }
 
     /// Total arena footprint the program's slots require, bytes.
@@ -495,8 +861,13 @@ pub fn explain_rows(net: &Network, prog: &ModelProgram, plan: &ProgramPlan) -> V
     prog.steps
         .iter()
         .zip(&plan.steps)
-        .map(|(s, p)| {
-            let l = &net.layers[s.layer];
+        .enumerate()
+        .map(|(i, (s, p))| {
+            // steps derive from IR nodes now: Stage steps (materialized
+            // merges) carry a synthetic layer tag, so name/index fall
+            // back to the step position
+            let lname = net.layers.get(s.layer).map(|l| l.name.as_str()).unwrap_or("(stage)");
+            let idx = if s.layer < net.layers.len() { s.layer } else { i };
             let (ih, iw, ic) = match &s.input {
                 Input::Staged(sp) => (sp.h, sp.w, sp.c),
                 Input::Direct(op) => (op.h, op.w, op.c),
@@ -510,16 +881,15 @@ pub fn explain_rows(net: &Network, prog: &ModelProgram, plan: &ProgramPlan) -> V
                 (Kernel::Depthwise { .. }, _) => "depthwise".to_string(),
                 (Kernel::MaxPool { .. } | Kernel::AvgPool { .. }, _) => "pool".to_string(),
                 (Kernel::Fc, _) => "fc".to_string(),
+                (Kernel::Stage, _) => "stage".to_string(),
             };
             let split = match p.split {
                 Split::Serial => "serial",
                 Split::Rows => "rows",
             };
             format!(
-                "STEP {} {} kernel={kernel} in={ih}x{iw}x{ic} out={}x{}x{} \
-                 split={split} chunks={} work={} hw_util={:.1}% sw_util={:.1}%",
-                s.layer,
-                l.name,
+                "STEP {idx} {lname} kernel={kernel} in={ih}x{iw}x{ic} out={}x{}x{} \
+                 split={split} chunks={} work={} hw_util={:.1}% sw_util={:.1}%{}",
                 s.out_h,
                 s.out_w,
                 s.out_c,
@@ -527,6 +897,7 @@ pub fn explain_rows(net: &Network, prog: &ModelProgram, plan: &ProgramPlan) -> V
                 s.work,
                 100.0 * s.hw_util,
                 100.0 * p.predicted_util,
+                if s.fused { " fused=pool" } else { "" },
             )
         })
         .collect()
@@ -555,6 +926,54 @@ fn fingerprint(net: &Network) -> u64 {
         }
         for v in [l.hin, l.win, l.cin, l.cout] {
             mix(&mut h, v as u64);
+        }
+    }
+    h
+}
+
+/// Step-structure fingerprint: FNV-1a over every compiled step's
+/// kernel, dims, slot, and flags. This is the plan-cache key
+/// ([`ModelProgram::fingerprint`]) — keyed on what will actually
+/// execute, so two programs compiled differently from the same network
+/// get distinct plans.
+fn fingerprint_steps(steps: &[Step]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mix = |h: &mut u64, v: u64| {
+        *h ^= v;
+        *h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    for s in steps {
+        let (disc, a, b) = match s.kernel {
+            Kernel::Conv3x3S1 => (1u64, 0, 0),
+            Kernel::Conv { stride } => (2, stride as u64, 0),
+            Kernel::Depthwise { stride } => (3, stride as u64, 0),
+            Kernel::MaxPool { k, stride } => (4, k as u64, stride as u64),
+            Kernel::AvgPool { k, stride } => (5, k as u64, stride as u64),
+            Kernel::Fc => (6, 0, 0),
+            Kernel::Stage => (7, 0, 0),
+        };
+        let (ih, iw, ic, pad) = match &s.input {
+            Input::Staged(sp) => (sp.h, sp.w, sp.c, sp.pad),
+            Input::Direct(op) => (op.h, op.w, op.c, 0),
+        };
+        for v in [
+            disc,
+            a,
+            b,
+            s.layer as u64,
+            s.out_slot as u64,
+            s.out_h as u64,
+            s.out_w as u64,
+            s.out_c as u64,
+            s.requant as u64,
+            s.kdim as u64,
+            s.fused as u64,
+            ih as u64,
+            iw as u64,
+            ic as u64,
+            pad as u64,
+        ] {
+            mix(&mut h, v);
         }
     }
     h
@@ -600,7 +1019,10 @@ fn step_src<'a>(
 
 /// Does this kernel consume LUT-encoded activation columns?
 fn needs_cols(kernel: Kernel) -> bool {
-    !matches!(kernel, Kernel::MaxPool { .. } | Kernel::AvgPool { .. })
+    !matches!(
+        kernel,
+        Kernel::MaxPool { .. } | Kernel::AvgPool { .. } | Kernel::Stage
+    )
 }
 
 /// Fill a staged input buffer: ZERO_CODE border (when padded) plus the
@@ -619,16 +1041,20 @@ fn stage_into(buf: &mut [i32], sp: &StagePlan, slots: &[Vec<i32>], x: &Tensor3) 
                 buf[dst..dst + rowlen].copy_from_slice(&src[y * rowlen..(y + 1) * rowlen]);
             }
         }
-        Merge::Concat(a, b) => {
-            let (sa, sb) = (operand_slice(a, slots, x), operand_slice(b, slots, x));
-            for y in 0..a.h {
-                for xx in 0..a.w {
-                    let o = ((y + pad) * sp.w + xx + pad) * sp.c;
-                    let ia = (y * a.w + xx) * a.c;
-                    let ib = (y * b.w + xx) * b.c;
-                    buf[o..o + a.c].copy_from_slice(&sa[ia..ia + a.c]);
-                    buf[o + a.c..o + a.c + b.c].copy_from_slice(&sb[ib..ib + b.c]);
+        Merge::Concat(parts) => {
+            // each part's channels land at its precomputed offset —
+            // n-ary, so an elided concat chain stages in one pass
+            let mut off = 0;
+            for p in parts {
+                let src = operand_slice(p, slots, x);
+                for y in 0..p.h {
+                    for xx in 0..p.w {
+                        let o = ((y + pad) * sp.w + xx + pad) * sp.c + off;
+                        let i = (y * p.w + xx) * p.c;
+                        buf[o..o + p.c].copy_from_slice(&src[i..i + p.c]);
+                    }
                 }
+                off += p.c;
             }
         }
         Merge::Residual(a, b) => {
@@ -746,6 +1172,11 @@ impl ProgramExecutor {
                 stage_into(&mut buf[..sp.h * sp.w * sp.c], sp, &arena.slots, x);
                 arena.slots[sp.slot] = buf;
             }
+            // Stage steps materialize a merge: the staging above IS the
+            // step (out slot == stage slot), no kernel runs
+            if step.kernel == Kernel::Stage {
+                continue;
+            }
             // 2. planned kernel into the output slot (taken out so the
             // sources can be read from the arena while we write)
             let mut outbuf = std::mem::take(&mut arena.slots[step.out_slot]);
@@ -761,7 +1192,7 @@ impl ProgramExecutor {
                 let sp = &plan.steps[si];
                 let (src, sh, sw, sc) = step_src(step, slots, x);
                 let dst = &mut outbuf[..step.out_len()];
-                let fw = fused.layers[step.layer].as_ref();
+                let fw = fused.layers.get(step.layer).and_then(|w| w.as_ref());
                 match step.kernel {
                     k @ (Kernel::Conv3x3S1 | Kernel::Conv { .. }) => {
                         let stride = if let Kernel::Conv { stride } = k { stride } else { 1 };
@@ -828,6 +1259,7 @@ impl ProgramExecutor {
                             timer,
                         );
                     }
+                    Kernel::Stage => unreachable!("stage steps short-circuit above"),
                 }
             }
             arena.slots[step.out_slot] = outbuf;
@@ -922,6 +1354,20 @@ pub fn run_batch_lockstep(
         let sp = &plan.steps[si];
         // publish the step coordinate for deterministic fault injection
         crate::util::fault::set_step(si);
+        // Stage steps materialize a merge on the submitting thread:
+        // staging IS the step (out slot == stage slot), no job runs
+        if step.kernel == Kernel::Stage {
+            for (ex, &x) in execs.iter_mut().zip(inputs) {
+                let arena = &mut ex.arena;
+                if let Input::Staged(spl) = &step.input {
+                    let mut buf = std::mem::take(&mut arena.slots[spl.slot]);
+                    ensure_len(&mut buf, prog.slot_sizes[spl.slot], &mut arena.grow_events);
+                    stage_into(&mut buf[..spl.h * spl.w * spl.c], spl, &arena.slots, x);
+                    arena.slots[spl.slot] = buf;
+                }
+            }
+            continue;
+        }
         // phase 1 (submitting thread): stage/encode every element and
         // take its output + column (+ GEMM scratch) buffers out of the
         // arena
@@ -980,7 +1426,7 @@ pub fn run_batch_lockstep(
             };
             let total_rows = step.plan_rows_axis();
             let per = if sp.split == Split::Rows { sp.chunks.len().max(1) } else { 1 };
-            let fw = fused.layers[step.layer].as_ref();
+            let fw = fused.layers.get(step.layer).and_then(|w| w.as_ref());
             let measure = threads > 1;
             let busy = AtomicU64::new(0);
             let t0 = Instant::now();
@@ -1073,6 +1519,7 @@ pub fn run_batch_lockstep(
                             requant_rows(dst);
                         }
                     }
+                    Kernel::Stage => unreachable!("stage steps short-circuit above"),
                 }
                 if let Some(c0) = c0 {
                     busy.fetch_add(c0.elapsed().as_nanos() as u64, Ordering::Relaxed);

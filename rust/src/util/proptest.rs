@@ -7,11 +7,32 @@ use super::prng::SplitMix64;
 
 /// Run `cases` random property checks. `f` receives a per-case PRNG and
 /// returns `Err(msg)` to fail. Panics with the seed of the first failure.
+///
+/// The case count can be raised (or lowered) without recompiling via the
+/// `PROPTEST_CASES` env var — CI's `graph-tests` job runs the property
+/// suites above the default. The override applies only here, not to
+/// [`check_seeded`], so a failing-seed replay stays exact.
 pub fn check<F>(name: &str, cases: u64, f: F)
 where
     F: Fn(&mut SplitMix64) -> Result<(), String>,
 {
+    let cases = std::env::var("PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(cases);
     check_seeded(name, 0xC0FFEE, cases, f)
+}
+
+/// Append a failing case to the artifact file CI uploads on red
+/// (`PROPTEST_FAILURE_FILE`, default `proptest-failures.txt` in the test
+/// working directory). Best-effort: reporting must never mask the panic.
+fn record_failure(name: &str, case: u64, seed: u64, msg: &str) {
+    use std::io::Write;
+    let path = std::env::var("PROPTEST_FAILURE_FILE")
+        .unwrap_or_else(|_| "proptest-failures.txt".to_string());
+    if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(path) {
+        let _ = writeln!(f, "{name} case={case} seed={seed:#x}: {msg}");
+    }
 }
 
 /// Like [`check`] but with an explicit base seed (for replaying failures).
@@ -23,6 +44,7 @@ where
         let seed = base_seed ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
         let mut rng = SplitMix64::new(seed);
         if let Err(msg) = f(&mut rng) {
+            record_failure(name, case, seed, &msg);
             panic!(
                 "property `{name}` failed at case {case} (seed {seed:#x}): {msg}\n\
                  replay with check_seeded(\"{name}\", {seed:#x}, 1, ..)"
@@ -65,7 +87,9 @@ mod tests {
         // count via interior state: use a RefCell-free trick with atomic
         use std::sync::atomic::{AtomicU64, Ordering};
         static N: AtomicU64 = AtomicU64::new(0);
-        check("always-true", 50, |_| {
+        // check_seeded: exempt from the PROPTEST_CASES override, so the
+        // exact-count assertion holds in any environment
+        check_seeded("always-true", 0xC0FFEE, 50, |_| {
             N.fetch_add(1, Ordering::Relaxed);
             Ok(())
         });

@@ -1,0 +1,273 @@
+//! Shared graph generators + the slot-provenance replay checker, used by
+//! `program_slots.rs` (flat zoo-like layer lists) and `ir_passes.rs`
+//! (typed-IR graphs, including shapes the flat language cannot express:
+//! diamond fan-out, back-to-back concats, orphan branches, staged
+//! merges).
+#![allow(dead_code)]
+
+use neuromax::dataflow::ir::{Graph, GraphBuilder, NodeId};
+use neuromax::dataflow::program::{Input, Kernel, Merge, ModelProgram, Operand};
+use neuromax::models::layer::{LayerDesc, Network};
+use neuromax::util::prng::SplitMix64;
+
+/// Generate a random routable zoo-like network. Shape-preserving ops
+/// keep the bookkeeping exact; fire and residual segments leave their
+/// merge pending for the *next* layer (exactly how the plan inference
+/// discovers them), so the generator always materializes a join before
+/// ending or branching again.
+///
+/// Beyond the zoo shapes, the generator sometimes emits an **orphan**
+/// layer (a pointwise nothing ever consumes — its ≥33-channel output
+/// can never shape-match a later layer, so routing is unaffected; the
+/// IR pipeline's dead-node elimination drops it) and a **post-fc
+/// pointwise tail** (a 1×1-map pointwise the 1×1-conv→fc pass retags).
+pub fn random_net(rng: &mut SplitMix64, tag: u64) -> Network {
+    let mut h = 6 + rng.below(7) as usize;
+    let mut w = 6 + rng.below(5) as usize;
+    let mut c = 1 + rng.below(3) as usize;
+    let mut layers: Vec<LayerDesc> = Vec::new();
+    let mut li = 0usize;
+    let name = |li: &mut usize, s: &str| {
+        *li += 1;
+        format!("{s}{li}")
+    };
+    // a plain shape-compatible consumer: conv3/conv1/depthwise/pool
+    let plain = |rng: &mut SplitMix64,
+                 layers: &mut Vec<LayerDesc>,
+                 li: &mut usize,
+                 h: &mut usize,
+                 w: &mut usize,
+                 c: &mut usize| {
+        match rng.below(4) {
+            0 => {
+                let co = 1 + rng.below(5) as usize;
+                layers.push(LayerDesc::conv(
+                    &format!("c3_{li}"), 3, 1, 1, *h, *w, *c, co,
+                ));
+                *li += 1;
+                *c = co;
+            }
+            1 => {
+                let co = 1 + rng.below(5) as usize;
+                layers.push(LayerDesc::pointwise(&format!("pw{li}"), *h, *w, *c, co));
+                *li += 1;
+                *c = co;
+            }
+            2 => {
+                layers.push(LayerDesc::depthwise(&format!("dw{li}"), 1, *h, *w, *c));
+                *li += 1;
+            }
+            _ => {
+                if *h >= 4 && *w >= 4 {
+                    if rng.bool(0.5) {
+                        layers.push(LayerDesc::pool(&format!("mp{li}"), 2, 2, *h, *w, *c));
+                    } else {
+                        layers.push(LayerDesc::avgpool(&format!("ap{li}"), 2, 2, *h, *w, *c));
+                    }
+                    *li += 1;
+                    *h = (*h - 2) / 2 + 1;
+                    *w = (*w - 2) / 2 + 1;
+                } else {
+                    layers.push(LayerDesc::depthwise(&format!("dw{li}"), 1, *h, *w, *c));
+                    *li += 1;
+                }
+            }
+        }
+    };
+    let segments = 2 + rng.below(3);
+    for _ in 0..segments {
+        match rng.below(4) {
+            // fire module: squeeze → two expand branches → (pending concat)
+            0 => {
+                let s = 1 + rng.below(3) as usize;
+                let c1 = 1 + rng.below(3) as usize;
+                let c2 = 1 + rng.below(3) as usize;
+                layers.push(LayerDesc::pointwise(&name(&mut li, "sq"), h, w, c, s));
+                layers.push(LayerDesc::pointwise(&name(&mut li, "e1_"), h, w, s, c1));
+                layers.push(LayerDesc::conv(&name(&mut li, "e3_"), 3, 1, 1, h, w, s, c2));
+                c = c1 + c2;
+                // materialize the concat in a plain consumer
+                plain(rng, &mut layers, &mut li, &mut h, &mut w, &mut c);
+            }
+            // residual pair: A (3×3, channel change) beside B (1×1
+            // projection re-reading A's input) → (pending merge)
+            1 => {
+                let co = c + 1 + rng.below(3) as usize; // co != c: B re-reads
+                layers.push(LayerDesc::conv(&name(&mut li, "ra"), 3, 1, 1, h, w, c, co));
+                layers.push(LayerDesc::pointwise(&name(&mut li, "rb"), h, w, c, co));
+                c = co;
+                // materialize the merge in a plain consumer
+                plain(rng, &mut layers, &mut li, &mut h, &mut w, &mut c);
+            }
+            _ => plain(rng, &mut layers, &mut li, &mut h, &mut w, &mut c),
+        }
+        // orphan: consumed by nothing (channel count ≥33 can never
+        // match a later layer, every generator channel stays far below)
+        if rng.bool(0.25) {
+            let dead = 33 + rng.below(8) as usize;
+            layers.push(LayerDesc::pointwise(&name(&mut li, "dead"), h, w, c, dead));
+        }
+    }
+    if rng.bool(0.6) {
+        let fco = 1 + rng.below(8) as usize;
+        layers.push(LayerDesc::fc("fc", h * w * c, fco));
+        // pointwise head on the 1×1 map: the 1×1-conv→fc rewrite target
+        if rng.bool(0.3) {
+            layers.push(LayerDesc::pointwise("pwhead", 1, 1, fco, 1 + rng.below(6) as usize));
+        }
+    }
+    Network { name: format!("randgraph-{tag}"), layers }
+}
+
+/// Replay a compiled program's slot traffic, asserting every read sees
+/// the producer it was compiled against and no step aliases its own
+/// reads. Works for both compile paths: flat-plan programs and IR
+/// programs (n-ary concats, [`Kernel::Stage`] steps whose stage slot
+/// *is* the output slot by design).
+pub fn check_slot_provenance(prog: &ModelProgram) -> Result<(), String> {
+    let mut owner: Vec<Option<usize>> = vec![None; prog.slot_sizes.len()];
+    let read_ok = |owner: &[Option<usize>], op: &Operand, step: usize| -> Result<(), String> {
+        if let Some(s) = op.slot {
+            if owner[s] != Some(op.src_layer) {
+                return Err(format!(
+                    "step {step} reads slot {s} expecting layer {}, but it holds {:?} \
+                     (recycled before last use)",
+                    op.src_layer, owner[s]
+                ));
+            }
+        }
+        Ok(())
+    };
+    for (i, step) in prog.steps.iter().enumerate() {
+        let mut reads: Vec<usize> = Vec::new();
+        let mut see = |op: &Operand| {
+            if let Some(s) = op.slot {
+                reads.push(s);
+            }
+        };
+        match &step.input {
+            Input::Direct(op) => {
+                read_ok(&owner, op, i)?;
+                see(op);
+            }
+            Input::Staged(sp) => {
+                match &sp.merge {
+                    Merge::Copy(a) => {
+                        read_ok(&owner, a, i)?;
+                        see(a);
+                    }
+                    Merge::Concat(parts) => {
+                        for p in parts {
+                            read_ok(&owner, p, i)?;
+                            see(p);
+                        }
+                    }
+                    Merge::Residual(a, b) => {
+                        read_ok(&owner, a, i)?;
+                        read_ok(&owner, b, i)?;
+                        see(a);
+                        see(b);
+                    }
+                }
+                if reads.contains(&sp.slot) {
+                    return Err(format!("step {i}: stage slot {} aliases a read", sp.slot));
+                }
+                // Stage steps materialize the merge: the stage slot IS
+                // the output slot; everywhere else staging is transient
+                if sp.slot == step.out_slot && step.kernel != Kernel::Stage {
+                    return Err(format!("step {i}: stage slot == out slot {}", sp.slot));
+                }
+                owner[sp.slot] = None;
+            }
+        }
+        if reads.contains(&step.out_slot) {
+            return Err(format!("step {i}: out slot {} aliases a read", step.out_slot));
+        }
+        owner[step.out_slot] = Some(step.layer);
+    }
+    Ok(())
+}
+
+/// Deterministic diamond graph: one producer fanned out to two compute
+/// branches rejoined by a residual — a structure the flat layer-list
+/// language cannot express (its plan inference reads the same four
+/// descriptors as a straight chain).
+pub fn diamond_graph() -> Graph {
+    let mut b = GraphBuilder::new("diamond", 8, 8, 3);
+    let a = b.conv(b.input(), 3, 1, 1, 4).unwrap();
+    let p = b.conv(a, 3, 1, 1, 4).unwrap();
+    let q = b.pointwise(a, 4).unwrap();
+    let r = b.residual(p, q).unwrap();
+    let out = b.conv(r, 3, 1, 1, 5).unwrap();
+    b.finish(out).unwrap()
+}
+
+/// Deterministic graph whose concat value is read by **two** kernel
+/// consumers — unfoldable into either, so the program compiler must
+/// materialize it with a [`Kernel::Stage`] step.
+pub fn stage_graph() -> Graph {
+    let mut b = GraphBuilder::new("staged", 6, 6, 2);
+    let a = b.conv(b.input(), 3, 1, 1, 3).unwrap();
+    let p = b.pointwise(a, 2).unwrap();
+    let q = b.depthwise(a, 1).unwrap();
+    let j = b.concat(&[p, q]).unwrap(); // 2 + 3 = 5 channels
+    let u = b.pointwise(j, 4).unwrap();
+    let v = b.conv(j, 3, 1, 1, 4).unwrap();
+    let r = b.residual(u, v).unwrap();
+    let out = b.pointwise(r, 3).unwrap();
+    b.finish(out).unwrap()
+}
+
+/// Generate a random typed-IR graph via the builder: spatial-preserving
+/// kernels plus the shapes only the IR expresses — diamond fan-out
+/// (residual rejoin of a shared producer), concat joins (sometimes
+/// nested, exercising chain elision), and orphan branches (dead-node
+/// elimination fodder) — optionally capped by an fc head.
+pub fn random_graph(rng: &mut SplitMix64, tag: u64) -> Graph {
+    let h = 6 + rng.below(5) as usize;
+    let w = 6 + rng.below(5) as usize;
+    let c = 1 + rng.below(3) as usize;
+    let mut b = GraphBuilder::new(&format!("randir-{tag}"), h, w, c);
+    let mut cur = b.input();
+    fn step(b: &mut GraphBuilder, rng: &mut SplitMix64, src: NodeId) -> NodeId {
+        match rng.below(3) {
+            0 => b.conv(src, 3, 1, 1, 1 + rng.below(4) as usize).unwrap(),
+            1 => b.pointwise(src, 1 + rng.below(4) as usize).unwrap(),
+            _ => b.depthwise(src, 1).unwrap(),
+        }
+    }
+    for _ in 0..(2 + rng.below(3)) {
+        match rng.below(4) {
+            // diamond: fan out, rejoin by residual (same cout each side)
+            0 => {
+                let co = 1 + rng.below(4) as usize;
+                let p = b.conv(cur, 3, 1, 1, co).unwrap();
+                let q = b.pointwise(cur, co).unwrap();
+                cur = b.residual(p, q).unwrap();
+            }
+            // concat join, sometimes nested (back-to-back concats)
+            1 => {
+                let p = step(&mut b, rng, cur);
+                let q = step(&mut b, rng, cur);
+                let j = if rng.bool(0.5) {
+                    let r = step(&mut b, rng, cur);
+                    let inner = b.concat(&[p, q]).unwrap();
+                    b.concat(&[inner, r]).unwrap()
+                } else {
+                    b.concat(&[p, q]).unwrap()
+                };
+                cur = b.pointwise(j, 1 + rng.below(4) as usize).unwrap();
+            }
+            // orphan branch: built, never reaches the output
+            2 => {
+                let _dead = b.pointwise(cur, 5 + rng.below(4) as usize).unwrap();
+                cur = step(&mut b, rng, cur);
+            }
+            _ => cur = step(&mut b, rng, cur),
+        }
+    }
+    if rng.bool(0.4) {
+        cur = b.fc(cur, 1 + rng.below(6) as usize).unwrap();
+    }
+    b.finish(cur).unwrap()
+}

@@ -1,5 +1,8 @@
-//! Shared helpers for integration tests: locating `artifacts/` and parsing
-//! the python-generated test-vector files (`tv_*.txt`).
+//! Shared helpers for integration tests: locating `artifacts/`, parsing
+//! the python-generated test-vector files (`tv_*.txt`), and the graph
+//! generators shared by the program/IR property suites ([`graphgen`]).
+
+pub mod graphgen;
 
 use std::path::PathBuf;
 

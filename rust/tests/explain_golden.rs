@@ -1,0 +1,67 @@
+//! Golden-file pins for `EXPLAIN` output on the six zoo test profiles.
+//!
+//! `EXPLAIN` rows derive from compiled IR steps (post pass-pipeline), so
+//! this is the regression net over the whole plan surface: lowering,
+//! rewrites, slot assignment, kernel selection, split/chunk planning and
+//! the utilization columns. Any intentional change to one of those
+//! reads as a golden diff — regenerate with `NEUROMAX_UPDATE_GOLDEN=1`
+//! and review the diff like code (see `tests/golden/README.md`).
+//!
+//! Plans are compiled for a fixed 4-thread pooled engine; everything in
+//! a row is a deterministic function of the program, so the files are
+//! stable across machines.
+
+use std::path::PathBuf;
+
+use neuromax::dataflow::program::{cached_program, explain_rows};
+use neuromax::models::workload;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden")
+}
+
+#[test]
+fn explain_output_matches_the_goldens() {
+    let dir = golden_dir();
+    std::fs::create_dir_all(&dir).expect("create golden dir");
+    let update = std::env::var_os("NEUROMAX_UPDATE_GOLDEN").is_some();
+    let mut bootstrapped = Vec::new();
+    for name in workload::ZOO_NAMES {
+        let net = workload::test_profile(name).unwrap();
+        let prog = cached_program(&net).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let plan = prog.plans_for(4, true, false);
+        let text = explain_rows(&net, &prog, &plan).join("\n") + "\n";
+        let path = dir.join(format!("{name}.txt"));
+        if update || !path.exists() {
+            std::fs::write(&path, &text).unwrap_or_else(|e| panic!("{name}: write: {e}"));
+            bootstrapped.push(name);
+            continue;
+        }
+        let want = std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("{name}: {e}"));
+        if text != want {
+            let diff: Vec<String> = text
+                .lines()
+                .zip(want.lines())
+                .enumerate()
+                .filter(|(_, (a, b))| a != b)
+                .map(|(i, (a, b))| format!("  line {}:\n    got:  {a}\n    want: {b}", i + 1))
+                .take(5)
+                .collect();
+            panic!(
+                "{name}: EXPLAIN drifted from tests/golden/{name}.txt \
+                 ({} vs {} lines){}{}\nIf intentional, regenerate with \
+                 NEUROMAX_UPDATE_GOLDEN=1 and review the diff.",
+                text.lines().count(),
+                want.lines().count(),
+                if diff.is_empty() { "" } else { ":\n" },
+                diff.join("\n"),
+            );
+        }
+    }
+    if !bootstrapped.is_empty() {
+        eprintln!(
+            "NOTE: bootstrapped golden files for {bootstrapped:?} — \
+             commit tests/golden/*.txt to pin them"
+        );
+    }
+}

@@ -1,0 +1,449 @@
+//! Typed-IR semantics pins: lowering, the rewrite-pass pipeline, and the
+//! graph program compiler.
+//!
+//! Every pass is a pure `Graph -> Graph` rewrite with a machine-checkable
+//! contract: the rewritten graph re-validates, evaluates bit-identically
+//! under the reference interpreter (`ir::reference_forward`), and the
+//! pass is idempotent. The full pipeline's output must then compile into
+//! a `ModelProgram` that executes bit-identically on one thread and on a
+//! forced-parallel worker pool — over random zoo-like flat nets *and*
+//! random builder graphs with shapes the flat layer-list language cannot
+//! express (diamond fan-out, nested concats, shared merge values).
+//!
+//! Graph generators and the slot-provenance replay are shared with
+//! `program_slots.rs` via `common::graphgen`.
+
+mod common;
+
+use std::sync::Arc;
+
+use common::graphgen::{
+    check_slot_provenance, diamond_graph, random_graph, random_net, stage_graph,
+};
+use neuromax::coordinator::InferenceEngine;
+use neuromax::dataflow::forward::{forward_ref, ForwardPlan, Routing};
+use neuromax::dataflow::program::{Input, Kernel, Merge, ModelProgram, ProgramExecutor};
+use neuromax::dataflow::workers::WorkerPool;
+use neuromax::dataflow::{
+    default_pipeline, reference_forward, run_pipeline, Engine, EngineOptions, Graph, GraphError,
+    NodeOp,
+};
+use neuromax::models::layer::{LayerDesc, Network, Op};
+use neuromax::models::runner::{random_input_dims, random_input_for, NetWeights};
+use neuromax::models::workload;
+use neuromax::util::proptest::check;
+
+/// Random input sized for a graph's input node.
+fn input_for_graph(g: &Graph, seed: u64) -> neuromax::tensor::Tensor3 {
+    let s = g.nodes[0].shape;
+    random_input_dims(s.h, s.w, s.c, seed)
+}
+
+// ---------------------------------------------------------------------
+// Lowering
+// ---------------------------------------------------------------------
+
+#[test]
+fn lowered_zoo_graphs_validate_and_match_the_legacy_reference() {
+    for name in workload::ZOO_NAMES {
+        let net = workload::test_profile(name).unwrap();
+        let g = Graph::lower(&net).unwrap_or_else(|e| panic!("{}: {e}", net.name));
+        g.validate().unwrap_or_else(|e| panic!("{}: {e}", net.name));
+        let w = NetWeights::random(&net, 0xA11CE ^ g.layers.len() as u64);
+        let x = random_input_for(&net, 0xB0B);
+        let got = reference_forward(&g, &w, &x);
+        let want = forward_ref(&net, &w, &x);
+        assert_eq!(got.data, want.data, "{}: IR interpreter != legacy reference", net.name);
+    }
+}
+
+#[test]
+fn malformed_layer_lists_fail_fast_with_typed_errors() {
+    // Each of these used to panic deep in execution (out_dims asserts,
+    // exec channel mismatches) or route nonsense; lowering now rejects
+    // them up front with a typed error, and `ForwardPlan::infer`
+    // surfaces it as a plan failure instead of a panic.
+    let empty = Network { name: "empty".into(), layers: vec![] };
+    assert!(matches!(Graph::lower(&empty), Err(GraphError::Empty)));
+    assert!(ForwardPlan::infer(&empty).is_err());
+
+    let zero_dim = Network {
+        name: "zero-dim".into(),
+        layers: vec![LayerDesc::conv("z", 3, 1, 1, 0, 8, 3, 4)],
+    };
+    assert!(matches!(
+        Graph::lower(&zero_dim),
+        Err(GraphError::ZeroDim { layer: 0, .. })
+    ));
+
+    let zero_stride = Network {
+        name: "zero-stride".into(),
+        layers: vec![LayerDesc {
+            name: "s0".into(),
+            op: Op::Conv { kh: 3, kw: 3, stride: 0, pad: 1 },
+            hin: 8,
+            win: 8,
+            cin: 3,
+            cout: 4,
+        }],
+    };
+    assert!(matches!(
+        Graph::lower(&zero_stride),
+        Err(GraphError::ZeroStride { layer: 0, .. })
+    ));
+
+    let big_kernel = Network {
+        name: "big-kernel".into(),
+        layers: vec![LayerDesc::conv("k", 5, 1, 0, 2, 2, 3, 4)],
+    };
+    assert!(matches!(
+        Graph::lower(&big_kernel),
+        Err(GraphError::KernelTooLarge { layer: 0, .. })
+    ));
+
+    let chan_mismatch = Network {
+        name: "dw-mismatch".into(),
+        layers: vec![LayerDesc {
+            name: "dw".into(),
+            op: Op::Depthwise { k: 3, stride: 1, pad: 1 },
+            hin: 8,
+            win: 8,
+            cin: 4,
+            cout: 5,
+        }],
+    };
+    assert!(matches!(
+        Graph::lower(&chan_mismatch),
+        Err(GraphError::ChannelMismatch { layer: 0, .. })
+    ));
+
+    let no_producer = Network {
+        name: "no-producer".into(),
+        layers: vec![
+            LayerDesc::conv("c0", 3, 1, 1, 8, 8, 3, 4),
+            LayerDesc::conv("c1", 3, 1, 1, 8, 8, 9, 4),
+        ],
+    };
+    assert!(matches!(
+        Graph::lower(&no_producer),
+        Err(GraphError::NoProducer { layer: 1, .. })
+    ));
+    assert!(ForwardPlan::infer(&no_producer).is_err());
+
+    let no_flat = Network {
+        name: "no-flat".into(),
+        layers: vec![
+            LayerDesc::conv("c0", 3, 1, 1, 8, 8, 3, 4),
+            LayerDesc::fc("fc", 999, 5),
+        ],
+    };
+    assert!(matches!(
+        Graph::lower(&no_flat),
+        Err(GraphError::NoFlatProducer { layer: 1, need: 999, .. })
+    ));
+}
+
+// ---------------------------------------------------------------------
+// Per-pass contracts
+// ---------------------------------------------------------------------
+
+/// Run the pipeline pass by pass, pinning each one's contract: the
+/// rewritten graph re-validates, evaluates bit-identically, and the pass
+/// is idempotent. Cumulative (each pass sees its predecessors' output),
+/// matching how `run_pipeline` actually composes them.
+fn check_pass_contracts(g: &Graph, w: &NetWeights, x: &neuromax::tensor::Tensor3) -> Result<(), String> {
+    let want = reference_forward(g, w, x);
+    let mut cur = g.clone();
+    for p in default_pipeline() {
+        let next = (p.run)(&cur);
+        next.validate()
+            .map_err(|e| format!("{}: pass {} broke validation: {e}", g.name, p.name))?;
+        let got = reference_forward(&next, w, x);
+        neuromax::prop_assert!(
+            got.data == want.data,
+            "{}: pass {} changed semantics",
+            g.name,
+            p.name
+        );
+        let again = (p.run)(&next);
+        neuromax::prop_assert!(again == next, "{}: pass {} is not idempotent", g.name, p.name);
+        cur = next;
+    }
+    neuromax::prop_assert!(
+        cur.nodes.iter().all(|nd| nd.op != NodeOp::Requant),
+        "{}: pipeline left explicit requant nodes",
+        g.name
+    );
+    Ok(())
+}
+
+#[test]
+fn passes_preserve_reference_semantics_on_lowered_flat_nets() {
+    check("pass-semantics-flat", 20, |rng| {
+        let tag = rng.next_u64() & 0xFFFF;
+        let net = random_net(rng, tag);
+        let g = Graph::lower(&net).map_err(|e| format!("{}: {e}", net.name))?;
+        let w = NetWeights::random(&net, rng.next_u64());
+        let x = random_input_for(&net, rng.next_u64());
+        check_pass_contracts(&g, &w, &x)
+    });
+}
+
+#[test]
+fn passes_preserve_reference_semantics_on_builder_graphs() {
+    check("pass-semantics-graph", 20, |rng| {
+        let tag = rng.next_u64() & 0xFFFF;
+        let g = random_graph(rng, tag);
+        let w = NetWeights::random(&g.weight_network(), rng.next_u64());
+        let x = input_for_graph(&g, rng.next_u64());
+        check_pass_contracts(&g, &w, &x)
+    });
+}
+
+// ---------------------------------------------------------------------
+// Individual rewrites, pinned on deterministic fixtures
+// ---------------------------------------------------------------------
+
+#[test]
+fn dead_node_elimination_shrinks_the_compiled_program() {
+    // an orphan layer (routable, consumed by nothing) still executes on
+    // the legacy flat path but is swept by the IR pipeline — the whole
+    // point of compiling through the graph
+    let net = Network {
+        name: "orphaned".into(),
+        layers: vec![
+            LayerDesc::conv("c0", 3, 1, 1, 8, 8, 3, 4),
+            LayerDesc::pointwise("dead", 8, 8, 4, 40),
+            LayerDesc::conv("c2", 3, 1, 1, 8, 8, 4, 5),
+        ],
+    };
+    let plan = ForwardPlan::infer(&net).unwrap();
+    let flat = ModelProgram::from_plan(&net, &plan);
+    assert_eq!(flat.steps.len(), 3, "flat path executes the orphan");
+    let prog = ModelProgram::compile(&net).unwrap();
+    assert_eq!(prog.steps.len(), 2, "IR pipeline sweeps the orphan");
+
+    // and the two programs still agree on the served output
+    let w = NetWeights::random(&net, 0xD15EA5E);
+    let fused = w.fuse();
+    let x = random_input_for(&net, 0xF00D);
+    let eng = Engine::single_threaded();
+    let a = ProgramExecutor::new(Arc::new(flat)).run(&eng, &fused, &x);
+    let b = ProgramExecutor::new(Arc::new(prog)).run(&eng, &fused, &x);
+    assert_eq!(a.data, b.data, "orphan elimination changed the output");
+}
+
+#[test]
+fn one_by_one_convs_over_flat_maps_compile_as_fc() {
+    let net = Network {
+        name: "fc-tail".into(),
+        layers: vec![
+            LayerDesc::conv("c0", 3, 1, 1, 6, 6, 3, 4),
+            LayerDesc::fc("fc0", 6 * 6 * 4, 5),
+            LayerDesc::pointwise("head", 1, 1, 5, 3),
+        ],
+    };
+    let g = Graph::lower(&net).unwrap();
+    let piped = run_pipeline(&g, &default_pipeline()).unwrap();
+    let fc_nodes = piped.nodes.iter().filter(|nd| nd.op == NodeOp::Fc).count();
+    assert_eq!(fc_nodes, 2, "pointwise head over a 1x1 map should retag as fc");
+    assert_eq!(piped.layers[2].op, Op::Fc, "descriptor retagged for the planner");
+
+    let prog = ModelProgram::from_graph(&piped).unwrap();
+    assert_eq!(
+        prog.steps.iter().filter(|s| s.kernel == Kernel::Fc).count(),
+        2,
+        "both tail steps cost as Fc"
+    );
+    // bit-exact vs the legacy path on the original descriptors (weight
+    // shapes are identical: pointwise and fc both draw (cout,1,1,cin))
+    let w = NetWeights::random(&net, 0xFC);
+    let x = random_input_for(&net, 0x5EED);
+    let want = forward_ref(&net, &w, &x);
+    let got = ProgramExecutor::new(Arc::new(prog)).run(
+        &Engine::single_threaded(),
+        &w.fuse(),
+        &x,
+    );
+    assert_eq!(got.data, want.data, "fc retag changed numerics");
+}
+
+#[test]
+fn nested_concats_fold_to_one_nary_staged_merge() {
+    let mut b = neuromax::dataflow::GraphBuilder::new("nested", 6, 6, 2);
+    let a = b.conv(b.input(), 3, 1, 1, 2).unwrap();
+    let p = b.pointwise(a, 1).unwrap();
+    let q = b.pointwise(a, 2).unwrap();
+    let r = b.depthwise(a, 1).unwrap();
+    let inner = b.concat(&[p, q]).unwrap();
+    let outer = b.concat(&[inner, r]).unwrap();
+    let out = b.pointwise(outer, 4).unwrap();
+    let g = b.finish(out).unwrap();
+
+    let piped = run_pipeline(&g, &default_pipeline()).unwrap();
+    let concats: Vec<_> =
+        piped.nodes.iter().filter(|nd| nd.op == NodeOp::Concat).collect();
+    assert_eq!(concats.len(), 1, "back-to-back concats should elide to one");
+    assert_eq!(concats[0].inputs.len(), 3, "the survivor is n-ary");
+
+    let prog = ModelProgram::from_graph(&piped).unwrap();
+    check_slot_provenance(&prog).unwrap();
+    let nary = prog.steps.iter().any(|s| {
+        matches!(&s.input, Input::Staged(sp)
+            if matches!(&sp.merge, Merge::Concat(parts) if parts.len() == 3))
+    });
+    assert!(nary, "program should stage the concat as one 3-way merge");
+
+    let w = NetWeights::random(&piped.weight_network(), 0xCAFE);
+    let x = input_for_graph(&piped, 0xBEEF);
+    let want = reference_forward(&piped, &w, &x);
+    let got = ProgramExecutor::new(Arc::new(prog)).run(
+        &Engine::single_threaded(),
+        &w.fuse(),
+        &x,
+    );
+    assert_eq!(got.data, want.data, "n-ary staging changed numerics");
+}
+
+#[test]
+fn shared_merge_values_materialize_as_stage_steps() {
+    // a concat read by TWO kernel consumers cannot fold into either —
+    // the program compiler must emit an explicit Stage step, and both
+    // consumers must read the staged value after the stage's own slot
+    // traffic (covered by the provenance replay)
+    let g = stage_graph();
+    let piped = run_pipeline(&g, &default_pipeline()).unwrap();
+    let prog = ModelProgram::from_graph(&piped).unwrap();
+    check_slot_provenance(&prog).unwrap();
+    assert!(
+        prog.steps.iter().any(|s| s.kernel == Kernel::Stage),
+        "shared concat should materialize as a Stage step"
+    );
+
+    let pool = WorkerPool::new(3);
+    let w = NetWeights::random(&piped.weight_network(), 0x57A6E);
+    let fused = w.fuse();
+    let x = input_for_graph(&piped, 0x1DEA);
+    let want = reference_forward(&piped, &w, &x);
+    let prog = Arc::new(prog);
+    let serial = ProgramExecutor::new(prog.clone()).run(&Engine::single_threaded(), &fused, &x);
+    assert_eq!(serial.data, want.data, "staged execution (serial) != reference");
+    let pooled =
+        ProgramExecutor::new(prog).run(&Engine::pooled_forced(pool), &fused, &x);
+    assert_eq!(pooled.data, want.data, "staged execution (pooled) != reference");
+}
+
+// ---------------------------------------------------------------------
+// Full pipeline → program equivalence
+// ---------------------------------------------------------------------
+
+#[test]
+fn pipeline_programs_stay_bit_exact_on_random_flat_nets() {
+    let pool = WorkerPool::new(3);
+    check("ir-pipeline-flat", 20, |rng| {
+        let tag = rng.next_u64() & 0xFFFF;
+        let net = random_net(rng, tag);
+        let g = Graph::lower(&net).map_err(|e| format!("{}: {e}", net.name))?;
+        let piped = run_pipeline(&g, &default_pipeline())
+            .map_err(|e| format!("{}: pipeline: {e}", net.name))?;
+        let prog = ModelProgram::from_graph(&piped)
+            .map_err(|e| format!("{}: from_graph: {e}", net.name))?;
+        check_slot_provenance(&prog)?;
+
+        let w = NetWeights::random(&net, rng.next_u64());
+        let fused = w.fuse();
+        let x = random_input_for(&net, rng.next_u64());
+        let want = forward_ref(&net, &w, &x);
+        let ir_ref = reference_forward(&piped, &w, &x);
+        neuromax::prop_assert!(
+            ir_ref.data == want.data,
+            "{}: IR reference != legacy reference",
+            net.name
+        );
+        let prog = Arc::new(prog);
+        let serial =
+            ProgramExecutor::new(prog.clone()).run(&Engine::single_threaded(), &fused, &x);
+        neuromax::prop_assert!(
+            serial.data == want.data,
+            "{}: graph program (serial) != reference",
+            net.name
+        );
+        let pooled =
+            ProgramExecutor::new(prog).run(&Engine::pooled_forced(pool.clone()), &fused, &x);
+        neuromax::prop_assert!(
+            pooled.data == want.data,
+            "{}: graph program (pooled) != reference",
+            net.name
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn pipeline_programs_stay_bit_exact_on_random_builder_graphs() {
+    let pool = WorkerPool::new(4);
+    check("ir-pipeline-graph", 20, |rng| {
+        let tag = rng.next_u64() & 0xFFFF;
+        let g = random_graph(rng, tag);
+        let piped = run_pipeline(&g, &default_pipeline())
+            .map_err(|e| format!("{}: pipeline: {e}", g.name))?;
+        let prog = ModelProgram::from_graph(&piped)
+            .map_err(|e| format!("{}: from_graph: {e}", g.name))?;
+        check_slot_provenance(&prog)?;
+
+        let w = NetWeights::random(&piped.weight_network(), rng.next_u64());
+        let fused = w.fuse();
+        let x = input_for_graph(&piped, rng.next_u64());
+        let want = reference_forward(&piped, &w, &x);
+        let prog = Arc::new(prog);
+        let serial =
+            ProgramExecutor::new(prog.clone()).run(&Engine::single_threaded(), &fused, &x);
+        neuromax::prop_assert!(
+            serial.data == want.data,
+            "{}: graph program (serial) != reference",
+            g.name
+        );
+        let pooled =
+            ProgramExecutor::new(prog).run(&Engine::pooled_forced(pool.clone()), &fused, &x);
+        neuromax::prop_assert!(
+            pooled.data == want.data,
+            "{}: graph program (pooled) != reference",
+            g.name
+        );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// End-to-end: graphs the flat path cannot serve
+// ---------------------------------------------------------------------
+
+#[test]
+fn diamond_graphs_serve_end_to_end_through_the_engine() {
+    let g = diamond_graph();
+    // the flat layer list reads this as a straight chain — no residual
+    // route anywhere — so only the graph path can serve the diamond
+    let flat_plan = ForwardPlan::infer(&g.weight_network()).unwrap();
+    assert!(
+        !flat_plan.routes.iter().any(|r| matches!(r, Routing::Residual(..))),
+        "flat inference cannot see the diamond's residual rejoin"
+    );
+
+    let seed = 0xD1A;
+    let eopt = EngineOptions { num_threads: 2, par_min_work: 1 };
+    let mut eng = InferenceEngine::for_graph(&g, seed, eopt, None).expect("engine for graph");
+    let piped = run_pipeline(&g, &default_pipeline()).unwrap();
+    let w = NetWeights::random(&piped.weight_network(), seed);
+
+    let x = eng.input(7);
+    let want = reference_forward(&piped, &w, &x);
+    let inf = eng.infer(&x).expect("diamond inference");
+    assert_eq!(inf.logits, want.data, "served logits != IR reference");
+
+    let xs: Vec<_> = (0..3).map(|i| eng.input(100 + i)).collect();
+    let infs = eng.infer_batch(&xs).expect("diamond batch");
+    for (i, (inf, x)) in infs.iter().zip(&xs).enumerate() {
+        let want = reference_forward(&piped, &w, x);
+        assert_eq!(inf.logits, want.data, "batch element {i} diverged");
+    }
+}

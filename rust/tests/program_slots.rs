@@ -16,177 +16,29 @@
 //!    engine driver on the same graph — a recycled-too-early slot
 //!    cannot hide from an exact output comparison.
 //!
-//! Graphs are generated to exercise every routing form the zoo uses:
-//! plain chains (conv/depthwise/pool), SqueezeNet-style fire modules
-//! (fan-out + channel concat), ResNet-style projection pairs (residual
-//! merge feeding padded convs), and flatten-Fc heads.
+//! The graph generator and the provenance replay live in
+//! `common::graphgen`, shared with the typed-IR pass suite
+//! (`ir_passes.rs`). Generated graphs exercise every routing form the
+//! zoo uses — plain chains (conv/depthwise/pool), SqueezeNet-style fire
+//! modules (fan-out + channel concat), ResNet-style projection pairs
+//! (residual merge feeding padded convs), flatten-Fc heads — plus
+//! orphan layers and post-fc pointwise tails that only the IR pass
+//! pipeline cleans up.
+
+mod common;
 
 use std::sync::Arc;
 
+use common::graphgen::{check_slot_provenance, random_net};
 use neuromax::dataflow::forward::{forward_engine_planned, forward_ref_planned, ForwardPlan};
-use neuromax::dataflow::program::{
-    run_batch_lockstep, Input, Merge, ModelProgram, Operand, ProgramExecutor,
-};
+use neuromax::dataflow::program::{run_batch_lockstep, ModelProgram, ProgramExecutor};
 use neuromax::dataflow::workers::WorkerPool;
 use neuromax::dataflow::{Engine, Split};
-use neuromax::tensor::Tensor3;
 use neuromax::models::layer::{LayerDesc, Network};
 use neuromax::models::runner::{random_input_for, NetWeights};
 use neuromax::models::workload;
-use neuromax::util::prng::SplitMix64;
+use neuromax::tensor::Tensor3;
 use neuromax::util::proptest::check;
-
-/// Generate a random routable zoo-like network. Shape-preserving ops
-/// keep the bookkeeping exact; fire and residual segments leave their
-/// merge pending for the *next* layer (exactly how the plan inference
-/// discovers them), so the generator always materializes a join before
-/// ending or branching again.
-fn random_net(rng: &mut SplitMix64, tag: u64) -> Network {
-    let mut h = 6 + rng.below(7) as usize;
-    let mut w = 6 + rng.below(5) as usize;
-    let mut c = 1 + rng.below(3) as usize;
-    let mut layers: Vec<LayerDesc> = Vec::new();
-    let mut li = 0usize;
-    let name = |li: &mut usize, s: &str| {
-        *li += 1;
-        format!("{s}{li}")
-    };
-    // a plain shape-compatible consumer: conv3/conv1/depthwise/pool
-    let plain = |rng: &mut SplitMix64,
-                 layers: &mut Vec<LayerDesc>,
-                 li: &mut usize,
-                 h: &mut usize,
-                 w: &mut usize,
-                 c: &mut usize| {
-        match rng.below(4) {
-            0 => {
-                let co = 1 + rng.below(5) as usize;
-                layers.push(LayerDesc::conv(
-                    &format!("c3_{li}"), 3, 1, 1, *h, *w, *c, co,
-                ));
-                *li += 1;
-                *c = co;
-            }
-            1 => {
-                let co = 1 + rng.below(5) as usize;
-                layers.push(LayerDesc::pointwise(&format!("pw{li}"), *h, *w, *c, co));
-                *li += 1;
-                *c = co;
-            }
-            2 => {
-                layers.push(LayerDesc::depthwise(&format!("dw{li}"), 1, *h, *w, *c));
-                *li += 1;
-            }
-            _ => {
-                if *h >= 4 && *w >= 4 {
-                    if rng.bool(0.5) {
-                        layers.push(LayerDesc::pool(&format!("mp{li}"), 2, 2, *h, *w, *c));
-                    } else {
-                        layers.push(LayerDesc::avgpool(&format!("ap{li}"), 2, 2, *h, *w, *c));
-                    }
-                    *li += 1;
-                    *h = (*h - 2) / 2 + 1;
-                    *w = (*w - 2) / 2 + 1;
-                } else {
-                    layers.push(LayerDesc::depthwise(&format!("dw{li}"), 1, *h, *w, *c));
-                    *li += 1;
-                }
-            }
-        }
-    };
-    let segments = 2 + rng.below(3);
-    for _ in 0..segments {
-        match rng.below(4) {
-            // fire module: squeeze → two expand branches → (pending concat)
-            0 => {
-                let s = 1 + rng.below(3) as usize;
-                let c1 = 1 + rng.below(3) as usize;
-                let c2 = 1 + rng.below(3) as usize;
-                layers.push(LayerDesc::pointwise(&name(&mut li, "sq"), h, w, c, s));
-                layers.push(LayerDesc::pointwise(&name(&mut li, "e1_"), h, w, s, c1));
-                layers.push(LayerDesc::conv(&name(&mut li, "e3_"), 3, 1, 1, h, w, s, c2));
-                c = c1 + c2;
-                // materialize the concat in a plain consumer
-                plain(rng, &mut layers, &mut li, &mut h, &mut w, &mut c);
-            }
-            // residual pair: A (3×3, channel change) beside B (1×1
-            // projection re-reading A's input) → (pending merge)
-            1 => {
-                let co = c + 1 + rng.below(3) as usize; // co != c: B re-reads
-                layers.push(LayerDesc::conv(&name(&mut li, "ra"), 3, 1, 1, h, w, c, co));
-                layers.push(LayerDesc::pointwise(&name(&mut li, "rb"), h, w, c, co));
-                c = co;
-                // materialize the merge in a plain consumer
-                plain(rng, &mut layers, &mut li, &mut h, &mut w, &mut c);
-            }
-            _ => plain(rng, &mut layers, &mut li, &mut h, &mut w, &mut c),
-        }
-    }
-    if rng.bool(0.6) {
-        layers.push(LayerDesc::fc("fc", h * w * c, 1 + rng.below(8) as usize));
-    }
-    Network { name: format!("randgraph-{tag}"), layers }
-}
-
-/// Replay a compiled program's slot traffic, asserting every read sees
-/// the producer it was compiled against and no step aliases its own
-/// reads.
-fn check_slot_provenance(prog: &ModelProgram) -> Result<(), String> {
-    let mut owner: Vec<Option<usize>> = vec![None; prog.slot_sizes.len()];
-    let read_ok = |owner: &[Option<usize>], op: &Operand, step: usize| -> Result<(), String> {
-        if let Some(s) = op.slot {
-            if owner[s] != Some(op.src_layer) {
-                return Err(format!(
-                    "step {step} reads slot {s} expecting layer {}, but it holds {:?} \
-                     (recycled before last use)",
-                    op.src_layer, owner[s]
-                ));
-            }
-        }
-        Ok(())
-    };
-    for (i, step) in prog.steps.iter().enumerate() {
-        let mut reads: Vec<usize> = Vec::new();
-        let mut see = |op: &Operand| {
-            if let Some(s) = op.slot {
-                reads.push(s);
-            }
-        };
-        match &step.input {
-            Input::Direct(op) => {
-                read_ok(&owner, op, i)?;
-                see(op);
-            }
-            Input::Staged(sp) => {
-                match &sp.merge {
-                    Merge::Copy(a) => {
-                        read_ok(&owner, a, i)?;
-                        see(a);
-                    }
-                    Merge::Concat(a, b) | Merge::Residual(a, b) => {
-                        read_ok(&owner, a, i)?;
-                        read_ok(&owner, b, i)?;
-                        see(a);
-                        see(b);
-                    }
-                }
-                if reads.contains(&sp.slot) {
-                    return Err(format!("step {i}: stage slot {} aliases a read", sp.slot));
-                }
-                if sp.slot == step.out_slot {
-                    return Err(format!("step {i}: stage slot == out slot {}", sp.slot));
-                }
-                // the staged buffer is transient: dead after this step
-                owner[sp.slot] = None;
-            }
-        }
-        if reads.contains(&step.out_slot) {
-            return Err(format!("step {i}: out slot {} aliases a read", step.out_slot));
-        }
-        owner[step.out_slot] = Some(step.layer);
-    }
-    Ok(())
-}
 
 #[test]
 fn random_graphs_recycle_slots_safely_and_stay_bit_exact() {
