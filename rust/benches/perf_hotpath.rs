@@ -20,8 +20,9 @@ use neuromax::arch::config::GridConfig;
 use neuromax::arch::ConvCore;
 use neuromax::dataflow::engine::encode_cols;
 use neuromax::dataflow::{
-    analyze, exec, plan_rows, plan_rows_gemm, run_batch_lockstep, Engine, FusedWeights,
-    ModelProgram, ProgramExecutor, ScheduleOptions, SwCost, WorkerPool,
+    analyze, exec, kernel_table, plan_gemm_tile_with, plan_rows, plan_rows_gemm,
+    run_batch_lockstep, scalar_table, Engine, FusedWeights, ModelProgram, ProgramExecutor,
+    ScheduleOptions, SwCost, WorkerPool,
 };
 use neuromax::models::layer::{LayerDesc, Network};
 use neuromax::lns::mult::thread_mult;
@@ -114,12 +115,53 @@ fn main() {
                     );
                     blackbox(&gout);
                 });
-                log.report(
-                    &format!("GEM conv {name} gemm tile={}x{} ({label})", tile.mr, tile.nr),
+                log.report_arch(
+                    &format!(
+                        "GEM conv {name} gemm tile={}x{} {} ({label})",
+                        tile.mr,
+                        tile.nr,
+                        tile.kernel.arch()
+                    ),
                     m,
                     macs,
                     "MAC",
+                    tile.kernel.arch(),
                 );
+
+                // scalar-vs-SIMD row: same plan, tile re-picked from the
+                // portable table — the measured speedup of the arch kernel.
+                // Skipped when detection already resolved to scalar (the
+                // row above IS the scalar row then).
+                if kernel_table().arch != "scalar" {
+                    let stile =
+                        plan_gemm_tile_with(scalar_table(), &gplan.chunks, ho, wo, fw.kdim());
+                    let mut sscratch = vec![0u8; stile.scratch_len];
+                    let mut sout = vec![0i32; ho * wo * k];
+                    eng.conv2d_gemm_plan(
+                        &cols, h, w, &fw, 1, &mut sout, &gplan, &stile, false, None, &mut sscratch,
+                    );
+                    assert_eq!(
+                        sout, want,
+                        "forced-scalar GEMM must stay bit-exact before being timed ({name} {label})"
+                    );
+                    let m = time(reps, || {
+                        eng.conv2d_gemm_plan(
+                            &cols, h, w, &fw, 1, &mut sout, &gplan, &stile, false, None,
+                            &mut sscratch,
+                        );
+                        blackbox(&sout);
+                    });
+                    log.report_arch(
+                        &format!(
+                            "GEM conv {name} gemm tile={}x{} scalar ({label})",
+                            stile.mr, stile.nr
+                        ),
+                        m,
+                        macs,
+                        "MAC",
+                        "scalar",
+                    );
+                }
             }
         }
     }

@@ -392,6 +392,11 @@ impl Metrics {
             self.worker_respawns.load(Ordering::Relaxed),
             self.reaped_conns.load(Ordering::Relaxed),
         ));
+        // the GEMM micro-kernel this process resolved at startup (arch,
+        // feature tags, widest tile) — appended after the legacy prefix
+        // like the fault counters, so `parse_model_gauge` and prefix
+        // parsers are unaffected
+        s.push_str(&format!(" cpu=[{}]", crate::dataflow::cpu_summary()));
         s.push_str(" err=[");
         for (i, code) in ErrCode::ALL.iter().enumerate() {
             if i > 0 {
@@ -517,6 +522,18 @@ mod tests {
         assert!(s.contains("busy_queue_full=0"), "{s}");
         assert!(!s.contains("shards=["), "{s}");
         assert!(!s.contains("models=["), "{s}");
+    }
+
+    #[test]
+    fn cpu_segment_names_the_resolved_kernel_table() {
+        let m = Metrics::default();
+        let s = m.summary();
+        let want = format!(" cpu=[{}]", crate::dataflow::cpu_summary());
+        assert!(s.contains(&want), "{s}");
+        // appended after the legacy counters, before the err table
+        let cpu_at = s.find(" cpu=[").unwrap();
+        assert!(s.find("reaped_conns=").unwrap() < cpu_at, "{s}");
+        assert!(cpu_at < s.find(" err=[").unwrap(), "{s}");
     }
 
     #[test]

@@ -28,7 +28,10 @@ pub struct ActivationArena {
     /// im2col pixel-panel scratch for the packed-GEMM conv path, sized
     /// to the largest planned `GemmTile::scratch_len` on first use (the
     /// GEMM twin of `cols` — grow-only, so the zero-steady-state-
-    /// allocation pin holds on the GEMM path too).
+    /// allocation pin holds on the GEMM path too). Window sizes are
+    /// MR-padded per the arch kernel table's tile, so the same scratch
+    /// serves the scalar 4×4 and the wider SIMD tiles (8×8 AVX2 / 4×8
+    /// NEON) without re-sizing — the plan fixes MR before first growth.
     pub(crate) gemm: Vec<u8>,
     /// Buffer growth events since construction (warmup only, then 0).
     pub(crate) grow_events: u64,

@@ -76,6 +76,16 @@ const LUT_ROWS: usize = 256;
 /// reference datapath. Column 0 (zero activation) is zero in every row.
 pub static PROD_LUT: [[i32; ACT_COLS]; LUT_ROWS] = build_prod_lut();
 
+/// One log-domain MAC against the product LUT: `acc + PROD_LUT[row][col
+/// & 63]`, wrapping. Every scalar path — the row kernels' [`dot`],
+/// [`depthwise_rows`], and the GEMM reference tile in `dataflow::gemm`
+/// — goes through this single helper, so the gather semantics the SIMD
+/// kernels are diffed against cannot drift between call sites.
+#[inline(always)]
+pub fn lut_mac(acc: i32, row: u8, col: u8) -> i32 {
+    acc.wrapping_add(PROD_LUT[row as usize][(col & 63) as usize])
+}
+
 const fn build_prod_lut() -> [[i32; ACT_COLS]; LUT_ROWS] {
     let mut t = [[0i32; ACT_COLS]; LUT_ROWS];
     let mut row = 1usize;
@@ -146,8 +156,11 @@ pub struct FusedWeights {
     pub c: usize,
     rows: Vec<u8>,
     /// GEMM weight panels, packed lazily on first GEMM execution (the
-    /// rows are per-layer constants, so the panels are too).
-    panels: OnceLock<PanelData>,
+    /// rows are per-layer constants, so the panels are too). One cache
+    /// per panel width the kernel tables use: NR=4 (scalar table) and
+    /// NR=8 (the SIMD tables) — see `gemm::kernel_table`.
+    panels4: OnceLock<PanelData>,
+    panels8: OnceLock<PanelData>,
 }
 
 impl FusedWeights {
@@ -164,7 +177,15 @@ impl FusedWeights {
             .zip(&ws.data)
             .map(|(&code, &sign)| fuse_row(code, sign))
             .collect();
-        FusedWeights { k: wc.k, kh: wc.kh, kw: wc.kw, c: wc.c, rows, panels: OnceLock::new() }
+        FusedWeights {
+            k: wc.k,
+            kh: wc.kh,
+            kw: wc.kw,
+            c: wc.c,
+            rows,
+            panels4: OnceLock::new(),
+            panels8: OnceLock::new(),
+        }
     }
 
     /// Fused footprint in bytes (8× smaller than the two-i32 code+sign
@@ -183,14 +204,19 @@ impl FusedWeights {
         &self.rows
     }
 
-    /// The [`GEMM_NR`]-wide weight panels for the packed-GEMM kernel,
-    /// packed once on first use and cached for the layer's lifetime
+    /// The `nr`-wide weight panels for the packed-GEMM kernel, packed
+    /// once on first use and cached for the layer's lifetime
     /// (subsequent calls are a load — the zero-steady-state-allocation
-    /// pin in `tests/alloc_steady.rs` covers the GEMM path).
-    ///
-    /// [`GEMM_NR`]: super::gemm::GEMM_NR
-    pub fn gemm_panels(&self) -> &PanelData {
-        self.panels.get_or_init(|| pack_weight_panels(&self.rows, self.k, self.kdim()))
+    /// pin in `tests/alloc_steady.rs` covers the GEMM path). `nr` is
+    /// the planned tile's NR, which the kernel tables keep to 4
+    /// (scalar) or 8 (SIMD) — each width gets its own cache cell.
+    pub fn gemm_panels(&self, nr: usize) -> &PanelData {
+        debug_assert!(nr == 4 || nr == 8, "no kernel table packs NR={nr}");
+        let cell = if nr == 8 { &self.panels8 } else { &self.panels4 };
+        cell.get_or_init(|| {
+            pack_weight_panels(&self.rows, self.k, self.kdim(), nr)
+                .expect("FusedWeights guarantees k > 0 and kdim > 0")
+        })
     }
 }
 
@@ -548,7 +574,9 @@ impl Engine {
             // (pinned in the schedule tests) keeps the whole-output
             // window within `scratch_len`.
             let sc = unsafe { std::slice::from_raw_parts_mut(sbase.0.add(off), need) };
-            gemm_chunk(cols, aw, fw, stride, i0, chunk, wo, tile.mr, sc, requant);
+            gemm_chunk(
+                cols, aw, fw, stride, i0, chunk, wo, tile.mr, tile.nr, tile.kernel, sc, requant,
+            );
         });
     }
 
@@ -815,7 +843,7 @@ unsafe impl<T> Sync for SendPtrOf<T> {}
 #[inline(always)]
 fn dot(w: &[u8], a: &[u8], mut acc: i32) -> i32 {
     for (&r, &col) in w.iter().zip(a) {
-        acc = acc.wrapping_add(PROD_LUT[r as usize][(col & 63) as usize]);
+        acc = lut_mac(acc, r, col);
     }
     acc
 }
@@ -864,8 +892,7 @@ pub(crate) fn depthwise_rows(
                     let abase = ((i * stride + dy) * aw + j * stride) * c + ch;
                     for dx in 0..kw {
                         let r = wrows[(ch * kh + dy) * kw + dx];
-                        let col = cols[abase + dx * c];
-                        acc = acc.wrapping_add(PROD_LUT[r as usize][(col & 63) as usize]);
+                        acc = lut_mac(acc, r, cols[abase + dx * c]);
                     }
                 }
                 orow[j * c + ch] = acc;

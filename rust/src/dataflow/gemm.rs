@@ -7,44 +7,197 @@
 //! to the u8 LUT domain:
 //!
 //! * **Weight panels** ([`pack_weight_panels`]): the fused `[K, kh, kw,
-//!   C]` LUT rows are repacked once per layer into [`GEMM_NR`]-wide
-//!   column panels — `data[jb·NR·kdim + t·NR + j]` — so the micro-kernel
+//!   C]` LUT rows are repacked once per layer into NR-wide column
+//!   panels — `data[jb·NR·kdim + t·NR + j]` — so the micro-kernel
 //!   reads NR weight bytes per tap from one contiguous, forward-moving
 //!   stream. Filter tails pad with row 0 (the all-zero LUT row), which
-//!   is numerically free.
+//!   is numerically free. NR comes from the arch's [`KernelTable`]
+//!   (4 for the scalar fallback, 8 for the SIMD tables).
 //! * **Pixel panels** ([`pack_cols`]): im2col over the encoded
 //!   activation columns, `mr` output pixels interleaved per tap —
 //!   `dst[pb·mr·kdim + t·mr + lane]` — so the micro-kernel reads MR
 //!   activation bytes per tap from a second contiguous stream. Dead
 //!   lanes pad with column 0 (zero product), also free.
-//! * **Micro-kernel** (`tile_into`): an MR×NR register tile of i32
-//!   accumulators; each tap is MR+NR byte loads feeding MR·NR unrolled
-//!   LUT gathers (16 at the full 4×4 tile). ReLU+requant folds into the
-//!   tile epilogue on fully-accumulated psums.
+//! * **Micro-kernels**: an MR×NR register tile of i32 accumulators;
+//!   each tap is MR+NR byte loads feeding MR·NR LUT gathers.
+//!   ReLU+requant folds into the tile epilogue on fully-accumulated
+//!   psums. The scalar const-generic `tile_into` is the universal
+//!   reference; [`GemmKernel::Avx2`] replaces the inner gathers with
+//!   `vpgatherdd` over 8-lane i32 vectors (8×8 tile), and
+//!   [`GemmKernel::Neon`] keeps scalar gathers but vector-accumulates
+//!   a 4×8 tile. Runtime CPU detection resolves once into a process-
+//!   wide [`KernelTable`] ([`kernel_table`]); `NEUROMAX_FORCE_SCALAR`
+//!   pins the scalar table for differential testing.
 //!
 //! Bit-exactness is free by construction: log-domain products are exact
 //! integers, i32 wrapping addition is order-independent, and every pad
-//! lane/row contributes an exact 0 — so the GEMM path produces the same
-//! bits as `exec::conv2d` and the row kernels (pinned in
-//! `tests/gemm_kernel.rs`).
+//! lane/row contributes an exact 0 — so every kernel variant produces
+//! the same bits as `exec::conv2d` and the row kernels (pinned in
+//! `tests/gemm_kernel.rs` over the detected table *and* forced-scalar).
 //!
 //! The planner — not this module — decides when the GEMM path runs and
-//! how it tiles: see `schedule::plan_rows_gemm` / `GemmTile`.
+//! how it tiles: see `schedule::plan_rows_gemm` / `GemmTile`, which
+//! select an (MR, NR, kernel) triple from [`kernel_table`] at compile
+//! time and execute it verbatim with no runtime re-detection.
 
-use super::engine::{FusedWeights, PROD_LUT};
+use std::sync::OnceLock;
+
+use super::engine::{lut_mac, FusedWeights};
 use crate::lns::tables::requant_act;
 
-/// Filter-panel width (micro-kernel columns). Fixed: 4 i32 accumulator
-/// columns × the 4-deep pixel dimension keeps the full tile in
-/// registers on every 64-bit target.
+/// Scalar-table filter-panel width (micro-kernel columns), and the
+/// minimum NR any table offers: 4 i32 accumulator columns × the 4-deep
+/// pixel dimension keeps the full scalar tile in registers on every
+/// 64-bit target. SIMD tables widen this (see [`kernel_table`]).
 pub const GEMM_NR: usize = 4;
 
-/// A weight tensor repacked into [`GEMM_NR`]-wide column panels, built
-/// once per layer (lazily, at first GEMM execution) and shared across
-/// every request that runs the layer.
-#[derive(Clone, Debug)]
+/// Which micro-kernel body a planned tile executes. Carried by the
+/// planner's `GemmTile` so execution never re-detects CPU features —
+/// the id names what actually runs (tail tiles narrower than a SIMD
+/// kernel's MR run [`GemmKernel::Scalar`] at the table's NR).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GemmKernel {
+    /// The const-generic reference kernel: unrolled scalar LUT gathers.
+    Scalar,
+    /// 8×8 tile, `vpgatherdd` LUT row gathers over 8-lane i32 vectors.
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    /// 4×8 tile, scalar LUT gathers + NEON vector accumulate.
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+impl GemmKernel {
+    /// Short arch tag for EXPLAIN rows and bench columns.
+    pub fn arch(self) -> &'static str {
+        match self {
+            GemmKernel::Scalar => "scalar",
+            #[cfg(target_arch = "x86_64")]
+            GemmKernel::Avx2 => "avx2",
+            #[cfg(target_arch = "aarch64")]
+            GemmKernel::Neon => "neon",
+        }
+    }
+}
+
+/// The tile shapes one architecture offers, widest MR first. The
+/// planner picks the first entry whose MR fits the smallest planned
+/// chunk (`plan_gemm_tile`); every entry of one table shares its NR so
+/// a layer's weight panels pack once per table, not per tile.
+#[derive(Debug)]
+pub struct KernelTable {
+    /// Arch tag: `scalar` | `avx2` | `neon`.
+    pub arch: &'static str,
+    /// Detected feature string, for the STATS `cpu=[..]` segment.
+    pub features: &'static str,
+    /// `(mr, nr, kernel)` triples, widest MR first.
+    pub tiles: &'static [(usize, usize, GemmKernel)],
+}
+
+static SCALAR_TABLE: KernelTable = KernelTable {
+    arch: "scalar",
+    features: "portable",
+    tiles: &[
+        (4, GEMM_NR, GemmKernel::Scalar),
+        (2, GEMM_NR, GemmKernel::Scalar),
+        (1, GEMM_NR, GemmKernel::Scalar),
+    ],
+};
+
+#[cfg(target_arch = "x86_64")]
+static AVX2_TABLE: KernelTable = KernelTable {
+    arch: "avx2",
+    features: "avx2 vpgatherdd",
+    tiles: &[
+        (8, 8, GemmKernel::Avx2),
+        (4, 8, GemmKernel::Scalar),
+        (2, 8, GemmKernel::Scalar),
+        (1, 8, GemmKernel::Scalar),
+    ],
+};
+
+#[cfg(target_arch = "aarch64")]
+static NEON_TABLE: KernelTable = KernelTable {
+    arch: "neon",
+    features: "neon",
+    tiles: &[
+        (4, 8, GemmKernel::Neon),
+        (2, 8, GemmKernel::Scalar),
+        (1, 8, GemmKernel::Scalar),
+    ],
+};
+
+/// `NEUROMAX_FORCE_SCALAR` (set, non-empty, not `"0"`) pins the scalar
+/// table for differential testing. Read once, at first table
+/// resolution — flipping the env mid-process would desync cached plans.
+fn force_scalar() -> bool {
+    matches!(std::env::var("NEUROMAX_FORCE_SCALAR"), Ok(v) if !v.is_empty() && v != "0")
+}
+
+/// The process-wide kernel table: CPU features detected once, cached in
+/// a `OnceLock`. Every compiled plan and every STATS line reads the
+/// same resolution, so a cached `GemmTile` always names a kernel this
+/// process can run.
+pub fn kernel_table() -> &'static KernelTable {
+    static TABLE: OnceLock<&'static KernelTable> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        if force_scalar() {
+            return &SCALAR_TABLE;
+        }
+        #[cfg(target_arch = "x86_64")]
+        if is_x86_feature_detected!("avx2") {
+            return &AVX2_TABLE;
+        }
+        #[cfg(target_arch = "aarch64")]
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return &NEON_TABLE;
+        }
+        &SCALAR_TABLE
+    })
+}
+
+/// The scalar fallback table, unconditionally — benches and tests plan
+/// against it to diff SIMD rows without touching the env.
+pub fn scalar_table() -> &'static KernelTable {
+    &SCALAR_TABLE
+}
+
+/// One-line CPU summary for STATS: `arch features MRxNR` of the widest
+/// tile the resolved table offers.
+pub fn cpu_summary() -> String {
+    let t = kernel_table();
+    let (mr, nr, _) = t.tiles[0];
+    format!("{} {} {}x{}", t.arch, t.features, mr, nr)
+}
+
+/// Degenerate weight shapes rejected by [`pack_weight_panels`]: an
+/// all-zero panel for `k == 0` / `kdim == 0` would silently satisfy the
+/// micro-kernel while computing nothing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PackError {
+    /// `k == 0`: no filters to pack.
+    ZeroFilters,
+    /// `kdim == 0`: filters with no taps (`kh·kw·c == 0`).
+    ZeroDepth,
+}
+
+impl std::fmt::Display for PackError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PackError::ZeroFilters => write!(f, "pack_weight_panels: k == 0 (no filters)"),
+            PackError::ZeroDepth => write!(f, "pack_weight_panels: kdim == 0 (no taps)"),
+        }
+    }
+}
+
+impl std::error::Error for PackError {}
+
+/// A weight tensor repacked into `nr`-wide column panels, built once
+/// per (layer, NR) — lazily, at first GEMM execution — and shared
+/// across every request that runs the layer.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct PanelData {
-    /// Panel width the data was packed at (= [`GEMM_NR`]).
+    /// Panel width the data was packed at (the table's NR).
     pub nr: usize,
     /// im2col depth `kh·kw·c`: bytes per filter.
     pub kdim: usize,
@@ -56,21 +209,33 @@ pub struct PanelData {
 }
 
 /// Repack fused LUT rows (`[K, kh, kw, C]`, `kdim` bytes per filter)
-/// into [`GEMM_NR`]-wide panels. Tail filters beyond `k` pack LUT row 0
+/// into `nr`-wide panels. Tail filters beyond `k` pack LUT row 0
 /// (all-zero products), so the micro-kernel never branches on the
-/// filter tail.
-pub fn pack_weight_panels(rows: &[u8], k: usize, kdim: usize) -> PanelData {
+/// filter tail. Degenerate `k == 0` / `kdim == 0` shapes are a typed
+/// [`PackError`] at pack time, not a silent all-zero panel.
+pub fn pack_weight_panels(
+    rows: &[u8],
+    k: usize,
+    kdim: usize,
+    nr: usize,
+) -> Result<PanelData, PackError> {
+    if k == 0 {
+        return Err(PackError::ZeroFilters);
+    }
+    if kdim == 0 {
+        return Err(PackError::ZeroDepth);
+    }
     assert_eq!(rows.len(), k * kdim, "fused rows/shape mismatch");
-    let npanels = k.div_ceil(GEMM_NR).max(1);
-    let mut data = vec![0u8; npanels * GEMM_NR * kdim];
+    let npanels = k.div_ceil(nr);
+    let mut data = vec![0u8; npanels * nr * kdim];
     for (f, filter) in rows.chunks_exact(kdim).enumerate() {
-        let (jb, j) = (f / GEMM_NR, f % GEMM_NR);
-        let pbase = jb * GEMM_NR * kdim;
+        let (jb, j) = (f / nr, f % nr);
+        let pbase = jb * nr * kdim;
         for (t, &r) in filter.iter().enumerate() {
-            data[pbase + t * GEMM_NR + j] = r;
+            data[pbase + t * nr + j] = r;
         }
     }
-    PanelData { nr: GEMM_NR, kdim, k, data }
+    Ok(PanelData { nr, kdim, k, data })
 }
 
 /// im2col pixel-panel packing: gather the receptive fields of `npix`
@@ -120,15 +285,16 @@ pub fn pack_cols(
     }
 }
 
-/// The register-blocked micro-kernel: one MR×[`GEMM_NR`] tile of i32
+/// The scalar register-blocked micro-kernel: one MR×NR tile of i32
 /// accumulators over `kdim` taps — MR+NR byte loads feeding MR·NR
-/// unrolled LUT gathers per tap (16 at the full 4×4 tile). The epilogue
-/// writes the `live × jlive` live corner into the pixel-major output
+/// unrolled [`lut_mac`] gathers per tap. The epilogue writes the
+/// `live × jlive` live corner into the pixel-major output
 /// (`out[pixel·k + filter]`), folding ReLU+requant on the
-/// fully-accumulated psums when asked.
+/// fully-accumulated psums when asked. This is the universal fallback
+/// every SIMD variant is diffed against.
 #[inline(always)]
 #[allow(clippy::too_many_arguments)]
-fn tile_into<const MR: usize>(
+fn tile_into<const MR: usize, const NR: usize>(
     apanel: &[u8],
     wpanel: &[u8],
     kdim: usize,
@@ -140,14 +306,14 @@ fn tile_into<const MR: usize>(
     k: usize,
     requant: bool,
 ) {
-    let mut acc = [[0i32; GEMM_NR]; MR];
+    let mut acc = [[0i32; NR]; MR];
     for t in 0..kdim {
         let a = &apanel[t * MR..t * MR + MR];
-        let w = &wpanel[t * GEMM_NR..t * GEMM_NR + GEMM_NR];
+        let w = &wpanel[t * NR..t * NR + NR];
         for (lane, arow) in acc.iter_mut().enumerate() {
-            let col = (a[lane] & 63) as usize;
+            let col = a[lane];
             for (j, av) in arow.iter_mut().enumerate() {
-                *av = av.wrapping_add(PROD_LUT[w[j] as usize][col]);
+                *av = lut_mac(*av, w[j], col);
             }
         }
     }
@@ -159,13 +325,198 @@ fn tile_into<const MR: usize>(
     }
 }
 
+/// AVX2 micro-kernel: the gathers themselves vectorize. The LUT column
+/// index of 8 consecutive pixels becomes one 8-lane i32 vector, and
+/// each filter row gathers its 8 products in one `vpgatherdd` against
+/// the row's base pointer — accumulators live as 8 × 8-lane vectors
+/// (one per filter column), so the whole 8×8 tile is 8 gathers + 8
+/// vector adds per tap.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use crate::dataflow::engine::PROD_LUT;
+    use crate::lns::tables::requant_act;
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// Caller must have verified `avx2` via `is_x86_feature_detected!`
+    /// (the planner only emits [`super::GemmKernel::Avx2`] after
+    /// resolving the AVX2 [`super::KernelTable`]).
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn tile_8x8(
+        apanel: &[u8],
+        wpanel: &[u8],
+        kdim: usize,
+        out: &mut [i32],
+        p0: usize,
+        live: usize,
+        j0: usize,
+        jlive: usize,
+        k: usize,
+        requant: bool,
+    ) {
+        const MR: usize = 8;
+        const NR: usize = 8;
+        debug_assert!(apanel.len() >= kdim * MR && wpanel.len() >= kdim * NR);
+        let mask = _mm256_set1_epi32(63);
+        let mut acc = [_mm256_setzero_si256(); NR];
+        for t in 0..kdim {
+            // 8 activation codes -> 8 masked i32 LUT column offsets
+            // (same `col & 63` as `lut_mac`, vectorized)
+            let a8 = _mm_loadl_epi64(apanel.as_ptr().add(t * MR) as *const __m128i);
+            let cols = _mm256_and_si256(_mm256_cvtepu8_epi32(a8), mask);
+            let w = &wpanel[t * NR..t * NR + NR];
+            for (j, accj) in acc.iter_mut().enumerate() {
+                let row = PROD_LUT[w[j] as usize].as_ptr();
+                *accj = _mm256_add_epi32(*accj, _mm256_i32gather_epi32::<4>(row, cols));
+            }
+        }
+        // acc[j] holds filter column j for all 8 lanes: spill the tile
+        // and write the live corner lane-major, like the scalar kernel
+        let mut tile = [[0i32; MR]; NR];
+        for (j, accj) in acc.iter().enumerate() {
+            _mm256_storeu_si256(tile[j].as_mut_ptr() as *mut __m256i, *accj);
+        }
+        for lane in 0..live {
+            let obase = (p0 + lane) * k + j0;
+            for (j, o) in out[obase..obase + jlive].iter_mut().enumerate() {
+                let v = tile[j][lane];
+                *o = if requant { requant_act(v) } else { v };
+            }
+        }
+    }
+}
+
+/// NEON micro-kernel: aarch64 has no vector gather, and the 64 KiB
+/// `PROD_LUT` cannot live in registers for a `tbl` formulation without
+/// repacking it into byte planes (256 B of loads per filter row per
+/// tap — a traffic loss against 4 B/MAC scalar gathers). So the NEON
+/// tile keeps the scalar gathers but widens the accumulate: 4 pixels ×
+/// 8 filter columns as 2 × `int32x4` vectors per lane, filled by 8
+/// scalar LUT reads and retired with 2 vector adds per (tap, lane).
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use crate::dataflow::engine::PROD_LUT;
+    use crate::lns::tables::requant_act;
+    use std::arch::aarch64::*;
+
+    /// # Safety
+    /// Caller must have verified `neon` via
+    /// `std::arch::is_aarch64_feature_detected!` (the planner only
+    /// emits [`super::GemmKernel::Neon`] after resolving the NEON
+    /// [`super::KernelTable`]).
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments)]
+    pub(super) unsafe fn tile_4x8(
+        apanel: &[u8],
+        wpanel: &[u8],
+        kdim: usize,
+        out: &mut [i32],
+        p0: usize,
+        live: usize,
+        j0: usize,
+        jlive: usize,
+        k: usize,
+        requant: bool,
+    ) {
+        const MR: usize = 4;
+        const NR: usize = 8;
+        debug_assert!(apanel.len() >= kdim * MR && wpanel.len() >= kdim * NR);
+        // acc[lane] = [cols 0..4, cols 4..8] of that pixel's 8 psums
+        let mut acc = [[vdupq_n_s32(0); 2]; MR];
+        for t in 0..kdim {
+            let a = &apanel[t * MR..t * MR + MR];
+            let w = &wpanel[t * NR..t * NR + NR];
+            for (lane, accl) in acc.iter_mut().enumerate() {
+                let col = (a[lane] & 63) as usize;
+                let lo = [
+                    PROD_LUT[w[0] as usize][col],
+                    PROD_LUT[w[1] as usize][col],
+                    PROD_LUT[w[2] as usize][col],
+                    PROD_LUT[w[3] as usize][col],
+                ];
+                let hi = [
+                    PROD_LUT[w[4] as usize][col],
+                    PROD_LUT[w[5] as usize][col],
+                    PROD_LUT[w[6] as usize][col],
+                    PROD_LUT[w[7] as usize][col],
+                ];
+                accl[0] = vaddq_s32(accl[0], vld1q_s32(lo.as_ptr()));
+                accl[1] = vaddq_s32(accl[1], vld1q_s32(hi.as_ptr()));
+            }
+        }
+        for (lane, accl) in acc.iter().enumerate().take(live) {
+            let mut row = [0i32; NR];
+            vst1q_s32(row.as_mut_ptr(), accl[0]);
+            vst1q_s32(row.as_mut_ptr().add(4), accl[1]);
+            let obase = (p0 + lane) * k + j0;
+            for (j, o) in out[obase..obase + jlive].iter_mut().enumerate() {
+                *o = if requant { requant_act(row[j]) } else { row[j] };
+            }
+        }
+    }
+}
+
+/// Execute one planned tile: dispatch the kernel id the planner chose.
+/// SIMD ids were only planned after feature detection, so the unsafe
+/// calls are sound by construction; the scalar id monomorphizes over
+/// every (MR, NR) the tables offer.
+#[allow(clippy::too_many_arguments)]
+fn run_tile(
+    kernel: GemmKernel,
+    mr: usize,
+    nr: usize,
+    apanel: &[u8],
+    wpanel: &[u8],
+    kdim: usize,
+    out: &mut [i32],
+    p0: usize,
+    live: usize,
+    j0: usize,
+    jlive: usize,
+    k: usize,
+    requant: bool,
+) {
+    match kernel {
+        #[cfg(target_arch = "x86_64")]
+        GemmKernel::Avx2 => {
+            debug_assert_eq!((mr, nr), (8, 8), "Avx2 kernel is the 8x8 tile");
+            // SAFETY: Avx2 is only planned from AVX2_TABLE, which
+            // kernel_table() resolves after is_x86_feature_detected!
+            unsafe {
+                avx2::tile_8x8(apanel, wpanel, kdim, out, p0, live, j0, jlive, k, requant)
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        GemmKernel::Neon => {
+            debug_assert_eq!((mr, nr), (4, 8), "Neon kernel is the 4x8 tile");
+            // SAFETY: Neon is only planned from NEON_TABLE, which
+            // kernel_table() resolves after is_aarch64_feature_detected!
+            unsafe {
+                neon::tile_4x8(apanel, wpanel, kdim, out, p0, live, j0, jlive, k, requant)
+            }
+        }
+        GemmKernel::Scalar => match (mr, nr) {
+            (8, 8) => tile_into::<8, 8>(apanel, wpanel, kdim, out, p0, live, j0, jlive, k, requant),
+            (4, 8) => tile_into::<4, 8>(apanel, wpanel, kdim, out, p0, live, j0, jlive, k, requant),
+            (2, 8) => tile_into::<2, 8>(apanel, wpanel, kdim, out, p0, live, j0, jlive, k, requant),
+            (1, 8) => tile_into::<1, 8>(apanel, wpanel, kdim, out, p0, live, j0, jlive, k, requant),
+            (4, 4) => tile_into::<4, 4>(apanel, wpanel, kdim, out, p0, live, j0, jlive, k, requant),
+            (2, 4) => tile_into::<2, 4>(apanel, wpanel, kdim, out, p0, live, j0, jlive, k, requant),
+            (1, 4) => tile_into::<1, 4>(apanel, wpanel, kdim, out, p0, live, j0, jlive, k, requant),
+            _ => panic!("unsupported scalar GEMM tile {mr}x{nr}"),
+        },
+    }
+}
+
 /// Run the packed-GEMM conv kernel over one chunk of output rows:
 /// pack the chunk's pixel panels into `scratch` (its private window of
 /// the arena's GEMM scratch), then sweep pixel panels × weight panels
-/// through the micro-kernel. `out` covers output rows `i0 ..` as
-/// contiguous `[wo × K]` blocks — the same contract as
+/// through the planned micro-kernel. `out` covers output rows `i0 ..`
+/// as contiguous `[wo × K]` blocks — the same contract as
 /// `engine::conv_rows` — and every output element is written exactly
-/// once (no pre-zeroing needed).
+/// once (no pre-zeroing needed). `(mr, nr, kernel)` come from the
+/// planned `GemmTile` verbatim.
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_chunk(
     cols: &[u8],
@@ -176,6 +527,8 @@ pub fn gemm_chunk(
     out: &mut [i32],
     wo: usize,
     mr: usize,
+    nr: usize,
+    kernel: GemmKernel,
     scratch: &mut [u8],
     requant: bool,
 ) {
@@ -184,8 +537,9 @@ pub fn gemm_chunk(
     debug_assert_eq!(out.len() % (wo * k), 0, "out must be whole output rows");
     let npix = out.len() / k;
     let npanels = npix.div_ceil(mr);
-    let panels = fw.gemm_panels();
+    let panels = fw.gemm_panels(nr);
     debug_assert_eq!(panels.kdim, kdim);
+    debug_assert_eq!(panels.nr, nr);
     pack_cols(
         cols,
         aw,
@@ -199,20 +553,18 @@ pub fn gemm_chunk(
         mr,
         &mut scratch[..npanels * mr * kdim],
     );
-    let nj = k.div_ceil(GEMM_NR);
+    let nj = k.div_ceil(nr);
     for pb in 0..npanels {
         let apanel = &scratch[pb * mr * kdim..(pb + 1) * mr * kdim];
         let p0 = pb * mr;
         let live = (npix - p0).min(mr);
         for jb in 0..nj {
-            let wpanel = &panels.data[jb * GEMM_NR * kdim..(jb + 1) * GEMM_NR * kdim];
-            let j0 = jb * GEMM_NR;
-            let jlive = (k - j0).min(GEMM_NR);
-            match mr {
-                4 => tile_into::<4>(apanel, wpanel, kdim, out, p0, live, j0, jlive, k, requant),
-                2 => tile_into::<2>(apanel, wpanel, kdim, out, p0, live, j0, jlive, k, requant),
-                _ => tile_into::<1>(apanel, wpanel, kdim, out, p0, live, j0, jlive, k, requant),
-            }
+            let wpanel = &panels.data[jb * nr * kdim..(jb + 1) * nr * kdim];
+            let j0 = jb * nr;
+            let jlive = (k - j0).min(nr);
+            run_tile(
+                kernel, mr, nr, apanel, wpanel, kdim, out, p0, live, j0, jlive, k, requant,
+            );
         }
     }
 }
@@ -248,26 +600,40 @@ mod tests {
     }
 
     #[test]
-    fn weight_panels_round_trip_with_ragged_k() {
+    fn weight_panels_round_trip_with_ragged_k_at_each_table_nr() {
         let mut rng = SplitMix64::new(11);
-        for k in [1usize, 3, 4, 5, 8, 9] {
-            let fw = rand_fused(&mut rng, k, 3, 3, 5);
-            let kdim = fw.kdim();
-            let p = pack_weight_panels(fw.rows(), k, kdim);
-            assert_eq!(p.data.len(), k.div_ceil(GEMM_NR) * GEMM_NR * kdim, "k={k}");
-            for f in 0..k.div_ceil(GEMM_NR) * GEMM_NR {
-                for t in 0..kdim {
-                    let got = p.data[(f / GEMM_NR) * GEMM_NR * kdim + t * GEMM_NR + f % GEMM_NR];
-                    let want = if f < k { fw.rows()[f * kdim + t] } else { 0 };
-                    assert_eq!(got, want, "k={k} filter {f} tap {t}");
+        for nr in [GEMM_NR, 8] {
+            for k in [1usize, 3, 4, 5, 8, 9] {
+                let fw = rand_fused(&mut rng, k, 3, 3, 5);
+                let kdim = fw.kdim();
+                let p = pack_weight_panels(fw.rows(), k, kdim, nr).unwrap();
+                assert_eq!(p.nr, nr);
+                assert_eq!(p.data.len(), k.div_ceil(nr) * nr * kdim, "k={k} nr={nr}");
+                for f in 0..k.div_ceil(nr) * nr {
+                    for t in 0..kdim {
+                        let got = p.data[(f / nr) * nr * kdim + t * nr + f % nr];
+                        let want = if f < k { fw.rows()[f * kdim + t] } else { 0 };
+                        assert_eq!(got, want, "k={k} nr={nr} filter {f} tap {t}");
+                    }
                 }
             }
         }
     }
 
     #[test]
+    fn degenerate_pack_shapes_are_typed_errors() {
+        assert_eq!(pack_weight_panels(&[], 0, 9, 4), Err(PackError::ZeroFilters));
+        assert_eq!(pack_weight_panels(&[], 3, 0, 4), Err(PackError::ZeroDepth));
+        assert_eq!(pack_weight_panels(&[], 0, 0, 8), Err(PackError::ZeroFilters));
+        // the error type renders and is a std Error
+        let e: Box<dyn std::error::Error> = Box::new(PackError::ZeroDepth);
+        assert!(e.to_string().contains("kdim == 0"));
+    }
+
+    #[test]
     fn pixel_panels_round_trip_against_naive_gather() {
-        // ragged edges: c=1, pixel tails shorter than mr, stride 2
+        // ragged edges: c=1, pixel tails shorter than mr, stride 2,
+        // plus the SIMD tables' mr=8 lane count
         let mut rng = SplitMix64::new(13);
         for (h, w, c, kh, kw, stride, mr) in [
             (7usize, 6usize, 3usize, 3usize, 3usize, 1usize, 4usize),
@@ -276,6 +642,8 @@ mod tests {
             (3, 3, 2, 3, 3, 1, 4),  // single output pixel < mr
             (5, 7, 4, 1, 1, 1, 2),  // pointwise, mr 2
             (4, 6, 2, 3, 1, 1, 1),  // mr 1 degenerate
+            (7, 6, 3, 3, 3, 1, 8),  // SIMD-width lanes
+            (3, 3, 2, 3, 3, 1, 8),  // single pixel, mr 8 tail
         ] {
             let cols = rand_cols(&mut rng, h, w, c);
             let (ho, wo) = (out_dim(h, kh, stride), out_dim(w, kw, stride));
@@ -295,7 +663,7 @@ mod tests {
                         } else {
                             0 // dead lane: zero column, zero product
                         };
-                        assert_eq!(got, want, "h={h} w={w} c={c} p={p} tap {t}");
+                        assert_eq!(got, want, "h={h} w={w} c={c} mr={mr} p={p} tap {t}");
                     }
                 }
             }
@@ -303,8 +671,14 @@ mod tests {
     }
 
     #[test]
-    fn gemm_chunk_matches_conv_rows_including_partial_chunks() {
+    fn gemm_chunk_matches_conv_rows_for_every_table_tile() {
+        // every (mr, nr, kernel) the detected table offers, plus the
+        // scalar table — all against the row-kernel reference, whole
+        // and row-chunked
         let mut rng = SplitMix64::new(17);
+        let mut tiles: Vec<(usize, usize, GemmKernel)> = Vec::new();
+        tiles.extend_from_slice(kernel_table().tiles);
+        tiles.extend_from_slice(scalar_table().tiles);
         for (h, w, c, k, kh, kw, stride) in [
             (9usize, 8usize, 3usize, 5usize, 3usize, 3usize, 1usize),
             (8, 7, 2, 4, 3, 3, 2),
@@ -316,12 +690,14 @@ mod tests {
             let (ho, wo) = (out_dim(h, kh, stride), out_dim(w, kw, stride));
             let mut want = vec![0i32; ho * wo * k];
             conv_rows(&cols, w, &fw, stride, 0, &mut want, wo);
-            for mr in [4usize, 2, 1] {
+            for &(mr, nr, kernel) in &tiles {
                 // full output in one chunk
                 let mut scratch = vec![0u8; (ho * wo).div_ceil(mr) * mr * fw.kdim()];
                 let mut got = vec![7i32; want.len()];
-                gemm_chunk(&cols, w, &fw, stride, 0, &mut got, wo, mr, &mut scratch, false);
-                assert_eq!(got, want, "h={h} k={k} stride={stride} mr={mr}");
+                gemm_chunk(
+                    &cols, w, &fw, stride, 0, &mut got, wo, mr, nr, kernel, &mut scratch, false,
+                );
+                assert_eq!(got, want, "h={h} k={k} stride={stride} tile={mr}x{nr} {kernel:?}");
                 // split into row chunks like a parallel plan would
                 if ho > 1 {
                     let mut got2 = vec![7i32; want.len()];
@@ -338,18 +714,20 @@ mod tests {
                             &mut got2[i0 * wo * k..(i0 + rows) * wo * k],
                             wo,
                             mr,
+                            nr,
+                            kernel,
                             &mut sc,
                             false,
                         );
                     }
-                    assert_eq!(got2, want, "chunked h={h} k={k} mr={mr}");
+                    assert_eq!(got2, want, "chunked h={h} k={k} tile={mr}x{nr} {kernel:?}");
                 }
             }
         }
     }
 
     #[test]
-    fn requant_folds_into_the_tile_epilogue() {
+    fn requant_folds_into_the_tile_epilogue_for_every_table_kernel() {
         let mut rng = SplitMix64::new(19);
         let cols = rand_cols(&mut rng, 8, 8, 3);
         let fw = rand_fused(&mut rng, 6, 3, 3, 3);
@@ -357,9 +735,30 @@ mod tests {
         let mut plain = vec![0i32; ho * wo * 6];
         conv_rows(&cols, 8, &fw, 1, 0, &mut plain, wo);
         let want: Vec<i32> = plain.iter().map(|&v| requant_act(v)).collect();
-        let mut scratch = vec![0u8; (ho * wo).div_ceil(4) * 4 * fw.kdim()];
-        let mut got = vec![0i32; want.len()];
-        gemm_chunk(&cols, 8, &fw, 1, 0, &mut got, wo, 4, &mut scratch, true);
-        assert_eq!(got, want);
+        for &(mr, nr, kernel) in kernel_table().tiles.iter().chain(scalar_table().tiles) {
+            let mut scratch = vec![0u8; (ho * wo).div_ceil(mr) * mr * fw.kdim()];
+            let mut got = vec![0i32; want.len()];
+            gemm_chunk(&cols, 8, &fw, 1, 0, &mut got, wo, mr, nr, kernel, &mut scratch, true);
+            assert_eq!(got, want, "tile={mr}x{nr} {kernel:?}");
+        }
+    }
+
+    #[test]
+    fn kernel_table_is_coherent() {
+        let t = kernel_table();
+        assert!(!t.tiles.is_empty());
+        // widest first, one NR per table, every MR supported by run_tile
+        let nr0 = t.tiles[0].1;
+        let mut prev = usize::MAX;
+        for &(mr, nr, _) in t.tiles {
+            assert_eq!(nr, nr0, "one NR per table");
+            assert!(mr <= prev, "tiles are widest-MR-first");
+            assert!(mr >= 1);
+            prev = mr;
+        }
+        // the narrowest tile must fit a single-pixel chunk
+        assert_eq!(t.tiles.last().unwrap().0, 1, "narrowest tile fits one pixel");
+        assert!(!cpu_summary().is_empty());
+        assert_eq!(scalar_table().arch, "scalar");
     }
 }

@@ -26,7 +26,16 @@
 //! packed LUT-GEMM path (`gemm`) — im2col pixel panels packed into
 //! arena scratch driving a register-blocked MR×NR micro-kernel, chosen
 //! per step by [`SwCost::gemm_pays`] and carried on the [`StepPlan`] as
-//! a [`GemmTile`]. Both produce identical bits by construction.
+//! a [`GemmTile`]. The micro-kernel itself is arch-specialized: CPU
+//! features resolve once into a per-arch [`KernelTable`] (AVX2 8×8
+//! `vpgatherdd`, NEON 4×8 vector-accumulate, scalar 4×4 fallback;
+//! `NEUROMAX_FORCE_SCALAR=1` overrides), the planner picks the tile
+//! *and kernel id* from that table at compile time, and the executors
+//! run it verbatim with no runtime re-detection. Every variant produces
+//! identical bits by construction (exact LUT products under
+//! order-independent `wrapping_add`), and a `neuromax calibrate` run
+//! can install measured per-arch cost constants ([`CostOverride`]) so
+//! routing tracks the machine actually serving.
 //!
 //! Model structure itself lives in the typed IR (`ir`): flat layer lists
 //! lower to a [`Graph`] of nodes with explicit edges and inferred
@@ -53,12 +62,16 @@ pub use engine::{Engine, EngineOptions, FusedWeights, PlanTimer};
 pub use forward::{forward_engine, forward_ref, ForwardPlan};
 pub use ir::{reference_forward, Graph, GraphBuilder, GraphError, NodeOp};
 pub use passes::{default_pipeline, run_pipeline, Pass};
-pub use gemm::{pack_cols, pack_weight_panels, PanelData, GEMM_NR};
+pub use gemm::{
+    cpu_summary, kernel_table, pack_cols, pack_weight_panels, scalar_table, GemmKernel,
+    KernelTable, PackError, PanelData, GEMM_NR,
+};
 pub use program::{
     cached_program, explain_rows, run_batch_lockstep, ModelProgram, ProgramExecutor, ProgramPlan,
 };
 pub use schedule::{
-    analyze, balanced_chunks, plan_gemm_tile, plan_rows, plan_rows_forced, plan_rows_gemm,
-    plan_rows_threshold, GemmTile, LayerPerf, ScheduleOptions, Split, StepPlan, SwCost,
+    analyze, balanced_chunks, install_cost_override, plan_gemm_tile, plan_gemm_tile_with,
+    plan_rows, plan_rows_forced, plan_rows_gemm, plan_rows_threshold, CostOverride, GemmTile,
+    LayerPerf, ScheduleOptions, Split, StepPlan, SwCost,
 };
 pub use workers::WorkerPool;

@@ -874,7 +874,7 @@ pub fn explain_rows(net: &Network, prog: &ModelProgram, plan: &ProgramPlan) -> V
             };
             let kernel = match (s.kernel, p.gemm.as_ref()) {
                 (Kernel::Conv3x3S1 | Kernel::Conv { .. }, Some(t)) => {
-                    format!("gemm tile={}x{}", t.mr, t.nr)
+                    format!("gemm tile={}x{} arch={}", t.mr, t.nr, t.kernel.arch())
                 }
                 (Kernel::Conv3x3S1, None) => "row3x3".to_string(),
                 (Kernel::Conv { .. }, None) => "generic".to_string(),
@@ -1474,6 +1474,8 @@ pub fn run_batch_lockstep(
                                 dst,
                                 wo,
                                 tile.mr,
+                                tile.nr,
+                                tile.kernel,
                                 sc,
                                 step.requant,
                             );
@@ -1734,6 +1736,9 @@ mod tests {
                 rows.iter().any(|r| r.contains("kernel=gemm tile=")),
                 "{name}: EXPLAIN must show the gemm kernel choice"
             );
+            for r in rows.iter().filter(|r| r.contains("kernel=gemm")) {
+                assert!(r.contains(" arch="), "{name}: gemm row missing arch token: {r}");
+            }
         }
         // the planner decision follows the cost model exactly
         let net = workload::test_profile("resnet34").unwrap();
@@ -1750,6 +1755,38 @@ mod tests {
                 "layer {} diverged from the cost model",
                 s.layer
             );
+        }
+    }
+
+    #[test]
+    fn explain_pins_the_arch_tables_widest_tile_on_a_big_conv() {
+        use crate::dataflow::gemm::kernel_table;
+        use crate::models::layer::LayerDesc;
+        // one full-size conv: every row chunk holds hundreds of pixels,
+        // so the planner must hand out the detected table's widest
+        // entry — the acceptance pin that a SIMD arch demonstrably
+        // selects a wider-than-4×4 tile
+        let net = Network {
+            name: "bigconv-explain".into(),
+            layers: vec![LayerDesc::conv("c", 3, 1, 1, 56, 56, 32, 16)],
+        };
+        let prog = ModelProgram::compile(&net).unwrap();
+        let plan = prog.plans_for(4, true, false);
+        let t = plan.steps[0].gemm.as_ref().expect("big conv must route to gemm");
+        let table = kernel_table();
+        let &(mr, nr, kernel) = &table.tiles[0];
+        assert_eq!(
+            (t.mr, t.nr, t.kernel),
+            (mr, nr, kernel),
+            "planner must pick the widest {} tile",
+            table.arch
+        );
+        let rows = explain_rows(&net, &prog, &plan);
+        let want = format!("kernel=gemm tile={mr}x{nr} arch={}", kernel.arch());
+        assert!(rows[0].contains(&want), "EXPLAIN must pin the arch tile: {}", rows[0]);
+        // any SIMD table's headline tile is wider than the scalar 4×4
+        if table.arch != "scalar" {
+            assert!(mr * nr > 16, "{} table must offer a wider-than-4x4 tile", table.arch);
         }
     }
 

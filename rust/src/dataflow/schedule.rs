@@ -17,7 +17,9 @@
 //! * 1×1: channels spread over matrix columns (3/matrix → 18 in parallel),
 //!   6 pixels per matrix row, 3 filters per thread triple (Fig. 11/12).
 
-use super::gemm::GEMM_NR;
+use std::sync::OnceLock;
+
+use super::gemm::{kernel_table, GemmKernel, KernelTable};
 use super::tile::{self, Traffic};
 use crate::arch::config::GridConfig;
 use crate::models::layer::{LayerDesc, Op};
@@ -210,11 +212,19 @@ pub struct SwCost {
     /// Serial cost of one fused LUT-MAC (element op for pools) through
     /// the engine's row kernels.
     pub ns_per_mac: f64,
-    /// Serial cost of one fused LUT-MAC through the packed-GEMM
+    /// Serial cost of one fused LUT-MAC through the scalar packed-GEMM
     /// micro-kernel (register-blocked MR×NR tiles amortize loads over
     /// MR+NR bytes per MR·NR products, so this sits well below
     /// `ns_per_mac`).
-    pub ns_per_mac_gemm: f64,
+    pub ns_per_mac_gemm_scalar: f64,
+    /// Per-MAC cost of the AVX2 8×8 `vpgatherdd` kernel — the entry
+    /// [`SwCost::ns_per_mac_gemm`] selects when the process resolved
+    /// the AVX2 kernel table. Defaults are estimates until a
+    /// `neuromax calibrate` run overrides them with measured values.
+    pub ns_per_mac_gemm_avx2: f64,
+    /// Per-MAC cost of the NEON 4×8 vector-accumulate kernel (see
+    /// [`SwCost::ns_per_mac_gemm_avx2`]).
+    pub ns_per_mac_gemm_neon: f64,
     /// Per-byte cost of im2col panel packing (gather + store per packed
     /// activation byte) — the price the GEMM path pays up front.
     pub gemm_pack_ns: f64,
@@ -238,7 +248,9 @@ impl SwCost {
     pub fn pooled() -> Self {
         SwCost {
             ns_per_mac: 0.7,
-            ns_per_mac_gemm: 0.45,
+            ns_per_mac_gemm_scalar: 0.45,
+            ns_per_mac_gemm_avx2: 0.18,
+            ns_per_mac_gemm_neon: 0.25,
             gemm_pack_ns: 1.2,
             gemm_setup_ns: 2_000.0,
             dispatch_ns: 6_000.0,
@@ -253,7 +265,9 @@ impl SwCost {
     pub fn scoped() -> Self {
         SwCost {
             ns_per_mac: 0.7,
-            ns_per_mac_gemm: 0.45,
+            ns_per_mac_gemm_scalar: 0.45,
+            ns_per_mac_gemm_avx2: 0.18,
+            ns_per_mac_gemm_neon: 0.25,
             gemm_pack_ns: 1.2,
             gemm_setup_ns: 2_000.0,
             dispatch_ns: 40_000.0,
@@ -262,12 +276,27 @@ impl SwCost {
         }
     }
 
-    /// The cost table for a substrate (`pooled` = persistent pool).
+    /// The cost table for a substrate (`pooled` = persistent pool),
+    /// with any installed [`CostOverride`] (a `--cost-table` from a
+    /// `neuromax calibrate` run) applied on top of the defaults.
     pub fn for_substrate(pooled: bool) -> Self {
-        if pooled {
-            Self::pooled()
-        } else {
-            Self::scoped()
+        let base = if pooled { Self::pooled() } else { Self::scoped() };
+        match COST_OVERRIDE.get() {
+            Some(o) => o.apply(base),
+            None => base,
+        }
+    }
+
+    /// The effective GEMM per-MAC cost: the entry matching the kernel
+    /// table this process resolved at startup (see
+    /// `gemm::kernel_table`), so `gemm_pays` routing and
+    /// `predicted_wall_ns` admission price the kernel that will
+    /// actually execute.
+    pub fn ns_per_mac_gemm(&self) -> f64 {
+        match kernel_table().arch {
+            "avx2" => self.ns_per_mac_gemm_avx2,
+            "neon" => self.ns_per_mac_gemm_neon,
+            _ => self.ns_per_mac_gemm_scalar,
         }
     }
 
@@ -291,10 +320,11 @@ impl SwCost {
     }
 
     /// Predicted serial wall of the packed-GEMM path: micro-kernel MACs
-    /// plus the up-front im2col pack of `pack_bytes` activation bytes
-    /// plus the fixed setup toll.
+    /// (priced per the resolved arch, [`SwCost::ns_per_mac_gemm`]) plus
+    /// the up-front im2col pack of `pack_bytes` activation bytes plus
+    /// the fixed setup toll.
     pub fn gemm_serial_ns(&self, work: u64, pack_bytes: usize) -> f64 {
-        work as f64 * self.ns_per_mac_gemm
+        work as f64 * self.ns_per_mac_gemm()
             + pack_bytes as f64 * self.gemm_pack_ns
             + self.gemm_setup_ns
     }
@@ -305,6 +335,83 @@ impl SwCost {
     pub fn gemm_pays(&self, work: u64, pack_bytes: usize) -> bool {
         work as f64 * self.ns_per_mac > self.gemm_serial_ns(work, pack_bytes)
     }
+}
+
+/// Measured cost constants from a `neuromax calibrate` run
+/// (`BENCH_calibrate.json`, loaded via `--cost-table`): each present
+/// field replaces the matching built-in default. Installed process-wide
+/// once — before the first plan compiles — and consulted by
+/// [`SwCost::for_substrate`], so every cached plan, `gemm_pays` route
+/// and deadline admission prices the machine actually running.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CostOverride {
+    pub ns_per_mac: Option<f64>,
+    pub ns_per_mac_gemm_scalar: Option<f64>,
+    pub ns_per_mac_gemm_avx2: Option<f64>,
+    pub ns_per_mac_gemm_neon: Option<f64>,
+    pub gemm_pack_ns: Option<f64>,
+}
+
+static COST_OVERRIDE: OnceLock<CostOverride> = OnceLock::new();
+
+/// Install a measured [`CostOverride`] process-wide. First install wins
+/// (returns `false` if one was already set) — plans may already be
+/// cached against the earlier table, and a mid-flight flip would desync
+/// them.
+pub fn install_cost_override(o: CostOverride) -> bool {
+    COST_OVERRIDE.set(o).is_ok()
+}
+
+impl CostOverride {
+    /// Parse the flat `neuromax-calibrate/v1` JSON table written by the
+    /// `calibrate` subcommand. Missing or non-positive entries (a
+    /// kernel this machine cannot run reports 0) leave the built-in
+    /// default in place.
+    pub fn from_json(json: &str) -> Result<CostOverride, String> {
+        if !json.contains("neuromax-calibrate/v1") {
+            return Err("not a neuromax-calibrate/v1 cost table".into());
+        }
+        Ok(CostOverride {
+            ns_per_mac: json_number(json, "ns_per_mac"),
+            ns_per_mac_gemm_scalar: json_number(json, "ns_per_mac_gemm_scalar"),
+            ns_per_mac_gemm_avx2: json_number(json, "ns_per_mac_gemm_avx2"),
+            ns_per_mac_gemm_neon: json_number(json, "ns_per_mac_gemm_neon"),
+            gemm_pack_ns: json_number(json, "gemm_pack_ns"),
+        })
+    }
+
+    fn apply(&self, mut c: SwCost) -> SwCost {
+        if let Some(v) = self.ns_per_mac {
+            c.ns_per_mac = v;
+        }
+        if let Some(v) = self.ns_per_mac_gemm_scalar {
+            c.ns_per_mac_gemm_scalar = v;
+        }
+        if let Some(v) = self.ns_per_mac_gemm_avx2 {
+            c.ns_per_mac_gemm_avx2 = v;
+        }
+        if let Some(v) = self.ns_per_mac_gemm_neon {
+            c.ns_per_mac_gemm_neon = v;
+        }
+        if let Some(v) = self.gemm_pack_ns {
+            c.gemm_pack_ns = v;
+        }
+        c
+    }
+}
+
+/// Scan `"key": <number>` out of a flat JSON object (the calibrate
+/// table nests nothing under these keys). Rejects non-positive and
+/// non-finite values.
+fn json_number(json: &str, key: &str) -> Option<f64> {
+    let needle = format!("\"{key}\":");
+    let at = json.find(&needle)? + needle.len();
+    let rest = json[at..].trim_start();
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || "+-.eE".contains(c)))
+        .unwrap_or(rest.len());
+    let v: f64 = rest[..end].parse().ok()?;
+    (v > 0.0 && v.is_finite()).then_some(v)
 }
 
 /// How one compiled step's row axis is divided across engine lanes.
@@ -324,12 +431,17 @@ pub enum Split {
 /// parallel GEMM path needs no locking and no per-call allocation.
 #[derive(Clone, Debug)]
 pub struct GemmTile {
-    /// Pixel-panel height (micro-kernel rows): 4 when every chunk has
-    /// ≥4 output pixels, degrading to 2 / 1 on tiny tails.
+    /// Pixel-panel height (micro-kernel rows): the widest MR in the
+    /// arch's kernel table that every chunk can fill, degrading down
+    /// the table's ladder on tiny tails.
     pub mr: usize,
-    /// Filter-panel width (micro-kernel columns) — fixed at
-    /// [`GEMM_NR`]; filter tails are zero-row padded inside the panel.
+    /// Filter-panel width (micro-kernel columns) — the kernel table's
+    /// NR (4 scalar, 8 SIMD); filter tails are zero-row padded inside
+    /// the panel.
     pub nr: usize,
+    /// The micro-kernel the planner selected — executed verbatim by
+    /// `run_into`/`run_batch_lockstep` with no runtime re-detection.
+    pub kernel: GemmKernel,
     /// im2col depth `kh·kw·cin`: bytes per packed pixel lane.
     pub kdim: usize,
     /// Byte offset of each chunk's scratch window, aligned with
@@ -449,8 +561,16 @@ fn plan_rows_partitioned(
     }
 }
 
+/// Tile a GEMM-routed conv step over its planned row chunks against the
+/// kernel table this process resolved at startup (see
+/// `gemm::kernel_table`). Shorthand for [`plan_gemm_tile_with`].
+pub fn plan_gemm_tile(chunks: &[(usize, usize)], rows: usize, wo: usize, kdim: usize) -> GemmTile {
+    plan_gemm_tile_with(kernel_table(), chunks, rows, wo, kdim)
+}
+
 /// Tile a GEMM-routed conv step over its planned row chunks: pick the
-/// pixel-panel height MR from the smallest chunk (4 → 2 → 1 so tails
+/// widest `(mr, nr, kernel)` entry of `table` whose MR fits the
+/// smallest chunk (tables are widest-first and end at MR=1, so tails
 /// never pack a panel taller than their pixel count) and lay out one
 /// disjoint, padded im2col scratch window per chunk via prefix sums.
 ///
@@ -460,24 +580,28 @@ fn plan_rows_partitioned(
 /// `div_ceil` subadditivity makes the sum of per-chunk windows at least
 /// the whole-step window, so a serial fallback of a parallel plan
 /// (chunk 0, all rows, offset 0) always fits in `scratch_len`.
-pub fn plan_gemm_tile(chunks: &[(usize, usize)], rows: usize, wo: usize, kdim: usize) -> GemmTile {
+pub fn plan_gemm_tile_with(
+    table: &KernelTable,
+    chunks: &[(usize, usize)],
+    rows: usize,
+    wo: usize,
+    kdim: usize,
+) -> GemmTile {
     let serial_part = [(0usize, rows)];
     let parts: &[(usize, usize)] = if chunks.is_empty() { &serial_part } else { chunks };
     let min_pixels = parts.iter().map(|&(_, r)| r * wo).min().unwrap_or(0).max(1);
-    let mr = if min_pixels >= 4 {
-        4
-    } else if min_pixels >= 2 {
-        2
-    } else {
-        1
-    };
+    let &(mr, nr, kernel) = table
+        .tiles
+        .iter()
+        .find(|&&(m, _, _)| m <= min_pixels)
+        .unwrap_or_else(|| table.tiles.last().expect("kernel table has tiles"));
     let mut scratch_off = Vec::with_capacity(parts.len());
     let mut off = 0usize;
     for &(_, r) in parts {
         scratch_off.push(off);
         off += (r * wo).div_ceil(mr) * mr * kdim;
     }
-    GemmTile { mr, nr: GEMM_NR, kdim, scratch_off, scratch_len: off }
+    GemmTile { mr, nr, kernel, kdim, scratch_off, scratch_len: off }
 }
 
 /// Plan a conv step routed to the packed-GEMM kernel: the serial-vs-
@@ -803,8 +927,18 @@ mod tests {
             let work = (rows * wo) as u64 * kdim as u64 * 8;
             let plan = plan_rows_gemm(rows, work, wo, kdim, threads, &cost, forced);
             let tile = plan.gemm.as_ref().expect("gemm plan must carry a tile");
-            crate::prop_assert!(tile.nr == GEMM_NR, "nr {}", tile.nr);
-            crate::prop_assert!([1, 2, 4].contains(&tile.mr), "mr {}", tile.mr);
+            let table = kernel_table();
+            crate::prop_assert!(
+                table
+                    .tiles
+                    .iter()
+                    .any(|&(m, n, k)| (m, n, k) == (tile.mr, tile.nr, tile.kernel)),
+                "tile {}x{} {:?} not in the {} kernel table",
+                tile.mr,
+                tile.nr,
+                tile.kernel,
+                table.arch
+            );
             let parts: Vec<(usize, usize)> = if plan.chunks.is_empty() {
                 vec![(0, rows)]
             } else {
@@ -840,6 +974,52 @@ mod tests {
             crate::prop_assert!(tile.mr <= min_pix.max(1), "mr {} > min pixels {min_pix}", tile.mr);
             Ok(())
         });
+    }
+
+    #[test]
+    fn gemm_tile_comes_from_the_arch_table_widest_first() {
+        use crate::dataflow::gemm::scalar_table;
+        // one big chunk: every table must hand out its widest entry
+        for table in [kernel_table(), scalar_table()] {
+            let tile = plan_gemm_tile_with(table, &[], 56, 56, 9 * 32);
+            let &(mr, nr, kernel) = &table.tiles[0];
+            assert_eq!((tile.mr, tile.nr, tile.kernel), (mr, nr, kernel), "{}", table.arch);
+            // a single-pixel chunk degrades to the MR=1 tail entry
+            let tiny = plan_gemm_tile_with(table, &[(0, 1)], 1, 1, 9 * 32);
+            assert_eq!(tiny.mr, 1, "{}", table.arch);
+            assert_eq!(tiny.nr, nr, "one NR per table ({})", table.arch);
+        }
+        // the scalar table's widest entry is the legacy 4×4 scalar tile
+        let t = plan_gemm_tile_with(scalar_table(), &[], 56, 56, 9 * 32);
+        assert_eq!((t.mr, t.nr, t.kernel), (4, 4, GemmKernel::Scalar));
+    }
+
+    #[test]
+    fn cost_override_parses_the_calibrate_table_and_applies() {
+        let json = r#"{
+          "schema": "neuromax-calibrate/v1",
+          "ns_per_mac": 0.9,
+          "ns_per_mac_gemm_scalar": 0.5,
+          "ns_per_mac_gemm_avx2": 0.0,
+          "gemm_pack_ns": 1.5
+        }"#;
+        let o = CostOverride::from_json(json).expect("valid table");
+        assert_eq!(o.ns_per_mac, Some(0.9));
+        assert_eq!(o.ns_per_mac_gemm_scalar, Some(0.5));
+        // non-positive (kernel absent on the calibrating machine) and
+        // missing keys both leave the built-in default in place
+        assert_eq!(o.ns_per_mac_gemm_avx2, None);
+        assert_eq!(o.ns_per_mac_gemm_neon, None);
+        assert_eq!(o.gemm_pack_ns, Some(1.5));
+        let base = SwCost::pooled();
+        let c = o.apply(base);
+        assert_eq!(c.ns_per_mac, 0.9);
+        assert_eq!(c.ns_per_mac_gemm_scalar, 0.5);
+        assert_eq!(c.ns_per_mac_gemm_avx2, base.ns_per_mac_gemm_avx2);
+        assert_eq!(c.gemm_pack_ns, 1.5);
+        assert_eq!(c.dispatch_ns, base.dispatch_ns, "non-calibrated knobs untouched");
+        // wrong schema is a typed refusal, not a silent no-op override
+        assert!(CostOverride::from_json("{\"ns_per_mac\": 1.0}").is_err());
     }
 
     #[test]

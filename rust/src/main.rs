@@ -56,12 +56,13 @@ fn main() -> Result<()> {
         Some("serve") => cmd_serve(&args[1..]),
         Some("loadgen") => cmd_loadgen(&args[1..]),
         Some("explain") => cmd_explain(&args[1..]),
+        Some("calibrate") => cmd_calibrate(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
         Some("trace") => cmd_trace(&args[1..]),
         _ => {
             eprintln!(
                 "usage: neuromax <subcommand> ...   (report | simulate | infer | verify\n\
-                 \x20        | serve | loadgen | explain | sweep | trace)\n\
+                 \x20        | serve | loadgen | explain | calibrate | sweep | trace)\n\
                  \n\
                  report  <fig1|fig17|table1|fig18|fig19|fig20|table2|table3|sec5|all>\n\
                  simulate <model> [--packing]\n\
@@ -71,6 +72,8 @@ fn main() -> Result<()> {
                  serve   [--model NAME] [--addr HOST:PORT] [--backend hlo|sim]\n\
                          [--secs N] [--batch N] [--wait-ms N] [--queue-cap N]\n\
                          [--threads N (0 = one per core)]\n\
+                         [--cost-table PATH (measured SwCost constants from\n\
+                          `neuromax calibrate` — installed before any plan)]\n\
                          [--shards N (0 = auto: cores / engine threads)]\n\
                          [--chaos SPEC e.g. seed=1,panic=10,slow=5,slow_us=2000\n\
                           — or set NEUROMAX_CHAOS; see docs/PROTOCOL.md]\n\
@@ -82,9 +85,14 @@ fn main() -> Result<()> {
                           quarantine + recovery check -> BENCH_faults.json)]\n\
                          [--chaos-spec SPEC  (override the harness fault mix)]\n\
                  explain [MODEL | --model NAME] [--threads N (0 = one per core)]\n\
+                         [--cost-table PATH]\n\
                          (compiled step-plan table: kernel, split, chunks,\n\
                           predicted hw/sw utilization — Fig. 19's software twin;\n\
                           live servers answer the same table to `EXPLAIN <model>`)\n\
+                 calibrate [--out PATH (default BENCH_calibrate.json)] [--runs N]\n\
+                         (micro-benchmark the row kernels and every arch GEMM\n\
+                          micro-kernel on this machine; the JSON it writes is\n\
+                          what serve/explain `--cost-table` loads)\n\
                  sweep\n\
                  trace   [--stride 1|2] [--cycles N]   (§5.1 pipeline waveform)\n\
                  \n\
@@ -264,7 +272,27 @@ fn cmd_verify(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Shared `--cost-table PATH` handling: load a `neuromax calibrate` JSON
+/// table and install its measured constants as the process-wide software
+/// cost model. Must run before the first plan is compiled (plans are
+/// cached per process); first install wins, later ones warn.
+fn install_cost_table(args: &[String]) -> Result<()> {
+    if let Some(path) = opt(args, "--cost-table") {
+        let json = std::fs::read_to_string(&path)
+            .with_context(|| format!("--cost-table: reading {path}"))?;
+        let o = neuromax::dataflow::CostOverride::from_json(&json)
+            .map_err(|e| anyhow::anyhow!("--cost-table {path}: {e}"))?;
+        if neuromax::dataflow::install_cost_override(o) {
+            println!("cost table: installed {path}");
+        } else {
+            eprintln!("cost table: an override is already installed; {path} ignored");
+        }
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &[String]) -> Result<()> {
+    install_cost_table(args)?;
     let addr = opt(args, "--addr").unwrap_or_else(|| "127.0.0.1:7878".into());
     let backend = match opt(args, "--backend").as_deref() {
         Some("hlo") => Backend::Hlo,
@@ -859,6 +887,7 @@ fn cmd_explain(args: &[String]) -> Result<()> {
         }
         None
     };
+    install_cost_table(args)?;
     let model = opt(args, "--model")
         .or_else(positional)
         .unwrap_or_else(|| "tinycnn".into());
@@ -880,6 +909,176 @@ fn cmd_explain(args: &[String]) -> Result<()> {
         rows,
         prog.steps.len()
     );
+    Ok(())
+}
+
+/// Micro-benchmark the conv hot-path kernels on *this* machine and write
+/// the measured per-MAC constants to a JSON cost table
+/// (`schema: neuromax-calibrate/v1`) that `serve`/`explain --cost-table`
+/// install over the built-in [`SwCost`] defaults — so GEMM-vs-row
+/// routing tracks the hardware actually serving, not the machine the
+/// defaults were tuned on.
+///
+/// Sweeps three 3×3-s1 shapes spanning the planner's routing range, and
+/// times the row kernels, the GEMM micro-kernel of every resolved arch
+/// table (detected + forced-scalar), and the im2col packer alone. Every
+/// kernel is asserted bit-exact against `Engine::conv2d` before it is
+/// timed.
+///
+/// [`SwCost`]: neuromax::dataflow::SwCost
+fn cmd_calibrate(args: &[String]) -> Result<()> {
+    use neuromax::dataflow::engine::encode_cols;
+    use neuromax::dataflow::{
+        cpu_summary, kernel_table, pack_cols, plan_gemm_tile_with, plan_rows, plan_rows_gemm,
+        scalar_table, Engine, FusedWeights, SwCost,
+    };
+    use neuromax::tensor::{Tensor3, Tensor4};
+    use neuromax::util::bench::{blackbox, time};
+
+    let out = opt(args, "--out").unwrap_or_else(|| "BENCH_calibrate.json".into());
+    let runs: usize = opt(args, "--runs").and_then(|v| v.parse().ok()).unwrap_or(5).max(1);
+
+    // serial engine + serial plans: the constants model per-lane cost —
+    // the planner multiplies out the parallelism itself
+    let eng = Engine::with_threads(1);
+    let cost = SwCost::pooled();
+    let detected = kernel_table();
+    println!("calibrate: cpu [{}], {runs} runs/shape", cpu_summary());
+
+    // tables to sweep: the portable scalar table always, plus the
+    // detected arch table when it resolved to something wider
+    let mut tables = vec![scalar_table()];
+    if detected.arch != "scalar" {
+        tables.push(detected);
+    }
+
+    let shapes = [(56usize, 56usize, 32usize, 16usize), (28, 28, 64, 64), (9, 9, 128, 128)];
+    let (mut row_ns, mut row_macs) = (0.0f64, 0u64);
+    let mut gemm_ns: Vec<(String, f64, u64)> =
+        tables.iter().map(|t| (t.arch.to_string(), 0.0, 0u64)).collect();
+    let (mut pack_ns, mut pack_bytes) = (0.0f64, 0u64);
+    let mut detail: Vec<(String, String, f64)> = Vec::new();
+
+    for (h, w, c, k) in shapes {
+        let mut rng = SplitMix64::new(23);
+        let mut a = Tensor3::new(h, w, c);
+        for v in a.data.iter_mut() {
+            *v = rng.range_i32(-12, 8);
+        }
+        let mut wc = Tensor4::new(k, 3, 3, c);
+        let mut ws = Tensor4::new(k, 3, 3, c);
+        for v in wc.data.iter_mut() {
+            *v = rng.range_i32(-12, 8);
+        }
+        for v in ws.data.iter_mut() {
+            *v = rng.sign();
+        }
+        let fw = FusedWeights::fuse(&wc, &ws);
+        let (ho, wo) = (h - 2, w - 2); // 3x3 s1
+        let kdim = fw.kdim();
+        let macs = (ho * wo * 9 * c * k) as u64;
+        let shape = format!("{h}x{w}x{c}x{k}");
+        let mut cols = Vec::new();
+        encode_cols(&a.data, &mut cols);
+        let want = eng.conv2d(&a, &fw, 1).data;
+
+        // row kernels
+        let rplan = plan_rows(ho, macs, 1, &cost);
+        let mut rout = vec![0i32; ho * wo * k];
+        eng.conv2d_cols_plan(&cols, h, w, &fw, 1, &mut rout, &rplan, false, None);
+        assert_eq!(rout, want, "row path must be bit-exact before timing ({shape})");
+        let m = time(runs, || {
+            eng.conv2d_cols_plan(&cols, h, w, &fw, 1, &mut rout, &rplan, false, None);
+            blackbox(&rout);
+        });
+        row_ns += m.median.as_nanos() as f64;
+        row_macs += macs;
+        detail.push((shape.clone(), "rows".into(), m.median.as_nanos() as f64 / macs as f64));
+
+        // each arch table's planned GEMM tile over the same plan chunks
+        let gplan = plan_rows_gemm(ho, macs, wo, kdim, 1, &cost, false);
+        for (ti, table) in tables.iter().enumerate() {
+            let tile = plan_gemm_tile_with(table, &gplan.chunks, ho, wo, kdim);
+            let mut scratch = vec![0u8; tile.scratch_len];
+            let mut gout = vec![0i32; ho * wo * k];
+            eng.conv2d_gemm_plan(
+                &cols, h, w, &fw, 1, &mut gout, &gplan, &tile, false, None, &mut scratch,
+            );
+            assert_eq!(
+                gout, want,
+                "GEMM {} kernel must be bit-exact before timing ({shape})",
+                table.arch
+            );
+            let m = time(runs, || {
+                eng.conv2d_gemm_plan(
+                    &cols, h, w, &fw, 1, &mut gout, &gplan, &tile, false, None, &mut scratch,
+                );
+                blackbox(&gout);
+            });
+            gemm_ns[ti].1 += m.median.as_nanos() as f64;
+            gemm_ns[ti].2 += macs;
+            detail.push((
+                shape.clone(),
+                format!("gemm {}x{} {}", tile.mr, tile.nr, table.arch),
+                m.median.as_nanos() as f64 / macs as f64,
+            ));
+        }
+
+        // im2col packing alone — the up-front price the GEMM path pays
+        let mr = plan_gemm_tile_with(scalar_table(), &gplan.chunks, ho, wo, kdim).mr;
+        let npix = ho * wo;
+        let mut dst = vec![0u8; npix.div_ceil(mr) * mr * kdim];
+        let m = time(runs, || {
+            pack_cols(&cols, w, c, 3, 3, 1, wo, 0, npix, mr, &mut dst);
+            blackbox(&dst);
+        });
+        pack_ns += m.median.as_nanos() as f64;
+        pack_bytes += (npix * kdim) as u64;
+    }
+
+    let ns_per_mac = row_ns / row_macs.max(1) as f64;
+    let gemm_pack_ns = pack_ns / pack_bytes.max(1) as f64;
+    let per_arch: Vec<(String, f64)> = gemm_ns
+        .iter()
+        .map(|(arch, ns, macs)| (arch.clone(), ns / (*macs).max(1) as f64))
+        .collect();
+    // absent arches write 0.0 — CostOverride::from_json treats
+    // non-positive values as "not calibrated" and keeps the default
+    let arch_val =
+        |name: &str| per_arch.iter().find(|(a, _)| a == name).map(|&(_, v)| v).unwrap_or(0.0);
+
+    println!("\n  {:<24} {:>12}", "kernel", "ns/MAC");
+    println!("  {:<24} {ns_per_mac:>12.4}", "rows (serial)");
+    for (arch, v) in &per_arch {
+        println!("  {:<24} {v:>12.4}", format!("gemm {arch}"));
+    }
+    println!("  {:<24} {gemm_pack_ns:>12.4}  (ns/byte)", "im2col pack");
+    for (shape, kernel, v) in &detail {
+        println!("    {shape:<18} {kernel:<22} {v:.4} ns/MAC");
+    }
+
+    // flat calibrated keys first: CostOverride::from_json takes the
+    // first occurrence of each key, so the detail rows (which reuse
+    // "ns_per_mac") must come after them
+    let mut json = String::from("{\n  \"schema\": \"neuromax-calibrate/v1\",\n");
+    json.push_str(&format!("  \"cpu\": \"{}\",\n  \"runs\": {runs},\n", cpu_summary()));
+    json.push_str(&format!("  \"ns_per_mac\": {ns_per_mac:.4},\n"));
+    json.push_str(&format!("  \"ns_per_mac_gemm_scalar\": {:.4},\n", arch_val("scalar")));
+    json.push_str(&format!("  \"ns_per_mac_gemm_avx2\": {:.4},\n", arch_val("avx2")));
+    json.push_str(&format!("  \"ns_per_mac_gemm_neon\": {:.4},\n", arch_val("neon")));
+    json.push_str(&format!("  \"gemm_pack_ns\": {gemm_pack_ns:.4},\n"));
+    json.push_str("  \"detail\": [");
+    for (i, (shape, kernel, v)) in detail.iter().enumerate() {
+        if i > 0 {
+            json.push(',');
+        }
+        json.push_str(&format!(
+            "\n    {{\"shape\": \"{shape}\", \"kernel\": \"{kernel}\", \"ns_per_mac\": {v:.4}}}"
+        ));
+    }
+    json.push_str("\n  ]\n}\n");
+    std::fs::write(&out, &json).with_context(|| format!("writing {out}"))?;
+    println!("\nwrote {out} (load with `neuromax serve|explain --cost-table {out}`)");
     Ok(())
 }
 

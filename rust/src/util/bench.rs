@@ -64,6 +64,10 @@ pub struct BenchEntry {
     pub max_ns: u128,
     pub units: u64,
     pub unit: String,
+    /// Micro-kernel arch the row measured (`avx2`/`neon`/`scalar`),
+    /// empty for rows where the kernel arch is not the variable —
+    /// lets scalar-vs-SIMD rows be compared across machines and runs.
+    pub arch: String,
 }
 
 impl BenchEntry {
@@ -96,6 +100,13 @@ impl BenchLog {
 
     /// Print the standard bench line AND record it for the JSON report.
     pub fn report(&mut self, name: &str, m: Measurement, units: u64, unit: &str) {
+        self.report_arch(name, m, units, unit, "");
+    }
+
+    /// [`BenchLog::report`] with an explicit micro-kernel `arch` column
+    /// (`avx2`/`neon`/`scalar`) — the GEM scalar-vs-SIMD rows use this
+    /// so runs on different machines stay comparable.
+    pub fn report_arch(&mut self, name: &str, m: Measurement, units: u64, unit: &str, arch: &str) {
         report(name, m, units, unit);
         self.entries.push(BenchEntry {
             name: name.to_string(),
@@ -104,6 +115,7 @@ impl BenchLog {
             max_ns: m.max.as_nanos(),
             units,
             unit: unit.to_string(),
+            arch: arch.to_string(),
         });
     }
 
@@ -116,7 +128,7 @@ impl BenchLog {
             }
             s.push_str(&format!(
                 "\n    {{\"name\": \"{}\", \"median_ns\": {}, \"min_ns\": {}, \
-                 \"max_ns\": {}, \"units\": {}, \"unit\": \"{}\", \
+                 \"max_ns\": {}, \"units\": {}, \"unit\": \"{}\", \"arch\": \"{}\", \
                  \"ns_per_unit\": {:.4}, \"units_per_s\": {:.1}}}",
                 json_escape(&e.name),
                 e.median_ns,
@@ -124,6 +136,7 @@ impl BenchLog {
                 e.max_ns,
                 e.units,
                 json_escape(&e.unit),
+                json_escape(&e.arch),
                 e.ns_per_unit(),
                 e.units_per_s(),
             ));
@@ -190,11 +203,15 @@ mod tests {
             runs: 3,
         };
         log.report("L3b \"quoted\" name", m, 3, "MAC");
+        log.report_arch("GEM conv gemm", m, 3, "MAC", "avx2");
         let j = log.to_json();
         assert!(j.contains("\"schema\": \"neuromax-bench/v1\""), "{j}");
         assert!(j.contains("\\\"quoted\\\""), "{j}");
         assert!(j.contains("\"median_ns\": 1500"), "{j}");
         assert!(j.contains("\"ns_per_unit\": 500.0000"), "{j}");
+        // arch column: explicit on report_arch rows, empty otherwise
+        assert!(j.contains("\"arch\": \"avx2\""), "{j}");
+        assert!(j.contains("\"arch\": \"\""), "{j}");
         // balanced braces/brackets (cheap well-formedness check)
         assert_eq!(j.matches('{').count(), j.matches('}').count());
         assert_eq!(j.matches('[').count(), j.matches(']').count());
@@ -209,6 +226,7 @@ mod tests {
             max_ns: 3,
             units: 4,
             unit: "op".into(),
+            arch: String::new(),
         };
         assert!((e.ns_per_unit() - 5e8).abs() < 1e-6);
         assert!((e.units_per_s() - 2.0).abs() < 1e-9);

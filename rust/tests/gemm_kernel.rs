@@ -1,16 +1,23 @@
 //! Packed LUT-GEMM pins: the planner-routed GEMM conv path must be
 //! bit-exact against `exec::conv2d` (the reference executor) across
 //! random shapes, strides, thread counts and substrates, with requant
-//! folded into the tile epilogue; and the panel packers must round-trip
-//! against the naive gather on ragged edges (K not a multiple of the
-//! panel width, fewer output pixels than the tile height, channels=1).
+//! folded into the tile epilogue — for the micro-kernel of **every**
+//! arch kernel table this process can resolve (the detected table AND
+//! the portable scalar table, so a SIMD machine still pins the scalar
+//! fallback it would run under `NEUROMAX_FORCE_SCALAR=1`). The panel
+//! packers must round-trip against the naive gather at each table NR on
+//! ragged edges (K not a multiple of the panel width, fewer output
+//! pixels than the tile height, channels=1), and degenerate packs are a
+//! typed error, never a silent all-zero panel.
 //!
-//! Bit-exactness is the whole contract: the GEMM-vs-row choice is pure
-//! performance (see `dataflow::gemm`), so any diverging bit is a bug.
+//! Bit-exactness is the whole contract: the GEMM-vs-row choice and the
+//! scalar-vs-SIMD choice are pure performance (see `dataflow::gemm`),
+//! so any diverging bit is a bug.
 
 use neuromax::dataflow::engine::{encode_cols, fuse_row, FusedWeights};
 use neuromax::dataflow::{
-    exec, pack_cols, pack_weight_panels, plan_rows_gemm, Engine, SwCost, WorkerPool, GEMM_NR,
+    exec, kernel_table, pack_cols, pack_weight_panels, plan_gemm_tile_with, plan_rows_gemm,
+    scalar_table, Engine, PackError, SwCost, WorkerPool, GEMM_NR,
 };
 use neuromax::lns::logquant::ZERO_CODE;
 use neuromax::lns::tables::requant_act;
@@ -73,41 +80,65 @@ fn gemm_path_is_bit_exact_vs_exec_across_random_shapes() {
                     &SwCost::pooled(),
                     forced,
                 );
-                let tile = plan.gemm.clone().expect("gemm plan carries a tile");
-                neuromax::prop_assert!(
-                    tile.nr == GEMM_NR && [1, 2, 4].contains(&tile.mr),
-                    "bad tile {}x{}",
-                    tile.mr,
-                    tile.nr
-                );
-                let mut scratch = vec![0u8; tile.scratch_len];
-                for requant in [false, true] {
-                    let mut got = vec![7i32; want.len()];
-                    eng.conv2d_gemm_plan(
-                        &cols,
-                        h,
-                        w,
-                        &fw,
-                        stride,
-                        &mut got,
-                        &plan,
-                        &tile,
-                        requant,
-                        None,
-                        &mut scratch,
-                    );
-                    let mut expect = want.data.clone();
-                    if requant {
-                        for v in expect.iter_mut() {
-                            *v = requant_act(*v);
-                        }
-                    }
+                // differential sweep: the detected arch table (what the
+                // planner actually picked — the plan's own tile) AND the
+                // portable scalar table, so SIMD machines also pin their
+                // forced-scalar fallback against the reference executor
+                let mut tables = vec![kernel_table()];
+                if kernel_table().arch != "scalar" {
+                    tables.push(scalar_table());
+                }
+                for table in tables {
+                    let tile = if std::ptr::eq(table, kernel_table()) {
+                        plan.gemm.clone().expect("gemm plan carries a tile")
+                    } else {
+                        plan_gemm_tile_with(table, &plan.chunks, ho, wo, fw.kdim())
+                    };
                     neuromax::prop_assert!(
-                        got == expect,
-                        "GEMM diverged: h={h} w={w} c={c} k={k} kh={kh} kw={kw} \
-                         stride={stride} threads={} forced={forced} requant={requant}",
-                        eng.num_threads()
+                        table
+                            .tiles
+                            .iter()
+                            .any(|&(m, n, kn)| (m, n, kn) == (tile.mr, tile.nr, tile.kernel)),
+                        "tile {}x{} {:?} is not an entry of the {} table",
+                        tile.mr,
+                        tile.nr,
+                        tile.kernel,
+                        table.arch
                     );
+                    let mut scratch = vec![0u8; tile.scratch_len];
+                    for requant in [false, true] {
+                        let mut got = vec![7i32; want.len()];
+                        eng.conv2d_gemm_plan(
+                            &cols,
+                            h,
+                            w,
+                            &fw,
+                            stride,
+                            &mut got,
+                            &plan,
+                            &tile,
+                            requant,
+                            None,
+                            &mut scratch,
+                        );
+                        let mut expect = want.data.clone();
+                        if requant {
+                            for v in expect.iter_mut() {
+                                *v = requant_act(*v);
+                            }
+                        }
+                        neuromax::prop_assert!(
+                            got == expect,
+                            "GEMM diverged: h={h} w={w} c={c} k={k} kh={kh} kw={kw} \
+                             stride={stride} threads={} forced={forced} requant={requant} \
+                             tile={}x{} {:?} ({})",
+                            eng.num_threads(),
+                            tile.mr,
+                            tile.nr,
+                            tile.kernel,
+                            table.arch
+                        );
+                    }
                 }
             }
         }
@@ -133,25 +164,39 @@ fn panel_packers_round_trip_against_the_naive_gather() {
                 }
             })
             .collect();
-        let p = pack_weight_panels(&rows, k, kdim);
-        neuromax::prop_assert!(
-            p.nr == GEMM_NR && p.k == k && p.kdim == kdim,
-            "panel header mismatch (k={k} kdim={kdim})"
-        );
-        let padded_k = k.div_ceil(GEMM_NR) * GEMM_NR;
-        neuromax::prop_assert!(
-            p.data.len() == padded_k * kdim,
-            "panel bytes {} != {padded_k}·{kdim}",
-            p.data.len()
-        );
-        for f in 0..padded_k {
-            for t in 0..kdim {
-                let got = p.data[(f / GEMM_NR) * GEMM_NR * kdim + t * GEMM_NR + f % GEMM_NR];
-                let want = if f < k { rows[f * kdim + t] } else { 0 };
-                neuromax::prop_assert!(
-                    got == want,
-                    "weight panel (filter {f}, tap {t}) = {got}, want {want} (k={k})"
-                );
+        // every NR any kernel table can plan (scalar 4, SIMD 8), plus
+        // the legacy GEMM_NR default, deduped
+        let mut nrs: Vec<usize> = kernel_table()
+            .tiles
+            .iter()
+            .chain(scalar_table().tiles)
+            .map(|&(_, n, _)| n)
+            .chain([GEMM_NR])
+            .collect();
+        nrs.sort_unstable();
+        nrs.dedup();
+        for &nr in &nrs {
+            let p = pack_weight_panels(&rows, k, kdim, nr).expect("non-degenerate pack");
+            neuromax::prop_assert!(
+                p.nr == nr && p.k == k && p.kdim == kdim,
+                "panel header mismatch (k={k} kdim={kdim} nr={nr})"
+            );
+            let padded_k = k.div_ceil(nr) * nr;
+            neuromax::prop_assert!(
+                p.data.len() == padded_k * kdim,
+                "panel bytes {} != {padded_k}·{kdim} (nr={nr})",
+                p.data.len()
+            );
+            for f in 0..padded_k {
+                for t in 0..kdim {
+                    let got = p.data[(f / nr) * nr * kdim + t * nr + f % nr];
+                    let want = if f < k { rows[f * kdim + t] } else { 0 };
+                    neuromax::prop_assert!(
+                        got == want,
+                        "weight panel (filter {f}, tap {t}) = {got}, want {want} \
+                         (k={k} nr={nr})"
+                    );
+                }
             }
         }
         // ---- pixel panels: ragged pixel tails, c=1, strides ----
@@ -163,7 +208,7 @@ fn panel_packers_round_trip_against_the_naive_gather() {
         encode_cols(&a.data, &mut cols);
         let (ho, wo) = (out_dim(h, kh, stride), out_dim(w, kw, stride));
         let npix = ho * wo;
-        let mr = [1usize, 2, 4][rng.below(3) as usize];
+        let mr = [1usize, 2, 4, 8][rng.below(4) as usize];
         let mut dst = vec![0xAAu8; npix.div_ceil(mr) * mr * kdim];
         pack_cols(&cols, w, c, kh, kw, stride, wo, 0, npix, mr, &mut dst);
         for pb in 0..npix.div_ceil(mr) {
@@ -190,4 +235,21 @@ fn panel_packers_round_trip_against_the_naive_gather() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn degenerate_weight_packs_are_typed_errors() {
+    // k == 0 / kdim == 0 must surface as a PackError, never as a silent
+    // all-zero panel the micro-kernel would happily consume
+    assert_eq!(pack_weight_panels(&[], 0, 9, GEMM_NR), Err(PackError::ZeroFilters));
+    assert_eq!(pack_weight_panels(&[], 3, 0, GEMM_NR), Err(PackError::ZeroDepth));
+    assert_eq!(pack_weight_panels(&[], 0, 0, 8), Err(PackError::ZeroFilters), "k wins ties");
+    // the error is a real std::error::Error with a useful message
+    let e: Box<dyn std::error::Error> = Box::new(PackError::ZeroDepth);
+    assert!(e.to_string().contains("kdim"), "{e}");
+    // and the smallest valid pack still succeeds at every table NR
+    for &(_, nr, _) in kernel_table().tiles.iter().chain(scalar_table().tiles) {
+        let p = pack_weight_panels(&[fuse_row(1, 1)], 1, 1, nr).expect("1x1 pack");
+        assert_eq!(p.data.len(), nr, "one padded panel of {nr} filters");
+    }
 }
