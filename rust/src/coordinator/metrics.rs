@@ -27,6 +27,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::coordinator::health::ShardHealth;
+use crate::coordinator::replicate::{RecalGauges, ReplicaTable, SampleCell};
 use crate::util::sync::plock;
 
 /// Stable wire codes for `ERR <code> <detail>` replies. The code is
@@ -174,6 +175,10 @@ impl ShardStats {
 /// dynamic batch is split into per-model groups before execution).
 #[derive(Debug, Default)]
 pub struct ModelStats {
+    /// Jobs admitted (successfully queued) for this model — counted at
+    /// routing time, so the pool controller can compute arrival rates
+    /// without waiting for execution.
+    pub admitted: AtomicU64,
     /// Jobs answered for this model.
     pub requests: AtomicU64,
     /// Model groups executed (one engine call each).
@@ -291,6 +296,20 @@ pub struct Metrics {
     pub worker_respawns: AtomicU64,
     /// Client connections closed by the server's idle/stall reaper.
     pub reaped_conns: AtomicU64,
+    /// Jobs routed to a non-home *ready replica* of their model (the
+    /// adaptive-pool sibling of `spills`: a replica hit lands on a shard
+    /// that already holds the model's warm engine).
+    pub replica_hits: AtomicU64,
+    /// Replicas the pool controller started warming (grow actions).
+    pub replica_grows: AtomicU64,
+    /// Replicas retired after a cold window (shrink actions).
+    pub replica_shrinks: AtomicU64,
+    /// The pool's hot-model replica map (rendered as `replicas=[...]`).
+    pub replicas: ReplicaTable,
+    /// Cost-sample accumulator feeding the online recalibrator.
+    pub cost_samples: SampleCell,
+    /// Online-recalibration gauges (rendered as `recal=[...]`).
+    pub recal: RecalGauges,
     /// Per-shard execution stats; empty unless built by
     /// [`Metrics::for_shards`].
     pub shards: Vec<ShardStats>,
@@ -392,6 +411,14 @@ impl Metrics {
             self.worker_respawns.load(Ordering::Relaxed),
             self.reaped_conns.load(Ordering::Relaxed),
         ));
+        // adaptive-pool counters: appended after the fault counters,
+        // same wire-stability rule (prefix parsers unaffected)
+        s.push_str(&format!(
+            " replica_hits={} replica_grows={} replica_shrinks={}",
+            self.replica_hits.load(Ordering::Relaxed),
+            self.replica_grows.load(Ordering::Relaxed),
+            self.replica_shrinks.load(Ordering::Relaxed),
+        ));
         // the GEMM micro-kernel this process resolved at startup (arch,
         // feature tags, widest tile) — appended after the legacy prefix
         // like the fault counters, so `parse_model_gauge` and prefix
@@ -464,6 +491,16 @@ impl Metrics {
                 ));
             }
             s.push(']');
+        }
+        // adaptive-pool segments append AFTER models=[...] (the newest
+        // segments always trail; `parse_model_gauge` anchors on
+        // `models=[` and per-model segments end at `;`/`]`, so it is
+        // unaffected). Both are omitted while inactive.
+        if let Some(r) = self.replicas.render() {
+            s.push_str(&format!(" replicas=[{r}]"));
+        }
+        if let Some(r) = self.recal.render() {
+            s.push_str(&format!(" recal=[{r}]"));
         }
         s
     }
@@ -626,6 +663,51 @@ mod tests {
         assert!(s.contains("busy_unhealthy=0"), "{s}");
         assert!(s.contains("quarantines=0 recoveries=0"), "{s}");
         assert!(s.contains("panics_caught=0 worker_respawns=0 reaped_conns=0"), "{s}");
+    }
+
+    #[test]
+    fn parse_model_gauge_survives_the_replicas_and_recal_segments() {
+        let m = Metrics::for_shards(3);
+        let ms = m.model("TinyCNN");
+        ms.requests.fetch_add(2, Ordering::Relaxed);
+        ms.busy_ns.fetch_add(600, Ordering::Relaxed);
+        ms.cap_ns.fetch_add(800, Ordering::Relaxed);
+        // replicas + recal segments active — they trail models=[...]
+        m.replicas.begin_warm("TinyCNN", 2);
+        m.replicas.set_ready("TinyCNN", 2);
+        m.replicas.begin_warm("VGG16", 0);
+        m.recal.record(1, 0.812, 0.21);
+        let s = m.summary();
+        assert!(s.contains(" replicas=[TinyCNN: s2; VGG16: s0~]"), "{s}");
+        assert!(
+            s.contains(" recal=[installs=1 gen=1 rows_ns_per_mac=0.812"),
+            "{s}"
+        );
+        let models_at = s.find("models=[").unwrap();
+        assert!(models_at < s.find("replicas=[").unwrap(), "{s}");
+        assert!(s.find("replicas=[").unwrap() < s.find("recal=[").unwrap(), "{s}");
+        // the wire-format consumer still parses gauges — including for
+        // TinyCNN, whose name now ALSO appears inside replicas=[...]
+        assert_eq!(parse_model_gauge(&s, "TinyCNN", "util_pct"), Some(75.0));
+        assert!(!s.contains('\n'), "summary must stay one line: {s}");
+        // idle pools render neither segment
+        let quiet = Metrics::for_shards(2).summary();
+        assert!(!quiet.contains("replicas=["), "{quiet}");
+        assert!(!quiet.contains("recal=["), "{quiet}");
+    }
+
+    #[test]
+    fn replica_counters_append_after_the_fault_counters() {
+        let m = Metrics::default();
+        m.replica_hits.fetch_add(3, Ordering::Relaxed);
+        let s = m.summary();
+        assert!(
+            s.contains("replica_hits=3 replica_grows=0 replica_shrinks=0"),
+            "{s}"
+        );
+        let reaped = s.find("reaped_conns=").unwrap();
+        let hits = s.find("replica_hits=").unwrap();
+        assert!(reaped < hits && hits < s.find(" cpu=[").unwrap(), "{s}");
     }
 
     #[test]

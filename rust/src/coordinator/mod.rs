@@ -14,11 +14,13 @@ pub mod batcher;
 pub mod health;
 pub mod metrics;
 pub mod pipeline;
+pub mod replicate;
 pub mod reports;
 pub mod scheduler;
 pub mod server;
 pub mod shard;
 
 pub use pipeline::InferenceEngine;
+pub use replicate::{RecalPolicy, Recalibrator, ReplicationController, ReplicationPolicy};
 pub use scheduler::NetworkSchedule;
 pub use shard::ShardPool;

@@ -25,7 +25,9 @@ use crate::dataflow::program::{
     cached_program, run_batch_lockstep, ModelProgram, ProgramExecutor, ProgramPlan,
 };
 use crate::dataflow::workers::WorkerPool;
-use crate::dataflow::{default_pipeline, run_pipeline, Graph, ScheduleOptions};
+use crate::dataflow::{
+    cost_generation, default_pipeline, run_pipeline, CostSamples, Graph, ScheduleOptions,
+};
 use crate::models::layer::Network;
 use crate::models::runner::{random_input_dims, FusedNet, NetWeights};
 use crate::models::tinycnn::{self, TinyCnnWeights};
@@ -93,10 +95,13 @@ struct SimPath {
     /// no single layer descriptor states).
     program: Arc<ModelProgram>,
     fused: FusedNet,
-    /// The program plan for this engine's shape, looked up once at
-    /// construction — the batch dispatcher consults it lock-free (the
-    /// process-wide plan cache is never touched on the serving path).
-    plan: Arc<ProgramPlan>,
+    /// The program plan for this engine's shape, stamped with the cost
+    /// generation it was compiled under. Steady state this is a lock +
+    /// clone per batch (uncontended — the engine thread owns it); when
+    /// online recalibration bumps [`cost_generation`], the next batch
+    /// re-resolves through the process-wide plan cache so the snapshot
+    /// never serves stale splits.
+    plan: Mutex<(u64, Arc<ProgramPlan>)>,
     /// One executor (program + private arena) per worker lane; batch
     /// elements borrow whichever lane is free.
     execs: Vec<Mutex<ProgramExecutor>>,
@@ -104,6 +109,29 @@ struct SimPath {
     /// lane (`par_map`) path, whose width-1 lane engines cannot measure
     /// themselves against the full lane count.
     timer: PlanTimer,
+}
+
+impl SimPath {
+    /// The current-generation plan snapshot. Compares the stamped
+    /// generation against [`cost_generation`] and re-resolves through
+    /// [`ModelProgram::plans_for`] on mismatch — the serving-path half
+    /// of recalibration's cache-invalidation contract (the process
+    /// cache and the per-executor memo are the other two sites).
+    fn plan(&self) -> Arc<ProgramPlan> {
+        let gen = cost_generation();
+        let mut p = crate::util::sync::plock(&self.plan);
+        if p.0 != gen {
+            *p = (
+                gen,
+                self.program.plans_for(
+                    self.engine.num_threads(),
+                    self.engine.worker_pool().is_some(),
+                    self.engine.forced_parallel(),
+                ),
+            );
+        }
+        p.1.clone()
+    }
 }
 
 /// Borrow any currently-free executor lane. At most `execs.len()`
@@ -235,6 +263,7 @@ impl InferenceEngine {
                 let execs = (0..lanes)
                     .map(|_| Mutex::new(ProgramExecutor::new(program.clone())))
                     .collect();
+                let gen = cost_generation();
                 let plan = program.plans_for(
                     engine.num_threads(),
                     engine.worker_pool().is_some(),
@@ -244,7 +273,7 @@ impl InferenceEngine {
                     engine,
                     program,
                     fused: weights.fuse(),
-                    plan,
+                    plan: Mutex::new((gen, plan)),
                     execs,
                     timer: PlanTimer::default(),
                 })
@@ -295,6 +324,7 @@ impl InferenceEngine {
         let execs = (0..lanes)
             .map(|_| Mutex::new(ProgramExecutor::new(program.clone())))
             .collect();
+        let gen = cost_generation();
         let plan = program.plans_for(
             engine.num_threads(),
             engine.worker_pool().is_some(),
@@ -304,7 +334,7 @@ impl InferenceEngine {
             engine,
             program,
             fused: weights.fuse(),
-            plan,
+            plan: Mutex::new((gen, plan)),
             execs,
             timer: PlanTimer::default(),
         });
@@ -378,10 +408,11 @@ impl InferenceEngine {
                 let s = self.sim.as_ref().unwrap();
                 let b = inputs.len();
                 let threads = s.engine.num_threads();
+                let plan = s.plan();
                 let lockstep = b > 1
                     && b < threads
                     && s.engine.worker_pool().is_some()
-                    && s.plan.parallel_steps() > 0;
+                    && plan.parallel_steps() > 0;
                 let all: Vec<Vec<i32>> = if lockstep {
                     // collect one executor lane per element (the engine
                     // thread owns this engine, so lanes are free)
@@ -411,7 +442,7 @@ impl InferenceEngine {
                     run_batch_lockstep(
                         &s.engine,
                         &s.fused,
-                        &s.plan,
+                        &plan,
                         &mut execs,
                         &xrefs,
                         &mut outs,
@@ -503,6 +534,20 @@ impl InferenceEngine {
         self.reported_busy = busy;
         self.reported_cap = cap;
         (db, dc)
+    }
+
+    /// Drain the per-kernel-class cost samples accumulated by this
+    /// engine's executor lanes since the last call — the raw feed for
+    /// the pool's online cost recalibrator. Hlo engines report nothing,
+    /// as do lockstep batches (their shared timer interleaves elements,
+    /// so per-step attribution would be wrong and they skip sampling).
+    pub fn take_cost_samples(&mut self) -> CostSamples {
+        let mut agg = CostSamples::default();
+        let Some(s) = &self.sim else { return agg };
+        for m in &s.execs {
+            agg.merge(&crate::util::sync::plock(m).take_cost_samples());
+        }
+        agg
     }
 
     /// One end-to-end probe inference, used by the shard supervisor to
@@ -686,7 +731,7 @@ mod tests {
         )
         .unwrap();
         assert_eq!(pooled.model.name, "locktest");
-        let plan = pooled.sim.as_ref().unwrap().plan.clone();
+        let plan = pooled.sim.as_ref().unwrap().plan();
         assert!(plan.parallel_steps() > 0, "test net must qualify for lockstep");
         let mut serial = InferenceEngine::for_network(
             net,

@@ -1,0 +1,731 @@
+//! Adaptive pool control: hot-model replication + online cost
+//! recalibration — the two feedback loops that close the measurement →
+//! planning gap the static pool left open (ISSUE 10).
+//!
+//! **Replication** ([`ReplicationController`]): model-affinity dispatch
+//! caps any one model's throughput at roughly one shard — spill only
+//! borrows siblings once the home queue is already deep. The pool
+//! controller watches per-model arrival rate and measured utilization
+//! over a sliding window of ticks; when a model runs hot it *replicates*
+//! the model to an additional shard (an off-the-request-path warmup job
+//! that builds the engine and proves it with a self-test, the PR 6
+//! rebuild machinery), and the dispatcher then routes to the
+//! least-loaded *ready* member of the replica set. After enough cold
+//! windows replicas shrink back (highest index first) so warm caches
+//! aren't permanently diluted. The controller itself is pure — ticks
+//! consume explicit [`ModelObservation`]s and emit [`Action`]s — so the
+//! grow/shrink state machine is unit-testable without threads.
+//!
+//! **Recalibration** ([`Recalibrator`]): the planner prices work with
+//! shipped `SwCost` constants; the executors *measure* per-step busy
+//! nanoseconds ([`CostSamples`], per kernel class). The recalibrator
+//! folds those samples into an EWMA-smoothed observed ns/MAC per class
+//! and, once enough MACs back the estimate AND it sits outside a
+//! relative-error band around what is currently applied, emits an
+//! update that the driver installs via
+//! [`recalibrate_cost_override`](crate::dataflow::recalibrate_cost_override)
+//! — bumping the cost generation, which invalidates every plan memo
+//! (process cache, per-executor memo, `SimPath` snapshot, deadline
+//! memo). Inside the band nothing installs: steady traffic on accurate
+//! costs never churns the plan cache (the no-op guard), and installs
+//! reset the confidence accumulator so updates are rate-limited by
+//! construction.
+//!
+//! Shared state ([`ReplicaTable`], [`SampleCell`], [`RecalGauges`])
+//! lives in `Metrics` so the admission path, the engine threads, the
+//! controller thread, and the `STATS` renderer see one copy.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::dataflow::CostSamples;
+use crate::util::sync::plock;
+
+/// Knobs for the replication controller. Defaults suit the serving
+/// cadence (50 ms ticks); tests shrink the window and thresholds.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplicationPolicy {
+    /// Controller tick cadence (the supervisor heartbeat).
+    pub tick: Duration,
+    /// Sliding-window length, in ticks, for arrival/utilization rates.
+    pub window: usize,
+    /// Grow when the model's windowed measured utilization (percent,
+    /// `busy/cap` across its current members) is at least this.
+    pub grow_util_pct: f64,
+    /// ... and at least this many requests arrived over the window
+    /// (keeps idle-but-warm models from replicating on noise).
+    pub grow_min_arrivals: u64,
+    /// Hard cap on a model's replica-set size, home included.
+    pub max_replicas: usize,
+    /// Shrink one replica after this many consecutive cold windows.
+    pub cold_ticks: u32,
+    /// A window is cold when windowed utilization falls below this.
+    pub shrink_util_pct: f64,
+}
+
+impl Default for ReplicationPolicy {
+    fn default() -> Self {
+        ReplicationPolicy {
+            tick: Duration::from_millis(50),
+            window: 4,
+            grow_util_pct: 60.0,
+            grow_min_arrivals: 8,
+            max_replicas: usize::MAX, // effective cap is the shard count
+            cold_ticks: 8,
+            shrink_util_pct: 10.0,
+        }
+    }
+}
+
+/// What the driver observed for one model over the last tick.
+#[derive(Clone, Debug)]
+pub struct ModelObservation {
+    /// Canonical model name.
+    pub model: String,
+    /// The model's home shard (stable hash — always a member).
+    pub home: usize,
+    /// Current replica set, home included, ready AND warming members
+    /// (warming counts against `max_replicas` so the controller never
+    /// double-grows while a warmup is in flight).
+    pub members: Vec<usize>,
+    /// Requests admitted for this model since the last tick.
+    pub arrivals: u64,
+    /// Measured busy lane-time delta for this model, ns.
+    pub busy_ns: u64,
+    /// Lane-capacity delta over the same sections, ns.
+    pub cap_ns: u64,
+}
+
+/// One controller decision. The driver executes it: `Grow` enqueues a
+/// warm job on the target shard (and marks the table `warming`);
+/// `Shrink` enqueues a drop job (the shard's engine thread removes the
+/// engine and the table entry).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Action {
+    Grow { model: String, shard: usize },
+    Shrink { model: String, shard: usize },
+}
+
+/// Per-model sliding-window state.
+#[derive(Debug, Default)]
+struct ModelWindow {
+    /// (arrivals, busy_ns, cap_ns) per tick, newest at the back.
+    ticks: VecDeque<(u64, u64, u64)>,
+    /// Consecutive cold windows (reset by any hot/warm window).
+    cold_streak: u32,
+}
+
+impl ModelWindow {
+    fn push(&mut self, window: usize, arrivals: u64, busy: u64, cap: u64) {
+        self.ticks.push_back((arrivals, busy, cap));
+        while self.ticks.len() > window.max(1) {
+            self.ticks.pop_front();
+        }
+    }
+
+    fn arrivals(&self) -> u64 {
+        self.ticks.iter().map(|t| t.0).sum()
+    }
+
+    fn util_pct(&self) -> f64 {
+        let busy: u64 = self.ticks.iter().map(|t| t.1).sum();
+        let cap: u64 = self.ticks.iter().map(|t| t.2).sum();
+        if cap == 0 {
+            return 0.0;
+        }
+        100.0 * busy as f64 / cap as f64
+    }
+}
+
+/// The pure grow/shrink state machine. Feed it one batch of
+/// [`ModelObservation`]s per tick; it returns the [`Action`]s to take.
+/// Deterministic: grow targets the lowest-index healthy shard not yet
+/// in the member set, shrink retires the highest-index non-home member,
+/// and at most one action per model per tick.
+#[derive(Debug)]
+pub struct ReplicationController {
+    pub policy: ReplicationPolicy,
+    windows: HashMap<String, ModelWindow>,
+}
+
+impl ReplicationController {
+    pub fn new(policy: ReplicationPolicy) -> Self {
+        ReplicationController { policy, windows: HashMap::new() }
+    }
+
+    /// Advance one tick. `shards` is the pool width; `quarantined[i]`
+    /// excludes shard `i` from grow targets (a rebuilding shard is no
+    /// place to warm a replica).
+    pub fn tick(
+        &mut self,
+        shards: usize,
+        quarantined: &[bool],
+        obs: &[ModelObservation],
+    ) -> Vec<Action> {
+        let p = self.policy;
+        let mut actions = Vec::new();
+        for o in obs {
+            let w = self.windows.entry(o.model.clone()).or_default();
+            w.push(p.window, o.arrivals, o.busy_ns, o.cap_ns);
+            if w.ticks.len() < p.window.max(1) {
+                continue; // not enough history to judge either way
+            }
+            let util = w.util_pct();
+            let arrivals = w.arrivals();
+            let cap = p.max_replicas.min(shards.max(1));
+            if util >= p.grow_util_pct
+                && arrivals >= p.grow_min_arrivals
+                && o.members.len() < cap
+            {
+                w.cold_streak = 0;
+                // lowest-index healthy shard not already a member
+                let target = (0..shards).find(|i| {
+                    !o.members.contains(i)
+                        && !quarantined.get(*i).copied().unwrap_or(false)
+                });
+                if let Some(shard) = target {
+                    actions.push(Action::Grow { model: o.model.clone(), shard });
+                }
+                continue;
+            }
+            if util < p.shrink_util_pct {
+                w.cold_streak = w.cold_streak.saturating_add(1);
+            } else {
+                w.cold_streak = 0;
+            }
+            if w.cold_streak >= p.cold_ticks && o.members.len() > 1 {
+                // retire the highest-index non-home member; restart the
+                // streak so shrinks pace at one per cold_ticks epoch
+                if let Some(&shard) =
+                    o.members.iter().filter(|&&s| s != o.home).max()
+                {
+                    w.cold_streak = 0;
+                    actions.push(Action::Shrink { model: o.model.clone(), shard });
+                }
+            }
+        }
+        actions
+    }
+}
+
+/// One extra replica of a model (the home shard is implicit and never
+/// stored). `ready` flips when the warm job's self-test passed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Replica {
+    pub shard: usize,
+    pub ready: bool,
+}
+
+/// The pool's replica map: model → extra shards hosting it. Readers
+/// (the admission path, `STATS`) see warming members as not-yet-ready;
+/// the controller counts them so it never double-grows.
+#[derive(Debug, Default)]
+pub struct ReplicaTable {
+    inner: Mutex<HashMap<String, Vec<Replica>>>,
+}
+
+impl ReplicaTable {
+    /// Register a warming replica. Returns `false` (no-op) if the shard
+    /// already hosts the model.
+    pub fn begin_warm(&self, model: &str, shard: usize) -> bool {
+        let mut map = plock(&self.inner);
+        let v = map.entry(model.to_string()).or_default();
+        if v.iter().any(|r| r.shard == shard) {
+            return false;
+        }
+        v.push(Replica { shard, ready: false });
+        v.sort_by_key(|r| r.shard);
+        true
+    }
+
+    /// Mark a warming replica ready (the warm job's self-test passed).
+    pub fn set_ready(&self, model: &str, shard: usize) {
+        if let Some(v) = plock(&self.inner).get_mut(model) {
+            if let Some(r) = v.iter_mut().find(|r| r.shard == shard) {
+                r.ready = true;
+            }
+        }
+    }
+
+    /// Drop a replica (shrink, or a warmup that failed). Empty models
+    /// leave the map so `STATS` doesn't render stale segments.
+    pub fn remove(&self, model: &str, shard: usize) {
+        let mut map = plock(&self.inner);
+        if let Some(v) = map.get_mut(model) {
+            v.retain(|r| r.shard != shard);
+            if v.is_empty() {
+                map.remove(model);
+            }
+        }
+    }
+
+    /// The model's routable replica set: `home` plus every *ready*
+    /// extra, sorted ascending. Always non-empty.
+    pub fn ready_members(&self, model: &str, home: usize) -> Vec<usize> {
+        let mut m = vec![home];
+        if let Some(v) = plock(&self.inner).get(model) {
+            m.extend(v.iter().filter(|r| r.ready).map(|r| r.shard));
+        }
+        m.sort_unstable();
+        m.dedup();
+        m
+    }
+
+    /// The model's full member set (`home` + ready + warming), sorted —
+    /// what the controller sizes against.
+    pub fn members(&self, model: &str, home: usize) -> Vec<usize> {
+        let mut m = vec![home];
+        if let Some(v) = plock(&self.inner).get(model) {
+            m.extend(v.iter().map(|r| r.shard));
+        }
+        m.sort_unstable();
+        m.dedup();
+        m
+    }
+
+    /// Snapshot for rendering/driving: sorted (model, replicas) pairs.
+    pub fn snapshot(&self) -> Vec<(String, Vec<Replica>)> {
+        let map = plock(&self.inner);
+        let mut v: Vec<(String, Vec<Replica>)> =
+            map.iter().map(|(k, r)| (k.clone(), r.clone())).collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    /// Render the `replicas=[...]` STATS segment body (`None` when no
+    /// model has extra replicas — the segment is omitted entirely).
+    /// Format: `model: s<i> s<j>~; ...` where `~` marks a still-warming
+    /// member; the home shard is implicit and not listed.
+    pub fn render(&self) -> Option<String> {
+        let snap = self.snapshot();
+        if snap.is_empty() {
+            return None;
+        }
+        let mut s = String::new();
+        for (i, (model, reps)) in snap.iter().enumerate() {
+            if i > 0 {
+                s.push_str("; ");
+            }
+            s.push_str(model);
+            s.push(':');
+            for r in reps {
+                s.push_str(&format!(" s{}{}", r.shard, if r.ready { "" } else { "~" }));
+            }
+        }
+        Some(s)
+    }
+}
+
+/// Lock-free accumulator for [`CostSamples`] flowing from the engine
+/// threads to the recalibrator (one per pool, in `Metrics`).
+#[derive(Debug, Default)]
+pub struct SampleCell {
+    rows_busy_ns: AtomicU64,
+    rows_macs: AtomicU64,
+    gemm_busy_ns: AtomicU64,
+    gemm_macs: AtomicU64,
+}
+
+impl SampleCell {
+    /// Fold one engine's drained samples in (engine threads, per batch).
+    pub fn add(&self, s: &CostSamples) {
+        if s.is_empty() {
+            return;
+        }
+        self.rows_busy_ns.fetch_add(s.rows_busy_ns, Ordering::Relaxed);
+        self.rows_macs.fetch_add(s.rows_macs, Ordering::Relaxed);
+        self.gemm_busy_ns.fetch_add(s.gemm_busy_ns, Ordering::Relaxed);
+        self.gemm_macs.fetch_add(s.gemm_macs, Ordering::Relaxed);
+    }
+
+    /// Drain everything accumulated since the last call (controller
+    /// thread, once per tick).
+    pub fn drain(&self) -> CostSamples {
+        CostSamples {
+            rows_busy_ns: self.rows_busy_ns.swap(0, Ordering::Relaxed),
+            rows_macs: self.rows_macs.swap(0, Ordering::Relaxed),
+            gemm_busy_ns: self.gemm_busy_ns.swap(0, Ordering::Relaxed),
+            gemm_macs: self.gemm_macs.swap(0, Ordering::Relaxed),
+        }
+    }
+}
+
+/// Knobs for the online recalibrator.
+#[derive(Clone, Copy, Debug)]
+pub struct RecalPolicy {
+    /// EWMA weight of a new per-tick sample (0 < alpha ≤ 1).
+    pub alpha: f64,
+    /// Confidence floor: MACs that must back a class's estimate before
+    /// an install is considered. Reset on every install.
+    pub min_macs: u64,
+    /// Dead band: install only when `|ewma − applied| / applied`
+    /// exceeds this (the no-op guard — accurate costs never reinstall).
+    pub rel_err: f64,
+    /// Sanity clamp on observed ns/MAC (wild samples from tiny steps or
+    /// scheduler preemption are bounded, not believed).
+    pub min_ns_per_mac: f64,
+    pub max_ns_per_mac: f64,
+}
+
+impl Default for RecalPolicy {
+    fn default() -> Self {
+        RecalPolicy {
+            alpha: 0.3,
+            min_macs: 50_000_000,
+            rel_err: 0.25,
+            min_ns_per_mac: 0.01,
+            max_ns_per_mac: 50.0,
+        }
+    }
+}
+
+/// EWMA state for one kernel class.
+#[derive(Clone, Copy, Debug)]
+struct ClassState {
+    /// Smoothed observed ns/MAC (`None` until the first sample).
+    ewma: Option<f64>,
+    /// MACs accumulated toward the confidence floor since the last
+    /// install.
+    macs_seen: u64,
+    /// The ns/MAC this class currently plans with (shipped default
+    /// until the first install).
+    applied: f64,
+}
+
+/// A recalibration decision: the new smoothed ns/MAC to install for
+/// each class that left its dead band (`None` = leave it alone).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RecalUpdate {
+    pub rows_ns_per_mac: Option<f64>,
+    pub gemm_ns_per_mac: Option<f64>,
+}
+
+impl RecalUpdate {
+    pub fn is_empty(&self) -> bool {
+        self.rows_ns_per_mac.is_none() && self.gemm_ns_per_mac.is_none()
+    }
+}
+
+/// The pure EWMA + threshold recalibrator. One per pool; `observe` is
+/// called once per controller tick with the drained [`CostSamples`].
+/// Deterministic and bounded: samples are clamped, installs need
+/// `min_macs` of evidence, the dead band suppresses churn, and every
+/// install resets the evidence counter.
+#[derive(Debug)]
+pub struct Recalibrator {
+    pub policy: RecalPolicy,
+    rows: ClassState,
+    gemm: ClassState,
+}
+
+impl Recalibrator {
+    /// `rows_default` / `gemm_default` are the ns/MAC the planner is
+    /// using before any install (shipped `SwCost`, or a manual
+    /// `--cost-table` override) — the dead band is measured against
+    /// these until the first install replaces them.
+    pub fn new(policy: RecalPolicy, rows_default: f64, gemm_default: f64) -> Self {
+        let class = |applied: f64| ClassState { ewma: None, macs_seen: 0, applied };
+        Recalibrator { policy, rows: class(rows_default), gemm: class(gemm_default) }
+    }
+
+    /// The ns/MAC each class currently plans with (for gauges/tests).
+    pub fn applied(&self) -> (f64, f64) {
+        (self.rows.applied, self.gemm.applied)
+    }
+
+    /// Fold one tick's samples in; returns the per-class installs that
+    /// are now warranted (usually empty).
+    pub fn observe(&mut self, s: &CostSamples) -> RecalUpdate {
+        let p = self.policy;
+        RecalUpdate {
+            rows_ns_per_mac: Self::class(&mut self.rows, &p, s.rows_busy_ns, s.rows_macs),
+            gemm_ns_per_mac: Self::class(&mut self.gemm, &p, s.gemm_busy_ns, s.gemm_macs),
+        }
+    }
+
+    fn class(
+        st: &mut ClassState,
+        p: &RecalPolicy,
+        busy_ns: u64,
+        macs: u64,
+    ) -> Option<f64> {
+        if macs == 0 {
+            return None;
+        }
+        let sample =
+            (busy_ns as f64 / macs as f64).clamp(p.min_ns_per_mac, p.max_ns_per_mac);
+        st.ewma = Some(match st.ewma {
+            Some(e) => e + p.alpha * (sample - e),
+            None => sample,
+        });
+        st.macs_seen = st.macs_seen.saturating_add(macs);
+        let e = st.ewma.unwrap();
+        if st.macs_seen < p.min_macs {
+            return None;
+        }
+        let rel = (e - st.applied).abs() / st.applied.max(f64::EPSILON);
+        if rel <= p.rel_err {
+            return None; // inside the dead band: the no-op guard
+        }
+        st.applied = e;
+        st.macs_seen = 0; // fresh evidence required before the next move
+        Some(e)
+    }
+}
+
+/// `recal=[...]` STATS gauges: how many installs happened, the cost
+/// generation after the last one, and the applied ns/MAC per class
+/// (f64 bit-packed so the render path stays lock-free).
+#[derive(Debug, Default)]
+pub struct RecalGauges {
+    pub installs: AtomicU64,
+    pub generation: AtomicU64,
+    rows_bits: AtomicU64,
+    gemm_bits: AtomicU64,
+}
+
+impl RecalGauges {
+    /// Record one install (controller thread).
+    pub fn record(&self, generation: u64, rows: f64, gemm: f64) {
+        self.installs.fetch_add(1, Ordering::Relaxed);
+        self.generation.store(generation, Ordering::Relaxed);
+        self.rows_bits.store(rows.to_bits(), Ordering::Relaxed);
+        self.gemm_bits.store(gemm.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Render the `recal=[...]` segment body (`None` until the first
+    /// install — the segment is omitted while defaults are in force).
+    pub fn render(&self) -> Option<String> {
+        let n = self.installs.load(Ordering::Relaxed);
+        if n == 0 {
+            return None;
+        }
+        Some(format!(
+            "installs={} gen={} rows_ns_per_mac={:.3} gemm_ns_per_mac={:.3}",
+            n,
+            self.generation.load(Ordering::Relaxed),
+            f64::from_bits(self.rows_bits.load(Ordering::Relaxed)),
+            f64::from_bits(self.gemm_bits.load(Ordering::Relaxed)),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(window: usize) -> ReplicationPolicy {
+        ReplicationPolicy {
+            window,
+            grow_util_pct: 50.0,
+            grow_min_arrivals: 4,
+            max_replicas: usize::MAX,
+            cold_ticks: 2,
+            shrink_util_pct: 5.0,
+            ..Default::default()
+        }
+    }
+
+    fn obs(
+        model: &str,
+        home: usize,
+        members: &[usize],
+        arr: u64,
+        busy: u64,
+        cap: u64,
+    ) -> ModelObservation {
+        ModelObservation {
+            model: model.into(),
+            home,
+            members: members.to_vec(),
+            arrivals: arr,
+            busy_ns: busy,
+            cap_ns: cap,
+        }
+    }
+
+    #[test]
+    fn controller_grows_a_hot_model_to_the_lowest_free_shard() {
+        let mut c = ReplicationController::new(policy(2));
+        let none = [false; 4];
+        // first tick: window not full yet — no action either way
+        let a = c.tick(4, &none, &[obs("VGG16", 1, &[1], 10, 90, 100)]);
+        assert!(a.is_empty(), "partial window must not act: {a:?}");
+        let a = c.tick(4, &none, &[obs("VGG16", 1, &[1], 10, 90, 100)]);
+        assert_eq!(a, vec![Action::Grow { model: "VGG16".into(), shard: 0 }]);
+        // with s0 now a member, the next grow goes to s2
+        let a = c.tick(4, &none, &[obs("VGG16", 1, &[0, 1], 10, 90, 100)]);
+        assert_eq!(a, vec![Action::Grow { model: "VGG16".into(), shard: 2 }]);
+    }
+
+    #[test]
+    fn controller_respects_quarantine_and_max_replicas() {
+        let mut c = ReplicationController::new(ReplicationPolicy {
+            max_replicas: 2,
+            ..policy(1)
+        });
+        let q = [true, false, false, false];
+        let a = c.tick(4, &q, &[obs("VGG16", 1, &[1], 10, 90, 100)]);
+        // s0 is quarantined, so the lowest healthy non-member is s2
+        assert_eq!(a, vec![Action::Grow { model: "VGG16".into(), shard: 2 }]);
+        // at max_replicas=2 the hot model stops growing
+        let a = c.tick(4, &q, &[obs("VGG16", 1, &[1, 2], 10, 90, 100)]);
+        assert!(a.is_empty(), "max_replicas must cap growth: {a:?}");
+    }
+
+    #[test]
+    fn controller_shrinks_highest_index_after_cold_streak() {
+        let mut c = ReplicationController::new(policy(1));
+        let none = [false; 4];
+        let cold = |members: &[usize]| [obs("VGG16", 1, members, 0, 0, 100)];
+        let a = c.tick(4, &none, &cold(&[0, 1, 3]));
+        assert!(a.is_empty(), "one cold window is not a streak: {a:?}");
+        let a = c.tick(4, &none, &cold(&[0, 1, 3]));
+        assert_eq!(a, vec![Action::Shrink { model: "VGG16".into(), shard: 3 }]);
+        // streak restarted: the next shrink needs cold_ticks again
+        let a = c.tick(4, &none, &cold(&[0, 1]));
+        assert!(a.is_empty());
+        let a = c.tick(4, &none, &cold(&[0, 1]));
+        assert_eq!(a, vec![Action::Shrink { model: "VGG16".into(), shard: 0 }]);
+        // home alone never shrinks
+        let a = c.tick(4, &none, &cold(&[1]));
+        let a2 = c.tick(4, &none, &cold(&[1]));
+        assert!(a.is_empty() && a2.is_empty(), "home member must survive");
+    }
+
+    #[test]
+    fn warm_windows_reset_the_cold_streak() {
+        let mut c = ReplicationController::new(policy(1));
+        let none = [false; 2];
+        c.tick(2, &none, &[obs("TinyCNN", 0, &[0, 1], 0, 0, 100)]);
+        // a warm (but not hot) window intervenes: streak resets
+        c.tick(2, &none, &[obs("TinyCNN", 0, &[0, 1], 2, 30, 100)]);
+        let a = c.tick(2, &none, &[obs("TinyCNN", 0, &[0, 1], 0, 0, 100)]);
+        assert!(a.is_empty(), "streak must have been reset: {a:?}");
+    }
+
+    #[test]
+    fn replica_table_tracks_warm_ready_remove_and_renders() {
+        let t = ReplicaTable::default();
+        assert!(t.render().is_none(), "empty table renders no segment");
+        assert!(t.begin_warm("VGG16", 2));
+        assert!(!t.begin_warm("VGG16", 2), "double-warm is a no-op");
+        assert_eq!(t.ready_members("VGG16", 1), vec![1], "warming is not routable");
+        assert_eq!(t.members("VGG16", 1), vec![1, 2], "warming counts as a member");
+        assert_eq!(t.render().as_deref(), Some("VGG16: s2~"));
+        t.set_ready("VGG16", 2);
+        assert_eq!(t.ready_members("VGG16", 1), vec![1, 2]);
+        assert_eq!(t.render().as_deref(), Some("VGG16: s2"));
+        t.begin_warm("TinyCNN", 0);
+        assert_eq!(t.render().as_deref(), Some("TinyCNN: s0~; VGG16: s2"));
+        t.remove("VGG16", 2);
+        t.remove("TinyCNN", 0);
+        assert!(t.render().is_none(), "emptied models leave the map");
+        assert_eq!(t.ready_members("VGG16", 1), vec![1]);
+    }
+
+    #[test]
+    fn sample_cell_accumulates_and_drains() {
+        let c = SampleCell::default();
+        c.add(&CostSamples {
+            rows_busy_ns: 10,
+            rows_macs: 5,
+            gemm_busy_ns: 8,
+            gemm_macs: 4,
+        });
+        c.add(&CostSamples { rows_busy_ns: 2, rows_macs: 1, ..Default::default() });
+        let s = c.drain();
+        assert_eq!(s.rows_busy_ns, 12);
+        assert_eq!(s.rows_macs, 6);
+        assert_eq!(s.gemm_busy_ns, 8);
+        assert_eq!(s.gemm_macs, 4);
+        assert!(c.drain().is_empty(), "drain empties the cell");
+    }
+
+    fn recal(min_macs: u64) -> Recalibrator {
+        Recalibrator::new(
+            RecalPolicy { alpha: 0.5, min_macs, rel_err: 0.25, ..Default::default() },
+            0.7,
+            0.18,
+        )
+    }
+
+    #[test]
+    fn recalibrator_installs_after_confidence_and_band() {
+        let mut r = recal(1000);
+        // 1.4 ns/MAC observed vs 0.7 applied: way outside the band, but
+        // only 500 MACs of evidence — no install yet
+        let up = r.observe(&CostSamples {
+            rows_busy_ns: 700,
+            rows_macs: 500,
+            ..Default::default()
+        });
+        assert!(up.is_empty(), "below min_macs must not install: {up:?}");
+        // 500 more MACs at the same rate clears the floor and installs
+        // the smoothed estimate (EWMA of a constant signal = 1.4)
+        let up = r.observe(&CostSamples {
+            rows_busy_ns: 700,
+            rows_macs: 500,
+            ..Default::default()
+        });
+        let rows = up.rows_ns_per_mac.expect("confidence + band ⇒ install");
+        assert!((rows - 1.4).abs() < 1e-9, "rows={rows}");
+        assert!(up.gemm_ns_per_mac.is_none(), "no gemm samples, no gemm move");
+        assert!((r.applied().0 - 1.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn recalibrator_noop_guard_accurate_costs_never_install() {
+        let mut r = recal(100);
+        // samples that match the applied cost exactly: confidence builds
+        // forever but the dead band never opens
+        for _ in 0..50 {
+            let up = r.observe(&CostSamples {
+                rows_busy_ns: 7_000,
+                rows_macs: 10_000,
+                gemm_busy_ns: 1_800,
+                gemm_macs: 10_000,
+            });
+            assert!(up.is_empty(), "accurate costs must never churn: {up:?}");
+        }
+        assert_eq!(r.applied(), (0.7, 0.18), "applied values untouched");
+    }
+
+    #[test]
+    fn recalibrator_install_resets_evidence_and_rate_limits() {
+        let mut r = recal(1000);
+        let hot = CostSamples { rows_busy_ns: 2_000, rows_macs: 1_000, ..Default::default() };
+        let up = r.observe(&hot);
+        assert!(up.rows_ns_per_mac.is_some(), "first install");
+        // the very next tick is outside the (new) band only after the
+        // EWMA drifts AND min_macs of fresh evidence accumulates — one
+        // tick of 1000 MACs re-arms, but the EWMA now tracks ~2.0, so
+        // a same-rate tick stays inside the band: no churn
+        let up = r.observe(&hot);
+        assert!(up.is_empty(), "steady signal after install must not reinstall: {up:?}");
+    }
+
+    #[test]
+    fn recalibrator_clamps_wild_samples() {
+        let mut r = recal(1);
+        // 1 MAC costing 1 s would be 1e9 ns/MAC; the clamp bounds it
+        let up = r.observe(&CostSamples {
+            rows_busy_ns: 1_000_000_000,
+            rows_macs: 1,
+            ..Default::default()
+        });
+        let rows = up.rows_ns_per_mac.expect("outside band installs");
+        assert!(rows <= r.policy.max_ns_per_mac, "clamped: {rows}");
+    }
+
+    #[test]
+    fn recal_gauges_render_after_first_install_only() {
+        let g = RecalGauges::default();
+        assert!(g.render().is_none());
+        g.record(3, 1.234, 0.456);
+        let s = g.render().expect("renders after an install");
+        assert_eq!(s, "installs=1 gen=3 rows_ns_per_mac=1.234 gemm_ns_per_mac=0.456");
+    }
+}

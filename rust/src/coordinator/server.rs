@@ -71,7 +71,7 @@ use anyhow::Result;
 use super::batcher::BatchPolicy;
 use super::metrics::{ErrCode, Metrics};
 use super::pipeline::Backend;
-use super::shard::{Admission, Pending, ShardPool, ShardReply};
+use super::shard::{Admission, JobKind, Pending, PoolOptions, ShardPool, ShardReply};
 use crate::dataflow::engine::EngineOptions;
 use crate::models::workload;
 use crate::util::prng::SplitMix64;
@@ -255,12 +255,43 @@ impl Server {
         eopt: EngineOptions,
         shards: usize,
     ) -> Result<Server> {
+        Self::start_sharded_with_opts(
+            addr,
+            default_model,
+            backend,
+            policy,
+            eopt,
+            shards,
+            PoolOptions::default(),
+        )
+    }
+
+    /// [`Server::start_sharded`] with explicit pool options: spill
+    /// threshold, supervision policy, and the adaptive-pool loops
+    /// (hot-model replication / online cost recalibration).
+    #[allow(clippy::too_many_arguments)]
+    pub fn start_sharded_with_opts(
+        addr: &str,
+        default_model: &str,
+        backend: Backend,
+        policy: BatchPolicy,
+        eopt: EngineOptions,
+        shards: usize,
+        opts: PoolOptions,
+    ) -> Result<Server> {
         // bind before starting engine threads so a bad address doesn't
         // leave a live pool behind the error return
         let listener = TcpListener::bind(addr)?;
         listener.set_nonblocking(true)?;
         let local = listener.local_addr()?;
-        let pool = Arc::new(ShardPool::start(default_model, backend, policy, eopt, shards)?);
+        let pool = Arc::new(ShardPool::start_with_opts(
+            default_model,
+            backend,
+            policy,
+            eopt,
+            shards,
+            opts,
+        )?);
         Ok(Server {
             addr: local,
             metrics: pool.metrics.clone(),
@@ -401,6 +432,7 @@ fn handle_client(
                 metrics.requests.fetch_add(1, Ordering::Relaxed);
                 let (tx, rx) = mpsc::channel();
                 let pending = Pending {
+                    kind: JobKind::Infer,
                     model,
                     seed,
                     enqueued: Instant::now(),

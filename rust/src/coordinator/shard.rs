@@ -52,9 +52,16 @@ use super::batcher::{BatchPolicy, Batcher, Job, PushError};
 use super::health::{HealthPolicy, ShardHealth};
 use super::metrics::{ErrCode, Metrics, ModelStats};
 use super::pipeline::{Backend, InferenceEngine};
+use super::replicate::{
+    Action, ModelObservation, RecalPolicy, Recalibrator, ReplicationController,
+    ReplicationPolicy,
+};
 use crate::dataflow::engine::{resolve_threads, EngineOptions};
 use crate::dataflow::program::{cached_program, explain_rows};
 use crate::dataflow::workers::WorkerPool;
+use crate::dataflow::{
+    cost_generation, kernel_table, recalibrate_cost_override, CostOverride, SwCost,
+};
 use crate::models::workload;
 use crate::util::sync::plock;
 
@@ -77,8 +84,24 @@ pub enum ShardReply {
     Err(ErrCode),
 }
 
+/// What a queued job asks the engine thread to do. `Infer` is the
+/// request path; `Warm`/`Drop` are pool-controller control jobs riding
+/// the same queue (so they serialize with traffic on the engine thread
+/// and never race the engine map).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobKind {
+    /// Run an inference and answer the reply channel.
+    Infer,
+    /// Replica grow: build this model's engine off the request path,
+    /// prove it with a self-test, then mark the replica ready.
+    Warm,
+    /// Replica shrink: drop this model's engine from the shard cache.
+    Drop,
+}
+
 /// A pending request routed to an engine shard.
 pub struct Pending {
+    pub kind: JobKind,
     /// Canonical zoo model name (`None` = the pool's default model).
     pub model: Option<String>,
     pub seed: u64,
@@ -88,6 +111,21 @@ pub struct Pending {
     /// (missed-in-queue).
     pub deadline: Option<Duration>,
     pub reply: mpsc::Sender<ShardReply>,
+}
+
+impl Pending {
+    /// A pool-controller control job (`Warm`/`Drop`) for `model`. The
+    /// reply channel is a stub — nobody waits on control jobs.
+    fn control(kind: JobKind, model: &str) -> Pending {
+        Pending {
+            kind,
+            model: Some(model.to_string()),
+            seed: 0,
+            enqueued: Instant::now(),
+            deadline: None,
+            reply: mpsc::channel().0,
+        }
+    }
 }
 
 /// Why [`ShardPool::submit`] refused a request.
@@ -181,11 +219,73 @@ pub fn route_healthy(
     best.map(|(i, _)| i)
 }
 
+/// [`route_healthy`] generalized over a model's replica set: `members`
+/// is the sorted set of shards holding a *ready* engine for the model
+/// (home included — see `ReplicaTable::ready_members`). A shallow
+/// healthy home still wins (cache affinity); otherwise the job goes to
+/// the least-loaded healthy member (ties keep home, then the lowest
+/// index — `members` is sorted, so the first strict minimum wins). Only
+/// when every ready member is at the spill threshold (or unhealthy)
+/// does the job fall back to the global spill rule. With a singleton
+/// replica set this is exactly [`route_healthy`].
+pub fn route_replicas(
+    home: usize,
+    members: &[usize],
+    depths: &[usize],
+    spill_threshold: usize,
+    quarantined: &[bool],
+) -> Option<usize> {
+    if members.len() <= 1 || depths.is_empty() {
+        return route_healthy(home, depths, spill_threshold, quarantined);
+    }
+    let healthy = |i: usize| !quarantined.get(i).copied().unwrap_or(false);
+    let home = home.min(depths.len() - 1);
+    if healthy(home) && depths[home] < spill_threshold {
+        return Some(home);
+    }
+    let mut best = if healthy(home) { Some((home, depths[home])) } else { None };
+    for &i in members {
+        if i >= depths.len() || i == home || !healthy(i) {
+            continue;
+        }
+        match best {
+            Some((_, bd)) if depths[i] >= bd => {}
+            _ => best = Some((i, depths[i])),
+        }
+    }
+    match best {
+        // a replica with queue room beats a cold global spill
+        Some((i, d)) if d < spill_threshold => Some(i),
+        _ => route_healthy(home, depths, spill_threshold, quarantined),
+    }
+}
+
+/// Pool-level knobs beyond the batch policy: supervision, the spill
+/// threshold, and the two adaptive feedback loops. The default is the
+/// **static** pool (no replication, no recalibration) — exactly the
+/// pre-adaptive behavior; the server turns the loops on explicitly.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolOptions {
+    pub health: HealthPolicy,
+    /// Queue depth at which a model's traffic leaves its home shard
+    /// (`serve --spill-threshold`). `None` keeps the legacy default,
+    /// one full batch (`max_batch.max(1)`).
+    pub spill_threshold: Option<usize>,
+    /// Hot-model replication policy; `None` disables the controller.
+    pub replication: Option<ReplicationPolicy>,
+    /// Online cost recalibration policy; `None` disables it.
+    pub recal: Option<RecalPolicy>,
+}
+
 /// N engine shards, each an engine thread with its own bounded
 /// [`Batcher`] and its own per-model `InferenceEngine` cache.
 pub struct ShardPool {
     shards: Vec<Arc<Batcher<Pending>>>,
     handles: Mutex<Vec<thread::JoinHandle<()>>>,
+    /// The pool-controller thread (present when replication or
+    /// recalibration is enabled) and its stop flag.
+    controller: Mutex<Option<thread::JoinHandle<()>>>,
+    ctl_stop: Arc<AtomicBool>,
     draining: AtomicBool,
     pub metrics: Arc<Metrics>,
     default_model: String,
@@ -194,8 +294,10 @@ pub struct ShardPool {
     /// compiles plans against).
     engine_threads: usize,
     /// Per-model predicted single-request wall time, ns (memoized
-    /// [`ShardPool::predicted_ns`] lookups — deadline admission).
-    predicted: Mutex<HashMap<String, u64>>,
+    /// [`ShardPool::predicted_ns`] lookups — deadline admission),
+    /// stamped with the cost generation it was computed under so online
+    /// recalibration re-predicts instead of serving stale estimates.
+    predicted: Mutex<(u64, HashMap<String, u64>)>,
 }
 
 impl ShardPool {
@@ -218,13 +320,8 @@ impl ShardPool {
         )
     }
 
-    /// Validate the model/backend combination and start the engine
-    /// shards. `shards == 0` sizes the pool automatically: available
-    /// cores ÷ engine worker threads (so `--threads 0`, one worker per
-    /// core, keeps the classic single-shard layout). In the auto-threads
-    /// case the per-shard worker count is divided down so N shards never
-    /// oversubscribe the machine. `hp` tunes the supervisor (tests use
-    /// a low quarantine threshold and a short rebuild backoff).
+    /// [`ShardPool::start_with_opts`] with only the supervision policy
+    /// customized (the static pool — no adaptive loops).
     pub fn start_with_health(
         default_model: &str,
         backend: Backend,
@@ -233,6 +330,35 @@ impl ShardPool {
         shards: usize,
         hp: HealthPolicy,
     ) -> Result<ShardPool> {
+        Self::start_with_opts(
+            default_model,
+            backend,
+            policy,
+            eopt,
+            shards,
+            PoolOptions { health: hp, ..PoolOptions::default() },
+        )
+    }
+
+    /// Validate the model/backend combination and start the engine
+    /// shards. `shards == 0` sizes the pool automatically: available
+    /// cores ÷ engine worker threads (so `--threads 0`, one worker per
+    /// core, keeps the classic single-shard layout). In the auto-threads
+    /// case the per-shard worker count is divided down so N shards never
+    /// oversubscribe the machine. `opts` tunes the supervisor (tests use
+    /// a low quarantine threshold and a short rebuild backoff), the
+    /// spill threshold, and the adaptive loops — when replication or
+    /// recalibration is enabled a pool-controller thread ticks on the
+    /// supervisor cadence.
+    pub fn start_with_opts(
+        default_model: &str,
+        backend: Backend,
+        policy: BatchPolicy,
+        eopt: EngineOptions,
+        shards: usize,
+        opts: PoolOptions,
+    ) -> Result<ShardPool> {
+        let hp = opts.health;
         let Some(default) = workload::canonical_name(default_model) else {
             anyhow::bail!("unknown model `{default_model}`");
         };
@@ -315,8 +441,18 @@ impl ShardPool {
                                 let p = job.payload;
                                 let name =
                                     p.model.clone().unwrap_or_else(|| default.clone());
-                                let ms = m.model(&name);
-                                answer_err(p, ErrCode::Internal, &ms, &m);
+                                match p.kind {
+                                    // a bounced warmup aborts its replica
+                                    // (the controller may re-grow later)
+                                    JobKind::Warm => m.replicas.remove(&name, sid),
+                                    // engines are rebuilt from scratch
+                                    // anyway — the drop is moot
+                                    JobKind::Drop => {}
+                                    JobKind::Infer => {
+                                        let ms = m.model(&name);
+                                        answer_err(p, ErrCode::Internal, &ms, &m);
+                                    }
+                                }
                             }
                             if b.is_closed() {
                                 // draining while quarantined: exit rather
@@ -366,15 +502,31 @@ impl ShardPool {
                 })?;
             handles.push(handle);
         }
+        let ctl_stop = Arc::new(AtomicBool::new(false));
+        let controller = if opts.replication.is_some() || opts.recal.is_some() {
+            let m = metrics.clone();
+            let batchers = shards.clone();
+            let stop = ctl_stop.clone();
+            let (rp, rcp) = (opts.replication, opts.recal);
+            Some(
+                thread::Builder::new()
+                    .name("pool-controller".into())
+                    .spawn(move || controller_loop(&m, &batchers, &stop, rp, rcp))?,
+            )
+        } else {
+            None
+        };
         Ok(ShardPool {
             shards,
             handles: Mutex::new(handles),
+            controller: Mutex::new(controller),
+            ctl_stop,
             draining: AtomicBool::new(false),
             metrics,
             default_model: default,
-            spill_threshold: policy.max_batch.max(1),
+            spill_threshold: opts.spill_threshold.unwrap_or(policy.max_batch.max(1)).max(1),
             engine_threads: resolve_threads(eopt.num_threads),
-            predicted: Mutex::new(HashMap::new()),
+            predicted: Mutex::new((cost_generation(), HashMap::new())),
         })
     }
 
@@ -406,8 +558,16 @@ impl ShardPool {
     /// model `EXPLAIN` renders. Memoized per model; 0 for unknown models
     /// (admission rejects those earlier on the parse path).
     pub fn predicted_ns(&self, model: &str) -> u64 {
-        if let Some(&ns) = plock(&self.predicted).get(model) {
-            return ns;
+        let gen = cost_generation();
+        {
+            let mut p = plock(&self.predicted);
+            if p.0 != gen {
+                // recalibration moved the cost model: re-predict
+                p.0 = gen;
+                p.1.clear();
+            } else if let Some(&ns) = p.1.get(model) {
+                return ns;
+            }
         }
         let ns = workload::by_name(model)
             .and_then(|net| cached_program(&net).ok())
@@ -415,7 +575,10 @@ impl ShardPool {
                 prog.plans_for(self.engine_threads, true, false).predicted_wall_ns(&prog)
             })
             .unwrap_or(0);
-        plock(&self.predicted).insert(model.to_string(), ns);
+        let mut p = plock(&self.predicted);
+        if p.0 == gen {
+            p.1.insert(model.to_string(), ns);
+        }
         ns
     }
 
@@ -442,15 +605,15 @@ impl ShardPool {
             return Err(Admission::ShuttingDown);
         }
         let n = self.shards.len();
-        let (home, exec_ns) = {
-            let model = p.model.as_deref().unwrap_or(&self.default_model);
-            let exec = if p.deadline.is_some() { self.predicted_ns(model) } else { 0 };
-            (home_shard(model, n), exec)
-        };
+        let model = p.model.clone().unwrap_or_else(|| self.default_model.clone());
+        let home = home_shard(&model, n);
+        let exec_ns = if p.deadline.is_some() { self.predicted_ns(&model) } else { 0 };
         let depths = self.depths();
         let quarantined: Vec<bool> =
             self.metrics.health.iter().map(ShardHealth::is_quarantined).collect();
-        let Some(chosen) = route_healthy(home, &depths, self.spill_threshold, &quarantined)
+        let members = self.metrics.replicas.ready_members(&model, home);
+        let Some(chosen) =
+            route_replicas(home, &members, &depths, self.spill_threshold, &quarantined)
         else {
             self.metrics.dropped_unhealthy.fetch_add(1, Ordering::Relaxed);
             return Err(Admission::Unhealthy);
@@ -465,11 +628,22 @@ impl ShardPool {
                 return Err(Admission::Deadline);
             }
         }
-        match self.shards[chosen].try_push(p) {
-            Ok(()) => {
-                if chosen != home {
+        // routed-away accounting: landing on a ready replica is a
+        // `replica_hit` (the shard already holds the model's warm
+        // engine); landing anywhere else off-home stays a `spill`
+        let account = |shard: usize| {
+            self.metrics.model(&model).admitted.fetch_add(1, Ordering::Relaxed);
+            if shard != home {
+                if members.contains(&shard) {
+                    self.metrics.replica_hits.fetch_add(1, Ordering::Relaxed);
+                } else {
                     self.metrics.spills.fetch_add(1, Ordering::Relaxed);
                 }
+            }
+        };
+        match self.shards[chosen].try_push(p) {
+            Ok(()) => {
+                account(chosen);
                 Ok(chosen)
             }
             Err(PushError::Closed(_)) => {
@@ -491,9 +665,7 @@ impl ShardPool {
                     }
                 }
                 if alt != chosen && self.shards[alt].try_push(p).is_ok() {
-                    if alt != home {
-                        self.metrics.spills.fetch_add(1, Ordering::Relaxed);
-                    }
+                    account(alt);
                     return Ok(alt);
                 }
                 self.metrics.dropped_queue_full.fetch_add(1, Ordering::Relaxed);
@@ -507,6 +679,12 @@ impl ShardPool {
     /// executed and answered their reply channels. Idempotent.
     pub fn drain(&self) {
         self.draining.store(true, Ordering::Release);
+        // stop the pool controller first so no new control jobs land in
+        // the closing queues
+        self.ctl_stop.store(true, Ordering::Release);
+        if let Some(h) = plock(&self.controller).take() {
+            let _ = h.join();
+        }
         for b in &self.shards {
             b.close();
         }
@@ -537,10 +715,65 @@ fn run_batch(
     m: &Metrics,
     hp: &HealthPolicy,
 ) {
-    // group by model, preserving arrival order within a group
-    let mut groups: HashMap<String, Vec<Pending>> = HashMap::new();
+    // pool-controller control jobs run first (a Warm that lands in the
+    // same batch as the traffic that triggered it has its engine ready
+    // before the inference groups execute), then group the inference
+    // jobs by model, preserving arrival order within a group
+    let mut infer = Vec::with_capacity(batch.len());
     for job in batch {
         let p = job.payload;
+        let model = p.model.clone().unwrap_or_else(|| default.to_string());
+        match p.kind {
+            JobKind::Infer => infer.push(p),
+            JobKind::Drop => {
+                // replica shrink: the table entry is already gone (the
+                // controller removed it before routing could race), so
+                // just release the engine cache
+                engines.remove(&model);
+            }
+            JobKind::Warm => {
+                if engines.contains_key(&model) {
+                    // lazy traffic built it already — adopt it
+                    m.replicas.set_ready(&model, sid);
+                    continue;
+                }
+                let built = catch_unwind(AssertUnwindSafe(|| {
+                    let mut e = InferenceEngine::for_model_pooled(
+                        &model,
+                        backend,
+                        WEIGHT_SEED,
+                        eopt,
+                        Some(wpool.clone()),
+                    )?;
+                    // prove the replica before routing sees it — the
+                    // same contract as quarantine readmission
+                    e.self_test()?;
+                    Ok::<_, anyhow::Error>(e)
+                }));
+                match built {
+                    Ok(Ok(e)) => {
+                        engines.insert(model.clone(), e);
+                        m.replicas.set_ready(&model, sid);
+                    }
+                    Ok(Err(err)) => {
+                        eprintln!(
+                            "shard {sid}: replica warm for `{model}` failed: {err:#}"
+                        );
+                        m.replicas.remove(&model, sid);
+                    }
+                    Err(_) => {
+                        m.panics_caught.fetch_add(1, Ordering::Relaxed);
+                        m.worker_respawns
+                            .fetch_add(wpool.respawn_dead() as u64, Ordering::Relaxed);
+                        m.replicas.remove(&model, sid);
+                        record_shard_failure(sid, m, hp);
+                    }
+                }
+            }
+        }
+    }
+    let mut groups: HashMap<String, Vec<Pending>> = HashMap::new();
+    for p in infer {
         let key = p.model.clone().unwrap_or_else(|| default.to_string());
         groups.entry(key).or_default().push(p);
     }
@@ -620,6 +853,8 @@ fn run_batch(
             let (busy, cap) = engine.take_util_stats();
             ms.busy_ns.fetch_add(busy, Ordering::Relaxed);
             ms.cap_ns.fetch_add(cap, Ordering::Relaxed);
+            // per-kernel-class busy/MAC samples → the pool recalibrator
+            m.cost_samples.add(&engine.take_cost_samples());
             match outcome {
                 Ok(Ok(infs)) => {
                     for (p, inf) in jobs.into_iter().zip(infs) {
@@ -676,6 +911,112 @@ fn record_shard_failure(sid: usize, m: &Metrics, hp: &HealthPolicy) {
     if let Some(h) = m.health.get(sid) {
         if h.record_failure(hp) {
             m.quarantines.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// The pool-controller thread body: tick on the supervisor cadence,
+/// feed per-model arrival/utilization deltas into the pure
+/// [`ReplicationController`], execute its grow/shrink decisions as
+/// control jobs on the target shards' queues, and drain the pool's
+/// cost samples into the [`Recalibrator`] — installing an updated cost
+/// table (which bumps the cost generation and thereby invalidates
+/// every plan memo) when the measured ns/MAC leaves the dead band.
+fn controller_loop(
+    m: &Metrics,
+    shards: &[Arc<Batcher<Pending>>],
+    stop: &AtomicBool,
+    rp: Option<ReplicationPolicy>,
+    rcp: Option<RecalPolicy>,
+) {
+    let n = shards.len();
+    let tick = rp.map(|p| p.tick).unwrap_or(Duration::from_millis(50));
+    let mut ctl = rp.map(ReplicationController::new);
+    let mut recal = rcp.map(|p| {
+        // the dead band anchors on what the planner is actually using
+        // right now (shipped defaults, or a manual --cost-table)
+        let base = SwCost::for_substrate(true);
+        Recalibrator::new(p, base.ns_per_mac, base.ns_per_mac_gemm())
+    });
+    // per-model cumulative (admitted, busy_ns, cap_ns) at the last tick
+    let mut prev: HashMap<String, (u64, u64, u64)> = HashMap::new();
+    while !stop.load(Ordering::Acquire) {
+        // sleep in slices so drain() never waits out a long tick
+        let t0 = Instant::now();
+        while t0.elapsed() < tick {
+            if stop.load(Ordering::Acquire) {
+                return;
+            }
+            thread::sleep(tick.min(Duration::from_millis(5)));
+        }
+        if let Some(c) = ctl.as_mut() {
+            let quarantined: Vec<bool> =
+                m.health.iter().map(ShardHealth::is_quarantined).collect();
+            let mut stats: Vec<(String, Arc<ModelStats>)> = {
+                let map = plock(&m.models);
+                map.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+            };
+            stats.sort_by(|a, b| a.0.cmp(&b.0)); // deterministic action order
+            let mut obs = Vec::with_capacity(stats.len());
+            for (name, ms) in stats {
+                let adm = ms.admitted.load(Ordering::Relaxed);
+                let busy = ms.busy_ns.load(Ordering::Relaxed);
+                let cap = ms.cap_ns.load(Ordering::Relaxed);
+                let (pa, pb, pc) =
+                    prev.insert(name.clone(), (adm, busy, cap)).unwrap_or_default();
+                let home = home_shard(&name, n);
+                obs.push(ModelObservation {
+                    members: m.replicas.members(&name, home),
+                    model: name,
+                    home,
+                    arrivals: adm.saturating_sub(pa),
+                    busy_ns: busy.saturating_sub(pb),
+                    cap_ns: cap.saturating_sub(pc),
+                });
+            }
+            for a in c.tick(n, &quarantined, &obs) {
+                match a {
+                    Action::Grow { model, shard } => {
+                        if m.replicas.begin_warm(&model, shard) {
+                            m.replica_grows.fetch_add(1, Ordering::Relaxed);
+                            // unconditional push: control jobs must land
+                            // even when the queue is at admission capacity
+                            shards[shard].push(Pending::control(JobKind::Warm, &model));
+                        }
+                    }
+                    Action::Shrink { model, shard } => {
+                        // unroute first so no request races the drop,
+                        // then let the shard release the engine cache
+                        m.replicas.remove(&model, shard);
+                        m.replica_shrinks.fetch_add(1, Ordering::Relaxed);
+                        shards[shard].push(Pending::control(JobKind::Drop, &model));
+                    }
+                }
+            }
+        }
+        if let Some(r) = recal.as_mut() {
+            let s = m.cost_samples.drain();
+            if !s.is_empty() {
+                let up = r.observe(&s);
+                if !up.is_empty() {
+                    let mut delta = CostOverride {
+                        ns_per_mac: up.rows_ns_per_mac,
+                        ..Default::default()
+                    };
+                    if let Some(v) = up.gemm_ns_per_mac {
+                        // the observed GEMM rate belongs to the kernel
+                        // this process actually runs
+                        match kernel_table().arch {
+                            "avx2" => delta.ns_per_mac_gemm_avx2 = Some(v),
+                            "neon" => delta.ns_per_mac_gemm_neon = Some(v),
+                            _ => delta.ns_per_mac_gemm_scalar = Some(v),
+                        }
+                    }
+                    let gen = recalibrate_cost_override(delta);
+                    let (rows, gemm) = r.applied();
+                    m.recal.record(gen, rows, gemm);
+                }
+            }
         }
     }
 }
@@ -774,5 +1115,56 @@ mod tests {
     #[test]
     fn route_healthy_returns_none_when_everything_is_quarantined() {
         assert_eq!(route_healthy(1, &[1, 2, 3], 4, &[true, true, true]), None);
+    }
+
+    #[test]
+    fn least_loaded_tie_break_is_the_lowest_index() {
+        // spill ties (home not among the minima) resolve to the lowest
+        // index — replica routing inherits this, so it is pinned here
+        assert_eq!(route(0, &[5, 2, 3, 2, 2], 4), 1);
+        // route_healthy's quarantine-aware scan follows the same rule
+        let q = [false, false, false, true, false];
+        assert_eq!(route_healthy(3, &[9, 2, 9, 0, 2], 4, &q), Some(1));
+        // and so does the replica-member scan (members sorted, strict <)
+        let none = [false; 4];
+        assert_eq!(route_replicas(1, &[0, 1, 2], &[2, 5, 2, 0], 4, &none), Some(0));
+    }
+
+    #[test]
+    fn route_replicas_singleton_matches_the_legacy_router() {
+        let none = [false; 4];
+        for (home, depths, st) in [
+            (2usize, vec![9, 9, 1, 9], 4usize),
+            (0, vec![5, 3, 1, 2], 4),
+            (0, vec![4, 4, 4, 4], 4),
+        ] {
+            assert_eq!(
+                route_replicas(home, &[home], &depths, st, &none),
+                Some(route(home, &depths, st)),
+                "home={home} depths={depths:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn route_replicas_prefers_home_then_least_loaded_member() {
+        let none = [false; 4];
+        // a shallow home keeps the job even when a replica idles
+        assert_eq!(route_replicas(1, &[1, 3], &[0, 2, 0, 0], 4, &none), Some(1));
+        // deep home: the least-loaded ready member wins over the global
+        // minimum (s0/s2 are emptier but cold for this model)
+        assert_eq!(route_replicas(1, &[1, 3], &[0, 5, 0, 2], 4, &none), Some(3));
+        // every member saturated: fall back to the global spill rule
+        assert_eq!(route_replicas(1, &[1, 3], &[0, 4, 0, 4], 4, &none), Some(0));
+    }
+
+    #[test]
+    fn route_replicas_skips_quarantined_members() {
+        let q = [false, false, true, false];
+        // the only extra replica is quarantined: global spill applies
+        assert_eq!(route_replicas(1, &[1, 2], &[9, 5, 0, 0], 4, &q), Some(3));
+        // quarantined home with a healthy ready replica: replica wins
+        let q = [false, true, false, false];
+        assert_eq!(route_replicas(1, &[1, 3], &[9, 0, 9, 2], 4, &q), Some(3));
     }
 }

@@ -70,8 +70,9 @@ pub use program::{
     cached_program, explain_rows, run_batch_lockstep, ModelProgram, ProgramExecutor, ProgramPlan,
 };
 pub use schedule::{
-    analyze, balanced_chunks, install_cost_override, plan_gemm_tile, plan_gemm_tile_with,
-    plan_rows, plan_rows_forced, plan_rows_gemm, plan_rows_threshold, CostOverride, GemmTile,
+    analyze, balanced_chunks, cost_generation, current_cost_override, install_cost_override,
+    plan_gemm_tile, plan_gemm_tile_with, plan_rows, plan_rows_forced, plan_rows_gemm,
+    plan_rows_threshold, recalibrate_cost_override, CostOverride, CostSamples, GemmTile,
     LayerPerf, ScheduleOptions, Split, StepPlan, SwCost,
 };
 pub use workers::WorkerPool;

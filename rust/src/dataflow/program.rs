@@ -57,7 +57,8 @@ use super::gemm::gemm_chunk;
 use super::ir::{Graph, GraphError, NodeOp};
 use super::pool::{avgpool_rows, maxpool_rows};
 use super::schedule::{
-    analyze, plan_rows, plan_rows_forced, plan_rows_gemm, ScheduleOptions, Split, StepPlan, SwCost,
+    analyze, cost_generation, plan_rows, plan_rows_forced, plan_rows_gemm, CostSamples,
+    ScheduleOptions, Split, StepPlan, SwCost,
 };
 use crate::arch::config::GridConfig;
 use crate::lns::logquant::ZERO_CODE;
@@ -750,22 +751,32 @@ impl ModelProgram {
     }
 
     /// The compiled [`ProgramPlan`] for an engine shape, from the
-    /// process-wide plan cache: one plan per (program fingerprint,
-    /// lanes, substrate, forced) — shared by every executor lane and
-    /// every shard at that width, computed once. This is the "compile
-    /// time" of the cost-guided split: the serving path only ever looks
-    /// plans up.
+    /// process-wide plan cache: one plan per (program fingerprint, cost
+    /// generation, lanes, substrate, forced) — shared by every executor
+    /// lane and every shard at that width, computed once. This is the
+    /// "compile time" of the cost-guided split: the serving path only
+    /// ever looks plans up. Keying on `cost_generation` is what makes
+    /// online recalibration sound: a cost-table update bumps the
+    /// generation, every cached plan of older generations is dropped on
+    /// the next compile, and the new plans route/split against the
+    /// measured table.
     pub fn plans_for(&self, threads: usize, pooled: bool, forced: bool) -> Arc<ProgramPlan> {
-        type PlanCache = Mutex<HashMap<(u64, usize, bool, bool), Arc<ProgramPlan>>>;
+        type PlanCache = Mutex<HashMap<(u64, u64, usize, bool, bool), Arc<ProgramPlan>>>;
         static PLAN_CACHE: OnceLock<PlanCache> = OnceLock::new();
         let cache = PLAN_CACHE.get_or_init(Default::default);
-        let key = (self.fingerprint, threads, pooled, forced);
+        let gen = cost_generation();
+        let key = (self.fingerprint, gen, threads, pooled, forced);
         if let Some(p) = plock(cache).get(&key) {
             return p.clone();
         }
         let p = Arc::new(ProgramPlan::compile(self, threads, pooled, forced));
+        let mut c = plock(cache);
+        // a generation bump invalidated every older plan: drop them on
+        // this (rare, already off the steady path) miss so the cache
+        // stays bounded by the live table
+        c.retain(|k, _| k.1 == gen);
         // racing planners agree (planning is deterministic)
-        plock(cache).entry(key).or_insert(p).clone()
+        c.entry(key).or_insert(p).clone()
     }
 }
 
@@ -1080,9 +1091,12 @@ fn encode_cols_counted(src: &[i32], cols: &mut Vec<u8>, grow_events: &mut u64) {
     encode_cols(src, cols);
 }
 
-/// An engine's plan-relevant shape: (lanes, pooled substrate, forced
-/// parallelism) — the per-executor plan memo key.
-type PlanKey = (usize, bool, bool);
+/// An engine's plan-relevant shape plus the process cost generation:
+/// (generation, lanes, pooled substrate, forced parallelism) — the
+/// per-executor plan memo key. The generation component means a
+/// recalibration install invalidates the memo exactly like the global
+/// plan cache: the next run re-resolves against the new table.
+type PlanKey = (u64, usize, bool, bool);
 
 /// Executes one compiled program against a private [`ActivationArena`].
 /// Hold one per concurrent execution lane (they are cheap; all capacity
@@ -1094,11 +1108,20 @@ pub struct ProgramExecutor {
     /// Memoized plan for the last engine shape this executor ran on —
     /// skips the global plan-cache mutex on the steady-state path.
     plan_memo: Option<(PlanKey, Arc<ProgramPlan>)>,
+    /// Per-kernel-class (busy ns, MACs) accumulated by planned runs —
+    /// drained by [`ProgramExecutor::take_cost_samples`] into the
+    /// online recalibrator.
+    samples: CostSamples,
 }
 
 impl ProgramExecutor {
     pub fn new(program: Arc<ModelProgram>) -> Self {
-        ProgramExecutor { program, arena: ActivationArena::new(), plan_memo: None }
+        ProgramExecutor {
+            program,
+            arena: ActivationArena::new(),
+            plan_memo: None,
+            samples: CostSamples::default(),
+        }
     }
 
     pub fn program(&self) -> &Arc<ModelProgram> {
@@ -1109,15 +1132,30 @@ impl ProgramExecutor {
     /// the all-serial plan). Memoized per executor; allocation-free once
     /// warm.
     fn plan_for_engine(&mut self, eng: &Engine) -> Arc<ProgramPlan> {
-        let key = (eng.num_threads(), eng.worker_pool().is_some(), eng.forced_parallel());
+        let key = (
+            cost_generation(),
+            eng.num_threads(),
+            eng.worker_pool().is_some(),
+            eng.forced_parallel(),
+        );
         if let Some((k, p)) = &self.plan_memo {
             if *k == key {
                 return p.clone();
             }
         }
-        let p = self.program.plans_for(key.0, key.1, key.2);
+        let p = self.program.plans_for(key.1, key.2, key.3);
         self.plan_memo = Some((key, p.clone()));
         p
+    }
+
+    /// Drain the per-kernel-class cost samples accumulated by planned
+    /// runs since the last call — the online recalibrator's feed.
+    /// Samples come from single-request planned executions on a
+    /// multi-lane engine (the path whose `PlanTimer` deltas are
+    /// attributable to one step at a time); lockstep batches interleave
+    /// elements on a shared timer, so they contribute nothing here.
+    pub fn take_cost_samples(&mut self) -> CostSamples {
+        std::mem::take(&mut self.samples)
     }
 
     /// Measured (busy, capacity) nanoseconds of this executor's planned
@@ -1162,6 +1200,7 @@ impl ProgramExecutor {
         );
         arena.reserve_slots(prog.slot_sizes.len());
         let threads = eng.num_threads();
+        let mut samples = CostSamples::default();
         for (si, step) in prog.steps.iter().enumerate() {
             // publish the step coordinate for deterministic fault injection
             crate::util::fault::set_step(si);
@@ -1190,6 +1229,12 @@ impl ProgramExecutor {
                 // multi-lane engine (a 1-wide lane is 100% by definition)
                 let timer = if threads > 1 { Some(&arena.timer) } else { None };
                 let sp = &plan.steps[si];
+                // cost-sample bracket: the timer's busy delta across one
+                // step is that step's measured lane-time (serial wall or
+                // summed chunk busy) — divided by the step's cost-model
+                // MACs downstream, it is an observed ns/MAC for the
+                // kernel class the planner chose
+                let busy0 = timer.map(|t| t.busy_cap().0);
                 let (src, sh, sw, sc) = step_src(step, slots, x);
                 let dst = &mut outbuf[..step.out_len()];
                 let fw = fused.layers.get(step.layer).and_then(|w| w.as_ref());
@@ -1261,9 +1306,22 @@ impl ProgramExecutor {
                     }
                     Kernel::Stage => unreachable!("stage steps short-circuit above"),
                 }
+                if let (Some(t), Some(b0)) = (timer, busy0) {
+                    let busy = t.busy_cap().0.saturating_sub(b0);
+                    if busy > 0 && step.work > 0 {
+                        if sp.gemm.is_some() {
+                            samples.gemm_busy_ns += busy;
+                            samples.gemm_macs += step.work;
+                        } else {
+                            samples.rows_busy_ns += busy;
+                            samples.rows_macs += step.work;
+                        }
+                    }
+                }
             }
             arena.slots[step.out_slot] = outbuf;
         }
+        self.samples.merge(&samples);
         let (oh, ow, oc) = prog.out_dims;
         out.clear();
         out.extend_from_slice(&arena.slots[prog.out_slot][..oh * ow * oc]);
@@ -1650,8 +1708,17 @@ mod tests {
     #[test]
     fn plans_are_cached_per_engine_shape_and_cover_every_step() {
         let prog = cached_program(&workload::test_profile("vgg16").unwrap()).unwrap();
-        let a = prog.plans_for(4, true, false);
-        let b = prog.plans_for(4, true, false);
+        // two lookups under one cost generation share one Arc (a
+        // concurrent test may bump the generation — which legitimately
+        // recompiles — so retry until a bump-free pair is observed)
+        let (a, b) = loop {
+            let g = cost_generation();
+            let a = prog.plans_for(4, true, false);
+            let b = prog.plans_for(4, true, false);
+            if cost_generation() == g {
+                break (a, b);
+            }
+        };
         assert!(Arc::ptr_eq(&a, &b), "same shape must share one plan");
         assert_eq!(a.steps.len(), prog.steps.len(), "one StepPlan per step");
         let serial = prog.plans_for(1, true, false);

@@ -17,9 +17,11 @@
 //! * 1×1: channels spread over matrix columns (3/matrix → 18 in parallel),
 //!   6 pixels per matrix row, 3 filters per thread triple (Fig. 11/12).
 
-use std::sync::OnceLock;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use super::gemm::{kernel_table, GemmKernel, KernelTable};
+use crate::util::sync::plock;
 use super::tile::{self, Traffic};
 use crate::arch::config::GridConfig;
 use crate::models::layer::{LayerDesc, Op};
@@ -277,11 +279,14 @@ impl SwCost {
     }
 
     /// The cost table for a substrate (`pooled` = persistent pool),
-    /// with any installed [`CostOverride`] (a `--cost-table` from a
-    /// `neuromax calibrate` run) applied on top of the defaults.
+    /// with the process's current [`CostOverride`] (a `--cost-table`
+    /// from a `neuromax calibrate` run and/or fields installed by the
+    /// online recalibrator) applied on top of the defaults. Callers
+    /// that cache anything derived from this table must key the cache
+    /// on [`cost_generation`].
     pub fn for_substrate(pooled: bool) -> Self {
         let base = if pooled { Self::pooled() } else { Self::scoped() };
-        match COST_OVERRIDE.get() {
+        match plock(&COST_STORE).over {
             Some(o) => o.apply(base),
             None => base,
         }
@@ -352,14 +357,64 @@ pub struct CostOverride {
     pub gemm_pack_ns: Option<f64>,
 }
 
-static COST_OVERRIDE: OnceLock<CostOverride> = OnceLock::new();
+/// The process-wide measured-cost store: the current [`CostOverride`]
+/// contents plus a flag recording whether a *manual* `--cost-table`
+/// install happened (that path keeps its PR 9 first-install-wins
+/// contract). Every content change bumps [`COST_GEN`], the monotonic
+/// generation every plan cache keys on — a mid-flight update therefore
+/// *invalidates* cached plans instead of desyncing them.
+struct CostStore {
+    over: Option<CostOverride>,
+    manual: bool,
+}
 
-/// Install a measured [`CostOverride`] process-wide. First install wins
-/// (returns `false` if one was already set) — plans may already be
-/// cached against the earlier table, and a mid-flight flip would desync
-/// them.
+static COST_STORE: Mutex<CostStore> = Mutex::new(CostStore { over: None, manual: false });
+static COST_GEN: AtomicU64 = AtomicU64::new(0);
+
+/// Install a measured [`CostOverride`] process-wide (the manual
+/// `--cost-table` path). First manual install wins — returns `false`
+/// without touching the table if one was already installed. A manual
+/// table is a full `neuromax calibrate` run, so it *replaces* any
+/// fields the online recalibrator installed earlier rather than
+/// merging under them, and bumps the cost generation so cached plans
+/// recompile against it.
 pub fn install_cost_override(o: CostOverride) -> bool {
-    COST_OVERRIDE.set(o).is_ok()
+    let mut s = plock(&COST_STORE);
+    if s.manual {
+        return false;
+    }
+    s.manual = true;
+    s.over = Some(o);
+    COST_GEN.fetch_add(1, Ordering::Release);
+    true
+}
+
+/// Merge measured fields from the online recalibrator over the current
+/// override contents (fields absent in `delta` keep their current
+/// value) and bump the cost generation. Unlike
+/// [`install_cost_override`] this is expected to run mid-flight: the
+/// plan caches carry [`cost_generation`] in their key, so `StepPlan`s,
+/// `gemm_pays` routing, and deadline admission all recompile against
+/// the updated table on their next lookup. Returns the new generation.
+pub fn recalibrate_cost_override(delta: CostOverride) -> u64 {
+    let mut s = plock(&COST_STORE);
+    let base = s.over.unwrap_or_default();
+    s.over = Some(delta.merge_over(base));
+    COST_GEN.fetch_add(1, Ordering::Release) + 1
+}
+
+/// Monotonic generation of the process cost table: 0 until the first
+/// override install, bumped by every [`install_cost_override`] /
+/// [`recalibrate_cost_override`]. Anything caching plans or
+/// predictions derived from [`SwCost::for_substrate`] keys on this.
+pub fn cost_generation() -> u64 {
+    COST_GEN.load(Ordering::Acquire)
+}
+
+/// The currently installed override contents (`None` before any
+/// install) — surfaced by the `STATS` recalibration gauges and tests.
+pub fn current_cost_override() -> Option<CostOverride> {
+    plock(&COST_STORE).over
 }
 
 impl CostOverride {
@@ -380,6 +435,20 @@ impl CostOverride {
         })
     }
 
+    /// Overlay: fields present in `self` replace `base`'s, absent
+    /// fields keep whatever `base` carried. The recalibrator installs
+    /// single-field deltas through this so one measured kernel class
+    /// never clobbers another's earlier calibration.
+    pub fn merge_over(&self, base: CostOverride) -> CostOverride {
+        CostOverride {
+            ns_per_mac: self.ns_per_mac.or(base.ns_per_mac),
+            ns_per_mac_gemm_scalar: self.ns_per_mac_gemm_scalar.or(base.ns_per_mac_gemm_scalar),
+            ns_per_mac_gemm_avx2: self.ns_per_mac_gemm_avx2.or(base.ns_per_mac_gemm_avx2),
+            ns_per_mac_gemm_neon: self.ns_per_mac_gemm_neon.or(base.ns_per_mac_gemm_neon),
+            gemm_pack_ns: self.gemm_pack_ns.or(base.gemm_pack_ns),
+        }
+    }
+
     fn apply(&self, mut c: SwCost) -> SwCost {
         if let Some(v) = self.ns_per_mac {
             c.ns_per_mac = v;
@@ -397,6 +466,40 @@ impl CostOverride {
             c.gemm_pack_ns = v;
         }
         c
+    }
+}
+
+/// Aggregated per-kernel-class execution samples: total measured
+/// busy-lane nanoseconds and cost-model work (LUT-MACs / element ops)
+/// of the program steps that produced them, split by the class whose
+/// cost constant they evidence — `gemm` for steps the planner routed to
+/// the packed-GEMM micro-kernel (priced by the arch's
+/// `ns_per_mac_gemm_*`), `rows` for everything else (priced by
+/// `ns_per_mac`). Collected per step by `ProgramExecutor::run_into`,
+/// drained batch-by-batch up through the pipeline into the pool
+/// metrics, and consumed by the online recalibrator: `busy_ns / macs`
+/// is an observed ns/MAC for the class.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CostSamples {
+    pub rows_busy_ns: u64,
+    pub rows_macs: u64,
+    pub gemm_busy_ns: u64,
+    pub gemm_macs: u64,
+}
+
+impl CostSamples {
+    /// Fold another sample batch into this one (saturating — these are
+    /// cumulative counters, not rates).
+    pub fn merge(&mut self, o: &CostSamples) {
+        self.rows_busy_ns = self.rows_busy_ns.saturating_add(o.rows_busy_ns);
+        self.rows_macs = self.rows_macs.saturating_add(o.rows_macs);
+        self.gemm_busy_ns = self.gemm_busy_ns.saturating_add(o.gemm_busy_ns);
+        self.gemm_macs = self.gemm_macs.saturating_add(o.gemm_macs);
+    }
+
+    /// True when no step contributed anything measurable.
+    pub fn is_empty(&self) -> bool {
+        *self == CostSamples::default()
     }
 }
 
@@ -1020,6 +1123,59 @@ mod tests {
         assert_eq!(c.dispatch_ns, base.dispatch_ns, "non-calibrated knobs untouched");
         // wrong schema is a typed refusal, not a silent no-op override
         assert!(CostOverride::from_json("{\"ns_per_mac\": 1.0}").is_err());
+    }
+
+    #[test]
+    fn cost_override_merge_over_is_field_wise() {
+        let base = CostOverride { ns_per_mac: Some(0.9), gemm_pack_ns: Some(1.5), ..Default::default() };
+        let delta = CostOverride { ns_per_mac: Some(0.8), ns_per_mac_gemm_neon: Some(0.3), ..Default::default() };
+        let m = delta.merge_over(base);
+        assert_eq!(m.ns_per_mac, Some(0.8), "present delta field replaces");
+        assert_eq!(m.gemm_pack_ns, Some(1.5), "absent delta field keeps base");
+        assert_eq!(m.ns_per_mac_gemm_neon, Some(0.3), "new delta field lands");
+        assert_eq!(m.ns_per_mac_gemm_avx2, None, "absent everywhere stays absent");
+        // merging the empty delta is the identity
+        assert_eq!(CostOverride::default().merge_over(base), base);
+    }
+
+    #[test]
+    fn recalibrate_bumps_the_cost_generation_monotonically() {
+        // NOTE: this test shares process-global state with the whole lib
+        // suite, so it installs only *default-valued* fields — every
+        // number below equals the built-in table, which keeps
+        // `for_substrate` numerically inert for concurrently running
+        // tests while still exercising the generation counter. The
+        // behavior-changing flips live in `tests/recalibrate.rs`, a
+        // separate test process.
+        let g0 = cost_generation();
+        let inert = CostOverride { ns_per_mac: Some(0.7), ..Default::default() };
+        let g1 = recalibrate_cost_override(inert);
+        assert!(g1 > g0, "generation must advance ({g0} -> {g1})");
+        assert_eq!(cost_generation(), g1);
+        let over = current_cost_override().expect("override installed");
+        assert_eq!(over.ns_per_mac, Some(0.7));
+        // the installed table prices identically to the defaults
+        let base = SwCost::pooled();
+        let eff = SwCost::for_substrate(true);
+        assert_eq!(eff.ns_per_mac, base.ns_per_mac);
+        assert_eq!(eff.chunks_per_worker, base.chunks_per_worker);
+        // a second recalibrate merges and bumps again
+        let g2 = recalibrate_cost_override(CostOverride::default());
+        assert!(g2 > g1);
+        assert_eq!(current_cost_override().expect("still installed").ns_per_mac, Some(0.7));
+    }
+
+    #[test]
+    fn cost_samples_merge_and_emptiness() {
+        let mut a = CostSamples::default();
+        assert!(a.is_empty());
+        a.merge(&CostSamples { rows_busy_ns: 10, rows_macs: 5, gemm_busy_ns: 2, gemm_macs: 1 });
+        a.merge(&CostSamples { rows_busy_ns: 1, rows_macs: 1, gemm_busy_ns: 0, gemm_macs: 0 });
+        assert_eq!(a, CostSamples { rows_busy_ns: 11, rows_macs: 6, gemm_busy_ns: 2, gemm_macs: 1 });
+        assert!(!a.is_empty());
+        // saturating, never wrapping
+        a.merge(&CostSamples { rows_busy_ns: u64::MAX, rows_macs: 0, gemm_busy_ns: 0, gemm_macs: 0 });
+        assert_eq!(a.rows_busy_ns, u64::MAX);
     }
 
     #[test]

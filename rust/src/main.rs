@@ -26,7 +26,9 @@ use neuromax::coordinator::batcher::BatchPolicy;
 use neuromax::coordinator::health::HealthState;
 use neuromax::coordinator::metrics::parse_model_gauge;
 use neuromax::coordinator::pipeline::{Backend, InferenceEngine};
+use neuromax::coordinator::replicate::{RecalPolicy, ReplicationPolicy};
 use neuromax::coordinator::reports;
+use neuromax::coordinator::shard::PoolOptions;
 use neuromax::coordinator::server::{busy_backoff_us, Client, Reply, Server};
 use neuromax::coordinator::NetworkSchedule;
 use neuromax::dataflow::engine::resolve_threads;
@@ -72,14 +74,21 @@ fn main() -> Result<()> {
                  serve   [--model NAME] [--addr HOST:PORT] [--backend hlo|sim]\n\
                          [--secs N] [--batch N] [--wait-ms N] [--queue-cap N]\n\
                          [--threads N (0 = one per core)]\n\
+                         [--spill-threshold N (route off the home shard when\n\
+                          its queue is this deep; default: batch size)]\n\
+                         [--adaptive (hot-model replication + online cost\n\
+                          recalibration — see docs/PROTOCOL.md)]\n\
                          [--cost-table PATH (measured SwCost constants from\n\
                           `neuromax calibrate` — installed before any plan)]\n\
                          [--shards N (0 = auto: cores / engine threads)]\n\
                          [--chaos SPEC e.g. seed=1,panic=10,slow=5,slow_us=2000\n\
                           — or set NEUROMAX_CHAOS; see docs/PROTOCOL.md]\n\
                  loadgen [--shards LIST e.g. 1,2,4] [--conns N] [--requests N]\n\
-                         [--mix name:w,name:w] [--batch N] [--wait-ms N]\n\
+                         [--mix name:w,name:w | hotspot | diurnal]\n\
+                         [--batch N] [--wait-ms N]\n\
                          [--queue-cap N] [--threads N] [--out PATH]\n\
+                         (each shard count runs twice — static affinity pool\n\
+                          vs adaptive replicated pool -> BENCH_serve.json)\n\
                          [--chaos  (deterministic fault-injection harness:\n\
                           2 shards, injected panics/slow-chunks/torn replies,\n\
                           quarantine + recovery check -> BENCH_faults.json)]\n\
@@ -319,22 +328,35 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         neuromax::util::fault::silence_injected_panics();
         println!("chaos (NEUROMAX_CHAOS): {:?}", plan.spec());
     }
-    let mut srv = Server::start_sharded(
+    // adaptive pool: --adaptive arms both feedback loops (hot-model
+    // replication + online cost recalibration) at their default
+    // policies; --spill-threshold overrides the home-queue depth at
+    // which jobs route away (default: one full batch)
+    let adaptive = flag(args, "--adaptive");
+    let pool_opts = PoolOptions {
+        spill_threshold: opt(args, "--spill-threshold").and_then(|v| v.parse().ok()),
+        replication: adaptive.then(ReplicationPolicy::default),
+        recal: adaptive.then(RecalPolicy::default),
+        ..Default::default()
+    };
+    let mut srv = Server::start_sharded_with_opts(
         &addr,
         &model,
         backend,
         policy,
         EngineOptions { num_threads: threads, ..Default::default() },
         shards,
+        pool_opts,
     )?;
     println!(
         "serving {model} ({backend:?}) on {} for {secs}s — {} engine shard(s), \
-         batch {} / wait {:?} / queue cap {}",
+         batch {} / wait {:?} / queue cap {}, pool {}",
         srv.addr,
         srv.shards(),
         policy.max_batch,
         policy.max_wait,
-        policy.queue_cap
+        policy.queue_cap,
+        if adaptive { "adaptive (replication + recalibration)" } else { "static affinity" },
     );
     srv.serve_until(Some(Instant::now() + Duration::from_secs(secs)))?;
     let metrics = srv.metrics.clone();
@@ -373,6 +395,12 @@ struct LoadgenRun {
     arena_allocs: u64,
     /// Jobs routed away from their home shard.
     spills: u64,
+    /// Jobs that landed on a live replica of their model (a subset of
+    /// off-home routing that keeps warm state, unlike a cold spill).
+    replica_hits: u64,
+    /// Replication-controller grow / shrink actions taken.
+    replica_grows: u64,
+    replica_shrinks: u64,
     /// Measured per-model engine utilization, parsed back out of the
     /// `STATS` wire line (`util_pct`), in `--mix` order.
     model_utils: Vec<(String, f64)>,
@@ -382,16 +410,30 @@ struct LoadgenRun {
 /// of `total` requests back-to-back (a new request only after the
 /// previous reply), drawing models from the weighted `mix`. `BUSY`
 /// replies back off and retry, so every request eventually completes.
+/// When `late_mix` is set (the diurnal preset), each connection switches
+/// to those weights for the second half of its quota — a deterministic
+/// phase shift of the hot model. `opts` selects the pool flavor: static
+/// affinity ([`PoolOptions::default`]) or the adaptive replicated pool.
+#[allow(clippy::too_many_arguments)]
 fn drive_loadgen(
     shards: usize,
     conns: usize,
     total: usize,
     mix: &[(String, u64)],
+    late_mix: Option<&[(String, u64)]>,
     policy: BatchPolicy,
     eopt: EngineOptions,
+    opts: PoolOptions,
 ) -> Result<LoadgenRun> {
-    let mut srv =
-        Server::start_sharded("127.0.0.1:0", "tinycnn", Backend::Sim, policy, eopt, shards)?;
+    let mut srv = Server::start_sharded_with_opts(
+        "127.0.0.1:0",
+        "tinycnn",
+        Backend::Sim,
+        policy,
+        eopt,
+        shards,
+        opts,
+    )?;
     let addr = srv.addr;
     let busy = Arc::new(AtomicU64::new(0));
     let t0 = Instant::now();
@@ -400,16 +442,23 @@ fn drive_loadgen(
             let n = total / conns + usize::from(c < total % conns);
             let busy = busy.clone();
             let mix = mix.to_vec();
+            let late = late_mix.map(<[(String, u64)]>::to_vec);
             thread::spawn(move || -> Result<Vec<u64>> {
                 let mut rng =
                     SplitMix64::new(0xC0FFEE ^ (c as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
                 let mut cl = Client::connect(addr)?;
-                let weight_sum: u64 = mix.iter().map(|(_, w)| *w).sum();
                 let mut lats = Vec::with_capacity(n);
                 for i in 0..n {
+                    // diurnal phase shift: the late mix takes over for
+                    // the second half of this connection's quota
+                    let phase: &[(String, u64)] = match &late {
+                        Some(l) if 2 * i >= n => l,
+                        _ => &mix,
+                    };
+                    let weight_sum: u64 = phase.iter().map(|(_, w)| *w).sum();
                     let mut t = rng.below(weight_sum.max(1));
-                    let mut model = mix.last().map(|(m, _)| m.as_str());
-                    for (m, w) in &mix {
+                    let mut model = phase.last().map(|(m, _)| m.as_str());
+                    for (m, w) in phase {
                         if t < *w {
                             model = Some(m.as_str());
                             break;
@@ -462,12 +511,22 @@ fn drive_loadgen(
     }
     // per-model utilization: pull util_pct back out of the STATS wire
     // line, so the JSON trail exercises what clients actually see
+    // (late-mix models appended so diurnal runs report both phases)
     let summary = srv.metrics.summary();
-    let model_utils: Vec<(String, f64)> = mix
-        .iter()
-        .map(|(m, _)| (m.clone(), parse_model_gauge(&summary, m, "util_pct").unwrap_or(0.0)))
+    let mut names: Vec<&String> = mix.iter().map(|(m, _)| m).collect();
+    for (m, _) in late_mix.unwrap_or_default() {
+        if !names.contains(&m) {
+            names.push(m);
+        }
+    }
+    let model_utils: Vec<(String, f64)> = names
+        .into_iter()
+        .map(|m| (m.clone(), parse_model_gauge(&summary, m, "util_pct").unwrap_or(0.0)))
         .collect();
     let spills = srv.metrics.spills.load(Ordering::Relaxed);
+    let replica_hits = srv.metrics.replica_hits.load(Ordering::Relaxed);
+    let replica_grows = srv.metrics.replica_grows.load(Ordering::Relaxed);
+    let replica_shrinks = srv.metrics.replica_shrinks.load(Ordering::Relaxed);
     srv.shutdown();
     all.sort_unstable();
     anyhow::ensure!(!all.is_empty(), "loadgen completed zero requests");
@@ -481,31 +540,16 @@ fn drive_loadgen(
         arena_peak_bytes,
         arena_allocs,
         spills,
+        replica_hits,
+        replica_grows,
+        replica_shrinks,
         model_utils,
     })
 }
 
-fn cmd_loadgen(args: &[String]) -> Result<()> {
-    if flag(args, "--chaos") {
-        return cmd_loadgen_chaos(args);
-    }
-    let shard_counts: Vec<usize> = opt(args, "--shards")
-        .unwrap_or_else(|| "1,2,4".into())
-        .split(',')
-        .filter(|s| !s.trim().is_empty())
-        .map(|s| {
-            s.trim()
-                .parse::<usize>()
-                .map_err(|_| anyhow::anyhow!("bad --shards entry `{s}`"))
-        })
-        .collect::<Result<_>>()?;
-    anyhow::ensure!(!shard_counts.is_empty(), "--shards list is empty");
-    let conns: usize = opt(args, "--conns").and_then(|v| v.parse().ok()).unwrap_or(8).max(1);
-    let total: usize =
-        opt(args, "--requests").and_then(|v| v.parse().ok()).unwrap_or(400).max(1);
-    let mix_spec = opt(args, "--mix")
-        .unwrap_or_else(|| "tinycnn:6,squeezenet-test:2,alexnet-test:2".into());
-    let mix: Vec<(String, u64)> = mix_spec
+/// Parse one `name:w,name:w` weighted-mix spec into canonical names.
+fn parse_mix(spec: &str) -> Result<Vec<(String, u64)>> {
+    let mix: Vec<(String, u64)> = spec
         .split(',')
         .filter(|s| !s.trim().is_empty())
         .map(|pair| {
@@ -519,6 +563,47 @@ fn cmd_loadgen(args: &[String]) -> Result<()> {
         })
         .collect::<Result<_>>()?;
     anyhow::ensure!(!mix.is_empty(), "--mix resolved to no models");
+    Ok(mix)
+}
+
+fn cmd_loadgen(args: &[String]) -> Result<()> {
+    if flag(args, "--chaos") {
+        return cmd_loadgen_chaos(args);
+    }
+    // NEUROMAX_BENCH_QUICK=1 (the CI smoke mode) shrinks the sweep but
+    // keeps the replicated-vs-affinity comparison rows intact
+    let quick = std::env::var("NEUROMAX_BENCH_QUICK").map(|v| v != "0").unwrap_or(false);
+    let shard_counts: Vec<usize> = opt(args, "--shards")
+        .unwrap_or_else(|| if quick { "1,2".into() } else { "1,2,4".into() })
+        .split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(|s| {
+            s.trim()
+                .parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("bad --shards entry `{s}`"))
+        })
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(!shard_counts.is_empty(), "--shards list is empty");
+    let conns: usize = opt(args, "--conns").and_then(|v| v.parse().ok()).unwrap_or(8).max(1);
+    let total: usize = opt(args, "--requests")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if quick { 160 } else { 400 })
+        .max(1);
+    let mix_spec = opt(args, "--mix")
+        .unwrap_or_else(|| "tinycnn:6,squeezenet-test:2,alexnet-test:2".into());
+    // named presets: `hotspot` skews hard onto one model (the
+    // replication trigger case); `diurnal` flips the hot model halfway
+    // through each connection's quota
+    let (mix_spec, late_spec) = match mix_spec.as_str() {
+        "hotspot" => ("tinycnn:14,alexnet-test:1,squeezenet-test:1".to_string(), None),
+        "diurnal" => (
+            "tinycnn:8,squeezenet-test:1".to_string(),
+            Some("tinycnn:1,squeezenet-test:8".to_string()),
+        ),
+        _ => (mix_spec, None),
+    };
+    let mix = parse_mix(&mix_spec)?;
+    let late_mix = late_spec.as_deref().map(parse_mix).transpose()?;
     let policy = batch_policy_from_args(args);
     let threads: usize = opt(args, "--threads").and_then(|v| v.parse().ok()).unwrap_or(0);
     let eopt = EngineOptions { num_threads: threads, ..Default::default() };
@@ -534,63 +619,123 @@ fn cmd_loadgen(args: &[String]) -> Result<()> {
         policy.max_wait,
         policy.queue_cap
     );
+    // the adaptive pool under comparison: replication tuned to act
+    // within a short closed-loop run, plus online cost recalibration
+    let adaptive = PoolOptions {
+        replication: Some(ReplicationPolicy {
+            tick: Duration::from_millis(10),
+            window: 2,
+            grow_util_pct: 20.0,
+            grow_min_arrivals: 4,
+            cold_ticks: 20,
+            shrink_util_pct: 2.0,
+            ..Default::default()
+        }),
+        recal: Some(RecalPolicy::default()),
+        ..Default::default()
+    };
     let mut log = BenchLog::new();
     for &s in &shard_counts {
-        let r = drive_loadgen(s, conns, total, &mix, policy, eopt)?;
-        let m = Measurement { median: r.elapsed, min: r.elapsed, max: r.elapsed, runs: 1 };
-        log.report(
-            &format!("serve loadgen shards={s} conns={conns} reqs={}", r.completed),
-            m,
-            r.completed as u64,
-            "req",
-        );
-        // arena trail: peak footprint + warmup-only grow events, so the
-        // per-request allocation trajectory is trackable across PRs
-        log.report(
-            &format!("serve arena peak shards={s}"),
-            m,
-            r.arena_peak_bytes,
-            "B",
-        );
-        log.report(
-            &format!("serve arena grow events shards={s}"),
-            m,
-            r.arena_allocs,
-            "grow",
-        );
-        // admission/routing pressure columns + per-model utilization
-        // (util_pct from STATS, recorded in basis points: 100 bp = 1%)
-        log.report(&format!("serve busy replies shards={s}"), m, r.busy_retries, "busy");
-        log.report(&format!("serve spills shards={s}"), m, r.spills, "spill");
-        for (model, util) in &r.model_utils {
-            log.report(
-                &format!("serve util_pct {model} shards={s}"),
-                m,
-                (util * 100.0).round() as u64,
-                "bp",
+        // every shard count runs twice: the static affinity pool (the
+        // legacy row names, so trends stay comparable across PRs) and
+        // the adaptive replicated pool — together they are the
+        // replicated-vs-affinity scaling curve in BENCH_serve.json
+        for (pool, opts) in [("affinity", PoolOptions::default()), ("replicated", adaptive)] {
+            let replicated = pool == "replicated";
+            let r =
+                drive_loadgen(s, conns, total, &mix, late_mix.as_deref(), policy, eopt, opts)?;
+            let m =
+                Measurement { median: r.elapsed, min: r.elapsed, max: r.elapsed, runs: 1 };
+            if replicated {
+                log.report(
+                    &format!(
+                        "serve loadgen replicated shards={s} conns={conns} reqs={}",
+                        r.completed
+                    ),
+                    m,
+                    r.completed as u64,
+                    "req",
+                );
+                log.report(&format!("serve replica hits shards={s}"), m, r.replica_hits, "hit");
+                log.report(
+                    &format!("serve replica grows shards={s}"),
+                    m,
+                    r.replica_grows,
+                    "grow",
+                );
+                log.report(
+                    &format!("serve spills replicated shards={s}"),
+                    m,
+                    r.spills,
+                    "spill",
+                );
+            } else {
+                log.report(
+                    &format!("serve loadgen shards={s} conns={conns} reqs={}", r.completed),
+                    m,
+                    r.completed as u64,
+                    "req",
+                );
+                // arena trail: peak footprint + warmup-only grow events,
+                // so the per-request allocation trajectory is trackable
+                // across PRs
+                log.report(
+                    &format!("serve arena peak shards={s}"),
+                    m,
+                    r.arena_peak_bytes,
+                    "B",
+                );
+                log.report(
+                    &format!("serve arena grow events shards={s}"),
+                    m,
+                    r.arena_allocs,
+                    "grow",
+                );
+                // admission/routing pressure columns + per-model
+                // utilization (util_pct from STATS, recorded in basis
+                // points: 100 bp = 1%)
+                log.report(
+                    &format!("serve busy replies shards={s}"),
+                    m,
+                    r.busy_retries,
+                    "busy",
+                );
+                log.report(&format!("serve spills shards={s}"), m, r.spills, "spill");
+                for (model, util) in &r.model_utils {
+                    log.report(
+                        &format!("serve util_pct {model} shards={s}"),
+                        m,
+                        (util * 100.0).round() as u64,
+                        "bp",
+                    );
+                }
+            }
+            let util_label: Vec<String> = r
+                .model_utils
+                .iter()
+                .map(|(model, util)| format!("{model} {util:.1}%"))
+                .collect();
+            println!(
+                "  shards={s} pool={pool}: {} reqs in {:.2}s = {:.0} req/s | \
+                 p50 {} us p99 {} us | {} busy retries, {} spills, {} replica hits \
+                 ({} grows, {} shrinks) | arena peak {:.1} KiB, {} grow events \
+                 ({:.3}/req) | util [{}]",
+                r.completed,
+                r.elapsed.as_secs_f64(),
+                r.completed as f64 / r.elapsed.as_secs_f64(),
+                r.p50_us,
+                r.p99_us,
+                r.busy_retries,
+                r.spills,
+                r.replica_hits,
+                r.replica_grows,
+                r.replica_shrinks,
+                r.arena_peak_bytes as f64 / 1024.0,
+                r.arena_allocs,
+                r.arena_allocs as f64 / r.completed.max(1) as f64,
+                util_label.join(", "),
             );
         }
-        let util_label: Vec<String> = r
-            .model_utils
-            .iter()
-            .map(|(model, util)| format!("{model} {util:.1}%"))
-            .collect();
-        println!(
-            "  shards={s}: {} reqs in {:.2}s = {:.0} req/s | p50 {} us p99 {} us | \
-             {} busy retries, {} spills | arena peak {:.1} KiB, {} grow events \
-             ({:.3}/req) | util [{}]",
-            r.completed,
-            r.elapsed.as_secs_f64(),
-            r.completed as f64 / r.elapsed.as_secs_f64(),
-            r.p50_us,
-            r.p99_us,
-            r.busy_retries,
-            r.spills,
-            r.arena_peak_bytes as f64 / 1024.0,
-            r.arena_allocs,
-            r.arena_allocs as f64 / r.completed.max(1) as f64,
-            util_label.join(", "),
-        );
     }
     log.write_json(&out)?;
     println!("wrote {out}");

@@ -22,7 +22,7 @@ use neuromax::coordinator::health::{HealthPolicy, HealthState};
 use neuromax::coordinator::metrics::ErrCode;
 use neuromax::coordinator::pipeline::Backend;
 use neuromax::coordinator::server::{Client, ConnPolicy, Reply, Server};
-use neuromax::coordinator::shard::{Admission, Pending, ShardPool, ShardReply};
+use neuromax::coordinator::shard::{Admission, JobKind, Pending, ShardPool, ShardReply};
 use neuromax::dataflow::engine::EngineOptions;
 use neuromax::util::fault::{self, FaultSpec};
 
@@ -48,6 +48,7 @@ fn tight_policy() -> BatchPolicy {
 fn roundtrip(pool: &ShardPool, seed: u64) -> Result<ShardReply, Admission> {
     let (tx, rx) = mpsc::channel();
     pool.submit(Pending {
+        kind: JobKind::Infer,
         model: None,
         seed,
         enqueued: Instant::now(),

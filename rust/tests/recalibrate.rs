@@ -1,0 +1,121 @@
+//! Online cost-recalibration integration tests. These live in their own
+//! test binary because they bump the process-global cost generation
+//! (`recalibrate_cost_override`), which re-plans every cached program —
+//! numerically safe (plans never change results, only splits), but it
+//! would churn the plan-cache pins the lib tests assert on in their
+//! shared process.
+
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+use neuromax::coordinator::replicate::{RecalPolicy, Recalibrator};
+use neuromax::dataflow::{
+    cached_program, cost_generation, recalibrate_cost_override, CostOverride, CostSamples,
+    SwCost,
+};
+use neuromax::models::workload;
+
+/// The cost store is process-global: serialize the tests that flip it.
+fn cost_guard() -> MutexGuard<'static, ()> {
+    static GUARD: OnceLock<Mutex<()>> = OnceLock::new();
+    GUARD.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[test]
+fn recalibrated_costs_recompile_cached_plans_and_flip_gemm_routing() {
+    let _g = cost_guard();
+    let net = workload::by_name("vgg16-test").unwrap();
+    let prog = cached_program(&net).unwrap();
+
+    // steady generation: the memo must answer with the same Arc — the
+    // no-churn half of the contract
+    let before = prog.plans_for(4, true, false);
+    let again = prog.plans_for(4, true, false);
+    assert!(Arc::ptr_eq(&before, &again), "stable costs must not churn the plan cache");
+
+    // measured GEMM ~50 ns/MAC (two orders over the defaults): the
+    // planner must route every step back onto the row kernels
+    let g0 = cost_generation();
+    let g1 = recalibrate_cost_override(CostOverride {
+        ns_per_mac: Some(0.05),
+        ns_per_mac_gemm_scalar: Some(49.0),
+        ns_per_mac_gemm_avx2: Some(49.0),
+        ns_per_mac_gemm_neon: Some(49.0),
+        ..Default::default()
+    });
+    assert!(g1 > g0, "an install must bump the cost generation");
+    let rows_only = prog.plans_for(4, true, false);
+    assert!(!Arc::ptr_eq(&before, &rows_only), "a generation bump must recompile");
+    let gemm_after = rows_only.steps.iter().filter(|s| s.gemm.is_some()).count();
+    assert_eq!(gemm_after, 0, "49 ns/MAC GEMM must never pay");
+
+    // flipped skew — rows 45 ns/MAC, GEMM nearly free: conv steps must
+    // route onto the GEMM micro-kernel instead
+    let g2 = recalibrate_cost_override(CostOverride {
+        ns_per_mac: Some(45.0),
+        ns_per_mac_gemm_scalar: Some(0.05),
+        ns_per_mac_gemm_avx2: Some(0.05),
+        ns_per_mac_gemm_neon: Some(0.05),
+        gemm_pack_ns: Some(0.01),
+    });
+    assert!(g2 > g1);
+    let gemm_heavy = prog.plans_for(4, true, false);
+    assert!(!Arc::ptr_eq(&rows_only, &gemm_heavy));
+    let gemm_count = gemm_heavy.steps.iter().filter(|s| s.gemm.is_some()).count();
+    assert!(gemm_count > 0, "45 ns/MAC rows must push convolutions onto GEMM");
+}
+
+#[test]
+fn the_recalibrator_installs_only_on_confidently_skewed_samples() {
+    let _g = cost_guard();
+    let base = SwCost::for_substrate(true);
+    let mut r = Recalibrator::new(RecalPolicy::default(), base.ns_per_mac, base.ns_per_mac_gemm());
+    let net = workload::by_name("tinycnn").unwrap();
+    let prog = cached_program(&net).unwrap();
+
+    // accurate samples (measured == applied model): the dead band keeps
+    // the recalibrator silent, so the generation — and every cached plan
+    // Arc — is untouched
+    let macs = 200_000_000u64; // well past the confidence floor
+    let accurate = CostSamples {
+        rows_busy_ns: (macs as f64 * base.ns_per_mac) as u64,
+        rows_macs: macs,
+        gemm_busy_ns: (macs as f64 * base.ns_per_mac_gemm()) as u64,
+        gemm_macs: macs,
+    };
+    let g0 = cost_generation();
+    let pinned = prog.plans_for(2, true, false);
+    for _ in 0..20 {
+        let up = r.observe(&accurate);
+        assert!(up.is_empty(), "accurate samples must never trigger an install");
+    }
+    assert_eq!(cost_generation(), g0, "no install, no generation bump");
+    assert!(
+        Arc::ptr_eq(&pinned, &prog.plans_for(2, true, false)),
+        "accurate costs must never churn the plan cache"
+    );
+
+    // 3x-slow rows with the same confidence: one EWMA step lands far
+    // outside the dead band and the update installs, exactly the way
+    // the pool controller applies it
+    let skewed = CostSamples {
+        rows_busy_ns: (macs as f64 * base.ns_per_mac * 3.0) as u64,
+        rows_macs: macs,
+        gemm_busy_ns: 0,
+        gemm_macs: 0,
+    };
+    let up = r.observe(&skewed);
+    let rows = up.rows_ns_per_mac.expect("a 3x skew must install");
+    assert!(
+        rows > base.ns_per_mac,
+        "installed rows cost must move toward the measurement: {rows}"
+    );
+    let g1 = recalibrate_cost_override(CostOverride {
+        ns_per_mac: Some(rows),
+        ..Default::default()
+    });
+    assert!(g1 > g0, "the install must be visible to every plan cache");
+    assert!(
+        !Arc::ptr_eq(&pinned, &prog.plans_for(2, true, false)),
+        "skewed install must recompile the cached plans"
+    );
+}

@@ -12,7 +12,8 @@ use std::time::{Duration, Instant};
 use neuromax::coordinator::batcher::BatchPolicy;
 use neuromax::coordinator::pipeline::Backend;
 use neuromax::coordinator::server::{Client, Reply, Server};
-use neuromax::coordinator::shard::{Admission, Pending, ShardPool};
+use neuromax::coordinator::shard::{Admission, JobKind, Pending, PoolOptions, ShardPool};
+use neuromax::coordinator::replicate::ReplicationPolicy;
 use neuromax::dataflow::engine::EngineOptions;
 
 fn one_worker() -> EngineOptions {
@@ -239,6 +240,7 @@ fn pool_rejects_new_work_while_draining() {
     pool.drain();
     let (tx, _rx) = mpsc::channel();
     let refused = pool.submit(Pending {
+        kind: JobKind::Infer,
         model: None,
         seed: 1,
         enqueued: Instant::now(),
@@ -333,4 +335,80 @@ fn explain_and_util_pct_ride_the_wire_together() {
     serve_clients(&mut srv, std::slice::from_ref(&client), 60);
     client.join().unwrap();
     srv.shutdown();
+}
+
+#[test]
+fn hotspot_traffic_replicates_the_hot_model_and_drains_cleanly() {
+    // Adaptive pool with an aggressive replication policy: sustained
+    // closed-loop traffic against one model must grow it a replica
+    // (observable in the STATS `replicas=[...]` / `replica_grows=`
+    // fields), and shutdown must still drain cleanly with the
+    // controller thread running.
+    let opts = PoolOptions {
+        spill_threshold: Some(1),
+        replication: Some(ReplicationPolicy {
+            tick: Duration::from_millis(10),
+            window: 2,
+            grow_util_pct: 1.0,
+            grow_min_arrivals: 2,
+            // never shrink mid-test: the grow assertions stay race-free
+            cold_ticks: u32::MAX,
+            shrink_util_pct: 0.0,
+            ..Default::default()
+        }),
+        ..Default::default()
+    };
+    let mut srv = Server::start_sharded_with_opts(
+        "127.0.0.1:0",
+        "tinycnn",
+        Backend::Sim,
+        BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1), ..Default::default() },
+        one_worker(),
+        2,
+        opts,
+    )
+    .unwrap();
+    let addr = srv.addr;
+    let metrics = srv.metrics.clone();
+    // hotspot trace: every request hits the default model, from enough
+    // connections that its home queue stays warm across ticks
+    let clients: Vec<_> = (0..4)
+        .map(|c| {
+            let metrics = metrics.clone();
+            thread::spawn(move || {
+                let mut cl = Client::connect(addr).unwrap();
+                let deadline = Instant::now() + Duration::from_secs(30);
+                let mut seed = (c * 100_000) as u64;
+                // closed loop until the controller visibly grew a replica
+                // (plus a fixed floor so counters are never trivial)
+                while (seed % 100_000 < 40
+                    || metrics.replica_grows.load(Ordering::Relaxed) == 0)
+                    && Instant::now() < deadline
+                {
+                    let (class, _) = cl.infer(seed).unwrap();
+                    assert!(class < 10);
+                    seed += 1;
+                }
+                cl.stats().unwrap()
+            })
+        })
+        .collect();
+    serve_clients(&mut srv, &clients, 60);
+    let stats = clients.into_iter().map(|c| c.join().unwrap()).next_back().unwrap();
+    assert!(
+        metrics.replica_grows.load(Ordering::Relaxed) >= 1,
+        "hotspot traffic never triggered replication: {stats}"
+    );
+    assert!(stats.contains("replica_grows="), "{stats}");
+    assert!(
+        stats.contains("replicas=[TinyCNN: s"),
+        "the replica set must ride the STATS wire line: {stats}"
+    );
+    // both shards executed the hot model once the replica went live
+    srv.shutdown();
+    assert!(
+        metrics.responses.load(Ordering::Relaxed) >= 160,
+        "every closed-loop request must be answered: {}",
+        metrics.summary()
+    );
 }
